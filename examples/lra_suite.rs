@@ -1,0 +1,46 @@
+//! LRA-proxy suite runner: one command to train + evaluate any subset of
+//! (task, variant) pairs from Table 1 and print a mini-leaderboard.
+//!
+//!     make artifacts-lra && cargo run --release --example lra_suite -- \
+//!         --tasks listops,image --variants linear,fmm2_band5 --steps 80
+
+use anyhow::Result;
+use fmmformer::bench::Table;
+use fmmformer::cli::Args;
+use fmmformer::coordinator::Coordinator;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[])?;
+    let steps = args.usize_or("steps", 80)?;
+    let eval_batches = args.usize_or("eval-batches", 8)?;
+    let tasks = args.list_or("tasks", &["listops", "image"]);
+    let variants = args.list_or("variants", &["linear", "fmm2_band5"]);
+    let coord = Coordinator::new(&fmmformer::artifacts_dir(args.get("artifacts")),
+                                 args.u64_or("seed", 0)?)?;
+
+    let mut tbl = Table::new(
+        &format!("LRA proxies, {steps} steps per run"),
+        &["task", "variant", "test acc %", "valid acc %", "steps/s"],
+    );
+    for t in &tasks {
+        for v in &variants {
+            let name = format!("lra_{t}_{v}");
+            if !coord.rt.has_artifact(&name) {
+                println!("{name}: missing (run `make artifacts-lra`)");
+                continue;
+            }
+            println!("running {name}...");
+            let out = coord.run_pipeline(&name, steps, eval_batches, 0)?;
+            tbl.row(vec![
+                t.clone(),
+                v.clone(),
+                format!("{:.1}", out.eval_test.map(|e| e.metric * 100.0).unwrap_or(f64::NAN)),
+                format!("{:.1}", out.eval_valid.map(|e| e.metric * 100.0).unwrap_or(f64::NAN)),
+                format!("{:.2}", steps as f64 / out.train_secs),
+            ]);
+        }
+    }
+    tbl.print();
+    println!("full Table 1: cargo bench --bench table1_lra");
+    Ok(())
+}

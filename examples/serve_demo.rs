@@ -1,0 +1,97 @@
+//! Serving demo: train a small FMMformer text classifier, then serve it
+//! through the dynamic-batching router and report quality + latency.
+//!
+//! Demonstrates the full production loop: train → checkpoint → serve the
+//! checkpoint through batch-size-bucketed AOT executables → measure
+//! accuracy, throughput and batching efficiency.
+//!
+//!     make artifacts-lra && cargo run --release --example serve_demo -- \
+//!         --train-steps 120 --requests 64
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use fmmformer::cli::Args;
+use fmmformer::coordinator::Coordinator;
+use fmmformer::data::{text_cls::TextCls, Split, TaskGen};
+use fmmformer::serve::{ServeConfig, Server};
+use fmmformer::train::Trainer;
+
+const BUCKETS: [&str; 3] = ["serve_text_fmm2_b1", "serve_text_fmm2_b4", "serve_text_fmm2_b8"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[])?;
+    let train_steps = args.usize_or("train-steps", 120)?;
+    let n_requests = args.usize_or("requests", 64)?;
+    let dir = fmmformer::artifacts_dir(args.get("artifacts"));
+    let coord = Coordinator::new(&dir, 0)?;
+
+    // 1. Train (or reuse) the classifier the server will host.
+    let ckpt = coord.runs_dir.join("lra_text_fmm2_band5.ckpt.bin");
+    let mut trainer = Trainer::new(&coord.rt, "lra_text_fmm2_band5")?;
+    let mut gen = coord.generator("lra_text_fmm2_band5")?;
+    if ckpt.exists() {
+        println!("reusing checkpoint {ckpt:?}");
+        trainer.load_checkpoint(&ckpt)?;
+    } else {
+        println!("training text classifier for {train_steps} steps...");
+        trainer.train_loop(&mut *gen, train_steps, train_steps / 3, None)?;
+        std::fs::create_dir_all(&coord.runs_dir).ok();
+        trainer.save_checkpoint(&ckpt)?;
+    }
+    let leaves = trainer.params().download().map_err(|e| anyhow!(e))?;
+    let seq_len = trainer.art.manifest.seq_len()?;
+    drop(trainer);
+
+    // 2. Serve it.
+    let server = Server::start(
+        dir,
+        &BUCKETS,
+        leaves,
+        ServeConfig { max_wait: Duration::from_millis(4), pad_id: 0 },
+    )?;
+    println!("server up (buckets B=1/4/8); firing {n_requests} concurrent requests");
+
+    // 3. Concurrent clients with known labels -> accuracy + latency.
+    let t0 = std::time::Instant::now();
+    let mut handles = vec![];
+    for c in 0..n_requests {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || -> Result<(bool, f64)> {
+            let mut g = TextCls::new(seq_len, 1000 + c as u64);
+            let b = g.batch(Split::Test, 1);
+            let label = b.targets.data()[0];
+            let resp = client.infer(b.tokens.row(0).to_vec())?;
+            let pred = if resp.logits[1] > resp.logits[0] { 1 } else { 0 };
+            Ok((pred == label, resp.latency.as_secs_f64()))
+        }));
+    }
+    let mut correct = 0usize;
+    let mut lats = vec![];
+    for h in handles {
+        let (ok, lat) = h.join().map_err(|_| anyhow!("client panicked"))??;
+        correct += ok as usize;
+        lats.push(lat);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = server.shutdown();
+
+    println!(
+        "\naccuracy {}/{} = {:.1}%  |  {:.1} req/s  p50 {:.1} ms  p95 {:.1} ms",
+        correct,
+        n_requests,
+        100.0 * correct as f64 / n_requests as f64,
+        n_requests as f64 / wall,
+        lats[lats.len() / 2] * 1e3,
+        lats[lats.len() * 95 / 100] * 1e3,
+    );
+    println!(
+        "batches {}  mean occupancy {:.2}  padding waste {:.2}x  exec {:.2}s",
+        stats.batches,
+        stats.mean_occupancy(),
+        stats.mean_padding_waste(),
+        stats.exec_secs
+    );
+    Ok(())
+}

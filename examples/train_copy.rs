@@ -1,0 +1,42 @@
+//! The paper's motivating micro-benchmark (Sec. 4.1): train FMMformer
+//! variants on sequence duplication and watch near-field bands rescue
+//! linear attention.
+//!
+//!     make artifacts-copy && cargo run --release --example train_copy -- \
+//!         --len 128 --steps 150 --variants linear,fmm_band30
+
+use anyhow::Result;
+use fmmformer::bench::ascii_curve;
+use fmmformer::cli::Args;
+use fmmformer::coordinator::Coordinator;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[])?;
+    let len = args.usize_or("len", 128)?;
+    let steps = args.usize_or("steps", 150)?;
+    let variants = args.list_or("variants", &["linear", "fmm_band30", "softmax"]);
+    let coord = Coordinator::new(&fmmformer::artifacts_dir(args.get("artifacts")),
+                                 args.u64_or("seed", 0)?)?;
+
+    println!("copy task, length {len}, {steps} steps per variant\n");
+    let mut results = vec![];
+    for v in &variants {
+        let name = format!("copy{len}_{v}");
+        if !coord.rt.has_artifact(&name) {
+            println!("{name}: missing (run `make artifacts-copy`)");
+            continue;
+        }
+        let out = coord.run_pipeline(&name, steps, 0, steps / 3)?;
+        print!("{}", ascii_curve(&name, &out.curve.downsample(60), 60));
+        results.push((v.clone(), out.curve.tail_mean(10)));
+    }
+
+    println!("\nfinal loss (tail-10 mean):");
+    results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (v, l) in &results {
+        println!("  {v:<14} {l:.4}");
+    }
+    println!("\nexpected (paper Fig. 4): softmax fastest; adding bands to \
+              linear attention closes most of the gap.");
+    Ok(())
+}

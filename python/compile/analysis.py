@@ -1,0 +1,124 @@
+"""L2 — analysis artifact builders (Figs. 1, 3, 8 and the Fig. 6 unit).
+
+These lower *inspection* functions to HLO so the Rust side can extract
+attention matrices from trained checkpoints (via the same param ABI as the
+train artifacts) and run the paper's structural studies:
+
+  * ``make_attn_weights`` — full softmax attention matrices A per
+    (layer, head) for a batch of sequences. Feeds the Fig. 3 SVD/rank
+    study and the Fig. 1 decomposition illustration (Rust does the SVD).
+  * ``make_fmm_maps`` — the near-field D and far-field L matrices of an
+    FMM model (Fig. 8 heatmaps).
+  * ``make_attn_fwdbwd`` — a single attention forward+backward over
+    (q, k, v), the timing unit of the Fig. 6 scaling study.
+
+The N×N outputs are intentional here — the entire point of these
+artifacts is to materialize the maps for offline analysis; they are never
+on a hot path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from . import model as M
+from .kernels import ref
+
+
+def _per_layer_qk(cfg: M.ModelConfig, params: dict, tokens):
+    """Replay the forward pass, yielding per-layer (q, k, v, x) with shapes
+    (H, N, dh). Mirrors model._mha exactly (same LN, same projections)."""
+    x = params["embed"][tokens] + params["pos"][: tokens.shape[0]]
+    n, h, dh = tokens.shape[0], cfg.n_heads, cfg.d_head
+    out = []
+    for layer in params["layers"]:
+        xin = M._layer_norm(x, layer["ln1_g"], layer["ln1_b"])
+        q = (xin @ layer["wq"]).reshape(n, h, dh).transpose(1, 0, 2)
+        k = (xin @ layer["wk"]).reshape(n, h, dh).transpose(1, 0, 2)
+        out.append((q, k))
+        x = x + M._mha(cfg, layer, xin)
+        hfc = M._layer_norm(x, layer["ln2_g"], layer["ln2_b"])
+        x = x + jax.nn.gelu(hfc @ layer["w1"] + layer["b1"]) @ layer["w2"] + layer["b2"]
+    return out
+
+
+def make_attn_weights(cfg: M.ModelConfig, template: dict):
+    """``(*params, tokens) -> A`` with A: (B, L, H, N, N) softmax maps."""
+    n_leaves = len(M.param_leaves(template))
+
+    def one_seq(params, tok):
+        qks = _per_layer_qk(cfg, params, tok)
+        mats = []
+        for q, k in qks:  # (H, N, dh)
+            mats.append(jax.vmap(
+                lambda q_, k_: ref.softmax_attention_weights(q_, k_, causal=cfg.causal)
+            )(q, k))
+        return jnp.stack(mats)  # (L, H, N, N)
+
+    def fn(*args):
+        params = M.unflatten_like(template, list(args[:n_leaves]))
+        tokens = args[n_leaves]
+        return (jax.vmap(lambda t: one_seq(params, t))(tokens),)
+
+    return fn, n_leaves
+
+
+def make_fmm_maps(cfg: M.ModelConfig, template: dict):
+    """``(*params, tokens) -> (D, L)``, each (B, Lyr, H, N, N) — the
+    blended near-field and far-field maps of an FMM model (Fig. 8)."""
+    if not cfg.uses_blend:
+        raise ValueError("fmm_maps requires an fmm/fmm_fastweight model")
+    n_leaves = len(M.param_leaves(template))
+
+    def one_seq(params, tok):
+        qks = _per_layer_qk(cfg, params, tok)
+        near, far = [], []
+        for layer, (q, k) in zip(params["layers"], qks):
+            w1 = jax.nn.sigmoid(layer["blend"][0])
+            w2 = jax.nn.sigmoid(layer["blend"][1])
+            near.append(w1 * jax.vmap(
+                lambda q_, k_: ref.banded_attention_weights(
+                    q_, k_, bandwidth=cfg.bandwidth, causal=cfg.causal))(q, k))
+            far.append(w2 * jax.vmap(
+                lambda q_, k_: ref.linear_attention_weights(
+                    q_, k_, kernels=cfg.kernels, causal=cfg.causal))(q, k))
+        return jnp.stack(near), jnp.stack(far)
+
+    def fn(*args):
+        params = M.unflatten_like(template, list(args[:n_leaves]))
+        tokens = args[n_leaves]
+        return jax.vmap(lambda t: one_seq(params, t))(tokens)
+
+    return fn, n_leaves
+
+
+def make_attn_fwdbwd(variant: str, *, bandwidth: int = 30, kernels_list=("elu",),
+                     causal: bool = False, impl: str = "pallas"):
+    """``(q, k, v) -> (out_mean, dq, dk, dv)`` — the Fig. 6 timing unit.
+
+    ``variant``: softmax | linear | band | fmm. Differentiates through the
+    Pallas custom_vjps (O(N) backward for the linear-complexity variants).
+    """
+    def attn(q, k, v):
+        if variant == "softmax":
+            return kernels.softmax_attention(q, k, v, causal=causal)
+        if variant == "band":
+            return kernels.banded_attention(
+                q, k, v, bandwidth=bandwidth, causal=causal, impl=impl)
+        if variant == "linear":
+            return kernels.linear_attention(
+                q, k, v, kernels=kernels_list, causal=causal, impl=impl)
+        if variant == "fmm":
+            return (kernels.banded_attention(
+                        q, k, v, bandwidth=bandwidth, causal=causal, impl=impl)
+                    + kernels.linear_attention(
+                        q, k, v, kernels=kernels_list, causal=causal, impl=impl))
+        raise ValueError(variant)
+
+    def fn(q, k, v):
+        out, grads = jax.value_and_grad(
+            lambda q_, k_, v_: attn(q_, k_, v_).mean(), argnums=(0, 1, 2))(q, k, v)
+        return (out,) + grads
+
+    return fn

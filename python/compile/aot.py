@@ -1,0 +1,232 @@
+"""AOT compiler — lowers every registered artifact to HLO text + manifest.
+
+This is the *only* entry point where Python runs in the build: it traces
+the L2 functions (which call the L1 Pallas kernels), lowers to StableHLO,
+converts to an XlaComputation, and writes
+
+    artifacts/<name>.hlo.txt     — HLO **text** (interchange format; the
+                                   xla crate's XLA 0.5.1 rejects jax>=0.5
+                                   serialized protos with 64-bit ids, the
+                                   text parser reassigns ids — see
+                                   /opt/xla-example/README.md)
+    artifacts/<name>.json        — manifest: ordered typed inputs/outputs,
+                                   param table, model/opt/task metadata
+    artifacts/<name>.params.bin  — seeded initial parameters (train only)
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --group core
+    python -m compile.aot --out-dir ../artifacts --only 'copy128_.*' --force
+    python -m compile.aot --list
+
+Idempotent: existing outputs are skipped unless --force (so `make
+artifacts` is a no-op when nothing changed; Make handles input staleness).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import analysis, binfmt
+from . import model as M
+from . import train_step as T
+from .configs import GROUPS, ArtifactSpec, build_registry
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_str(x) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(x.dtype)]
+
+
+def _sig_entry(name, role, aval):
+    return dict(name=name, role=role, shape=[int(d) for d in aval.shape],
+                dtype=_dtype_str(aval))
+
+
+def _param_entries(leaves, role, suffix=""):
+    return [_sig_entry(n + suffix, role, a) for n, a in leaves]
+
+
+def _spec_of(x):
+    return jax.ShapeDtypeStruct(np.shape(x), x.dtype)
+
+
+def build_artifact(spec: ArtifactSpec):
+    """Trace + lower one artifact. Returns (hlo_text, manifest, init_leaves)."""
+    manifest = dict(name=spec.name, group=spec.group, kind=spec.kind,
+                    batch=spec.batch, seed=spec.seed)
+    if spec.task is not None:
+        manifest["task"] = spec.task
+
+    if spec.kind == "attn_fwdbwd":
+        fb = spec.fwdbwd
+        fn = analysis.make_attn_fwdbwd(
+            fb["variant"], bandwidth=fb.get("bandwidth", 30),
+            kernels_list=tuple(fb.get("kernels", ("elu",))),
+            causal=False, impl=fb.get("impl", "pallas"))
+        qkv = jax.ShapeDtypeStruct((fb["n"], fb["d"]), jnp.float32)
+        lowered = jax.jit(fn, keep_unused=True).lower(qkv, qkv, qkv)
+        manifest["fwdbwd"] = {k: (list(v) if isinstance(v, tuple) else v)
+                              for k, v in fb.items()}
+        manifest["inputs"] = [
+            dict(name=x, role="input", shape=[fb["n"], fb["d"]], dtype="f32")
+            for x in ("q", "k", "v")]
+        manifest["outputs"] = (
+            [dict(name="out_mean", role="output", shape=[], dtype="f32")] +
+            [dict(name=f"d{x}", role="output", shape=[fb["n"], fb["d"]],
+                  dtype="f32") for x in ("q", "k", "v")])
+        return to_hlo_text(lowered), manifest, None
+
+    cfg = spec.model
+    manifest["model"] = cfg.to_meta()
+    manifest["param_key"] = spec.param_key
+    params = M.init_params(cfg, seed=spec.seed)
+    leaves = M.param_leaves(params)
+    manifest["params"] = _param_entries(leaves, "param")
+    b, n = spec.batch, cfg.seq_len
+    tokens = jax.ShapeDtypeStruct((b, n), jnp.int32)
+
+    if spec.kind == "train_step":
+        step, nleaves = T.make_train_step(cfg, spec.opt, params)
+        manifest["opt"] = spec.opt.to_meta()
+        t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        targets = jax.ShapeDtypeStruct(
+            (b, n) if cfg.num_classes is None else (b,), jnp.int32)
+        specs = ([_spec_of(a) for _, a in leaves] * 3 + [t_spec, tokens, targets])
+        lowered = jax.jit(step, keep_unused=True).lower(*specs)
+        manifest["inputs"] = (
+            _param_entries(leaves, "param")
+            + _param_entries(leaves, "opt_m", ".m")
+            + _param_entries(leaves, "opt_v", ".v")
+            + [dict(name="t", role="step", shape=[], dtype="f32"),
+               _sig_entry("tokens", "tokens", tokens),
+               _sig_entry("targets", "targets", targets)])
+        manifest["outputs"] = (
+            _param_entries(leaves, "param")
+            + _param_entries(leaves, "opt_m", ".m")
+            + _param_entries(leaves, "opt_v", ".v")
+            + [dict(name="loss", role="loss", shape=[], dtype="f32")])
+        manifest["init_params"] = f"{spec.name}.params.bin"
+        return to_hlo_text(lowered), manifest, leaves
+
+    if spec.kind == "eval_step":
+        step, _ = T.make_eval_step(cfg, params)
+        targets = jax.ShapeDtypeStruct(
+            (b, n) if cfg.num_classes is None else (b,), jnp.int32)
+        specs = [_spec_of(a) for _, a in leaves] + [tokens, targets]
+        lowered = jax.jit(step, keep_unused=True).lower(*specs)
+        out_names = (("nll_sum", "token_count") if cfg.num_classes is None
+                     else ("loss_sum", "correct"))
+        manifest["inputs"] = (
+            _param_entries(leaves, "param")
+            + [_sig_entry("tokens", "tokens", tokens),
+               _sig_entry("targets", "targets", targets)])
+        manifest["outputs"] = [dict(name=o, role="metric", shape=[], dtype="f32")
+                               for o in out_names]
+        return to_hlo_text(lowered), manifest, None
+
+    if spec.kind == "predict":
+        step, _ = T.make_predict(cfg, params)
+        specs = [_spec_of(a) for _, a in leaves] + [tokens]
+        lowered = jax.jit(step, keep_unused=True).lower(*specs)
+        out_shape = ([b, n, cfg.vocab_size] if cfg.num_classes is None
+                     else [b, cfg.num_classes])
+        manifest["inputs"] = (_param_entries(leaves, "param")
+                              + [_sig_entry("tokens", "tokens", tokens)])
+        manifest["outputs"] = [dict(name="logits", role="logits",
+                                    shape=out_shape, dtype="f32")]
+        return to_hlo_text(lowered), manifest, None
+
+    if spec.kind == "attn_weights":
+        fn, _ = analysis.make_attn_weights(cfg, params)
+        specs = [_spec_of(a) for _, a in leaves] + [tokens]
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        shape = [b, cfg.n_layers, cfg.n_heads, n, n]
+        manifest["inputs"] = (_param_entries(leaves, "param")
+                              + [_sig_entry("tokens", "tokens", tokens)])
+        manifest["outputs"] = [dict(name="attn", role="maps", shape=shape,
+                                    dtype="f32")]
+        return to_hlo_text(lowered), manifest, None
+
+    if spec.kind == "fmm_maps":
+        fn, _ = analysis.make_fmm_maps(cfg, params)
+        specs = [_spec_of(a) for _, a in leaves] + [tokens]
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        shape = [b, cfg.n_layers, cfg.n_heads, n, n]
+        manifest["inputs"] = (_param_entries(leaves, "param")
+                              + [_sig_entry("tokens", "tokens", tokens)])
+        manifest["outputs"] = [
+            dict(name="near", role="maps", shape=shape, dtype="f32"),
+            dict(name="far", role="maps", shape=shape, dtype="f32")]
+        return to_hlo_text(lowered), manifest, None
+
+    raise ValueError(f"unknown artifact kind {spec.kind!r}")
+
+
+def emit(spec: ArtifactSpec, out_dir: str, force: bool) -> str:
+    hlo_path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{spec.name}.json")
+    if not force and os.path.exists(hlo_path) and os.path.exists(man_path):
+        return "skip"
+    t0 = time.time()
+    hlo, manifest, init_leaves = build_artifact(spec)
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    if init_leaves is not None:
+        binfmt.write_params(os.path.join(out_dir, manifest["init_params"]),
+                            init_leaves)
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return f"{time.time() - t0:.1f}s {len(hlo) // 1024}KiB"
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--group", action="append", choices=GROUPS,
+                   help="restrict to group(s); default: all")
+    p.add_argument("--only", help="regex on artifact names")
+    p.add_argument("--impl", default=None, choices=("pallas", "jnp"),
+                   help="override the per-group kernel-impl defaults")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--list", action="store_true")
+    args = p.parse_args(argv)
+
+    reg = build_registry(impl=args.impl)
+    names = sorted(reg)
+    if args.group:
+        names = [n for n in names if reg[n].group in args.group]
+    if args.only:
+        rx = re.compile(args.only)
+        names = [n for n in names if rx.search(n)]
+
+    if args.list:
+        for n in names:
+            s = reg[n]
+            print(f"{s.group:9s} {s.kind:12s} {n}")
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for i, n in enumerate(names):
+        status = emit(reg[n], args.out_dir, args.force)
+        print(f"[{i + 1}/{len(names)}] {n}: {status}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

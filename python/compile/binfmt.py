@@ -1,0 +1,70 @@
+"""Shared binary format for parameter/checkpoint files (``*.params.bin``).
+
+Written by ``aot.py`` (initial params) and by the Rust trainer
+(checkpoints) — both sides implement exactly this layout so checkpoints
+round-trip between them:
+
+    magic   b"FMMP"
+    version u32 LE (=1)
+    n_leaves u32 LE
+    per leaf, in manifest order:
+        name_len u16 LE, name utf-8
+        ndim     u8, dims u32 LE * ndim
+        dtype    u8 (0 = f32, 1 = i32)
+        data     row-major little-endian
+
+The Rust twin lives in ``rust/src/runtime/checkpoint.rs``.
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"FMMP"
+VERSION = 1
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+
+
+def write_params(path: str, leaves) -> None:
+    """``leaves``: iterable of (name, np/jnp array)."""
+    leaves = [(n, np.asarray(a)) for n, a in leaves]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(leaves)))
+        for name, arr in leaves:
+            if arr.dtype == np.float32:
+                code = DTYPE_F32
+            elif arr.dtype == np.int32:
+                code = DTYPE_I32
+            else:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<B", code))
+            f.write(np.ascontiguousarray(arr).tobytes())
+
+
+def read_params(path: str):
+    """Inverse of ``write_params`` -> list of (name, np array)."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == VERSION, f"unsupported version {version}"
+        for _ in range(n):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (code,) = struct.unpack("<B", f.read(1))
+            dt = {DTYPE_F32: np.float32, DTYPE_I32: np.int32}[code]
+            count = int(np.prod(dims)) if dims else 1
+            arr = np.frombuffer(f.read(count * 4), dtype=dt).reshape(dims)
+            out.append((name, arr))
+    return out

@@ -1,0 +1,251 @@
+"""Named artifact registry — one entry per model/experiment the paper runs.
+
+Every AOT artifact (a lowered HLO computation + JSON manifest) is declared
+here, grouped by the paper table/figure it serves (DESIGN.md §5):
+
+  core     — tiny artifacts for quickstart, integration tests, CI
+  copy     — Figs. 4 & 5 (synthetic sequence duplication)
+  lra      — Table 1 (five LRA-proxy classification tasks)
+  lm       — Tables 2 & 3, Fig. 7 (synthetic-WikiText language modeling)
+  scaling  — Fig. 6 (attention fwd+bwd time/memory vs N)
+  analysis — Figs. 1, 3, 8 (attention-map structure studies)
+  serve    — batch-size-bucketed predict executables for the server demo
+
+Scale substitutions vs the paper (documented in DESIGN.md §3): sequence
+lengths and model widths are reduced to single-CPU-core budgets; variant
+*orderings*, not absolute numbers, are the reproduction target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from .model import ModelConfig
+from .train_step import OptConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactSpec:
+    """Everything needed to lower + manifest one artifact."""
+
+    name: str
+    group: str
+    #: train_step | eval_step | predict | attn_weights | fmm_maps | attn_fwdbwd
+    kind: str
+    model: Optional[ModelConfig] = None
+    opt: Optional[OptConfig] = None
+    batch: int = 16
+    #: Task metadata passed through to the Rust data generators.
+    task: Optional[dict] = None
+    #: For attn_fwdbwd: dict(variant=..., n=..., d=..., bandwidth=..., kernels=[...]).
+    fwdbwd: Optional[dict] = None
+    seed: int = 0
+
+    @property
+    def param_key(self) -> str:
+        """Artifacts with equal keys share a parameter ABI (checkpoints
+        are interchangeable between them)."""
+        assert self.model is not None
+        m = self.model
+        return (f"{m.attention}-{m.vocab_size}v-{m.seq_len}n-{m.d_model}d-"
+                f"{m.n_heads}h-{m.n_layers}l-{m.d_ff}f-b{m.bandwidth}-"
+                f"k{','.join(m.kernels)}-c{int(m.causal)}-cls{m.num_classes}")
+
+
+# ---------------------------------------------------------------------------
+# Variant tables (paper Sec. 4)
+# ---------------------------------------------------------------------------
+
+def _variant(attention, bandwidth=5, kernels=("elu",)):
+    return dict(attention=attention, bandwidth=bandwidth, kernels=kernels)
+
+
+#: Fig. 4 — blending linear attention with near-field bands.
+COPY_FIG4_VARIANTS = {
+    "softmax": _variant("softmax"),
+    "linear": _variant("linear"),
+    "fmm_band10": _variant("fmm", bandwidth=10),
+    "fmm_band20": _variant("fmm", bandwidth=20),
+    "fmm_band30": _variant("fmm", bandwidth=30),
+}
+
+#: Fig. 5 — far-field rank via multiple feature maps.
+COPY_FIG5_VARIANTS = {
+    "rank2": _variant("linear", kernels=("elu", "elu_neg")),
+    "rank3": _variant("linear", kernels=("elu", "elu_neg", "tanh")),
+}
+
+COPY_SEQ_LENS = (128, 256, 512)
+
+#: Table 1 — LRA rows.
+LRA_VARIANTS = {
+    "softmax": _variant("softmax"),
+    "linear": _variant("linear"),
+    "band5": _variant("band", bandwidth=5),
+    "fmm1_band5": _variant("fmm", bandwidth=5, kernels=("elu",)),
+    "fmm2_band5": _variant("fmm", bandwidth=5, kernels=("elu", "elu_neg")),
+}
+
+#: LRA-proxy task shapes (paper: 2K/4K/4K/1K/1K — scaled to 1-core CPU).
+LRA_TASKS = {
+    "listops": dict(seq_len=256, vocab_size=20, num_classes=10),
+    "text": dict(seq_len=512, vocab_size=260, num_classes=2),
+    "retrieval": dict(seq_len=512, vocab_size=260, num_classes=2),
+    "image": dict(seq_len=784, vocab_size=258, num_classes=10),
+    "pathfinder": dict(seq_len=576, vocab_size=258, num_classes=2),
+}
+
+#: Tables 2 & 3 — LM rows (synthetic-WikiText; Table 3 adds fast weights).
+LM_VARIANTS = {
+    "softmax": _variant("softmax"),
+    "linear": _variant("linear"),
+    "band5": _variant("band", bandwidth=5),
+    "band20": _variant("band", bandwidth=20),
+    "fmm1_band5": _variant("fmm", bandwidth=5, kernels=("elu",)),
+    "fmm1_band20": _variant("fmm", bandwidth=20, kernels=("elu",)),
+    "fmm2_band20": _variant("fmm", bandwidth=20, kernels=("elu", "elu_neg")),
+    "fastweight": _variant("fastweight"),
+    "fw_fmm1_band20": _variant("fmm_fastweight", bandwidth=20, kernels=("elu",)),
+}
+
+LM_TASK = dict(seq_len=128, vocab_size=1024)
+LM_ARCH = dict(d_model=64, n_heads=2, n_layers=2, d_ff=256)
+
+#: Fig. 6 — scaling-study variants (non-causal attention fwd+bwd unit).
+SCALING_VARIANTS = {
+    "softmax": dict(variant="softmax"),
+    "linear1": dict(variant="linear", kernels=("elu",)),
+    "linear2": dict(variant="linear", kernels=("elu", "elu_neg")),
+    "linear3": dict(variant="linear", kernels=("elu", "elu_neg", "tanh")),
+    "fmm3_band30": dict(variant="fmm", kernels=("elu", "elu_neg", "tanh"),
+                        bandwidth=30),
+}
+SCALING_NS = tuple(2 ** p for p in range(9, 17))        # 512 .. 65536
+#: Full softmax fwd+bwd at N=2^15 needs >4 N^2 f32 buffers ≈ 17 GiB+ — past
+#: this testbed's RAM; the bench reports OOM there, which *is* Fig. 6's point.
+SCALING_SOFTMAX_MAX_N = 2 ** 13
+
+
+# ---------------------------------------------------------------------------
+# Registry construction
+# ---------------------------------------------------------------------------
+
+def _copy_model(n, variant, impl):
+    return ModelConfig(vocab_size=13, seq_len=n, d_model=32, n_heads=2,
+                       n_layers=2, d_ff=64, causal=True, impl=impl, **variant)
+
+
+def _lra_model(task, variant, impl):
+    t = LRA_TASKS[task]
+    return ModelConfig(vocab_size=t["vocab_size"], seq_len=t["seq_len"],
+                       d_model=64, n_heads=2, n_layers=2, d_ff=128,
+                       causal=False, num_classes=t["num_classes"], impl=impl,
+                       **variant)
+
+
+def _lm_model(variant, impl):
+    return ModelConfig(vocab_size=LM_TASK["vocab_size"],
+                       seq_len=LM_TASK["seq_len"], causal=True, impl=impl,
+                       **LM_ARCH, **variant)
+
+
+#: Per-group kernel-impl defaults. core/copy keep the Pallas lowering on
+#: their (small) hot paths — real Pallas-in-the-loop training. The bigger
+#: groups lower the jnp twins: interpret-mode Pallas wraps each grid step
+#: in an XLA while-loop that copies the carried buffer on CPU, which (a)
+#: explodes XLA compile time for deep models and (b) makes wallclock
+#: superlinear in N — a CPU-interpret artifact, not a property of the
+#: kernel schedule (DESIGN.md §7.5; the jnp twins implement the identical
+#: O(N) block schedules and are pytest-pinned against both Pallas and the
+#: dense oracles).
+GROUP_IMPL = {
+    "core": "pallas",
+    "copy": "pallas",
+    "lra": "jnp",
+    "lm": "jnp",
+    "scaling": "jnp",
+    "analysis": "jnp",
+    "serve": "jnp",
+}
+
+
+def build_registry(impl: str | None = None):
+    """All artifact specs, keyed by name. ``impl`` overrides the per-group
+    defaults in GROUP_IMPL when given."""
+    gimpl = {g: (impl or d) for g, d in GROUP_IMPL.items()}
+    specs = []
+    opt = OptConfig()
+
+    # --- core -------------------------------------------------------------
+    tiny = ModelConfig(vocab_size=13, seq_len=64, d_model=32, n_heads=2,
+                       n_layers=1, d_ff=64, attention="fmm", bandwidth=5,
+                       kernels=("elu",), causal=True, impl=gimpl["core"])
+    task = dict(task="copy", vocab_size=13, pad_id=0, sep_id=11, n_symbols=10)
+    specs += [
+        ArtifactSpec("core_tiny", "core", "train_step", tiny, opt, 4, task),
+        ArtifactSpec("core_tiny_eval", "core", "eval_step", tiny, None, 4, task),
+        ArtifactSpec("core_tiny_predict", "core", "predict", tiny, None, 4, task),
+    ]
+
+    # --- copy (Figs. 4 & 5) -------------------------------------------------
+    copy_variants = {**COPY_FIG4_VARIANTS, **COPY_FIG5_VARIANTS}
+    for n in COPY_SEQ_LENS:
+        for vname, variant in copy_variants.items():
+            m = _copy_model(n, variant, gimpl["copy"])
+            task = dict(task="copy", vocab_size=13, pad_id=0, sep_id=11,
+                        n_symbols=10)
+            specs.append(ArtifactSpec(f"copy{n}_{vname}", "copy", "train_step",
+                                      m, opt, 16, task))
+
+    # --- lra (Table 1) -------------------------------------------------------
+    for tname in LRA_TASKS:
+        for vname, variant in LRA_VARIANTS.items():
+            m = _lra_model(tname, variant, gimpl["lra"])
+            task = dict(task=f"lra_{tname}", **LRA_TASKS[tname], pad_id=0)
+            specs.append(ArtifactSpec(f"lra_{tname}_{vname}", "lra",
+                                      "train_step", m, opt, 8, task))
+            specs.append(ArtifactSpec(f"lra_{tname}_{vname}_eval", "lra",
+                                      "eval_step", m, None, 8, task))
+
+    # --- lm (Tables 2 & 3, Fig. 7) -------------------------------------------
+    for vname, variant in LM_VARIANTS.items():
+        m = _lm_model(variant, gimpl["lm"])
+        task = dict(task="lm_corpus", **LM_TASK, pad_id=0)
+        specs.append(ArtifactSpec(f"lm_{vname}", "lm", "train_step", m, opt,
+                                  16, task))
+        specs.append(ArtifactSpec(f"lm_{vname}_eval", "lm", "eval_step", m,
+                                  None, 16, task))
+
+    # --- scaling (Fig. 6) ------------------------------------------------------
+    for vname, v in SCALING_VARIANTS.items():
+        for n in SCALING_NS:
+            if v["variant"] == "softmax" and n > SCALING_SOFTMAX_MAX_N:
+                continue
+            specs.append(ArtifactSpec(
+                f"scale_{vname}_n{n}", "scaling", "attn_fwdbwd",
+                fwdbwd=dict(n=n, d=64, impl=gimpl["scaling"], **v)))
+
+    # --- analysis (Figs. 1, 3, 8) ----------------------------------------------
+    lm_softmax = _lm_model(LM_VARIANTS["softmax"], gimpl["lm"])
+    lm_fmm = _lm_model(LM_VARIANTS["fmm1_band5"], gimpl["lm"])
+    task = dict(task="lm_corpus", **LM_TASK, pad_id=0)
+    specs += [
+        ArtifactSpec("analysis_lm_softmax_attnmaps", "analysis",
+                     "attn_weights", lm_softmax, None, 4, task),
+        ArtifactSpec("analysis_lm_fmm_maps", "analysis", "fmm_maps", lm_fmm,
+                     None, 4, task),
+    ]
+
+    # --- serve (batch-bucketed predict; vllm-style fixed-shape executables) ---
+    serve_model = _lra_model("text", LRA_VARIANTS["fmm2_band5"], gimpl["lra"])
+    task = dict(task="lra_text", **LRA_TASKS["text"], pad_id=0)
+    for b in (1, 4, 8):
+        specs.append(ArtifactSpec(f"serve_text_fmm2_b{b}", "serve", "predict",
+                                  serve_model, None, b, task))
+
+    reg = {s.name: s for s in specs}
+    assert len(reg) == len(specs), "duplicate artifact names"
+    return reg
+
+
+GROUPS = ("core", "copy", "lra", "lm", "scaling", "analysis", "serve")

@@ -1,0 +1,63 @@
+"""L1 — Pallas attention kernels and their jnp oracles.
+
+Public dispatch surface used by the L2 model (``compile/model.py``). Every
+attention has two implementations selected by ``impl``:
+
+  * ``"pallas"`` — the Pallas kernel (interpret=True on CPU; the TPU
+    production path), wrapped in custom_vjp for reverse-mode;
+  * ``"jnp"`` — the pure-jnp reference from ``ref.py`` (also the oracle
+    the Pallas path is pytest-pinned against).
+
+The selected impl is recorded in each AOT artifact's manifest.
+"""
+from __future__ import annotations
+
+from . import jnp_fast, ref
+from .banded import banded_attention as banded_attention_pallas
+from .fastweight import fastweight_attention as fastweight_attention_pallas
+from .feature_maps import FEATURE_MAPS, get_feature_maps
+from .lowrank import linear_attention as linear_attention_pallas
+
+IMPLS = ("pallas", "jnp")
+
+
+def _check_impl(impl: str) -> None:
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; known: {IMPLS}")
+
+
+def banded_attention(q, k, v, *, bandwidth, causal=False, impl="pallas"):
+    """Near-field attention D·V (paper eq. 3). O(N·bandwidth)."""
+    _check_impl(impl)
+    if impl == "pallas":
+        return banded_attention_pallas(q, k, v, bandwidth=bandwidth, causal=causal)
+    return jnp_fast.banded_attention(q, k, v, bandwidth=bandwidth, causal=causal)
+
+
+def linear_attention(q, k, v, *, kernels=("elu",), causal=False, impl="pallas"):
+    """Far-field attention L·V (paper eq. 9). O(N·r·d)."""
+    _check_impl(impl)
+    if impl == "pallas":
+        return linear_attention_pallas(q, k, v, kernels=kernels, causal=causal)
+    return jnp_fast.linear_attention(q, k, v, kernels=kernels, causal=causal)
+
+
+def fastweight_attention(q, k, v, beta, *, kernels=("elu",), impl="pallas"):
+    """Delta-rule far-field attention (paper App. 10). Causal, O(N·d^2)."""
+    _check_impl(impl)
+    if impl == "pallas":
+        return fastweight_attention_pallas(q, k, v, beta, kernels=kernels)
+    return ref.fastweight_attention(q, k, v, beta, kernels=kernels)
+
+
+def softmax_attention(q, k, v, *, causal=False, impl="jnp"):
+    """Full O(N^2) softmax attention — the baseline; jnp only (no Pallas
+    kernel: the paper's point is to *avoid* this computation)."""
+    return ref.softmax_attention(q, k, v, causal=causal)
+
+
+__all__ = [
+    "FEATURE_MAPS", "get_feature_maps", "ref", "IMPLS",
+    "banded_attention", "linear_attention", "fastweight_attention",
+    "softmax_attention",
+]

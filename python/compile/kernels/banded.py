@@ -1,0 +1,151 @@
+"""Pallas near-field (banded softmax) attention kernel.
+
+Near-field attention is ``D V`` with ``D = softmax(band_k(QK^T/sqrt(d)))``
+(paper eq. (3)). Only the band is ever computed: O(N·k) work and O(N)
+memory instead of O(N^2).
+
+TPU mapping (DESIGN.md §6, Hardware-Adaptation):
+  * grid over query blocks of ``BQ`` rows — each grid step is one
+    HBM→VMEM stream of a query tile;
+  * the key/value window for query block ``i`` covers global rows
+    ``[(i-1)·B, (i+2)·B)``. We express the overlapping window without
+    unblocked indexing by zero-padding K/V with one block on each side
+    and passing the *same* padded array through three BlockSpecs whose
+    index maps are ``i``, ``i+1``, ``i+2`` — the kernel concatenates the
+    three VMEM tiles;
+  * the band mask is recomputed from global row/col indices inside the
+    kernel — the N×N mask never exists;
+  * scores hit the MXU (``q @ k_win^T``), masking + softmax run on the
+    VPU.
+
+Constraint: ``bandwidth <= block`` (the window spans one block on each
+side). The wrapper picks ``block = max(min_block, bandwidth)`` rounded up
+to a multiple of 8, so any bandwidth works.
+
+VMEM footprint per grid step (f32 words):
+    BQ·d (q) + 3B·(d + dv) (k,v window) + BQ·3B (scores) + BQ·dv (out)
+e.g. B=128, d=dv=64: ~0.45 MiB — far under the 16 MiB VMEM budget, which
+leaves room for double buffering (see EXPERIMENTS.md §Perf).
+
+Backward: ``banded_attention`` is wrapped in ``jax.custom_vjp`` — Pallas
+forward, reverse via ``jax.vjp`` of the jnp reference with the *banded*
+O(N·k) math (never the dense mask oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import jnp_fast
+
+#: Default (and minimum) query/key block size. Multiple of the 8-row f32
+#: sublane tile; 128 matches the MXU systolic dimension.
+DEFAULT_BLOCK = 128
+
+NEG_INF = -1e30  # used instead of -inf: keeps masked softmax NaN-free
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _banded_kernel(q_ref, k0_ref, k1_ref, k2_ref, v0_ref, v1_ref, v2_ref,
+                   o_ref, *, block: int, bandwidth: int, n: int, causal: bool,
+                   scale: float):
+    """One query block vs its 3-block key/value window."""
+    i = pl.program_id(0)
+    q = q_ref[...]                                   # (B, d)
+    k_win = jnp.concatenate([k0_ref[...], k1_ref[...], k2_ref[...]], axis=0)
+    v_win = jnp.concatenate([v0_ref[...], v1_ref[...], v2_ref[...]], axis=0)
+
+    # MXU: (B, d) @ (d, 3B) -> (B, 3B)
+    scores = jnp.dot(q, k_win.T, preferred_element_type=jnp.float32) * scale
+
+    # Global indices. Rows: i*B + r. Window cols: (i-1)*B + c for the
+    # padded layout (window block 0 is the pad/previous block).
+    rows = i * block + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    cols = (i - 1) * block + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    mask = (jnp.abs(rows - cols) <= bandwidth) & (cols >= 0) & (cols < n)
+    if causal:
+        mask = mask & (cols <= rows)
+
+    scores = jnp.where(mask, scores, NEG_INF)
+    # Band always contains the diagonal (j = i), so rows are never empty
+    # for rows < n; fully-padded rows (rows >= n) softmax over NEG_INF
+    # uniformly — harmless garbage that the wrapper slices off.
+    p = jax.nn.softmax(scores, axis=-1)
+    o_ref[...] = jnp.dot(p, v_win, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def banded_attention_fwd(q, k, v, *, bandwidth: int, causal: bool = False,
+                         block: int = DEFAULT_BLOCK):
+    """Pallas forward for one head: q,k (N,d), v (N,dv) -> (N,dv)."""
+    n, d = q.shape
+    dv = v.shape[-1]
+    b = _round_up(max(block, bandwidth, 8), 8)
+    n_pad = _round_up(n, b)
+    grid = n_pad // b
+
+    qp = jnp.pad(q, ((0, n_pad - n), (0, 0)))
+    # K/V padded to n_pad, plus one zero block on each side for the window.
+    kp = jnp.pad(k, ((b, n_pad - n + b), (0, 0)))
+    vp = jnp.pad(v, ((b, n_pad - n + b), (0, 0)))
+
+    kernel = functools.partial(
+        _banded_kernel, block=b, bandwidth=bandwidth, n=n, causal=causal,
+        scale=1.0 / (d ** 0.5))
+
+    kv_spec = lambda off: pl.BlockSpec((b, d), lambda i, o=off: (i + o, 0))
+    vv_spec = lambda off: pl.BlockSpec((b, dv), lambda i, o=off: (i + o, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),      # q
+            kv_spec(0), kv_spec(1), kv_spec(2),           # k window
+            vv_spec(0), vv_spec(1), vv_spec(2),           # v window
+        ],
+        out_specs=pl.BlockSpec((b, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, dv), q.dtype),
+        interpret=True,   # CPU PJRT cannot run Mosaic custom-calls
+    )(qp, kp, kp, kp, vp, vp, vp)
+    return out[:n]
+
+
+def _make_banded(bandwidth: int, causal: bool, block: int):
+    """Build the custom_vjp-wrapped banded attention for static config."""
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        return banded_attention_fwd(q, k, v, bandwidth=bandwidth,
+                                    causal=causal, block=block)
+
+    def fwd(q, k, v):
+        return fn(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        # Reverse-mode through the O(N·k) diagonal-offset jnp twin (NOT the
+        # dense oracle — backward must stay linear in N). Equality of the
+        # twin with both the oracle and this Pallas fwd is pytest-pinned.
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: jnp_fast.banded_attention(
+                q_, k_, v_, bandwidth=bandwidth, causal=causal), q, k, v)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _cached(bandwidth: int, causal: bool, block: int):
+    return _make_banded(bandwidth, causal, block)
+
+
+def banded_attention(q, k, v, *, bandwidth: int, causal: bool = False,
+                     block: int = DEFAULT_BLOCK):
+    """Differentiable Pallas banded attention (see module docstring)."""
+    return _cached(int(bandwidth), bool(causal), int(block))(q, k, v)

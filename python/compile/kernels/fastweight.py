@@ -1,0 +1,151 @@
+"""Pallas fast-weight (delta-rule) attention kernel — paper Appendix 10.
+
+The fast-weight transformer (Schlag et al. [54]) replaces the additive
+linear-attention state update with the *delta rule*:
+
+    kbar_t = phi(k_t)/sum(phi(k_t));  vbar_t = S_{t-1} kbar_t
+    S_t    = S_{t-1} + beta_t (v_t - vbar_t) kbar_t^T
+    out_t  = (S_t qbar_t) / (z_t · qbar_t),   z_t = z_{t-1} + kbar_t
+
+The update is inherently sequential in t (each step reads the state the
+previous step wrote), so the TPU schedule is: sequential grid over
+sequence chunks carrying (S, z) in VMEM scratch, and a ``fori_loop`` over
+the rows *inside* each chunk — the chunk amortizes the HBM→VMEM streaming
+while the loop body is pure VPU/MXU register work on resident tiles.
+
+The wrapper applies the feature map + sum normalization (fused by XLA).
+Backward: jax.vjp of the scan-based jnp reference (banded.py rationale).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+from .feature_maps import get_feature_maps
+
+#: Sequence chunk per grid step. Smaller than the matmul kernels' block:
+#: the inner loop is sequential, so the chunk only amortizes streaming.
+DEFAULT_CHUNK = 64
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _fastweight_kernel(qb_ref, kb_ref, v_ref, beta_ref, o_ref, s_ref, z_ref,
+                       *, chunk: int, eps: float):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    qb = qb_ref[...]        # (C, d_phi) sum-normalized phi(q)
+    kb = kb_ref[...]        # (C, d_phi)
+    v = v_ref[...]          # (C, dv)
+    beta = beta_ref[...]    # (C, 1)
+
+    def body(t, carry):
+        s, z, out = carry                     # s: (dv, d_phi), z: (d_phi,)
+        kb_t = kb[t, :]
+        vbar = s @ kb_t                       # (dv,)
+        s = s + beta[t, 0] * jnp.outer(v[t, :] - vbar, kb_t)
+        z = z + kb_t
+        qb_t = qb[t, :]
+        den = z @ qb_t
+        den = jnp.where(jnp.abs(den) < eps, jnp.where(den >= 0, eps, -eps), den)
+        out = out.at[t, :].set((s @ qb_t) / den)
+        return s, z, out
+
+    s0 = s_ref[...]
+    z0 = z_ref[0, :]
+    out0 = jnp.zeros(o_ref.shape, jnp.float32)
+    s, z, out = jax.lax.fori_loop(0, chunk, body, (s0, z0, out0))
+
+    o_ref[...] = out.astype(o_ref.dtype)
+    s_ref[...] = s.astype(s_ref.dtype)
+    z_ref[0, :] = z.astype(z_ref.dtype)
+
+
+def fastweight_attention_one_fwd(qb, kb, v, beta, *, chunk: int = DEFAULT_CHUNK):
+    """One feature map. qb, kb: sum-normalized phi(q/k), (N, d_phi)."""
+    n, dphi = qb.shape
+    dv = v.shape[-1]
+    c = min(_round_up(max(chunk, 8), 8), _round_up(n, 8))
+    n_pad = _round_up(n, c)
+    grid = n_pad // c
+
+    # Padded rows: beta = 0 => the state update is a no-op there, so the
+    # carried state never sees padding. (kb rows may be zero-padded too.)
+    qp = jnp.pad(qb, ((0, n_pad - n), (0, 0)))
+    kp = jnp.pad(kb, ((0, n_pad - n), (0, 0)))
+    vp = jnp.pad(v, ((0, n_pad - n), (0, 0)))
+    bp = jnp.pad(beta.reshape(n, 1), ((0, n_pad - n), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_fastweight_kernel, chunk=c, eps=ref.DEN_EPS),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((c, dphi), lambda j: (j, 0)),
+                  pl.BlockSpec((c, dphi), lambda j: (j, 0)),
+                  pl.BlockSpec((c, dv), lambda j: (j, 0)),
+                  pl.BlockSpec((c, 1), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((c, dv), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, dv), qb.dtype),
+        scratch_shapes=[pltpu.VMEM((dv, dphi), jnp.float32),
+                        pltpu.VMEM((1, dphi), jnp.float32)],
+        interpret=True,
+    )(qp, kp, vp, bp)
+    return out[:n]
+
+
+def _sum_normalize(x):
+    s = x.sum(axis=-1, keepdims=True)
+    eps = ref.DEN_EPS
+    s = jnp.where(jnp.abs(s) < eps, jnp.where(s >= 0, eps, -eps), s)
+    return x / s
+
+
+def fastweight_attention_fwd(q, k, v, beta, *, kernels=("elu",),
+                             chunk: int = DEFAULT_CHUNK):
+    out = None
+    for phi in get_feature_maps(kernels):
+        term = fastweight_attention_one_fwd(
+            _sum_normalize(phi(q)), _sum_normalize(phi(k)), v, beta, chunk=chunk)
+        out = term if out is None else out + term
+    return out
+
+
+def _make_fastweight(kernels: tuple, chunk: int):
+    @jax.custom_vjp
+    def fn(q, k, v, beta):
+        return fastweight_attention_fwd(q, k, v, beta, kernels=kernels, chunk=chunk)
+
+    def fwd(q, k, v, beta):
+        return fn(q, k, v, beta), (q, k, v, beta)
+
+    def bwd(res, g):
+        q, k, v, beta = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_, b_: ref.fastweight_attention(
+                q_, k_, v_, b_, kernels=kernels), q, k, v, beta)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _cached(kernels: tuple, chunk: int):
+    return _make_fastweight(kernels, chunk)
+
+
+def fastweight_attention(q, k, v, beta, *, kernels=("elu",),
+                         chunk: int = DEFAULT_CHUNK):
+    """Differentiable Pallas delta-rule attention (see module docstring)."""
+    return _cached(tuple(kernels), int(chunk))(q, k, v, beta)

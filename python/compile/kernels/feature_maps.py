@@ -1,0 +1,58 @@
+"""Feature maps for far-field (low-rank) attention.
+
+The FMMformer models far-field attention with a sum of kernelized
+linear-attention terms, one per feature map phi_l (paper Sec. 3.2.1).
+The paper uses:
+
+    phi_1(x) = elu(x) + 1        (the linear-transformer map, [29])
+    phi_2(x) = elu(-x) + 1
+    phi_3(x) = tanh(x)
+
+which are linearly independent for almost all x (paper Prop. 1), so the
+induced far-field matrix L has rank r = #maps.
+
+Each map operates elementwise on the last dimension of Q/K.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FEATURE_MAPS", "get_feature_maps", "elu_plus_one", "neg_elu_plus_one", "tanh_map"]
+
+
+def elu_plus_one(x: jax.Array) -> jax.Array:
+    """phi_1(x) = elu(x) + 1 (strictly positive; the linear-transformer map)."""
+    return jax.nn.elu(x) + 1.0
+
+
+def neg_elu_plus_one(x: jax.Array) -> jax.Array:
+    """phi_2(x) = elu(-x) + 1 (mirror of phi_1; strictly positive)."""
+    return jax.nn.elu(-x) + 1.0
+
+
+def tanh_map(x: jax.Array) -> jax.Array:
+    """phi_3(x) = tanh(x). Sign-indefinite: callers must guard denominators."""
+    return jnp.tanh(x)
+
+
+#: Registry keyed by the short names used in configs and artifact manifests.
+FEATURE_MAPS = {
+    "elu": elu_plus_one,
+    "elu_neg": neg_elu_plus_one,
+    "tanh": tanh_map,
+}
+
+
+def get_feature_maps(names):
+    """Resolve a list of feature-map names to callables.
+
+    Raises KeyError with the known names listed on a bad name, so config
+    typos fail loudly at trace time rather than producing a wrong model.
+    """
+    maps = []
+    for n in names:
+        if n not in FEATURE_MAPS:
+            raise KeyError(f"unknown feature map {n!r}; known: {sorted(FEATURE_MAPS)}")
+        maps.append(FEATURE_MAPS[n])
+    return maps

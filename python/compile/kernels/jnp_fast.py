@@ -1,0 +1,130 @@
+"""O(N) pure-jnp implementations of the near/far-field attentions.
+
+``ref.py`` keeps the *obviously correct* oracles (dense N×N masks, full
+cumsums). Those are fine for pinning kernels at test sizes but are O(N^2)
+time or O(N·d^2) memory, which would poison the Fig. 6 scaling study and
+the custom_vjp backward passes at long N. This module provides
+linear-complexity jnp equivalents:
+
+  * ``banded_attention`` — diagonal-offset formulation: for each offset
+    delta in [-k, k], ``score_delta[i] = q_i · k_{i+delta}`` is a shifted
+    elementwise product. O(N·k·d) time, O(N·(k+d)) memory; the N×N matrix
+    never exists.
+  * ``linear_attention`` — non-causal is the two-matmul form; causal is a
+    chunked ``lax.scan`` carrying the (S, z) prefix state (the jnp twin of
+    the Pallas causal kernel's schedule).
+  * ``fastweight_attention`` — re-exported scan reference (already O(N)).
+
+Equality with ``ref.py`` is pinned in ``python/tests/test_kernels.py``;
+these functions are the ``--impl jnp`` lowering path and the backward
+bases for the Pallas custom_vjps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .feature_maps import get_feature_maps
+
+NEG_INF = -1e30
+
+
+def _shift_rows(x, delta):
+    """Rows shifted so that row i holds x[i+delta] (zeros out of range)."""
+    n = x.shape[0]
+    if delta == 0:
+        return x
+    if abs(delta) >= n:
+        return jnp.zeros_like(x)
+    if delta > 0:
+        return jnp.pad(x[delta:], ((0, delta), (0, 0)))
+    return jnp.pad(x[:delta], ((-delta, 0), (0, 0)))
+
+
+def banded_attention(q, k, v, *, bandwidth: int, causal: bool = False):
+    """Banded softmax attention via diagonal offsets — O(N·k·d)."""
+    n, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    offsets = range(-bandwidth, 1 if causal else bandwidth + 1)
+    idx = jnp.arange(n)
+
+    cols, valids = [], []
+    for delta in offsets:
+        ks = _shift_rows(k, delta)
+        cols.append(jnp.sum(q * ks, axis=-1) * scale)       # (N,)
+        valids.append((idx + delta >= 0) & (idx + delta < n))
+    scores = jnp.stack(cols, axis=1)                         # (N, n_off)
+    valid = jnp.stack(valids, axis=1)
+    scores = jnp.where(valid, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=1)                       # rows sum to 1
+
+    out = jnp.zeros((n, v.shape[-1]), v.dtype)
+    for col, delta in enumerate(offsets):
+        vs = _shift_rows(v, delta)
+        out = out + p[:, col:col + 1] * vs
+    return out
+
+
+def _linear_one_causal_chunked(phi_q, phi_k, v, *, chunk: int = 128):
+    """Chunked-scan causal linear attention — O(N·d_phi·dv) time, O(chunk^2)
+    extra memory. Mirrors the Pallas causal kernel's math exactly."""
+    n, dphi = phi_q.shape
+    dv = v.shape[-1]
+    c = min(chunk, n)
+    n_pad = (n + c - 1) // c * c
+    pq = jnp.pad(phi_q, ((0, n_pad - n), (0, 0)))
+    pk = jnp.pad(phi_k, ((0, n_pad - n), (0, 0)))
+    pv = jnp.pad(v, ((0, n_pad - n), (0, 0)))
+    nb = n_pad // c
+
+    rows = jnp.arange(c)[:, None]
+    colsm = jnp.arange(c)[None, :]
+    within_mask = colsm <= rows
+
+    def step(carry, blk):
+        s, z = carry                            # (dphi, dv), (dphi,)
+        bq, bk, bv = blk
+        num = bq @ s                            # cross-block
+        den = bq @ z
+        a = jnp.where(within_mask, bq @ bk.T, 0.0)
+        num = num + a @ bv
+        den = den + a.sum(axis=-1)
+        s = s + bk.T @ bv
+        z = z + bk.sum(axis=0)
+        return (s, z), (num, den)
+
+    blocks = (pq.reshape(nb, c, dphi), pk.reshape(nb, c, dphi), pv.reshape(nb, c, dv))
+    init = (jnp.zeros((dphi, dv), phi_q.dtype), jnp.zeros((dphi,), phi_q.dtype))
+    _, (num, den) = jax.lax.scan(step, init, blocks)
+    num = num.reshape(n_pad, dv)[:n]
+    den = den.reshape(n_pad)[:n]
+    return num / ref._guard_den(den)[:, None]
+
+
+def linear_attention(q, k, v, *, kernels=("elu",), causal: bool = False,
+                     chunk: int = 128):
+    """Multi-kernel far-field attention — O(N) in both modes."""
+    out = None
+    for phi in get_feature_maps(kernels):
+        pq, pk = phi(q), phi(k)
+        if causal:
+            term = _linear_one_causal_chunked(pq, pk, v, chunk=chunk)
+        else:
+            term = ref._linear_attention_one_noncausal(pq, pk, v)
+        out = term if out is None else out + term
+    return out
+
+
+#: The scan reference is already O(N); re-export for impl dispatch symmetry.
+fastweight_attention = ref.fastweight_attention
+
+
+def fmm_attention(q, k, v, *, bandwidth: int, kernels=("elu",), w1=1.0,
+                  w2=1.0, causal: bool = False):
+    """O(N) FMM blend (near + far), jnp path."""
+    near = banded_attention(q, k, v, bandwidth=bandwidth, causal=causal)
+    far = linear_attention(q, k, v, kernels=kernels, causal=causal)
+    return w1 * near + w2 * far

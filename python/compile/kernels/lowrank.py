@@ -1,0 +1,230 @@
+"""Pallas far-field (low-rank kernelized linear) attention kernels.
+
+Far-field attention is the sum over feature maps phi_l of
+
+    phi_l(Q) (phi_l(K)^T V) / (phi_l(Q) · sum_j phi_l(k_j))      (paper eq. 9)
+
+— a rank-1 normalized attention per map; r maps give a rank-r far field
+(paper Prop. 1). Two schedules:
+
+Non-causal (two kernels, both O(N)):
+  1. ``_reduce_kernel`` — grid over K/V blocks, *sequentially accumulating*
+     the multipole moments ``S = phi(K)^T V`` (d_phi × dv) and
+     ``z = sum phi(K)`` into a revisited output block. On TPU the grid is
+     executed in order, so the accumulate-into-output pattern is exact;
+     the interpret path matches.
+  2. ``_apply_kernel`` — grid over Q blocks: ``out = phi(q)S / (phi(q)·z)``.
+     S and z stay resident in VMEM across all steps (tiny: d_phi·dv words).
+
+Causal (one kernel): sequential grid over sequence blocks carrying the
+running ``(S, z)`` prefix state in VMEM scratch — scratch persists across
+grid steps on sequential TPU grids. Within a block the causal part is a
+(B × B) masked product; across blocks it is the carried state. This is the
+TPU analogue of the GPU chunked-scan linear attention.
+
+VMEM per grid step: B·(d_phi + dv) + d_phi·dv + B·B (causal within-block
+scores) — e.g. B=128, d=dv=64: ~0.13 MiB.
+
+The feature maps are applied by the *wrapper* (cheap elementwise VPU work
+that XLA fuses into the surrounding graph); the kernels take phi(Q),
+phi(K) directly. Padded K rows must contribute nothing, so the wrapper
+zeroes phi(K) beyond row N (phi(0) != 0 for the elu maps!).
+
+Backward: custom_vjp with reverse via ``jax.vjp`` of the jnp reference
+(O(N) math). See banded.py for the rationale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import jnp_fast, ref
+from .feature_maps import get_feature_maps
+
+DEFAULT_BLOCK = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# Non-causal: reduce (moments) + apply
+# ---------------------------------------------------------------------------
+
+def _reduce_kernel(phik_ref, v_ref, s_ref, z_ref):
+    """Accumulate S += phi(K)_b^T V_b and z += sum phi(K)_b over the grid."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    phik = phik_ref[...]                       # (B, d_phi)
+    s_ref[...] += jnp.dot(phik.T, v_ref[...],  # MXU (d_phi, dv)
+                          preferred_element_type=jnp.float32).astype(s_ref.dtype)
+    z_ref[...] += jnp.sum(phik, axis=0, keepdims=True).astype(z_ref.dtype)
+
+
+def _apply_kernel(phiq_ref, s_ref, z_ref, o_ref, *, eps: float):
+    """out = phi(q) S / guard(phi(q) · z)."""
+    phiq = phiq_ref[...]                       # (B, d_phi)
+    num = jnp.dot(phiq, s_ref[...], preferred_element_type=jnp.float32)
+    den = jnp.dot(phiq, z_ref[...].T, preferred_element_type=jnp.float32)  # (B, 1)
+    den = jnp.where(jnp.abs(den) < eps, jnp.where(den >= 0, eps, -eps), den)
+    o_ref[...] = (num / den).astype(o_ref.dtype)
+
+
+def linear_attention_one_noncausal_fwd(phi_q, phi_k, v, *, block: int = DEFAULT_BLOCK):
+    """One feature map, non-causal. phi_q, phi_k: (N, d_phi); v: (N, dv)."""
+    n, dphi = phi_q.shape
+    dv = v.shape[-1]
+    b = min(_round_up(max(block, 8), 8), _round_up(n, 8))
+    n_pad = _round_up(n, b)
+    grid = n_pad // b
+
+    # Zero-pad: padded phi_k rows are zero => contribute nothing to S, z.
+    pq = jnp.pad(phi_q, ((0, n_pad - n), (0, 0)))
+    pk = jnp.pad(phi_k, ((0, n_pad - n), (0, 0)))
+    vp = jnp.pad(v, ((0, n_pad - n), (0, 0)))
+
+    s, z = pl.pallas_call(
+        _reduce_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((b, dphi), lambda j: (j, 0)),
+                  pl.BlockSpec((b, dv), lambda j: (j, 0))],
+        out_specs=[pl.BlockSpec((dphi, dv), lambda j: (0, 0)),
+                   pl.BlockSpec((1, dphi), lambda j: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((dphi, dv), jnp.float32),
+                   jax.ShapeDtypeStruct((1, dphi), jnp.float32)],
+        interpret=True,
+    )(pk, vp)
+
+    out = pl.pallas_call(
+        functools.partial(_apply_kernel, eps=ref.DEN_EPS),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((b, dphi), lambda i: (i, 0)),
+                  pl.BlockSpec((dphi, dv), lambda i: (0, 0)),
+                  pl.BlockSpec((1, dphi), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((b, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, dv), phi_q.dtype),
+        interpret=True,
+    )(pq, s.astype(phi_q.dtype), z.astype(phi_q.dtype))
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Causal: sequential grid carrying (S, z) prefix state in scratch
+# ---------------------------------------------------------------------------
+
+def _causal_kernel(phiq_ref, phik_ref, v_ref, o_ref, s_ref, z_ref, *,
+                   block: int, eps: float):
+    """Chunked causal linear attention; scratch (s, z) is the prefix state."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    phiq = phiq_ref[...]                       # (B, d_phi)
+    phik = phik_ref[...]
+    v = v_ref[...]                             # (B, dv)
+
+    # Cross-block term: everything strictly before this block.
+    num = jnp.dot(phiq, s_ref[...], preferred_element_type=jnp.float32)
+    den = jnp.dot(phiq, z_ref[...].T, preferred_element_type=jnp.float32)  # (B,1)
+
+    # Within-block causal term (includes the diagonal).
+    a = jnp.dot(phiq, phik.T, preferred_element_type=jnp.float32)          # (B,B)
+    rows = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    a = jnp.where(cols <= rows, a, 0.0)
+    num += jnp.dot(a, v, preferred_element_type=jnp.float32)
+    den += jnp.sum(a, axis=-1, keepdims=True)
+
+    den = jnp.where(jnp.abs(den) < eps, jnp.where(den >= 0, eps, -eps), den)
+    o_ref[...] = (num / den).astype(o_ref.dtype)
+
+    # Fold this block into the prefix state for the next grid step.
+    s_ref[...] += jnp.dot(phik.T, v, preferred_element_type=jnp.float32).astype(s_ref.dtype)
+    z_ref[...] += jnp.sum(phik, axis=0, keepdims=True).astype(z_ref.dtype)
+
+
+def linear_attention_one_causal_fwd(phi_q, phi_k, v, *, block: int = DEFAULT_BLOCK):
+    """One feature map, causal. Chunked-scan schedule (module docstring)."""
+    n, dphi = phi_q.shape
+    dv = v.shape[-1]
+    b = min(_round_up(max(block, 8), 8), _round_up(n, 8))
+    n_pad = _round_up(n, b)
+    grid = n_pad // b
+
+    pq = jnp.pad(phi_q, ((0, n_pad - n), (0, 0)))
+    pk = jnp.pad(phi_k, ((0, n_pad - n), (0, 0)))
+    vp = jnp.pad(v, ((0, n_pad - n), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_causal_kernel, block=b, eps=ref.DEN_EPS),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((b, dphi), lambda j: (j, 0)),
+                  pl.BlockSpec((b, dphi), lambda j: (j, 0)),
+                  pl.BlockSpec((b, dv), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((b, dv), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, dv), phi_q.dtype),
+        scratch_shapes=[pltpu.VMEM((dphi, dv), jnp.float32),
+                        pltpu.VMEM((1, dphi), jnp.float32)],
+        interpret=True,
+    )(pq, pk, vp)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Public multi-kernel wrapper (differentiable)
+# ---------------------------------------------------------------------------
+
+def linear_attention_fwd(q, k, v, *, kernels=("elu",), causal: bool = False,
+                         block: int = DEFAULT_BLOCK):
+    """Sum of per-feature-map Pallas linear-attention terms."""
+    one = linear_attention_one_causal_fwd if causal else linear_attention_one_noncausal_fwd
+    out = None
+    for phi in get_feature_maps(kernels):
+        term = one(phi(q), phi(k), v, block=block)
+        out = term if out is None else out + term
+    return out
+
+
+def _make_linear(kernels: tuple, causal: bool, block: int):
+    @jax.custom_vjp
+    def fn(q, k, v):
+        return linear_attention_fwd(q, k, v, kernels=kernels, causal=causal,
+                                    block=block)
+
+    def fwd(q, k, v):
+        return fn(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        # O(N) backward via the chunked-scan jnp twin (see jnp_fast.py).
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: jnp_fast.linear_attention(
+                q_, k_, v_, kernels=kernels, causal=causal), q, k, v)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _cached(kernels: tuple, causal: bool, block: int):
+    return _make_linear(kernels, causal, block)
+
+
+def linear_attention(q, k, v, *, kernels=("elu",), causal: bool = False,
+                     block: int = DEFAULT_BLOCK):
+    """Differentiable Pallas far-field attention (see module docstring)."""
+    return _cached(tuple(kernels), bool(causal), int(block))(q, k, v)

@@ -1,0 +1,217 @@
+"""Pure-jnp oracles for every attention kernel in the library.
+
+These are the ground truth the Pallas kernels are pinned against (pytest +
+hypothesis sweeps in ``python/tests/test_kernels.py``) and they double as
+the ``--impl jnp`` lowering path for artifacts where interpret-mode Pallas
+grid loops dominate CPU runtime (see DESIGN.md §7.5).
+
+All functions operate on a single head: ``q, k, v`` of shape ``(N, d)``
+(``v`` may have a different last dim ``dv``). Batching and heads are
+``vmap``-ed in at the model layer (L2).
+
+Numerical conventions shared with the Pallas kernels:
+  * softmax scores are scaled by ``1/sqrt(d)``;
+  * banded masking keeps ``|i - j| <= bandwidth`` (and ``j <= i`` when
+    causal);
+  * linear-attention denominators are clamped to ``DEN_EPS`` in absolute
+    value — phi_3 = tanh is sign-indefinite so the denominator can cross
+    zero (paper Sec. 3.2.1 leaves this implicit; we make it explicit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .feature_maps import get_feature_maps
+
+#: Denominator guard for kernelized attention (see module docstring).
+DEN_EPS = 1e-6
+
+
+def _guard_den(den: jax.Array) -> jax.Array:
+    """Clamp a denominator away from zero, preserving its sign."""
+    return jnp.where(jnp.abs(den) < DEN_EPS, jnp.where(den >= 0, DEN_EPS, -DEN_EPS), den)
+
+
+# ---------------------------------------------------------------------------
+# Full softmax attention (the O(N^2) baseline, paper eq. (1))
+# ---------------------------------------------------------------------------
+
+def softmax_attention(q, k, v, *, causal=False):
+    """Standard softmax attention, ``softmax(QK^T/sqrt(d)) V``."""
+    n, d = q.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    return jax.nn.softmax(scores, axis=-1) @ v
+
+
+def softmax_attention_weights(q, k, *, causal=False):
+    """The attention matrix ``A`` itself (for Fig. 1/3 analysis artifacts)."""
+    n, d = q.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Near-field: banded softmax attention (paper eq. (3))
+# ---------------------------------------------------------------------------
+
+def band_mask(n: int, bandwidth: int, *, causal: bool = False) -> jax.Array:
+    """Boolean ``(n, n)`` mask keeping ``|i-j| <= bandwidth`` (and ``j<=i``)."""
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    m = jnp.abs(i - j) <= bandwidth
+    if causal:
+        m = m & (j <= i)
+    return m
+
+
+def banded_attention(q, k, v, *, bandwidth: int, causal: bool = False):
+    """Near-field attention ``D V`` with ``D = softmax(band_k(QK^T/sqrt(d)))``.
+
+    This oracle materializes the N×N mask — O(N^2) — which is fine for
+    correctness testing; the Pallas kernel computes only the band (O(N·k)).
+    """
+    n, d = q.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.where(band_mask(n, bandwidth, causal=causal), scores, -jnp.inf)
+    return jax.nn.softmax(scores, axis=-1) @ v
+
+
+def banded_attention_weights(q, k, *, bandwidth: int, causal: bool = False):
+    """The banded attention matrix ``D`` (for Fig. 8 visualization)."""
+    n, d = q.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.where(band_mask(n, bandwidth, causal=causal), scores, -jnp.inf)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Far-field: multi-kernel linear attention (paper eq. (9))
+# ---------------------------------------------------------------------------
+
+def _linear_attention_one_noncausal(phi_q, phi_k, v):
+    """One kernelized term: ``phi(Q)(phi(K)^T V) / (phi(Q) sum_j phi(k_j))``."""
+    s = phi_k.T @ v                      # (d_phi, dv)  "multipole moments"
+    z = phi_k.sum(axis=0)                # (d_phi,)
+    num = phi_q @ s                      # (N, dv)
+    den = phi_q @ z                      # (N,)
+    return num / _guard_den(den)[:, None]
+
+
+def _linear_attention_one_causal(phi_q, phi_k, v):
+    """Causal variant: prefix sums ``S_i = sum_{j<=i} phi(k_j) v_j^T``."""
+    # (N, d_phi, dv) outer products, then inclusive prefix sum over N.
+    kv = jnp.cumsum(phi_k[:, :, None] * v[:, None, :], axis=0)
+    z = jnp.cumsum(phi_k, axis=0)        # (N, d_phi)
+    num = jnp.einsum("np,npv->nv", phi_q, kv)
+    den = jnp.einsum("np,np->n", phi_q, z)
+    return num / _guard_den(den)[:, None]
+
+
+def linear_attention(q, k, v, *, kernels=("elu",), causal: bool = False):
+    """Far-field attention: sum of per-feature-map normalized linear terms.
+
+    ``kernels`` is a list of feature-map names (see ``feature_maps.py``);
+    the rank of the induced far-field matrix L is ``len(kernels)`` (paper
+    Prop. 1).
+    """
+    out = None
+    for phi in get_feature_maps(kernels):
+        pq, pk = phi(q), phi(k)
+        term = (_linear_attention_one_causal if causal else _linear_attention_one_noncausal)(pq, pk, v)
+        out = term if out is None else out + term
+    return out
+
+
+def linear_attention_weights(q, k, *, kernels=("elu",), causal: bool = False):
+    """The (rank-r) far-field matrix ``L`` itself — O(N^2), analysis only."""
+    n = q.shape[0]
+    total = jnp.zeros((n, n), q.dtype)
+    for phi in get_feature_maps(kernels):
+        pq, pk = phi(q), phi(k)
+        scores = pq @ pk.T               # (N, N)
+        if causal:
+            scores = jnp.where(jnp.tril(jnp.ones((n, n), bool)), scores, 0.0)
+        den = scores.sum(axis=-1)
+        total = total + scores / _guard_den(den)[:, None]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Far-field alternative: fast-weight / delta-rule attention (paper App. 10)
+# ---------------------------------------------------------------------------
+
+def _sum_normalize(x):
+    """Schlag et al.'s sum normalization of feature vectors."""
+    s = x.sum(axis=-1, keepdims=True)
+    return x / _guard_den(s)
+
+
+def fastweight_attention(q, k, v, beta, *, kernels=("elu",)):
+    """Delta-rule fast-weight attention (causal by construction).
+
+    State update per step t (Schlag et al. [54], with the FMMformer's
+    "attention normalization" — we also carry a linear-attention-style
+    normalizer z):
+
+        kbar_t = phi(k_t) / sum(phi(k_t))
+        vbar_t = S_{t-1} kbar_t
+        S_t    = S_{t-1} + beta_t (v_t - vbar_t) kbar_t^T
+        z_t    = z_{t-1} + kbar_t
+        out_t  = (S_t qbar_t) / (z_t . qbar_t)
+
+    ``beta``: shape ``(N,)``, in (0,1) (the model applies a sigmoid).
+    Implemented with ``lax.scan`` so JAX can reverse-differentiate it; the
+    Pallas kernel in ``fastweight.py`` is the chunked forward.
+    """
+    out = None
+    for phi in get_feature_maps(kernels):
+        qb = _sum_normalize(phi(q))
+        kb = _sum_normalize(phi(k))
+        dv = v.shape[-1]
+        dphi = qb.shape[-1]
+
+        def step(carry, inp):
+            s, z = carry
+            qb_t, kb_t, v_t, b_t = inp
+            vbar = s @ kb_t                       # (dv,)
+            s = s + b_t * jnp.outer(v_t - vbar, kb_t)
+            z = z + kb_t
+            num = s @ qb_t                        # (dv,)
+            den = _guard_den(z @ qb_t)
+            return (s, z), num / den
+
+        init = (jnp.zeros((dv, dphi), q.dtype), jnp.zeros((dphi,), q.dtype))
+        _, term = jax.lax.scan(step, init, (qb, kb, v, beta))
+        out = term if out is None else out + term
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FMM blend: near-field + far-field (paper eq. (11))
+# ---------------------------------------------------------------------------
+
+def fmm_attention(q, k, v, *, bandwidth: int, kernels=("elu",), w1=1.0, w2=1.0,
+                  causal: bool = False):
+    """``(w1 D + w2 L) V`` — the FMMformer attention.
+
+    ``w1, w2`` are the *already sigmoid-ed* blending weights (the model
+    owns the raw parameters and the sigmoid, paper eq. (11)).
+    """
+    near = banded_attention(q, k, v, bandwidth=bandwidth, causal=causal)
+    far = linear_attention(q, k, v, kernels=kernels, causal=causal)
+    return w1 * near + w2 * far
+
+
+def fmm_fastweight_attention(q, k, v, beta, *, bandwidth: int, kernels=("elu",),
+                             w1=1.0, w2=1.0):
+    """FMM blend with the delta-rule far-field (paper Table 3, causal)."""
+    near = banded_attention(q, k, v, bandwidth=bandwidth, causal=True)
+    far = fastweight_attention(q, k, v, beta, kernels=kernels)
+    return w1 * near + w2 * far

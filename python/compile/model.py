@@ -1,0 +1,267 @@
+"""L2 — the FMMformer transformer in JAX, calling the L1 kernels.
+
+One model covers every attention variant in the paper's evaluation:
+
+  * ``softmax``        — full O(N^2) baseline (paper eq. (1))
+  * ``band``           — banded-only softmax, Band_k baselines
+  * ``linear``         — far-field only; rank r = len(kernels) (eq. (9))
+  * ``fmm``            — blended near+far field (eq. (11)), *the* FMMformer
+  * ``fastweight``     — delta-rule far-field only (App. 10)
+  * ``fmm_fastweight`` — banded + delta-rule far field (Table 3)
+
+Architecture (matching the paper's experimental setup, App. 9): token
+embedding + learned positional embedding, pre-LN transformer blocks
+(MHA → FFN), final LN, then either an LM head (causal) or mean-pool +
+classifier head (LRA tasks).
+
+Parameters are a nested dict pytree; ``param_leaves`` defines the stable
+flattening order recorded in artifact manifests so the Rust runtime can
+address every leaf by name without ever understanding the pytree.
+
+This module is build-time only — it is lowered to HLO text by ``aot.py``
+and never imported on the Rust request path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+ATTENTION_KINDS = ("softmax", "band", "linear", "fmm", "fastweight", "fmm_fastweight")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model hyper-parameters (baked into each AOT artifact)."""
+
+    vocab_size: int
+    seq_len: int
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 128
+    attention: str = "softmax"
+    bandwidth: int = 5
+    kernels: Tuple[str, ...] = ("elu",)
+    causal: bool = False
+    #: None => LM head over vocab; int => mean-pool classifier.
+    num_classes: Optional[int] = None
+    #: Kernel implementation lowered into the artifact ("pallas"|"jnp").
+    impl: str = "pallas"
+
+    def __post_init__(self):
+        if self.attention not in ATTENTION_KINDS:
+            raise ValueError(f"attention={self.attention!r} not in {ATTENTION_KINDS}")
+        if self.d_model % self.n_heads:
+            raise ValueError("d_model must divide evenly into heads")
+        if self.attention in ("fastweight", "fmm_fastweight") and not self.causal:
+            raise ValueError("delta-rule attention is causal by construction")
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def uses_blend(self) -> bool:
+        return self.attention in ("fmm", "fmm_fastweight")
+
+    @property
+    def uses_beta(self) -> bool:
+        return self.attention in ("fastweight", "fmm_fastweight")
+
+    def to_meta(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["kernels"] = list(self.kernels)
+        return d
+
+    @staticmethod
+    def from_meta(d: dict) -> "ModelConfig":
+        d = dict(d)
+        d["kernels"] = tuple(d["kernels"])
+        return ModelConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Initialize the parameter pytree (Xavier-uniform linears, N(0, 0.02)
+    embeddings — the setup of the paper's reference codebases)."""
+    key = jax.random.PRNGKey(seed)
+
+    def xavier(key, shape):
+        limit = (6.0 / (shape[0] + shape[-1])) ** 0.5
+        return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+    keys = jax.random.split(key, 3 + cfg.n_layers * 8)
+    params = {
+        "embed": 0.02 * jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model)),
+        "pos": 0.02 * jax.random.normal(keys[1], (cfg.seq_len, cfg.d_model)),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        k = keys[2 + li * 8: 2 + (li + 1) * 8]
+        d, dff = cfg.d_model, cfg.d_ff
+        layer = {
+            "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "wq": xavier(k[0], (d, d)), "wk": xavier(k[1], (d, d)),
+            "wv": xavier(k[2], (d, d)), "wo": xavier(k[3], (d, d)),
+            "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+            "w1": xavier(k[4], (d, dff)), "b1": jnp.zeros((dff,)),
+            "w2": xavier(k[5], (dff, d)), "b2": jnp.zeros((d,)),
+        }
+        if cfg.uses_blend:
+            # Paper App. 9: blending weights initialized to zeros (near
+            # field) and ones (far field); sigmoid applied in the forward.
+            layer["blend"] = jnp.array([0.0, 1.0])
+        if cfg.uses_beta:
+            # Delta-rule writing strength: beta = sigmoid(x w_beta + b),
+            # one scalar per (position, head).
+            layer["w_beta"] = xavier(k[6], (d, cfg.n_heads))
+            layer["b_beta"] = jnp.zeros((cfg.n_heads,))
+        params["layers"].append(layer)
+
+    params["lnf_g"] = jnp.ones((cfg.d_model,))
+    params["lnf_b"] = jnp.zeros((cfg.d_model,))
+    out_dim = cfg.vocab_size if cfg.num_classes is None else cfg.num_classes
+    params["head_w"] = xavier(keys[-1], (cfg.d_model, out_dim))
+    params["head_b"] = jnp.zeros((out_dim,))
+    return params
+
+
+def param_leaves(params: dict):
+    """Flatten to ``[(dotted_name, leaf), ...]`` in a stable, documented
+    order (the manifest/param-store order the Rust side relies on)."""
+    out = []
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for name in sorted(node):
+                walk(f"{prefix}.{name}" if prefix else name, node[name])
+        elif isinstance(node, (list, tuple)):
+            for i, item in enumerate(node):
+                walk(f"{prefix}.{i}", item)
+        else:
+            out.append((prefix, node))
+
+    walk("", params)
+    return out
+
+
+def unflatten_like(params_template, leaves):
+    """Inverse of ``param_leaves`` given the same template structure."""
+    leaves = list(leaves)
+    idx = [0]
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {name: walk(node[name]) for name in sorted(node)}
+        if isinstance(node, (list, tuple)):
+            return [walk(item) for item in node]
+        leaf = leaves[idx[0]]
+        idx[0] += 1
+        return leaf
+
+    rebuilt = walk(params_template)
+    assert idx[0] == len(leaves), "leaf count mismatch"
+    return rebuilt
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention_head(cfg: ModelConfig, q, k, v, beta, w1, w2):
+    """Dispatch one head's attention. q,k,v: (N, d_head); beta: (N,)."""
+    a = cfg.attention
+    if a == "softmax":
+        return kernels.softmax_attention(q, k, v, causal=cfg.causal)
+    if a == "band":
+        return kernels.banded_attention(
+            q, k, v, bandwidth=cfg.bandwidth, causal=cfg.causal, impl=cfg.impl)
+    if a == "linear":
+        return kernels.linear_attention(
+            q, k, v, kernels=cfg.kernels, causal=cfg.causal, impl=cfg.impl)
+    if a == "fastweight":
+        return kernels.fastweight_attention(
+            q, k, v, beta, kernels=cfg.kernels, impl=cfg.impl)
+    if a == "fmm":
+        near = kernels.banded_attention(
+            q, k, v, bandwidth=cfg.bandwidth, causal=cfg.causal, impl=cfg.impl)
+        far = kernels.linear_attention(
+            q, k, v, kernels=cfg.kernels, causal=cfg.causal, impl=cfg.impl)
+        return w1 * near + w2 * far
+    if a == "fmm_fastweight":
+        near = kernels.banded_attention(
+            q, k, v, bandwidth=cfg.bandwidth, causal=True, impl=cfg.impl)
+        far = kernels.fastweight_attention(
+            q, k, v, beta, kernels=cfg.kernels, impl=cfg.impl)
+        return w1 * near + w2 * far
+    raise AssertionError(a)
+
+
+def _mha(cfg: ModelConfig, layer: dict, x):
+    """Multi-head attention over one sequence. x: (N, d_model)."""
+    n = x.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ layer["wq"]).reshape(n, h, dh).transpose(1, 0, 2)   # (H, N, dh)
+    k = (x @ layer["wk"]).reshape(n, h, dh).transpose(1, 0, 2)
+    v = (x @ layer["wv"]).reshape(n, h, dh).transpose(1, 0, 2)
+
+    if cfg.uses_beta:
+        beta = jax.nn.sigmoid(x @ layer["w_beta"] + layer["b_beta"]).T  # (H, N)
+    else:
+        beta = jnp.zeros((h, n))
+
+    if cfg.uses_blend:
+        w1 = jax.nn.sigmoid(layer["blend"][0])
+        w2 = jax.nn.sigmoid(layer["blend"][1])
+    else:
+        w1 = w2 = 1.0
+
+    head = lambda q_, k_, v_, b_: _attention_head(cfg, q_, k_, v_, b_, w1, w2)
+    out = jax.vmap(head)(q, k, v, beta)                          # (H, N, dh)
+    out = out.transpose(1, 0, 2).reshape(n, h * dh)
+    return out @ layer["wo"]
+
+
+def forward_hidden(cfg: ModelConfig, params: dict, tokens):
+    """Token ids (N,) int32 -> final hidden states (N, d_model). Pre-LN."""
+    x = params["embed"][tokens] + params["pos"][: tokens.shape[0]]
+    for layer in params["layers"]:
+        x = x + _mha(cfg, layer, _layer_norm(x, layer["ln1_g"], layer["ln1_b"]))
+        hfc = _layer_norm(x, layer["ln2_g"], layer["ln2_b"])
+        x = x + jax.nn.gelu(hfc @ layer["w1"] + layer["b1"]) @ layer["w2"] + layer["b2"]
+    return _layer_norm(x, params["lnf_g"], params["lnf_b"])
+
+
+def forward(cfg: ModelConfig, params: dict, tokens, *, pad_id: int = 0):
+    """Batched forward. tokens: (B, N) int32.
+
+    Returns per-position LM logits (B, N, V) when ``num_classes is None``,
+    else masked-mean-pooled classifier logits (B, C) (pad positions — id
+    ``pad_id`` — are excluded from the pool; the paper uses mean pooling,
+    App. 9).
+    """
+    hidden = jax.vmap(lambda t: forward_hidden(cfg, params, t))(tokens)
+    if cfg.num_classes is None:
+        return hidden @ params["head_w"] + params["head_b"]
+    mask = (tokens != pad_id).astype(hidden.dtype)[:, :, None]   # (B, N, 1)
+    denom = jnp.maximum(mask.sum(axis=1), 1.0)
+    pooled = (hidden * mask).sum(axis=1) / denom
+    return pooled @ params["head_w"] + params["head_b"]
+
+
+def count_params(params: dict) -> int:
+    return sum(int(leaf.size) for _, leaf in param_leaves(params))

@@ -1,0 +1,171 @@
+"""L2 — whole-train-step functions lowered to single AOT artifacts.
+
+The Rust trainer never computes math on the host: one ``execute_b`` call
+per step runs
+
+    step(params…, m…, v…, t, tokens, targets)
+        -> (params'…, m'…, v'…, loss)
+
+entirely in-graph — cross-entropy, reverse-mode grads (through the Pallas
+kernels' custom_vjps), global-norm clipping, linear-warmup Adam. Flat leaf
+lists (order defined by ``model.param_leaves``) are the ABI; the manifest
+written by ``aot.py`` records it.
+
+Hyper-parameters (paper App. 9): Adam, base lr 2.5e-4, 2000-step warmup
+(scaled down alongside the step budgets — see DESIGN.md §3), grad-clip 1.0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+#: LM targets with this id contribute no loss (padding / context-only).
+IGNORE_ID = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    """Adam + schedule hyper-parameters (baked into the artifact)."""
+
+    lr: float = 2.5e-4
+    warmup_steps: int = 200
+    beta1: float = 0.9
+    beta2: float = 0.98
+    eps: float = 1e-9
+    clip_norm: float = 1.0
+
+    def to_meta(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: M.ModelConfig, params, tokens, targets):
+    """Mean next-token cross-entropy over positions with target != IGNORE_ID.
+
+    ``tokens``/``targets`` are (B, N) int32; the data pipeline does the
+    shift (targets[i] = tokens[i+1]) so the artifact stays shape-simple.
+    """
+    logits = M.forward(cfg, params, tokens)                      # (B, N, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.maximum(targets, 0)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = (targets != IGNORE_ID).astype(logits.dtype)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def cls_loss_and_correct(cfg: M.ModelConfig, params, tokens, labels):
+    """Classifier cross-entropy + number of correct argmax predictions."""
+    logits = M.forward(cfg, params, tokens)                      # (B, C)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return nll.mean(), correct.sum()
+
+
+def _loss_fn(cfg: M.ModelConfig):
+    if cfg.num_classes is None:
+        return lambda p, x, y: lm_loss(cfg, p, x, y)
+    return lambda p, x, y: cls_loss_and_correct(cfg, p, x, y)[0]
+
+
+# ---------------------------------------------------------------------------
+# Adam with linear warmup + global-norm clipping (in-graph)
+# ---------------------------------------------------------------------------
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)))
+
+
+def adam_update(opt: OptConfig, params, m, v, grads, t):
+    """One Adam step over *lists of leaves*. ``t`` is the 1-based step
+    count as an f32 scalar (bias correction needs it as a float)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / (gnorm + 1e-12))
+    lr = opt.lr * jnp.minimum(1.0, t / max(opt.warmup_steps, 1))
+    bc1 = 1.0 - opt.beta1 ** t
+    bc2 = 1.0 - opt.beta2 ** t
+
+    def upd(p, m_, v_, g):
+        g = g * scale
+        m_ = opt.beta1 * m_ + (1.0 - opt.beta1) * g
+        v_ = opt.beta2 * v_ + (1.0 - opt.beta2) * g * g
+        p = p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + opt.eps)
+        return p, m_, v_
+
+    out = [upd(p, m_, v_, g) for p, m_, v_, g in zip(params, m, v, grads)]
+    return [o[0] for o in out], [o[1] for o in out], [o[2] for o in out]
+
+
+# ---------------------------------------------------------------------------
+# Flat-ABI step builders (the functions aot.py lowers)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: M.ModelConfig, opt: OptConfig, template: dict):
+    """Build ``step(*leaves3, t, tokens, targets) -> (*leaves3, loss)``.
+
+    ``template`` is an example params pytree (defines structure only).
+    ``adam_update``'s pytree maps run on *lists of leaves* directly, so the
+    flat ABI and the internal pytree agree by construction.
+    """
+    n = len(M.param_leaves(template))
+    loss_fn = _loss_fn(cfg)
+
+    def step(*args):
+        p_leaves = list(args[:n])
+        m_leaves = list(args[n:2 * n])
+        v_leaves = list(args[2 * n:3 * n])
+        t, tokens, targets = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+
+        params = M.unflatten_like(template, p_leaves)
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets)
+        g_leaves = [leaf for _, leaf in M.param_leaves(grads)]
+        new_p, new_m, new_v = adam_update(opt, p_leaves, m_leaves, v_leaves,
+                                          g_leaves, t)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return step, n
+
+
+def make_eval_step(cfg: M.ModelConfig, template: dict):
+    """Build ``eval(*params, tokens, targets) -> (loss_sum_weight, ...)``.
+
+    LM: returns (masked nll sum, token count) so the host can aggregate
+    exact corpus perplexity across batches. Classifier: (nll mean * B,
+    correct count) for exact accuracy.
+    """
+    n = len(M.param_leaves(template))
+
+    def step(*args):
+        params = M.unflatten_like(template, list(args[:n]))
+        tokens, targets = args[n], args[n + 1]
+        if cfg.num_classes is None:
+            logits = M.forward(cfg, params, tokens)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            tgt = jnp.maximum(targets, 0)
+            nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+            mask = (targets != IGNORE_ID).astype(logits.dtype)
+            return (nll * mask).sum(), mask.sum()
+        loss, correct = cls_loss_and_correct(cfg, params, tokens, targets)
+        b = jnp.asarray(tokens.shape[0], jnp.float32)
+        return loss * b, correct
+
+    return step, n
+
+
+def make_predict(cfg: M.ModelConfig, template: dict):
+    """Build ``predict(*params, tokens) -> logits`` (the serving artifact)."""
+    n = len(M.param_leaves(template))
+
+    def step(*args):
+        params = M.unflatten_like(template, list(args[:n]))
+        return (M.forward(cfg, params, args[n]),)
+
+    return step, n

@@ -1,0 +1,109 @@
+"""AOT pipeline tests: manifests are complete, HLO parses, binfmt
+round-trips, and the registry covers every paper table/figure group."""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import binfmt
+from compile.aot import build_artifact, emit
+from compile.configs import GROUPS, build_registry
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return build_registry(impl="jnp")   # jnp: fast to trace in tests
+
+
+def test_registry_covers_all_groups(registry):
+    groups = {s.group for s in registry.values()}
+    assert groups == set(GROUPS)
+
+
+def test_registry_has_every_table_row(registry):
+    # Table 1: 5 tasks x 5 variants, train + eval.
+    for task in ("listops", "text", "retrieval", "image", "pathfinder"):
+        for v in ("softmax", "linear", "band5", "fmm1_band5", "fmm2_band5"):
+            assert f"lra_{task}_{v}" in registry
+            assert f"lra_{task}_{v}_eval" in registry
+    # Tables 2 & 3 rows.
+    for v in ("softmax", "linear", "band5", "band20", "fmm1_band5",
+              "fmm1_band20", "fmm2_band20", "fastweight", "fw_fmm1_band20"):
+        assert f"lm_{v}" in registry
+    # Figs. 4 & 5 rows at every length.
+    for n in (128, 256, 512):
+        for v in ("softmax", "linear", "fmm_band10", "fmm_band20",
+                  "fmm_band30", "rank2", "rank3"):
+            assert f"copy{n}_{v}" in registry
+
+
+def test_scaling_group_softmax_capped(registry):
+    ns = sorted(int(s.fwdbwd["n"]) for s in registry.values()
+                if s.group == "scaling" and s.fwdbwd["variant"] == "softmax")
+    assert max(ns) <= 2 ** 13
+    ns_lin = sorted(int(s.fwdbwd["n"]) for s in registry.values()
+                    if s.name.startswith("scale_linear1_"))
+    assert max(ns_lin) == 2 ** 16
+
+
+def test_build_tiny_train_artifact(registry):
+    hlo, manifest, init_leaves = build_artifact(registry["core_tiny"])
+    assert hlo.startswith("HloModule")
+    p = len(manifest["params"])
+    assert len(manifest["inputs"]) == 3 * p + 3
+    assert len(manifest["outputs"]) == 3 * p + 1
+    assert manifest["outputs"][-1]["role"] == "loss"
+    assert [e["name"] for e in manifest["params"]] == [n for n, _ in init_leaves]
+    roles = {e["role"] for e in manifest["inputs"]}
+    assert roles == {"param", "opt_m", "opt_v", "step", "tokens", "targets"}
+
+
+def test_build_eval_and_predict_artifacts(registry):
+    for name, out_roles in [("core_tiny_eval", {"metric"}),
+                            ("core_tiny_predict", {"logits"})]:
+        hlo, manifest, init = build_artifact(registry[name])
+        assert hlo.startswith("HloModule")
+        assert init is None
+        assert {e["role"] for e in manifest["outputs"]} == out_roles
+
+
+def test_build_fwdbwd_artifact(registry):
+    spec = registry["scale_linear2_n512"]
+    hlo, manifest, _ = build_artifact(spec)
+    assert hlo.startswith("HloModule")
+    assert manifest["outputs"][0]["name"] == "out_mean"
+    assert manifest["inputs"][0]["shape"] == [512, 64]
+
+
+def test_emit_is_idempotent(registry):
+    spec = registry["core_tiny_predict"]
+    with tempfile.TemporaryDirectory() as d:
+        first = emit(spec, d, force=False)
+        assert first != "skip"
+        assert emit(spec, d, force=False) == "skip"
+        man = json.load(open(os.path.join(d, f"{spec.name}.json")))
+        assert man["name"] == spec.name
+
+
+def test_binfmt_roundtrip():
+    leaves = [("a.w", np.arange(12, dtype=np.float32).reshape(3, 4)),
+              ("b", np.asarray(2.5, dtype=np.float32)),
+              ("c.ids", np.asarray([1, -7, 3], dtype=np.int32))]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "p.bin")
+        binfmt.write_params(path, leaves)
+        back = binfmt.read_params(path)
+    assert [n for n, _ in back] == ["a.w", "b", "c.ids"]
+    for (_, a), (_, b) in zip(leaves, back):
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == b.dtype
+
+
+def test_param_key_shared_between_train_and_eval(registry):
+    t = registry["lm_fmm1_band5"]
+    e = registry["lm_fmm1_band5_eval"]
+    assert t.param_key == e.param_key
+    a = registry["analysis_lm_fmm_maps"]
+    assert a.param_key == t.param_key  # Fig. 8 loads the trained checkpoint

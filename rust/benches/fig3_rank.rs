@@ -1,0 +1,116 @@
+//! Fig. 3 (+ Fig. 1) — structure of trained softmax attention maps.
+//!
+//! Pipeline: train the softmax LM briefly (or reuse its checkpoint from a
+//! table2 run), extract attention matrices with the `attn_weights`
+//! analysis artifact, then in pure Rust: singular-value spectra and
+//! ε-rank histograms of A − band_k(A) for k ∈ {0, 5, 10, 20}.
+//!
+//!     cargo bench --bench fig3_rank -- --maps 64 --train-steps 80
+//!     cargo bench --bench fig3_rank -- --fig1     # also dump Fig. 1 PGMs
+//!
+//! Expected shape (paper): spectra decay fast (few large σ); rank(A−D)
+//! is far below N and decreases as the removed bandwidth grows.
+
+use anyhow::Result;
+use fmmformer::analysis::{rank_study, spectrum, write_pgm};
+use fmmformer::bench::{report_dir, Table};
+use fmmformer::cli::Args;
+use fmmformer::coordinator::Coordinator;
+use fmmformer::data::Split;
+use fmmformer::linalg::{keep_band, strip_band};
+use fmmformer::runtime::Artifact;
+use fmmformer::tensor::Tensor;
+use fmmformer::train::Trainer;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["fig1"])?;
+    let n_maps = args.usize_or("maps", 32)?;
+    let train_steps = args.usize_or("train-steps", 80)?;
+    let coord = Coordinator::new(&fmmformer::artifacts_dir(args.get("artifacts")),
+                                 args.u64_or("seed", 0)?)?;
+    let dir = report_dir();
+    std::fs::create_dir_all(&dir).ok();
+
+    // 1. A trained softmax LM (checkpoint reuse makes re-runs cheap).
+    let ckpt = coord.runs_dir.join("lm_softmax.ckpt.bin");
+    let mut trainer = Trainer::new(&coord.rt, "lm_softmax")?;
+    let mut gen = coord.generator("lm_softmax")?;
+    if ckpt.exists() {
+        eprintln!("reusing checkpoint {ckpt:?}");
+        trainer.load_checkpoint(&ckpt)?;
+    } else {
+        eprintln!("training lm_softmax for {train_steps} steps...");
+        trainer.train_loop(&mut *gen, train_steps, train_steps / 2, None)?;
+        std::fs::create_dir_all(&coord.runs_dir).ok();
+        trainer.save_checkpoint(&ckpt)?;
+    }
+
+    // 2. Extract attention maps via the analysis artifact.
+    let art = coord.rt.load("analysis_lm_softmax_attnmaps")?;
+    let b = art.manifest.batch;
+    let n = art.manifest.seq_len()?;
+    let shape = &art.manifest.outputs[0].shape; // (B, L, H, N, N)
+    let maps_per_batch = shape[0] * shape[1] * shape[2];
+    let mut maps: Vec<Tensor> = Vec::with_capacity(n_maps);
+    while maps.len() < n_maps {
+        let batch = gen.batch(Split::Valid, b);
+        let tok = coord.rt.upload_i32(&batch.tokens)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = trainer.params().buffers().iter().collect();
+        inputs.push(&tok);
+        let out = art.execute(&inputs)?;
+        let flat = Artifact::to_f32(&out[0])?;
+        for m in 0..maps_per_batch {
+            if maps.len() >= n_maps {
+                break;
+            }
+            let mat = Tensor::new(&[n, n], flat[m * n * n..(m + 1) * n * n].to_vec())?;
+            maps.push(mat);
+        }
+    }
+    eprintln!("collected {} maps of {n}x{n}", maps.len());
+
+    // 3. Fig. 3 top-right: singular-value spectra of two random maps.
+    println!("== Fig. 3 (top right): singular values (first 16, 2 maps) ==");
+    for (i, m) in maps.iter().take(2).enumerate() {
+        let sv = spectrum(m);
+        let head: Vec<String> = sv.iter().take(16).map(|s| format!("{s:.3}")).collect();
+        println!("map {i}: {}", head.join(" "));
+    }
+
+    // 4. Fig. 3 bottom: rank of A - D per removed bandwidth.
+    let studies = rank_study(&maps, &[0, 5, 10, 20], 1e-6);
+    let mut tbl = Table::new(
+        &format!("Fig. 3 (bottom): eps-rank (|sigma| > 1e-6) of A - band_k(A), {} maps, N={n}",
+                 maps.len()),
+        &["bandwidth k", "mean rank", "median", "min", "max", "histogram (8 bins to N)"],
+    );
+    for s in &studies {
+        let h = s.histogram(8, n);
+        tbl.row(vec![
+            s.bandwidth.to_string(),
+            format!("{:.1}", s.mean_rank()),
+            s.median_rank().to_string(),
+            s.ranks.iter().min().unwrap().to_string(),
+            s.ranks.iter().max().unwrap().to_string(),
+            format!("{h:?}"),
+        ]);
+    }
+    tbl.print();
+    tbl.save_csv(&dir.join("fig3_rank.csv"))?;
+
+    // Monotonicity check — the figure's claim.
+    let means: Vec<f64> = studies.iter().map(|s| s.mean_rank()).collect();
+    let monotone = means.windows(2).all(|w| w[1] <= w[0] + 0.5);
+    println!("rank decreases with bandwidth: {} ({means:?})",
+             if monotone { "YES (matches paper)" } else { "NO" });
+
+    // 5. Fig. 1: decomposition illustration as PGM heatmaps.
+    if args.has("fig1") {
+        let a = &maps[0];
+        write_pgm(&dir.join("fig1_full_attention.pgm"), a)?;
+        write_pgm(&dir.join("fig1_near_field.pgm"), &keep_band(a, 5))?;
+        write_pgm(&dir.join("fig1_far_field.pgm"), &strip_band(a, 5))?;
+        println!("Fig. 1 heatmaps -> {:?}", dir.join("fig1_*.pgm"));
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Fig. 4 — copy-task convergence: blending near-field bands into linear
+//! attention.
+//!
+//! Trains softmax / linear / linear+band{10,20,30} on sequence
+//! duplication and reports the loss curves (CSV + sparklines) and
+//! convergence summaries per sequence length.
+//!
+//!     cargo bench --bench fig4_copy -- --lens 128 --steps 100
+//!     cargo bench --bench fig4_copy -- --lens 128,256,512 --steps 400   # paper scale
+//!
+//! Expected shape (paper): softmax converges fastest; plain linear lags,
+//! increasingly so at longer N; adding bands closes the gap, wider bands
+//! help more.
+
+use anyhow::Result;
+use fmmformer::bench::{ascii_curve, report_dir, Table};
+use fmmformer::cli::Args;
+use fmmformer::coordinator::Coordinator;
+
+const VARIANTS: [&str; 5] = ["softmax", "linear", "fmm_band10", "fmm_band20", "fmm_band30"];
+
+fn main() -> Result<()> {
+    run_copy_bench("Fig. 4", &VARIANTS, "fig4_copy")
+}
+
+/// Shared driver for Figs. 4 and 5 (same task, different variant sets).
+pub fn run_copy_bench(title: &str, variants: &[&str], stem: &str) -> Result<()> {
+    let args = Args::parse(&[])?;
+    let steps = args.usize_or("steps", 60)?;
+    let lens = args.list_or("lens", &["128"]);
+    let coord = Coordinator::new(&fmmformer::artifacts_dir(args.get("artifacts")),
+                                 args.u64_or("seed", 0)?)?;
+
+    let mut tbl = Table::new(
+        &format!("{title}: copy-task loss after {steps} steps (tail-10 mean)"),
+        &[&["N"], variants].concat(),
+    );
+    let mut curves = Table::new("curves", &["variant", "n", "step", "loss"]);
+
+    for len in &lens {
+        let mut row = vec![len.clone()];
+        for v in variants {
+            let name = format!("copy{len}_{v}");
+            if !coord.rt.has_artifact(&name) {
+                row.push("missing".into());
+                continue;
+            }
+            let out = coord.run_pipeline(&name, steps, 0, steps / 4)?;
+            row.push(format!("{:.4}", out.curve.tail_mean(10)));
+            print!("{}", ascii_curve(&name, &out.curve.downsample(50), 50));
+            for (s, l) in out.curve.steps.iter().zip(&out.curve.losses) {
+                curves.row(vec![v.to_string(), len.clone(), s.to_string(),
+                                format!("{l}")]);
+            }
+        }
+        tbl.row(row);
+    }
+    tbl.print();
+    let dir = report_dir();
+    curves.save_csv(&dir.join(format!("{stem}_curves.csv")))?;
+    tbl.save_csv(&dir.join(format!("{stem}.csv")))?;
+    println!("curves -> {:?}", dir.join(format!("{stem}_curves.csv")));
+    Ok(())
+}

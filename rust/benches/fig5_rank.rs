@@ -1,0 +1,18 @@
+//! Fig. 5 — copy-task convergence vs far-field rank (number of kernels).
+//!
+//! Trains softmax / linear (rank 1) / rank 2 / rank 3 on sequence
+//! duplication. Expected shape (paper): higher far-field rank converges
+//! faster at every length; all linear variants trail softmax.
+//!
+//!     cargo bench --bench fig5_rank -- --lens 128,256 --steps 150
+
+use anyhow::Result;
+
+#[path = "fig4_copy.rs"]
+mod fig4;
+
+const VARIANTS: [&str; 4] = ["softmax", "linear", "rank2", "rank3"];
+
+fn main() -> Result<()> {
+    fig4::run_copy_bench("Fig. 5", &VARIANTS, "fig5_rank")
+}

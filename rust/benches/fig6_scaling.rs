@@ -1,0 +1,106 @@
+//! Fig. 6 — computational time & peak memory of attention fwd+bwd vs N.
+//!
+//! Regenerates both panels: per-variant median wall time and peak-RSS
+//! delta for N = 2^9..2^16 (softmax capped at 2^13: the full quadratic
+//! fwd+bwd past that exceeds this testbed's RAM, which is the figure's
+//! point — the bench prints `OOM` rows for it, matching the paper's
+//! truncated softmax series).
+//!
+//!     cargo bench --bench fig6_scaling               # full range
+//!     cargo bench --bench fig6_scaling -- --quick    # N <= 4096
+//!
+//! Expected shape (paper): softmax grows ~O(N^2) in both panels; linear
+//! rank 1/2/3 and the FMM blend grow ~O(N), ordered by rank/bandwidth.
+
+use anyhow::Result;
+use fmmformer::bench::{fmt_time, measure, report_dir, Table};
+use fmmformer::cli::Args;
+use fmmformer::rng::Pcg64;
+use fmmformer::runtime::Runtime;
+use fmmformer::tensor::Tensor;
+
+const VARIANTS: [&str; 5] = ["softmax", "linear1", "linear2", "linear3", "fmm3_band30"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick"])?;
+    let quick = args.has("quick");
+    let max_n = args.usize_or("max-n", if quick { 4096 } else { 65536 })?;
+    let iters = args.usize_or("iters", if quick { 3 } else { 2 })?;
+    let rt = Runtime::new(&fmmformer::artifacts_dir(args.get("artifacts")))?;
+
+    let ns: Vec<usize> = (9..=16).map(|p| 1usize << p).filter(|&n| n <= max_n).collect();
+    let mut time_tbl = Table::new(
+        "Fig. 6 (left): attention fwd+bwd wall time per call",
+        &["N", "softmax", "linear1", "linear2", "linear3", "fmm3_band30"],
+    );
+    let mut mem_tbl = Table::new(
+        "Fig. 6 (right): peak-RSS delta during fwd+bwd",
+        &["N", "softmax", "linear1", "linear2", "linear3", "fmm3_band30"],
+    );
+    let mut csv = Table::new("fig6 raw", &["variant", "n", "median_s", "rss_bytes"]);
+
+    for &n in &ns {
+        let mut trow = vec![n.to_string()];
+        let mut mrow = vec![n.to_string()];
+        for variant in VARIANTS {
+            let name = format!("scale_{variant}_n{n}");
+            if !rt.has_artifact(&name) {
+                // Softmax artifacts above the cap are intentionally not
+                // built: quadratic fwd+bwd at this N exceeds RAM.
+                trow.push("OOM".into());
+                mrow.push("OOM".into());
+                continue;
+            }
+            let art = rt.load(&name)?;
+            let mut rng = Pcg64::seeded(n as u64);
+            let q = Tensor::randn(&[n, 64], &mut rng);
+            let k = Tensor::randn(&[n, 64], &mut rng);
+            let v = Tensor::randn(&[n, 64], &mut rng);
+            let bufs = [rt.upload_f32(&q)?, rt.upload_f32(&k)?, rt.upload_f32(&v)?];
+            let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+            let m = measure(&name, 1, iters, || {
+                let out = art.execute(&refs)?;
+                // Force completion: touch the scalar output.
+                fmmformer::runtime::Artifact::to_scalar(&out[0])?;
+                Ok(())
+            })?;
+            trow.push(fmt_time(m.median_s));
+            mrow.push(fmmformer::util::human_bytes(m.peak_rss_delta));
+            csv.row(vec![
+                variant.to_string(),
+                n.to_string(),
+                format!("{}", m.median_s),
+                format!("{}", m.peak_rss_delta),
+            ]);
+        }
+        time_tbl.row(trow);
+        mem_tbl.row(mrow);
+    }
+
+    time_tbl.print();
+    mem_tbl.print();
+    let dir = report_dir();
+    csv.save_csv(&dir.join("fig6_scaling.csv"))?;
+    println!("raw series -> {:?}", dir.join("fig6_scaling.csv"));
+
+    // Scaling-exponent summary: fit log t ~ a log N over the series.
+    println!("\nScaling exponents (log-log slope over measured range):");
+    for variant in VARIANTS {
+        let pts: Vec<(f64, f64)> = csv
+            .rows
+            .iter()
+            .filter(|r| r[0] == variant)
+            .map(|r| (r[1].parse::<f64>().unwrap().ln(), r[2].parse::<f64>().unwrap().ln()))
+            .collect();
+        if pts.len() < 2 {
+            continue;
+        }
+        let n = pts.len() as f64;
+        let (sx, sy): (f64, f64) = pts.iter().fold((0.0, 0.0), |a, p| (a.0 + p.0, a.1 + p.1));
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+        println!("  {variant:<14} t ~ N^{slope:.2}");
+    }
+    Ok(())
+}

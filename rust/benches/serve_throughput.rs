@@ -1,0 +1,91 @@
+//! Serving bench (system extension) — router/batcher latency & throughput.
+//!
+//! Closed-loop load test over the batch-size-bucketed predict artifacts:
+//! sweeps client concurrency and batching windows, reporting throughput,
+//! latency percentiles, bucket occupancy and padding waste. This is the
+//! L3 hot path of the §Perf pass.
+//!
+//!     cargo bench --bench serve_throughput -- --requests 96
+
+use std::time::Duration;
+
+use anyhow::Result;
+use fmmformer::bench::{fmt_time, report_dir, Table};
+use fmmformer::cli::Args;
+use fmmformer::data::{text_cls::TextCls, Split, TaskGen};
+use fmmformer::runtime::{load_init_leaves, Runtime};
+use fmmformer::serve::{ServeConfig, Server};
+
+const BUCKETS: [&str; 3] = ["serve_text_fmm2_b1", "serve_text_fmm2_b4", "serve_text_fmm2_b8"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[])?;
+    let n_requests = args.usize_or("requests", 96)?;
+    let dir = fmmformer::artifacts_dir(args.get("artifacts"));
+    let rt = Runtime::new(&dir)?;
+    for b in BUCKETS {
+        if !rt.has_artifact(b) {
+            eprintln!("SKIP: missing {b}; run `make artifacts`");
+            return Ok(());
+        }
+    }
+    let train = rt.load("lra_text_fmm2_band5")?;
+    let leaves = load_init_leaves(rt.dir(), &train.manifest)?;
+    let seq_len = train.manifest.seq_len()?;
+    drop(rt); // the server thread owns its own runtime
+
+    let mut tbl = Table::new(
+        "Serving: closed-loop load over bucketed predict executables",
+        &["clients", "wait ms", "req/s", "p50", "p95", "occupancy", "pad waste"],
+    );
+
+    for &(clients, wait_ms) in &[(1usize, 1u64), (4, 2), (8, 4), (16, 8), (16, 2)] {
+        let server = Server::start(
+            dir.clone(),
+            &BUCKETS,
+            leaves.clone(),
+            ServeConfig { max_wait: Duration::from_millis(wait_ms), pad_id: 0 },
+        )?;
+        let t0 = std::time::Instant::now();
+        let mut handles = vec![];
+        let per_client = n_requests / clients;
+        for c in 0..clients {
+            let client = server.client();
+            let n = seq_len;
+            handles.push(std::thread::spawn(move || -> Vec<f64> {
+                let mut gen = TextCls::new(n, 100 + c as u64);
+                let mut lats = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let b = gen.batch(Split::Test, 1);
+                    let resp = client.infer(b.tokens.row(0).to_vec()).expect("served");
+                    lats.push(resp.latency.as_secs_f64());
+                }
+                lats
+            }));
+        }
+        let mut lats: Vec<f64> = vec![];
+        for h in handles {
+            lats.extend(h.join().expect("client thread"));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = server.shutdown();
+        tbl.row(vec![
+            clients.to_string(),
+            wait_ms.to_string(),
+            format!("{:.1}", lats.len() as f64 / wall),
+            fmt_time(lats[lats.len() / 2]),
+            fmt_time(lats[lats.len() * 95 / 100]),
+            format!("{:.2}", stats.mean_occupancy()),
+            format!("{:.2}x", stats.mean_padding_waste()),
+        ]);
+    }
+    tbl.print();
+    tbl.save_csv(&report_dir().join("serve_throughput.csv"))?;
+    println!(
+        "expected shape: higher concurrency -> bigger buckets -> higher \
+         throughput at bounded p95 (dynamic batching amortizes the fixed \
+         per-execution cost)"
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Table 1 — LRA-proxy test accuracy across attention variants.
+//!
+//! Trains each (task, variant) pair and reports test accuracy plus the
+//! cross-task average, in the paper's layout. The paper's own numbers
+//! are printed alongside for shape comparison (absolute values differ:
+//! synthetic proxies + scaled-down budgets, DESIGN.md §3).
+//!
+//!     cargo bench --bench table1_lra -- --steps 60                # quick
+//!     cargo bench --bench table1_lra -- --steps 400 --eval-batches 16  # fuller
+//!     cargo bench --bench table1_lra -- --tasks listops,image
+//!
+//! Expected shape (paper): FMM2 >= FMM1 >= band5/linear on average;
+//! FMMformers match or beat softmax; plain linear collapses on ListOps.
+
+use anyhow::Result;
+use fmmformer::bench::{report_dir, Table};
+use fmmformer::cli::Args;
+use fmmformer::coordinator::Coordinator;
+
+const TASKS: [&str; 5] = ["listops", "text", "retrieval", "image", "pathfinder"];
+const VARIANTS: [&str; 5] = ["softmax", "linear", "band5", "fmm1_band5", "fmm2_band5"];
+
+/// Paper Table 1 (test accuracy %), for side-by-side shape comparison.
+const PAPER: [(&str, [f64; 5]); 5] = [
+    ("softmax", [37.10, 64.17, 80.71, 39.06, 72.48]),
+    ("linear", [18.30, 64.22, 81.37, 38.29, 71.17]),
+    ("band5", [32.16, 66.31, 79.41, 43.33, 67.44]),
+    ("fmm1_band5", [33.22, 66.52, 81.50, 45.01, 71.29]),
+    ("fmm2_band5", [36.74, 67.84, 81.88, 45.10, 72.12]),
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[])?;
+    let steps = args.usize_or("steps", 40)?;
+    let eval_batches = args.usize_or("eval-batches", 6)?;
+    let tasks = args.list_or("tasks", &TASKS);
+    let variants = args.list_or("variants", &VARIANTS);
+    let coord = Coordinator::new(&fmmformer::artifacts_dir(args.get("artifacts")),
+                                 args.u64_or("seed", 0)?)?;
+
+    let mut headers: Vec<&str> = vec!["model"];
+    headers.extend(tasks.iter().map(|s| s.as_str()));
+    headers.push("avg");
+    let mut tbl = Table::new(
+        &format!("Table 1: LRA-proxy test accuracy (%), {steps} steps/run"),
+        &headers,
+    );
+
+    for v in &variants {
+        let mut row = vec![v.clone()];
+        let mut accs = vec![];
+        for t in &tasks {
+            let name = format!("lra_{t}_{v}");
+            if !coord.rt.has_artifact(&name) {
+                row.push("missing".into());
+                continue;
+            }
+            let out = coord.run_pipeline(&name, steps, eval_batches, 0)?;
+            let acc = out.eval_test.map(|e| e.metric * 100.0).unwrap_or(f64::NAN);
+            accs.push(acc);
+            row.push(format!("{acc:.2}"));
+            eprintln!("  {name}: test acc {acc:.2}% (train {:.1}s)", out.train_secs);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
+        row.push(format!("{avg:.2}"));
+        tbl.row(row);
+    }
+    tbl.print();
+
+    // Paper reference rows (same layout) for shape comparison.
+    let mut paper = Table::new(
+        "Paper Table 1 (4x3090Ti, real LRA — compare orderings, not values)",
+        &["model", "ListOps", "Text", "Retrieval", "Image", "Pathfinder", "avg"],
+    );
+    for (name, vals) in PAPER {
+        let avg = vals.iter().sum::<f64>() / 5.0;
+        let mut row = vec![name.to_string()];
+        row.extend(vals.iter().map(|v| format!("{v:.2}")));
+        row.push(format!("{avg:.2}"));
+        paper.row(row);
+    }
+    paper.print();
+
+    let dir = report_dir();
+    tbl.save_csv(&dir.join("table1_lra.csv"))?;
+    tbl.save_json(&dir.join("table1_lra.json"))?;
+    println!("report -> {:?}", dir.join("table1_lra.csv"));
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Table 2 + Fig. 7 — LM perplexity on the synthetic-WikiText corpus.
+//!
+//! Trains each variant, evaluating on the validation split every
+//! `--eval-every` steps (those series are Fig. 7), then reports final
+//! valid/test perplexity in the paper's Table 2 layout.
+//!
+//!     cargo bench --bench table2_lm -- --steps 120                 # quick
+//!     cargo bench --bench table2_lm -- --steps 600 --eval-every 50 # fuller
+//!
+//! Expected shape (paper): softmax best; FMM variants beat plain linear
+//! and both band-only baselines; wider bands and more kernels shrink the
+//! gap to softmax (band20 > band5, fmm2 > fmm1).
+
+use anyhow::Result;
+use fmmformer::bench::{report_dir, Table};
+use fmmformer::cli::Args;
+use fmmformer::coordinator::Coordinator;
+use fmmformer::data::Split;
+use fmmformer::train::{CsvLogger, Trainer};
+
+const VARIANTS: [&str; 7] =
+    ["softmax", "linear", "band5", "band20", "fmm1_band5", "fmm1_band20", "fmm2_band20"];
+
+/// Paper Table 2 (valid, test PPL) for shape comparison.
+const PAPER: [(&str, f64, f64); 7] = [
+    ("softmax", 33.15, 34.29),
+    ("linear", 37.27, 38.40),
+    ("band5", 43.77, 44.76),
+    ("band20", 38.18, 39.19),
+    ("fmm1_band5", 36.27, 37.29),
+    ("fmm1_band20", 35.41, 36.43),
+    ("fmm2_band20", 35.10, 36.11),
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[])?;
+    let variants = args.list_or("variants", &VARIANTS);
+    run_lm_bench("Table 2", &variants, "table2_lm", &args)
+}
+
+/// Shared driver (Table 3 reuses it with the fast-weight variant set).
+pub fn run_lm_bench(title: &str, variants: &[String], stem: &str, args: &Args) -> Result<()> {
+    let steps = args.usize_or("steps", 80)?;
+    let eval_every = args.usize_or("eval-every", 40)?;
+    let eval_batches = args.usize_or("eval-batches", 6)?;
+    let coord = Coordinator::new(&fmmformer::artifacts_dir(args.get("artifacts")),
+                                 args.u64_or("seed", 0)?)?;
+    std::fs::create_dir_all(&coord.runs_dir).ok();
+
+    let mut tbl = Table::new(
+        &format!("{title}: synthetic-WikiText LM perplexity, {steps} steps/run"),
+        &["model", "params", "valid PPL", "test PPL"],
+    );
+
+    for v in variants {
+        let name = format!("lm_{v}");
+        if !coord.rt.has_artifact(&name) {
+            tbl.row(vec![v.clone(), "-".into(), "missing".into(), "missing".into()]);
+            continue;
+        }
+        let mut gen = coord.generator(&name)?;
+        let mut trainer = Trainer::new(&coord.rt, &name)?;
+        let eval_art = coord.rt.load(&format!("{name}_eval"))?;
+        // Fig. 7 series: (step, train_loss, valid_ppl).
+        let mut fig7 = CsvLogger::create(
+            &coord.runs_dir.join(format!("{name}.fig7.csv")),
+            &["step", "train_ppl", "valid_ppl"],
+        )?;
+        let chunks = (steps + eval_every - 1) / eval_every;
+        for _ in 0..chunks {
+            let take = eval_every.min(steps - (trainer.step));
+            if take == 0 {
+                break;
+            }
+            let curve = trainer.train_loop(&mut *gen, take, 0, None)?;
+            let valid = trainer.evaluate(&eval_art, &mut *gen, Split::Valid, eval_batches)?;
+            fig7.log(&[trainer.step as f64,
+                       (curve.tail_mean(10) as f64).exp(),
+                       valid.metric])?;
+            eprintln!("  {name} step {}: train ppl {:.1}, valid ppl {:.1}",
+                      trainer.step, (curve.tail_mean(10) as f64).exp(), valid.metric);
+        }
+        fig7.flush()?;
+        trainer.save_checkpoint(&coord.runs_dir.join(format!("{name}.ckpt.bin")))?;
+        let valid = trainer.evaluate(&eval_art, &mut *gen, Split::Valid, eval_batches * 2)?;
+        let test = trainer.evaluate(&eval_art, &mut *gen, Split::Test, eval_batches * 2)?;
+        tbl.row(vec![
+            v.clone(),
+            trainer.n_params().to_string(),
+            format!("{:.2}", valid.metric),
+            format!("{:.2}", test.metric),
+        ]);
+    }
+    tbl.print();
+
+    let mut paper = Table::new(
+        "Paper Table 2 (real WikiText-103, 40M params — compare orderings)",
+        &["model", "valid PPL", "test PPL"],
+    );
+    for (name, v, t) in PAPER {
+        paper.row(vec![name.into(), format!("{v:.2}"), format!("{t:.2}")]);
+    }
+    paper.print();
+
+    let dir = report_dir();
+    tbl.save_csv(&dir.join(format!("{stem}.csv")))?;
+    println!("report -> {:?}; Fig. 7 series under {:?}", dir.join(format!("{stem}.csv")),
+             coord.runs_dir);
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Table 3 (appendix) — fast-weight (delta-rule) far field.
+//!
+//! Same LM protocol as Table 2 over the fast-weight variant set.
+//! Expected shape (paper): fastweight beats plain linear; blending it
+//! with a band beats both; softmax stays best overall.
+//!
+//!     cargo bench --bench table3_fastweight -- --steps 120
+
+use anyhow::Result;
+use fmmformer::cli::Args;
+
+#[path = "table2_lm.rs"]
+mod table2;
+
+const VARIANTS: [&str; 5] =
+    ["softmax", "linear", "fastweight", "fmm1_band20", "fw_fmm1_band20"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[])?;
+    // Shorter default: the delta-rule scan dominates step time.
+    let variants: Vec<String> =
+        args.list_or("variants", &VARIANTS).into_iter().collect();
+    table2::run_lm_bench("Table 3", &variants, "table3_fastweight", &args)
+}

@@ -1,0 +1,186 @@
+//! Attention-structure analysis (Figs. 1, 3, 8).
+//!
+//! Consumes N×N attention maps produced by the `attn_weights` /
+//! `fmm_maps` artifacts and runs the paper's structural studies in pure
+//! Rust: singular-value spectra, ε-rank histograms after band removal
+//! (Fig. 3), and heatmap dumps (Fig. 8 / Fig. 1).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::{eps_rank, singular_values, strip_band};
+use crate::tensor::Tensor;
+
+/// Fig. 3 row: rank distribution of `A - band_k(A)` for one bandwidth.
+#[derive(Debug, Clone)]
+pub struct RankStudy {
+    pub bandwidth: usize,
+    pub ranks: Vec<usize>,
+}
+
+impl RankStudy {
+    pub fn mean_rank(&self) -> f64 {
+        if self.ranks.is_empty() {
+            return 0.0;
+        }
+        self.ranks.iter().sum::<usize>() as f64 / self.ranks.len() as f64
+    }
+
+    pub fn median_rank(&self) -> usize {
+        if self.ranks.is_empty() {
+            return 0;
+        }
+        let mut s = self.ranks.clone();
+        s.sort_unstable();
+        s[s.len() / 2]
+    }
+
+    /// Histogram over `bins` equal-width buckets up to `max`.
+    pub fn histogram(&self, bins: usize, max: usize) -> Vec<usize> {
+        let mut h = vec![0usize; bins];
+        for &r in &self.ranks {
+            let b = (r * bins / max.max(1)).min(bins - 1);
+            h[b] += 1;
+        }
+        h
+    }
+}
+
+/// The Fig. 3 experiment: for each bandwidth, strip the band from every
+/// attention map and measure the ε-rank (absolute threshold 1e-6, the
+/// paper's Fig. 3 caption convention).
+pub fn rank_study(maps: &[Tensor], bandwidths: &[usize], eps: f32) -> Vec<RankStudy> {
+    bandwidths
+        .iter()
+        .map(|&bw| {
+            let ranks = maps
+                .iter()
+                .map(|a| {
+                    let far = if bw == 0 { a.clone() } else { strip_band(a, bw) };
+                    let sv = singular_values(&far);
+                    eps_rank(&sv, eps, false)
+                })
+                .collect();
+            RankStudy { bandwidth: bw, ranks }
+        })
+        .collect()
+}
+
+/// Singular-value spectrum of one map (Fig. 3 top-right panel).
+pub fn spectrum(map: &Tensor) -> Vec<f32> {
+    singular_values(map)
+}
+
+/// Write a matrix as a binary-portable PGM heatmap (Figs. 1 & 8). Values
+/// are normalized to [0, max] -> [255, 0] (dark = high attention, like
+/// the paper's colormaps inverted for print).
+pub fn write_pgm(path: &Path, map: &Tensor) -> Result<()> {
+    let [h, w] = map.shape()[..] else { anyhow::bail!("heatmap needs 2-D") };
+    let mx = map.data().iter().cloned().fold(0.0f32, f32::max).max(1e-12);
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    writeln!(f, "P5\n{w} {h}\n255")?;
+    let bytes: Vec<u8> = map
+        .data()
+        .iter()
+        .map(|&v| 255 - ((v / mx).clamp(0.0, 1.0) * 255.0) as u8)
+        .collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Coarse ASCII rendering (terminal-friendly Fig. 8).
+pub fn ascii_heatmap(map: &Tensor, cells: usize) -> String {
+    let [h, w] = map.shape()[..] else { panic!("heatmap needs 2-D") };
+    let shades = [' ', '.', ':', '+', '*', '#', '@'];
+    let mx = map.data().iter().cloned().fold(0.0f32, f32::max).max(1e-12);
+    let mut out = String::new();
+    for cy in 0..cells {
+        for cx in 0..cells {
+            // Max-pool the cell (peaks matter in attention maps).
+            let y0 = cy * h / cells;
+            let y1 = ((cy + 1) * h / cells).max(y0 + 1);
+            let x0 = cx * w / cells;
+            let x1 = ((cx + 1) * w / cells).max(x0 + 1);
+            let mut v = 0.0f32;
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    v = v.max(map.at(y, x));
+                }
+            }
+            let idx = ((v / mx).clamp(0.0, 1.0) * (shades.len() - 1) as f32).round() as usize;
+            out.push(shades[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fraction of attention mass within the bandwidth-k band — quantifies
+/// "how near-field is this head" (Fig. 8 discussion).
+pub fn band_mass_fraction(map: &Tensor, bandwidth: usize) -> f32 {
+    let total = map.data().iter().sum::<f32>().max(1e-12);
+    let near = crate::linalg::keep_band(map, bandwidth).data().iter().sum::<f32>();
+    near / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention;
+    use crate::rng::Pcg64;
+
+    fn softmax_map(n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let q = Tensor::randn(&[n, 8], &mut rng);
+        let k = Tensor::randn(&[n, 8], &mut rng);
+        attention::softmax_attention_weights(&q, &k, false)
+    }
+
+    #[test]
+    fn rank_decreases_with_bandwidth() {
+        // The paper's Fig. 3 claim: rank(A - D) shrinks as D's bandwidth
+        // grows (monotone on average).
+        let maps: Vec<Tensor> = (0..4).map(|s| softmax_map(48, s)).collect();
+        let studies = rank_study(&maps, &[0, 5, 10, 20], 1e-6);
+        let means: Vec<f64> = studies.iter().map(|s| s.mean_rank()).collect();
+        for w in means.windows(2) {
+            assert!(w[1] <= w[0] + 0.5, "{means:?}");
+        }
+        assert_eq!(studies[0].ranks.len(), 4);
+    }
+
+    #[test]
+    fn attention_maps_have_decaying_spectrum() {
+        let sv = spectrum(&softmax_map(48, 7));
+        assert!(sv[0] > 5.0 * sv[sv.len() / 2], "{:?}", &sv[..8]);
+    }
+
+    #[test]
+    fn band_mass_reaches_one_at_full_bandwidth() {
+        let m = softmax_map(16, 1);
+        let f0 = band_mass_fraction(&m, 0);
+        let f5 = band_mass_fraction(&m, 5);
+        let f15 = band_mass_fraction(&m, 15);
+        assert!(f0 < f5 && f5 < f15);
+        assert!((f15 - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn pgm_and_ascii_render() {
+        let m = softmax_map(32, 2);
+        let dir = std::env::temp_dir().join(format!("fmm_pgm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.pgm");
+        write_pgm(&p, &m).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n32 32\n255\n"));
+        assert_eq!(bytes.len(), "P5\n32 32\n255\n".len() + 32 * 32);
+        let art = ascii_heatmap(&m, 8);
+        assert_eq!(art.lines().count(), 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

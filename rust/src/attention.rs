@@ -1,0 +1,301 @@
+//! Pure-Rust reference attentions — the third, independent implementation.
+//!
+//! The Pallas kernels are pinned against the jnp oracles by pytest; this
+//! module re-implements the same math in Rust with no JAX in sight, and
+//! the integration tests pin the *executed HLO artifacts* against it.
+//! Three independent implementations agreeing is the cross-language
+//! correctness story. It also serves as the host-CPU baseline in the
+//! serve/bench comparisons and as the generator for property tests.
+//!
+//! All functions are single-head: `q, k (n×d)`, `v (n×dv)`, row-major.
+
+use crate::tensor::Tensor;
+
+/// Denominator guard shared with the Python side (kernels/ref.py DEN_EPS).
+pub const DEN_EPS: f32 = 1e-6;
+
+fn guard_den(d: f32) -> f32 {
+    if d.abs() < DEN_EPS {
+        if d >= 0.0 { DEN_EPS } else { -DEN_EPS }
+    } else {
+        d
+    }
+}
+
+/// Feature maps phi_1..phi_3 of the paper (Sec. 3.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureMap {
+    /// elu(x) + 1
+    Elu,
+    /// elu(-x) + 1
+    EluNeg,
+    /// tanh(x)
+    Tanh,
+}
+
+impl FeatureMap {
+    pub fn apply(&self, x: f32) -> f32 {
+        fn elu(x: f32) -> f32 {
+            if x > 0.0 { x } else { x.exp() - 1.0 }
+        }
+        match self {
+            FeatureMap::Elu => elu(x) + 1.0,
+            FeatureMap::EluNeg => elu(-x) + 1.0,
+            FeatureMap::Tanh => x.tanh(),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<FeatureMap> {
+        match name {
+            "elu" => Some(FeatureMap::Elu),
+            "elu_neg" => Some(FeatureMap::EluNeg),
+            "tanh" => Some(FeatureMap::Tanh),
+            _ => None,
+        }
+    }
+}
+
+/// Full softmax attention `softmax(QK^T/sqrt(d)) V` — O(N^2) baseline.
+pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Tensor {
+    let a = softmax_attention_weights(q, k, causal);
+    a.matmul(v).expect("shape checked")
+}
+
+/// The attention matrix A itself.
+pub fn softmax_attention_weights(q: &Tensor, k: &Tensor, causal: bool) -> Tensor {
+    let d = q.shape()[1];
+    let mut scores = q.matmul(&k.t()).expect("shape").scale(1.0 / (d as f32).sqrt());
+    if causal {
+        let n = scores.shape()[0];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                scores.set(i, j, f32::NEG_INFINITY);
+            }
+        }
+    }
+    scores.softmax_rows()
+}
+
+/// Banded (near-field) attention `D V`, O(N·k·d) — the band only.
+pub fn banded_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bandwidth: usize,
+    causal: bool,
+) -> Tensor {
+    let n = q.shape()[0];
+    let d = q.shape()[1];
+    let dv = v.shape()[1];
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Tensor::zeros(&[n, dv]);
+    let mut scores = Vec::with_capacity(2 * bandwidth + 1);
+    for i in 0..n {
+        let lo = i.saturating_sub(bandwidth);
+        let hi = if causal { i } else { (i + bandwidth).min(n - 1) };
+        scores.clear();
+        let mut mx = f32::NEG_INFINITY;
+        for j in lo..=hi {
+            let s: f32 = q.row(i).iter().zip(k.row(j)).map(|(a, b)| a * b).sum::<f32>()
+                * scale;
+            scores.push(s);
+            mx = mx.max(s);
+        }
+        let mut z = 0.0;
+        for s in &mut scores {
+            *s = (*s - mx).exp();
+            z += *s;
+        }
+        let orow = &mut out.data_mut()[i * dv..(i + 1) * dv];
+        for (off, j) in (lo..=hi).enumerate() {
+            let w = scores[off] / z;
+            for (o, x) in orow.iter_mut().zip(v.row(j)) {
+                *o += w * x;
+            }
+        }
+    }
+    out
+}
+
+/// Multi-kernel linear (far-field) attention, O(N·r·d·dv).
+pub fn linear_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    kernels: &[FeatureMap],
+    causal: bool,
+) -> Tensor {
+    let n = q.shape()[0];
+    let d = q.shape()[1];
+    let dv = v.shape()[1];
+    let mut out = Tensor::zeros(&[n, dv]);
+    for fm in kernels {
+        let pq = q.clone().map(|x| fm.apply(x));
+        let pk = k.clone().map(|x| fm.apply(x));
+        if causal {
+            // Running prefix state S (d×dv) and z (d).
+            let mut s = vec![0.0f32; d * dv];
+            let mut z = vec![0.0f32; d];
+            for i in 0..n {
+                for (a, zz) in pk.row(i).iter().zip(z.iter_mut()) {
+                    *zz += a;
+                }
+                for (di, a) in pk.row(i).iter().enumerate() {
+                    let srow = &mut s[di * dv..(di + 1) * dv];
+                    for (ss, x) in srow.iter_mut().zip(v.row(i)) {
+                        *ss += a * x;
+                    }
+                }
+                let den = guard_den(
+                    pq.row(i).iter().zip(&z).map(|(a, b)| a * b).sum::<f32>(),
+                );
+                let orow = &mut out.data_mut()[i * dv..(i + 1) * dv];
+                for (di, a) in pq.row(i).iter().enumerate() {
+                    let srow = &s[di * dv..(di + 1) * dv];
+                    for (o, ss) in orow.iter_mut().zip(srow) {
+                        *o += a * ss / den;
+                    }
+                }
+            }
+        } else {
+            // Moments S = phi(K)^T V and z = sum phi(K).
+            let s = pk.t().matmul(v).expect("shape");
+            let mut z = vec![0.0f32; d];
+            for j in 0..n {
+                for (zz, a) in z.iter_mut().zip(pk.row(j)) {
+                    *zz += a;
+                }
+            }
+            let num = pq.matmul(&s).expect("shape");
+            for i in 0..n {
+                let den = guard_den(
+                    pq.row(i).iter().zip(&z).map(|(a, b)| a * b).sum::<f32>(),
+                );
+                let orow = &mut out.data_mut()[i * dv..(i + 1) * dv];
+                for (o, nm) in orow.iter_mut().zip(num.row(i)) {
+                    *o += nm / den;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// FMM blend: `w1 * near + w2 * far` (paper eq. (11)).
+#[allow(clippy::too_many_arguments)]
+pub fn fmm_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bandwidth: usize,
+    kernels: &[FeatureMap],
+    w1: f32,
+    w2: f32,
+    causal: bool,
+) -> Tensor {
+    let near = banded_attention(q, k, v, bandwidth, causal).scale(w1);
+    let far = linear_attention(q, k, v, kernels, causal).scale(w2);
+    near.add(&far).expect("same shape")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand3(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Pcg64::seeded(seed);
+        (
+            Tensor::randn(&[n, d], &mut rng),
+            Tensor::randn(&[n, d], &mut rng),
+            Tensor::randn(&[n, d], &mut rng),
+        )
+    }
+
+    #[test]
+    fn banded_full_bandwidth_equals_softmax() {
+        let (q, k, v) = rand3(24, 8, 0);
+        for causal in [false, true] {
+            let a = banded_attention(&q, &k, &v, 23, causal);
+            let b = softmax_attention(&q, &k, &v, causal);
+            assert!(a.max_abs_diff(&b) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn banded_zero_bandwidth_noncausal_is_v() {
+        let (q, k, v) = rand3(16, 4, 1);
+        let a = banded_attention(&q, &k, &v, 0, false);
+        assert!(a.max_abs_diff(&v) < 1e-6);
+    }
+
+    #[test]
+    fn linear_matches_explicit_weights_noncausal() {
+        // out_i = sum_j phi(q_i)·phi(k_j) v_j / sum_j phi(q_i)·phi(k_j)
+        let (q, k, v) = rand3(12, 6, 2);
+        let fm = [FeatureMap::Elu];
+        let got = linear_attention(&q, &k, &v, &fm, false);
+        let n = 12;
+        let mut want = Tensor::zeros(&[n, 6]);
+        for i in 0..n {
+            let mut den = 0.0f32;
+            let mut num = vec![0.0f32; 6];
+            for j in 0..n {
+                let w: f32 = q
+                    .row(i)
+                    .iter()
+                    .zip(k.row(j))
+                    .map(|(a, b)| fm[0].apply(*a) * fm[0].apply(*b))
+                    .sum();
+                den += w;
+                for (nn, x) in num.iter_mut().zip(v.row(j)) {
+                    *nn += w * x;
+                }
+            }
+            for (c, nn) in num.iter().enumerate() {
+                want.set(i, c, nn / den);
+            }
+        }
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn linear_causal_prefix_matches_truncated_noncausal() {
+        // Row i of the causal output equals row i of the non-causal output
+        // computed on the first i+1 positions only.
+        let (q, k, v) = rand3(10, 4, 3);
+        let causal = linear_attention(&q, &k, &v, &[FeatureMap::Elu], true);
+        for i in [0usize, 4, 9] {
+            let qn = Tensor::new(&[i + 1, 4], q.data()[..(i + 1) * 4].to_vec()).unwrap();
+            let kn = Tensor::new(&[i + 1, 4], k.data()[..(i + 1) * 4].to_vec()).unwrap();
+            let vn = Tensor::new(&[i + 1, 4], v.data()[..(i + 1) * 4].to_vec()).unwrap();
+            let trunc = linear_attention(&qn, &kn, &vn, &[FeatureMap::Elu], false);
+            let diff: f32 = causal
+                .row(i)
+                .iter()
+                .zip(trunc.row(i))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(diff < 1e-4, "row {i}: {diff}");
+        }
+    }
+
+    #[test]
+    fn fmm_blend_weights() {
+        let (q, k, v) = rand3(20, 4, 4);
+        let near = banded_attention(&q, &k, &v, 3, false);
+        let far = linear_attention(&q, &k, &v, &[FeatureMap::Elu], false);
+        let blend = fmm_attention(&q, &k, &v, 3, &[FeatureMap::Elu], 0.25, 0.75, false);
+        let want = near.scale(0.25).add(&far.scale(0.75)).unwrap();
+        assert!(blend.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn feature_map_names_roundtrip() {
+        for (n, fm) in [("elu", FeatureMap::Elu), ("elu_neg", FeatureMap::EluNeg),
+                        ("tanh", FeatureMap::Tanh)] {
+            assert_eq!(FeatureMap::by_name(n), Some(fm));
+        }
+        assert_eq!(FeatureMap::by_name("gelu"), None);
+    }
+}

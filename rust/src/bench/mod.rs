@@ -1,0 +1,253 @@
+//! Measurement harness (offline substitute for `criterion`).
+//!
+//! Warmup + timed iterations with robust summary statistics, peak-RSS
+//! deltas for the Fig. 6 memory series, and an aligned table printer that
+//! regenerates the paper's table layouts on stdout + CSV/JSON files.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::{human_secs, rss_bytes};
+
+/// Summary of one timed measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Peak-RSS growth across the measurement (bytes); an upper bound on
+    /// the workload's resident footprint.
+    pub peak_rss_delta: u64,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        if self.median_s <= 0.0 { 0.0 } else { items_per_iter / self.median_s }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn measure<F: FnMut() -> Result<()>>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> Result<Measurement> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    // Reset the kernel's peak-RSS watermark so the delta reflects THIS
+    // measurement, not whatever peaked earlier in the process (compiles,
+    // other benches). Best-effort: needs linux >= 4.0.
+    std::fs::write("/proc/self/clear_refs", "5").ok();
+    let (_, peak_before) = rss_bytes();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f()?;
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let (_, peak_after) = rss_bytes();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Ok(Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        median_s: samples[samples.len() / 2],
+        p95_s: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        min_s: samples[0],
+        peak_rss_delta: peak_after.saturating_sub(peak_before),
+    })
+}
+
+/// An aligned report table (the stdout twin of a paper table).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Persist as CSV (one file per table/figure under `reports/`).
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p).ok();
+        }
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+
+    /// Persist as JSON (machine-readable report).
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p).ok();
+        }
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::Obj(
+                    self.headers
+                        .iter()
+                        .zip(r)
+                        .map(|(h, c)| {
+                            let v = c
+                                .parse::<f64>()
+                                .map(Json::Num)
+                                .unwrap_or_else(|_| Json::Str(c.clone()));
+                            (h.clone(), v)
+                        })
+                        .collect(),
+                )
+            })
+            .collect::<Vec<_>>();
+        let doc = Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("rows", Json::Arr(rows)),
+        ]);
+        std::fs::write(path, doc.to_string())?;
+        Ok(())
+    }
+}
+
+/// Format seconds for table cells.
+pub fn fmt_time(s: f64) -> String {
+    human_secs(s)
+}
+
+/// Where bench reports land (`reports/` beside the artifacts).
+pub fn report_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("FMM_REPORTS").unwrap_or_else(|_| "reports".into()),
+    )
+}
+
+/// Render a loss curve as a compact ASCII sparkline block for stdout
+/// (the terminal twin of the Fig. 4/5/7 plots).
+pub fn ascii_curve(name: &str, points: &[(usize, f32)], width: usize) -> String {
+    if points.is_empty() {
+        return format!("{name}: (no data)\n");
+    }
+    let ramp = [' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = points.iter().map(|p| p.1).fold(f32::INFINITY, f32::min);
+    let hi = points.iter().map(|p| p.1).fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-9);
+    let stride = (points.len() as f64 / width as f64).max(1.0);
+    let mut bars = String::new();
+    let mut i = 0.0;
+    while (i as usize) < points.len() && bars.chars().count() < width {
+        let v = points[i as usize].1;
+        let level = (((v - lo) / span) * (ramp.len() - 1) as f32).round() as usize;
+        bars.push(ramp[level]);
+        i += stride;
+    }
+    format!(
+        "{name:<28} {bars}  [{:.3} → {:.3}, min {:.3}]\n",
+        points[0].1,
+        points[points.len() - 1].1,
+        lo
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_and_orders() {
+        let m = measure("noop", 1, 7, || Ok(())).unwrap();
+        assert_eq!(m.iters, 7);
+        assert!(m.min_s <= m.median_s && m.median_s <= m.p95_s);
+        assert!(m.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn measure_propagates_errors() {
+        let r = measure("boom", 0, 1, || anyhow::bail!("no"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn table_renders_aligned_and_saves() {
+        let mut t = Table::new("Demo", &["model", "ppl"]);
+        t.row(vec!["softmax".into(), "34.29".into()]);
+        t.row(vec!["fmm".into(), "36.11".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.lines().count() == 5);
+        let dir = std::env::temp_dir().join(format!("fmm_tbl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        t.save_csv(&dir.join("t.csv")).unwrap();
+        t.save_json(&dir.join("t.json")).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(dir.join("t.json")).unwrap()).unwrap();
+        assert_eq!(j.arr_of("rows").unwrap().len(), 2);
+        assert_eq!(j.arr_of("rows").unwrap()[0].req("ppl").unwrap().as_f64(), Some(34.29));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparkline_is_bounded() {
+        let pts: Vec<(usize, f32)> = (0..100).map(|i| (i, (100 - i) as f32)).collect();
+        let s = ascii_curve("loss", &pts, 40);
+        assert!(s.chars().count() < 120);
+    }
+}

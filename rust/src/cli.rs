@@ -1,0 +1,197 @@
+//! Command-line parsing (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! switches, typed accessors with defaults, required args, and generated
+//! usage text. Every binary, example and bench in the crate parses with
+//! this.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declarative flag spec for usage/help output.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// Parsed arguments: positionals + `--key value` pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    specs: Vec<FlagSpec>,
+    program: String,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — first item is argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        argv: I,
+        switch_names: &[&str],
+    ) -> Result<Args> {
+        let mut it = argv.into_iter();
+        let program = it.next().unwrap_or_default();
+        let mut args = Args { program, ..Default::default() };
+        let mut pending: Option<String> = None;
+        for a in it {
+            if let Some(key) = pending.take() {
+                args.flags.insert(key, a);
+                continue;
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&body) {
+                    args.switches.push(body.to_string());
+                } else {
+                    pending = Some(body.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        if let Some(key) = pending {
+            bail!("flag --{key} expects a value");
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments. `switch_names` lists boolean flags
+    /// (present/absent, no value). `--bench` is always a switch: cargo
+    /// appends it when running `cargo bench` targets.
+    pub fn parse(switch_names: &[&str]) -> Result<Args> {
+        let mut names = switch_names.to_vec();
+        names.push("bench");
+        Self::parse_from(std::env::args(), &names)
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    /// Register a spec (for `usage()`); returns self for chaining.
+    pub fn describe(mut self, specs: Vec<FlagSpec>) -> Args {
+        self.specs = specs;
+        self
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn req_str(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        }
+    }
+
+    /// Render usage text from the registered specs.
+    pub fn usage(&self, about: &str) -> String {
+        let mut s = format!("{about}\n\nUSAGE: {} [flags]\n\nFLAGS:\n", self.program);
+        for spec in &self.specs {
+            let d = match (spec.is_switch, spec.default) {
+                (true, _) => " (switch)".to_string(),
+                (false, Some(d)) => format!(" [default: {d}]"),
+                (false, None) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = Args::parse_from(argv("prog train --steps 100 --lr=0.001 --verbose copy128"),
+                                 &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["train", "copy128"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.001);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_requireds() {
+        let a = Args::parse_from(argv("prog"), &[]).unwrap();
+        assert_eq!(a.usize_or("steps", 42).unwrap(), 42);
+        assert_eq!(a.str_or("name", "x"), "x");
+        assert!(a.req_str("out").is_err());
+    }
+
+    #[test]
+    fn dangling_flag_is_error() {
+        assert!(Args::parse_from(argv("prog --steps"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_types_are_errors() {
+        let a = Args::parse_from(argv("prog --steps many"), &[]).unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn list_flag_splits() {
+        let a = Args::parse_from(argv("prog --variants a,b,,c"), &[]).unwrap();
+        assert_eq!(a.list_or("variants", &[]), vec!["a", "b", "c"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let a = Args::parse_from(argv("prog"), &[]).unwrap().describe(vec![
+            FlagSpec { name: "steps", help: "train steps", default: Some("100"), is_switch: false },
+            FlagSpec { name: "quick", help: "fast mode", default: None, is_switch: true },
+        ]);
+        let u = a.usage("demo");
+        assert!(u.contains("--steps") && u.contains("[default: 100]") && u.contains("(switch)"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Experiment coordinator — maps every paper table/figure to a runnable
+//! pipeline (DESIGN.md §5) and provides the shared train→eval→report
+//! orchestration the benches and the CLI build on.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{generator_for, Split, TaskGen};
+use crate::runtime::Runtime;
+use crate::train::{CsvLogger, EvalResult, LossCurve, Trainer};
+
+/// One entry in the experiment registry.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    /// Paper id: "fig3", "table1", ...
+    pub id: &'static str,
+    pub paper_artifact: &'static str,
+    pub description: &'static str,
+    /// The command that regenerates it.
+    pub command: &'static str,
+    /// Artifact group that must be built first.
+    pub group: &'static str,
+}
+
+/// The full per-experiment index (one row per table AND figure).
+pub const EXPERIMENTS: &[Experiment] = &[
+    Experiment {
+        id: "fig1",
+        paper_artifact: "Fig. 1 — attention map decomposition illustration",
+        description: "full map vs banded + low-rank parts of a trained model",
+        command: "cargo bench --bench fig3_rank -- --fig1",
+        group: "analysis",
+    },
+    Experiment {
+        id: "fig3",
+        paper_artifact: "Fig. 3 — singular values + rank of A-D",
+        description: "rank histograms of trained LM attention after band removal",
+        command: "cargo bench --bench fig3_rank",
+        group: "analysis",
+    },
+    Experiment {
+        id: "fig4",
+        paper_artifact: "Fig. 4 — copy-task convergence vs bandwidth",
+        description: "softmax vs linear vs linear+band{10,20,30} loss curves",
+        command: "cargo bench --bench fig4_copy",
+        group: "copy",
+    },
+    Experiment {
+        id: "fig5",
+        paper_artifact: "Fig. 5 — copy-task convergence vs far-field rank",
+        description: "linear rank 1/2/3 kernel loss curves",
+        command: "cargo bench --bench fig5_rank",
+        group: "copy",
+    },
+    Experiment {
+        id: "fig6",
+        paper_artifact: "Fig. 6 — time & memory scaling vs N",
+        description: "attention fwd+bwd wall time and peak memory, N=2^9..2^16",
+        command: "cargo bench --bench fig6_scaling",
+        group: "scaling",
+    },
+    Experiment {
+        id: "table1",
+        paper_artifact: "Table 1 — LRA accuracy",
+        description: "5 LRA-proxy tasks x {softmax,linear,band5,fmm1,fmm2}",
+        command: "cargo bench --bench table1_lra",
+        group: "lra",
+    },
+    Experiment {
+        id: "table2",
+        paper_artifact: "Table 2 — WikiText-103 perplexity",
+        description: "LM ppl: softmax/linear/band/fmm variants (+Fig. 7 curves)",
+        command: "cargo bench --bench table2_lm",
+        group: "lm",
+    },
+    Experiment {
+        id: "table3",
+        paper_artifact: "Table 3 — fast-weight far field",
+        description: "delta-rule far-field LM variants",
+        command: "cargo bench --bench table3_fastweight",
+        group: "lm",
+    },
+    Experiment {
+        id: "fig7",
+        paper_artifact: "Fig. 7 — train/valid ppl during training",
+        description: "emitted as CSV curves by the table2 bench",
+        command: "cargo bench --bench table2_lm",
+        group: "lm",
+    },
+    Experiment {
+        id: "fig8",
+        paper_artifact: "Fig. 8 — near vs far field attention maps",
+        description: "banded D and low-rank L heatmaps from a trained FMM LM",
+        command: "cargo bench --bench fig8_maps",
+        group: "analysis",
+    },
+    Experiment {
+        id: "serve",
+        paper_artifact: "(system extension) batched serving",
+        description: "router+batcher latency/throughput on predict artifacts",
+        command: "cargo bench --bench serve_throughput",
+        group: "serve",
+    },
+];
+
+/// Outcome of one train→eval pipeline run.
+pub struct RunOutcome {
+    pub artifact: String,
+    pub curve: LossCurve,
+    pub eval_valid: Option<EvalResult>,
+    pub eval_test: Option<EvalResult>,
+    pub train_secs: f64,
+    pub n_params: usize,
+}
+
+/// Orchestration context: runtime + run/report directories.
+pub struct Coordinator {
+    pub rt: Rc<Runtime>,
+    pub runs_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Coordinator {
+    pub fn new(artifacts: &std::path::Path, seed: u64) -> Result<Coordinator> {
+        Ok(Coordinator {
+            rt: Rc::new(Runtime::new(artifacts)?),
+            runs_dir: PathBuf::from(std::env::var("FMM_RUNS").unwrap_or_else(|_| "runs".into())),
+            seed,
+        })
+    }
+
+    /// Build the data generator an artifact's manifest asks for.
+    pub fn generator(&self, artifact: &str) -> Result<Box<dyn TaskGen>> {
+        let art = self.rt.load(artifact)?;
+        let task = art
+            .manifest
+            .task
+            .as_ref()
+            .ok_or_else(|| anyhow!("{artifact} has no task metadata"))?;
+        generator_for(task, art.manifest.seq_len()?, self.seed)
+    }
+
+    /// Train `train_name` for `steps`, optionally evaluate with
+    /// `<train_name>_eval` on valid+test, save a checkpoint + loss CSV
+    /// under `runs/`. The single code path every table/figure run uses.
+    pub fn run_pipeline(
+        &self,
+        train_name: &str,
+        steps: usize,
+        eval_batches: usize,
+        log_every: usize,
+    ) -> Result<RunOutcome> {
+        std::fs::create_dir_all(&self.runs_dir).ok();
+        let mut gen = self.generator(train_name)?;
+        let mut trainer = Trainer::new(&self.rt, train_name)?;
+        let mut csv = CsvLogger::create(
+            &self.runs_dir.join(format!("{train_name}.loss.csv")),
+            &["step", "loss"],
+        )?;
+        let t0 = std::time::Instant::now();
+        let curve = trainer.train_loop(&mut *gen, steps, log_every, Some(&mut csv))?;
+        csv.flush()?;
+        let train_secs = t0.elapsed().as_secs_f64();
+        trainer.save_checkpoint(&self.runs_dir.join(format!("{train_name}.ckpt.bin")))?;
+
+        let eval_name = format!("{train_name}_eval");
+        let (eval_valid, eval_test) = if eval_batches > 0 && self.rt.has_artifact(&eval_name) {
+            let eval_art = self.rt.load(&eval_name)?;
+            let v = trainer.evaluate(&eval_art, &mut *gen, Split::Valid, eval_batches)?;
+            let t = trainer.evaluate(&eval_art, &mut *gen, Split::Test, eval_batches)?;
+            (Some(v), Some(t))
+        } else {
+            (None, None)
+        };
+
+        Ok(RunOutcome {
+            artifact: train_name.to_string(),
+            n_params: trainer.n_params(),
+            curve,
+            eval_valid,
+            eval_test,
+            train_secs,
+        })
+    }
+
+    /// Look up an experiment by id.
+    pub fn experiment(id: &str) -> Option<&'static Experiment> {
+        EXPERIMENTS.iter().find(|e| e.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_table_and_figure() {
+        let ids: Vec<&str> = EXPERIMENTS.iter().map(|e| e.id).collect();
+        for want in ["fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+                     "table1", "table2", "table3"] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn lookup_works() {
+        assert!(Coordinator::experiment("fig6").is_some());
+        assert!(Coordinator::experiment("fig99").is_none());
+    }
+}

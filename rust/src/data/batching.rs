@@ -1,0 +1,56 @@
+//! Batch assembly helpers shared by the trainer and the server.
+
+use crate::tensor::IntTensor;
+
+/// Pad a set of variable-length token sequences into a fixed `(B, N)`
+/// batch (right-padding with `pad_id`); sequences longer than `n` are
+/// truncated. Returns the batch and the original lengths.
+pub fn pad_batch(seqs: &[Vec<i32>], b: usize, n: usize, pad_id: i32) -> (IntTensor, Vec<usize>) {
+    assert!(seqs.len() <= b, "more sequences than batch slots");
+    let mut data = vec![pad_id; b * n];
+    let mut lens = Vec::with_capacity(seqs.len());
+    for (i, s) in seqs.iter().enumerate() {
+        let take = s.len().min(n);
+        data[i * n..i * n + take].copy_from_slice(&s[..take]);
+        lens.push(take);
+    }
+    (IntTensor::new(&[b, n], data).expect("sized"), lens)
+}
+
+/// Token-count cost of a padded batch (efficiency metric for the server:
+/// padding waste = padded_tokens / real_tokens).
+pub fn padding_waste(lens: &[usize], b: usize, n: usize) -> f64 {
+    let real: usize = lens.iter().sum();
+    if real == 0 {
+        return 0.0;
+    }
+    (b * n) as f64 / real as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_and_truncates() {
+        let seqs = vec![vec![1, 2, 3], vec![4; 10]];
+        let (batch, lens) = pad_batch(&seqs, 3, 5, 0);
+        assert_eq!(batch.shape(), &[3, 5]);
+        assert_eq!(batch.row(0), &[1, 2, 3, 0, 0]);
+        assert_eq!(batch.row(1), &[4, 4, 4, 4, 4]);
+        assert_eq!(batch.row(2), &[0, 0, 0, 0, 0]);
+        assert_eq!(lens, vec![3, 5]);
+    }
+
+    #[test]
+    fn waste_accounts_for_padding() {
+        assert!((padding_waste(&[5, 5], 2, 5) - 1.0).abs() < 1e-9);
+        assert!((padding_waste(&[1], 2, 5) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overfull_batch_panics() {
+        pad_batch(&[vec![1], vec![2], vec![3]], 2, 4, 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Pixel-sequence image classification proxy (LRA task 4, CIFAR-10
+//! stand-in).
+//!
+//! 28×28 grayscale images of ten procedural pattern classes, flattened
+//! row-major into a length-784 token sequence of quantized intensities —
+//! exactly the "image as a sequence of pixels" formulation of the LRA
+//! benchmark. 2-D structure becomes long-range 1-D structure: vertically
+//! adjacent pixels are 28 positions apart, so the classifier needs
+//! dependencies far beyond any small band.
+//!
+//! Classes: 0 horizontal stripes, 1 vertical stripes, 2 diagonal,
+//! 3 circle, 4 square outline, 5 cross, 6 checkerboard, 7 gradient,
+//! 8 centered blob, 9 triangle. All are drawn with random phase/size/
+//! position jitter + pixel noise.
+//!
+//! Token ids: 0 pad (unused — images fill the window), intensity
+//! q in [0,255] -> 1 + q (model vocab 258).
+
+use crate::rng::Pcg64;
+use crate::tensor::IntTensor;
+
+use super::{Batch, Split, TaskGen};
+
+/// Golden-ratio stride decorrelating successive eval draws.
+const GOLDEN: u64 = 0x9e3779b97f4a7c15u64;
+
+pub const SIDE: usize = 28;
+pub const N_CLASSES: usize = 10;
+
+pub struct ImageCls {
+    seq_len: usize,
+    rng: Pcg64,
+    eval_seed: u64,
+    eval_ctr: u64,
+}
+
+impl ImageCls {
+    pub fn new(seq_len: usize, seed: u64) -> ImageCls {
+        ImageCls { seq_len, rng: Pcg64::new(seed, 0x14), eval_seed: seed ^ 0x149, eval_ctr: 0 }
+    }
+
+    /// Render one 28×28 image of `class` with jitter; values in [0,1].
+    pub fn render(rng: &mut Pcg64, class: usize) -> Vec<f32> {
+        let mut img = vec![0.0f32; SIDE * SIDE];
+        let phase = rng.usize(6) as f32;
+        let period = 3 + rng.usize(3) as isize;
+        let cx = (SIDE / 2) as f32 + rng.normal() * 2.0;
+        let cy = (SIDE / 2) as f32 + rng.normal() * 2.0;
+        let r = 6.0 + rng.f32() * 5.0;
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let (xf, yf) = (x as f32, y as f32);
+                let v = match class {
+                    0 => ((y as isize + phase as isize) % period < period / 2) as i32 as f32,
+                    1 => ((x as isize + phase as isize) % period < period / 2) as i32 as f32,
+                    2 => (((x + y) as isize + phase as isize) % period < period / 2) as i32 as f32,
+                    3 => {
+                        let d = ((xf - cx).powi(2) + (yf - cy).powi(2)).sqrt();
+                        ((d - r).abs() < 1.6) as i32 as f32
+                    }
+                    4 => {
+                        let dx = (xf - cx).abs();
+                        let dy = (yf - cy).abs();
+                        ((dx.max(dy) - r).abs() < 1.6) as i32 as f32
+                    }
+                    5 => ((xf - cx).abs() < 1.6 || (yf - cy).abs() < 1.6) as i32 as f32,
+                    6 => (((x / 4) + (y / 4)) % 2 == 0) as i32 as f32,
+                    7 => (xf + yf) / (2.0 * SIDE as f32),
+                    8 => {
+                        let d2 = (xf - cx).powi(2) + (yf - cy).powi(2);
+                        (-d2 / (r * r)).exp()
+                    }
+                    _ => {
+                        // Filled triangle from the bottom edge.
+                        let h = yf / SIDE as f32;
+                        ((xf - cx).abs() < h * r) as i32 as f32
+                    }
+                };
+                img[y * SIDE + x] = (v + rng.normal() * 0.08).clamp(0.0, 1.0);
+            }
+        }
+        img
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> (Vec<i32>, i32) {
+        let class = rng.usize(N_CLASSES);
+        let img = Self::render(rng, class);
+        let mut tokens: Vec<i32> =
+            img.iter().map(|&v| 1 + (v * 255.0).round() as i32).collect();
+        tokens.resize(self.seq_len, 0);
+        tokens.truncate(self.seq_len);
+        (tokens, class as i32)
+    }
+}
+
+impl TaskGen for ImageCls {
+    fn batch(&mut self, split: Split, batch: usize) -> Batch {
+        let n = self.seq_len;
+        let mut tokens = Vec::with_capacity(batch * n);
+        let mut labels = Vec::with_capacity(batch);
+        // Fresh IID eval draws per call (see copy_task.rs for rationale).
+        let c = self.eval_ctr.wrapping_mul(GOLDEN);
+        let mut rng = match split {
+            Split::Train => self.rng.clone(),
+            Split::Valid => Pcg64::new(self.eval_seed.wrapping_add(c), 1),
+            Split::Test => Pcg64::new(self.eval_seed.wrapping_add(c), 2),
+        };
+        if split != Split::Train {
+            self.eval_ctr = self.eval_ctr.wrapping_add(1);
+        }
+        for _ in 0..batch {
+            let (t, l) = self.sample(&mut rng);
+            tokens.extend(t);
+            labels.push(l);
+        }
+        if split == Split::Train {
+            self.rng = rng;
+        }
+        Batch {
+            tokens: IntTensor::new(&[batch, n], tokens).expect("sized"),
+            targets: IntTensor::new(&[batch], labels).expect("sized"),
+        }
+    }
+
+    fn is_lm(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "lra_image"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_are_valid_intensities() {
+        let mut g = ImageCls::new(784, 0);
+        let b = g.batch(Split::Train, 4);
+        for &t in b.tokens.data() {
+            assert!((0..=256).contains(&t), "{t}");
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean images of different classes should differ substantially.
+        let mut rng = Pcg64::seeded(0);
+        let mean = |class: usize, rng: &mut Pcg64| -> Vec<f32> {
+            let mut acc = vec![0.0f32; SIDE * SIDE];
+            for _ in 0..20 {
+                for (a, v) in acc.iter_mut().zip(ImageCls::render(rng, class)) {
+                    *a += v / 20.0;
+                }
+            }
+            acc
+        };
+        let m0 = mean(0, &mut rng);
+        let m1 = mean(1, &mut rng);
+        let m3 = mean(3, &mut rng);
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt()
+        };
+        assert!(dist(&m0, &m1) > 1.0);
+        assert!(dist(&m0, &m3) > 1.0);
+        assert!(dist(&m1, &m3) > 1.0);
+    }
+
+    #[test]
+    fn vertical_structure_is_long_range_in_sequence() {
+        // Vertical stripes (class 1): pixel (y,x) correlates with
+        // (y+1,x) — 28 positions apart in the flattened sequence.
+        let mut rng = Pcg64::seeded(1);
+        let img = ImageCls::render(&mut rng, 1);
+        let mut corr = 0.0f32;
+        for i in 0..(SIDE * SIDE - SIDE) {
+            corr += (img[i] - 0.5) * (img[i + SIDE] - 0.5);
+        }
+        assert!(corr > 10.0, "{corr}");
+    }
+
+    #[test]
+    fn all_ten_labels_appear() {
+        let mut g = ImageCls::new(784, 2);
+        let mut seen = [false; N_CLASSES];
+        for _ in 0..20 {
+            for &l in g.batch(Split::Train, 8).targets.data() {
+                seen[l as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+}

@@ -1,0 +1,221 @@
+//! ListOps proxy (LRA task 1) — generated nested-operator expressions.
+//!
+//! Same construction as Nangia & Bowman's ListOps: prefix expressions
+//! over digits with MAX / MIN / MED / SM (sum mod 10) operators and
+//! brackets; the label is the expression's value (10-way). Hierarchical
+//! long-range structure: the answer depends on tokens across the whole
+//! nesting. Tokens: 0 pad, 1..=10 digits 0..9, 11 MAX, 12 MIN, 13 MED,
+//! 14 SM, 15 '[', 16 ']' (model vocab 20 leaves headroom).
+
+use crate::rng::Pcg64;
+use crate::tensor::IntTensor;
+
+use super::{Batch, Split, TaskGen};
+
+/// Golden-ratio stride decorrelating successive eval draws.
+const GOLDEN: u64 = 0x9e3779b97f4a7c15u64;
+
+pub const PAD: i32 = 0;
+pub const OP_MAX: i32 = 11;
+pub const OP_MIN: i32 = 12;
+pub const OP_MED: i32 = 13;
+pub const OP_SM: i32 = 14;
+pub const OPEN: i32 = 15;
+pub const CLOSE: i32 = 16;
+
+pub struct ListOps {
+    seq_len: usize,
+    rng: Pcg64,
+    eval_seed: u64,
+    eval_ctr: u64,
+}
+
+impl ListOps {
+    pub fn new(seq_len: usize, seed: u64) -> ListOps {
+        assert!(seq_len >= 16);
+        ListOps { seq_len, rng: Pcg64::new(seed, 0x10), eval_seed: seed ^ 0x0b5, eval_ctr: 0 }
+    }
+
+    /// Emit one expression tree into `out`; returns its value. `budget`
+    /// caps emitted tokens so the sample fits the window.
+    fn gen_expr(rng: &mut Pcg64, out: &mut Vec<i32>, budget: usize, depth: usize) -> i32 {
+        if budget < 8 || depth >= 4 || rng.bool(0.35) {
+            let d = rng.range(0, 10) as i32;
+            out.push(d + 1);
+            return d;
+        }
+        let op = [OP_MAX, OP_MIN, OP_MED, OP_SM][rng.usize(4)];
+        out.push(OPEN);
+        out.push(op);
+        let arity = rng.range(2, 6) as usize;
+        let mut vals = Vec::with_capacity(arity);
+        for i in 0..arity {
+            let child_budget = budget.saturating_sub(out.len() + (arity - i) * 2 + 1)
+                / (arity - i).max(1);
+            vals.push(Self::gen_expr(rng, out, child_budget, depth + 1));
+        }
+        out.push(CLOSE);
+        match op {
+            OP_MAX => vals.iter().copied().max().unwrap(),
+            OP_MIN => vals.iter().copied().min().unwrap(),
+            OP_MED => {
+                let mut s = vals.clone();
+                s.sort_unstable();
+                s[s.len() / 2]
+            }
+            _ => vals.iter().sum::<i32>() % 10,
+        }
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> (Vec<i32>, i32) {
+        let n = self.seq_len;
+        loop {
+            let mut out = Vec::with_capacity(n);
+            out.push(OPEN);
+            let op = [OP_MAX, OP_MIN, OP_MED, OP_SM][rng.usize(4)];
+            out.push(op);
+            let arity = rng.range(3, 8) as usize;
+            let mut vals = Vec::with_capacity(arity);
+            for i in 0..arity {
+                let budget = n.saturating_sub(out.len() + (arity - i) * 2 + 1)
+                    / (arity - i).max(1);
+                vals.push(Self::gen_expr(rng, &mut out, budget, 1));
+            }
+            out.push(CLOSE);
+            let label = match op {
+                OP_MAX => vals.iter().copied().max().unwrap(),
+                OP_MIN => vals.iter().copied().min().unwrap(),
+                OP_MED => {
+                    let mut s = vals.clone();
+                    s.sort_unstable();
+                    s[s.len() / 2]
+                }
+                _ => vals.iter().sum::<i32>() % 10,
+            };
+            if out.len() <= n {
+                out.resize(n, PAD);
+                return (out, label);
+            }
+            // Over budget (rare): resample.
+        }
+    }
+}
+
+impl TaskGen for ListOps {
+    fn batch(&mut self, split: Split, batch: usize) -> Batch {
+        let n = self.seq_len;
+        let mut tokens = Vec::with_capacity(batch * n);
+        let mut labels = Vec::with_capacity(batch);
+        // Fresh IID eval draws per call (see copy_task.rs for rationale).
+        let c = self.eval_ctr.wrapping_mul(GOLDEN);
+        let mut rng = match split {
+            Split::Train => self.rng.clone(),
+            Split::Valid => Pcg64::new(self.eval_seed.wrapping_add(c), 1),
+            Split::Test => Pcg64::new(self.eval_seed.wrapping_add(c), 2),
+        };
+        if split != Split::Train {
+            self.eval_ctr = self.eval_ctr.wrapping_add(1);
+        }
+        for _ in 0..batch {
+            let (t, l) = self.sample(&mut rng);
+            tokens.extend(t);
+            labels.push(l);
+        }
+        if split == Split::Train {
+            self.rng = rng;
+        }
+        Batch {
+            tokens: IntTensor::new(&[batch, n], tokens).expect("sized"),
+            targets: IntTensor::new(&[batch], labels).expect("sized"),
+        }
+    }
+
+    fn is_lm(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "lra_listops"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Independent evaluator: parse the emitted prefix expression back and
+    /// check the label — the generator's value bookkeeping must agree
+    /// with an actual interpreter.
+    fn eval_tokens(t: &[i32], pos: &mut usize) -> i32 {
+        match t[*pos] {
+            x if (1..=10).contains(&x) => {
+                *pos += 1;
+                x - 1
+            }
+            OPEN => {
+                *pos += 1;
+                let op = t[*pos];
+                *pos += 1;
+                let mut vals = Vec::new();
+                while t[*pos] != CLOSE {
+                    vals.push(eval_tokens(t, pos));
+                }
+                *pos += 1;
+                match op {
+                    OP_MAX => vals.iter().copied().max().unwrap(),
+                    OP_MIN => vals.iter().copied().min().unwrap(),
+                    OP_MED => {
+                        let mut s = vals.clone();
+                        s.sort_unstable();
+                        s[s.len() / 2]
+                    }
+                    OP_SM => vals.iter().sum::<i32>() % 10,
+                    other => panic!("bad op {other}"),
+                }
+            }
+            other => panic!("bad token {other}"),
+        }
+    }
+
+    #[test]
+    fn labels_match_independent_interpreter() {
+        let mut g = ListOps::new(128, 0);
+        let b = g.batch(Split::Train, 16);
+        for i in 0..16 {
+            let row = b.tokens.row(i);
+            let mut pos = 0;
+            let val = eval_tokens(row, &mut pos);
+            assert_eq!(val, b.targets.data()[i], "row {i}");
+            for &x in &row[pos..] {
+                assert_eq!(x, PAD, "non-pad after expression");
+            }
+        }
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let mut g = ListOps::new(128, 1);
+        let mut seen = [false; 10];
+        for _ in 0..20 {
+            let b = g.batch(Split::Train, 16);
+            for &l in b.targets.data() {
+                assert!((0..10).contains(&l));
+                seen[l as usize] = true;
+            }
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8, "{seen:?}");
+    }
+
+    #[test]
+    fn sequences_fit_and_are_balanced() {
+        let mut g = ListOps::new(96, 2);
+        let b = g.batch(Split::Test, 8);
+        for i in 0..8 {
+            let row = b.tokens.row(i);
+            let opens = row.iter().filter(|&&x| x == OPEN).count();
+            let closes = row.iter().filter(|&&x| x == CLOSE).count();
+            assert_eq!(opens, closes);
+            assert!(opens >= 1);
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Synthetic data generators — the substrate standing in for the paper's
+//! datasets (offline sandbox; substitutions documented in DESIGN.md §3).
+//!
+//! One generator per task family:
+//!
+//! | paper dataset | proxy | module |
+//! |---|---|---|
+//! | synthetic copy task (Sec. 4.1) | identical construction | [`copy_task`] |
+//! | ListOps | generated nested-op expressions | [`listops`] |
+//! | IMDb byte-level | synthetic byte-level sentiment corpus | [`text_cls`] |
+//! | AAN document retrieval | synthetic doc-pair matching | [`retrieval`] |
+//! | CIFAR-10 pixel sequences | procedural shape images | [`image_cls`] |
+//! | Pathfinder | procedural connectivity mazes | [`pathfinder`] |
+//! | WikiText-103 | topic-Markov corpus with long-range recurrence | [`lm_corpus`] |
+//!
+//! Every generator is seeded and deterministic; the Rust side is the only
+//! producer of batches (Python never sees data). Generators are selected
+//! from an artifact manifest's `task` object via [`generator_for`].
+
+pub mod batching;
+pub mod copy_task;
+pub mod image_cls;
+pub mod listops;
+pub mod lm_corpus;
+pub mod pathfinder;
+pub mod retrieval;
+pub mod text_cls;
+pub mod vocab;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::IntTensor;
+use crate::util::json::Json;
+
+/// LM targets use this for "no loss here" (mirrors train_step.IGNORE_ID).
+pub const IGNORE_ID: i32 = -1;
+
+/// A training/eval batch: tokens `(B, N)` plus targets.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: IntTensor,
+    /// `(B, N)` next-token ids (LM tasks) or `(B,)` class labels.
+    pub targets: IntTensor,
+}
+
+/// Which split a batch is drawn from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+    Test,
+}
+
+/// A seeded task generator. `batch` must be deterministic given the
+/// constructor seed and call sequence.
+pub trait TaskGen: Send {
+    /// Draw the next batch from a split (train advances an internal
+    /// stream; valid/test cycle over fixed held-out pools).
+    fn batch(&mut self, split: Split, batch: usize) -> Batch;
+    /// True if targets are per-position (LM) rather than labels.
+    fn is_lm(&self) -> bool;
+    /// Human name (reports).
+    fn name(&self) -> &'static str;
+}
+
+/// Build the generator an artifact manifest asks for.
+///
+/// `task` is the manifest's `task` object (written by
+/// `python/compile/configs.py`); `seq_len` comes from the model config.
+pub fn generator_for(task: &Json, seq_len: usize, seed: u64) -> Result<Box<dyn TaskGen>> {
+    let kind = task.str_of("task")?;
+    Ok(match kind {
+        "copy" => Box::new(copy_task::CopyTask::new(seq_len, seed)),
+        "lra_listops" => Box::new(listops::ListOps::new(seq_len, seed)),
+        "lra_text" => Box::new(text_cls::TextCls::new(seq_len, seed)),
+        "lra_retrieval" => Box::new(retrieval::Retrieval::new(seq_len, seed)),
+        "lra_image" => Box::new(image_cls::ImageCls::new(seq_len, seed)),
+        "lra_pathfinder" => Box::new(pathfinder::Pathfinder::new(seq_len, seed)),
+        "lm_corpus" => {
+            let vocab = task.usize_of("vocab_size")?;
+            Box::new(lm_corpus::LmCorpus::new(vocab, seq_len, seed))
+        }
+        other => bail!("unknown task kind {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_dispatch_covers_all_tasks() {
+        for (kind, extra) in [
+            ("copy", ""),
+            ("lra_listops", ""),
+            ("lra_text", ""),
+            ("lra_retrieval", ""),
+            ("lra_image", ""),
+            ("lra_pathfinder", ""),
+            ("lm_corpus", r#","vocab_size":64"#),
+        ] {
+            let doc = format!(r#"{{"task":"{kind}"{extra}}}"#);
+            let j = Json::parse(&doc).unwrap();
+            let mut g = generator_for(&j, 64, 0).unwrap();
+            let b = g.batch(Split::Train, 2);
+            assert_eq!(b.tokens.shape()[0], 2, "{kind}");
+            assert_eq!(b.tokens.shape()[1], 64, "{kind}");
+        }
+        let j = Json::parse(r#"{"task":"nope"}"#).unwrap();
+        assert!(generator_for(&j, 64, 0).is_err());
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        for kind in ["copy", "lra_listops", "lra_text", "lra_image"] {
+            let j = Json::parse(&format!(r#"{{"task":"{kind}"}}"#)).unwrap();
+            let mut a = generator_for(&j, 48, 7).unwrap();
+            let mut b = generator_for(&j, 48, 7).unwrap();
+            let (x, y) = (a.batch(Split::Train, 3), b.batch(Split::Train, 3));
+            assert_eq!(x.tokens.data(), y.tokens.data(), "{kind}");
+            assert_eq!(x.targets.data(), y.targets.data(), "{kind}");
+            let mut c = generator_for(&j, 48, 8).unwrap();
+            let z = c.batch(Split::Train, 3);
+            assert_ne!(x.tokens.data(), z.tokens.data(), "{kind} seed-insensitive");
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Pathfinder proxy (LRA task 5) — procedural connectivity mazes.
+//!
+//! The original task: given an image with two circle markers and dashed
+//! curves, decide whether the markers are connected by one curve. The
+//! proxy draws on a 24×24 grid: a random-walk path between two endpoint
+//! markers (positive), or two *disjoint* shorter walks each carrying one
+//! marker (negative), plus distractor walks in both cases. Connectivity
+//! is global: no local patch decides the label, which is exactly the
+//! long-range spatial reasoning Pathfinder tests.
+//!
+//! Token ids: 0 background, 1 path pixel, 2 endpoint marker, flattened
+//! row-major (model vocab 258 leaves headroom for quantization noise —
+//! ids are shifted by +1 so 0 stays pad-compatible: bg=1, path=2, dot=3).
+
+use crate::rng::Pcg64;
+use crate::tensor::IntTensor;
+
+use super::{Batch, Split, TaskGen};
+
+/// Golden-ratio stride decorrelating successive eval draws.
+const GOLDEN: u64 = 0x9e3779b97f4a7c15u64;
+
+pub const SIDE: usize = 24;
+const BG: i32 = 1;
+const PATH: i32 = 2;
+const DOT: i32 = 3;
+
+pub struct Pathfinder {
+    seq_len: usize,
+    rng: Pcg64,
+    eval_seed: u64,
+    eval_ctr: u64,
+}
+
+impl Pathfinder {
+    pub fn new(seq_len: usize, seed: u64) -> Pathfinder {
+        Pathfinder { seq_len, rng: Pcg64::new(seed, 0xba), eval_seed: seed ^ 0xba7, eval_ctr: 0 }
+    }
+
+    /// Draw a self-avoiding-ish random walk of `len` steps from `start`;
+    /// returns visited cells (always at least the start).
+    fn walk(rng: &mut Pcg64, grid: &mut [i32], start: (usize, usize), len: usize) -> Vec<(usize, usize)> {
+        let mut cells = vec![start];
+        let (mut y, mut x) = start;
+        grid[y * SIDE + x] = PATH;
+        for _ in 0..len {
+            // Biased direction choice that avoids immediate backtracking.
+            let dirs = [(0i64, 1i64), (0, -1), (1, 0), (-1, 0)];
+            let mut placed = false;
+            for _try in 0..6 {
+                let (dy, dx) = dirs[rng.usize(4)];
+                let ny = y as i64 + dy;
+                let nx = x as i64 + dx;
+                if (0..SIDE as i64).contains(&ny) && (0..SIDE as i64).contains(&nx) {
+                    y = ny as usize;
+                    x = nx as usize;
+                    grid[y * SIDE + x] = PATH;
+                    cells.push((y, x));
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break;
+            }
+        }
+        cells
+    }
+
+    fn rand_cell(rng: &mut Pcg64) -> (usize, usize) {
+        (rng.usize(SIDE), rng.usize(SIDE))
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> (Vec<i32>, i32) {
+        let mut grid = vec![BG; SIDE * SIDE];
+        let label = rng.bool(0.5) as i32;
+        // All walks are drawn BEFORE the endpoint markers so nothing can
+        // overwrite a marker (markers must survive for the label to be
+        // well-defined).
+        let (dot_a, dot_b) = if label == 1 {
+            // One long walk; its endpoints get the markers.
+            let start = Self::rand_cell(rng);
+            let len = 40 + rng.usize(30);
+            let cells = Self::walk(rng, &mut grid, start, len);
+            // The walk may loop back to its start; pick the last visited
+            // cell that differs so the two markers are distinct.
+            let end = *cells.iter().rev().find(|&&c| c != cells[0]).unwrap_or(&cells[0]);
+            (cells[0], end)
+        } else {
+            // Two short, separated walks, one marker each.
+            let a = (rng.usize(SIDE / 2), rng.usize(SIDE / 2));
+            let b = (SIDE / 2 + rng.usize(SIDE / 2), SIDE / 2 + rng.usize(SIDE / 2));
+            let la = 12 + rng.usize(10);
+            let lb = 12 + rng.usize(10);
+            let ca = Self::walk(rng, &mut grid, a, la);
+            let cb = Self::walk(rng, &mut grid, b, lb);
+            let end = *cb.iter().rev().find(|&&c| c != ca[0]).unwrap_or(&cb[0]);
+            (ca[0], end)
+        };
+        // Distractor walk without markers (both labels).
+        let d = Self::rand_cell(rng);
+        let ld = 10 + rng.usize(8);
+        let _ = Self::walk(rng, &mut grid, d, ld);
+        grid[dot_a.0 * SIDE + dot_a.1] = DOT;
+        grid[dot_b.0 * SIDE + dot_b.1] = DOT;
+
+        let mut tokens = grid;
+        tokens.resize(self.seq_len, 0);
+        tokens.truncate(self.seq_len);
+        (tokens, label)
+    }
+}
+
+impl TaskGen for Pathfinder {
+    fn batch(&mut self, split: Split, batch: usize) -> Batch {
+        let n = self.seq_len;
+        let mut tokens = Vec::with_capacity(batch * n);
+        let mut labels = Vec::with_capacity(batch);
+        // Fresh IID eval draws per call (see copy_task.rs for rationale).
+        let c = self.eval_ctr.wrapping_mul(GOLDEN);
+        let mut rng = match split {
+            Split::Train => self.rng.clone(),
+            Split::Valid => Pcg64::new(self.eval_seed.wrapping_add(c), 1),
+            Split::Test => Pcg64::new(self.eval_seed.wrapping_add(c), 2),
+        };
+        if split != Split::Train {
+            self.eval_ctr = self.eval_ctr.wrapping_add(1);
+        }
+        for _ in 0..batch {
+            let (t, l) = self.sample(&mut rng);
+            tokens.extend(t);
+            labels.push(l);
+        }
+        if split == Split::Train {
+            self.rng = rng;
+        }
+        Batch {
+            tokens: IntTensor::new(&[batch, n], tokens).expect("sized"),
+            targets: IntTensor::new(&[batch], labels).expect("sized"),
+        }
+    }
+
+    fn is_lm(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "lra_pathfinder"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// BFS connectivity between the two DOT markers over PATH/DOT cells.
+    fn connected(tokens: &[i32]) -> bool {
+        let dots: Vec<usize> = tokens[..SIDE * SIDE]
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t == DOT)
+            .map(|(i, _)| i)
+            .collect();
+        if dots.len() != 2 {
+            return false;
+        }
+        let mut seen = vec![false; SIDE * SIDE];
+        let mut queue = std::collections::VecDeque::from([dots[0]]);
+        seen[dots[0]] = true;
+        while let Some(i) = queue.pop_front() {
+            if i == dots[1] {
+                return true;
+            }
+            let (y, x) = (i / SIDE, i % SIDE);
+            for (dy, dx) in [(0i64, 1i64), (0, -1), (1, 0), (-1, 0)] {
+                let (ny, nx) = (y as i64 + dy, x as i64 + dx);
+                if (0..SIDE as i64).contains(&ny) && (0..SIDE as i64).contains(&nx) {
+                    let j = ny as usize * SIDE + nx as usize;
+                    if !seen[j] && tokens[j] >= PATH {
+                        seen[j] = true;
+                        queue.push_back(j);
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    #[test]
+    fn positive_labels_are_connected() {
+        let mut g = Pathfinder::new(SIDE * SIDE, 0);
+        let mut checked = 0;
+        for _ in 0..20 {
+            let b = g.batch(Split::Train, 4);
+            for i in 0..4 {
+                if b.targets.data()[i] == 1 {
+                    assert!(connected(b.tokens.row(i)), "positive not connected");
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn has_exactly_two_markers() {
+        let mut g = Pathfinder::new(SIDE * SIDE, 1);
+        let b = g.batch(Split::Train, 8);
+        for i in 0..8 {
+            let dots = b.tokens.row(i).iter().filter(|&&t| t == DOT).count();
+            assert_eq!(dots, 2);
+        }
+    }
+
+    #[test]
+    fn negatives_mostly_disconnected() {
+        // Random walks *can* collide; the proxy tolerates a small rate of
+        // label noise (documented), but most negatives must be negative.
+        let mut g = Pathfinder::new(SIDE * SIDE, 2);
+        let (mut neg, mut bad) = (0, 0);
+        for _ in 0..30 {
+            let b = g.batch(Split::Train, 4);
+            for i in 0..4 {
+                if b.targets.data()[i] == 0 {
+                    neg += 1;
+                    if connected(b.tokens.row(i)) {
+                        bad += 1;
+                    }
+                }
+            }
+        }
+        assert!(neg > 20);
+        assert!((bad as f64) < 0.25 * neg as f64, "{bad}/{neg} false negatives");
+    }
+}

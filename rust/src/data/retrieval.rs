@@ -1,0 +1,178 @@
+//! Document-pair retrieval proxy (LRA task 3, AAN stand-in).
+//!
+//! Two byte-level documents joined by a separator; label 1 iff both were
+//! generated from the *same* topic template (shared keyword lexicon),
+//! 0 otherwise. Matching requires comparing evidence across the
+//! separator — dependencies of length ~N/2, the longest-range LRA task.
+//!
+//! Token ids: 0 pad, 1 separator, byte b -> 2 + b (model vocab 260).
+
+use crate::rng::Pcg64;
+use crate::tensor::IntTensor;
+
+use super::{Batch, Split, TaskGen};
+
+/// Golden-ratio stride decorrelating successive eval draws.
+const GOLDEN: u64 = 0x9e3779b97f4a7c15u64;
+
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+
+const N_TOPICS: usize = 16;
+const TOPIC_WORDS: usize = 12;
+const WORD_LEN: (i64, i64) = (3, 7);
+
+pub struct Retrieval {
+    seq_len: usize,
+    rng: Pcg64,
+    eval_seed: u64,
+    eval_ctr: u64,
+    topics: Vec<Vec<Vec<u8>>>,
+    filler: Vec<Vec<u8>>,
+}
+
+fn words(rng: &mut Pcg64, n: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|_| {
+            let len = rng.range(WORD_LEN.0, WORD_LEN.1) as usize;
+            (0..len).map(|_| rng.range(b'a' as i64, b'z' as i64 + 1) as u8).collect()
+        })
+        .collect()
+}
+
+impl Retrieval {
+    pub fn new(seq_len: usize, seed: u64) -> Retrieval {
+        assert!(seq_len >= 32);
+        let mut rng = Pcg64::new(seed, 0x4e);
+        let topics = (0..N_TOPICS).map(|_| words(&mut rng, TOPIC_WORDS)).collect();
+        let filler = words(&mut rng, 80);
+        Retrieval { seq_len, rng, eval_seed: seed ^ 0x4e7, eval_ctr: 0, topics, filler }
+    }
+
+    fn doc(&self, rng: &mut Pcg64, topic: usize, len: usize) -> Vec<i32> {
+        let lex = &self.topics[topic];
+        let mut bytes: Vec<u8> = Vec::with_capacity(len);
+        while bytes.len() < len {
+            let w = if rng.bool(0.25) {
+                &lex[rng.usize(lex.len())]
+            } else {
+                &self.filler[rng.usize(self.filler.len())]
+            };
+            bytes.extend_from_slice(w);
+            bytes.push(b' ');
+        }
+        bytes.truncate(len);
+        bytes.into_iter().map(|b| 2 + b as i32).collect()
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> (Vec<i32>, i32) {
+        let n = self.seq_len;
+        let half = (n - 1) / 2;
+        let t1 = rng.usize(N_TOPICS);
+        let label = rng.bool(0.5) as i32;
+        let t2 = if label == 1 {
+            t1
+        } else {
+            // A different topic, uniformly.
+            let mut t = rng.usize(N_TOPICS - 1);
+            if t >= t1 {
+                t += 1;
+            }
+            t
+        };
+        let mut out = self.doc(rng, t1, half);
+        out.push(SEP);
+        out.extend(self.doc(rng, t2, half));
+        out.resize(n, PAD);
+        (out, label)
+    }
+}
+
+impl TaskGen for Retrieval {
+    fn batch(&mut self, split: Split, batch: usize) -> Batch {
+        let n = self.seq_len;
+        let mut tokens = Vec::with_capacity(batch * n);
+        let mut labels = Vec::with_capacity(batch);
+        // Fresh IID eval draws per call (see copy_task.rs for rationale).
+        let c = self.eval_ctr.wrapping_mul(GOLDEN);
+        let mut rng = match split {
+            Split::Train => self.rng.clone(),
+            Split::Valid => Pcg64::new(self.eval_seed.wrapping_add(c), 1),
+            Split::Test => Pcg64::new(self.eval_seed.wrapping_add(c), 2),
+        };
+        if split != Split::Train {
+            self.eval_ctr = self.eval_ctr.wrapping_add(1);
+        }
+        for _ in 0..batch {
+            let (t, l) = self.sample(&mut rng);
+            tokens.extend(t);
+            labels.push(l);
+        }
+        if split == Split::Train {
+            self.rng = rng;
+        }
+        Batch {
+            tokens: IntTensor::new(&[batch, n], tokens).expect("sized"),
+            targets: IntTensor::new(&[batch], labels).expect("sized"),
+        }
+    }
+
+    fn is_lm(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "lra_retrieval"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_separator_between_halves() {
+        let mut g = Retrieval::new(129, 0);
+        let b = g.batch(Split::Train, 4);
+        for i in 0..4 {
+            assert_eq!(b.tokens.row(i)[64], SEP);
+        }
+    }
+
+    #[test]
+    fn positive_pairs_share_keywords_across_sep() {
+        // For label=1 the two halves share topic words; measure shared
+        // 4-gram count across halves, must exceed the label=0 count.
+        let mut g = Retrieval::new(257, 1);
+        let (mut shared_pos, mut shared_neg, mut npos, mut nneg) = (0usize, 0, 0, 0);
+        for _ in 0..30 {
+            let b = g.batch(Split::Train, 4);
+            for i in 0..4 {
+                let row = b.tokens.row(i);
+                let (a, c) = (&row[..128], &row[129..]);
+                let grams: std::collections::HashSet<&[i32]> = a.windows(4).collect();
+                let shared = c.windows(4).filter(|w| grams.contains(*w)).count();
+                if b.targets.data()[i] == 1 {
+                    shared_pos += shared;
+                    npos += 1;
+                } else {
+                    shared_neg += shared;
+                    nneg += 1;
+                }
+            }
+        }
+        let avg_pos = shared_pos as f64 / npos.max(1) as f64;
+        let avg_neg = shared_neg as f64 / nneg.max(1) as f64;
+        assert!(avg_pos > 1.5 * (avg_neg + 1.0), "pos {avg_pos:.1} neg {avg_neg:.1}");
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let mut g = Retrieval::new(65, 2);
+        let ones: usize = (0..40)
+            .map(|_| g.batch(Split::Train, 8).targets.data().iter()
+                 .filter(|&&l| l == 1).count())
+            .sum();
+        assert!((ones as f64 / 320.0 - 0.5).abs() < 0.12, "{ones}");
+    }
+}

@@ -1,0 +1,164 @@
+//! Byte-level text classification proxy (LRA task 2, IMDb stand-in).
+//!
+//! Documents are byte sequences built from a synthetic lexicon: two
+//! disjoint sets of "sentiment" words plus shared filler words. A
+//! document's label is the sentiment whose words dominate, but sentiment
+//! words are *sparse* (~12% of tokens) and scattered, so a classifier
+//! must aggregate weak evidence across the whole window — the property
+//! that makes byte-level IMDb a long-range task.
+//!
+//! Token ids: 0 pad, 1 unused, byte b -> 2 + b (model vocab 260).
+
+use crate::rng::Pcg64;
+use crate::tensor::IntTensor;
+
+use super::{Batch, Split, TaskGen};
+
+/// Golden-ratio stride decorrelating successive eval draws.
+const GOLDEN: u64 = 0x9e3779b97f4a7c15u64;
+
+pub const PAD: i32 = 0;
+
+const LEXICON_WORDS: usize = 40;
+const WORD_LEN: (i64, i64) = (3, 8);
+
+pub struct TextCls {
+    seq_len: usize,
+    rng: Pcg64,
+    eval_seed: u64,
+    eval_ctr: u64,
+    pos_words: Vec<Vec<u8>>,
+    neg_words: Vec<Vec<u8>>,
+    filler: Vec<Vec<u8>>,
+}
+
+fn make_words(rng: &mut Pcg64, n: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|_| {
+            let len = rng.range(WORD_LEN.0, WORD_LEN.1) as usize;
+            (0..len).map(|_| rng.range(b'a' as i64, b'z' as i64 + 1) as u8).collect()
+        })
+        .collect()
+}
+
+impl TextCls {
+    pub fn new(seq_len: usize, seed: u64) -> TextCls {
+        let mut rng = Pcg64::new(seed, 0x7c);
+        let pos_words = make_words(&mut rng, LEXICON_WORDS);
+        let neg_words = make_words(&mut rng, LEXICON_WORDS);
+        let filler = make_words(&mut rng, 4 * LEXICON_WORDS);
+        TextCls { seq_len, rng, eval_seed: seed ^ 0x7e47, eval_ctr: 0, pos_words, neg_words, filler }
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> (Vec<i32>, i32) {
+        let label = rng.bool(0.5) as i32;
+        let (dominant, minority) = if label == 1 {
+            (&self.pos_words, &self.neg_words)
+        } else {
+            (&self.neg_words, &self.pos_words)
+        };
+        let mut bytes: Vec<u8> = Vec::with_capacity(self.seq_len);
+        while bytes.len() < self.seq_len {
+            let roll = rng.f64();
+            let w = if roll < 0.09 {
+                &dominant[rng.usize(dominant.len())]
+            } else if roll < 0.12 {
+                // Minority sentiment noise: evidence must be aggregated.
+                &minority[rng.usize(minority.len())]
+            } else {
+                &self.filler[rng.usize(self.filler.len())]
+            };
+            bytes.extend_from_slice(w);
+            bytes.push(b' ');
+        }
+        bytes.truncate(self.seq_len);
+        (bytes.into_iter().map(|b| 2 + b as i32).collect(), label)
+    }
+}
+
+impl TaskGen for TextCls {
+    fn batch(&mut self, split: Split, batch: usize) -> Batch {
+        let n = self.seq_len;
+        let mut tokens = Vec::with_capacity(batch * n);
+        let mut labels = Vec::with_capacity(batch);
+        // Fresh IID eval draws per call (see copy_task.rs for rationale).
+        let c = self.eval_ctr.wrapping_mul(GOLDEN);
+        let mut rng = match split {
+            Split::Train => self.rng.clone(),
+            Split::Valid => Pcg64::new(self.eval_seed.wrapping_add(c), 1),
+            Split::Test => Pcg64::new(self.eval_seed.wrapping_add(c), 2),
+        };
+        if split != Split::Train {
+            self.eval_ctr = self.eval_ctr.wrapping_add(1);
+        }
+        for _ in 0..batch {
+            let (t, l) = self.sample(&mut rng);
+            tokens.extend(t);
+            labels.push(l);
+        }
+        if split == Split::Train {
+            self.rng = rng;
+        }
+        Batch {
+            tokens: IntTensor::new(&[batch, n], tokens).expect("sized"),
+            targets: IntTensor::new(&[batch], labels).expect("sized"),
+        }
+    }
+
+    fn is_lm(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "lra_text"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_are_printable_bytes() {
+        let mut g = TextCls::new(128, 0);
+        let b = g.batch(Split::Train, 4);
+        for &t in b.tokens.data() {
+            let byte = (t - 2) as u8;
+            assert!(byte == b' ' || byte.is_ascii_lowercase(), "{t}");
+        }
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let mut g = TextCls::new(128, 1);
+        let mut ones = 0;
+        let total = 400;
+        for _ in 0..(total / 8) {
+            ones += g.batch(Split::Train, 8).targets.data().iter()
+                .filter(|&&l| l == 1).count();
+        }
+        assert!((ones as f64 / total as f64 - 0.5).abs() < 0.1, "{ones}");
+    }
+
+    #[test]
+    fn dominant_lexicon_actually_dominates() {
+        // Count occurrences of the first positive word in positive vs
+        // negative docs over many samples; must be ~3x more frequent.
+        let mut g = TextCls::new(512, 2);
+        let needle: Vec<i32> = g.pos_words[0].iter().map(|&b| 2 + b as i32).collect();
+        let (mut hits_pos, mut hits_neg) = (0usize, 0usize);
+        for _ in 0..40 {
+            let b = g.batch(Split::Train, 4);
+            for i in 0..4 {
+                let row = b.tokens.row(i);
+                let count = row.windows(needle.len()).filter(|w| *w == &needle[..]).count();
+                if b.targets.data()[i] == 1 {
+                    hits_pos += count;
+                } else {
+                    hits_neg += count;
+                }
+            }
+        }
+        assert!(hits_pos > 2 * hits_neg.max(1), "pos {hits_pos} neg {hits_neg}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Vocabulary builder + tokenizer substrate.
+//!
+//! The synthetic LM corpus is generated directly in id space, but a real
+//! deployment of this stack tokenizes text on the Rust side (Python never
+//! runs at serve time). This module provides that substrate: frequency-
+//! ranked word vocabularies with reserved specials, encode/decode, and a
+//! whitespace pre-tokenizer — enough to feed the LM artifacts from raw
+//! text (`Vocab::encode` output is exactly the id space `lm_corpus`
+//! models use: 0 = pad, 1 = boundary/unk boundary, 2.. = words).
+
+use std::collections::HashMap;
+
+/// Reserved ids (shared convention with `lm_corpus`).
+pub const PAD_ID: i32 = 0;
+pub const UNK_ID: i32 = 1;
+const FIRST_WORD: i32 = 2;
+
+/// Frequency-ranked word vocabulary.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl Vocab {
+    /// Build from a corpus iterator, keeping the `max_size - 2` most
+    /// frequent words (ties broken lexicographically for determinism).
+    pub fn build<'a, I: IntoIterator<Item = &'a str>>(docs: I, max_size: usize) -> Vocab {
+        assert!(max_size > 2, "need room for specials");
+        let mut counts: HashMap<&str, u64> = HashMap::new();
+        for doc in docs {
+            for w in doc.split_whitespace() {
+                *counts.entry(w).or_default() += 1;
+            }
+        }
+        let mut ranked: Vec<(&str, u64)> = counts.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        ranked.truncate(max_size - 2);
+
+        let mut id_to_word = vec!["<pad>".to_string(), "<unk>".to_string()];
+        let mut word_to_id = HashMap::new();
+        for (i, (w, _)) in ranked.iter().enumerate() {
+            word_to_id.insert(w.to_string(), FIRST_WORD + i as i32);
+            id_to_word.push(w.to_string());
+        }
+        Vocab { word_to_id, id_to_word }
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_word.is_empty()
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        self.word_to_id.get(word).copied().unwrap_or(UNK_ID)
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.id_to_word
+            .get(id as usize)
+            .map(String::as_str)
+            .unwrap_or("<unk>")
+    }
+
+    /// Whitespace-tokenize and encode; truncate/pad to `n` if given.
+    pub fn encode(&self, text: &str, n: Option<usize>) -> Vec<i32> {
+        let mut ids: Vec<i32> = text.split_whitespace().map(|w| self.id(w)).collect();
+        if let Some(n) = n {
+            ids.truncate(n);
+            ids.resize(n, PAD_ID);
+        }
+        ids
+    }
+
+    /// Decode ids back to text (pads dropped).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i != PAD_ID)
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Out-of-vocabulary rate of a document (quality metric).
+    pub fn oov_rate(&self, text: &str) -> f64 {
+        let words: Vec<&str> = text.split_whitespace().collect();
+        if words.is_empty() {
+            return 0.0;
+        }
+        let oov = words.iter().filter(|w| !self.word_to_id.contains_key(**w)).count();
+        oov as f64 / words.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: [&str; 3] = [
+        "the cat sat on the mat",
+        "the dog sat on the log",
+        "a cat and a dog",
+    ];
+
+    #[test]
+    fn frequency_ranked_ids() {
+        let v = Vocab::build(CORPUS, 64);
+        // "the" is the most frequent word -> first non-special id.
+        assert_eq!(v.id("the"), 2);
+        assert_eq!(v.word(2), "the");
+        assert!(v.len() <= 64);
+        assert_eq!(v.id("zebra"), UNK_ID);
+    }
+
+    #[test]
+    fn truncation_keeps_most_frequent() {
+        let v = Vocab::build(CORPUS, 2 + 3); // 3 word slots
+        assert_ne!(v.id("the"), UNK_ID); // freq 4
+        // Frequency-2 ties break lexicographically: "a", "cat" win.
+        assert_ne!(v.id("a"), UNK_ID);
+        assert_ne!(v.id("cat"), UNK_ID);
+        assert_eq!(v.id("sat"), UNK_ID);
+        // Singleton words fall out.
+        assert_eq!(v.id("mat"), UNK_ID);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = Vocab::build(CORPUS, 64);
+        let ids = v.encode("the cat sat", Some(6));
+        assert_eq!(ids.len(), 6);
+        assert_eq!(&ids[3..], &[PAD_ID; 3]);
+        assert_eq!(v.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn unk_and_oov() {
+        let v = Vocab::build(CORPUS, 64);
+        let ids = v.encode("the zebra", None);
+        assert_eq!(ids, vec![v.id("the"), UNK_ID]);
+        assert!((v.oov_rate("the zebra") - 0.5).abs() < 1e-9);
+        assert_eq!(v.oov_rate(""), 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let a = Vocab::build(CORPUS, 16);
+        let b = Vocab::build(CORPUS, 16);
+        for w in ["the", "cat", "dog", "sat"] {
+            assert_eq!(a.id(w), b.id(w));
+        }
+    }
+}

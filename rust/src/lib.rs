@@ -1,0 +1,64 @@
+//! # fmmformer — FMMformer reproduction (NeurIPS 2021)
+//!
+//! Rust coordinator (L3) of a three-layer stack reproducing *FMMformer:
+//! Efficient and Flexible Transformer via Decomposed Near-field and
+//! Far-field Attention* (Nguyen, Suliafu, Osher, Chen, Wang):
+//!
+//! * **L1** — Pallas attention kernels (`python/compile/kernels/`):
+//!   banded near-field, multi-kernel linear far-field, delta-rule fast
+//!   weights.
+//! * **L2** — JAX transformer + whole-train-step functions
+//!   (`python/compile/`), AOT-lowered once to HLO text artifacts.
+//! * **L3** — this crate: loads the artifacts onto a PJRT client and owns
+//!   everything at run time — data pipelines, the training loop, the
+//!   batching inference server, the benchmark/analysis drivers. Python is
+//!   never on the request path.
+//!
+//! Module map (see DESIGN.md §4 for the full inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | error type, JSON, logging, humanized units |
+//! | [`cli`] | argument parsing (offline substitute for `clap`) |
+//! | [`rng`] | deterministic PCG64 + distributions |
+//! | [`tensor`] | host `f32`/`i32` ndarrays |
+//! | [`linalg`] | Jacobi SVD, ε-rank (Fig. 3 study) |
+//! | [`attention`] | pure-Rust reference attentions (baseline comparator) |
+//! | [`data`] | synthetic task + corpus generators (copy, 5 LRA proxies, LM) |
+//! | [`runtime`] | PJRT client, artifact/manifest/checkpoint I/O, param store |
+//! | [`train`] | training/eval loops, metrics, checkpoints |
+//! | [`serve`] | request router + dynamic batcher (thread-based) |
+//! | [`analysis`] | attention-map dumps, rank histograms, heatmaps |
+//! | [`bench`] | measurement harness (offline substitute for `criterion`) |
+//! | [`coordinator`] | experiment registry: one entry per paper table/figure |
+//! | [`testutil`] | mini property-testing helper |
+
+pub mod analysis;
+pub mod attention;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod testutil;
+pub mod train;
+pub mod util;
+
+/// Directory artifacts are read from unless overridden by `--artifacts` or
+/// the `FMM_ARTIFACTS` environment variable.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory (flag value > env > default).
+pub fn artifacts_dir(flag: Option<&str>) -> std::path::PathBuf {
+    if let Some(f) = flag {
+        return f.into();
+    }
+    if let Ok(e) = std::env::var("FMM_ARTIFACTS") {
+        return e.into();
+    }
+    DEFAULT_ARTIFACTS_DIR.into()
+}

@@ -1,0 +1,222 @@
+//! Numerical linear algebra for the attention-structure studies.
+//!
+//! The Fig. 3 experiment (and the Fig. 1 illustration) needs singular
+//! values and ε-ranks of N×N attention matrices extracted from trained
+//! models, plus "strip the bandwidth-k band" — all done here in pure Rust
+//! (no LAPACK in the offline sandbox). One-sided Jacobi SVD is exact
+//! enough (f64 accumulation) and fast at N ≤ 512.
+
+use crate::tensor::Tensor;
+
+/// Singular values of a 2-D tensor, descending, via one-sided Jacobi.
+///
+/// One-sided Jacobi orthogonalizes the columns of A by plane rotations;
+/// column norms of the result are the singular values. Sweeps until every
+/// off-diagonal inner product is tiny relative to the column norms.
+pub fn singular_values(a: &Tensor) -> Vec<f32> {
+    let [m, n] = a.shape()[..] else { panic!("singular_values needs 2-D") };
+    // Work on the taller orientation so columns are long (better
+    // conditioning for the one-sided method).
+    let (rows, cols, data): (usize, usize, Vec<f64>) = if m >= n {
+        (m, n, a.data().iter().map(|&x| x as f64).collect())
+    } else {
+        let t = a.t();
+        (n, m, t.data().iter().map(|&x| x as f64).collect())
+    };
+
+    // Column-major copy for cache-friendly column ops.
+    let mut u = vec![0.0f64; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            u[j * rows + i] = data[i * cols + j];
+        }
+    }
+
+    let eps = 1e-12;
+    let max_sweeps = 40;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..cols {
+            for q in (p + 1)..cols {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..rows {
+                    let x = u[p * rows + i];
+                    let y = u[q * rows + i];
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..rows {
+                    let x = u[p * rows + i];
+                    let y = u[q * rows + i];
+                    u[p * rows + i] = c * x - s * y;
+                    u[q * rows + i] = s * x + c * y;
+                }
+            }
+        }
+        if off < 1e-10 {
+            break;
+        }
+    }
+
+    let mut sv: Vec<f32> = (0..cols)
+        .map(|j| {
+            (0..rows)
+                .map(|i| u[j * rows + i] * u[j * rows + i])
+                .sum::<f64>()
+                .sqrt() as f32
+        })
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// ε-rank: the number of singular values greater than a threshold.
+///
+/// `relative = true` uses the paper's Sec. 2.1 definition (σ > ε·σ_max);
+/// the Fig. 3 caption instead thresholds at an absolute magnitude of 1e-6
+/// (`relative = false`).
+pub fn eps_rank(sv: &[f32], eps: f32, relative: bool) -> usize {
+    if sv.is_empty() {
+        return 0;
+    }
+    let thresh = if relative { eps * sv[0] } else { eps };
+    sv.iter().filter(|&&s| s > thresh).count()
+}
+
+/// Zero the entries within the bandwidth-k band (the Fig. 3 "A − D" op).
+pub fn strip_band(a: &Tensor, bandwidth: usize) -> Tensor {
+    let [m, n] = a.shape()[..] else { panic!("strip_band needs 2-D") };
+    let mut out = a.clone();
+    for i in 0..m {
+        for j in 0..n {
+            if (i as i64 - j as i64).unsigned_abs() as usize <= bandwidth {
+                out.set(i, j, 0.0);
+            }
+        }
+    }
+    out
+}
+
+/// Keep only the band (the near-field part D of the decomposition).
+pub fn keep_band(a: &Tensor, bandwidth: usize) -> Tensor {
+    let [m, n] = a.shape()[..] else { panic!("keep_band needs 2-D") };
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            if (i as i64 - j as i64).unsigned_abs() as usize <= bandwidth {
+                out.set(i, j, a.at(i, j));
+            }
+        }
+    }
+    out
+}
+
+/// Best rank-r approximation error ||A - A_r||_F / ||A||_F from the
+/// singular values alone (Eckart–Young).
+pub fn lowrank_rel_error(sv: &[f32], r: usize) -> f32 {
+    let total: f32 = sv.iter().map(|s| s * s).sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let tail: f32 = sv.iter().skip(r).map(|s| s * s).sum();
+    (tail / total).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn svd_of_diagonal_matrix() {
+        let mut a = Tensor::zeros(&[4, 4]);
+        for (i, s) in [3.0, 1.0, 0.5, 0.0].iter().enumerate() {
+            a.set(i, i, *s);
+        }
+        let sv = singular_values(&a);
+        let want = [3.0, 1.0, 0.5, 0.0];
+        for (got, want) in sv.iter().zip(want) {
+            assert!((got - want).abs() < 1e-5, "{sv:?}");
+        }
+    }
+
+    #[test]
+    fn svd_matches_frobenius_identity() {
+        // sum sigma_i^2 == ||A||_F^2 for random A, incl. non-square.
+        let mut rng = Pcg64::seeded(0);
+        for shape in [[6, 6], [8, 3], [3, 8]] {
+            let a = Tensor::randn(&shape, &mut rng);
+            let sv = singular_values(&a);
+            let sum_sq: f32 = sv.iter().map(|s| s * s).sum();
+            let frob = a.frob_norm();
+            assert!((sum_sq.sqrt() - frob).abs() / frob < 1e-4, "{shape:?}");
+            assert_eq!(sv.len(), shape.iter().min().copied().unwrap());
+        }
+    }
+
+    #[test]
+    fn svd_detects_exact_low_rank() {
+        // A = u v^T + w z^T has rank 2.
+        let mut rng = Pcg64::seeded(1);
+        let u = Tensor::randn(&[16, 1], &mut rng);
+        let v = Tensor::randn(&[1, 16], &mut rng);
+        let w = Tensor::randn(&[16, 1], &mut rng);
+        let z = Tensor::randn(&[1, 16], &mut rng);
+        let a = u.matmul(&v).unwrap().add(&w.matmul(&z).unwrap()).unwrap();
+        let sv = singular_values(&a);
+        assert_eq!(eps_rank(&sv, 1e-5, true), 2, "{sv:?}");
+    }
+
+    #[test]
+    fn svd_orthogonal_matrix_has_unit_singular_values() {
+        // 2x2 rotation.
+        let th = 0.7f32;
+        let a = Tensor::new(&[2, 2], vec![th.cos(), -th.sin(), th.sin(), th.cos()])
+            .unwrap();
+        let sv = singular_values(&a);
+        assert!((sv[0] - 1.0).abs() < 1e-6 && (sv[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn strip_and_keep_band_partition_the_matrix() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Tensor::randn(&[10, 10], &mut rng);
+        let far = strip_band(&a, 2);
+        let near = keep_band(&a, 2);
+        assert_eq!(far.add(&near).unwrap(), a);
+        for i in 0..10usize {
+            for j in 0..10usize {
+                let inband = (i as i64 - j as i64).unsigned_abs() <= 2;
+                assert_eq!(near.at(i, j) != 0.0 || a.at(i, j) == 0.0, inband
+                    || a.at(i, j) == 0.0);
+                if inband {
+                    assert_eq!(far.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eckart_young_error_decreases_in_rank() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Tensor::randn(&[12, 12], &mut rng);
+        let sv = singular_values(&a);
+        let mut last = f32::INFINITY;
+        for r in 0..12 {
+            let e = lowrank_rel_error(&sv, r);
+            assert!(e <= last + 1e-6);
+            last = e;
+        }
+        assert!(lowrank_rel_error(&sv, 12) < 1e-5);
+    }
+}

@@ -1,0 +1,208 @@
+//! `fmmformer` — the L3 coordinator CLI.
+//!
+//! ```text
+//! fmmformer experiments                    # the paper table/figure index
+//! fmmformer artifacts [--artifacts DIR]    # what is built locally
+//! fmmformer train --artifact lm_fmm1_band5 --steps 300 [--eval-batches 8]
+//! fmmformer eval  --artifact lm_fmm1_band5 --checkpoint runs/...ckpt.bin
+//! fmmformer serve-demo [--requests 64]     # router + batcher demo
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use fmmformer::cli::Args;
+use fmmformer::coordinator::{Coordinator, EXPERIMENTS};
+use fmmformer::data::Split;
+use fmmformer::runtime::{checkpoint, load_init_leaves, Runtime};
+use fmmformer::serve::{ServeConfig, Server};
+use fmmformer::train::evaluate_params;
+use fmmformer::{artifacts_dir, bench};
+
+const ABOUT: &str = "FMMformer coordinator: train/eval/serve over AOT artifacts";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(&["help"])?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "experiments" => cmd_experiments(),
+        "artifacts" => cmd_artifacts(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve-demo" => cmd_serve_demo(&args),
+        "hlo-info" => cmd_hlo_info(&args),
+        _ => {
+            println!("{ABOUT}\n");
+            println!("subcommands: experiments | artifacts | train | eval | serve-demo | hlo-info");
+            println!("common flags: --artifacts DIR  --seed N");
+            println!("train: --artifact NAME --steps N [--eval-batches K] [--log-every K]");
+            println!("eval:  --artifact NAME --checkpoint FILE [--batches K] [--split valid|test]");
+            println!("serve-demo: [--requests N] [--max-wait-ms T]");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_experiments() -> Result<()> {
+    let mut t = bench::Table::new(
+        "Experiment index (paper table/figure -> regeneration command)",
+        &["id", "paper artifact", "group", "command"],
+    );
+    for e in EXPERIMENTS {
+        t.row(vec![
+            e.id.into(),
+            e.paper_artifact.into(),
+            e.group.into(),
+            e.command.into(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .map_err(|e| anyhow!("artifacts dir {dir:?}: {e} (run `make artifacts`)"))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            e.file_name()
+                .to_str()
+                .and_then(|n| n.strip_suffix(".hlo.txt"))
+                .map(String::from)
+        })
+        .collect();
+    names.sort();
+    println!("{} artifacts in {dir:?}:", names.len());
+    for n in names {
+        println!("  {n}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = args.req_str("artifact")?;
+    let steps = args.usize_or("steps", 100)?;
+    let eval_batches = args.usize_or("eval-batches", 0)?;
+    let log_every = args.usize_or("log-every", 20)?;
+    let coord = Coordinator::new(&artifacts_dir(args.get("artifacts")),
+                                 args.u64_or("seed", 0)?)?;
+    let out = coord.run_pipeline(name, steps, eval_batches, log_every)?;
+    println!(
+        "{name}: {} params, {} steps in {:.1}s ({:.2} steps/s), final loss {:.4}",
+        out.n_params,
+        steps,
+        out.train_secs,
+        steps as f64 / out.train_secs,
+        out.curve.last().unwrap_or(f32::NAN)
+    );
+    print!("{}", bench::ascii_curve(name, &out.curve.downsample(60), 60));
+    if let (Some(v), Some(t)) = (out.eval_valid, out.eval_test) {
+        println!("valid: loss {:.4} metric {:.4}   test: loss {:.4} metric {:.4}",
+                 v.loss, v.metric, t.loss, t.metric);
+    }
+    println!("checkpoint + loss CSV under {:?}", coord.runs_dir);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let name = args.req_str("artifact")?;
+    let ckpt = args.req_str("checkpoint")?;
+    let batches = args.usize_or("batches", 8)?;
+    let split = match args.str_or("split", "test") {
+        "valid" => Split::Valid,
+        "test" => Split::Test,
+        other => bail!("bad --split {other}"),
+    };
+    let coord = Coordinator::new(&artifacts_dir(args.get("artifacts")),
+                                 args.u64_or("seed", 0)?)?;
+    let eval_name = if name.ends_with("_eval") { name.to_string() } else { format!("{name}_eval") };
+    let art = coord.rt.load(&eval_name)?;
+    let leaves = checkpoint::read_leaves(std::path::Path::new(ckpt))?;
+    let params =
+        fmmformer::runtime::params::ParamStore::from_leaves(&coord.rt, &art.manifest, &leaves)?;
+    let mut gen = coord.generator(&eval_name)?;
+    let r = evaluate_params(&coord.rt, &art, &params, &mut *gen, split, batches)?;
+    println!("{eval_name}: loss {:.4} metric {:.4} over {} batches", r.loss, r.metric, r.batches);
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let rt = Runtime::new(&dir)?;
+    let names = ["serve_text_fmm2_b1", "serve_text_fmm2_b4", "serve_text_fmm2_b8"];
+    for n in &names {
+        if !rt.has_artifact(n) {
+            bail!("missing artifact {n}; run `make artifacts-serve`");
+        }
+    }
+    let base = rt.load(names[0])?;
+    let leaves = if let Some(ckpt) = args.get("checkpoint") {
+        checkpoint::read_leaves(std::path::Path::new(ckpt))?
+    } else {
+        // Untrained params: the demo exercises the serving path, not
+        // accuracy. `examples/serve_demo.rs` trains first.
+        load_init_leaves(rt.dir(), &rt.load("lra_text_fmm2_band5")?.manifest)
+            .or_else(|_| load_init_leaves(rt.dir(), &base.manifest))?
+    };
+
+    let n_requests = args.usize_or("requests", 64)?;
+    let cfg = ServeConfig {
+        max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 5)?),
+        pad_id: 0,
+    };
+    let server = Server::start(dir.clone(), &names, leaves, cfg)?;
+    let client = server.client();
+    let seq_len = base.manifest.seq_len()?;
+
+    let mut gen = fmmformer::data::text_cls::TextCls::new(seq_len, 7);
+    use fmmformer::data::TaskGen;
+    let t0 = std::time::Instant::now();
+    let mut handles = vec![];
+    for _ in 0..n_requests {
+        let b = gen.batch(Split::Test, 1);
+        let toks = b.tokens.row(0).to_vec();
+        let c = client.clone();
+        handles.push(std::thread::spawn(move || c.infer(toks)));
+    }
+    let mut latencies: Vec<f64> = vec![];
+    for h in handles {
+        let resp = h.join().map_err(|_| anyhow!("client thread panicked"))??;
+        latencies.push(resp.latency.as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    drop(client);
+    let stats = server.shutdown();
+    println!(
+        "{n_requests} requests in {wall:.2}s -> {:.1} req/s | p50 {} p95 {} | \
+         {} batches, mean occupancy {:.2}, padding waste {:.2}x",
+        n_requests as f64 / wall,
+        bench::fmt_time(latencies[latencies.len() / 2]),
+        bench::fmt_time(latencies[latencies.len() * 95 / 100]),
+        stats.batches,
+        stats.mean_occupancy(),
+        stats.mean_padding_waste(),
+    );
+    Ok(())
+}
+
+/// L2 profiling: instruction mix of an artifact's HLO (EXPERIMENTS §Perf).
+fn cmd_hlo_info(args: &Args) -> Result<()> {
+    let name = args.req_str("artifact")?;
+    let dir = artifacts_dir(args.get("artifacts"));
+    let info = fmmformer::runtime::hlo_info::HloInfo::load(
+        &dir.join(format!("{name}.hlo.txt")))?;
+    println!("{name}: {} instructions, {} fusions, {} while loops, ~{:.2} GFLOP in dots",
+             info.total, info.fusions, info.whiles, info.dot_flops as f64 / 1e9);
+    for (op, n) in info.top(12) {
+        println!("  {op:<28} {n}");
+    }
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Parameter/checkpoint binary I/O — the Rust twin of
+//! `python/compile/binfmt.py` (format documented there: FMMP v1).
+//!
+//! Used for (a) loading the seeded initial parameters aot.py ships with
+//! every train artifact, and (b) saving/restoring trainer checkpoints.
+//! The two sides round-trip byte-exactly (pinned by the integration
+//! tests).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Dtype;
+
+const MAGIC: &[u8; 4] = b"FMMP";
+const VERSION: u32 = 1;
+
+/// One named leaf: raw little-endian data + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Leaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    /// Raw LE bytes, `elems * 4` long.
+    pub data: Vec<u8>,
+}
+
+impl Leaf {
+    pub fn from_f32(name: &str, shape: &[usize], values: &[f32]) -> Leaf {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Leaf { name: name.to_string(), shape: shape.to_vec(), dtype: Dtype::F32, data }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, Dtype::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+pub fn write_leaves(path: &Path, leaves: &[Leaf]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(leaves.len() as u32).to_le_bytes())?;
+    for leaf in leaves {
+        let nb = leaf.name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[leaf.shape.len() as u8])?;
+        for d in &leaf.shape {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        let code: u8 = match leaf.dtype {
+            Dtype::F32 => 0,
+            Dtype::I32 => 1,
+        };
+        f.write_all(&[code])?;
+        if leaf.data.len() != leaf.elems() * 4 {
+            bail!("leaf {} data size mismatch", leaf.name);
+        }
+        f.write_all(&leaf.data)?;
+    }
+    Ok(())
+}
+
+pub fn read_leaves(path: &Path) -> Result<Vec<Leaf>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != VERSION {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    f.read_exact(&mut u32buf)?;
+    let n = u32::from_le_bytes(u32buf) as usize;
+    let mut leaves = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut u16buf = [0u8; 2];
+        f.read_exact(&mut u16buf)?;
+        let name_len = u16::from_le_bytes(u16buf) as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let mut b = [0u8; 1];
+        f.read_exact(&mut b)?;
+        let ndim = b[0] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            f.read_exact(&mut u32buf)?;
+            shape.push(u32::from_le_bytes(u32buf) as usize);
+        }
+        f.read_exact(&mut b)?;
+        let dtype = match b[0] {
+            0 => Dtype::F32,
+            1 => Dtype::I32,
+            other => bail!("{path:?}: bad dtype code {other}"),
+        };
+        let elems: usize = shape.iter().product::<usize>().max(1);
+        let nbytes = if shape.is_empty() { 4 } else { elems * 4 };
+        let mut data = vec![0u8; nbytes];
+        f.read_exact(&mut data)?;
+        leaves.push(Leaf { name: String::from_utf8(name)?, shape, dtype, data });
+    }
+    Ok(leaves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fmm_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let leaves = vec![
+            Leaf::from_f32("a.w", &[2, 3], &[1.0, -2.0, 3.5, 0.0, 5.0, -6.25]),
+            Leaf::from_f32("scalar", &[], &[2.5]),
+        ];
+        write_leaves(&path, &leaves).unwrap();
+        let back = read_leaves(&path).unwrap();
+        assert_eq!(back, leaves);
+        assert_eq!(back[0].to_f32()[3], 0.0);
+        assert_eq!(back[1].to_f32(), vec![2.5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("fmm_ckpt2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_leaves(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,181 @@
+//! HLO-text inspection — the L2 profiling tool of the §Perf pass.
+//!
+//! Parses the artifact's HLO text (the interchange format itself, no XLA
+//! needed) and reports instruction histograms, fusion counts, dot/while
+//! totals and an estimated FLOP count from `dot` shapes. Used to verify
+//! L2 targets: no duplicated QKᵀ recomputation, scan-not-unroll for the
+//! causal far field, and to compare lowering strategies (pallas loops vs
+//! jnp twins) quantitatively.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Summary of one HLO module's instruction mix.
+#[derive(Debug, Clone, Default)]
+pub struct HloInfo {
+    /// opcode -> count over all computations.
+    pub ops: BTreeMap<String, usize>,
+    /// Total instruction count.
+    pub total: usize,
+    /// Number of fused computations.
+    pub fusions: usize,
+    /// Estimated FLOPs from `dot` output shapes × contraction dims
+    /// (2·M·N·K per dot; batch dims multiplied in).
+    pub dot_flops: u64,
+    /// Number of while loops (scans / pallas grid loops).
+    pub whiles: usize,
+}
+
+impl HloInfo {
+    pub fn parse(text: &str) -> HloInfo {
+        let mut info = HloInfo::default();
+        for line in text.lines() {
+            let t = line.trim_start();
+            // Instruction lines look like: `%name = f32[...] opcode(...)`
+            // or `name.1 = f32[2,3]{1,0} add(...)`.
+            let Some(eq) = t.find(" = ") else { continue };
+            let rhs = &t[eq + 3..];
+            // Skip the (optional) shape token to reach the opcode.
+            let mut rest = rhs;
+            if let Some(sp) = rest.find(' ') {
+                let first = &rest[..sp];
+                if first.contains('[') || first.ends_with("[]") || is_type_token(first) {
+                    rest = rest[sp + 1..].trim_start();
+                }
+            }
+            let opcode: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+                .collect();
+            if opcode.is_empty() {
+                continue;
+            }
+            info.total += 1;
+            *info.ops.entry(opcode.clone()).or_default() += 1;
+            match opcode.as_str() {
+                "fusion" => info.fusions += 1,
+                "while" => info.whiles += 1,
+                "dot" => info.dot_flops += dot_flops_of(t, rhs),
+                _ => {}
+            }
+        }
+        info
+    }
+
+    pub fn load(path: &Path) -> Result<HloInfo> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Ok(Self::parse(&text))
+    }
+
+    pub fn count(&self, opcode: &str) -> usize {
+        self.ops.get(opcode).copied().unwrap_or(0)
+    }
+
+    /// Top-k opcodes by count (report lines).
+    pub fn top(&self, k: usize) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> =
+            self.ops.iter().map(|(a, b)| (a.clone(), *b)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.truncate(k);
+        v
+    }
+}
+
+fn is_type_token(tok: &str) -> bool {
+    matches!(tok, "f32" | "f16" | "bf16" | "s32" | "u32" | "pred" | "tuple")
+        || tok.starts_with('(')
+}
+
+/// Estimate 2·(product of output dims)·K for a dot instruction line.
+/// Output shape is the type immediately after `=`; K is read from the
+/// lhs operand's contracting dimension when derivable — falls back to
+/// output-only (2·M·N) if not.
+fn dot_flops_of(line: &str, rhs: &str) -> u64 {
+    let out_elems = first_shape_elems(rhs).unwrap_or(0);
+    // lhs_contracting_dims={X} ... read the contracted extent from the
+    // first operand shape inside dot(...)
+    let k = line
+        .split("dot(")
+        .nth(1)
+        .and_then(first_shape_elems_of_operand)
+        .unwrap_or(1);
+    2 * out_elems * k
+}
+
+/// Parse `f32[2,3]{...}`-style leading shape -> element product.
+fn first_shape_elems(s: &str) -> Option<u64> {
+    let open = s.find('[')?;
+    let close = s[open..].find(']')? + open;
+    let dims = &s[open + 1..close];
+    if dims.trim().is_empty() {
+        return Some(1);
+    }
+    let mut prod: u64 = 1;
+    for d in dims.split(',') {
+        prod = prod.saturating_mul(d.trim().parse::<u64>().ok()?);
+    }
+    Some(prod)
+}
+
+/// For `dot(f32[a,k]{..} %x, ...)` return the last dim of the first
+/// operand (the usual contraction dim in row-major jax dots).
+fn first_shape_elems_of_operand(s: &str) -> Option<u64> {
+    let open = s.find('[')?;
+    let close = s[open..].find(']')? + open;
+    let dims = &s[open + 1..close];
+    dims.split(',').last()?.trim().parse::<u64>().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HLO: &str = r#"HloModule jit_step
+%fused_computation (p0: f32[4,8]) -> f32[4,8] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  ROOT %e = f32[4,8]{1,0} exponential(%p0)
+}
+ENTRY %main (a: f32[4,8], b: f32[8,16]) -> f32[4,16] {
+  %a = f32[4,8]{1,0} parameter(0)
+  %b = f32[8,16]{1,0} parameter(1)
+  %f = f32[4,8]{1,0} fusion(%a), kind=kLoop, calls=%fused_computation
+  %w = f32[4,8]{1,0} while(%f), condition=%c, body=%bd
+  ROOT %d = f32[4,16]{1,0} dot(f32[4,8]{1,0} %w, f32[8,16]{1,0} %b), lhs_contracting_dims={1}
+}
+"#;
+
+    #[test]
+    fn counts_opcodes() {
+        let info = HloInfo::parse(HLO);
+        assert_eq!(info.count("parameter"), 3);
+        assert_eq!(info.count("dot"), 1);
+        assert_eq!(info.fusions, 1);
+        assert_eq!(info.whiles, 1);
+        assert!(info.total >= 7, "{info:?}");
+    }
+
+    #[test]
+    fn dot_flops_estimate() {
+        let info = HloInfo::parse(HLO);
+        // out 4x16 = 64 elems, k = 8 -> 2*64*8 = 1024
+        assert_eq!(info.dot_flops, 1024);
+    }
+
+    #[test]
+    fn top_is_sorted() {
+        let info = HloInfo::parse(HLO);
+        let top = info.top(2);
+        assert_eq!(top[0].0, "parameter");
+        assert!(top[0].1 >= top[1].1);
+    }
+
+    #[test]
+    fn shape_parser_handles_scalars() {
+        assert_eq!(first_shape_elems("f32[] add"), Some(1));
+        assert_eq!(first_shape_elems("f32[3,5]{1,0} x"), Some(15));
+        assert_eq!(first_shape_elems("no shape"), None);
+    }
+}

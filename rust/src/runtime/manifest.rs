@@ -1,0 +1,188 @@
+//! Artifact manifest parsing (the JSON twin of `python/compile/aot.py`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a manifest tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One typed tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub role: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSig {
+    fn parse(j: &Json) -> Result<TensorSig> {
+        Ok(TensorSig {
+            name: j.str_of("name")?.to_string(),
+            role: j.str_of("role").unwrap_or("param").to_string(),
+            shape: j
+                .arr_of("shape")?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(j.str_of("dtype")?)?,
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `<name>.json` manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub group: String,
+    pub kind: String,
+    pub batch: usize,
+    pub params: Vec<TensorSig>,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    /// Filename (relative to the artifacts dir) of seeded init params.
+    pub init_params: Option<String>,
+    /// Artifacts sharing a `param_key` share a checkpoint ABI.
+    pub param_key: Option<String>,
+    /// The raw `model` / `task` / `fwdbwd` objects for consumers that need
+    /// hyper-parameters (seq_len, vocab, bandwidth, ...).
+    pub model: Option<Json>,
+    pub task: Option<Json>,
+    pub fwdbwd: Option<Json>,
+    pub opt: Option<Json>,
+}
+
+impl Manifest {
+    pub fn parse(doc: &str) -> Result<Manifest> {
+        let j = Json::parse(doc).context("manifest JSON")?;
+        let sig_list = |key: &str| -> Result<Vec<TensorSig>> {
+            match j.get(key) {
+                None => Ok(vec![]),
+                Some(arr) => arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} not an array"))?
+                    .iter()
+                    .map(TensorSig::parse)
+                    .collect(),
+            }
+        };
+        Ok(Manifest {
+            name: j.str_of("name")?.to_string(),
+            group: j.str_of("group")?.to_string(),
+            kind: j.str_of("kind")?.to_string(),
+            batch: j.usize_of("batch").unwrap_or(0),
+            params: sig_list("params")?,
+            inputs: sig_list("inputs")?,
+            outputs: sig_list("outputs")?,
+            init_params: j.get("init_params").and_then(|x| x.as_str()).map(String::from),
+            param_key: j.get("param_key").and_then(|x| x.as_str()).map(String::from),
+            model: j.get("model").cloned(),
+            task: j.get("task").cloned(),
+            fwdbwd: j.get("fwdbwd").cloned(),
+            opt: j.get("opt").cloned(),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let doc = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        Self::parse(&doc)
+    }
+
+    /// Model sequence length (from the model config, or fwdbwd's n).
+    pub fn seq_len(&self) -> Result<usize> {
+        if let Some(m) = &self.model {
+            return m.usize_of("seq_len");
+        }
+        if let Some(f) = &self.fwdbwd {
+            return f.usize_of("n");
+        }
+        bail!("manifest {} has no seq_len", self.name)
+    }
+
+    /// Whether this artifact's targets are per-position (LM) or labels.
+    pub fn is_lm(&self) -> Result<bool> {
+        let m = self.model.as_ref().ok_or_else(|| anyhow!("no model section"))?;
+        Ok(matches!(m.get("num_classes"), None | Some(Json::Null)))
+    }
+
+    /// Index of the first input with the given role.
+    pub fn input_index(&self, role: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.role == role)
+    }
+
+    /// Total parameter element count.
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "name": "t", "group": "core", "kind": "train_step", "batch": 4,
+      "model": {"seq_len": 64, "num_classes": null},
+      "task": {"task": "copy"},
+      "params": [{"name": "embed", "shape": [13, 32], "dtype": "f32"}],
+      "inputs": [
+        {"name": "embed", "role": "param", "shape": [13, 32], "dtype": "f32"},
+        {"name": "t", "role": "step", "shape": [], "dtype": "f32"},
+        {"name": "tokens", "role": "tokens", "shape": [4, 64], "dtype": "i32"}
+      ],
+      "outputs": [{"name": "loss", "role": "loss", "shape": [], "dtype": "f32"}],
+      "init_params": "t.params.bin", "param_key": "k1"
+    }"#;
+
+    #[test]
+    fn parses_complete_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.params[0].elems(), 13 * 32);
+        assert_eq!(m.seq_len().unwrap(), 64);
+        assert!(m.is_lm().unwrap());
+        assert_eq!(m.input_index("tokens"), Some(2));
+        assert_eq!(m.input_index("targets"), None);
+        assert_eq!(m.inputs[2].dtype, Dtype::I32);
+        assert_eq!(m.init_params.as_deref(), Some("t.params.bin"));
+    }
+
+    #[test]
+    fn scalar_shapes_are_one_element() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.inputs[1].elems(), 1);
+        assert_eq!(m.inputs[1].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

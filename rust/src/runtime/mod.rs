@@ -1,0 +1,212 @@
+//! PJRT runtime — loads AOT artifacts and executes them on the hot path.
+//!
+//! The pattern (from /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`
+//! → `execute`/`execute_b`. Artifacts are compiled once and cached; the
+//! training loop then runs entirely on device buffers (`execute_b`) with
+//! zero host transfers except scalar metrics and fresh token batches.
+
+pub mod checkpoint;
+pub mod hlo_info;
+pub mod manifest;
+pub mod params;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{IntTensor, Tensor};
+use manifest::{Dtype, Manifest};
+
+/// Shared PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        crate::debuglog!(
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// True if both the HLO and manifest for `name` exist.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+            && self.dir.join(format!("{name}.json")).exists()
+    }
+
+    /// Load + compile an artifact (cached by name).
+    pub fn load(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let man_path = self.dir.join(format!("{name}.json"));
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let manifest = Manifest::load(&man_path)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {hlo_path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        crate::debuglog!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let art = Rc::new(Artifact { manifest, exe, compile_secs: t0.elapsed().as_secs_f64() });
+        self.cache.borrow_mut().insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Upload an f32 host tensor to a device buffer.
+    pub fn upload_f32(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+            .map_err(|e| anyhow!("upload f32: {e:?}"))
+    }
+
+    /// Upload an i32 host tensor to a device buffer.
+    pub fn upload_i32(&self, t: &IntTensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(t.data(), t.shape(), None)
+            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    }
+
+    /// Upload raw f32 values with an explicit shape.
+    pub fn upload_f32_raw(&self, values: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(values, shape, None)
+            .map_err(|e| anyhow!("upload f32 raw: {e:?}"))
+    }
+}
+
+/// A compiled artifact: manifest + PJRT executable.
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_secs: f64,
+}
+
+impl Artifact {
+    /// Execute with device buffers, returning one buffer per manifest
+    /// output. Handles both untupled results and single-tuple results
+    /// (PJRT may or may not untuple depending on the wrapper).
+    pub fn execute<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: {} inputs given, manifest wants {}",
+                self.manifest.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        let mut out = self
+            .exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.manifest.name))?;
+        let replica = out
+            .drain(..)
+            .next()
+            .ok_or_else(|| anyhow!("no replica output"))?;
+        let want = self.manifest.outputs.len();
+        if replica.len() == want {
+            return Ok(replica);
+        }
+        bail!(
+            "{}: executable returned {} buffers, manifest wants {} \
+             (tuple output not untupled?)",
+            self.manifest.name,
+            replica.len(),
+            want
+        )
+    }
+
+    /// Download one output buffer to host f32 values.
+    pub fn to_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    }
+
+    /// Download a scalar f32 output.
+    pub fn to_scalar(buf: &xla::PjRtBuffer) -> Result<f32> {
+        Ok(Self::to_f32(buf)?[0])
+    }
+
+    /// Validate that an input position matches (shape, dtype) before a
+    /// hot loop starts (fail-fast on ABI drift between aot.py and Rust).
+    pub fn check_input(&self, idx: usize, shape: &[usize], dtype: Dtype) -> Result<()> {
+        let sig = self
+            .manifest
+            .inputs
+            .get(idx)
+            .ok_or_else(|| anyhow!("input {idx} out of range"))?;
+        if sig.shape != shape || sig.dtype != dtype {
+            bail!(
+                "{} input {idx} ({}) wants {:?} {:?}, got {:?} {:?}",
+                self.manifest.name,
+                sig.name,
+                sig.shape,
+                sig.dtype,
+                shape,
+                dtype
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Load the initial parameters referenced by a train manifest.
+pub fn load_init_leaves(dir: &Path, manifest: &Manifest) -> Result<Vec<checkpoint::Leaf>> {
+    let file = manifest
+        .init_params
+        .as_ref()
+        .ok_or_else(|| anyhow!("{} has no init_params", manifest.name))?;
+    let leaves = checkpoint::read_leaves(&dir.join(file))
+        .with_context(|| format!("init params for {}", manifest.name))?;
+    if leaves.len() != manifest.params.len() {
+        bail!(
+            "{}: init file has {} leaves, manifest wants {}",
+            manifest.name,
+            leaves.len(),
+            manifest.params.len()
+        );
+    }
+    for (leaf, sig) in leaves.iter().zip(&manifest.params) {
+        if leaf.name != sig.name || leaf.shape != sig.shape {
+            bail!("param ABI drift: file {:?}{:?} vs manifest {:?}{:?}",
+                  leaf.name, leaf.shape, sig.name, sig.shape);
+        }
+    }
+    Ok(leaves)
+}

@@ -1,0 +1,96 @@
+//! Device-resident parameter store.
+//!
+//! Holds every model leaf as a `PjRtBuffer` in manifest order. The
+//! trainer swaps the whole vector each step with the executable's output
+//! buffers (no host copies); checkpointing downloads once.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::checkpoint::{self, Leaf};
+use super::manifest::{Dtype, Manifest};
+use super::Runtime;
+
+pub struct ParamStore {
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl ParamStore {
+    /// Upload leaves (order must match the manifest's param table).
+    pub fn from_leaves(rt: &Runtime, manifest: &Manifest, leaves: &[Leaf]) -> Result<ParamStore> {
+        if leaves.len() != manifest.params.len() {
+            bail!("param count mismatch: {} vs {}", leaves.len(), manifest.params.len());
+        }
+        let mut bufs = Vec::with_capacity(leaves.len());
+        let mut names = Vec::with_capacity(leaves.len());
+        let mut shapes = Vec::with_capacity(leaves.len());
+        for (leaf, sig) in leaves.iter().zip(&manifest.params) {
+            if sig.dtype != Dtype::F32 {
+                bail!("non-f32 param {} unsupported", sig.name);
+            }
+            let values = leaf.to_f32();
+            bufs.push(rt.upload_f32_raw(&values, &leaf.shape)?);
+            names.push(leaf.name.clone());
+            shapes.push(leaf.shape.clone());
+        }
+        Ok(ParamStore { names, shapes, bufs })
+    }
+
+    /// Zero-initialized twin of an existing store (Adam m/v states).
+    pub fn zeros_like(rt: &Runtime, other: &ParamStore) -> Result<ParamStore> {
+        let mut bufs = Vec::with_capacity(other.bufs.len());
+        for shape in &other.shapes {
+            let zeros = vec![0.0f32; shape.iter().product::<usize>().max(1)];
+            bufs.push(rt.upload_f32_raw(&zeros, shape)?);
+        }
+        Ok(ParamStore { names: other.names.clone(), shapes: other.shapes.clone(), bufs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    pub fn buffers(&self) -> &[xla::PjRtBuffer] {
+        &self.bufs
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Replace the buffers (with the executable's output buffers).
+    pub fn replace(&mut self, bufs: Vec<xla::PjRtBuffer>) -> Result<()> {
+        if bufs.len() != self.bufs.len() {
+            bail!("replace: {} buffers for {} slots", bufs.len(), self.bufs.len());
+        }
+        self.bufs = bufs;
+        Ok(())
+    }
+
+    /// Download everything to host leaves (checkpoint save).
+    pub fn download(&self) -> Result<Vec<Leaf>> {
+        let mut out = Vec::with_capacity(self.bufs.len());
+        for ((buf, name), shape) in self.bufs.iter().zip(&self.names).zip(&self.shapes) {
+            let lit = buf.to_literal_sync().map_err(|e| anyhow!("download {name}: {e:?}"))?;
+            let values = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))?;
+            out.push(Leaf::from_f32(name, shape, &values));
+        }
+        Ok(out)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        checkpoint::write_leaves(path, &self.download()?)
+    }
+
+    /// Total parameter count (report lines).
+    pub fn total_elems(&self) -> usize {
+        self.shapes.iter().map(|s| s.iter().product::<usize>().max(1)).sum()
+    }
+}

@@ -1,0 +1,313 @@
+//! Inference server: request router + dynamic batcher.
+//!
+//! The FMMformer's O(N) attention is a *serving* win as much as a
+//! training one; this module is the coordinator that realizes it
+//! (vllm-router-shaped, scaled to one box):
+//!
+//! ```text
+//!  clients ──submit()──▶ queue ──▶ scheduler thread:
+//!                                   collect ≤ max_batch requests or wait
+//!                                   ≤ max_wait_ms, pick the smallest
+//!                                   batch-size-bucketed executable that
+//!                                   fits, pad, execute, fan results out
+//! ```
+//!
+//! AOT serving means fixed-shape executables; the batcher therefore
+//! buckets by *batch size* (artifacts compiled at B ∈ {1,4,8}) and pads
+//! sequences to the artifact's window — the padding-waste metric is
+//! tracked and reported. Threads + channels (no tokio in the offline
+//! sandbox; for a CPU-bound single-device server a scheduler thread is
+//! the honest design anyway).
+//!
+//! PJRT handles are not `Send` (the xla crate wraps `Rc` + raw
+//! pointers), so the scheduler thread owns its *own* `Runtime` and
+//! compiles the executables inside the thread; only plain data (names,
+//! parameter leaves, requests) crosses the channel.
+
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::batching::{pad_batch, padding_waste};
+use crate::runtime::checkpoint::Leaf;
+use crate::runtime::params::ParamStore;
+use crate::runtime::{Artifact, Runtime};
+
+/// One inference request: a token sequence in, logits out.
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    submitted: Instant,
+    reply: Sender<Response>,
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Class logits for this sequence.
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    /// Size of the batch this request rode in (batching observability).
+    pub batch_size: usize,
+}
+
+/// Aggregate server statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub padding_waste_sum: f64,
+    pub batch_occupancy_sum: f64,
+    pub exec_secs: f64,
+}
+
+impl ServeStats {
+    pub fn mean_padding_waste(&self) -> f64 {
+        if self.batches == 0 { 0.0 } else { self.padding_waste_sum / self.batches as f64 }
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 { 0.0 } else { self.batch_occupancy_sum / self.batches as f64 }
+    }
+}
+
+/// Handle for submitting requests; cloneable across client threads.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Fire a request; returns a receiver for the response.
+    pub fn submit(&self, tokens: Vec<i32>) -> (u64, Receiver<Response>) {
+        let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, tokens, submitted: Instant::now(), reply };
+        self.tx.send(req).expect("server alive");
+        (id, rx)
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
+        let (_, rx) = self.submit(tokens);
+        rx.recv().map_err(|_| anyhow!("server dropped request"))
+    }
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max time the scheduler waits to fill a batch.
+    pub max_wait: Duration,
+    /// Pad id used when padding sequences to the window.
+    pub pad_id: i32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_wait: Duration::from_millis(5), pad_id: 0 }
+    }
+}
+
+pub struct Server {
+    client: Option<Client>,
+    stats: Arc<Mutex<ServeStats>>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl Server {
+    /// Start a server over batch-size-bucketed predict artifacts
+    /// (`artifact_names` e.g. `["serve_text_fmm2_b1", ..._b4, ..._b8]`),
+    /// loading model parameters from `leaves`. Blocks until the scheduler
+    /// thread has compiled its executables (or failed).
+    pub fn start(
+        artifacts_dir: PathBuf,
+        artifact_names: &[&str],
+        leaves: Vec<Leaf>,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        if artifact_names.is_empty() {
+            bail!("need at least one predict artifact");
+        }
+        let names: Vec<String> = artifact_names.iter().map(|s| s.to_string()).collect();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats_thread = stats.clone();
+
+        let handle = std::thread::Builder::new()
+            .name("fmm-scheduler".into())
+            .spawn(move || {
+                scheduler_main(artifacts_dir, names, leaves, cfg, rx, ready_tx, stats_thread)
+            })
+            .expect("spawn scheduler");
+
+        // Wait for compile-or-fail before accepting traffic.
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                handle.join().ok();
+                return Err(e);
+            }
+            Err(_) => {
+                let err = handle
+                    .join()
+                    .map_err(|_| anyhow!("scheduler panicked during startup"))?;
+                return Err(err.err().unwrap_or_else(|| anyhow!("scheduler exited early")));
+            }
+        }
+
+        Ok(Server {
+            client: Some(Client { tx, next_id: Arc::new(AtomicU64::new(0)) }),
+            stats,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.as_ref().expect("server running").clone()
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown: drop our sender, join the scheduler. Callers
+    /// must drop any cloned `Client`s first, or this blocks until they do.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.client.take();
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+        let stats = self.stats.lock().unwrap().clone();
+        stats
+    }
+}
+
+struct Bucket {
+    batch: usize,
+    art: std::rc::Rc<Artifact>,
+    params: ParamStore,
+}
+
+fn scheduler_main(
+    artifacts_dir: PathBuf,
+    names: Vec<String>,
+    leaves: Vec<Leaf>,
+    cfg: ServeConfig,
+    rx: Receiver<Request>,
+    ready_tx: Sender<Result<()>>,
+    stats: Arc<Mutex<ServeStats>>,
+) -> Result<()> {
+    // Own the PJRT world inside this thread (see module docs).
+    let setup = (|| -> Result<(Runtime, Vec<Bucket>, usize)> {
+        let rt = Runtime::new(&artifacts_dir)?;
+        let mut buckets = Vec::new();
+        let mut seq_len = None;
+        for name in &names {
+            let art = rt.load(name)?;
+            if art.manifest.kind != "predict" {
+                bail!("{name} is not a predict artifact");
+            }
+            let n = art.manifest.seq_len()?;
+            if *seq_len.get_or_insert(n) != n {
+                bail!("bucketed artifacts must share seq_len");
+            }
+            let params = ParamStore::from_leaves(&rt, &art.manifest, &leaves)?;
+            buckets.push(Bucket { batch: art.manifest.batch, art, params });
+        }
+        buckets.sort_by_key(|b| b.batch);
+        let n = seq_len.unwrap();
+        Ok((rt, buckets, n))
+    })();
+
+    let (rt, buckets, seq_len) = match setup {
+        Ok(x) => {
+            ready_tx.send(Ok(())).ok();
+            x
+        }
+        Err(e) => {
+            ready_tx.send(Err(e)).ok();
+            return Ok(());
+        }
+    };
+    let max_batch = buckets.last().unwrap().batch;
+
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // all senders gone: shutdown
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        // Fill the batch until the largest bucket is full or time is up.
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Smallest bucket that fits.
+        let bucket = buckets
+            .iter()
+            .find(|b| b.batch >= pending.len())
+            .unwrap_or_else(|| buckets.last().unwrap());
+
+        let seqs: Vec<Vec<i32>> = pending.iter().map(|r| r.tokens.clone()).collect();
+        let (batch, lens) = pad_batch(&seqs, bucket.batch, seq_len, cfg.pad_id);
+
+        let t0 = Instant::now();
+        let result = rt
+            .upload_i32(&batch)
+            .and_then(|tokens| {
+                let mut inputs: Vec<&xla::PjRtBuffer> =
+                    Vec::with_capacity(bucket.params.len() + 1);
+                inputs.extend(bucket.params.buffers());
+                inputs.push(&tokens);
+                bucket.art.execute(&inputs)
+            })
+            .and_then(|out| Artifact::to_f32(&out[0]));
+        let exec = t0.elapsed();
+
+        match result {
+            Ok(logits) => {
+                let per = logits.len() / bucket.batch;
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.requests += pending.len();
+                    s.batches += 1;
+                    s.exec_secs += exec.as_secs_f64();
+                    s.padding_waste_sum += padding_waste(&lens, bucket.batch, seq_len);
+                    s.batch_occupancy_sum += pending.len() as f64 / bucket.batch as f64;
+                }
+                for (i, req) in pending.into_iter().enumerate() {
+                    let resp = Response {
+                        id: req.id,
+                        logits: logits[i * per..(i + 1) * per].to_vec(),
+                        latency: req.submitted.elapsed(),
+                        batch_size: bucket.batch,
+                    };
+                    req.reply.send(resp).ok(); // client may have gone away
+                }
+            }
+            Err(e) => {
+                crate::warnlog!("batch execution failed: {e:#}");
+                // Drop replies; clients see a disconnected channel.
+            }
+        }
+    }
+}

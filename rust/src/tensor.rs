@@ -1,0 +1,304 @@
+//! Host-side tensors: contiguous row-major `f32`/`i32` ndarrays.
+//!
+//! These back everything the coordinator does on the host — batch
+//! assembly, metrics, the pure-Rust baseline attentions, and the Fig. 3
+//! SVD study. They are deliberately *not* a BLAS: the device math runs in
+//! the AOT-compiled XLA executables; host tensors only touch O(batch)
+//! data — plus the analysis paths where an N×N map is the point.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], x: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![x; shape.iter().product()] }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut crate::rng::Pcg64) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: rng.normals(shape.iter().product()) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D accessor.
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, x: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = x;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {shape:?}", self.shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// `self @ other` for 2-D tensors (ikj loop order: cache-friendly for
+    /// row-major without blocking; fine at analysis sizes).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (&[m, k1], &[k2, n]) = (&self.shape[..], &other.shape[..]) else {
+            bail!("matmul needs 2-D operands");
+        };
+        if k1 != k2 {
+            bail!("matmul inner dims {k1} != {k2}");
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for k in 0..k1 {
+                let a = self.data[i * k1 + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * n..(k + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        let [m, n] = self.shape[..] else { panic!("t() needs 2-D") };
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    /// Row-wise softmax over the last axis of a 2-D tensor; entries equal
+    /// to `f32::NEG_INFINITY` get probability 0 (all-masked rows become
+    /// uniform-0 and are the caller's responsibility).
+    pub fn softmax_rows(&self) -> Tensor {
+        let [m, n] = self.shape[..] else { panic!("softmax_rows needs 2-D") };
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            if mx == f32::NEG_INFINITY {
+                continue;
+            }
+            let mut sum = 0.0;
+            for j in 0..n {
+                let e = (row[j] - mx).exp();
+                out[i * n + j] = e;
+                sum += e;
+            }
+            for j in 0..n {
+                out[i * n + j] /= sum;
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+        self
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("add shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    pub fn scale(mut self, s: f32) -> Tensor {
+        for x in &mut self.data {
+            *x *= s;
+        }
+        self
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+/// Dense row-major i32 tensor (token batches, labels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: &[usize], data: Vec<i32>) -> Result<IntTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(IntTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> IntTensor {
+        IntTensor { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], x: i32) -> IntTensor {
+        IntTensor { shape: shape.to_vec(), data: vec![x; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = crate::rng::Pcg64::seeded(0);
+        let a = Tensor::randn(&[5, 7], &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_respect_mask() {
+        let a = Tensor::new(&[2, 3],
+            vec![1.0, 2.0, 3.0, 0.5, f32::NEG_INFINITY, 0.5]).unwrap();
+        let s = a.softmax_rows();
+        for i in 0..2 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(s.at(1, 1), 0.0);
+        assert!((s.at(1, 0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let a = Tensor::new(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        let b = a.clone().reshape(&[3, 2]).unwrap();
+        assert_eq!(b.data(), a.data());
+        assert!(a.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn int_tensor_rows() {
+        let mut t = IntTensor::zeros(&[2, 4]);
+        t.row_mut(1).copy_from_slice(&[1, 2, 3, 4]);
+        assert_eq!(t.row(0), &[0, 0, 0, 0]);
+        assert_eq!(t.row(1), &[1, 2, 3, 4]);
+    }
+}

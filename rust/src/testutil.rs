@@ -1,0 +1,69 @@
+//! Mini property-testing helper (offline substitute for `proptest`).
+//!
+//! `check` runs a property over `cases` seeded-random inputs and reports
+//! the first failing seed so a failure is reproducible by construction.
+//! Shrinking is intentionally out of scope — generators take the RNG
+//! directly, so failures print their full input via the property's
+//! panic/Err message.
+
+use crate::rng::Pcg64;
+
+/// Run `prop` over `cases` generated inputs. `gen` builds an input from a
+/// seeded RNG; `prop` returns Err(description) on violation.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        let mut rng = Pcg64::seeded(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices match within tolerance.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol + 1e-3 * y.abs() {
+            return Err(format!("{what}[{i}]: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("sum-comm", 16, |r| (r.f32(), r.f32()), |&(a, b)| {
+            ran += 1;
+            if (a + b - (b + a)).abs() < 1e-9 { Ok(()) } else { Err("nope".into()) }
+        });
+        assert_eq!(ran, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 4, |r| r.f32(), |_| Err("expected".into()));
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.00001], 1e-3, "x").is_ok());
+        assert!(assert_close(&[1.0], &[2.0], 1e-3, "x").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, "x").is_err());
+    }
+}

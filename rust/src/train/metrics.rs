@@ -1,0 +1,136 @@
+//! Training metrics: in-memory loss curves + CSV logging.
+//!
+//! Curves are what the Fig. 4/5/7 benches plot; the CSV files under the
+//! run directory are the regenerable artifacts recorded in
+//! EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// An in-memory (step, loss) series with summary helpers.
+#[derive(Debug, Clone, Default)]
+pub struct LossCurve {
+    pub steps: Vec<usize>,
+    pub losses: Vec<f32>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, step: usize, loss: f32) {
+        self.steps.push(step);
+        self.losses.push(loss);
+    }
+
+    pub fn last(&self) -> Option<f32> {
+        self.losses.last().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.losses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.losses.is_empty()
+    }
+
+    /// Mean loss over the final `k` steps (convergence-level summary used
+    /// by the copy-task benches; robust to single-step noise).
+    pub fn tail_mean(&self, k: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let k = k.min(self.losses.len()).max(1);
+        let tail = &self.losses[self.losses.len() - k..];
+        tail.iter().sum::<f32>() / k as f32
+    }
+
+    /// First step index at which the loss drops below `thresh` (a
+    /// convergence-speed summary; None if never).
+    pub fn first_below(&self, thresh: f32) -> Option<usize> {
+        self.steps
+            .iter()
+            .zip(&self.losses)
+            .find(|(_, &l)| l < thresh)
+            .map(|(&s, _)| s)
+    }
+
+    /// Downsample to at most `k` evenly spaced points (compact plots).
+    pub fn downsample(&self, k: usize) -> Vec<(usize, f32)> {
+        if self.losses.is_empty() || k == 0 {
+            return vec![];
+        }
+        let stride = (self.losses.len() as f64 / k as f64).ceil().max(1.0) as usize;
+        self.steps
+            .iter()
+            .zip(&self.losses)
+            .step_by(stride)
+            .map(|(&s, &l)| (s, l))
+            .collect()
+    }
+}
+
+/// Append-only CSV writer with a fixed header.
+pub struct CsvLogger {
+    file: std::io::BufWriter<std::fs::File>,
+    ncols: usize,
+}
+
+impl CsvLogger {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvLogger> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut file = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+        );
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvLogger { file, ncols: header.len() })
+    }
+
+    pub fn log(&mut self, values: &[f64]) -> Result<()> {
+        debug_assert_eq!(values.len(), self.ncols, "column count drift");
+        let row: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.file, "{}", row.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_summaries() {
+        let mut c = LossCurve::default();
+        for (i, l) in [5.0, 4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            c.push(i + 1, *l);
+        }
+        assert_eq!(c.tail_mean(2), 1.5);
+        assert_eq!(c.first_below(3.5), Some(3));
+        assert_eq!(c.first_below(0.5), None);
+        assert_eq!(c.downsample(3).len(), 3);
+        assert_eq!(c.last(), Some(1.0));
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = std::env::temp_dir().join(format!("fmm_csv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.csv");
+        let mut l = CsvLogger::create(&path, &["step", "loss"]).unwrap();
+        l.log(&[1.0, 2.5]).unwrap();
+        l.log(&[2.0, 1.25]).unwrap();
+        l.flush().unwrap();
+        drop(l);
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.starts_with("step,loss\n1,2.5\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,198 @@
+//! Training loop: drives a whole-train-step artifact over device buffers.
+//!
+//! One `Artifact::execute` per step computes forward, backward (through
+//! the Pallas kernels' custom VJPs), clipping and Adam entirely in-graph;
+//! the host only uploads the fresh token batch + step counter and reads
+//! back the scalar loss. Parameters and optimizer state never leave the
+//! device between steps.
+
+pub mod metrics;
+
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::{Batch, Split, TaskGen};
+use crate::runtime::params::ParamStore;
+use crate::runtime::{load_init_leaves, Artifact, Runtime};
+
+pub use metrics::{CsvLogger, LossCurve};
+
+/// Aggregated evaluation result.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    /// LM: mean nll (perplexity = exp(nll)). Classifier: mean loss.
+    pub loss: f64,
+    /// LM: perplexity. Classifier: accuracy in [0,1].
+    pub metric: f64,
+    pub batches: usize,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub art: Rc<Artifact>,
+    params: ParamStore,
+    opt_m: ParamStore,
+    opt_v: ParamStore,
+    pub step: usize,
+    n_leaves: usize,
+    /// Wall seconds spent inside execute (per-step perf accounting).
+    pub exec_secs: f64,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Load a train artifact and its seeded initial parameters.
+    pub fn new(rt: &'rt Runtime, artifact_name: &str) -> Result<Trainer<'rt>> {
+        let art = rt.load(artifact_name)?;
+        if art.manifest.kind != "train_step" {
+            bail!("{artifact_name} is a {} artifact, not train_step", art.manifest.kind);
+        }
+        let leaves = load_init_leaves(rt.dir(), &art.manifest)?;
+        let params = ParamStore::from_leaves(rt, &art.manifest, &leaves)?;
+        let opt_m = ParamStore::zeros_like(rt, &params)?;
+        let opt_v = ParamStore::zeros_like(rt, &params)?;
+        let n_leaves = params.len();
+        Ok(Trainer { rt, art, params, opt_m, opt_v, step: 0, n_leaves, exec_secs: 0.0 })
+    }
+
+    /// Restore parameters from a checkpoint (opt state resets to zero —
+    /// checkpoints store params only, matching the paper's eval flow).
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let leaves = crate::runtime::checkpoint::read_leaves(path)?;
+        self.params = ParamStore::from_leaves(self.rt, &self.art.manifest, &leaves)?;
+        self.opt_m = ParamStore::zeros_like(self.rt, &self.params)?;
+        self.opt_v = ParamStore::zeros_like(self.rt, &self.params)?;
+        Ok(())
+    }
+
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        self.params.save(path)
+    }
+
+    pub fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.total_elems()
+    }
+
+    /// One optimization step; returns the loss.
+    pub fn train_step(&mut self, batch: &Batch) -> Result<f32> {
+        self.step += 1;
+        let t_buf = self.rt.upload_f32_raw(&[self.step as f32], &[])?;
+        let tokens = self.rt.upload_i32(&batch.tokens)?;
+        let targets = self.rt.upload_i32(&batch.targets)?;
+
+        let n = self.n_leaves;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(3 * n + 3);
+        inputs.extend(self.params.buffers());
+        inputs.extend(self.opt_m.buffers());
+        inputs.extend(self.opt_v.buffers());
+        inputs.push(&t_buf);
+        inputs.push(&tokens);
+        inputs.push(&targets);
+
+        let t0 = Instant::now();
+        let mut out = self.art.execute(&inputs)?;
+        self.exec_secs += t0.elapsed().as_secs_f64();
+
+        // Outputs: params, m, v, loss — swap buffers in place.
+        let loss_buf = out.pop().ok_or_else(|| anyhow!("missing loss output"))?;
+        let v_new: Vec<_> = out.drain(2 * n..).collect();
+        let m_new: Vec<_> = out.drain(n..).collect();
+        self.params.replace(out)?;
+        self.opt_m.replace(m_new)?;
+        self.opt_v.replace(v_new)?;
+        Artifact::to_scalar(&loss_buf)
+    }
+
+    /// Run `steps` training steps pulling batches from `gen`, logging to
+    /// `log` (if given). Returns the loss curve.
+    pub fn train_loop(
+        &mut self,
+        gen: &mut dyn TaskGen,
+        steps: usize,
+        log_every: usize,
+        mut log: Option<&mut CsvLogger>,
+    ) -> Result<LossCurve> {
+        let batch_size = self.art.manifest.batch;
+        let mut curve = LossCurve::default();
+        let t0 = Instant::now();
+        for s in 0..steps {
+            let batch = gen.batch(Split::Train, batch_size);
+            let loss = self.train_step(&batch)?;
+            if !loss.is_finite() {
+                bail!("loss diverged (step {}): {loss}", self.step);
+            }
+            curve.push(self.step, loss);
+            if let Some(l) = log.as_deref_mut() {
+                l.log(&[self.step as f64, loss as f64])?;
+            }
+            if log_every > 0 && (s + 1) % log_every == 0 {
+                crate::info!(
+                    "{} step {}/{} loss {:.4} ({:.2} steps/s)",
+                    self.art.manifest.name,
+                    s + 1,
+                    steps,
+                    loss,
+                    (s + 1) as f64 / t0.elapsed().as_secs_f64()
+                );
+            }
+        }
+        Ok(curve)
+    }
+
+    /// Evaluate with a matching eval artifact over `n_batches`.
+    pub fn evaluate(
+        &self,
+        eval_art: &Artifact,
+        gen: &mut dyn TaskGen,
+        split: Split,
+        n_batches: usize,
+    ) -> Result<EvalResult> {
+        evaluate_params(self.rt, eval_art, &self.params, gen, split, n_batches)
+    }
+}
+
+/// Evaluation with explicit parameters (used by the trainer and by
+/// standalone eval of a loaded checkpoint).
+pub fn evaluate_params(
+    rt: &Runtime,
+    eval_art: &Artifact,
+    params: &ParamStore,
+    gen: &mut dyn TaskGen,
+    split: Split,
+    n_batches: usize,
+) -> Result<EvalResult> {
+    if eval_art.manifest.kind != "eval_step" {
+        bail!("{} is not an eval artifact", eval_art.manifest.name);
+    }
+    if eval_art.manifest.params.len() != params.len() {
+        bail!("param ABI mismatch between train and eval artifacts");
+    }
+    let b = eval_art.manifest.batch;
+    let is_lm = eval_art.manifest.is_lm()?;
+    let (mut sum_a, mut sum_b) = (0.0f64, 0.0f64);
+    for _ in 0..n_batches {
+        let batch = gen.batch(split, b);
+        let tokens = rt.upload_i32(&batch.tokens)?;
+        let targets = rt.upload_i32(&batch.targets)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(params.len() + 2);
+        inputs.extend(params.buffers());
+        inputs.push(&tokens);
+        inputs.push(&targets);
+        let out = eval_art.execute(&inputs)?;
+        sum_a += Artifact::to_scalar(&out[0])? as f64; // nll_sum | loss_sum
+        sum_b += Artifact::to_scalar(&out[1])? as f64; // tokens  | correct
+    }
+    Ok(if is_lm {
+        let nll = sum_a / sum_b.max(1.0);
+        EvalResult { loss: nll, metric: nll.exp(), batches: n_batches }
+    } else {
+        let total = (n_batches * b) as f64;
+        EvalResult { loss: sum_a / total, metric: sum_b / total, batches: n_batches }
+    })
+}

@@ -1,0 +1,94 @@
+//! Shared plumbing: error type, JSON, logging, humanized units.
+
+pub mod json;
+pub mod log;
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Crate-wide error type (thin wrapper; `anyhow` carries context).
+pub type Result<T> = anyhow::Result<T>;
+
+/// Milliseconds since the unix epoch (wall-clock stamps in metrics files).
+pub fn unix_millis() -> u128 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0)
+}
+
+/// Format a byte count as a human-readable string (KiB/MiB/GiB).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = bytes as f64;
+    let mut unit = 0;
+    while x >= 1024.0 && unit + 1 < UNITS.len() {
+        x /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{x:.2} {}", UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds adaptively (µs/ms/s).
+pub fn human_secs(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+/// Peak and current resident set size of this process, from
+/// `/proc/self/status` (linux only; the Fig. 6 memory series and the
+/// bench harness use this).
+pub fn rss_bytes() -> (u64, u64) {
+    let mut cur = 0;
+    let mut peak = 0;
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            let grab = |l: &str| -> u64 {
+                l.split_whitespace()
+                    .nth(1)
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or(0)
+                    * 1024
+            };
+            if line.starts_with("VmRSS:") {
+                cur = grab(line);
+            } else if line.starts_with("VmHWM:") {
+                peak = grab(line);
+            }
+        }
+    }
+    (cur, peak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_scales() {
+        assert!(human_secs(0.0000005).contains("µs"));
+        assert!(human_secs(0.005).contains("ms"));
+        assert!(human_secs(2.5).contains("s"));
+    }
+
+    #[test]
+    fn rss_is_nonzero_on_linux() {
+        let (cur, peak) = rss_bytes();
+        assert!(cur > 0 && peak >= cur / 2);
+    }
+}

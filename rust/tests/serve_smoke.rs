@@ -1,0 +1,121 @@
+//! Integration: the inference server — routing, batching, exactly-once
+//! replies, stats sanity.
+//!
+//! Requires the `serve` artifact group (`make artifacts`); skips otherwise.
+
+use std::time::Duration;
+
+use fmmformer::data::{text_cls::TextCls, Split, TaskGen};
+use fmmformer::runtime::{load_init_leaves, Runtime};
+use fmmformer::serve::{ServeConfig, Server};
+
+const BUCKETS: [&str; 3] = ["serve_text_fmm2_b1", "serve_text_fmm2_b4", "serve_text_fmm2_b8"];
+
+fn setup() -> Option<(std::path::PathBuf, Vec<fmmformer::runtime::checkpoint::Leaf>, usize)> {
+    let dir = fmmformer::artifacts_dir(None);
+    let rt = Runtime::new(&dir).ok()?;
+    for b in BUCKETS {
+        if !rt.has_artifact(b) {
+            eprintln!("SKIP: serve artifacts missing; run `make artifacts`");
+            return None;
+        }
+    }
+    if !rt.has_artifact("lra_text_fmm2_band5") {
+        eprintln!("SKIP: lra_text_fmm2_band5 missing; run `make artifacts-lra`");
+        return None;
+    }
+    let train = rt.load("lra_text_fmm2_band5").ok()?;
+    let leaves = load_init_leaves(rt.dir(), &train.manifest).ok()?;
+    let n = train.manifest.seq_len().ok()?;
+    Some((dir, leaves, n))
+}
+
+#[test]
+fn every_request_is_answered_exactly_once() {
+    let Some((dir, leaves, n)) = setup() else { return };
+    let server = Server::start(dir, &BUCKETS, leaves, ServeConfig {
+        max_wait: Duration::from_millis(10),
+        pad_id: 0,
+    })
+    .unwrap();
+    let client = server.client();
+
+    let mut gen = TextCls::new(n, 5);
+    let mut rxs = vec![];
+    for _ in 0..13 {
+        let b = gen.batch(Split::Test, 1);
+        rxs.push(client.submit(b.tokens.row(0).to_vec()));
+    }
+    let mut seen = std::collections::HashSet::new();
+    for (id, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("answered");
+        assert_eq!(resp.id, id);
+        assert!(seen.insert(id), "duplicate reply for {id}");
+        assert_eq!(resp.logits.len(), 2, "binary classifier logits");
+        assert!(resp.logits.iter().all(|x| x.is_finite()));
+        assert!(resp.batch_size == 1 || resp.batch_size == 4 || resp.batch_size == 8);
+        // No duplicate delivery: channel now empty.
+        assert!(rx.try_recv().is_err());
+    }
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 13);
+    assert!(stats.batches >= 2, "13 requests cannot fit one batch of 8");
+    assert!(stats.mean_occupancy() > 0.0 && stats.mean_occupancy() <= 1.0);
+    assert!(stats.mean_padding_waste() >= 1.0);
+}
+
+#[test]
+fn single_request_rides_smallest_bucket() {
+    let Some((dir, leaves, n)) = setup() else { return };
+    let server = Server::start(dir, &BUCKETS, leaves, ServeConfig {
+        max_wait: Duration::from_millis(1),
+        pad_id: 0,
+    })
+    .unwrap();
+    let client = server.client();
+    let mut gen = TextCls::new(n, 6);
+    let b = gen.batch(Split::Test, 1);
+    let resp = client.infer(b.tokens.row(0).to_vec()).unwrap();
+    assert_eq!(resp.batch_size, 1, "lone request should use the B=1 bucket");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn logits_match_between_buckets() {
+    // The same sequence must produce the same logits whether it rides a
+    // B=1 or a B=8 batch (padding rows cannot leak into real rows —
+    // masked mean pooling guarantees it; this test pins that end-to-end).
+    let Some((dir, leaves, n)) = setup() else { return };
+    let mut gen = TextCls::new(n, 7);
+    let seq = gen.batch(Split::Test, 1).tokens.row(0).to_vec();
+
+    let run = |max_wait_ms: u64, fill: usize| -> Vec<f32> {
+        let server = Server::start(dir.clone(), &BUCKETS, leaves.clone(), ServeConfig {
+            max_wait: Duration::from_millis(max_wait_ms),
+            pad_id: 0,
+        })
+        .unwrap();
+        let client = server.client();
+        // Optionally saturate so the scheduler picks a bigger bucket.
+        let mut others = vec![];
+        let mut g2 = TextCls::new(n, 8);
+        for _ in 0..fill {
+            others.push(client.submit(g2.batch(Split::Test, 1).tokens.row(0).to_vec()));
+        }
+        let resp = client.infer(seq.clone()).unwrap();
+        for (_, rx) in others {
+            rx.recv_timeout(Duration::from_secs(120)).ok();
+        }
+        drop(client);
+        server.shutdown();
+        resp.logits
+    };
+
+    let solo = run(1, 0);
+    let batched = run(50, 5);
+    for (a, b) in solo.iter().zip(&batched) {
+        assert!((a - b).abs() < 1e-4, "bucket-dependent logits: {solo:?} vs {batched:?}");
+    }
+}
