@@ -1,12 +1,16 @@
-//! Serving demo: train a small FMMformer text classifier, then serve it
-//! through the dynamic-batching router and report quality + latency.
+//! Serving demo: the incremental streaming decoder (always runs), then
+//! the classifier router over AOT artifacts (skips if absent).
 //!
-//! Demonstrates the full production loop: train → checkpoint → serve the
-//! checkpoint through batch-size-bucketed AOT executables → measure
+//! Part 1 streams tokens through the session-based decode engine —
+//! per-token O(1) work via `FmmDecodeState`, micro-batched across
+//! concurrent sessions — and pins its logits against the O(N²) batch
+//! forward. Part 2 is the original production loop: train → checkpoint
+//! → serve through batch-size-bucketed AOT executables → measure
 //! accuracy, throughput and batching efficiency.
 //!
+//!     cargo run --release --example serve_demo               # part 1 only
 //!     make artifacts-lra && cargo run --release --example serve_demo -- \
-//!         --train-steps 120 --requests 64
+//!         --train-steps 120 --requests 64                    # both parts
 
 use std::time::Duration;
 
@@ -14,6 +18,7 @@ use anyhow::{anyhow, Result};
 use fmmformer::cli::Args;
 use fmmformer::coordinator::Coordinator;
 use fmmformer::data::{text_cls::TextCls, Split, TaskGen};
+use fmmformer::serve::decode::{DecodeConfig, DecodeServer, DecodeServerConfig, HostDecoder};
 use fmmformer::serve::{ServeConfig, Server};
 use fmmformer::train::Trainer;
 
@@ -21,14 +26,64 @@ const BUCKETS: [&str; 3] = ["serve_text_fmm2_b1", "serve_text_fmm2_b4", "serve_t
 
 fn main() -> Result<()> {
     let args = Args::parse(&[])?;
+    decode_demo(&args)?;
+    artifact_demo(&args)
+}
+
+/// Part 1: session-based incremental decoding (host-side, no artifacts).
+fn decode_demo(args: &Args) -> Result<()> {
+    let sessions = args.usize_or("sessions", 4)?;
+    let tokens = args.usize_or("tokens", 96)?;
+    let cfg = DecodeConfig::default();
+    let vocab = cfg.vocab;
+
+    // Exactness: one stream against the batch forward pass.
+    let model = HostDecoder::new(cfg.clone())?;
+    let probe: Vec<i32> = (0..32).map(|t| (t * 5 % vocab) as i32).collect();
+    let batch = model.forward_batch(&probe)?;
+    let server = DecodeServer::start(model, DecodeServerConfig::default());
+    let client = server.client();
+    let max_diff =
+        fmmformer::serve::decode::probe_exactness(&client, &batch, &probe)?;
+
+    // Throughput: concurrent greedy-decoding sessions (shared harness).
+    let t0 = std::time::Instant::now();
+    fmmformer::serve::decode::run_greedy_sessions(&client, sessions, tokens, vocab)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!(
+        "decode engine: {sessions} sessions x {tokens} tokens -> {:.0} tok/s | \
+         incremental vs batch max |diff| {max_diff:.2e} | \
+         {} micro-batches (mean {:.1} steps)",
+        (sessions * tokens) as f64 / wall,
+        stats.micro_batches,
+        stats.mean_micro_batch(),
+    );
+    Ok(())
+}
+
+/// Part 2: the dynamic-batching router over AOT artifacts.
+fn artifact_demo(args: &Args) -> Result<()> {
     let train_steps = args.usize_or("train-steps", 120)?;
     let n_requests = args.usize_or("requests", 64)?;
     let dir = fmmformer::artifacts_dir(args.get("artifacts"));
-    let coord = Coordinator::new(&dir, 0)?;
+    let coord = match Coordinator::new(&dir, 0) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("SKIP artifact serving (no runtime: {e:#}); run `make artifacts-lra`");
+            return Ok(());
+        }
+    };
 
     // 1. Train (or reuse) the classifier the server will host.
     let ckpt = coord.runs_dir.join("lra_text_fmm2_band5.ckpt.bin");
-    let mut trainer = Trainer::new(&coord.rt, "lra_text_fmm2_band5")?;
+    let mut trainer = match Trainer::new(&coord.rt, "lra_text_fmm2_band5") {
+        Ok(t) => t,
+        Err(e) => {
+            println!("SKIP artifact serving ({e:#}); run `make artifacts-lra`");
+            return Ok(());
+        }
+    };
     let mut gen = coord.generator("lra_text_fmm2_band5")?;
     if ckpt.exists() {
         println!("reusing checkpoint {ckpt:?}");
@@ -74,7 +129,7 @@ fn main() -> Result<()> {
         lats.push(lat);
     }
     let wall = t0.elapsed().as_secs_f64();
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lats.sort_by(f64::total_cmp);
     let stats = server.shutdown();
 
     println!(

@@ -32,7 +32,7 @@ fn main() -> Result<()> {
     }
 
     println!("\nfinal loss (tail-10 mean):");
-    results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    results.sort_by(|a, b| a.1.total_cmp(&b.1));
     for (v, l) in &results {
         println!("  {v:<14} {l:.4}");
     }

@@ -1,0 +1,173 @@
+//! Serving bench (system extension) — per-token decode cost vs strategy.
+//!
+//! Three ways to produce the attention output for the token at position
+//! N of an autoregressive stream:
+//!
+//! * **recompute** — run causal `fmm_attention` over the whole N-prefix
+//!   (what a fixed-window batch server effectively does): O(N)/token,
+//!   O(N²) per stream. Exact.
+//! * **windowed**  — recompute over only the last W tokens: O(W)/token
+//!   but *approximate* (the far field is truncated to the window).
+//! * **incremental** — `FmmDecodeState::step` from O(1) state: flat
+//!   cost per token, exact (matches the batch row to round-off).
+//!
+//!     cargo bench --bench serve_decode               # N up to 4096
+//!     cargo bench --bench serve_decode -- --quick    # N up to 1024
+//!
+//! Expected shape: recompute µs/token grows ~linearly in N; windowed is
+//! flat but carries approximation error; incremental is flat AND exact.
+//! A session-throughput line for the full host decoder closes the loop.
+
+use anyhow::Result;
+use fmmformer::attention::incremental::decode_sequence;
+use fmmformer::attention::{fmm_attention, FeatureMap, FmmDecodeState};
+use fmmformer::bench::{fmt_time, measure, report_dir, Table};
+use fmmformer::cli::Args;
+use fmmformer::rng::Pcg64;
+use fmmformer::serve::decode::{
+    run_greedy_sessions, DecodeConfig, DecodeServer, DecodeServerConfig, HostDecoder,
+};
+use fmmformer::tensor::Tensor;
+
+const D: usize = 32;
+const BANDWIDTH: usize = 8;
+const WINDOW: usize = 64;
+const KERNELS: [FeatureMap; 1] = [FeatureMap::Elu];
+const W1: f32 = 0.6;
+const W2: f32 = 0.9;
+
+fn prefix(t: &Tensor, n: usize) -> Tensor {
+    Tensor::new(&[n, D], t.data()[..n * D].to_vec()).unwrap()
+}
+
+fn last_rows(t: &Tensor, n: usize, w: usize) -> Tensor {
+    Tensor::new(&[w, D], t.data()[(n - w) * D..n * D].to_vec()).unwrap()
+}
+
+fn max_row_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick"])?;
+    let quick = args.has("quick");
+    let max_n = args.usize_or("max-n", if quick { 1024 } else { 4096 })?;
+    let iters = args.usize_or("iters", 3)?;
+
+    let ns: Vec<usize> = (7..=12).map(|p| 1usize << p).filter(|&n| n <= max_n).collect();
+    let Some(&top) = ns.last() else {
+        anyhow::bail!("--max-n {max_n} too small: the N series starts at 128");
+    };
+    let mut rng = Pcg64::seeded(42);
+    let q = Tensor::randn(&[top, D], &mut rng);
+    let k = Tensor::randn(&[top, D], &mut rng);
+    let v = Tensor::randn(&[top, D], &mut rng);
+
+    let mut tbl = Table::new(
+        "Decode: per-token attention cost at position N (single head)",
+        &["N", "recompute", "windowed", "incremental", "inc max|err|", "win max|err|"],
+    );
+    let mut csv = Table::new("serve_decode raw", &["strategy", "n", "per_token_s"]);
+
+    for &n in &ns {
+        let (qn, kn, vn) = (prefix(&q, n), prefix(&k, n), prefix(&v, n));
+
+        // Exact row for token n-1, from the batch causal reference.
+        let exact = fmm_attention(&qn, &kn, &vn, BANDWIDTH, &KERNELS, W1, W2, true);
+        let exact_last = &exact.data()[(n - 1) * D..n * D];
+
+        // Strategy 1: recompute the whole prefix for one token.
+        let m_re = measure(&format!("recompute_n{n}"), 1, iters, || {
+            let out = fmm_attention(&qn, &kn, &vn, BANDWIDTH, &KERNELS, W1, W2, true);
+            assert_eq!(out.shape()[0], n);
+            Ok(())
+        })?;
+
+        // Strategy 2: recompute only the last WINDOW tokens.
+        let w = WINDOW.min(n);
+        let (qw, kw, vw) = (last_rows(&q, n, w), last_rows(&k, n, w), last_rows(&v, n, w));
+        let mut win_last = vec![0.0f32; D];
+        let m_win = measure(&format!("windowed_n{n}"), 1, iters, || {
+            let out = fmm_attention(&qw, &kw, &vw, BANDWIDTH, &KERNELS, W1, W2, true);
+            win_last.copy_from_slice(&out.data()[(w - 1) * D..w * D]);
+            Ok(())
+        })?;
+
+        // Strategy 3: incremental step from O(1) state, steady state at
+        // position n. Warm the state, then time single steps (the state
+        // keeps advancing — every measured step is a real decode step).
+        let mut st = FmmDecodeState::new(D, D, BANDWIDTH, &KERNELS, W1, W2);
+        for t in 0..n {
+            st.step(q.row(t), k.row(t), v.row(t));
+        }
+        let mut inc_out = vec![0.0f32; D];
+        let mut cursor = 0usize;
+        let m_inc = measure(&format!("incremental_n{n}"), 16, 512.max(iters), || {
+            // Cycle fresh rows so the timing never degenerates.
+            st.step_into(q.row(cursor), k.row(cursor), v.row(cursor), &mut inc_out);
+            cursor = (cursor + 1) % top;
+            Ok(())
+        })?;
+
+        // Exactness: incremental decode of the prefix vs the batch rows.
+        let inc = decode_sequence(&qn, &kn, &vn, BANDWIDTH, &KERNELS, W1, W2);
+        let inc_err = inc.max_abs_diff(&exact);
+        let win_err = max_row_diff(&win_last, exact_last);
+
+        tbl.row(vec![
+            n.to_string(),
+            fmt_time(m_re.median_s),
+            fmt_time(m_win.median_s),
+            fmt_time(m_inc.median_s),
+            format!("{inc_err:.1e}"),
+            format!("{win_err:.1e}"),
+        ]);
+        for (strat, m) in [("recompute", &m_re), ("windowed", &m_win), ("incremental", &m_inc)]
+        {
+            csv.row(vec![strat.to_string(), n.to_string(), format!("{}", m.median_s)]);
+        }
+    }
+
+    tbl.print();
+    let dir = report_dir();
+    csv.save_csv(&dir.join("serve_decode.csv"))?;
+    println!("raw series -> {:?}", dir.join("serve_decode.csv"));
+
+    // Growth summary: per-token cost ratio from the smallest to the
+    // largest N. Recompute should scale ~(top/bottom); incremental ~1.
+    println!("\nPer-token cost growth from N={} to N={top}:", ns[0]);
+    for strat in ["recompute", "windowed", "incremental"] {
+        let series: Vec<f64> = csv
+            .rows
+            .iter()
+            .filter(|r| r[0] == strat)
+            .map(|r| r[2].parse::<f64>().unwrap())
+            .collect();
+        if series.len() >= 2 {
+            let ratio = series[series.len() - 1] / series[0].max(1e-12);
+            println!("  {strat:<12} {ratio:>8.1}x");
+        }
+    }
+
+    // Model-level: sessions streaming through the micro-batch scheduler.
+    let cfg = DecodeConfig::default();
+    let vocab = cfg.vocab;
+    let model = HostDecoder::new(cfg)?;
+    let server = DecodeServer::start(model, DecodeServerConfig::default());
+    let client = server.client();
+    let sessions = 4usize;
+    let tokens = if quick { 64 } else { 256 };
+    let t0 = std::time::Instant::now();
+    run_greedy_sessions(&client, sessions, tokens, vocab)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!(
+        "\nhost decoder: {} sessions x {tokens} tokens -> {:.0} tok/s \
+         ({} micro-batches, mean {:.1} steps/batch)",
+        sessions,
+        (sessions * tokens) as f64 / wall,
+        stats.micro_batches,
+        stats.mean_micro_batch(),
+    );
+    Ok(())
+}

@@ -68,7 +68,7 @@ fn main() -> Result<()> {
             lats.extend(h.join().expect("client thread"));
         }
         let wall = t0.elapsed().as_secs_f64();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lats.sort_by(f64::total_cmp);
         let stats = server.shutdown();
         tbl.row(vec![
             clients.to_string(),

@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Repo CI gate. Tier-1 (must pass) first, lints after.
+#
+#   ./ci.sh            # tier-1 (hard) + fmt/clippy (advisory: warn only)
+#   ./ci.sh --tier1    # build + test only (the hard gate)
+#   ./ci.sh --strict   # tier-1 + fmt/clippy as hard failures
+#
+# Lints are advisory by default because the seed code predates the
+# fmt/clippy gate (see ROADMAP "Open items": lint pass pending); the
+# tier-1 gate is always fatal. Runs entirely offline: both external
+# deps are vendored under rust/vendor/ (see Cargo.toml).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "--tier1" ]]; then
+    echo "tier-1 gate passed"
+    exit 0
+fi
+
+lint_failed=0
+echo "== lint: cargo fmt --check =="
+cargo fmt --check || lint_failed=1
+
+echo "== lint: cargo clippy --all-targets -- -D warnings =="
+cargo clippy --all-targets -- -D warnings || lint_failed=1
+
+if [[ "$lint_failed" == 1 ]]; then
+    if [[ "${1:-}" == "--strict" ]]; then
+        echo "CI gate FAILED (lints, strict mode)"
+        exit 1
+    fi
+    echo "CI gate passed (tier-1); ADVISORY lint failures above — run with --strict to enforce"
+    exit 0
+fi
+
+echo "CI gate passed"

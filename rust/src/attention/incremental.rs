@@ -1,0 +1,332 @@
+//! Incremental FMM attention — O(1) work and memory per decoded token.
+//!
+//! The paper's decomposition (Sec. 3) is exactly what makes
+//! autoregressive serving cheap: row `t` of the causal blend
+//! `w1·D + w2·L` needs only
+//!
+//! * **near field** — the last `bandwidth` keys/values (a ring buffer),
+//! * **far field** — the running linear-attention moments
+//!   `S = φ(K)ᵀV` (d×dv) and `z = Σφ(k)` (d) per feature map.
+//!
+//! [`FmmDecodeState`] carries that state per head and exposes
+//! [`FmmDecodeState::step`], whose output reproduces row `t` of the
+//! batch causal [`fmm_attention`](super::fmm_attention) — same operation
+//! order, so the results agree to float round-off (pinned < 1e-4 by the
+//! property tests, typically bit-exact). State size is
+//! `(bandwidth+1)·(d+dv) + r·d·(dv+1)` floats — independent of how many
+//! tokens have been decoded, which is the whole point.
+
+use super::{guard_den, FeatureMap};
+use crate::tensor::Tensor;
+
+/// Per-head decode state: near-field ring buffer + far-field moments.
+#[derive(Debug, Clone)]
+pub struct FmmDecodeState {
+    d: usize,
+    dv: usize,
+    bandwidth: usize,
+    kernels: Vec<FeatureMap>,
+    w1: f32,
+    w2: f32,
+    /// Last `min(pos+1, bandwidth+1)` keys, chronological from
+    /// `ring_start`, allocated lazily up to `bandwidth + 1` rows.
+    ring_k: Vec<f32>,
+    ring_v: Vec<f32>,
+    ring_start: usize,
+    ring_len: usize,
+    /// Far-field moments, one `(S, z)` pair per feature map:
+    /// `s[ki]` is d×dv row-major, `z[ki]` is d.
+    s: Vec<f32>,
+    z: Vec<f32>,
+    /// Tokens consumed so far.
+    pos: usize,
+    // Scratch buffers so `step` allocates nothing on the hot path.
+    scores: Vec<f32>,
+    phi_q: Vec<f32>,
+    phi_k: Vec<f32>,
+    near: Vec<f32>,
+    far: Vec<f32>,
+}
+
+impl FmmDecodeState {
+    /// `d`/`dv` are the per-head key and value widths; `bandwidth`,
+    /// `kernels`, `w1`, `w2` mirror the batch `fmm_attention` arguments.
+    pub fn new(
+        d: usize,
+        dv: usize,
+        bandwidth: usize,
+        kernels: &[FeatureMap],
+        w1: f32,
+        w2: f32,
+    ) -> FmmDecodeState {
+        assert!(d > 0 && dv > 0, "degenerate head dims {d}x{dv}");
+        let r = kernels.len();
+        FmmDecodeState {
+            d,
+            dv,
+            bandwidth,
+            kernels: kernels.to_vec(),
+            w1,
+            w2,
+            ring_k: Vec::new(),
+            ring_v: Vec::new(),
+            ring_start: 0,
+            ring_len: 0,
+            s: vec![0.0; r * d * dv],
+            z: vec![0.0; r * d],
+            pos: 0,
+            scores: Vec::with_capacity(bandwidth.saturating_add(1).min(4096)),
+            phi_q: vec![0.0; d],
+            phi_k: vec![0.0; d],
+            near: vec![0.0; dv],
+            far: vec![0.0; dv],
+        }
+    }
+
+    /// Number of tokens consumed so far (the next step produces row
+    /// `position()` of the batch output).
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    pub fn bandwidth(&self) -> usize {
+        self.bandwidth
+    }
+
+    pub fn value_dim(&self) -> usize {
+        self.dv
+    }
+
+    /// Forget everything; the state is as freshly constructed.
+    pub fn reset(&mut self) {
+        self.ring_k.clear();
+        self.ring_v.clear();
+        self.ring_start = 0;
+        self.ring_len = 0;
+        self.s.iter_mut().for_each(|x| *x = 0.0);
+        self.z.iter_mut().for_each(|x| *x = 0.0);
+        self.pos = 0;
+    }
+
+    /// Consume one token's `(q_t, k_t, v_t)` and return the attention
+    /// output row — row `pos` of the batch causal `fmm_attention` over
+    /// the full prefix.
+    pub fn step(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.dv];
+        self.step_into(q_t, k_t, v_t, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`step`](Self::step).
+    pub fn step_into(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32], out: &mut [f32]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(q_t.len(), d, "q_t width");
+        assert_eq!(k_t.len(), d, "k_t width");
+        assert_eq!(v_t.len(), dv, "v_t width");
+        assert_eq!(out.len(), dv, "out width");
+
+        self.push_ring(k_t, v_t);
+        self.near_field(q_t);
+        self.far_field(q_t, k_t, v_t);
+        for (o, (n, f)) in out.iter_mut().zip(self.near.iter().zip(&self.far)) {
+            *o = n * self.w1 + f * self.w2;
+        }
+        self.pos += 1;
+    }
+
+    /// Append `(k_t, v_t)`, evicting the oldest row once the ring holds
+    /// `bandwidth + 1` entries (the causal band for the current row).
+    fn push_ring(&mut self, k_t: &[f32], v_t: &[f32]) {
+        let cap = self.bandwidth.saturating_add(1);
+        if self.ring_len < cap {
+            self.ring_k.extend_from_slice(k_t);
+            self.ring_v.extend_from_slice(v_t);
+            self.ring_len += 1;
+        } else {
+            let at = self.ring_start;
+            self.ring_k[at * self.d..(at + 1) * self.d].copy_from_slice(k_t);
+            self.ring_v[at * self.dv..(at + 1) * self.dv].copy_from_slice(v_t);
+            self.ring_start = (self.ring_start + 1) % cap;
+        }
+    }
+
+    /// Banded softmax over the ring, oldest to newest — the same score /
+    /// max / exp / normalize sequence as the batch `banded_attention`
+    /// row loop, so results agree to round-off.
+    fn near_field(&mut self, q_t: &[f32]) {
+        let (d, dv) = (self.d, self.dv);
+        let slots = self.ring_k.len() / d;
+        let scale = 1.0 / (d as f32).sqrt();
+        self.scores.clear();
+        let mut mx = f32::NEG_INFINITY;
+        for off in 0..self.ring_len {
+            let at = (self.ring_start + off) % slots;
+            let krow = &self.ring_k[at * d..(at + 1) * d];
+            let s: f32 = q_t.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+            self.scores.push(s);
+            mx = mx.max(s);
+        }
+        let mut zsum = 0.0;
+        for s in &mut self.scores {
+            *s = (*s - mx).exp();
+            zsum += *s;
+        }
+        self.near.iter_mut().for_each(|x| *x = 0.0);
+        for off in 0..self.ring_len {
+            let at = (self.ring_start + off) % slots;
+            let w = self.scores[off] / zsum;
+            let vrow = &self.ring_v[at * dv..(at + 1) * dv];
+            for (o, x) in self.near.iter_mut().zip(vrow) {
+                *o += w * x;
+            }
+        }
+    }
+
+    /// Update the running `(S, z)` moments with `(k_t, v_t)` and read
+    /// out the linear-attention row — the same per-kernel accumulation
+    /// order as the causal branch of the batch `linear_attention`.
+    fn far_field(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32]) {
+        let (d, dv) = (self.d, self.dv);
+        self.far.iter_mut().for_each(|x| *x = 0.0);
+        for (ki, fm) in self.kernels.iter().enumerate() {
+            for (p, x) in self.phi_k.iter_mut().zip(k_t) {
+                *p = fm.apply(*x);
+            }
+            for (p, x) in self.phi_q.iter_mut().zip(q_t) {
+                *p = fm.apply(*x);
+            }
+            let zk = &mut self.z[ki * d..(ki + 1) * d];
+            for (zz, a) in zk.iter_mut().zip(&self.phi_k) {
+                *zz += a;
+            }
+            let sk = &mut self.s[ki * d * dv..(ki + 1) * d * dv];
+            for (di, a) in self.phi_k.iter().enumerate() {
+                let srow = &mut sk[di * dv..(di + 1) * dv];
+                for (ss, x) in srow.iter_mut().zip(v_t) {
+                    *ss += a * x;
+                }
+            }
+            let den =
+                guard_den(self.phi_q.iter().zip(&*zk).map(|(a, b)| a * b).sum::<f32>());
+            for (di, a) in self.phi_q.iter().enumerate() {
+                let srow = &sk[di * dv..(di + 1) * dv];
+                for (o, ss) in self.far.iter_mut().zip(srow) {
+                    *o += a * ss / den;
+                }
+            }
+        }
+    }
+
+    /// Approximate bytes held by this state — constant in sequence
+    /// length (serving capacity planning).
+    pub fn state_bytes(&self) -> usize {
+        let cap = self.bandwidth.saturating_add(1).min(self.pos.max(1));
+        (cap * (self.d + self.dv) + self.kernels.len() * self.d * (self.dv + 1))
+            * std::mem::size_of::<f32>()
+    }
+}
+
+/// Test/bench helper: decode a whole single-head sequence step by step.
+/// Output equals causal `fmm_attention(q, k, v, ...)` row for row.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_sequence(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bandwidth: usize,
+    kernels: &[FeatureMap],
+    w1: f32,
+    w2: f32,
+) -> Tensor {
+    let n = q.shape()[0];
+    let dv = v.shape()[1];
+    let mut state = FmmDecodeState::new(q.shape()[1], dv, bandwidth, kernels, w1, w2);
+    let mut out = Tensor::zeros(&[n, dv]);
+    for t in 0..n {
+        let row = state.step(q.row(t), k.row(t), v.row(t));
+        out.data_mut()[t * dv..(t + 1) * dv].copy_from_slice(&row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fmm_attention;
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_qkv(n: usize, d: usize, dv: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Pcg64::seeded(seed);
+        (
+            Tensor::randn(&[n, d], &mut rng),
+            Tensor::randn(&[n, d], &mut rng),
+            Tensor::randn(&[n, dv], &mut rng),
+        )
+    }
+
+    #[test]
+    fn step_matches_batch_small() {
+        let (q, k, v) = rand_qkv(17, 6, 4, 0);
+        let kernels = [FeatureMap::Elu];
+        let batch = fmm_attention(&q, &k, &v, 3, &kernels, 0.5, 0.5, true);
+        let inc = decode_sequence(&q, &k, &v, 3, &kernels, 0.5, 0.5);
+        assert!(
+            inc.max_abs_diff(&batch) < 1e-5,
+            "diff {}",
+            inc.max_abs_diff(&batch)
+        );
+    }
+
+    #[test]
+    fn ring_wraps_correctly_with_tiny_bandwidth() {
+        let (q, k, v) = rand_qkv(32, 4, 4, 1);
+        for bw in [0usize, 1, 2] {
+            let kernels = [FeatureMap::EluNeg];
+            let batch = fmm_attention(&q, &k, &v, bw, &kernels, 1.0, 0.3, true);
+            let inc = decode_sequence(&q, &k, &v, bw, &kernels, 1.0, 0.3);
+            assert!(inc.max_abs_diff(&batch) < 1e-5, "bw {bw}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_at_least_n_matches_full_band() {
+        let (q, k, v) = rand_qkv(12, 4, 5, 2);
+        let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+        let batch = fmm_attention(&q, &k, &v, 12, &kernels, 0.7, 0.9, true);
+        let inc = decode_sequence(&q, &k, &v, 12, &kernels, 0.7, 0.9);
+        assert!(inc.max_abs_diff(&batch) < 1e-5);
+    }
+
+    #[test]
+    fn state_is_constant_size_and_resettable() {
+        let (q, k, v) = rand_qkv(64, 4, 4, 3);
+        let mut st = FmmDecodeState::new(4, 4, 5, &[FeatureMap::Elu], 0.5, 0.5);
+        let mut sizes = vec![];
+        for t in 0..64 {
+            st.step(q.row(t), k.row(t), v.row(t));
+            sizes.push(st.state_bytes());
+        }
+        assert_eq!(st.position(), 64);
+        // Size plateaus once the ring fills: O(1) in decoded length.
+        assert_eq!(sizes[10], sizes[63]);
+
+        // Reset replays the exact same outputs.
+        let first = st.clone();
+        st.reset();
+        assert_eq!(st.position(), 0);
+        let mut st2 = FmmDecodeState::new(4, 4, 5, &[FeatureMap::Elu], 0.5, 0.5);
+        for t in 0..64 {
+            let a = st.step(q.row(t), k.row(t), v.row(t));
+            let b = st2.step(q.row(t), k.row(t), v.row(t));
+            assert_eq!(a, b);
+        }
+        assert_eq!(st.position(), first.position());
+    }
+
+    #[test]
+    #[should_panic(expected = "q_t width")]
+    fn mismatched_widths_panic() {
+        let mut st = FmmDecodeState::new(4, 4, 2, &[FeatureMap::Elu], 1.0, 1.0);
+        st.step(&[0.0; 3], &[0.0; 4], &[0.0; 4]);
+    }
+}

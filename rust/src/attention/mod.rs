@@ -8,6 +8,14 @@
 //! serve/bench comparisons and as the generator for property tests.
 //!
 //! All functions are single-head: `q, k (n×d)`, `v (n×dv)`, row-major.
+//!
+//! [`incremental`] carries the same math into autoregressive serving:
+//! [`FmmDecodeState`] produces row `t` of the batch causal
+//! [`fmm_attention`] one token at a time at O(1) cost per token.
+
+pub mod incremental;
+
+pub use incremental::FmmDecodeState;
 
 use crate::tensor::Tensor;
 
@@ -87,8 +95,12 @@ pub fn banded_attention(
     let n = q.shape()[0];
     let d = q.shape()[1];
     let dv = v.shape()[1];
-    let scale = 1.0 / (d as f32).sqrt();
     let mut out = Tensor::zeros(&[n, dv]);
+    if n == 0 {
+        // Guard the `n - 1` band clamp below against underflow.
+        return out;
+    }
+    let scale = 1.0 / (d as f32).sqrt();
     let mut scores = Vec::with_capacity(2 * bandwidth + 1);
     for i in 0..n {
         let lo = i.saturating_sub(bandwidth);
@@ -288,6 +300,27 @@ mod tests {
         let blend = fmm_attention(&q, &k, &v, 3, &[FeatureMap::Elu], 0.25, 0.75, false);
         let want = near.scale(0.25).add(&far.scale(0.75)).unwrap();
         assert!(blend.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        // Regression: the band clamp used `n - 1` and underflowed on
+        // zero-length inputs; all variants must return an empty [0, dv]
+        // tensor instead of panicking.
+        let q = Tensor::zeros(&[0, 4]);
+        let k = Tensor::zeros(&[0, 4]);
+        let v = Tensor::zeros(&[0, 3]);
+        for causal in [false, true] {
+            for bw in [0usize, 1, 8] {
+                let near = banded_attention(&q, &k, &v, bw, causal);
+                assert_eq!(near.shape(), &[0, 3]);
+                let blend =
+                    fmm_attention(&q, &k, &v, bw, &[FeatureMap::Elu], 0.5, 0.5, causal);
+                assert_eq!(blend.shape(), &[0, 3]);
+            }
+            let far = linear_attention(&q, &k, &v, &[FeatureMap::Tanh], causal);
+            assert_eq!(far.shape(), &[0, 3]);
+        }
     }
 
     #[test]

@@ -54,7 +54,9 @@ pub fn measure<F: FnMut() -> Result<()>>(
         samples.push(t0.elapsed().as_secs_f64());
     }
     let (_, peak_after) = rss_bytes();
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (e.g. a zero-duration division upstream)
+    // must not panic the sorter mid-report.
+    samples.sort_by(f64::total_cmp);
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     Ok(Measurement {
         name: name.to_string(),

@@ -24,10 +24,12 @@
 //! | [`tensor`] | host `f32`/`i32` ndarrays |
 //! | [`linalg`] | Jacobi SVD, ε-rank (Fig. 3 study) |
 //! | [`attention`] | pure-Rust reference attentions (baseline comparator) |
+//! | [`attention::incremental`] | O(1)-per-token decode state (ring buffer + far-field moments) |
 //! | [`data`] | synthetic task + corpus generators (copy, 5 LRA proxies, LM) |
 //! | [`runtime`] | PJRT client, artifact/manifest/checkpoint I/O, param store |
 //! | [`train`] | training/eval loops, metrics, checkpoints |
 //! | [`serve`] | request router + dynamic batcher (thread-based) |
+//! | [`serve::decode`] | session-based streaming decode server (incremental engine) |
 //! | [`analysis`] | attention-map dumps, rank histograms, heatmaps |
 //! | [`bench`] | measurement harness (offline substitute for `criterion`) |
 //! | [`coordinator`] | experiment registry: one entry per paper table/figure |

@@ -76,7 +76,7 @@ pub fn singular_values(a: &Tensor) -> Vec<f32> {
                 .sqrt() as f32
         })
         .collect();
-    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv.sort_by(|a, b| b.total_cmp(a));
     sv
 }
 

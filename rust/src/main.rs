@@ -6,14 +6,17 @@
 //! fmmformer train --artifact lm_fmm1_band5 --steps 300 [--eval-batches 8]
 //! fmmformer eval  --artifact lm_fmm1_band5 --checkpoint runs/...ckpt.bin
 //! fmmformer serve-demo [--requests 64]     # router + batcher demo
+//! fmmformer decode-demo [--sessions 4 --tokens 128]  # O(1)/token streaming
 //! ```
 
 use anyhow::{anyhow, bail, Result};
 
+use fmmformer::attention::FeatureMap;
 use fmmformer::cli::Args;
 use fmmformer::coordinator::{Coordinator, EXPERIMENTS};
 use fmmformer::data::Split;
 use fmmformer::runtime::{checkpoint, load_init_leaves, Runtime};
+use fmmformer::serve::decode::{DecodeConfig, DecodeServer, DecodeServerConfig, HostDecoder};
 use fmmformer::serve::{ServeConfig, Server};
 use fmmformer::train::evaluate_params;
 use fmmformer::{artifacts_dir, bench};
@@ -36,14 +39,22 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "serve-demo" => cmd_serve_demo(&args),
+        "decode-demo" => cmd_decode_demo(&args),
         "hlo-info" => cmd_hlo_info(&args),
         _ => {
             println!("{ABOUT}\n");
-            println!("subcommands: experiments | artifacts | train | eval | serve-demo | hlo-info");
+            println!(
+                "subcommands: experiments | artifacts | train | eval | serve-demo | \
+                 decode-demo | hlo-info"
+            );
             println!("common flags: --artifacts DIR  --seed N");
             println!("train: --artifact NAME --steps N [--eval-batches K] [--log-every K]");
             println!("eval:  --artifact NAME --checkpoint FILE [--batches K] [--split valid|test]");
             println!("serve-demo: [--requests N] [--max-wait-ms T]");
+            println!(
+                "decode-demo: [--sessions N] [--tokens N] [--layers N] [--heads N] \
+                 [--d-model N] [--bandwidth K] [--kernels elu,elu_neg,tanh] [--max-wait-ms T]"
+            );
             Ok(())
         }
     }
@@ -177,7 +188,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         latencies.push(resp.latency.as_secs_f64());
     }
     let wall = t0.elapsed().as_secs_f64();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies.sort_by(f64::total_cmp);
     drop(client);
     let stats = server.shutdown();
     println!(
@@ -189,6 +200,74 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         stats.batches,
         stats.mean_occupancy(),
         stats.mean_padding_waste(),
+    );
+    Ok(())
+}
+
+/// Streaming decode demo: host-side incremental FMM decoder, no
+/// artifacts needed. N concurrent sessions greedy-decode through the
+/// micro-batching scheduler; reports tokens/s, latency percentiles and
+/// exactness vs the O(N²) batch forward.
+fn cmd_decode_demo(args: &Args) -> Result<()> {
+    let kernels: Vec<FeatureMap> = args
+        .list_or("kernels", &["elu"])
+        .iter()
+        .map(|n| FeatureMap::by_name(n).ok_or_else(|| anyhow!("unknown feature map {n:?}")))
+        .collect::<Result<_>>()?;
+    let cfg = DecodeConfig {
+        layers: args.usize_or("layers", 2)?,
+        heads: args.usize_or("heads", 2)?,
+        d_model: args.usize_or("d-model", 32)?,
+        vocab: args.usize_or("vocab", 64)?,
+        bandwidth: args.usize_or("bandwidth", 8)?,
+        kernels,
+        w1: args.f64_or("w1", 0.6)? as f32,
+        w2: args.f64_or("w2", 0.9)? as f32,
+        seed: args.u64_or("seed", 0)?,
+    };
+    let sessions = args.usize_or("sessions", 4)?;
+    let tokens = args.usize_or("tokens", 128)?;
+    let vocab = cfg.vocab;
+
+    // Exactness spot check: one stream vs the batch forward.
+    let model = HostDecoder::new(cfg.clone())?;
+    let probe: Vec<i32> = (0..24).map(|t| (t * 7 % vocab) as i32).collect();
+    let batch = model.forward_batch(&probe)?;
+    let server = DecodeServer::start(
+        model,
+        DecodeServerConfig {
+            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
+            max_steps: args.usize_or("max-steps", 64)?,
+        },
+    );
+    let client = server.client();
+    let max_diff =
+        fmmformer::serve::decode::probe_exactness(&client, &batch, &probe)?;
+    println!("incremental vs batch logits over {} tokens: max |diff| {max_diff:.2e}", probe.len());
+
+    // Closed-loop greedy decoding across concurrent sessions.
+    let t0 = std::time::Instant::now();
+    let mut lats = fmmformer::serve::decode::run_greedy_sessions(
+        &client, sessions, tokens, vocab,
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(f64::total_cmp);
+    let stats = server.shutdown();
+    if lats.is_empty() {
+        println!("no tokens decoded (sessions={sessions} tokens={tokens})");
+        return Ok(());
+    }
+    println!(
+        "{} sessions x {} tokens in {wall:.2}s -> {:.0} tok/s | p50 {} p95 {} | \
+         {} micro-batches, mean {:.1} steps/batch, {} failed steps",
+        sessions,
+        tokens,
+        lats.len() as f64 / wall,
+        bench::fmt_time(lats[lats.len() / 2]),
+        bench::fmt_time(lats[lats.len() * 95 / 100]),
+        stats.micro_batches,
+        stats.mean_micro_batch(),
+        stats.failed_steps,
     );
     Ok(())
 }

@@ -1,0 +1,658 @@
+//! Session-based incremental decode engine — O(1) work per token.
+//!
+//! The batching router in [`super`] recomputes a full fixed window per
+//! request. For autoregressive generation that is O(N) redundant work
+//! per token; the FMM decomposition makes it unnecessary (paper Sec. 3):
+//! the causal far field is a running-moment recurrence and the near
+//! field only ever needs the last `bandwidth` keys/values. This module
+//! serves exactly that:
+//!
+//! ```text
+//!  streams ──open_stream()──▶ session table (per-layer, per-head
+//!          ──step(token)───▶  FmmDecodeState) ──▶ scheduler thread:
+//!                               drain ≤ max_steps queued steps from all
+//!                               sessions (micro-batch), run each through
+//!                               the host decoder, fan logits out
+//! ```
+//!
+//! * [`HostDecoder`] — a multi-layer multi-head FMM transformer decoder
+//!   on host tensors. `forward_batch` is the O(N²)-per-sequence
+//!   reference; [`DecoderSession::step`] reproduces its rows one token
+//!   at a time from O(1) state (pinned row-for-row by
+//!   `tests/decode_engine.rs`).
+//! * [`DecodeServer`] / [`DecodeClient`] / [`DecodeStream`] — the
+//!   serving wrapper: sessions stream tokens, the scheduler micro-batches
+//!   concurrent sessions' steps per wake-up, and shutdown uses the same
+//!   explicit sentinel pattern as [`super::Server`] (no deadlock with
+//!   live clients; late submits error cleanly).
+//!
+//! Everything here is pure host Rust — no PJRT — so the serving
+//! architecture is exercised end-to-end by `cargo test` even where the
+//! XLA backend is stubbed out.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::attention::{fmm_attention, FeatureMap, FmmDecodeState};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// RMS-norm denominator guard (host model only).
+const RMS_EPS: f32 = 1e-6;
+
+/// Architecture + attention hyperparameters of the host decoder.
+#[derive(Debug, Clone)]
+pub struct DecodeConfig {
+    pub layers: usize,
+    pub heads: usize,
+    pub d_model: usize,
+    pub vocab: usize,
+    /// Near-field band per head.
+    pub bandwidth: usize,
+    /// Far-field feature maps (paper Sec. 3.2.1).
+    pub kernels: Vec<FeatureMap>,
+    /// Blend weights `w1·near + w2·far` (paper eq. (11)).
+    pub w1: f32,
+    pub w2: f32,
+    /// Weight-init seed (the decoder is a deterministic function of it).
+    pub seed: u64,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        DecodeConfig {
+            layers: 2,
+            heads: 2,
+            d_model: 32,
+            vocab: 64,
+            bandwidth: 8,
+            kernels: vec![FeatureMap::Elu],
+            w1: 0.6,
+            w2: 0.9,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-layer weights: attention projections + a small gated-free MLP.
+struct LayerWeights {
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    /// MLP: d_model → 2·d_model → d_model with ReLU.
+    w_up: Tensor,
+    w_down: Tensor,
+}
+
+/// Host-side FMM transformer decoder (reference weights, seeded).
+///
+/// Every non-attention op is row-local (RMS-norm, projections, MLP,
+/// residuals), so computing one row at a time — the incremental path —
+/// performs bit-identical float work to the batch path; only attention
+/// needs the [`FmmDecodeState`] recurrence to stay O(1).
+pub struct HostDecoder {
+    cfg: DecodeConfig,
+    embed: Tensor,
+    layers: Vec<LayerWeights>,
+    w_out: Tensor,
+}
+
+impl HostDecoder {
+    pub fn new(cfg: DecodeConfig) -> Result<HostDecoder> {
+        if cfg.layers == 0 || cfg.heads == 0 || cfg.vocab == 0 {
+            bail!("degenerate decoder config {cfg:?}");
+        }
+        if cfg.d_model == 0 || cfg.d_model % cfg.heads != 0 {
+            bail!("d_model {} must be a positive multiple of heads {}", cfg.d_model, cfg.heads);
+        }
+        let d = cfg.d_model;
+        let mut rng = Pcg64::seeded(cfg.seed);
+        let proj = |rng: &mut Pcg64, rows: usize, cols: usize| {
+            Tensor::randn(&[rows, cols], rng).scale(1.0 / (rows as f32).sqrt())
+        };
+        let embed = Tensor::randn(&[cfg.vocab, d], &mut rng);
+        let layers = (0..cfg.layers)
+            .map(|_| LayerWeights {
+                wq: proj(&mut rng, d, d),
+                wk: proj(&mut rng, d, d),
+                wv: proj(&mut rng, d, d),
+                wo: proj(&mut rng, d, d),
+                w_up: proj(&mut rng, d, 2 * d),
+                w_down: proj(&mut rng, 2 * d, d),
+            })
+            .collect();
+        let w_out = proj(&mut rng, d, cfg.vocab);
+        Ok(HostDecoder { cfg, embed, layers, w_out })
+    }
+
+    pub fn config(&self) -> &DecodeConfig {
+        &self.cfg
+    }
+
+    fn embed_row(&self, token: i32) -> Result<Tensor> {
+        let t = usize::try_from(token).ok().filter(|&t| t < self.cfg.vocab).ok_or_else(
+            || anyhow!("token {token} outside vocab 0..{}", self.cfg.vocab),
+        )?;
+        Tensor::new(&[1, self.cfg.d_model], self.embed.row(t).to_vec())
+    }
+
+    /// One transformer block over `m` rows, with attention supplied by
+    /// the caller (batch `fmm_attention` or incremental state steps).
+    fn block<F>(&self, l: usize, x: &Tensor, attend: F) -> Result<Tensor>
+    where
+        F: FnOnce(&Tensor, &Tensor, &Tensor) -> Result<Tensor>,
+    {
+        let lw = &self.layers[l];
+        let h = rms_norm(x);
+        let q = h.matmul(&lw.wq)?;
+        let k = h.matmul(&lw.wk)?;
+        let v = h.matmul(&lw.wv)?;
+        let a = attend(&q, &k, &v)?;
+        let x = x.add(&a.matmul(&lw.wo)?)?;
+        let m = rms_norm(&x);
+        let f = relu(m.matmul(&lw.w_up)?).matmul(&lw.w_down)?;
+        x.add(&f)
+    }
+
+    /// Batch causal forward: `n × vocab` logits for a whole sequence.
+    /// The O(N²) reference the incremental path is pinned against.
+    pub fn forward_batch(&self, tokens: &[i32]) -> Result<Tensor> {
+        let n = tokens.len();
+        let d = self.cfg.d_model;
+        let dh = d / self.cfg.heads;
+        let mut x = Tensor::zeros(&[n, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            let row = self.embed_row(t)?;
+            x.data_mut()[i * d..(i + 1) * d].copy_from_slice(row.data());
+        }
+        for l in 0..self.cfg.layers {
+            x = self.block(l, &x, |q, k, v| {
+                let mut a = Tensor::zeros(&[n, d]);
+                for head in 0..self.cfg.heads {
+                    let qh = slice_cols(q, head * dh, dh);
+                    let kh = slice_cols(k, head * dh, dh);
+                    let vh = slice_cols(v, head * dh, dh);
+                    let oh = fmm_attention(
+                        &qh,
+                        &kh,
+                        &vh,
+                        self.cfg.bandwidth,
+                        &self.cfg.kernels,
+                        self.cfg.w1,
+                        self.cfg.w2,
+                        true,
+                    );
+                    write_cols(&mut a, head * dh, &oh);
+                }
+                Ok(a)
+            })?;
+        }
+        rms_norm(&x).matmul(&self.w_out)
+    }
+}
+
+/// Per-stream decode state: one [`FmmDecodeState`] per layer per head.
+/// Holds `layers · heads · O(bandwidth·dh + r·dh²)` floats — constant in
+/// the number of tokens decoded.
+pub struct DecoderSession {
+    model: Arc<HostDecoder>,
+    states: Vec<Vec<FmmDecodeState>>,
+    pos: usize,
+}
+
+impl DecoderSession {
+    pub fn new(model: Arc<HostDecoder>) -> DecoderSession {
+        let cfg = model.config();
+        let dh = cfg.d_model / cfg.heads;
+        let states = (0..cfg.layers)
+            .map(|_| {
+                (0..cfg.heads)
+                    .map(|_| {
+                        FmmDecodeState::new(dh, dh, cfg.bandwidth, &cfg.kernels, cfg.w1, cfg.w2)
+                    })
+                    .collect()
+            })
+            .collect();
+        DecoderSession { model, states, pos: 0 }
+    }
+
+    /// Tokens consumed so far.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Consume one token, return the logits row — row `position()` of
+    /// `forward_batch` over the full prefix, at O(1) cost.
+    pub fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+        let cfg = self.model.config();
+        let d = cfg.d_model;
+        let dh = d / cfg.heads;
+        let mut x = self.model.embed_row(token)?;
+        for l in 0..cfg.layers {
+            let states = &mut self.states[l];
+            x = self.model.block(l, &x, |q, k, v| {
+                // step_into writes each head's output slice in place:
+                // no per-head allocation on the serving hot path.
+                let mut a = Tensor::zeros(&[1, d]);
+                let out = a.data_mut();
+                for (head, st) in states.iter_mut().enumerate() {
+                    let lo = head * dh;
+                    st.step_into(
+                        &q.data()[lo..lo + dh],
+                        &k.data()[lo..lo + dh],
+                        &v.data()[lo..lo + dh],
+                        &mut out[lo..lo + dh],
+                    );
+                }
+                Ok(a)
+            })?;
+        }
+        self.pos += 1;
+        Ok(rms_norm(&x).matmul(&self.model.w_out)?.into_data())
+    }
+}
+
+/// Exactness probe shared by the demos: stream `tokens` through a
+/// fresh session and return the max |logit diff| against
+/// `batch_logits` (the `forward_batch` output for the same tokens,
+/// computed by the caller before the model moved into the server).
+pub fn probe_exactness(
+    client: &DecodeClient,
+    batch_logits: &Tensor,
+    tokens: &[i32],
+) -> Result<f32> {
+    let stream = client.open_stream()?;
+    let mut max_diff = 0.0f32;
+    for (t, &tok) in tokens.iter().enumerate() {
+        let out = stream.step(tok)?;
+        for (a, b) in out.logits.iter().zip(batch_logits.row(t)) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+    }
+    Ok(max_diff)
+}
+
+/// Drive `sessions` concurrent greedy-decoding streams of `tokens`
+/// tokens each through `client`, returning every token's latency in
+/// seconds (demo/bench harness shared by the CLI and the example).
+pub fn run_greedy_sessions(
+    client: &DecodeClient,
+    sessions: usize,
+    tokens: usize,
+    vocab: usize,
+) -> Result<Vec<f64>> {
+    let handles: Vec<_> = (0..sessions)
+        .map(|s| {
+            let c = client.clone();
+            std::thread::spawn(move || -> Result<Vec<f64>> {
+                let stream = c.open_stream()?;
+                let mut lats = Vec::with_capacity(tokens);
+                let mut tok = (s % vocab.max(1)) as i32;
+                for _ in 0..tokens {
+                    let out = stream.step(tok)?;
+                    lats.push(out.latency.as_secs_f64());
+                    let argmax = out
+                        .logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    tok = argmax as i32;
+                }
+                Ok(lats)
+            })
+        })
+        .collect();
+    let mut lats = Vec::with_capacity(sessions * tokens);
+    for h in handles {
+        lats.extend(h.join().map_err(|_| anyhow!("session thread panicked"))??);
+    }
+    Ok(lats)
+}
+
+/// Row-wise RMS normalization (no learned gain — reference model).
+fn rms_norm(x: &Tensor) -> Tensor {
+    let [m, n] = x.shape()[..] else { panic!("rms_norm needs 2-D") };
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let row = x.row(i);
+        let ms = row.iter().map(|a| a * a).sum::<f32>() / n as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for (o, a) in out.data_mut()[i * n..(i + 1) * n].iter_mut().zip(row) {
+            *o = a * inv;
+        }
+    }
+    out
+}
+
+fn relu(t: Tensor) -> Tensor {
+    t.map(|x| if x > 0.0 { x } else { 0.0 })
+}
+
+/// Copy `width` columns starting at `lo` into a fresh tensor.
+fn slice_cols(t: &Tensor, lo: usize, width: usize) -> Tensor {
+    let n = t.shape()[0];
+    let mut out = Tensor::zeros(&[n, width]);
+    for i in 0..n {
+        out.data_mut()[i * width..(i + 1) * width]
+            .copy_from_slice(&t.row(i)[lo..lo + width]);
+    }
+    out
+}
+
+/// Inverse of [`slice_cols`]: write `src` into columns starting at `lo`.
+fn write_cols(dst: &mut Tensor, lo: usize, src: &Tensor) {
+    let (n, width, cols) = (src.shape()[0], src.shape()[1], dst.shape()[1]);
+    for i in 0..n {
+        let drow = &mut dst.data_mut()[i * cols + lo..i * cols + lo + width];
+        drow.copy_from_slice(src.row(i));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming server
+// ---------------------------------------------------------------------------
+
+/// Scheduler tuning for the streaming decode server.
+#[derive(Debug, Clone)]
+pub struct DecodeServerConfig {
+    /// Micro-batch fill window per scheduler wake-up.
+    pub max_wait: Duration,
+    /// Max steps drained per wake-up across all sessions.
+    pub max_steps: usize,
+}
+
+impl Default for DecodeServerConfig {
+    fn default() -> Self {
+        DecodeServerConfig { max_wait: Duration::from_millis(2), max_steps: 64 }
+    }
+}
+
+/// One decoded token's output.
+#[derive(Debug, Clone)]
+pub struct StepOut {
+    pub session: u64,
+    /// 0-based position of the decoded token within its stream.
+    pub pos: usize,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    /// How many steps rode the same scheduler wake-up (observability).
+    pub micro_batch: usize,
+}
+
+/// Aggregate decode-server statistics.
+#[derive(Debug, Default, Clone)]
+pub struct DecodeStats {
+    pub steps: usize,
+    pub failed_steps: usize,
+    pub micro_batches: usize,
+    pub sessions_opened: usize,
+    pub sessions_closed: usize,
+    pub exec_secs: f64,
+}
+
+impl DecodeStats {
+    pub fn mean_micro_batch(&self) -> f64 {
+        if self.micro_batches == 0 {
+            0.0
+        } else {
+            (self.steps + self.failed_steps) as f64 / self.micro_batches as f64
+        }
+    }
+}
+
+enum DecodeMsg {
+    Open { session: u64, reply: Sender<Result<()>> },
+    Step(StepReq),
+    Close { session: u64 },
+    Shutdown,
+}
+
+struct StepReq {
+    session: u64,
+    token: i32,
+    submitted: Instant,
+    reply: Sender<Result<StepOut>>,
+}
+
+/// Handle for opening decode streams; cloneable across client threads.
+#[derive(Clone)]
+pub struct DecodeClient {
+    tx: Sender<DecodeMsg>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl DecodeClient {
+    /// Register a fresh session server-side and return its stream.
+    pub fn open_stream(&self) -> Result<DecodeStream> {
+        let session = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(DecodeMsg::Open { session, reply })
+            .map_err(|_| anyhow!("decode server shut down: cannot open stream"))?;
+        rx.recv().map_err(|_| anyhow!("decode server shut down during open"))??;
+        Ok(DecodeStream { session, tx: self.tx.clone() })
+    }
+}
+
+/// One open autoregressive stream. Steps are processed in submission
+/// order; `step_async` pipelines without waiting. Dropping the stream
+/// closes the session server-side (best effort).
+pub struct DecodeStream {
+    session: u64,
+    tx: Sender<DecodeMsg>,
+}
+
+impl DecodeStream {
+    pub fn id(&self) -> u64 {
+        self.session
+    }
+
+    /// Submit one token; returns a receiver for its logits.
+    pub fn step_async(&self, token: i32) -> Result<Receiver<Result<StepOut>>> {
+        let (reply, rx) = mpsc::channel();
+        let req =
+            StepReq { session: self.session, token, submitted: Instant::now(), reply };
+        self.tx
+            .send(DecodeMsg::Step(req))
+            .map_err(|_| anyhow!("decode server shut down: step not accepted"))?;
+        Ok(rx)
+    }
+
+    /// Submit one token and wait for its logits.
+    pub fn step(&self, token: i32) -> Result<StepOut> {
+        self.step_async(token)?
+            .recv()
+            .map_err(|_| anyhow!("decode server dropped step"))?
+    }
+}
+
+impl Drop for DecodeStream {
+    fn drop(&mut self) {
+        self.tx.send(DecodeMsg::Close { session: self.session }).ok();
+    }
+}
+
+/// The streaming decode server: owns the model and all session state on
+/// a single scheduler thread (host compute is CPU-bound; one thread is
+/// the honest design, mirroring [`super::Server`]).
+pub struct DecodeServer {
+    client: Option<DecodeClient>,
+    stats: Arc<Mutex<DecodeStats>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DecodeServer {
+    pub fn start(model: HostDecoder, cfg: DecodeServerConfig) -> DecodeServer {
+        let (tx, rx) = mpsc::channel::<DecodeMsg>();
+        let stats = Arc::new(Mutex::new(DecodeStats::default()));
+        let stats_thread = stats.clone();
+        let model = Arc::new(model);
+        let handle = std::thread::Builder::new()
+            .name("fmm-decode".into())
+            .spawn(move || decode_scheduler(model, cfg, rx, stats_thread))
+            .expect("spawn decode scheduler");
+        DecodeServer {
+            client: Some(DecodeClient { tx, next_id: Arc::new(AtomicU64::new(0)) }),
+            stats,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn client(&self) -> DecodeClient {
+        self.client.as_ref().expect("server running").clone()
+    }
+
+    pub fn stats(&self) -> DecodeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown via the explicit sentinel: queued steps are
+    /// served first; live clients/streams never deadlock the join and
+    /// see clean errors on later use.
+    pub fn shutdown(mut self) -> DecodeStats {
+        if let Some(c) = self.client.take() {
+            c.tx.send(DecodeMsg::Shutdown).ok();
+        }
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+        let stats = self.stats.lock().unwrap().clone();
+        stats
+    }
+}
+
+fn decode_scheduler(
+    model: Arc<HostDecoder>,
+    cfg: DecodeServerConfig,
+    rx: Receiver<DecodeMsg>,
+    stats: Arc<Mutex<DecodeStats>>,
+) {
+    let mut sessions: HashMap<u64, DecoderSession> = HashMap::new();
+    loop {
+        let mut steps: Vec<StepReq> = Vec::new();
+        let mut closes: Vec<u64> = Vec::new();
+        let mut exit = false;
+
+        // Block for the first message of a micro-batch.
+        match rx.recv() {
+            Ok(msg) => {
+                handle_msg(msg, &model, &mut sessions, &mut steps, &mut closes, &mut exit, &stats)
+            }
+            Err(_) => return, // all clients gone
+        }
+        // Fill the micro-batch until the window closes.
+        let deadline = Instant::now() + cfg.max_wait;
+        while !exit && steps.len() < cfg.max_steps {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(msg) => handle_msg(
+                    msg,
+                    &model,
+                    &mut sessions,
+                    &mut steps,
+                    &mut closes,
+                    &mut exit,
+                    &stats,
+                ),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    exit = true;
+                    break;
+                }
+            }
+        }
+
+        // Execute the drained steps in arrival order (per-session order
+        // is submission order: one scheduler, FIFO channel).
+        let micro_batch = steps.len();
+        if micro_batch > 0 {
+            let t0 = Instant::now();
+            let mut ok = 0usize;
+            let mut failed = 0usize;
+            for req in steps {
+                match sessions.get_mut(&req.session) {
+                    None => {
+                        failed += 1;
+                        req.reply
+                            .send(Err(anyhow!("unknown or closed session {}", req.session)))
+                            .ok();
+                    }
+                    Some(sess) => {
+                        let pos = sess.position();
+                        match sess.step(req.token) {
+                            Ok(logits) => {
+                                ok += 1;
+                                req.reply
+                                    .send(Ok(StepOut {
+                                        session: req.session,
+                                        pos,
+                                        logits,
+                                        latency: req.submitted.elapsed(),
+                                        micro_batch,
+                                    }))
+                                    .ok();
+                            }
+                            Err(e) => {
+                                failed += 1;
+                                req.reply.send(Err(e)).ok();
+                            }
+                        }
+                    }
+                }
+            }
+            let mut s = stats.lock().unwrap();
+            s.steps += ok;
+            s.failed_steps += failed;
+            s.micro_batches += 1;
+            s.exec_secs += t0.elapsed().as_secs_f64();
+        }
+        // Closes apply only after the window's steps ran: per-sender
+        // FIFO means any step a client submitted before dropping its
+        // stream is already in `steps`, so a pipelined step_async
+        // followed by drop still gets its logits.
+        for session in closes {
+            if sessions.remove(&session).is_some() {
+                stats.lock().unwrap().sessions_closed += 1;
+            }
+        }
+        if exit {
+            return;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_msg(
+    msg: DecodeMsg,
+    model: &Arc<HostDecoder>,
+    sessions: &mut HashMap<u64, DecoderSession>,
+    steps: &mut Vec<StepReq>,
+    closes: &mut Vec<u64>,
+    exit: &mut bool,
+    stats: &Mutex<DecodeStats>,
+) {
+    match msg {
+        DecodeMsg::Open { session, reply } => {
+            sessions.insert(session, DecoderSession::new(model.clone()));
+            stats.lock().unwrap().sessions_opened += 1;
+            reply.send(Ok(())).ok();
+        }
+        // Deferred: applied after this window's steps execute, so a
+        // step that was valid when submitted is never failed by a
+        // Close that rode the same micro-batch.
+        DecodeMsg::Close { session } => closes.push(session),
+        DecodeMsg::Step(req) => steps.push(req),
+        DecodeMsg::Shutdown => *exit = true,
+    }
+}

@@ -19,11 +19,23 @@
 //! sandbox; for a CPU-bound single-device server a scheduler thread is
 //! the honest design anyway).
 //!
+//! Shutdown uses an explicit [`Msg::Shutdown`] sentinel, so
+//! [`Server::shutdown`] returns even while cloned [`Client`]s are still
+//! alive (their later submits get a clean "server shut down" error).
+//! A failed batch execution drops the reply senders — clients observe a
+//! disconnected channel, never a hang — and still counts in
+//! [`ServeStats`].
+//!
+//! [`decode`] is the session-based streaming sibling of this module:
+//! instead of recomputing a fixed window per request it decodes token by
+//! token over [`crate::attention::FmmDecodeState`] at O(1)/token.
+//!
 //! PJRT handles are not `Send` (the xla crate wraps `Rc` + raw
 //! pointers), so the scheduler thread owns its *own* `Runtime` and
 //! compiles the executables inside the thread; only plain data (names,
 //! parameter leaves, requests) crosses the channel.
 
+pub mod decode;
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -46,6 +58,14 @@ pub struct Request {
     reply: Sender<Response>,
 }
 
+/// What crosses the client → scheduler channel.
+enum Msg {
+    Request(Request),
+    /// Explicit shutdown sentinel: lets the scheduler exit while cloned
+    /// client senders are still alive.
+    Shutdown,
+}
+
 /// Completed inference.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -61,7 +81,10 @@ pub struct Response {
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
     pub requests: usize,
+    /// Batches attempted — failed executions count too.
     pub batches: usize,
+    /// Batches whose execution failed (clients saw a disconnect).
+    pub failed_batches: usize,
     pub padding_waste_sum: f64,
     pub batch_occupancy_sum: f64,
     pub exec_secs: f64,
@@ -80,23 +103,27 @@ impl ServeStats {
 /// Handle for submitting requests; cloneable across client threads.
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Request>,
+    tx: Sender<Msg>,
     next_id: Arc<AtomicU64>,
 }
 
 impl Client {
-    /// Fire a request; returns a receiver for the response.
-    pub fn submit(&self, tokens: Vec<i32>) -> (u64, Receiver<Response>) {
+    /// Fire a request; returns a receiver for the response. Errors with
+    /// "server shut down" once the scheduler has exited (it used to
+    /// panic via `expect("server alive")`).
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<(u64, Receiver<Response>)> {
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request { id, tokens, submitted: Instant::now(), reply };
-        self.tx.send(req).expect("server alive");
-        (id, rx)
+        self.tx
+            .send(Msg::Request(req))
+            .map_err(|_| anyhow!("server shut down: request {id} not accepted"))?;
+        Ok((id, rx))
     }
 
     /// Submit and wait.
     pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
-        let (_, rx) = self.submit(tokens);
+        let (_, rx) = self.submit(tokens)?;
         rx.recv().map_err(|_| anyhow!("server dropped request"))
     }
 }
@@ -137,7 +164,7 @@ impl Server {
             bail!("need at least one predict artifact");
         }
         let names: Vec<String> = artifact_names.iter().map(|s| s.to_string()).collect();
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let stats = Arc::new(Mutex::new(ServeStats::default()));
         let stats_thread = stats.clone();
@@ -179,10 +206,13 @@ impl Server {
         self.stats.lock().unwrap().clone()
     }
 
-    /// Graceful shutdown: drop our sender, join the scheduler. Callers
-    /// must drop any cloned `Client`s first, or this blocks until they do.
+    /// Graceful shutdown: send the sentinel, join the scheduler. The
+    /// scheduler finishes the batch it is filling, then exits — cloned
+    /// `Client`s may stay alive; their later submits error cleanly.
     pub fn shutdown(mut self) -> ServeStats {
-        self.client.take();
+        if let Some(c) = self.client.take() {
+            c.tx.send(Msg::Shutdown).ok(); // scheduler may already be gone
+        }
         if let Some(h) = self.handle.take() {
             h.join().ok();
         }
@@ -197,12 +227,87 @@ struct Bucket {
     params: ParamStore,
 }
 
+/// Block for the first message, then fill the batch until `max_batch`
+/// requests, `max_wait` elapsed, or a shutdown signal. Returns the
+/// collected requests plus whether the scheduler should exit after
+/// serving them (sentinel received or all senders gone).
+fn collect_batch(
+    rx: &Receiver<Msg>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> (Vec<Request>, bool) {
+    let first = match rx.recv() {
+        Ok(Msg::Request(r)) => r,
+        Ok(Msg::Shutdown) => return (vec![], true),
+        Err(_) => return (vec![], true),
+    };
+    let mut pending = vec![first];
+    let deadline = Instant::now() + max_wait;
+    while pending.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(Msg::Request(r)) => pending.push(r),
+            Ok(Msg::Shutdown) => return (pending, true),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => return (pending, true),
+        }
+    }
+    (pending, false)
+}
+
+/// Record the batch in `stats` and fan the execution result out to the
+/// waiting clients. On failure the replies are dropped, so every client
+/// observes a disconnected channel (never a hang) and the batch still
+/// counts in the stats.
+fn fan_out(
+    result: Result<Vec<f32>>,
+    pending: Vec<Request>,
+    batch_cap: usize,
+    exec: Duration,
+    lens: &[usize],
+    seq_len: usize,
+    stats: &Mutex<ServeStats>,
+) {
+    {
+        let mut s = stats.lock().unwrap();
+        s.requests += pending.len();
+        s.batches += 1;
+        s.exec_secs += exec.as_secs_f64();
+        s.padding_waste_sum += padding_waste(lens, batch_cap, seq_len);
+        s.batch_occupancy_sum += pending.len() as f64 / batch_cap as f64;
+        if result.is_err() {
+            s.failed_batches += 1;
+        }
+    }
+    match result {
+        Ok(logits) => {
+            let per = logits.len() / batch_cap;
+            for (i, req) in pending.into_iter().enumerate() {
+                let resp = Response {
+                    id: req.id,
+                    logits: logits[i * per..(i + 1) * per].to_vec(),
+                    latency: req.submitted.elapsed(),
+                    batch_size: batch_cap,
+                };
+                req.reply.send(resp).ok(); // client may have gone away
+            }
+        }
+        Err(e) => {
+            crate::warnlog!("batch execution failed: {e:#}");
+            // Drop replies; clients see a disconnected channel.
+        }
+    }
+}
+
 fn scheduler_main(
     artifacts_dir: PathBuf,
     names: Vec<String>,
     leaves: Vec<Leaf>,
     cfg: ServeConfig,
-    rx: Receiver<Request>,
+    rx: Receiver<Msg>,
     ready_tx: Sender<Result<()>>,
     stats: Arc<Mutex<ServeStats>>,
 ) -> Result<()> {
@@ -241,73 +346,157 @@ fn scheduler_main(
     let max_batch = buckets.last().unwrap().batch;
 
     loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return Ok(()), // all senders gone: shutdown
-        };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
-        // Fill the batch until the largest bucket is full or time is up.
-        while pending.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
+        let (pending, exit) = collect_batch(&rx, max_batch, cfg.max_wait);
+        if !pending.is_empty() {
+            // Smallest bucket that fits.
+            let bucket = buckets
+                .iter()
+                .find(|b| b.batch >= pending.len())
+                .unwrap_or_else(|| buckets.last().unwrap());
+
+            let seqs: Vec<Vec<i32>> = pending.iter().map(|r| r.tokens.clone()).collect();
+            let (batch, lens) = pad_batch(&seqs, bucket.batch, seq_len, cfg.pad_id);
+
+            let t0 = Instant::now();
+            let result = rt
+                .upload_i32(&batch)
+                .and_then(|tokens| {
+                    let mut inputs: Vec<&xla::PjRtBuffer> =
+                        Vec::with_capacity(bucket.params.len() + 1);
+                    inputs.extend(bucket.params.buffers());
+                    inputs.push(&tokens);
+                    bucket.art.execute(&inputs)
+                })
+                .and_then(|out| Artifact::to_f32(&out[0]));
+            let exec = t0.elapsed();
+            fan_out(result, pending, bucket.batch, exec, &lens, seq_len, &stats);
         }
-
-        // Smallest bucket that fits.
-        let bucket = buckets
-            .iter()
-            .find(|b| b.batch >= pending.len())
-            .unwrap_or_else(|| buckets.last().unwrap());
-
-        let seqs: Vec<Vec<i32>> = pending.iter().map(|r| r.tokens.clone()).collect();
-        let (batch, lens) = pad_batch(&seqs, bucket.batch, seq_len, cfg.pad_id);
-
-        let t0 = Instant::now();
-        let result = rt
-            .upload_i32(&batch)
-            .and_then(|tokens| {
-                let mut inputs: Vec<&xla::PjRtBuffer> =
-                    Vec::with_capacity(bucket.params.len() + 1);
-                inputs.extend(bucket.params.buffers());
-                inputs.push(&tokens);
-                bucket.art.execute(&inputs)
-            })
-            .and_then(|out| Artifact::to_f32(&out[0]));
-        let exec = t0.elapsed();
-
-        match result {
-            Ok(logits) => {
-                let per = logits.len() / bucket.batch;
-                {
-                    let mut s = stats.lock().unwrap();
-                    s.requests += pending.len();
-                    s.batches += 1;
-                    s.exec_secs += exec.as_secs_f64();
-                    s.padding_waste_sum += padding_waste(&lens, bucket.batch, seq_len);
-                    s.batch_occupancy_sum += pending.len() as f64 / bucket.batch as f64;
-                }
-                for (i, req) in pending.into_iter().enumerate() {
-                    let resp = Response {
-                        id: req.id,
-                        logits: logits[i * per..(i + 1) * per].to_vec(),
-                        latency: req.submitted.elapsed(),
-                        batch_size: bucket.batch,
-                    };
-                    req.reply.send(resp).ok(); // client may have gone away
-                }
-            }
-            Err(e) => {
-                crate::warnlog!("batch execution failed: {e:#}");
-                // Drop replies; clients see a disconnected channel.
-            }
+        if exit {
+            return Ok(());
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_client() -> (Client, Receiver<Msg>) {
+        let (tx, rx) = mpsc::channel();
+        (Client { tx, next_id: Arc::new(AtomicU64::new(0)) }, rx)
+    }
+
+    fn dummy_request(id: u64) -> (Request, Receiver<Response>) {
+        let (reply, rx) = mpsc::channel();
+        (Request { id, tokens: vec![1, 2, 3], submitted: Instant::now(), reply }, rx)
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors_instead_of_panicking() {
+        // Regression: submit() used expect("server alive") and panicked
+        // once the scheduler (the receiver) was gone.
+        let (client, rx) = test_client();
+        drop(rx);
+        let err = client.submit(vec![1, 2, 3]).unwrap_err();
+        assert!(format!("{err}").contains("server shut down"), "{err}");
+        let err = client.infer(vec![1]).unwrap_err();
+        assert!(format!("{err}").contains("server shut down"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_sentinel_unblocks_scheduler_with_live_senders() {
+        // Regression: shutdown used to rely on every cloned sender being
+        // dropped; a single live Client deadlocked the join. The sentinel
+        // must end collection even while clones exist.
+        let (client, rx) = test_client();
+        let live_clone = client.clone();
+        let (req, _resp_rx) = dummy_request(0);
+        client.tx.send(Msg::Request(req)).unwrap();
+        client.tx.send(Msg::Shutdown).unwrap();
+        // Generous timeout: must return via the sentinel, not the clock.
+        let (pending, exit) = collect_batch(&rx, 8, Duration::from_secs(60));
+        assert_eq!(pending.len(), 1);
+        assert!(exit, "sentinel must request scheduler exit");
+        // The live clone can still observe the shutdown cleanly later.
+        drop(rx);
+        assert!(live_clone.submit(vec![1]).is_err());
+    }
+
+    #[test]
+    fn shutdown_sentinel_alone_exits_immediately() {
+        let (client, rx) = test_client();
+        client.tx.send(Msg::Shutdown).unwrap();
+        let (pending, exit) = collect_batch(&rx, 8, Duration::from_secs(60));
+        assert!(pending.is_empty());
+        assert!(exit);
+    }
+
+    #[test]
+    fn collect_batch_fills_up_to_cap() {
+        let (client, rx) = test_client();
+        for id in 0..5 {
+            let (req, _reply) = dummy_request(id);
+            client.tx.send(Msg::Request(req)).unwrap();
+        }
+        let (pending, exit) = collect_batch(&rx, 4, Duration::from_secs(60));
+        assert_eq!(pending.len(), 4, "stop at the largest bucket");
+        assert!(!exit);
+        let (rest, _) = collect_batch(&rx, 4, Duration::from_millis(1));
+        assert_eq!(rest.len(), 1);
+    }
+
+    #[test]
+    fn failed_batch_disconnects_clients_and_still_counts() {
+        // Satellite: a failed execution must leave every waiting client
+        // with a disconnected-channel error (not a hang), and the stats
+        // must still record the batch.
+        let stats = Mutex::new(ServeStats::default());
+        let (req_a, rx_a) = dummy_request(0);
+        let (req_b, rx_b) = dummy_request(1);
+        fan_out(
+            Err(anyhow!("synthetic device failure")),
+            vec![req_a, req_b],
+            4,
+            Duration::from_millis(3),
+            &[3, 3],
+            8,
+            &stats,
+        );
+        assert!(rx_a.recv().is_err(), "client A must see a disconnect");
+        assert!(rx_b.recv().is_err(), "client B must see a disconnect");
+        let s = stats.lock().unwrap();
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.failed_batches, 1);
+        assert_eq!(s.requests, 2);
+        assert!(s.exec_secs > 0.0);
+        assert!(s.mean_occupancy() > 0.0);
+    }
+
+    #[test]
+    fn successful_fan_out_answers_each_request_once() {
+        let stats = Mutex::new(ServeStats::default());
+        let (req_a, rx_a) = dummy_request(7);
+        let (req_b, rx_b) = dummy_request(8);
+        let logits: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        fan_out(
+            Ok(logits),
+            vec![req_a, req_b],
+            4,
+            Duration::from_millis(1),
+            &[3, 3],
+            8,
+            &stats,
+        );
+        let a = rx_a.recv().unwrap();
+        let b = rx_b.recv().unwrap();
+        assert_eq!(a.id, 7);
+        assert_eq!(a.logits, vec![0.0, 1.0]);
+        assert_eq!(b.logits, vec![2.0, 3.0]);
+        assert_eq!(a.batch_size, 4);
+        assert!(rx_a.try_recv().is_err(), "exactly-once delivery");
+        let s = stats.lock().unwrap();
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.failed_batches, 0);
+        assert_eq!(s.requests, 2);
     }
 }

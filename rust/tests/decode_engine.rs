@@ -1,0 +1,272 @@
+//! Integration: the incremental decode engine.
+//!
+//! Pins (1) `FmmDecodeState::step` against the batch causal
+//! `fmm_attention` row-for-row across feature maps, bandwidths and blend
+//! weights (the paper's decomposition makes the two mathematically
+//! identical; same op order makes them float-identical), (2) the
+//! multi-layer multi-head `DecoderSession` against `forward_batch`, and
+//! (3) the streaming `DecodeServer`: session isolation, pipelining,
+//! shutdown with live clients, and error-path behavior.
+//!
+//! Everything here is host-side — no artifacts required, never skips.
+
+use std::time::Duration;
+
+use fmmformer::attention::incremental::decode_sequence;
+use fmmformer::attention::{fmm_attention, FeatureMap};
+use fmmformer::rng::Pcg64;
+use fmmformer::serve::decode::{
+    DecodeConfig, DecodeServer, DecodeServerConfig, DecoderSession, HostDecoder,
+};
+use fmmformer::tensor::Tensor;
+use fmmformer::testutil;
+
+fn rand_qkv(n: usize, d: usize, dv: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Pcg64::seeded(seed);
+    (
+        Tensor::randn(&[n, d], &mut rng),
+        Tensor::randn(&[n, d], &mut rng),
+        Tensor::randn(&[n, dv], &mut rng),
+    )
+}
+
+/// Acceptance grid: feature maps {elu, elu_neg, tanh} (plus the 3-kernel
+/// blend), bandwidths {0, 1, 8, n}, and both degenerate and mixed blend
+/// weights. Incremental must match the batch causal rows < 1e-4.
+#[test]
+fn incremental_matches_batch_across_grid() {
+    let kernel_sets: [&[FeatureMap]; 4] = [
+        &[FeatureMap::Elu],
+        &[FeatureMap::EluNeg],
+        &[FeatureMap::Tanh],
+        &[FeatureMap::Elu, FeatureMap::EluNeg, FeatureMap::Tanh],
+    ];
+    let n = 33;
+    let (q, k, v) = rand_qkv(n, 8, 6, 7);
+    for kernels in kernel_sets {
+        for bandwidth in [0usize, 1, 8, n] {
+            for (w1, w2) in [(1.0f32, 0.0f32), (0.0, 1.0), (0.6, 0.9)] {
+                let batch = fmm_attention(&q, &k, &v, bandwidth, kernels, w1, w2, true);
+                let inc = decode_sequence(&q, &k, &v, bandwidth, kernels, w1, w2);
+                let diff = inc.max_abs_diff(&batch);
+                assert!(
+                    diff < 1e-4,
+                    "kernels {kernels:?} bw {bandwidth} w ({w1},{w2}): diff {diff}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_incremental_matches_batch_random_shapes() {
+    testutil::check(
+        "incremental decode == batch causal fmm rows",
+        24,
+        |rng| {
+            let n = 1 + rng.usize(40);
+            let d = 2 + rng.usize(7);
+            let dv = 2 + rng.usize(9);
+            let bw = rng.usize(n + 2);
+            let w1 = rng.f32();
+            let w2 = rng.f32();
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n, d], rng);
+            let v = Tensor::randn(&[n, dv], rng);
+            (q, k, v, bw, w1, w2)
+        },
+        |(q, k, v, bw, w1, w2)| {
+            let kernels = [FeatureMap::Elu, FeatureMap::EluNeg];
+            let batch = fmm_attention(q, k, v, *bw, &kernels, *w1, *w2, true);
+            let inc = decode_sequence(q, k, v, *bw, &kernels, *w1, *w2);
+            testutil::assert_close(inc.data(), batch.data(), 1e-4, "rows")
+        },
+    );
+}
+
+fn tiny_config() -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 16,
+        vocab: 32,
+        bandwidth: 4,
+        kernels: vec![FeatureMap::Elu, FeatureMap::EluNeg],
+        w1: 0.6,
+        w2: 0.9,
+        seed: 3,
+    }
+}
+
+fn probe_tokens(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..len).map(|_| rng.usize(vocab) as i32).collect()
+}
+
+#[test]
+fn session_matches_batch_forward_row_for_row() {
+    let model = std::sync::Arc::new(HostDecoder::new(tiny_config()).unwrap());
+    let tokens = probe_tokens(40, model.config().vocab, 11);
+    let batch = model.forward_batch(&tokens).unwrap();
+    let mut sess = DecoderSession::new(model.clone());
+    for (t, &tok) in tokens.iter().enumerate() {
+        assert_eq!(sess.position(), t);
+        let logits = sess.step(tok).unwrap();
+        testutil::assert_close(&logits, batch.row(t), 1e-4, "logits row").unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn session_rejects_out_of_vocab_tokens() {
+    let model = std::sync::Arc::new(HostDecoder::new(tiny_config()).unwrap());
+    let mut sess = DecoderSession::new(model);
+    assert!(sess.step(-1).is_err());
+    assert!(sess.step(32).is_err());
+    assert_eq!(sess.position(), 0, "failed steps must not advance");
+    assert!(sess.step(5).is_ok());
+}
+
+#[test]
+fn streams_are_isolated_and_exact() {
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let reference = std::sync::Arc::new(HostDecoder::new(tiny_config()).unwrap());
+    let server = DecodeServer::start(
+        model,
+        DecodeServerConfig { max_wait: Duration::from_millis(1), max_steps: 16 },
+    );
+    let client = server.client();
+
+    // Two interleaved streams over different token sequences must each
+    // reproduce their own batch reference exactly.
+    let ta = probe_tokens(24, 32, 100);
+    let tb = probe_tokens(24, 32, 200);
+    let ba = reference.forward_batch(&ta).unwrap();
+    let bb = reference.forward_batch(&tb).unwrap();
+    let sa = client.open_stream().unwrap();
+    let sb = client.open_stream().unwrap();
+    assert_ne!(sa.id(), sb.id());
+    for t in 0..24 {
+        let oa = sa.step(ta[t]).unwrap();
+        let ob = sb.step(tb[t]).unwrap();
+        assert_eq!(oa.pos, t);
+        assert_eq!(ob.pos, t);
+        testutil::assert_close(&oa.logits, ba.row(t), 1e-4, "stream A").unwrap();
+        testutil::assert_close(&ob.logits, bb.row(t), 1e-4, "stream B").unwrap();
+    }
+    drop(sa);
+    drop(sb);
+    let stats = server.shutdown();
+    assert_eq!(stats.steps, 48);
+    assert_eq!(stats.failed_steps, 0);
+    assert_eq!(stats.sessions_opened, 2);
+    assert_eq!(stats.sessions_closed, 2);
+    assert!(stats.micro_batches >= 1);
+    assert!(stats.mean_micro_batch() > 0.0);
+}
+
+#[test]
+fn pipelined_steps_process_in_order() {
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let reference = std::sync::Arc::new(HostDecoder::new(tiny_config()).unwrap());
+    // A wide fill window so pipelined steps ride shared micro-batches.
+    let server = DecodeServer::start(
+        model,
+        DecodeServerConfig { max_wait: Duration::from_millis(20), max_steps: 64 },
+    );
+    let client = server.client();
+    let tokens = probe_tokens(32, 32, 300);
+    let batch = reference.forward_batch(&tokens).unwrap();
+    let stream = client.open_stream().unwrap();
+    let rxs: Vec<_> =
+        tokens.iter().map(|&t| stream.step_async(t).unwrap()).collect();
+    for (t, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.pos, t, "submission order must be preserved");
+        assert!(out.micro_batch >= 1);
+        testutil::assert_close(&out.logits, batch.row(t), 1e-4, "pipelined").unwrap();
+    }
+    drop(stream);
+    let stats = server.shutdown();
+    assert_eq!(stats.steps, 32);
+    // Pipelined submission must amortize wake-ups into micro-batches.
+    assert!(
+        stats.micro_batches < 32,
+        "expected micro-batching, got {} wake-ups for 32 steps",
+        stats.micro_batches
+    );
+}
+
+#[test]
+fn shutdown_with_live_clients_and_streams_does_not_deadlock() {
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let server = DecodeServer::start(model, DecodeServerConfig::default());
+    let client = server.client();
+    let clone = client.clone();
+    let stream = client.open_stream().unwrap();
+    stream.step(1).unwrap();
+
+    // Live client, clone AND stream all outstanding: shutdown must
+    // still return (sentinel), and later use must error cleanly.
+    let stats = server.shutdown();
+    assert_eq!(stats.steps, 1);
+    let err = stream.step(2).unwrap_err();
+    assert!(format!("{err}").contains("shut down"), "{err}");
+    let err = clone.open_stream().unwrap_err();
+    assert!(format!("{err}").contains("shut down"), "{err}");
+}
+
+#[test]
+fn failed_step_replies_error_and_server_keeps_serving() {
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let server = DecodeServer::start(model, DecodeServerConfig::default());
+    let client = server.client();
+    let stream = client.open_stream().unwrap();
+    let err = stream.step(999).unwrap_err(); // out of vocab
+    assert!(format!("{err}").contains("vocab"), "{err}");
+    // The session and server both survive the failure.
+    let out = stream.step(3).unwrap();
+    assert_eq!(out.pos, 0, "failed step must not advance the stream");
+    drop(stream);
+    let stats = server.shutdown();
+    assert_eq!(stats.steps, 1);
+    assert_eq!(stats.failed_steps, 1);
+}
+
+#[test]
+fn pipelined_step_then_drop_still_delivers_logits() {
+    // Regression: Close used to be applied eagerly while queued Steps
+    // were deferred, so `step_async` followed by `drop(stream)` could
+    // fail a step that was valid when submitted. Close is now ordered
+    // after the window's steps.
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let server = DecodeServer::start(
+        model,
+        DecodeServerConfig { max_wait: Duration::from_millis(50), max_steps: 64 },
+    );
+    let client = server.client();
+    let stream = client.open_stream().unwrap();
+    let rx = stream.step_async(5).unwrap();
+    drop(stream); // Close rides the same micro-batch window as the step
+    let out = rx.recv().unwrap().expect("step submitted while open must succeed");
+    assert_eq!(out.pos, 0);
+    let stats = server.shutdown();
+    assert_eq!(stats.steps, 1);
+    assert_eq!(stats.failed_steps, 0);
+    assert_eq!(stats.sessions_closed, 1);
+}
+
+#[test]
+fn dropping_streams_closes_sessions_server_side() {
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let server = DecodeServer::start(model, DecodeServerConfig::default());
+    let client = server.client();
+    let stream = client.open_stream().unwrap();
+    let orphan = client.open_stream().unwrap();
+    drop(orphan); // close message, state freed server-side
+    stream.step(1).unwrap(); // forces the scheduler past the close
+    drop(stream);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_opened, 2);
+    assert_eq!(stats.sessions_closed, 2);
+}

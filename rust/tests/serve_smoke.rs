@@ -44,7 +44,7 @@ fn every_request_is_answered_exactly_once() {
     let mut rxs = vec![];
     for _ in 0..13 {
         let b = gen.batch(Split::Test, 1);
-        rxs.push(client.submit(b.tokens.row(0).to_vec()));
+        rxs.push(client.submit(b.tokens.row(0).to_vec()).expect("server alive"));
     }
     let mut seen = std::collections::HashSet::new();
     for (id, rx) in rxs {
@@ -57,9 +57,12 @@ fn every_request_is_answered_exactly_once() {
         // No duplicate delivery: channel now empty.
         assert!(rx.try_recv().is_err());
     }
-    drop(client);
+    // Regression: shutdown must work with the client still alive (the
+    // sentinel ends the scheduler; dropping senders is not required).
     let stats = server.shutdown();
     assert_eq!(stats.requests, 13);
+    assert_eq!(stats.failed_batches, 0);
+    assert!(client.submit(vec![1, 2, 3]).is_err(), "post-shutdown submit errors");
     assert!(stats.batches >= 2, "13 requests cannot fit one batch of 8");
     assert!(stats.mean_occupancy() > 0.0 && stats.mean_occupancy() <= 1.0);
     assert!(stats.mean_padding_waste() >= 1.0);
@@ -78,8 +81,7 @@ fn single_request_rides_smallest_bucket() {
     let b = gen.batch(Split::Test, 1);
     let resp = client.infer(b.tokens.row(0).to_vec()).unwrap();
     assert_eq!(resp.batch_size, 1, "lone request should use the B=1 bucket");
-    drop(client);
-    server.shutdown();
+    server.shutdown(); // client intentionally still alive
 }
 
 #[test]
@@ -102,13 +104,14 @@ fn logits_match_between_buckets() {
         let mut others = vec![];
         let mut g2 = TextCls::new(n, 8);
         for _ in 0..fill {
-            others.push(client.submit(g2.batch(Split::Test, 1).tokens.row(0).to_vec()));
+            others.push(
+                client.submit(g2.batch(Split::Test, 1).tokens.row(0).to_vec()).expect("alive"),
+            );
         }
         let resp = client.infer(seq.clone()).unwrap();
         for (_, rx) in others {
             rx.recv_timeout(Duration::from_secs(120)).ok();
         }
-        drop(client);
         server.shutdown();
         resp.logits
     };

@@ -1,0 +1,220 @@
+//! Vendored offline substitute for the `anyhow` crate.
+//!
+//! The sandbox this repo builds in has no crates.io access, so this tiny
+//! shim provides the subset of `anyhow` the coordinator actually uses:
+//! `Error` (a message plus a cause chain), `Result<T>`, the `anyhow!` /
+//! `bail!` / `ensure!` macros, and the `Context` extension trait for
+//! `Result` and `Option`. Formatting matches `anyhow` conventions:
+//! `{}` prints the outermost message, `{:#}` prints the full chain
+//! joined with `: `, and `{:?}` prints the message plus a
+//! `Caused by:` list.
+//!
+//! Swap this path dependency for the real crate when building online —
+//! the API used by the workspace is a strict subset.
+
+use std::fmt;
+
+/// A message-chain error: the outermost context plus its causes.
+pub struct Error {
+    msg: String,
+    causes: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), causes: Vec::new() }
+    }
+
+    /// Wrap with higher-level context: the new message becomes the
+    /// outermost one, the previous message joins the cause chain.
+    pub fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        let old = std::mem::replace(&mut self.msg, context.to_string());
+        self.causes.insert(0, old);
+        self
+    }
+
+    /// The message chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.causes.iter().map(String::as_str))
+    }
+
+    /// The innermost (original) message.
+    pub fn root_cause(&self) -> &str {
+        self.causes.last().map(String::as_str).unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            for c in &self.causes {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.causes.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for c in &self.causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Mirrors anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut causes = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            causes.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg: e.to_string(), causes }
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_chain_formatting() {
+        let e = Error::msg("inner").wrap("middle").wrap("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+        assert_eq!(e.root_cause(), "inner");
+        assert_eq!(e.chain().count(), 3);
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        assert_eq!(format!("{}", anyhow!("plain")), "plain");
+        assert_eq!(format!("{}", anyhow!("x = {x}")), "x = 3");
+        assert_eq!(format!("{}", anyhow!("x = {}", x)), "x = 3");
+        assert_eq!(format!("{}", anyhow!(io_err())), "gone");
+        let r: Result<()> = (|| bail!("boom {x}"))();
+        assert_eq!(format!("{}", r.unwrap_err()), "boom 3");
+        let ok: Result<()> = (|| {
+            ensure!(1 + 1 == 2, "math broke");
+            Ok(())
+        })();
+        assert!(ok.is_ok());
+        let bad: Result<()> = (|| {
+            ensure!(false);
+            Ok(())
+        })();
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_wraps_results_and_options() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+
+        let r2: Result<()> = Err(Error::msg("low"));
+        let e2 = r2.with_context(|| format!("step {}", 7)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "step 7: low");
+
+        let none: Option<u32> = None;
+        assert_eq!(format!("{}", none.context("missing").unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn takes<T: Send + Sync + 'static>(_: T) {}
+        takes(Error::msg("x"));
+    }
+}
