@@ -25,9 +25,11 @@ use fmmformer::bench::{fmt_time, measure, report_dir, Table};
 use fmmformer::cli::Args;
 use fmmformer::rng::Pcg64;
 use fmmformer::serve::decode::{
-    run_greedy_sessions, DecodeConfig, DecodeServer, DecodeServerConfig, HostDecoder,
+    run_greedy_sessions, DecodeConfig, DecodeServer, DecodeServerConfig, DecodeStats,
+    HostDecoder,
 };
 use fmmformer::tensor::Tensor;
+use fmmformer::util::json::Json;
 
 const D: usize = 32;
 const BANDWIDTH: usize = 8;
@@ -149,25 +151,67 @@ fn main() -> Result<()> {
         }
     }
 
-    // Model-level: sessions streaming through the micro-batch scheduler.
-    let cfg = DecodeConfig::default();
-    let vocab = cfg.vocab;
-    let model = HostDecoder::new(cfg)?;
-    let server = DecodeServer::start(model, DecodeServerConfig::default());
-    let client = server.client();
-    let sessions = 4usize;
-    let tokens = if quick { 64 } else { 256 };
-    let t0 = std::time::Instant::now();
-    run_greedy_sessions(&client, sessions, tokens, vocab)?;
-    let wall = t0.elapsed().as_secs_f64();
-    let stats = server.shutdown();
+    // Model-level: concurrent sessions streaming through the scheduler,
+    // scalar loop (the PR 1 baseline, batch_threshold = MAX) vs batched
+    // step_many rounds. Emits BENCH_decode.json so the perf trajectory
+    // is machine-readable from this PR on.
+    let sessions = args.usize_or("sessions", 64)?;
+    let tokens = args.usize_or("tokens", if quick { 32 } else { 128 })?;
+    let vocab = DecodeConfig::default().vocab;
+    let run_mode = |batch_threshold: usize| -> Result<(f64, DecodeStats)> {
+        let model = HostDecoder::new(DecodeConfig::default())?;
+        let server = DecodeServer::start(
+            model,
+            DecodeServerConfig { batch_threshold, ..Default::default() },
+        );
+        let client = server.client();
+        let t0 = std::time::Instant::now();
+        run_greedy_sessions(&client, sessions, tokens, vocab)?;
+        let wall = t0.elapsed().as_secs_f64();
+        Ok((wall, server.shutdown()))
+    };
+    let (scalar_wall, scalar_stats) = run_mode(usize::MAX)?;
+    let (batched_wall, batched_stats) = run_mode(2)?;
+
+    let total_tokens = (sessions * tokens) as f64;
+    let mode_json = |wall: f64, stats: &DecodeStats| {
+        Json::obj(vec![
+            ("tokens_per_sec", Json::Num(total_tokens / wall.max(1e-12))),
+            ("ns_per_token", Json::Num(wall / total_tokens.max(1.0) * 1e9)),
+            ("wall_s", Json::Num(wall)),
+            ("micro_batches", Json::Num(stats.micro_batches as f64)),
+            ("mean_micro_batch", Json::Num(stats.mean_micro_batch())),
+            ("batched_steps", Json::Num(stats.batched_steps as f64)),
+            ("step_many_calls", Json::Num(stats.step_many_calls as f64)),
+            ("mean_step_many_width", Json::Num(stats.mean_step_many_width())),
+            ("failed_steps", Json::Num(stats.failed_steps as f64)),
+        ])
+    };
+    let speedup =
+        (total_tokens / batched_wall.max(1e-12)) / (total_tokens / scalar_wall.max(1e-12));
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_decode")),
+        ("sessions", Json::Num(sessions as f64)),
+        ("tokens_per_session", Json::Num(tokens as f64)),
+        ("scalar", mode_json(scalar_wall, &scalar_stats)),
+        ("batched", mode_json(batched_wall, &batched_stats)),
+        ("speedup_tokens_per_sec", Json::Num(speedup)),
+    ]);
+    let json_path = fmmformer::bench::save_report_json("BENCH_decode.json", &doc)?;
+
     println!(
-        "\nhost decoder: {} sessions x {tokens} tokens -> {:.0} tok/s \
-         ({} micro-batches, mean {:.1} steps/batch)",
-        sessions,
-        (sessions * tokens) as f64 / wall,
-        stats.micro_batches,
-        stats.mean_micro_batch(),
+        "\nhost decoder, {sessions} sessions x {tokens} tokens:\n  \
+         scalar  {:>8.0} tok/s ({} micro-batches, mean {:.1} steps/batch)\n  \
+         batched {:>8.0} tok/s ({} step_many calls, mean width {:.1}, \
+         {:.0}% steps batched)\n  speedup {speedup:.2}x tokens/sec",
+        total_tokens / scalar_wall,
+        scalar_stats.micro_batches,
+        scalar_stats.mean_micro_batch(),
+        total_tokens / batched_wall,
+        batched_stats.step_many_calls,
+        batched_stats.mean_step_many_width(),
+        batched_stats.batched_fraction() * 100.0,
     );
+    println!("machine-readable -> {json_path:?}");
     Ok(())
 }

@@ -15,8 +15,24 @@ use fmmformer::cli::Args;
 use fmmformer::data::{text_cls::TextCls, Split, TaskGen};
 use fmmformer::runtime::{load_init_leaves, Runtime};
 use fmmformer::serve::{ServeConfig, Server};
+use fmmformer::util::json::Json;
 
 const BUCKETS: [&str; 3] = ["serve_text_fmm2_b1", "serve_text_fmm2_b4", "serve_text_fmm2_b8"];
+
+/// Persist the machine-readable run summary (BENCH_serve.json): the
+/// perf-trajectory twin of BENCH_decode.json. A skipped run still
+/// writes a stub so downstream tooling sees a parseable file.
+fn save_bench_json(rows: Vec<Json>, skipped: Option<&str>) -> Result<std::path::PathBuf> {
+    let mut pairs = vec![
+        ("bench", Json::str("serve_throughput")),
+        ("skipped", Json::Bool(skipped.is_some())),
+    ];
+    if let Some(reason) = skipped {
+        pairs.push(("reason", Json::str(reason)));
+    }
+    pairs.push(("rows", Json::Arr(rows)));
+    fmmformer::bench::save_report_json("BENCH_serve.json", &Json::obj(pairs))
+}
 
 fn main() -> Result<()> {
     let args = Args::parse(&[])?;
@@ -26,6 +42,8 @@ fn main() -> Result<()> {
     for b in BUCKETS {
         if !rt.has_artifact(b) {
             eprintln!("SKIP: missing {b}; run `make artifacts`");
+            let p = save_bench_json(vec![], Some("missing artifacts"))?;
+            println!("machine-readable -> {p:?}");
             return Ok(());
         }
     }
@@ -39,7 +57,13 @@ fn main() -> Result<()> {
         &["clients", "wait ms", "req/s", "p50", "p95", "occupancy", "pad waste"],
     );
 
+    let mut json_rows: Vec<Json> = Vec::new();
     for &(clients, wait_ms) in &[(1usize, 1u64), (4, 2), (8, 4), (16, 8), (16, 2)] {
+        let per_client = n_requests / clients;
+        if per_client == 0 {
+            eprintln!("SKIP: {clients} clients need >= {clients} requests, have {n_requests}");
+            continue;
+        }
         let server = Server::start(
             dir.clone(),
             &BUCKETS,
@@ -48,7 +72,6 @@ fn main() -> Result<()> {
         )?;
         let t0 = std::time::Instant::now();
         let mut handles = vec![];
-        let per_client = n_requests / clients;
         for c in 0..clients {
             let client = server.client();
             let n = seq_len;
@@ -79,9 +102,20 @@ fn main() -> Result<()> {
             format!("{:.2}", stats.mean_occupancy()),
             format!("{:.2}x", stats.mean_padding_waste()),
         ]);
+        json_rows.push(Json::obj(vec![
+            ("clients", Json::Num(clients as f64)),
+            ("wait_ms", Json::Num(wait_ms as f64)),
+            ("req_per_sec", Json::Num(lats.len() as f64 / wall)),
+            ("p50_s", Json::Num(lats[lats.len() / 2])),
+            ("p95_s", Json::Num(lats[lats.len() * 95 / 100])),
+            ("occupancy", Json::Num(stats.mean_occupancy())),
+            ("pad_waste", Json::Num(stats.mean_padding_waste())),
+        ]));
     }
     tbl.print();
     tbl.save_csv(&report_dir().join("serve_throughput.csv"))?;
+    let p = save_bench_json(json_rows, None)?;
+    println!("machine-readable -> {p:?}");
     println!(
         "expected shape: higher concurrency -> bigger buckets -> higher \
          throughput at bounded p95 (dynamic batching amortizes the fixed \

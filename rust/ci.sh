@@ -4,6 +4,8 @@
 #   ./ci.sh            # tier-1 (hard) + fmt/clippy (advisory: warn only)
 #   ./ci.sh --tier1    # build + test only (the hard gate)
 #   ./ci.sh --strict   # tier-1 + fmt/clippy as hard failures
+#   ./ci.sh --bench    # smoke-run the decode bench at a tiny size and
+#                      # validate the emitted BENCH_decode.json parses
 #
 # Lints are advisory by default because the seed code predates the
 # fmt/clippy gate (see ROADMAP "Open items": lint pass pending); the
@@ -11,6 +13,31 @@
 # deps are vendored under rust/vendor/ (see Cargo.toml).
 set -euo pipefail
 cd "$(dirname "$0")"
+
+if [[ "${1:-}" == "--bench" ]]; then
+    reports="${FMM_REPORTS:-reports}"
+    echo "== bench smoke: serve_decode (tiny) =="
+    FMM_REPORTS="$reports" cargo bench --bench serve_decode -- \
+        --quick --max-n 128 --iters 1 --sessions 8 --tokens 4
+    json="$reports/BENCH_decode.json"
+    if [[ ! -s "$json" ]]; then
+        echo "bench smoke FAILED: missing $json"
+        exit 1
+    fi
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -c 'import json,sys; json.load(open(sys.argv[1]))' "$json" || {
+            echo "bench smoke FAILED: $json is not valid JSON"
+            exit 1
+        }
+    else
+        grep -q '"bench"' "$json" || {
+            echo "bench smoke FAILED: $json missing expected keys"
+            exit 1
+        }
+    fi
+    echo "bench smoke passed: $json"
+    exit 0
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release

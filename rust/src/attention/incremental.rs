@@ -17,6 +17,7 @@
 //! tokens have been decoded, which is the whole point.
 
 use super::{guard_den, FeatureMap};
+use crate::kernel;
 use crate::tensor::Tensor;
 
 /// Per-head decode state: near-field ring buffer + far-field moments.
@@ -161,8 +162,7 @@ impl FmmDecodeState {
         let mut mx = f32::NEG_INFINITY;
         for off in 0..self.ring_len {
             let at = (self.ring_start + off) % slots;
-            let krow = &self.ring_k[at * d..(at + 1) * d];
-            let s: f32 = q_t.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+            let s = kernel::dot(q_t, &self.ring_k[at * d..(at + 1) * d]) * scale;
             self.scores.push(s);
             mx = mx.max(s);
         }
@@ -174,17 +174,17 @@ impl FmmDecodeState {
         self.near.iter_mut().for_each(|x| *x = 0.0);
         for off in 0..self.ring_len {
             let at = (self.ring_start + off) % slots;
-            let w = self.scores[off] / zsum;
             let vrow = &self.ring_v[at * dv..(at + 1) * dv];
-            for (o, x) in self.near.iter_mut().zip(vrow) {
-                *o += w * x;
-            }
+            kernel::axpy(self.scores[off] / zsum, vrow, &mut self.near);
         }
     }
 
     /// Update the running `(S, z)` moments with `(k_t, v_t)` and read
-    /// out the linear-attention row — the same per-kernel accumulation
-    /// order as the causal branch of the batch `linear_attention`.
+    /// out the linear-attention row — the "two GEMMs" of a micro-step,
+    /// per feature map: the rank-1 moment update `S += φ(k)ᵀ·v` and the
+    /// readout `φ(q)·S / den`, both fused kernel primitives shared with
+    /// the causal branch of the batch `linear_attention`, so the two
+    /// paths stay in numerical lockstep.
     fn far_field(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32]) {
         let (d, dv) = (self.d, self.dv);
         self.far.iter_mut().for_each(|x| *x = 0.0);
@@ -196,24 +196,11 @@ impl FmmDecodeState {
                 *p = fm.apply(*x);
             }
             let zk = &mut self.z[ki * d..(ki + 1) * d];
-            for (zz, a) in zk.iter_mut().zip(&self.phi_k) {
-                *zz += a;
-            }
+            kernel::axpy(1.0, &self.phi_k, zk);
             let sk = &mut self.s[ki * d * dv..(ki + 1) * d * dv];
-            for (di, a) in self.phi_k.iter().enumerate() {
-                let srow = &mut sk[di * dv..(di + 1) * dv];
-                for (ss, x) in srow.iter_mut().zip(v_t) {
-                    *ss += a * x;
-                }
-            }
-            let den =
-                guard_den(self.phi_q.iter().zip(&*zk).map(|(a, b)| a * b).sum::<f32>());
-            for (di, a) in self.phi_q.iter().enumerate() {
-                let srow = &sk[di * dv..(di + 1) * dv];
-                for (o, ss) in self.far.iter_mut().zip(srow) {
-                    *o += a * ss / den;
-                }
-            }
+            kernel::rank1_update(sk, &self.phi_k, v_t);
+            let den = guard_den(kernel::dot(&self.phi_q, zk));
+            kernel::vecmat_acc(&self.phi_q, sk, 1.0 / den, &mut self.far);
         }
     }
 
@@ -224,6 +211,62 @@ impl FmmDecodeState {
         (cap * (self.d + self.dv) + self.kernels.len() * self.d * (self.dv + 1))
             * std::mem::size_of::<f32>()
     }
+}
+
+/// Sessions per worker shard in [`step_many`]. One per-head micro-step
+/// is a microsecond of work while a scoped spawn costs tens of
+/// microseconds, so a shard must carry a few dozen sessions to pay for
+/// its worker; narrower stacks run inline.
+const MIN_SESSIONS_PER_SHARD: usize = 24;
+
+/// Advance many per-head decode states by one token each — the batched
+/// micro-step behind the [`crate::serve::decode`] scheduler.
+///
+/// `q`/`k` stack one `d`-row per state (`states.len() × d`, row-major),
+/// `v` and `out` one `dv`-row per state. Row `i` of `out` receives
+/// exactly what `states[i].step_into(q_i, k_i, v_i, ..)` would produce —
+/// the batched path reuses the same fused kernel primitives (the rank-1
+/// moment GEMM and the `φ(q)·S` readout), so results match the scalar
+/// path bit-for-bit. Per-state moments are independent, making the
+/// stacked update a block-diagonal batch of small GEMMs; wide stacks
+/// shard across [`kernel::parallel_chunks`] workers.
+///
+/// All states must share `d`/`dv` (they do, coming from one model
+/// config); bandwidth/kernels/weights may in principle differ per state
+/// and are honored per state.
+pub fn step_many(
+    states: &mut [&mut FmmDecodeState],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+) {
+    let b = states.len();
+    if b == 0 {
+        return;
+    }
+    let (d, dv) = (states[0].d, states[0].dv);
+    assert!(
+        states.iter().all(|s| s.d == d && s.dv == dv),
+        "step_many states must share head dims"
+    );
+    assert_eq!(q.len(), b * d, "q stack width");
+    assert_eq!(k.len(), b * d, "k stack width");
+    assert_eq!(v.len(), b * dv, "v stack width");
+    assert_eq!(out.len(), b * dv, "out stack width");
+    let mut jobs: Vec<(&mut FmmDecodeState, &mut [f32])> =
+        states.iter_mut().map(|s| &mut **s).zip(out.chunks_mut(dv)).collect();
+    kernel::parallel_chunks(&mut jobs, MIN_SESSIONS_PER_SHARD, |start, chunk| {
+        for (off, (st, orow)) in chunk.iter_mut().enumerate() {
+            let i = start + off;
+            st.step_into(
+                &q[i * d..(i + 1) * d],
+                &k[i * d..(i + 1) * d],
+                &v[i * dv..(i + 1) * dv],
+                orow,
+            );
+        }
+    });
 }
 
 /// Test/bench helper: decode a whole single-head sequence step by step.
@@ -321,6 +364,44 @@ mod tests {
             assert_eq!(a, b);
         }
         assert_eq!(st.position(), first.position());
+    }
+
+    #[test]
+    fn step_many_is_bit_identical_to_scalar_steps() {
+        // b = 5 runs inline; b = 60 exceeds MIN_SESSIONS_PER_SHARD, so
+        // the thread-sharded path (and its start-offset arithmetic) is
+        // exercised too. Per-state math is identical either way.
+        for b in [5usize, 60] {
+            let (d, dv, bw) = (4usize, 3usize, 2usize);
+            let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+            let mut batched: Vec<FmmDecodeState> = (0..b)
+                .map(|_| FmmDecodeState::new(d, dv, bw, &kernels, 0.7, 0.4))
+                .collect();
+            let mut scalar = batched.clone();
+            let mut rng = Pcg64::seeded(9 + b as u64);
+            for _t in 0..12 {
+                let q = rng.normals(b * d);
+                let k = rng.normals(b * d);
+                let v = rng.normals(b * dv);
+                let mut out = vec![0.0f32; b * dv];
+                let mut refs: Vec<&mut FmmDecodeState> = batched.iter_mut().collect();
+                step_many(&mut refs, &q, &k, &v, &mut out);
+                for (i, st) in scalar.iter_mut().enumerate() {
+                    let want = st.step(
+                        &q[i * d..(i + 1) * d],
+                        &k[i * d..(i + 1) * d],
+                        &v[i * dv..(i + 1) * dv],
+                    );
+                    assert_eq!(&out[i * dv..(i + 1) * dv], &want[..], "b {b} state {i}");
+                }
+            }
+            assert!(batched.iter().all(|s| s.position() == 12));
+        }
+    }
+
+    #[test]
+    fn step_many_empty_stack_is_noop() {
+        step_many(&mut [], &[], &[], &[], &mut []);
     }
 
     #[test]

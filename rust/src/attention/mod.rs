@@ -17,6 +17,7 @@ pub mod incremental;
 
 pub use incremental::FmmDecodeState;
 
+use crate::kernel;
 use crate::tensor::Tensor;
 
 /// Denominator guard shared with the Python side (kernels/ref.py DEN_EPS).
@@ -73,15 +74,22 @@ pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Te
 pub fn softmax_attention_weights(q: &Tensor, k: &Tensor, causal: bool) -> Tensor {
     let d = q.shape()[1];
     let mut scores = q.matmul(&k.t()).expect("shape").scale(1.0 / (d as f32).sqrt());
-    if causal {
-        let n = scores.shape()[0];
-        for i in 0..n {
-            for j in (i + 1)..n {
-                scores.set(i, j, f32::NEG_INFINITY);
-            }
-        }
+    if !causal {
+        return scores.softmax_rows();
     }
-    scores.softmax_rows()
+    // Causal: softmax each row's prefix in place and zero the upper
+    // triangle with direct slice writes — one pass, no O(N²)
+    // bounds-checked NEG_INFINITY stores. Identical results: the masked
+    // entries contributed exp(-inf) = 0 to the row sum before.
+    let (n, cols) = (scores.shape()[0], scores.shape()[1]);
+    let data = scores.data_mut();
+    for i in 0..n {
+        let row = &mut data[i * cols..(i + 1) * cols];
+        let (active, masked) = row.split_at_mut((i + 1).min(cols));
+        kernel::softmax_inplace(active);
+        masked.fill(0.0);
+    }
+    scores
 }
 
 /// Banded (near-field) attention `D V`, O(N·k·d) — the band only.
@@ -101,29 +109,29 @@ pub fn banded_attention(
         return out;
     }
     let scale = 1.0 / (d as f32).sqrt();
-    let mut scores = Vec::with_capacity(2 * bandwidth + 1);
+    // One scratch score row for the whole sweep (band width is bounded);
+    // fused dot/axpy in the inner loop — steady state allocates nothing.
+    let band_cap = bandwidth.saturating_mul(2).saturating_add(1).min(n);
+    let mut scores = kernel::scratch(band_cap);
+    let out_data = out.data_mut();
     for i in 0..n {
         let lo = i.saturating_sub(bandwidth);
         let hi = if causal { i } else { (i + bandwidth).min(n - 1) };
-        scores.clear();
+        let srow = &mut scores[..hi - lo + 1];
         let mut mx = f32::NEG_INFINITY;
-        for j in lo..=hi {
-            let s: f32 = q.row(i).iter().zip(k.row(j)).map(|(a, b)| a * b).sum::<f32>()
-                * scale;
-            scores.push(s);
+        for (off, j) in (lo..=hi).enumerate() {
+            let s = kernel::dot(q.row(i), k.row(j)) * scale;
+            srow[off] = s;
             mx = mx.max(s);
         }
         let mut z = 0.0;
-        for s in &mut scores {
+        for s in srow.iter_mut() {
             *s = (*s - mx).exp();
             z += *s;
         }
-        let orow = &mut out.data_mut()[i * dv..(i + 1) * dv];
+        let orow = &mut out_data[i * dv..(i + 1) * dv];
         for (off, j) in (lo..=hi).enumerate() {
-            let w = scores[off] / z;
-            for (o, x) in orow.iter_mut().zip(v.row(j)) {
-                *o += w * x;
-            }
+            kernel::axpy(srow[off] / z, v.row(j), orow);
         }
     }
     out
@@ -141,51 +149,54 @@ pub fn linear_attention(
     let d = q.shape()[1];
     let dv = v.shape()[1];
     let mut out = Tensor::zeros(&[n, dv]);
+    if n == 0 {
+        return out;
+    }
+    // Scratch images/moments reused across every feature map (and across
+    // calls, via the kernel arena): phi(Q), phi(K) (n×d), S (d×dv),
+    // z (d), and the non-causal numerator (n×dv).
+    let mut pq = kernel::scratch(n * d);
+    let mut pk = kernel::scratch(n * d);
+    let mut s = kernel::scratch(d * dv);
+    let mut z = kernel::scratch(d);
+    let mut num = kernel::scratch(if causal { 0 } else { n * dv });
     for fm in kernels {
-        let pq = q.clone().map(|x| fm.apply(x));
-        let pk = k.clone().map(|x| fm.apply(x));
+        for (p, x) in pq.iter_mut().zip(q.data()) {
+            *p = fm.apply(*x);
+        }
+        for (p, x) in pk.iter_mut().zip(k.data()) {
+            *p = fm.apply(*x);
+        }
         if causal {
-            // Running prefix state S (d×dv) and z (d).
-            let mut s = vec![0.0f32; d * dv];
-            let mut z = vec![0.0f32; d];
+            // Running prefix moments S (d×dv) and z (d), advanced and
+            // read out with the same fused primitives the incremental
+            // decode state uses — the two stay in lockstep.
+            s.fill(0.0);
+            z.fill(0.0);
             for i in 0..n {
-                for (a, zz) in pk.row(i).iter().zip(z.iter_mut()) {
-                    *zz += a;
-                }
-                for (di, a) in pk.row(i).iter().enumerate() {
-                    let srow = &mut s[di * dv..(di + 1) * dv];
-                    for (ss, x) in srow.iter_mut().zip(v.row(i)) {
-                        *ss += a * x;
-                    }
-                }
-                let den = guard_den(
-                    pq.row(i).iter().zip(&z).map(|(a, b)| a * b).sum::<f32>(),
-                );
+                let pk_i = &pk[i * d..(i + 1) * d];
+                kernel::axpy(1.0, pk_i, &mut z);
+                kernel::rank1_update(&mut s, pk_i, v.row(i));
+                let pq_i = &pq[i * d..(i + 1) * d];
+                let den = guard_den(kernel::dot(pq_i, &z));
                 let orow = &mut out.data_mut()[i * dv..(i + 1) * dv];
-                for (di, a) in pq.row(i).iter().enumerate() {
-                    let srow = &s[di * dv..(di + 1) * dv];
-                    for (o, ss) in orow.iter_mut().zip(srow) {
-                        *o += a * ss / den;
-                    }
-                }
+                kernel::vecmat_acc(pq_i, &s, 1.0 / den, orow);
             }
         } else {
-            // Moments S = phi(K)^T V and z = sum phi(K).
-            let s = pk.t().matmul(v).expect("shape");
-            let mut z = vec![0.0f32; d];
-            for j in 0..n {
-                for (zz, a) in z.iter_mut().zip(pk.row(j)) {
-                    *zz += a;
-                }
-            }
-            let num = pq.matmul(&s).expect("shape");
+            // Moments S = phi(K)^T V and z = sum phi(K), then one GEMM
+            // for the numerator phi(Q) S.
+            kernel::matmul_tn(&pk, v.data(), &mut s, n, d, dv);
+            z.fill(0.0);
             for i in 0..n {
-                let den = guard_den(
-                    pq.row(i).iter().zip(&z).map(|(a, b)| a * b).sum::<f32>(),
-                );
+                kernel::axpy(1.0, &pk[i * d..(i + 1) * d], &mut z);
+            }
+            kernel::matmul(&pq, &s, &mut num, n, d, dv);
+            for i in 0..n {
+                let den = guard_den(kernel::dot(&pq[i * d..(i + 1) * d], &z));
+                let inv = 1.0 / den;
                 let orow = &mut out.data_mut()[i * dv..(i + 1) * dv];
-                for (o, nm) in orow.iter_mut().zip(num.row(i)) {
-                    *o += nm / den;
+                for (o, nm) in orow.iter_mut().zip(&num[i * dv..(i + 1) * dv]) {
+                    *o += nm * inv;
                 }
             }
         }

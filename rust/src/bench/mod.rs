@@ -176,6 +176,17 @@ pub fn fmt_time(s: f64) -> String {
     human_secs(s)
 }
 
+/// Write a machine-readable bench report under [`report_dir`] and
+/// return its path — the `BENCH_*.json` contract that `ci.sh --bench`
+/// validates (file exists and parses).
+pub fn save_report_json(file_name: &str, doc: &Json) -> Result<std::path::PathBuf> {
+    let dir = report_dir();
+    std::fs::create_dir_all(&dir).ok();
+    let path = dir.join(file_name);
+    std::fs::write(&path, doc.to_string())?;
+    Ok(path)
+}
+
 /// Where bench reports land (`reports/` beside the artifacts).
 pub fn report_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(

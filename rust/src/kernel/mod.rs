@@ -1,0 +1,320 @@
+//! Shared host-CPU kernel layer — the measured hot-path primitives.
+//!
+//! Everything the host engine does in its inner loops funnels through
+//! this module so the constant factor is paid down in exactly one place:
+//!
+//! * [`matmul`] — blocked GEMM: B is transposed once into cache-friendly
+//!   row panels (scratch-backed, no allocation when warm), rows then
+//!   reduce via the unrolled [`dot`], and large products shard rows
+//!   across [`parallel::parallel_rows`] workers. Small/skinny shapes
+//!   fall back to the ikj loop, which is already optimal for GEMV-like
+//!   sizes and keeps the decode path's per-row results independent of
+//!   how many rows ride one call.
+//! * Fused level-1/level-2 primitives — [`dot`], [`axpy`],
+//!   [`rank1_update`] (the far-field moment update `S += φ(k)ᵀ·v`),
+//!   [`vecmat_acc`] (the far-field readout `out += φ(q)·S / den`), and
+//!   [`softmax_inplace`] — shared by the batch attentions in
+//!   [`crate::attention`] and the incremental decode recurrence, so the
+//!   two stay in numerical lockstep.
+//! * [`scratch`] — a per-thread buffer arena; steady-state attention
+//!   and decode calls allocate nothing.
+//! * [`parallel`] — `std::thread`-scoped row/chunk sharding with
+//!   work-size gates (no external deps).
+//!
+//! Within a chosen path, each output element reduces in an order that
+//! does not depend on how many rows share the call; path selection
+//! itself keys on the row count, so a row batched with ≥ 8 peers may
+//! take the packed reduction where a lone GEMV row takes ikj. The
+//! batched decode scheduler ([`crate::serve::decode`]) therefore
+//! reproduces the scalar path within float round-off (pinned < 1e-4 by
+//! the decode tests), not bitwise.
+
+pub mod parallel;
+pub mod scratch;
+
+pub use parallel::{max_threads, parallel_chunks, parallel_rows};
+pub use scratch::{scratch, Scratch};
+
+/// Shapes with at least this many rows *and* this reduction depth take
+/// the packed (transpose + dot) path; below it, ikj wins (no packing
+/// overhead, GEMV-friendly).
+const PACK_MIN_ROWS: usize = 8;
+const PACK_MIN_DEPTH: usize = 8;
+
+/// Minimum multiply-adds per worker before row-sharding a matmul.
+const PAR_MIN_FLOPS: usize = 1 << 21;
+const PAR_MIN_ROWS: usize = 16;
+
+/// Unrolled dot product (4 independent accumulators for ILP/SIMD).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() & !3;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut i = 0;
+    while i < n4 {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < a.len() {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// `y += alpha * x`, element-wise.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yy, xx) in y.iter_mut().zip(x) {
+        *yy += alpha * *xx;
+    }
+}
+
+/// Rank-1 update `S += x ⊗ y` on a row-major `x.len() × y.len()` matrix
+/// — the far-field moment update `S += φ(k)ᵀ·v` as one fused call.
+#[inline]
+pub fn rank1_update(s: &mut [f32], x: &[f32], y: &[f32]) {
+    if y.is_empty() {
+        return;
+    }
+    debug_assert_eq!(s.len(), x.len() * y.len());
+    for (&xi, srow) in x.iter().zip(s.chunks_mut(y.len())) {
+        axpy(xi, y, srow);
+    }
+}
+
+/// `out += scale * (xᵀ S)` for row-major `S (x.len() × out.len())` — the
+/// far-field readout `out += φ(q)·S / den` with `scale = 1/den`.
+#[inline]
+pub fn vecmat_acc(x: &[f32], s: &[f32], scale: f32, out: &mut [f32]) {
+    if out.is_empty() {
+        return;
+    }
+    debug_assert_eq!(s.len(), x.len() * out.len());
+    for (&xi, srow) in x.iter().zip(s.chunks(out.len())) {
+        let c = xi * scale;
+        if c != 0.0 {
+            axpy(c, srow, out);
+        }
+    }
+}
+
+/// In-place row softmax: max-shifted exp, normalized by the sum — the
+/// same guard semantics as `Tensor::softmax_rows` (an all-`-inf` row
+/// becomes all zeros; empty rows are untouched).
+#[inline]
+pub fn softmax_inplace(row: &mut [f32]) {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if mx == f32::NEG_INFINITY {
+        row.fill(0.0);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    for x in row.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// Blocked GEMM: `out = a @ b` for row-major `a (m×k)`, `b (k×n)`,
+/// `out (m×n)`. Overwrites `out`. Zero dimensions are fine (out is
+/// zero-filled). Within a path, per-row results are independent of
+/// `m`; the path itself switches at `m >= 8`, so batched and lone
+/// computations of the same row agree to round-off, not bitwise.
+pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k, "a shape");
+    debug_assert_eq!(b.len(), k * n, "b shape");
+    debug_assert_eq!(out.len(), m * n, "out shape");
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if m < PACK_MIN_ROWS || k < PACK_MIN_DEPTH {
+        matmul_ikj(a, b, out, k, n);
+        return;
+    }
+    scratch::with(n * k, |bt| {
+        transpose(b, bt, k, n);
+        let bt: &[f32] = bt;
+        let min_rows = (PAR_MIN_FLOPS / (k * n).max(1)).max(PAR_MIN_ROWS);
+        parallel_rows(out, n, min_rows, |row0, rows| {
+            for (ri, orow) in rows.chunks_mut(n).enumerate() {
+                let i = row0 + ri;
+                let arow = &a[i * k..(i + 1) * k];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = dot(arow, &bt[j * k..(j + 1) * k]);
+                }
+            }
+        });
+    });
+}
+
+/// `out = aᵀ @ b` for row-major `a (rows×d)`, `b (rows×dv)`,
+/// `out (d×dv)` — the non-causal far-field moment `S = φ(K)ᵀ V` without
+/// materializing the transpose (accumulates rank-1 row updates, the
+/// same order the causal recurrence uses).
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, d: usize, dv: usize) {
+    debug_assert_eq!(a.len(), rows * d, "a shape");
+    debug_assert_eq!(b.len(), rows * dv, "b shape");
+    debug_assert_eq!(out.len(), d * dv, "out shape");
+    out.fill(0.0);
+    for i in 0..rows {
+        rank1_update(out, &a[i * d..(i + 1) * d], &b[i * dv..(i + 1) * dv]);
+    }
+}
+
+/// ikj GEMM (accumulate-by-row); skips zero `a` entries, matching the
+/// seed `Tensor::matmul` semantics. Good for small/skinny shapes.
+fn matmul_ikj(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    for (arow, orow) in a.chunks(k).zip(out.chunks_mut(n)) {
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            axpy(av, &b[kk * n..(kk + 1) * n], orow);
+        }
+    }
+}
+
+/// Tiled transpose of row-major `src (k×n)` into `dst (n×k)`.
+fn transpose(src: &[f32], dst: &mut [f32], k: usize, n: usize) {
+    const TILE: usize = 32;
+    for j0 in (0..n).step_by(TILE) {
+        let j1 = (j0 + TILE).min(n);
+        for k0 in (0..k).step_by(TILE) {
+            let k1 = (k0 + TILE).min(k);
+            for j in j0..j1 {
+                for kk in k0..k1 {
+                    dst[j * k + kk] = src[kk * n + j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testutil::assert_close;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dot_matches_reference_across_lengths() {
+        let mut rng = Pcg64::seeded(0);
+        for len in [0usize, 1, 3, 4, 5, 8, 31, 64, 127] {
+            let a = rng.normals(len);
+            let b = rng.normals(len);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-4, "len {len}");
+        }
+    }
+
+    #[test]
+    fn matmul_both_paths_match_naive() {
+        let mut rng = Pcg64::seeded(1);
+        // (m, k, n) straddling the packed-path thresholds.
+        for (m, k, n) in
+            [(1, 32, 32), (4, 8, 8), (8, 8, 1), (8, 8, 8), (16, 33, 7), (33, 64, 20)]
+        {
+            let a = rng.normals(m * k);
+            let b = rng.normals(k * n);
+            let mut out = vec![1.0f32; m * n]; // nonzero: matmul must overwrite
+            matmul(&a, &b, &mut out, m, k, n);
+            assert_close(&out, &naive(&a, &b, m, k, n), 1e-4, &format!("{m}x{k}x{n}"))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn matmul_zero_dims_zero_fill() {
+        for (m, k, n) in [(0, 3, 4), (3, 0, 4), (3, 4, 0), (0, 0, 0)] {
+            let a = vec![1.0f32; m * k];
+            let b = vec![1.0f32; k * n];
+            let mut out = vec![9.0f32; m * n];
+            matmul(&a, &b, &mut out, m, k, n);
+            assert!(out.iter().all(|&x| x == 0.0), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_rows_independent_of_batch_width() {
+        // The decode scheduler relies on this: a row computed in a
+        // stacked call equals the same row computed alone.
+        let mut rng = Pcg64::seeded(2);
+        let (m, k, n) = (24, 32, 16);
+        let a = rng.normals(m * k);
+        let b = rng.normals(k * n);
+        let mut stacked = vec![0.0f32; m * n];
+        matmul(&a, &b, &mut stacked, m, k, n);
+        for i in [0usize, 7, 23] {
+            let mut single = vec![0.0f32; n];
+            matmul(&a[i * k..(i + 1) * k], &b, &mut single, 1, k, n);
+            assert_close(&single, &stacked[i * n..(i + 1) * n], 1e-5, &format!("row {i}"))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let mut rng = Pcg64::seeded(3);
+        let (rows, d, dv) = (13, 6, 5);
+        let a = rng.normals(rows * d);
+        let b = rng.normals(rows * dv);
+        let mut got = vec![0.0f32; d * dv];
+        matmul_tn(&a, &b, &mut got, rows, d, dv);
+        let mut at = vec![0.0f32; d * rows];
+        transpose(&a, &mut at, rows, d);
+        assert_close(&got, &naive(&at, &b, d, rows, dv), 1e-4, "matmul_tn").unwrap();
+    }
+
+    #[test]
+    fn rank1_and_vecmat_roundtrip() {
+        let x = [1.0f32, 2.0, -1.0];
+        let y = [3.0f32, 0.5];
+        let mut s = vec![0.0f32; 6];
+        rank1_update(&mut s, &x, &y);
+        assert_eq!(s, vec![3.0, 0.5, 6.0, 1.0, -3.0, -0.5]);
+        let mut out = vec![0.0f32; 2];
+        vecmat_acc(&x, &s, 0.5, &mut out);
+        // xᵀ S = [3+12+3, 0.5+2+0.5] = [18, 3]; scaled by 0.5.
+        assert!((out[0] - 9.0).abs() < 1e-6 && (out[1] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_inplace_matches_tensor_rows() {
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut row);
+        let t = crate::tensor::Tensor::new(&[1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let want = t.softmax_rows();
+        for (a, b) in row.iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-7);
+        }
+        let mut masked = vec![f32::NEG_INFINITY; 4];
+        softmax_inplace(&mut masked);
+        assert!(masked.iter().all(|&x| x == 0.0));
+        softmax_inplace(&mut []);
+    }
+}

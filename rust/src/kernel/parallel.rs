@@ -1,0 +1,157 @@
+//! Row/chunk sharding across `std::thread` scoped workers — no deps.
+//!
+//! Both entry points are work-gated: callers pass the minimum number of
+//! items (or rows) that justifies a worker, and anything below that runs
+//! inline on the caller's thread. Thread spawns cost tens of
+//! microseconds, so the gates are sized for workloads in the hundreds of
+//! microseconds and up; the serve path's tiny per-token GEMMs stay
+//! serial while the analysis-sized matmuls and wide decode micro-batches
+//! fan out.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker ceiling (cached). `FMM_THREADS` overrides detection.
+pub fn max_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let n = CACHED.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    let n = std::env::var("FMM_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .clamp(1, 64);
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Shard `items` into contiguous chunks across scoped worker threads.
+/// `f(start, chunk)` receives each chunk plus the index of its first
+/// item. Runs inline when the slice is smaller than `2 * min_per_thread`
+/// or only one worker would be used.
+pub fn parallel_chunks<T, F>(items: &mut [T], min_per_thread: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let min_per = min_per_thread.max(1);
+    let workers = max_threads().min(n / min_per).max(1);
+    if workers <= 1 {
+        f(0, items);
+        return;
+    }
+    let per = n.div_ceil(workers);
+    let fref = &f;
+    std::thread::scope(|scope| {
+        let mut start = 0usize;
+        let mut rest = items;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            scope.spawn(move || fref(start, head));
+            start += take;
+        }
+    });
+}
+
+/// Shard the rows of a row-major `rows x row_len` buffer across workers.
+/// `f(first_row, rows_slice)` gets whole rows only — chunk boundaries
+/// never split a row.
+pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, min_rows_per_thread: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if out.is_empty() || row_len == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % row_len, 0, "buffer must be whole rows");
+    let rows = out.len() / row_len;
+    let min_rows = min_rows_per_thread.max(1);
+    let workers = max_threads().min(rows / min_rows).max(1);
+    if workers <= 1 {
+        f(0, out);
+        return;
+    }
+    let per = rows.div_ceil(workers);
+    let fref = &f;
+    std::thread::scope(|scope| {
+        let mut row0 = 0usize;
+        let mut rest = out;
+        while !rest.is_empty() {
+            let take_rows = per.min(rest.len() / row_len);
+            let (head, tail) =
+                std::mem::take(&mut rest).split_at_mut(take_rows * row_len);
+            rest = tail;
+            scope.spawn(move || fref(row0, head));
+            row0 += take_rows;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_every_item_with_correct_offsets() {
+        let mut items: Vec<usize> = vec![0; 103];
+        parallel_chunks(&mut items, 1, |start, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = start + off;
+            }
+        });
+        for (i, &x) in items.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn small_input_runs_inline() {
+        let mut items = vec![0u8; 3];
+        parallel_chunks(&mut items, 100, |start, chunk| {
+            assert_eq!(start, 0);
+            assert_eq!(chunk.len(), 3);
+            chunk.iter_mut().for_each(|x| *x = 1);
+        });
+        assert_eq!(items, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn rows_never_split() {
+        let row_len = 7;
+        let rows = 29;
+        let mut buf = vec![0.0f32; rows * row_len];
+        parallel_rows(&mut buf, row_len, 1, |first_row, chunk| {
+            assert_eq!(chunk.len() % row_len, 0);
+            for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                row.iter_mut().for_each(|x| *x = (first_row + r) as f32);
+            }
+        });
+        for (r, row) in buf.chunks(row_len).enumerate() {
+            assert!(row.iter().all(|&x| x == r as f32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        parallel_chunks::<f32, _>(&mut [], 1, |_, _| panic!("no work"));
+        parallel_rows(&mut [], 4, 1, |_, _| panic!("no work"));
+    }
+
+    #[test]
+    fn max_threads_is_positive_and_stable() {
+        let a = max_threads();
+        let b = max_threads();
+        assert!(a >= 1);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,115 @@
+//! Thread-local scratch-buffer arena.
+//!
+//! The attention and decode hot paths need short-lived f32 workspaces
+//! (transposed matmul panels, phi(Q)/phi(K) images, banded score rows).
+//! Allocating them per call is the single biggest constant-factor tax on
+//! the host engine, so [`scratch`] checks buffers out of a per-thread
+//! pool instead: steady-state callers allocate nothing — a buffer is
+//! popped, resized (a memset, not a malloc, once warm), and returned to
+//! the pool when its [`Scratch`] guard drops.
+//!
+//! Buffers come back zero-filled, so callers can accumulate into them
+//! directly. Nesting is fine: each [`scratch`] call pops a distinct
+//! buffer, and guards may drop in any order.
+
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+
+/// Max buffers retained per thread; beyond this, dropped guards free
+/// their memory instead (bounds idle-thread footprint).
+const POOL_CAP: usize = 8;
+
+thread_local! {
+    static POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A checked-out scratch buffer; derefs to `[f32]`. Returns its storage
+/// to the thread's pool on drop.
+pub struct Scratch {
+    buf: Vec<f32>,
+}
+
+impl Deref for Scratch {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl DerefMut for Scratch {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        // try_with: TLS may already be torn down during thread exit.
+        let _ = POOL.try_with(|p| {
+            let mut p = p.borrow_mut();
+            if p.len() < POOL_CAP {
+                p.push(buf);
+            }
+        });
+    }
+}
+
+/// Check a zero-filled buffer of `len` floats out of the thread pool.
+pub fn scratch(len: usize) -> Scratch {
+    let mut buf = POOL
+        .try_with(|p| p.borrow_mut().pop())
+        .ok()
+        .flatten()
+        .unwrap_or_default();
+    buf.clear();
+    buf.resize(len, 0.0);
+    Scratch { buf }
+}
+
+/// Run `f` with a zero-filled scratch buffer of `len` floats.
+pub fn with<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    let mut g = scratch(len);
+    f(&mut g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_come_back_zeroed_after_reuse() {
+        {
+            let mut a = scratch(16);
+            a.iter_mut().for_each(|x| *x = 7.0);
+        }
+        let b = scratch(16);
+        assert!(b.iter().all(|&x| x == 0.0));
+        assert_eq!(b.len(), 16);
+    }
+
+    #[test]
+    fn nested_checkouts_are_distinct() {
+        let mut a = scratch(4);
+        let mut b = scratch(4);
+        a[0] = 1.0;
+        b[0] = 2.0;
+        assert_eq!((a[0], b[0]), (1.0, 2.0));
+    }
+
+    #[test]
+    fn with_returns_closure_value() {
+        let sum = with(8, |buf| {
+            buf.iter_mut().enumerate().for_each(|(i, x)| *x = i as f32);
+            buf.iter().sum::<f32>()
+        });
+        assert_eq!(sum, 28.0);
+    }
+
+    #[test]
+    fn zero_length_is_fine() {
+        let g = scratch(0);
+        assert!(g.is_empty());
+    }
+}

@@ -25,6 +25,7 @@
 //! | [`linalg`] | Jacobi SVD, ε-rank (Fig. 3 study) |
 //! | [`attention`] | pure-Rust reference attentions (baseline comparator) |
 //! | [`attention::incremental`] | O(1)-per-token decode state (ring buffer + far-field moments) |
+//! | [`kernel`] | shared host hot-path layer: blocked matmul, fused dot/axpy/softmax, scratch arena, thread sharding |
 //! | [`data`] | synthetic task + corpus generators (copy, 5 LRA proxies, LM) |
 //! | [`runtime`] | PJRT client, artifact/manifest/checkpoint I/O, param store |
 //! | [`train`] | training/eval loops, metrics, checkpoints |
@@ -41,6 +42,7 @@ pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod kernel;
 pub mod linalg;
 pub mod rng;
 pub mod runtime;

@@ -238,6 +238,7 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         DecodeServerConfig {
             max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
             max_steps: args.usize_or("max-steps", 64)?,
+            batch_threshold: args.usize_or("batch-threshold", 2)?,
         },
     );
     let client = server.client();
@@ -268,6 +269,12 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         stats.micro_batches,
         stats.mean_micro_batch(),
         stats.failed_steps,
+    );
+    println!(
+        "batched micro-steps: {:.0}% of steps via step_many ({} calls, mean width {:.1})",
+        stats.batched_fraction() * 100.0,
+        stats.step_many_calls,
+        stats.mean_step_many_width(),
     );
     Ok(())
 }

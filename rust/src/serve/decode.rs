@@ -38,7 +38,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::attention::{fmm_attention, FeatureMap, FmmDecodeState};
+use crate::attention::{fmm_attention, incremental, FeatureMap, FmmDecodeState};
+use crate::kernel;
 use crate::rng::Pcg64;
 use crate::tensor::Tensor;
 
@@ -258,6 +259,80 @@ impl DecoderSession {
     }
 }
 
+/// Advance many sessions by one token each with stacked compute — the
+/// batched micro-step the [`DecodeServer`] scheduler drives.
+///
+/// Every row-local op (embedding gather, RMS-norms, the Q/K/V/O and MLP
+/// projections, the vocab readout) runs as one `B`-row GEMM over the
+/// stacked batch instead of `B` separate GEMVs, and the per-head
+/// attention states advance through [`incremental::step_many`] (batched
+/// moment GEMMs, thread-sharded when wide). Row `i` of the result
+/// reproduces `sessions[i].step(tokens[i])` within float round-off:
+/// the attention recurrence runs the identical scalar code per state,
+/// and the GEMMs reduce each output row independently (wide stacks may
+/// take the packed kernel path, which reorders the reduction — pinned
+/// < 1e-4 by `tests/decode_engine.rs`).
+///
+/// All sessions must share one model (`Arc` identity); any invalid
+/// token fails the whole call *before* any state is touched, so the
+/// scheduler pre-validates and keeps singletons/out-of-vocab steps on
+/// the scalar path.
+pub fn step_many(
+    sessions: &mut [&mut DecoderSession],
+    tokens: &[i32],
+) -> Result<Vec<Vec<f32>>> {
+    let b = sessions.len();
+    assert_eq!(tokens.len(), b, "one token per session");
+    if b == 0 {
+        return Ok(Vec::new());
+    }
+    let model = sessions[0].model.clone();
+    if !sessions.iter().all(|s| Arc::ptr_eq(&s.model, &model)) {
+        bail!("step_many requires sessions sharing one model");
+    }
+    let cfg = model.config();
+    let d = cfg.d_model;
+    let dh = d / cfg.heads;
+    let mut x = Tensor::zeros(&[b, d]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let row = model.embed_row(tok)?;
+        x.data_mut()[i * d..(i + 1) * d].copy_from_slice(row.data());
+    }
+    for l in 0..cfg.layers {
+        x = model.block(l, &x, |qt, kt, vt| {
+            let mut a = Tensor::zeros(&[b, d]);
+            // Per-head column panels, scratch-backed: gather the head's
+            // columns contiguously, advance the stacked states, scatter
+            // the outputs back. No steady-state allocation.
+            let mut qh = kernel::scratch(b * dh);
+            let mut kh = kernel::scratch(b * dh);
+            let mut vh = kernel::scratch(b * dh);
+            let mut oh = kernel::scratch(b * dh);
+            for head in 0..cfg.heads {
+                let lo = head * dh;
+                for i in 0..b {
+                    qh[i * dh..(i + 1) * dh].copy_from_slice(&qt.row(i)[lo..lo + dh]);
+                    kh[i * dh..(i + 1) * dh].copy_from_slice(&kt.row(i)[lo..lo + dh]);
+                    vh[i * dh..(i + 1) * dh].copy_from_slice(&vt.row(i)[lo..lo + dh]);
+                }
+                let mut states: Vec<&mut FmmDecodeState> =
+                    sessions.iter_mut().map(|s| &mut s.states[l][head]).collect();
+                incremental::step_many(&mut states, &qh, &kh, &vh, &mut oh);
+                for i in 0..b {
+                    a.data_mut()[i * d + lo..i * d + lo + dh]
+                        .copy_from_slice(&oh[i * dh..(i + 1) * dh]);
+                }
+            }
+            Ok(a)
+        })?;
+    }
+    for s in sessions.iter_mut() {
+        s.pos += 1;
+    }
+    let logits = rms_norm(&x).matmul(&model.w_out)?;
+    Ok((0..b).map(|i| logits.row(i).to_vec()).collect())
+}
+
 /// Exactness probe shared by the demos: stream `tokens` through a
 /// fresh session and return the max |logit diff| against
 /// `batch_logits` (the `forward_batch` output for the same tokens,
@@ -367,11 +442,20 @@ pub struct DecodeServerConfig {
     pub max_wait: Duration,
     /// Max steps drained per wake-up across all sessions.
     pub max_steps: usize,
+    /// Rounds of at least this many distinct sessions take the batched
+    /// [`step_many`] path; smaller rounds (singleton wake-ups) run the
+    /// scalar `step`. `usize::MAX` disables batching entirely — the
+    /// PR 1 scalar-loop scheduler, kept as the bench baseline.
+    pub batch_threshold: usize,
 }
 
 impl Default for DecodeServerConfig {
     fn default() -> Self {
-        DecodeServerConfig { max_wait: Duration::from_millis(2), max_steps: 64 }
+        DecodeServerConfig {
+            max_wait: Duration::from_millis(2),
+            max_steps: 64,
+            batch_threshold: 2,
+        }
     }
 }
 
@@ -396,6 +480,10 @@ pub struct DecodeStats {
     pub sessions_opened: usize,
     pub sessions_closed: usize,
     pub exec_secs: f64,
+    /// Steps that rode a batched [`step_many`] round (vs scalar `step`).
+    pub batched_steps: usize,
+    /// Number of [`step_many`] invocations the scheduler issued.
+    pub step_many_calls: usize,
 }
 
 impl DecodeStats {
@@ -404,6 +492,26 @@ impl DecodeStats {
             0.0
         } else {
             (self.steps + self.failed_steps) as f64 / self.micro_batches as f64
+        }
+    }
+
+    /// Fraction of successful + failed steps that went through the
+    /// batched path (observability for the batching criterion).
+    pub fn batched_fraction(&self) -> f64 {
+        let total = self.steps + self.failed_steps;
+        if total == 0 {
+            0.0
+        } else {
+            self.batched_steps as f64 / total as f64
+        }
+    }
+
+    /// Mean sessions per `step_many` call (batched round width).
+    pub fn mean_step_many_width(&self) -> f64 {
+        if self.step_many_calls == 0 {
+            0.0
+        } else {
+            self.batched_steps as f64 / self.step_many_calls as f64
         }
     }
 }
@@ -573,48 +681,32 @@ fn decode_scheduler(
             }
         }
 
-        // Execute the drained steps in arrival order (per-session order
-        // is submission order: one scheduler, FIFO channel).
+        // Execute the drained steps: partition the micro-batch into
+        // rounds of at most one step per session (per-session order is
+        // submission order: one scheduler, FIFO channel), then drive
+        // each round through batched `step_many` — or scalar `step` for
+        // singleton/sub-threshold rounds.
         let micro_batch = steps.len();
         if micro_batch > 0 {
             let t0 = Instant::now();
-            let mut ok = 0usize;
-            let mut failed = 0usize;
-            for req in steps {
-                match sessions.get_mut(&req.session) {
-                    None => {
-                        failed += 1;
-                        req.reply
-                            .send(Err(anyhow!("unknown or closed session {}", req.session)))
-                            .ok();
-                    }
-                    Some(sess) => {
-                        let pos = sess.position();
-                        match sess.step(req.token) {
-                            Ok(logits) => {
-                                ok += 1;
-                                req.reply
-                                    .send(Ok(StepOut {
-                                        session: req.session,
-                                        pos,
-                                        logits,
-                                        latency: req.submitted.elapsed(),
-                                        micro_batch,
-                                    }))
-                                    .ok();
-                            }
-                            Err(e) => {
-                                failed += 1;
-                                req.reply.send(Err(e)).ok();
-                            }
-                        }
-                    }
-                }
+            let mut tally = RoundTally::default();
+            for round in partition_rounds(steps) {
+                run_round(
+                    round,
+                    &model,
+                    &mut sessions,
+                    cfg.batch_threshold,
+                    micro_batch,
+                    &mut tally,
+                );
             }
             let mut s = stats.lock().unwrap();
-            s.steps += ok;
-            s.failed_steps += failed;
+            s.steps += tally.ok;
+            s.failed_steps += tally.failed;
             s.micro_batches += 1;
+            s.batched_steps += tally.batched;
+            s.step_many_calls += tally.step_many_calls;
+            s.sessions_closed += tally.disconnected;
             s.exec_secs += t0.elapsed().as_secs_f64();
         }
         // Closes apply only after the window's steps ran: per-sender
@@ -628,6 +720,167 @@ fn decode_scheduler(
         }
         if exit {
             return;
+        }
+    }
+}
+
+/// Per-micro-batch execution counters (folded into [`DecodeStats`]).
+#[derive(Default)]
+struct RoundTally {
+    ok: usize,
+    failed: usize,
+    batched: usize,
+    step_many_calls: usize,
+    /// Sessions force-closed because a batched round failed mid-flight
+    /// (their per-layer states can no longer be trusted).
+    disconnected: usize,
+}
+
+/// Split a drained micro-batch into rounds with at most one step per
+/// session each, preserving per-session submission order: a session's
+/// second queued step lands in the round after its first.
+fn partition_rounds(steps: Vec<StepReq>) -> Vec<Vec<StepReq>> {
+    let mut rounds: Vec<Vec<StepReq>> = Vec::new();
+    let mut next_round: HashMap<u64, usize> = HashMap::new();
+    for req in steps {
+        let r = next_round.entry(req.session).or_insert(0);
+        if rounds.len() == *r {
+            rounds.push(Vec::new());
+        }
+        rounds[*r].push(req);
+        *r += 1;
+    }
+    rounds
+}
+
+/// Scalar fallback: one session, one step, one reply.
+fn scalar_step(
+    req: StepReq,
+    sess: &mut DecoderSession,
+    micro_batch: usize,
+    tally: &mut RoundTally,
+) {
+    let pos = sess.position();
+    match sess.step(req.token) {
+        Ok(logits) => {
+            tally.ok += 1;
+            req.reply
+                .send(Ok(StepOut {
+                    session: req.session,
+                    pos,
+                    logits,
+                    latency: req.submitted.elapsed(),
+                    micro_batch,
+                }))
+                .ok();
+        }
+        Err(e) => {
+            tally.failed += 1;
+            req.reply.send(Err(e)).ok();
+        }
+    }
+}
+
+/// Execute one round: sessions are pulled out of the table so the
+/// batched path can hold them all mutably at once; unknown sessions
+/// error immediately and out-of-vocab tokens take the scalar path (its
+/// error is the canonical one, and the session must not advance).
+fn run_round(
+    round: Vec<StepReq>,
+    model: &Arc<HostDecoder>,
+    sessions: &mut HashMap<u64, DecoderSession>,
+    batch_threshold: usize,
+    micro_batch: usize,
+    tally: &mut RoundTally,
+) {
+    let vocab = model.config().vocab;
+    let batch = round.len() >= batch_threshold.max(2);
+    if !batch {
+        // Sub-threshold round: the PR 1 scalar loop, sessions stepped
+        // in place.
+        for req in round {
+            match sessions.get_mut(&req.session) {
+                None => {
+                    tally.failed += 1;
+                    req.reply
+                        .send(Err(anyhow!("unknown or closed session {}", req.session)))
+                        .ok();
+                }
+                Some(sess) => scalar_step(req, sess, micro_batch, tally),
+            }
+        }
+        return;
+    }
+    let mut work: Vec<(StepReq, DecoderSession)> = Vec::with_capacity(round.len());
+    for req in round {
+        let Some(mut sess) = sessions.remove(&req.session) else {
+            tally.failed += 1;
+            req.reply
+                .send(Err(anyhow!("unknown or closed session {}", req.session)))
+                .ok();
+            continue;
+        };
+        let in_vocab = req.token >= 0 && (req.token as usize) < vocab;
+        if !in_vocab {
+            // Scalar path yields the canonical out-of-vocab error and
+            // leaves the session unadvanced.
+            let id = req.session;
+            scalar_step(req, &mut sess, micro_batch, tally);
+            sessions.insert(id, sess);
+            continue;
+        }
+        work.push((req, sess));
+    }
+    if work.len() < 2 {
+        // Batched round degenerated (filtered down): finish scalar.
+        for (req, mut sess) in work {
+            let id = req.session;
+            scalar_step(req, &mut sess, micro_batch, tally);
+            sessions.insert(id, sess);
+        }
+        return;
+    }
+    let n = work.len();
+    let tokens: Vec<i32> = work.iter().map(|(r, _)| r.token).collect();
+    let poses: Vec<usize> = work.iter().map(|(_, s)| s.position()).collect();
+    let result = {
+        let mut refs: Vec<&mut DecoderSession> =
+            work.iter_mut().map(|(_, s)| s).collect();
+        step_many(&mut refs, &tokens)
+    };
+    match result {
+        Ok(rows) => {
+            tally.step_many_calls += 1;
+            tally.batched += n;
+            for (((req, sess), logits), pos) in
+                work.into_iter().zip(rows).zip(poses)
+            {
+                tally.ok += 1;
+                req.reply
+                    .send(Ok(StepOut {
+                        session: req.session,
+                        pos,
+                        logits,
+                        latency: req.submitted.elapsed(),
+                        micro_batch,
+                    }))
+                    .ok();
+                sessions.insert(req.session, sess);
+            }
+        }
+        Err(e) => {
+            // Unreachable after the vocab pre-check — but if a batched
+            // round ever fails mid-layer, per-head states may be
+            // partially advanced, so the sessions cannot be trusted:
+            // disconnect them (PR 1 policy: failed batches disconnect
+            // clients and count in stats). Later steps on these streams
+            // get a clean "unknown or closed session" error.
+            for (req, sess) in work {
+                tally.failed += 1;
+                tally.disconnected += 1;
+                req.reply.send(Err(anyhow!("batched step failed: {e}"))).ok();
+                drop(sess);
+            }
         }
     }
 }

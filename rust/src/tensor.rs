@@ -98,8 +98,12 @@ impl Tensor {
         &self.data[i * c..(i + 1) * c]
     }
 
-    /// `self @ other` for 2-D tensors (ikj loop order: cache-friendly for
-    /// row-major without blocking; fine at analysis sizes).
+    /// `self @ other` for 2-D tensors. Delegates to the shared blocked
+    /// kernel ([`crate::kernel::matmul`]): packed panels + unrolled dot
+    /// for large shapes, ikj for GEMV-like ones. Path selection depends
+    /// on the row count, so the same row may reduce in a different
+    /// order when batched with peers — per-row results agree within
+    /// round-off, not bitwise (the batched decode tests pin 1e-4).
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         let (&[m, k1], &[k2, n]) = (&self.shape[..], &other.shape[..]) else {
             bail!("matmul needs 2-D operands");
@@ -108,19 +112,7 @@ impl Tensor {
             bail!("matmul inner dims {k1} != {k2}");
         }
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for k in 0..k1 {
-                let a = self.data[i * k1 + k];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[k * n..(k + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        crate::kernel::matmul(&self.data, &other.data, &mut out, m, k1, n);
         Tensor::new(&[m, n], out)
     }
 

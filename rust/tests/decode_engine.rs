@@ -10,13 +10,15 @@
 //!
 //! Everything here is host-side — no artifacts required, never skips.
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use fmmformer::attention::incremental::decode_sequence;
-use fmmformer::attention::{fmm_attention, FeatureMap};
+use fmmformer::attention::incremental::{decode_sequence, step_many as states_step_many};
+use fmmformer::attention::{fmm_attention, FeatureMap, FmmDecodeState};
 use fmmformer::rng::Pcg64;
 use fmmformer::serve::decode::{
-    DecodeConfig, DecodeServer, DecodeServerConfig, DecoderSession, HostDecoder,
+    step_many, DecodeConfig, DecodeServer, DecodeServerConfig, DecoderSession,
+    HostDecoder,
 };
 use fmmformer::tensor::Tensor;
 use fmmformer::testutil;
@@ -133,7 +135,11 @@ fn streams_are_isolated_and_exact() {
     let reference = std::sync::Arc::new(HostDecoder::new(tiny_config()).unwrap());
     let server = DecodeServer::start(
         model,
-        DecodeServerConfig { max_wait: Duration::from_millis(1), max_steps: 16 },
+        DecodeServerConfig {
+            max_wait: Duration::from_millis(1),
+            max_steps: 16,
+            ..Default::default()
+        },
     );
     let client = server.client();
 
@@ -172,7 +178,11 @@ fn pipelined_steps_process_in_order() {
     // A wide fill window so pipelined steps ride shared micro-batches.
     let server = DecodeServer::start(
         model,
-        DecodeServerConfig { max_wait: Duration::from_millis(20), max_steps: 64 },
+        DecodeServerConfig {
+            max_wait: Duration::from_millis(20),
+            max_steps: 64,
+            ..Default::default()
+        },
     );
     let client = server.client();
     let tokens = probe_tokens(32, 32, 300);
@@ -242,7 +252,11 @@ fn pipelined_step_then_drop_still_delivers_logits() {
     let model = HostDecoder::new(tiny_config()).unwrap();
     let server = DecodeServer::start(
         model,
-        DecodeServerConfig { max_wait: Duration::from_millis(50), max_steps: 64 },
+        DecodeServerConfig {
+            max_wait: Duration::from_millis(50),
+            max_steps: 64,
+            ..Default::default()
+        },
     );
     let client = server.client();
     let stream = client.open_stream().unwrap();
@@ -254,6 +268,161 @@ fn pipelined_step_then_drop_still_delivers_logits() {
     assert_eq!(stats.steps, 1);
     assert_eq!(stats.failed_steps, 0);
     assert_eq!(stats.sessions_closed, 1);
+}
+
+/// Satellite acceptance grid: batched `step_many` ≡ scalar
+/// `FmmDecodeState::step` ≡ batch causal `fmm_attention`, across
+/// feature maps × bandwidths × session counts {1, 3, 17}, tol 1e-4.
+#[test]
+fn step_many_matches_scalar_and_batch_across_grid() {
+    let kernel_sets: [&[FeatureMap]; 3] = [
+        &[FeatureMap::Elu],
+        &[FeatureMap::Tanh],
+        &[FeatureMap::Elu, FeatureMap::EluNeg, FeatureMap::Tanh],
+    ];
+    let (n_tok, d, dv) = (17usize, 6usize, 4usize);
+    let (w1, w2) = (0.6f32, 0.9f32);
+    for kernels in kernel_sets {
+        for bandwidth in [0usize, 2, 8] {
+            for b in [1usize, 3, 17] {
+                let streams: Vec<(Tensor, Tensor, Tensor)> = (0..b)
+                    .map(|s| {
+                        rand_qkv(n_tok, d, dv, 7000 + 31 * s as u64 + bandwidth as u64)
+                    })
+                    .collect();
+                let mut batched: Vec<FmmDecodeState> = (0..b)
+                    .map(|_| FmmDecodeState::new(d, dv, bandwidth, kernels, w1, w2))
+                    .collect();
+                let mut scalar = batched.clone();
+                // Per-stream decoded rows collected from the batched path.
+                let mut decoded = vec![vec![0.0f32; n_tok * dv]; b];
+                let (mut qrow, mut krow) = (vec![0.0f32; b * d], vec![0.0f32; b * d]);
+                let mut vrow = vec![0.0f32; b * dv];
+                let mut out = vec![0.0f32; b * dv];
+                for t in 0..n_tok {
+                    for (s, (q, k, v)) in streams.iter().enumerate() {
+                        qrow[s * d..(s + 1) * d].copy_from_slice(q.row(t));
+                        krow[s * d..(s + 1) * d].copy_from_slice(k.row(t));
+                        vrow[s * dv..(s + 1) * dv].copy_from_slice(v.row(t));
+                    }
+                    let mut refs: Vec<&mut FmmDecodeState> =
+                        batched.iter_mut().collect();
+                    states_step_many(&mut refs, &qrow, &krow, &vrow, &mut out);
+                    for (s, st) in scalar.iter_mut().enumerate() {
+                        let (q, k, v) = &streams[s];
+                        let want = st.step(q.row(t), k.row(t), v.row(t));
+                        testutil::assert_close(
+                            &out[s * dv..(s + 1) * dv],
+                            &want,
+                            1e-4,
+                            &format!("batched vs scalar, stream {s} tok {t}"),
+                        )
+                        .unwrap();
+                        decoded[s][t * dv..(t + 1) * dv]
+                            .copy_from_slice(&out[s * dv..(s + 1) * dv]);
+                    }
+                }
+                for (s, (q, k, v)) in streams.iter().enumerate() {
+                    let batch = fmm_attention(q, k, v, bandwidth, kernels, w1, w2, true);
+                    testutil::assert_close(
+                        &decoded[s],
+                        batch.data(),
+                        1e-4,
+                        &format!(
+                            "batched vs fmm_attention, kernels {kernels:?} \
+                             bw {bandwidth} b {b} stream {s}"
+                        ),
+                    )
+                    .unwrap();
+                }
+            }
+        }
+    }
+}
+
+/// Serve-level batched micro-step: `step_many` over stacked
+/// `DecoderSession`s reproduces each session's scalar `step` rows.
+#[test]
+fn decoder_session_step_many_matches_scalar_sessions() {
+    let model = Arc::new(HostDecoder::new(tiny_config()).unwrap());
+    let b = 5usize;
+    let len = 12usize;
+    let streams: Vec<Vec<i32>> = (0..b)
+        .map(|s| probe_tokens(len, model.config().vocab, 500 + s as u64))
+        .collect();
+    let mut batched: Vec<DecoderSession> =
+        (0..b).map(|_| DecoderSession::new(model.clone())).collect();
+    let mut scalar: Vec<DecoderSession> =
+        (0..b).map(|_| DecoderSession::new(model.clone())).collect();
+    for t in 0..len {
+        let toks: Vec<i32> = streams.iter().map(|s| s[t]).collect();
+        let rows = {
+            let mut refs: Vec<&mut DecoderSession> = batched.iter_mut().collect();
+            step_many(&mut refs, &toks).unwrap()
+        };
+        assert_eq!(rows.len(), b);
+        for (s, sess) in scalar.iter_mut().enumerate() {
+            let want = sess.step(toks[s]).unwrap();
+            testutil::assert_close(&rows[s], &want, 1e-4, &format!("stream {s} tok {t}"))
+                .unwrap();
+        }
+    }
+    assert!(batched.iter().all(|s| s.position() == len));
+}
+
+/// Acceptance: ≥16 concurrent sessions ride `step_many` micro-batches
+/// (observable in `DecodeStats`), and every stream stays exact against
+/// its batch-forward reference.
+#[test]
+fn concurrent_sessions_ride_step_many_batches() {
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let reference = Arc::new(HostDecoder::new(tiny_config()).unwrap());
+    let server = DecodeServer::start(
+        model,
+        DecodeServerConfig {
+            max_wait: Duration::from_millis(5),
+            max_steps: 256,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let n_streams = 16usize;
+    let len = 8usize;
+    // Submit every stream's step for a position before consuming any
+    // reply: all 16 steps are queued when the scheduler drains, so each
+    // wake-up deterministically forms one 16-wide round (no reliance on
+    // OS thread-scheduling races to build the micro-batch).
+    let streams: Vec<_> = (0..n_streams).map(|_| client.open_stream().unwrap()).collect();
+    let token_seqs: Vec<Vec<i32>> =
+        (0..n_streams).map(|s| probe_tokens(len, 32, 900 + s as u64)).collect();
+    let mut logits: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_streams];
+    for t in 0..len {
+        let rxs: Vec<_> = streams
+            .iter()
+            .zip(&token_seqs)
+            .map(|(st, seq)| st.step_async(seq[t]).unwrap())
+            .collect();
+        for (s, rx) in rxs.into_iter().enumerate() {
+            logits[s].push(rx.recv().unwrap().unwrap().logits);
+        }
+    }
+    for (s, seq) in token_seqs.iter().enumerate() {
+        let batch = reference.forward_batch(seq).unwrap();
+        for (t, row) in logits[s].iter().enumerate() {
+            testutil::assert_close(row, batch.row(t), 1e-4, &format!("stream {s} tok {t}"))
+                .unwrap();
+        }
+    }
+    drop(streams);
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.steps, n_streams * len);
+    assert_eq!(stats.failed_steps, 0);
+    assert!(
+        stats.batched_steps > 0 && stats.step_many_calls > 0,
+        "expected step_many micro-batches, got stats {stats:?}"
+    );
+    assert!(stats.batched_fraction() > 0.0);
 }
 
 #[test]

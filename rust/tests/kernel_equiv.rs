@@ -1,0 +1,147 @@
+//! Integration: the shared kernel layer vs naive references.
+//!
+//! The blocked matmul is the foundation everything else (attention,
+//! decode, serving) now stands on, so it is pinned against a naive
+//! triple loop across ragged shapes — including 0-dim edges and shapes
+//! straddling the packed-path and parallel-path thresholds — plus the
+//! Tensor-level wrapper and the fused softmax used by the causal mask.
+
+use fmmformer::kernel;
+use fmmformer::rng::Pcg64;
+use fmmformer::tensor::Tensor;
+use fmmformer::testutil;
+
+fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += a[i * k + kk] * b[kk * n + j];
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+#[test]
+fn blocked_matmul_matches_naive_on_ragged_shapes() {
+    let mut rng = Pcg64::seeded(11);
+    let shapes: [(usize, usize, usize); 14] = [
+        (0, 0, 0),
+        (0, 5, 3),
+        (4, 0, 2),
+        (3, 7, 0),
+        (1, 1, 1),
+        (1, 17, 9),
+        (2, 3, 64),
+        (7, 64, 1),
+        (8, 8, 8),
+        (13, 31, 7),
+        (33, 17, 65),
+        (64, 64, 64),
+        (65, 128, 33),
+        (128, 9, 5),
+    ];
+    for &(m, k, n) in &shapes {
+        let a = rng.normals(m * k);
+        let b = rng.normals(k * n);
+        let mut out = vec![7.0f32; m * n]; // must be overwritten, not accumulated
+        kernel::matmul(&a, &b, &mut out, m, k, n);
+        let want = naive_matmul(&a, &b, m, k, n);
+        testutil::assert_close(&out, &want, 1e-4, &format!("matmul {m}x{k}x{n}"))
+            .unwrap();
+    }
+}
+
+#[test]
+fn tensor_matmul_still_matches_naive_after_kernel_delegation() {
+    let mut rng = Pcg64::seeded(12);
+    for &(m, k, n) in &[(1usize, 8usize, 8usize), (5, 13, 9), (40, 32, 64)] {
+        let a = Tensor::randn(&[m, k], &mut rng);
+        let b = Tensor::randn(&[k, n], &mut rng);
+        let got = a.matmul(&b).unwrap();
+        let want = naive_matmul(a.data(), b.data(), m, k, n);
+        assert_eq!(got.shape(), &[m, n]);
+        testutil::assert_close(got.data(), &want, 1e-4, &format!("tensor {m}x{k}x{n}"))
+            .unwrap();
+    }
+}
+
+#[test]
+fn matmul_tn_matches_naive_transpose() {
+    let mut rng = Pcg64::seeded(13);
+    for &(rows, d, dv) in &[(1usize, 4usize, 4usize), (19, 6, 3), (64, 16, 16)] {
+        let a = rng.normals(rows * d);
+        let b = rng.normals(rows * dv);
+        let mut got = vec![0.0f32; d * dv];
+        kernel::matmul_tn(&a, &b, &mut got, rows, d, dv);
+        // naive: out[di][c] = sum_i a[i][di] * b[i][c]
+        let mut at = vec![0.0f32; d * rows];
+        for i in 0..rows {
+            for di in 0..d {
+                at[di * rows + i] = a[i * d + di];
+            }
+        }
+        let want = naive_matmul(&at, &b, d, rows, dv);
+        testutil::assert_close(&got, &want, 1e-4, &format!("tn {rows}x{d}x{dv}"))
+            .unwrap();
+    }
+}
+
+#[test]
+fn causal_softmax_weights_match_neg_inf_masking_reference() {
+    use fmmformer::attention::softmax_attention_weights;
+    let mut rng = Pcg64::seeded(14);
+    for n in [1usize, 2, 9, 24] {
+        let q = Tensor::randn(&[n, 8], &mut rng);
+        let k = Tensor::randn(&[n, 8], &mut rng);
+        let got = softmax_attention_weights(&q, &k, true);
+        // Reference: the seed algorithm — NEG_INFINITY writes into the
+        // upper triangle, then a full row softmax.
+        let mut scores =
+            q.matmul(&k.t()).unwrap().scale(1.0 / (8f32).sqrt());
+        for i in 0..n {
+            for j in (i + 1)..n {
+                scores.set(i, j, f32::NEG_INFINITY);
+            }
+        }
+        let want = scores.softmax_rows();
+        assert_eq!(got.shape(), want.shape());
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-6, "n {n}: diff {diff}");
+        // Upper triangle must be exactly zero.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_eq!(got.at(i, j), 0.0, "({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn property_matmul_random_ragged_shapes() {
+    testutil::check(
+        "blocked matmul == naive on random shapes",
+        24,
+        |rng| {
+            let m = rng.usize(40);
+            let k = rng.usize(70);
+            let n = rng.usize(40);
+            let a = rng.normals(m * k);
+            let b = rng.normals(k * n);
+            (a, b, m, k, n)
+        },
+        |(a, b, m, k, n)| {
+            let mut out = vec![0.0f32; m * n];
+            kernel::matmul(a, b, &mut out, *m, *k, *n);
+            testutil::assert_close(
+                &out,
+                &naive_matmul(a, b, *m, *k, *n),
+                1e-4,
+                &format!("{m}x{k}x{n}"),
+            )
+        },
+    );
+}
