@@ -1,0 +1,146 @@
+//! Paging bench (system extension) — decode throughput vs residency cap.
+//!
+//! ROADMAP's cross-request KV paging, measured: N greedy streams ≫ the
+//! resident-session cap, so the scheduler continuously spills LRU idle
+//! streams to the session store and restores them on their next token.
+//! Because per-stream state is O(bandwidth·dh + r·dh²) — independent of
+//! tokens decoded — the snapshots are a few KiB and paging costs a
+//! memcpy (MemStore) or one small file I/O (DiskStore) per transition,
+//! not an O(position) KV-cache copy.
+//!
+//!     cargo bench --bench serve_paging                 # 64 streams, disk
+//!     cargo bench --bench serve_paging -- --quick --mem
+//!     cargo bench --bench serve_paging -- --caps 0,16,8 --sessions 64
+//!
+//! Every capped run must emit **bit-identical** greedy tokens to the
+//! unlimited run (prepacked kernels make per-stream logits independent
+//! of micro-batch composition, and snapshots restore bit-exactly); the
+//! bench fails loudly if they ever diverge. Emits
+//! `reports/BENCH_paging.json` (tokens/sec vs cap, spill/restore
+//! counts, restore latency) — validated by `ci.sh --bench`.
+
+use anyhow::{bail, Result};
+use fmmformer::bench::{fmt_time, save_report_json, Table};
+use fmmformer::cli::Args;
+use fmmformer::serve::decode::{
+    run_greedy_sessions_collect, DecodeConfig, DecodeServer, DecodeServerConfig,
+    DecoderSession, HostDecoder,
+};
+use fmmformer::serve::session_store::DiskStore;
+use fmmformer::util::human_bytes;
+use fmmformer::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick", "mem"])?;
+    let quick = args.has("quick");
+    let sessions = args.usize_or("sessions", 64)?;
+    let tokens = args.usize_or("tokens", if quick { 16 } else { 64 })?;
+    let use_mem = args.has("mem");
+    let caps: Vec<usize> = args
+        .list_or("caps", &["0", "16", "8"])
+        .iter()
+        .map(|s| {
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--caps wants integers, got {s:?}"))
+        })
+        .collect::<Result<_>>()?;
+    if caps.first() != Some(&0) {
+        bail!("--caps must start with 0 (the unlimited baseline)");
+    }
+
+    let cfg = DecodeConfig::default();
+    let vocab = cfg.vocab;
+    let state_bytes = {
+        let model = std::sync::Arc::new(HostDecoder::new(cfg.clone())?);
+        DecoderSession::new(model).state_bytes()
+    };
+    println!(
+        "paging bench: {sessions} streams x {tokens} tokens, {} per resident session, \
+         store = {}",
+        human_bytes(state_bytes as u64),
+        if use_mem { "mem" } else { "disk" },
+    );
+
+    let mut tbl = Table::new(
+        "Decode throughput vs resident-session cap (0 = unlimited)",
+        &["cap", "tok/s", "spills", "restores", "peak", "spilled", "restore mean", "exact"],
+    );
+    let mut runs: Vec<Json> = Vec::new();
+    let mut baseline: Option<Vec<Vec<i32>>> = None;
+    for &cap in &caps {
+        let model = HostDecoder::new(cfg.clone())?;
+        let server_cfg =
+            DecodeServerConfig { max_resident_sessions: cap, ..Default::default() };
+        let server = if use_mem {
+            DecodeServer::start(model, server_cfg)
+        } else {
+            let dir = std::env::temp_dir()
+                .join(format!("fmm_paging_{}_{cap}", std::process::id()));
+            DecodeServer::start_with_store(
+                model,
+                server_cfg,
+                Box::new(DiskStore::new(&dir)?),
+            )
+        };
+        let client = server.client();
+        let t0 = std::time::Instant::now();
+        let (_lats, streams) =
+            run_greedy_sessions_collect(&client, sessions, tokens, vocab)?;
+        let wall = t0.elapsed().as_secs_f64();
+        drop(client);
+        let stats = server.shutdown();
+
+        let exact = match &baseline {
+            None => {
+                baseline = Some(streams);
+                true
+            }
+            Some(base) => base == &streams,
+        };
+        if !exact {
+            bail!(
+                "cap {cap}: greedy tokens diverged from the fully-resident run — \
+                 spill/restore is not bit-exact"
+            );
+        }
+        if cap > 0 && stats.resident_peak > cap {
+            bail!("cap {cap}: resident peak {} overshot", stats.resident_peak);
+        }
+        let tok_per_sec = (sessions * tokens) as f64 / wall.max(1e-12);
+        tbl.row(vec![
+            if cap == 0 { "unlimited".into() } else { cap.to_string() },
+            format!("{tok_per_sec:.0}"),
+            stats.spills.to_string(),
+            stats.restores.to_string(),
+            stats.resident_peak.to_string(),
+            human_bytes(stats.spilled_bytes),
+            fmt_time(stats.mean_restore_latency()),
+            exact.to_string(),
+        ]);
+        runs.push(Json::obj(vec![
+            ("max_resident", Json::Num(cap as f64)),
+            ("tokens_per_sec", Json::Num(tok_per_sec)),
+            ("wall_s", Json::Num(wall)),
+            ("spills", Json::Num(stats.spills as f64)),
+            ("restores", Json::Num(stats.restores as f64)),
+            ("resident_peak", Json::Num(stats.resident_peak as f64)),
+            ("spilled_bytes", Json::Num(stats.spilled_bytes as f64)),
+            ("spill_failures", Json::Num(stats.spill_failures as f64)),
+            ("mean_restore_latency_s", Json::Num(stats.mean_restore_latency())),
+            ("exact_vs_unlimited", Json::Bool(exact)),
+        ]));
+    }
+    tbl.print();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_paging")),
+        ("sessions", Json::Num(sessions as f64)),
+        ("tokens_per_session", Json::Num(tokens as f64)),
+        ("session_state_bytes", Json::Num(state_bytes as f64)),
+        ("store", Json::str(if use_mem { "mem" } else { "disk" })),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let path = save_report_json("BENCH_paging.json", &doc)?;
+    println!("machine-readable -> {path:?}");
+    Ok(())
+}

@@ -14,12 +14,8 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
-if [[ "${1:-}" == "--bench" ]]; then
-    reports="${FMM_REPORTS:-reports}"
-    echo "== bench smoke: serve_decode (tiny) =="
-    FMM_REPORTS="$reports" cargo bench --bench serve_decode -- \
-        --quick --max-n 128 --iters 1 --sessions 8 --tokens 4
-    json="$reports/BENCH_decode.json"
+validate_json() {
+    local json="$1"
     if [[ ! -s "$json" ]]; then
         echo "bench smoke FAILED: missing $json"
         exit 1
@@ -35,7 +31,22 @@ if [[ "${1:-}" == "--bench" ]]; then
             exit 1
         }
     fi
-    echo "bench smoke passed: $json"
+}
+
+if [[ "${1:-}" == "--bench" ]]; then
+    reports="${FMM_REPORTS:-reports}"
+    echo "== bench smoke: serve_decode (tiny) =="
+    FMM_REPORTS="$reports" cargo bench --bench serve_decode -- \
+        --quick --max-n 128 --iters 1 --sessions 8 --tokens 4
+    validate_json "$reports/BENCH_decode.json"
+    echo "== bench smoke: serve_paging (tiny) =="
+    # 12 streams against a 4-session residency cap: forces real
+    # spill/restore traffic, and the bench itself fails if the paged
+    # run's greedy tokens diverge from the fully-resident run.
+    FMM_REPORTS="$reports" cargo bench --bench serve_paging -- \
+        --quick --sessions 12 --tokens 4 --caps 0,4
+    validate_json "$reports/BENCH_paging.json"
+    echo "bench smoke passed: $reports/BENCH_decode.json $reports/BENCH_paging.json"
     exit 0
 fi
 

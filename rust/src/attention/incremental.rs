@@ -16,9 +16,18 @@
 //! `(bandwidth+1)·(d+dv) + r·d·(dv+1)` floats — independent of how many
 //! tokens have been decoded, which is the whole point.
 
+use anyhow::{bail, Result};
+
 use super::{guard_den, FeatureMap};
 use crate::kernel;
 use crate::tensor::Tensor;
+use crate::util::fnv1a64;
+
+/// `f32` words of header in an [`FmmDecodeState::export_into`] view:
+/// fingerprint (2 words), position (2 words), ring occupancy (1 word).
+/// Header words carry raw `u32` bit patterns via `f32::from_bits`; they
+/// are copied, never computed with, so round-trips are bit-exact.
+const EXPORT_HEADER_WORDS: usize = 5;
 
 /// Per-head decode state: near-field ring buffer + far-field moments.
 #[derive(Debug, Clone)]
@@ -211,6 +220,137 @@ impl FmmDecodeState {
         (cap * (self.d + self.dv) + self.kernels.len() * self.d * (self.dv + 1))
             * std::mem::size_of::<f32>()
     }
+
+    /// Stable hash of this state's *configuration* (head dims,
+    /// bandwidth, feature maps, blend weights). Two states can exchange
+    /// raw state iff their fingerprints match; [`import_from`]
+    /// (Self::import_from) enforces it.
+    pub fn config_fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(40 + self.kernels.len());
+        for x in [self.d as u64, self.dv as u64, self.bandwidth as u64] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.extend_from_slice(&self.w1.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&self.w2.to_bits().to_le_bytes());
+        bytes.push(self.kernels.len() as u8);
+        for fm in &self.kernels {
+            bytes.push(feature_map_code(*fm));
+        }
+        fnv1a64(&bytes)
+    }
+
+    /// Number of `f32` words [`export_into`](Self::export_into) appends
+    /// for the current state.
+    pub fn export_len(&self) -> usize {
+        EXPORT_HEADER_WORDS
+            + self.ring_len * (self.d + self.dv)
+            + self.s.len()
+            + self.z.len()
+    }
+
+    /// Serialize the dynamic state into `out`: header (config
+    /// fingerprint, position, ring occupancy), then the ring rows in
+    /// chronological order, then the far-field moments. The view is
+    /// *normalized* — ring rows are written oldest-first regardless of
+    /// the live ring's start offset — so export → [`import_from`]
+    /// (Self::import_from) round-trips bit-exactly: the restored state
+    /// reads the same key/value floats in the same chronological order
+    /// the live state would have, and every later [`step`](Self::step)
+    /// produces bit-identical output.
+    pub fn export_into(&self, out: &mut Vec<f32>) {
+        let (d, dv) = (self.d, self.dv);
+        out.reserve(self.export_len());
+        out.extend_from_slice(&u64_to_words(self.config_fingerprint()));
+        out.extend_from_slice(&u64_to_words(self.pos as u64));
+        out.push(f32::from_bits(self.ring_len as u32));
+        let slots = self.ring_k.len() / d;
+        for off in 0..self.ring_len {
+            let at = (self.ring_start + off) % slots;
+            out.extend_from_slice(&self.ring_k[at * d..(at + 1) * d]);
+        }
+        for off in 0..self.ring_len {
+            let at = (self.ring_start + off) % slots;
+            out.extend_from_slice(&self.ring_v[at * dv..(at + 1) * dv]);
+        }
+        out.extend_from_slice(&self.s);
+        out.extend_from_slice(&self.z);
+    }
+
+    /// Overwrite this state's dynamic contents from an exported view.
+    /// Validates the header (fingerprint match, ring/position
+    /// consistency) and the total length before touching anything — on
+    /// `Err` the state is unchanged. Inverse of
+    /// [`export_into`](Self::export_into).
+    pub fn import_from(&mut self, raw: &[f32]) -> Result<()> {
+        if raw.len() < EXPORT_HEADER_WORDS {
+            bail!("raw decode state truncated: {} header words", raw.len());
+        }
+        let fp = words_to_u64(raw[0], raw[1]);
+        let want_fp = self.config_fingerprint();
+        if fp != want_fp {
+            bail!(
+                "raw-state config fingerprint {fp:#018x} does not match \
+                 this state's {want_fp:#018x}"
+            );
+        }
+        let pos64 = words_to_u64(raw[2], raw[3]);
+        let pos = usize::try_from(pos64)
+            .map_err(|_| anyhow::anyhow!("raw-state position {pos64} overflows"))?;
+        let ring_len = raw[4].to_bits() as usize;
+        let cap = self.bandwidth.saturating_add(1);
+        if ring_len != pos.min(cap) {
+            bail!(
+                "inconsistent raw state: {ring_len} ring rows at position {pos} \
+                 (band cap {cap})"
+            );
+        }
+        let (d, dv) = (self.d, self.dv);
+        let want = EXPORT_HEADER_WORDS + ring_len * (d + dv) + self.s.len() + self.z.len();
+        if raw.len() != want {
+            bail!("raw decode state is {} words, expected {want}", raw.len());
+        }
+        let mut off = EXPORT_HEADER_WORDS;
+        self.ring_k.clear();
+        self.ring_k.extend_from_slice(&raw[off..off + ring_len * d]);
+        off += ring_len * d;
+        self.ring_v.clear();
+        self.ring_v.extend_from_slice(&raw[off..off + ring_len * dv]);
+        off += ring_len * dv;
+        let s_len = self.s.len();
+        self.s.copy_from_slice(&raw[off..off + s_len]);
+        off += s_len;
+        let z_len = self.z.len();
+        self.z.copy_from_slice(&raw[off..off + z_len]);
+        self.ring_start = 0;
+        self.ring_len = ring_len;
+        self.pos = pos;
+        Ok(())
+    }
+}
+
+/// Stable wire code of a feature map, shared by every config
+/// fingerprint in the crate (fingerprint hashing only — the snapshot
+/// payload itself never stores kernels, the restoring side always
+/// reconstructs them from its own config).
+pub(crate) fn feature_map_code(fm: FeatureMap) -> u8 {
+    match fm {
+        FeatureMap::Elu => 0,
+        FeatureMap::EluNeg => 1,
+        FeatureMap::Tanh => 2,
+    }
+}
+
+/// Pack a `u64` as two `f32` words carrying raw `u32` bit patterns
+/// (low word first). The words are only ever copied, never computed
+/// with, so [`words_to_u64`] recovers the value bit-exactly. Single
+/// source for every header/position field in the snapshot stack.
+pub(crate) fn u64_to_words(x: u64) -> [f32; 2] {
+    [f32::from_bits(x as u32), f32::from_bits((x >> 32) as u32)]
+}
+
+/// Inverse of [`u64_to_words`].
+pub(crate) fn words_to_u64(lo: f32, hi: f32) -> u64 {
+    lo.to_bits() as u64 | (hi.to_bits() as u64) << 32
 }
 
 /// Sessions per worker shard in [`step_many`]. One per-head micro-step
@@ -402,6 +542,76 @@ mod tests {
     #[test]
     fn step_many_empty_stack_is_noop() {
         step_many(&mut [], &[], &[], &[], &mut []);
+    }
+
+    #[test]
+    fn export_import_roundtrip_is_bit_exact() {
+        // Grid across ring fill levels: empty, partial, exactly full,
+        // wrapped several times — restore must replay bit-identical.
+        let (q, k, v) = rand_qkv(48, 5, 3, 4);
+        let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+        for bw in [0usize, 2, 7] {
+            for warm in [0usize, 1, bw + 1, 3 * bw + 5] {
+                let mut live = FmmDecodeState::new(5, 3, bw, &kernels, 0.6, 0.9);
+                for t in 0..warm {
+                    live.step(q.row(t), k.row(t), v.row(t));
+                }
+                let mut raw = Vec::new();
+                live.export_into(&mut raw);
+                assert_eq!(raw.len(), live.export_len(), "bw {bw} warm {warm}");
+                let mut restored = FmmDecodeState::new(5, 3, bw, &kernels, 0.6, 0.9);
+                restored.import_from(&raw).unwrap();
+                assert_eq!(restored.position(), live.position());
+                for t in warm..48 {
+                    let a = live.step(q.row(t), k.row(t), v.row(t));
+                    let b = restored.step(q.row(t), k.row(t), v.row(t));
+                    assert_eq!(a, b, "bw {bw} warm {warm} t {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn import_rejects_mismatch_and_leaves_state_untouched() {
+        let (q, k, v) = rand_qkv(10, 4, 4, 5);
+        let mut src = FmmDecodeState::new(4, 4, 3, &[FeatureMap::Elu], 0.5, 0.5);
+        for t in 0..10 {
+            src.step(q.row(t), k.row(t), v.row(t));
+        }
+        let mut raw = Vec::new();
+        src.export_into(&mut raw);
+
+        // Wrong config (different bandwidth) -> fingerprint mismatch.
+        let mut other = FmmDecodeState::new(4, 4, 2, &[FeatureMap::Elu], 0.5, 0.5);
+        assert!(other.import_from(&raw).is_err());
+        assert_eq!(other.position(), 0, "failed import must not mutate");
+
+        // Truncations and an inconsistent ring header all error.
+        let mut same = FmmDecodeState::new(4, 4, 3, &[FeatureMap::Elu], 0.5, 0.5);
+        assert!(same.import_from(&raw[..3]).is_err());
+        assert!(same.import_from(&raw[..raw.len() - 1]).is_err());
+        let mut bad = raw.clone();
+        bad[4] = f32::from_bits(99); // ring_len inconsistent with pos
+        assert!(same.import_from(&bad).is_err());
+        assert_eq!(same.position(), 0);
+        // The untampered view still imports fine afterwards.
+        same.import_from(&raw).unwrap();
+        assert_eq!(same.position(), 10);
+    }
+
+    #[test]
+    fn config_fingerprint_separates_configs() {
+        let a = FmmDecodeState::new(4, 4, 3, &[FeatureMap::Elu], 0.5, 0.5);
+        let b = FmmDecodeState::new(4, 4, 3, &[FeatureMap::Elu], 0.5, 0.5);
+        assert_eq!(a.config_fingerprint(), b.config_fingerprint());
+        for other in [
+            FmmDecodeState::new(4, 4, 4, &[FeatureMap::Elu], 0.5, 0.5),
+            FmmDecodeState::new(4, 4, 3, &[FeatureMap::EluNeg], 0.5, 0.5),
+            FmmDecodeState::new(4, 4, 3, &[FeatureMap::Elu], 0.25, 0.5),
+            FmmDecodeState::new(5, 4, 3, &[FeatureMap::Elu], 0.5, 0.5),
+        ] {
+            assert_ne!(a.config_fingerprint(), other.config_fingerprint());
+        }
     }
 
     #[test]

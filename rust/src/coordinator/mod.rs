@@ -198,8 +198,10 @@ mod tests {
     #[test]
     fn registry_covers_every_table_and_figure() {
         let ids: Vec<&str> = EXPERIMENTS.iter().map(|e| e.id).collect();
-        for want in ["fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-                     "table1", "table2", "table3"] {
+        for want in [
+            "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "table1", "table2",
+            "table3",
+        ] {
             assert!(ids.contains(&want), "missing {want}");
         }
     }

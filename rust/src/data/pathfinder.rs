@@ -39,7 +39,12 @@ impl Pathfinder {
 
     /// Draw a self-avoiding-ish random walk of `len` steps from `start`;
     /// returns visited cells (always at least the start).
-    fn walk(rng: &mut Pcg64, grid: &mut [i32], start: (usize, usize), len: usize) -> Vec<(usize, usize)> {
+    fn walk(
+        rng: &mut Pcg64,
+        grid: &mut [i32],
+        start: (usize, usize),
+        len: usize,
+    ) -> Vec<(usize, usize)> {
         let mut cells = vec![start];
         let (mut y, mut x) = start;
         grid[y * SIDE + x] = PATH;

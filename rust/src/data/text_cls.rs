@@ -47,7 +47,15 @@ impl TextCls {
         let pos_words = make_words(&mut rng, LEXICON_WORDS);
         let neg_words = make_words(&mut rng, LEXICON_WORDS);
         let filler = make_words(&mut rng, 4 * LEXICON_WORDS);
-        TextCls { seq_len, rng, eval_seed: seed ^ 0x7e47, eval_ctr: 0, pos_words, neg_words, filler }
+        TextCls {
+            seq_len,
+            rng,
+            eval_seed: seed ^ 0x7e47,
+            eval_ctr: 0,
+            pos_words,
+            neg_words,
+            filler,
+        }
     }
 
     fn sample(&self, rng: &mut Pcg64) -> (Vec<i32>, i32) {

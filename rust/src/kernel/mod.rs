@@ -158,6 +158,73 @@ pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usiz
     });
 }
 
+/// A matrix pre-transposed into the packed panel layout [`matmul`]
+/// builds in scratch on every call — pack once for operands that never
+/// change (the decoder's projection/MLP/readout weights), then multiply
+/// through [`matmul_prepacked`] without paying the per-call transpose.
+#[derive(Debug, Clone)]
+pub struct PackedMat {
+    /// Column panels of the source: `bt[j*k..(j+1)*k]` is column `j`.
+    bt: Vec<f32>,
+    /// Rows of the source (the reduction depth).
+    k: usize,
+    /// Columns of the source (the output width).
+    n: usize,
+}
+
+impl PackedMat {
+    /// Pack row-major `b (k×n)` into column panels.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedMat {
+        assert_eq!(b.len(), k * n, "pack shape");
+        let mut bt = vec![0.0f32; n * k];
+        transpose(b, &mut bt, k, n);
+        PackedMat { bt, k, n }
+    }
+
+    /// Rows of the source matrix (reduction depth of a multiply).
+    pub fn rows(&self) -> usize {
+        self.k
+    }
+
+    /// Columns of the source matrix (output width of a multiply).
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// Bytes held by the packed panels.
+    pub fn bytes(&self) -> usize {
+        self.bt.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// `out = a @ b` for row-major `a (m×k)` against a pre-packed `b` —
+/// [`matmul`] minus the per-call transpose. Every output element
+/// reduces via [`dot`] over the packed panels for *every* `m`, so
+/// per-row results are bitwise independent of how many rows share the
+/// call (stronger than [`matmul`], whose ikj/packed path choice keys on
+/// the row count). The batched decode scheduler leans on this: a
+/// session's step computes identical bits whether it runs alone or
+/// stacked in a micro-batch.
+pub fn matmul_prepacked(a: &[f32], b: &PackedMat, out: &mut [f32], m: usize) {
+    let (k, n) = (b.k, b.n);
+    debug_assert_eq!(a.len(), m * k, "a shape");
+    debug_assert_eq!(out.len(), m * n, "out shape");
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let bt: &[f32] = &b.bt;
+    let min_rows = (PAR_MIN_FLOPS / (k * n).max(1)).max(PAR_MIN_ROWS);
+    parallel_rows(out, n, min_rows, |row0, rows| {
+        for (ri, orow) in rows.chunks_mut(n).enumerate() {
+            let arow = &a[(row0 + ri) * k..(row0 + ri + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot(arow, &bt[j * k..(j + 1) * k]);
+            }
+        }
+    });
+}
+
 /// `out = aᵀ @ b` for row-major `a (rows×d)`, `b (rows×dv)`,
 /// `out (d×dv)` — the non-causal far-field moment `S = φ(K)ᵀ V` without
 /// materializing the transpose (accumulates rank-1 row updates, the
@@ -274,6 +341,41 @@ mod tests {
             matmul(&a[i * k..(i + 1) * k], &b, &mut single, 1, k, n);
             assert_close(&single, &stacked[i * n..(i + 1) * n], 1e-5, &format!("row {i}"))
                 .unwrap();
+        }
+    }
+
+    #[test]
+    fn matmul_prepacked_matches_naive_and_is_row_batch_invariant() {
+        let mut rng = Pcg64::seeded(7);
+        for (m, k, n) in [(1usize, 3, 5), (4, 8, 8), (17, 32, 9), (33, 16, 16)] {
+            let a = rng.normals(m * k);
+            let b = rng.normals(k * n);
+            let packed = PackedMat::pack(&b, k, n);
+            assert_eq!((packed.rows(), packed.cols()), (k, n));
+            let mut out = vec![1.0f32; m * n];
+            matmul_prepacked(&a, &packed, &mut out, m);
+            assert_close(&out, &naive(&a, &b, m, k, n), 1e-4, &format!("{m}x{k}x{n}"))
+                .unwrap();
+            // Bitwise row/batch invariance: each stacked row equals the
+            // same row computed alone (the decode scheduler's exactness
+            // story rides on this).
+            for i in 0..m {
+                let mut single = vec![0.0f32; n];
+                matmul_prepacked(&a[i * k..(i + 1) * k], &packed, &mut single, 1);
+                assert_eq!(&single[..], &out[i * n..(i + 1) * n], "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_prepacked_zero_dims_zero_fill() {
+        for (m, k, n) in [(0usize, 3, 4), (3, 0, 4), (3, 4, 0)] {
+            let a = vec![1.0f32; m * k];
+            let b = vec![1.0f32; k * n];
+            let packed = PackedMat::pack(&b, k, n);
+            let mut out = vec![9.0f32; m * n];
+            matmul_prepacked(&a, &packed, &mut out, m);
+            assert!(out.iter().all(|&x| x == 0.0), "{m}x{k}x{n}");
         }
     }
 

@@ -53,7 +53,8 @@ fn run() -> Result<()> {
             println!("serve-demo: [--requests N] [--max-wait-ms T]");
             println!(
                 "decode-demo: [--sessions N] [--tokens N] [--layers N] [--heads N] \
-                 [--d-model N] [--bandwidth K] [--kernels elu,elu_neg,tanh] [--max-wait-ms T]"
+                 [--d-model N] [--bandwidth K] [--kernels elu,elu_neg,tanh] [--max-wait-ms T] \
+                 [--max-resident N] [--spill-dir DIR]"
             );
             Ok(())
         }
@@ -207,7 +208,10 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 /// Streaming decode demo: host-side incremental FMM decoder, no
 /// artifacts needed. N concurrent sessions greedy-decode through the
 /// micro-batching scheduler; reports tokens/s, latency percentiles and
-/// exactness vs the O(N²) batch forward.
+/// exactness vs the O(N²) batch forward. `--max-resident N` caps how
+/// many sessions stay in RAM (idle streams page out to a session store
+/// — in-memory snapshots by default, one file per stream under
+/// `--spill-dir`).
 fn cmd_decode_demo(args: &Args) -> Result<()> {
     let kernels: Vec<FeatureMap> = args
         .list_or("kernels", &["elu"])
@@ -233,14 +237,22 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
     let model = HostDecoder::new(cfg.clone())?;
     let probe: Vec<i32> = (0..24).map(|t| (t * 7 % vocab) as i32).collect();
     let batch = model.forward_batch(&probe)?;
-    let server = DecodeServer::start(
-        model,
-        DecodeServerConfig {
-            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
-            max_steps: args.usize_or("max-steps", 64)?,
-            batch_threshold: args.usize_or("batch-threshold", 2)?,
-        },
-    );
+    let server_cfg = DecodeServerConfig {
+        max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
+        max_steps: args.usize_or("max-steps", 64)?,
+        batch_threshold: args.usize_or("batch-threshold", 2)?,
+        max_resident_sessions: args.usize_or("max-resident", 0)?,
+    };
+    let server = match args.get("spill-dir") {
+        Some(dir) => DecodeServer::start_with_store(
+            model,
+            server_cfg,
+            Box::new(fmmformer::serve::session_store::DiskStore::new(
+                std::path::Path::new(dir),
+            )?),
+        ),
+        None => DecodeServer::start(model, server_cfg),
+    };
     let client = server.client();
     let max_diff =
         fmmformer::serve::decode::probe_exactness(&client, &batch, &probe)?;
@@ -276,6 +288,17 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         stats.step_many_calls,
         stats.mean_step_many_width(),
     );
+    if stats.spills > 0 || stats.restores > 0 {
+        println!(
+            "paging: {} spills / {} restores, resident peak {}, {} spilled, \
+             mean restore {}",
+            stats.spills,
+            stats.restores,
+            stats.resident_peak,
+            fmmformer::util::human_bytes(stats.spilled_bytes),
+            fmmformer::bench::fmt_time(stats.mean_restore_latency()),
+        );
+    }
     Ok(())
 }
 

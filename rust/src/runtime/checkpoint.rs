@@ -49,6 +49,73 @@ impl Leaf {
     }
 }
 
+/// Write one leaf in the FMMP framing (name, shape, dtype, raw data).
+/// Shared by the checkpoint files here and the session-snapshot codec
+/// in [`crate::serve::session_store`], which wraps each framed leaf in
+/// a length prefix and adds a checksum.
+pub fn write_leaf<W: Write>(w: &mut W, leaf: &Leaf) -> Result<()> {
+    let nb = leaf.name.as_bytes();
+    if nb.len() > u16::MAX as usize {
+        bail!("leaf name too long ({} bytes)", nb.len());
+    }
+    w.write_all(&(nb.len() as u16).to_le_bytes())?;
+    w.write_all(nb)?;
+    if leaf.shape.len() > u8::MAX as usize {
+        bail!("leaf {} has too many dims", leaf.name);
+    }
+    w.write_all(&[leaf.shape.len() as u8])?;
+    for d in &leaf.shape {
+        w.write_all(&(*d as u32).to_le_bytes())?;
+    }
+    let code: u8 = match leaf.dtype {
+        Dtype::F32 => 0,
+        Dtype::I32 => 1,
+    };
+    w.write_all(&[code])?;
+    if leaf.data.len() != leaf.elems() * 4 {
+        bail!("leaf {} data size mismatch", leaf.name);
+    }
+    w.write_all(&leaf.data)?;
+    Ok(())
+}
+
+/// Read one leaf in the FMMP framing (inverse of [`write_leaf`]).
+/// Malformed input (truncation, dim-product overflow, bad dtype code)
+/// returns `Err`, never panics.
+pub fn read_leaf<R: Read>(r: &mut R) -> Result<Leaf> {
+    let mut u32buf = [0u8; 4];
+    let mut u16buf = [0u8; 2];
+    r.read_exact(&mut u16buf)?;
+    let name_len = u16::from_le_bytes(u16buf) as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    let ndim = b[0] as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        r.read_exact(&mut u32buf)?;
+        shape.push(u32::from_le_bytes(u32buf) as usize);
+    }
+    r.read_exact(&mut b)?;
+    let dtype = match b[0] {
+        0 => Dtype::F32,
+        1 => Dtype::I32,
+        other => bail!("bad dtype code {other}"),
+    };
+    let elems = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("leaf shape {shape:?} overflows"))?;
+    // Scalars (empty shape) carry one value; zero-element shapes carry
+    // none — exactly what `write_leaf` emits (`elems() * 4` bytes), so
+    // the pair round-trips for every shape.
+    let nbytes = if shape.is_empty() { 4 } else { elems * 4 };
+    let mut data = vec![0u8; nbytes];
+    r.read_exact(&mut data)?;
+    Ok(Leaf { name: String::from_utf8(name)?, shape, dtype, data })
+}
+
 pub fn write_leaves(path: &Path, leaves: &[Leaf]) -> Result<()> {
     let mut f = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
@@ -57,22 +124,7 @@ pub fn write_leaves(path: &Path, leaves: &[Leaf]) -> Result<()> {
     f.write_all(&VERSION.to_le_bytes())?;
     f.write_all(&(leaves.len() as u32).to_le_bytes())?;
     for leaf in leaves {
-        let nb = leaf.name.as_bytes();
-        f.write_all(&(nb.len() as u16).to_le_bytes())?;
-        f.write_all(nb)?;
-        f.write_all(&[leaf.shape.len() as u8])?;
-        for d in &leaf.shape {
-            f.write_all(&(*d as u32).to_le_bytes())?;
-        }
-        let code: u8 = match leaf.dtype {
-            Dtype::F32 => 0,
-            Dtype::I32 => 1,
-        };
-        f.write_all(&[code])?;
-        if leaf.data.len() != leaf.elems() * 4 {
-            bail!("leaf {} data size mismatch", leaf.name);
-        }
-        f.write_all(&leaf.data)?;
+        write_leaf(&mut f, leaf).with_context(|| format!("writing {path:?}"))?;
     }
     Ok(())
 }
@@ -94,32 +146,9 @@ pub fn read_leaves(path: &Path) -> Result<Vec<Leaf>> {
     }
     f.read_exact(&mut u32buf)?;
     let n = u32::from_le_bytes(u32buf) as usize;
-    let mut leaves = Vec::with_capacity(n);
+    let mut leaves = Vec::with_capacity(n.min(1 << 16));
     for _ in 0..n {
-        let mut u16buf = [0u8; 2];
-        f.read_exact(&mut u16buf)?;
-        let name_len = u16::from_le_bytes(u16buf) as usize;
-        let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let mut b = [0u8; 1];
-        f.read_exact(&mut b)?;
-        let ndim = b[0] as usize;
-        let mut shape = Vec::with_capacity(ndim);
-        for _ in 0..ndim {
-            f.read_exact(&mut u32buf)?;
-            shape.push(u32::from_le_bytes(u32buf) as usize);
-        }
-        f.read_exact(&mut b)?;
-        let dtype = match b[0] {
-            0 => Dtype::F32,
-            1 => Dtype::I32,
-            other => bail!("{path:?}: bad dtype code {other}"),
-        };
-        let elems: usize = shape.iter().product::<usize>().max(1);
-        let nbytes = if shape.is_empty() { 4 } else { elems * 4 };
-        let mut data = vec![0u8; nbytes];
-        f.read_exact(&mut data)?;
-        leaves.push(Leaf { name: String::from_utf8(name)?, shape, dtype, data });
+        leaves.push(read_leaf(&mut f).with_context(|| format!("reading {path:?}"))?);
     }
     Ok(leaves)
 }
@@ -136,6 +165,10 @@ mod tests {
         let leaves = vec![
             Leaf::from_f32("a.w", &[2, 3], &[1.0, -2.0, 3.5, 0.0, 5.0, -6.25]),
             Leaf::from_f32("scalar", &[], &[2.5]),
+            // Zero-element leaf between others: the reader must consume
+            // exactly the writer's zero data bytes and stay in sync.
+            Leaf::from_f32("empty", &[0], &[]),
+            Leaf::from_f32("tail", &[1], &[7.0]),
         ];
         write_leaves(&path, &leaves).unwrap();
         let back = read_leaves(&path).unwrap();

@@ -11,9 +11,9 @@ pub mod hlo_info;
 pub mod manifest;
 pub mod params;
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -204,8 +204,13 @@ pub fn load_init_leaves(dir: &Path, manifest: &Manifest) -> Result<Vec<checkpoin
     }
     for (leaf, sig) in leaves.iter().zip(&manifest.params) {
         if leaf.name != sig.name || leaf.shape != sig.shape {
-            bail!("param ABI drift: file {:?}{:?} vs manifest {:?}{:?}",
-                  leaf.name, leaf.shape, sig.name, sig.shape);
+            bail!(
+                "param ABI drift: file {:?}{:?} vs manifest {:?}{:?}",
+                leaf.name,
+                leaf.shape,
+                sig.name,
+                sig.shape
+            );
         }
     }
     Ok(leaves)

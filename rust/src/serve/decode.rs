@@ -25,6 +25,12 @@
 //!   concurrent sessions' steps per wake-up, and shutdown uses the same
 //!   explicit sentinel pattern as [`super::Server`] (no deadlock with
 //!   live clients; late submits error cleanly).
+//! * Tiered residency — `DecodeServerConfig::max_resident_sessions`
+//!   caps how many sessions live in RAM; the LRU idle streams spill to
+//!   a [`SessionStore`] ([`super::session_store`]) as self-validating
+//!   snapshots and restore transparently, bit-exactly, when their next
+//!   token arrives. Millions of mostly-idle streams then cost snapshot
+//!   bytes (or disk), not resident sessions.
 //!
 //! Everything here is pure host Rust — no PJRT — so the serving
 //! architecture is exercised end-to-end by `cargo test` even where the
@@ -36,12 +42,17 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::attention::incremental::{feature_map_code, u64_to_words, words_to_u64};
 use crate::attention::{fmm_attention, incremental, FeatureMap, FmmDecodeState};
-use crate::kernel;
+use crate::kernel::{self, PackedMat};
 use crate::rng::Pcg64;
+use crate::runtime::checkpoint::Leaf;
+use crate::runtime::manifest::Dtype;
+use crate::serve::session_store::{self, MemStore, SessionStore};
 use crate::tensor::Tensor;
+use crate::util::fnv1a64;
 
 /// RMS-norm denominator guard (host model only).
 const RMS_EPS: f32 = 1e-6;
@@ -80,15 +91,46 @@ impl Default for DecodeConfig {
     }
 }
 
-/// Per-layer weights: attention projections + a small gated-free MLP.
+impl DecodeConfig {
+    /// Stable hash of every field that determines the decoder's math —
+    /// architecture, attention hyperparameters, and the weight seed
+    /// (the decoder is a deterministic function of the seed, so equal
+    /// fingerprints mean bit-identical models). Session snapshots are
+    /// stamped with it; restore refuses a mismatch.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(64 + self.kernels.len() * 8);
+        for x in [
+            self.layers as u64,
+            self.heads as u64,
+            self.d_model as u64,
+            self.vocab as u64,
+            self.bandwidth as u64,
+            self.seed,
+            self.w1.to_bits() as u64,
+            self.w2.to_bits() as u64,
+        ] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.push(self.kernels.len() as u8);
+        for fm in &self.kernels {
+            bytes.push(feature_map_code(*fm));
+        }
+        fnv1a64(&bytes)
+    }
+}
+
+/// Per-layer weights: attention projections + a small gated-free MLP,
+/// all pre-packed into transposed panels ([`PackedMat`]) once at
+/// construction — the decode loop multiplies through
+/// [`kernel::matmul_prepacked`] and never re-packs a constant weight.
 struct LayerWeights {
-    wq: Tensor,
-    wk: Tensor,
-    wv: Tensor,
-    wo: Tensor,
+    wq: PackedMat,
+    wk: PackedMat,
+    wv: PackedMat,
+    wo: PackedMat,
     /// MLP: d_model → 2·d_model → d_model with ReLU.
-    w_up: Tensor,
-    w_down: Tensor,
+    w_up: PackedMat,
+    w_down: PackedMat,
 }
 
 /// Host-side FMM transformer decoder (reference weights, seeded).
@@ -96,12 +138,16 @@ struct LayerWeights {
 /// Every non-attention op is row-local (RMS-norm, projections, MLP,
 /// residuals), so computing one row at a time — the incremental path —
 /// performs bit-identical float work to the batch path; only attention
-/// needs the [`FmmDecodeState`] recurrence to stay O(1).
+/// needs the [`FmmDecodeState`] recurrence to stay O(1). All constant
+/// weights are pre-packed ([`PackedMat`]), and the prepacked multiply
+/// reduces every output row identically for every batch width — a
+/// session's step is bit-identical whether it runs alone, inside a
+/// [`step_many`] micro-batch, or after a spill/restore round-trip.
 pub struct HostDecoder {
     cfg: DecodeConfig,
     embed: Tensor,
     layers: Vec<LayerWeights>,
-    w_out: Tensor,
+    w_out: PackedMat,
 }
 
 impl HostDecoder {
@@ -112,10 +158,23 @@ impl HostDecoder {
         if cfg.d_model == 0 || cfg.d_model % cfg.heads != 0 {
             bail!("d_model {} must be a positive multiple of heads {}", cfg.d_model, cfg.heads);
         }
+        if cfg.bandwidth == 0 {
+            bail!(
+                "bandwidth must be >= 1: a zero near field degenerates the blend \
+                 (drop the near term via w1 = 0 instead)"
+            );
+        }
+        if cfg.kernels.is_empty() {
+            bail!(
+                "kernels must name at least one far-field feature map \
+                 (elu | elu_neg | tanh)"
+            );
+        }
         let d = cfg.d_model;
         let mut rng = Pcg64::seeded(cfg.seed);
         let proj = |rng: &mut Pcg64, rows: usize, cols: usize| {
-            Tensor::randn(&[rows, cols], rng).scale(1.0 / (rows as f32).sqrt())
+            let t = Tensor::randn(&[rows, cols], rng).scale(1.0 / (rows as f32).sqrt());
+            PackedMat::pack(t.data(), rows, cols)
         };
         let embed = Tensor::randn(&[cfg.vocab, d], &mut rng);
         let layers = (0..cfg.layers)
@@ -151,13 +210,13 @@ impl HostDecoder {
     {
         let lw = &self.layers[l];
         let h = rms_norm(x);
-        let q = h.matmul(&lw.wq)?;
-        let k = h.matmul(&lw.wk)?;
-        let v = h.matmul(&lw.wv)?;
+        let q = mm(&h, &lw.wq)?;
+        let k = mm(&h, &lw.wk)?;
+        let v = mm(&h, &lw.wv)?;
         let a = attend(&q, &k, &v)?;
-        let x = x.add(&a.matmul(&lw.wo)?)?;
+        let x = x.add(&mm(&a, &lw.wo)?)?;
         let m = rms_norm(&x);
-        let f = relu(m.matmul(&lw.w_up)?).matmul(&lw.w_down)?;
+        let f = mm(&relu(mm(&m, &lw.w_up)?), &lw.w_down)?;
         x.add(&f)
     }
 
@@ -194,8 +253,23 @@ impl HostDecoder {
                 Ok(a)
             })?;
         }
-        rms_norm(&x).matmul(&self.w_out)
+        mm(&rms_norm(&x), &self.w_out)
     }
+}
+
+/// `x @ w` against a pre-packed weight: [`Tensor::matmul`] minus the
+/// per-call pack, and bitwise row-batch-invariant (see
+/// [`kernel::matmul_prepacked`]).
+fn mm(x: &Tensor, w: &PackedMat) -> Result<Tensor> {
+    let &[m, k] = x.shape() else {
+        bail!("mm needs a 2-D activation");
+    };
+    if k != w.rows() {
+        bail!("mm inner dims {k} != {}", w.rows());
+    }
+    let mut out = Tensor::zeros(&[m, w.cols()]);
+    kernel::matmul_prepacked(x.data(), w, out.data_mut(), m);
+    Ok(out)
 }
 
 /// Per-stream decode state: one [`FmmDecodeState`] per layer per head.
@@ -255,7 +329,71 @@ impl DecoderSession {
             })?;
         }
         self.pos += 1;
-        Ok(rms_norm(&x).matmul(&self.model.w_out)?.into_data())
+        Ok(mm(&rms_norm(&x), &self.model.w_out)?.into_data())
+    }
+
+    /// Bytes of decode state this session holds (attention ring buffers
+    /// + far-field moments across all layers and heads) — constant in
+    /// tokens decoded, and within framing overhead of what a spill
+    /// writes to the [`SessionStore`].
+    pub fn state_bytes(&self) -> usize {
+        self.states.iter().flatten().map(|s| s.state_bytes()).sum()
+    }
+
+    /// Serialize this session into a self-validating snapshot blob
+    /// (format: [`session_store`] module docs): one leaf per
+    /// layer/head raw decode state plus a position leaf, stamped with
+    /// the model's config fingerprint.
+    pub fn snapshot(&self) -> Result<Vec<u8>> {
+        let mut leaves = Vec::with_capacity(1 + self.states.len() * self.states[0].len());
+        leaves.push(Leaf::from_f32("pos", &[2], &u64_to_words(self.pos as u64)));
+        let mut buf = Vec::new();
+        for (l, row) in self.states.iter().enumerate() {
+            for (h, st) in row.iter().enumerate() {
+                buf.clear();
+                st.export_into(&mut buf);
+                leaves.push(Leaf::from_f32(&format!("l{l}.h{h}"), &[buf.len()], &buf));
+            }
+        }
+        session_store::encode_snapshot(self.model.config().fingerprint(), &leaves)
+    }
+
+    /// Rebuild a session from a [`snapshot`](Self::snapshot) blob.
+    /// Validates the codec framing, the config fingerprint, and every
+    /// per-head raw state; any mismatch or corruption is an `Err` that
+    /// affects only this stream — never a panic.
+    pub fn restore(model: Arc<HostDecoder>, snap: &[u8]) -> Result<DecoderSession> {
+        let cfg = model.config().clone();
+        let leaves = session_store::decode_snapshot(snap, cfg.fingerprint())?;
+        let want = 1 + cfg.layers * cfg.heads;
+        if leaves.len() != want {
+            bail!("snapshot has {} leaves, expected {want}", leaves.len());
+        }
+        if leaves.iter().any(|l| l.dtype != Dtype::F32) {
+            bail!("snapshot contains a non-f32 leaf");
+        }
+        if leaves[0].name != "pos" || leaves[0].elems() != 2 {
+            bail!("snapshot leaf 0 is {:?}, expected the position leaf", leaves[0].name);
+        }
+        let pos_words = leaves[0].to_f32();
+        let pos64 = words_to_u64(pos_words[0], pos_words[1]);
+        let pos = usize::try_from(pos64)
+            .map_err(|_| anyhow!("snapshot position {pos64} overflows"))?;
+        let mut sess = DecoderSession::new(model);
+        let mut it = leaves[1..].iter();
+        for l in 0..cfg.layers {
+            for h in 0..cfg.heads {
+                let leaf = it.next().expect("leaf count checked");
+                if leaf.name != format!("l{l}.h{h}") {
+                    bail!("snapshot leaf {:?} out of order (expected l{l}.h{h})", leaf.name);
+                }
+                sess.states[l][h]
+                    .import_from(&leaf.to_f32())
+                    .with_context(|| format!("importing head state l{l}.h{h}"))?;
+            }
+        }
+        sess.pos = pos;
+        Ok(sess)
     }
 }
 
@@ -267,11 +405,12 @@ impl DecoderSession {
 /// stacked batch instead of `B` separate GEMVs, and the per-head
 /// attention states advance through [`incremental::step_many`] (batched
 /// moment GEMMs, thread-sharded when wide). Row `i` of the result
-/// reproduces `sessions[i].step(tokens[i])` within float round-off:
-/// the attention recurrence runs the identical scalar code per state,
-/// and the GEMMs reduce each output row independently (wide stacks may
-/// take the packed kernel path, which reorders the reduction — pinned
-/// < 1e-4 by `tests/decode_engine.rs`).
+/// reproduces `sessions[i].step(tokens[i])` *bit-for-bit*: the
+/// attention recurrence runs the identical scalar code per state, and
+/// every weight multiply goes through the prepacked kernel, whose
+/// per-row reduction order is independent of the batch width — so the
+/// micro-batch composition (and any spill/restore in between) can never
+/// perturb a stream's logits.
 ///
 /// All sessions must share one model (`Arc` identity); any invalid
 /// token fails the whole call *before* any state is touched, so the
@@ -329,7 +468,7 @@ pub fn step_many(
     for s in sessions.iter_mut() {
         s.pos += 1;
     }
-    let logits = rms_norm(&x).matmul(&model.w_out)?;
+    let logits = mm(&rms_norm(&x), &model.w_out)?;
     Ok((0..b).map(|i| logits.row(i).to_vec()).collect())
 }
 
@@ -362,12 +501,28 @@ pub fn run_greedy_sessions(
     tokens: usize,
     vocab: usize,
 ) -> Result<Vec<f64>> {
+    run_greedy_sessions_collect(client, sessions, tokens, vocab).map(|(lats, _)| lats)
+}
+
+/// [`run_greedy_sessions`] that also returns each stream's greedy
+/// (argmax) token sequence, in session launch order — the paging bench
+/// and tests compare these across residency caps: prepacked kernels
+/// make per-stream logits independent of micro-batch composition, so
+/// the sequences must be *identical* however aggressively the server
+/// spills.
+pub fn run_greedy_sessions_collect(
+    client: &DecodeClient,
+    sessions: usize,
+    tokens: usize,
+    vocab: usize,
+) -> Result<(Vec<f64>, Vec<Vec<i32>>)> {
     let handles: Vec<_> = (0..sessions)
         .map(|s| {
             let c = client.clone();
-            std::thread::spawn(move || -> Result<Vec<f64>> {
+            std::thread::spawn(move || -> Result<(Vec<f64>, Vec<i32>)> {
                 let stream = c.open_stream()?;
                 let mut lats = Vec::with_capacity(tokens);
+                let mut chosen = Vec::with_capacity(tokens);
                 let mut tok = (s % vocab.max(1)) as i32;
                 for _ in 0..tokens {
                     let out = stream.step(tok)?;
@@ -380,16 +535,20 @@ pub fn run_greedy_sessions(
                         .map(|(i, _)| i)
                         .unwrap_or(0);
                     tok = argmax as i32;
+                    chosen.push(tok);
                 }
-                Ok(lats)
+                Ok((lats, chosen))
             })
         })
         .collect();
     let mut lats = Vec::with_capacity(sessions * tokens);
+    let mut streams = Vec::with_capacity(sessions);
     for h in handles {
-        lats.extend(h.join().map_err(|_| anyhow!("session thread panicked"))??);
+        let (l, toks) = h.join().map_err(|_| anyhow!("session thread panicked"))??;
+        lats.extend(l);
+        streams.push(toks);
     }
-    Ok(lats)
+    Ok((lats, streams))
 }
 
 /// Row-wise RMS normalization (no learned gain — reference model).
@@ -447,6 +606,12 @@ pub struct DecodeServerConfig {
     /// scalar `step`. `usize::MAX` disables batching entirely — the
     /// PR 1 scalar-loop scheduler, kept as the bench baseline.
     pub batch_threshold: usize,
+    /// Residency cap: at most this many `DecoderSession`s live in RAM;
+    /// the least-recently-stepped idle streams spill to the
+    /// [`SessionStore`] and restore transparently on their next token.
+    /// `0` means unlimited (every stream stays resident — the pre-paging
+    /// behavior, and the default).
+    pub max_resident_sessions: usize,
 }
 
 impl Default for DecodeServerConfig {
@@ -455,6 +620,7 @@ impl Default for DecodeServerConfig {
             max_wait: Duration::from_millis(2),
             max_steps: 64,
             batch_threshold: 2,
+            max_resident_sessions: 0,
         }
     }
 }
@@ -484,6 +650,24 @@ pub struct DecodeStats {
     pub batched_steps: usize,
     /// Number of [`step_many`] invocations the scheduler issued.
     pub step_many_calls: usize,
+    /// Sessions evicted to the [`SessionStore`] (residency manager).
+    pub spills: usize,
+    /// Sessions restored from the store on an incoming token.
+    pub restores: usize,
+    /// Peak resident `DecoderSession` count — stays at or below
+    /// `max_resident_sessions` whenever a cap is set.
+    pub resident_peak: usize,
+    /// Cumulative snapshot bytes written to the store (each snapshot is
+    /// framing + the session's `state_bytes()` payload).
+    pub spilled_bytes: u64,
+    /// Wall-clock seconds spent restoring spilled sessions.
+    pub restore_secs: f64,
+    /// Evictions that failed (snapshot or store write error). The
+    /// victim stays resident rather than losing state, so a nonzero
+    /// count means residency may exceed `max_resident_sessions` — the
+    /// operator's signal that the spill store is unhealthy (e.g. disk
+    /// full) before RAM growth becomes the symptom.
+    pub spill_failures: usize,
 }
 
 impl DecodeStats {
@@ -512,6 +696,15 @@ impl DecodeStats {
             0.0
         } else {
             self.batched_steps as f64 / self.step_many_calls as f64
+        }
+    }
+
+    /// Mean seconds to restore one spilled session (0 if none restored).
+    pub fn mean_restore_latency(&self) -> f64 {
+        if self.restores == 0 {
+            0.0
+        } else {
+            self.restore_secs / self.restores as f64
         }
     }
 }
@@ -598,14 +791,27 @@ pub struct DecodeServer {
 }
 
 impl DecodeServer {
+    /// Start with the default heap-backed [`MemStore`] (only consulted
+    /// when `cfg.max_resident_sessions` caps residency).
     pub fn start(model: HostDecoder, cfg: DecodeServerConfig) -> DecodeServer {
+        DecodeServer::start_with_store(model, cfg, Box::new(MemStore::new()))
+    }
+
+    /// Start with an explicit spill store (e.g.
+    /// [`session_store::DiskStore`](crate::serve::session_store::DiskStore)
+    /// so idle streams cost zero RAM).
+    pub fn start_with_store(
+        model: HostDecoder,
+        cfg: DecodeServerConfig,
+        store: Box<dyn SessionStore>,
+    ) -> DecodeServer {
         let (tx, rx) = mpsc::channel::<DecodeMsg>();
         let stats = Arc::new(Mutex::new(DecodeStats::default()));
         let stats_thread = stats.clone();
         let model = Arc::new(model);
         let handle = std::thread::Builder::new()
             .name("fmm-decode".into())
-            .spawn(move || decode_scheduler(model, cfg, rx, stats_thread))
+            .spawn(move || decode_scheduler(model, cfg, store, rx, stats_thread))
             .expect("spawn decode scheduler");
         DecodeServer {
             client: Some(DecodeClient { tx, next_id: Arc::new(AtomicU64::new(0)) }),
@@ -637,13 +843,152 @@ impl DecodeServer {
     }
 }
 
+/// Session residency manager — the scheduler half of cross-request
+/// paging. At most `cap` [`DecoderSession`]s live in RAM; everything
+/// else waits in the [`SessionStore`] as a snapshot blob and is
+/// restored transparently when its stream's next token arrives. LRU
+/// order is kept by a monotone step clock; eviction is driven by the
+/// micro-batch loop (a batch's own sessions are pinned while it runs,
+/// and waves are at most `cap` wide, so residency never overshoots the
+/// cap).
+struct Residency {
+    resident: HashMap<u64, DecoderSession>,
+    store: Box<dyn SessionStore>,
+    /// Effective cap (`usize::MAX` when the config said unlimited).
+    cap: usize,
+    /// Monotone clock: bumped whenever a session is opened, restored or
+    /// stepped; the smallest stamp is the LRU eviction victim.
+    tick: u64,
+    last_used: HashMap<u64, u64>,
+    peak: usize,
+    spills: usize,
+    restores: usize,
+    spilled_bytes: u64,
+    restore_secs: f64,
+    spill_failures: usize,
+}
+
+impl Residency {
+    fn new(store: Box<dyn SessionStore>, max_resident: usize) -> Residency {
+        Residency {
+            resident: HashMap::new(),
+            store,
+            cap: if max_resident == 0 { usize::MAX } else { max_resident },
+            tick: 0,
+            last_used: HashMap::new(),
+            peak: 0,
+            spills: 0,
+            restores: 0,
+            spilled_bytes: 0,
+            restore_secs: 0.0,
+            spill_failures: 0,
+        }
+    }
+
+    fn touch(&mut self, id: u64) {
+        self.tick += 1;
+        self.last_used.insert(id, self.tick);
+    }
+
+    /// Register a freshly opened stream, spilling an idle one first if
+    /// the table is at the cap. Only the new id is pinned — a victim
+    /// with a step already queued in this window just restores inside
+    /// its wave. (Pinning every queued-step session instead would save
+    /// that round-trip but lets residency overshoot the cap whenever
+    /// all residents have queued steps; the cap is the RAM contract,
+    /// so it wins.)
+    fn open(&mut self, id: u64, sess: DecoderSession) {
+        self.make_room(&[id]);
+        self.resident.insert(id, sess);
+        self.peak = self.peak.max(self.resident.len());
+        self.touch(id);
+    }
+
+    /// Drop a stream wherever it lives; true if it existed.
+    fn close(&mut self, id: u64) -> bool {
+        self.last_used.remove(&id);
+        self.resident.remove(&id).is_some() || self.store.remove(id)
+    }
+
+    /// Spill least-recently-used sessions not in `pinned` until there
+    /// is room to insert one more. Stops early (leaving the table over
+    /// the cap) only if every resident session is pinned or a spill
+    /// fails — state is never discarded to make room; failed spills
+    /// count in `spill_failures` so an unhealthy store is visible
+    /// before unbounded residency is.
+    fn make_room(&mut self, pinned: &[u64]) {
+        while self.resident.len() >= self.cap {
+            let victim = self
+                .resident
+                .keys()
+                .copied()
+                .filter(|id| !pinned.contains(id))
+                .min_by_key(|id| self.last_used.get(id).copied().unwrap_or(0));
+            let Some(victim) = victim else { return };
+            let snap = match self.resident.get(&victim).map(|s| s.snapshot()) {
+                Some(Ok(snap)) => snap,
+                _ => {
+                    self.spill_failures += 1;
+                    return;
+                }
+            };
+            if self.store.put(victim, &snap).is_err() {
+                self.spill_failures += 1;
+                return;
+            }
+            self.resident.remove(&victim);
+            self.spills += 1;
+            self.spilled_bytes += snap.len() as u64;
+        }
+    }
+
+    /// Make `id` resident if it is currently spilled. `Ok(true)`: the
+    /// session is in the table now; `Ok(false)`: unknown (never opened,
+    /// or closed). `Err`: a snapshot existed but could not be read or
+    /// decoded — that stream's state is gone and only it disconnects.
+    fn ensure_resident(
+        &mut self,
+        id: u64,
+        model: &Arc<HostDecoder>,
+        pinned: &[u64],
+    ) -> Result<bool> {
+        if self.resident.contains_key(&id) {
+            return Ok(true);
+        }
+        let Some(snap) = self.store.take(id)? else {
+            return Ok(false);
+        };
+        let t0 = Instant::now();
+        let sess = DecoderSession::restore(model.clone(), &snap)?;
+        self.make_room(pinned);
+        self.resident.insert(id, sess);
+        self.restores += 1;
+        self.restore_secs += t0.elapsed().as_secs_f64();
+        self.peak = self.peak.max(self.resident.len());
+        self.touch(id);
+        Ok(true)
+    }
+
+    /// Publish the residency counters into the shared stats snapshot
+    /// (counters here are cumulative; this overwrites, never adds).
+    fn sync_stats(&self, s: &mut DecodeStats) {
+        s.spills = self.spills;
+        s.restores = self.restores;
+        s.resident_peak = self.peak;
+        s.spilled_bytes = self.spilled_bytes;
+        s.restore_secs = self.restore_secs;
+        s.spill_failures = self.spill_failures;
+    }
+}
+
 fn decode_scheduler(
     model: Arc<HostDecoder>,
     cfg: DecodeServerConfig,
+    store: Box<dyn SessionStore>,
     rx: Receiver<DecodeMsg>,
     stats: Arc<Mutex<DecodeStats>>,
 ) {
-    let mut sessions: HashMap<u64, DecoderSession> = HashMap::new();
+    let mut res = Residency::new(store, cfg.max_resident_sessions);
     loop {
         let mut steps: Vec<StepReq> = Vec::new();
         let mut closes: Vec<u64> = Vec::new();
@@ -652,9 +997,13 @@ fn decode_scheduler(
         // Block for the first message of a micro-batch.
         match rx.recv() {
             Ok(msg) => {
-                handle_msg(msg, &model, &mut sessions, &mut steps, &mut closes, &mut exit, &stats)
+                handle_msg(msg, &model, &mut res, &mut steps, &mut closes, &mut exit, &stats)
             }
-            Err(_) => return, // all clients gone
+            Err(_) => {
+                // All clients gone.
+                res.sync_stats(&mut stats.lock().unwrap());
+                return;
+            }
         }
         // Fill the micro-batch until the window closes.
         let deadline = Instant::now() + cfg.max_wait;
@@ -667,7 +1016,7 @@ fn decode_scheduler(
                 Ok(msg) => handle_msg(
                     msg,
                     &model,
-                    &mut sessions,
+                    &mut res,
                     &mut steps,
                     &mut closes,
                     &mut exit,
@@ -685,7 +1034,8 @@ fn decode_scheduler(
         // rounds of at most one step per session (per-session order is
         // submission order: one scheduler, FIFO channel), then drive
         // each round through batched `step_many` — or scalar `step` for
-        // singleton/sub-threshold rounds.
+        // singleton/sub-threshold rounds. Spilled sessions restore on
+        // the way in; LRU residents spill on the way out.
         let micro_batch = steps.len();
         if micro_batch > 0 {
             let t0 = Instant::now();
@@ -694,7 +1044,7 @@ fn decode_scheduler(
                 run_round(
                     round,
                     &model,
-                    &mut sessions,
+                    &mut res,
                     cfg.batch_threshold,
                     micro_batch,
                     &mut tally,
@@ -708,17 +1058,19 @@ fn decode_scheduler(
             s.step_many_calls += tally.step_many_calls;
             s.sessions_closed += tally.disconnected;
             s.exec_secs += t0.elapsed().as_secs_f64();
+            res.sync_stats(&mut s);
         }
         // Closes apply only after the window's steps ran: per-sender
         // FIFO means any step a client submitted before dropping its
         // stream is already in `steps`, so a pipelined step_async
         // followed by drop still gets its logits.
         for session in closes {
-            if sessions.remove(&session).is_some() {
+            if res.close(session) {
                 stats.lock().unwrap().sessions_closed += 1;
             }
         }
         if exit {
+            res.sync_stats(&mut stats.lock().unwrap());
             return;
         }
     }
@@ -781,39 +1133,107 @@ fn scalar_step(
     }
 }
 
-/// Execute one round: sessions are pulled out of the table so the
-/// batched path can hold them all mutably at once; unknown sessions
-/// error immediately and out-of-vocab tokens take the scalar path (its
-/// error is the canonical one, and the session must not advance).
+/// Execute one round, splitting it into waves of at most
+/// `max_resident_sessions` distinct streams: every wave's sessions are
+/// made resident (restoring spills) before it runs, and because a wave
+/// never pins more streams than the cap, restores can always make room
+/// by evicting idle streams — residency never overshoots the cap.
 fn run_round(
     round: Vec<StepReq>,
     model: &Arc<HostDecoder>,
-    sessions: &mut HashMap<u64, DecoderSession>,
+    res: &mut Residency,
     batch_threshold: usize,
     micro_batch: usize,
     tally: &mut RoundTally,
 ) {
-    let vocab = model.config().vocab;
-    let batch = round.len() >= batch_threshold.max(2);
+    let cap = res.cap;
+    let mut wave = round;
+    while !wave.is_empty() {
+        let tail = wave.split_off(wave.len().min(cap));
+        run_wave(wave, model, res, batch_threshold, micro_batch, tally);
+        wave = tail;
+    }
+}
+
+/// Residency status of one wave member after the restore phase.
+enum WaveStatus {
+    /// In the session table, ready to step.
+    Ready,
+    /// Never opened, or closed — the canonical "unknown" error.
+    Unknown,
+    /// A spill snapshot existed but could not be restored; the state is
+    /// lost and only this stream disconnects.
+    Lost(String),
+}
+
+/// Execute one wave (≤ cap distinct sessions, ≤ 1 step each): restore
+/// phase first, then the batched [`step_many`] path — or scalar `step`
+/// for sub-threshold waves and out-of-vocab tokens (the scalar error is
+/// the canonical one, and the session must not advance).
+fn run_wave(
+    wave: Vec<StepReq>,
+    model: &Arc<HostDecoder>,
+    res: &mut Residency,
+    batch_threshold: usize,
+    micro_batch: usize,
+    tally: &mut RoundTally,
+) {
+    // Phase 1: bring every spilled session in this wave back into the
+    // table. The whole wave is pinned so one member's restore cannot
+    // evict another's just-restored state.
+    let ids: Vec<u64> = wave.iter().map(|r| r.session).collect();
+    let mut status: HashMap<u64, WaveStatus> = HashMap::with_capacity(ids.len());
+    for &id in &ids {
+        let st = match res.ensure_resident(id, model, &ids) {
+            Ok(true) => WaveStatus::Ready,
+            Ok(false) => WaveStatus::Unknown,
+            Err(e) => WaveStatus::Lost(format!("{e:#}")),
+        };
+        status.insert(id, st);
+    }
+    let mut runnable: Vec<StepReq> = Vec::with_capacity(wave.len());
+    for req in wave {
+        let id = req.session;
+        match status.get(&id) {
+            Some(WaveStatus::Ready) => runnable.push(req),
+            Some(WaveStatus::Lost(msg)) => {
+                tally.failed += 1;
+                tally.disconnected += 1;
+                req.reply
+                    .send(Err(anyhow!("restoring spilled session {id}: {msg}")))
+                    .ok();
+            }
+            Some(WaveStatus::Unknown) | None => {
+                tally.failed += 1;
+                req.reply.send(Err(anyhow!("unknown or closed session {id}"))).ok();
+            }
+        }
+    }
+
+    // Phase 2: run the steps.
+    let batch = runnable.len() >= batch_threshold.max(2);
     if !batch {
-        // Sub-threshold round: the PR 1 scalar loop, sessions stepped
+        // Sub-threshold wave: the PR 1 scalar loop, sessions stepped
         // in place.
-        for req in round {
-            match sessions.get_mut(&req.session) {
+        for req in runnable {
+            let id = req.session;
+            match res.resident.get_mut(&id) {
                 None => {
                     tally.failed += 1;
-                    req.reply
-                        .send(Err(anyhow!("unknown or closed session {}", req.session)))
-                        .ok();
+                    req.reply.send(Err(anyhow!("unknown or closed session {id}"))).ok();
                 }
-                Some(sess) => scalar_step(req, sess, micro_batch, tally),
+                Some(sess) => {
+                    scalar_step(req, sess, micro_batch, tally);
+                    res.touch(id);
+                }
             }
         }
         return;
     }
-    let mut work: Vec<(StepReq, DecoderSession)> = Vec::with_capacity(round.len());
-    for req in round {
-        let Some(mut sess) = sessions.remove(&req.session) else {
+    let vocab = model.config().vocab;
+    let mut work: Vec<(StepReq, DecoderSession)> = Vec::with_capacity(runnable.len());
+    for req in runnable {
+        let Some(mut sess) = res.resident.remove(&req.session) else {
             tally.failed += 1;
             req.reply
                 .send(Err(anyhow!("unknown or closed session {}", req.session)))
@@ -826,17 +1246,19 @@ fn run_round(
             // leaves the session unadvanced.
             let id = req.session;
             scalar_step(req, &mut sess, micro_batch, tally);
-            sessions.insert(id, sess);
+            res.resident.insert(id, sess);
+            res.touch(id);
             continue;
         }
         work.push((req, sess));
     }
     if work.len() < 2 {
-        // Batched round degenerated (filtered down): finish scalar.
+        // Batched wave degenerated (filtered down): finish scalar.
         for (req, mut sess) in work {
             let id = req.session;
             scalar_step(req, &mut sess, micro_batch, tally);
-            sessions.insert(id, sess);
+            res.resident.insert(id, sess);
+            res.touch(id);
         }
         return;
     }
@@ -865,7 +1287,8 @@ fn run_round(
                         micro_batch,
                     }))
                     .ok();
-                sessions.insert(req.session, sess);
+                res.resident.insert(req.session, sess);
+                res.touch(req.session);
             }
         }
         Err(e) => {
@@ -889,7 +1312,7 @@ fn run_round(
 fn handle_msg(
     msg: DecodeMsg,
     model: &Arc<HostDecoder>,
-    sessions: &mut HashMap<u64, DecoderSession>,
+    res: &mut Residency,
     steps: &mut Vec<StepReq>,
     closes: &mut Vec<u64>,
     exit: &mut bool,
@@ -897,7 +1320,7 @@ fn handle_msg(
 ) {
     match msg {
         DecodeMsg::Open { session, reply } => {
-            sessions.insert(session, DecoderSession::new(model.clone()));
+            res.open(session, DecoderSession::new(model.clone()));
             stats.lock().unwrap().sessions_opened += 1;
             reply.send(Ok(())).ok();
         }

@@ -28,7 +28,9 @@
 //!
 //! [`decode`] is the session-based streaming sibling of this module:
 //! instead of recomputing a fixed window per request it decodes token by
-//! token over [`crate::attention::FmmDecodeState`] at O(1)/token.
+//! token over [`crate::attention::FmmDecodeState`] at O(1)/token, and
+//! [`session_store`] tiers its idle session state out of RAM (LRU spill
+//! to a snapshot store, transparent restore on the next token).
 //!
 //! PJRT handles are not `Send` (the xla crate wraps `Rc` + raw
 //! pointers), so the scheduler thread owns its *own* `Runtime` and
@@ -36,6 +38,7 @@
 //! parameter leaves, requests) crosses the channel.
 
 pub mod decode;
+pub mod session_store;
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,387 @@
+//! Tiered session residency: spill/restore stores + the snapshot codec.
+//!
+//! The FMM decomposition makes per-stream decode state O(bandwidth·dh +
+//! r·dh²) — independent of tokens decoded — which is exactly what makes
+//! cross-request paging viable: at millions of mostly-idle streams the
+//! bottleneck is *resident* `DecoderSession`s, not compute, and a state
+//! that small can leave and re-enter RAM cheaply. This module provides
+//! the storage half of that story; the scheduler half (LRU eviction,
+//! transparent restore) lives in [`super::decode`].
+//!
+//! # Snapshot format (`FMMS` v1)
+//!
+//! A snapshot is one self-validating byte blob:
+//!
+//! ```text
+//! "FMMS"            magic, 4 bytes
+//! version           u32 LE (currently 1)
+//! fingerprint       u64 LE — config fingerprint of the producing
+//!                   decoder; restore refuses a mismatch
+//! n_leaves          u32 LE
+//! n_leaves ×        u32 LE byte length, then one FMMP-framed leaf
+//!                   (the `runtime::checkpoint` framing: name, shape,
+//!                   dtype, raw f32 data)
+//! checksum          u64 LE — FNV-1a over every preceding byte
+//! ```
+//!
+//! Invariants the codec enforces (all as `Err`, never panics):
+//!
+//! * magic and version must match exactly — unknown versions are
+//!   rejected, not guessed at;
+//! * the fingerprint must equal the restoring decoder's, so a snapshot
+//!   can never be imported into a mismatched `HostDecoder` (different
+//!   bandwidth, kernels, dims, weights seed — any drift changes the
+//!   fingerprint);
+//! * the trailing checksum is verified **before** any leaf is parsed, so
+//!   truncated or bit-flipped blobs are refused up front;
+//! * every leaf is length-prefixed and must parse to exactly its
+//!   prefixed length — a corrupt leaf cannot over-read into a neighbor.
+//!
+//! Header fields (position, ring occupancy) travel as raw `u32` bit
+//! patterns inside `f32` leaves; nothing ever does arithmetic on them,
+//! so the round-trip is bit-exact — a restored session's next token is
+//! bit-identical to the never-spilled session's (pinned by
+//! `tests/session_paging.rs`).
+//!
+//! # Stores
+//!
+//! [`SessionStore`] is the minimal trait the residency manager needs:
+//! opaque blobs keyed by session id. [`MemStore`] keeps them on the
+//! heap (compaction tier: ~`state_bytes()` per idle stream instead of a
+//! live session + scratch); [`DiskStore`] writes one file per session
+//! (capacity tier: idle streams cost zero RAM). A snapshot is removed
+//! from the store when taken — exactly one owner (store or scheduler)
+//! holds a stream's state at any time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::checkpoint::{read_leaf, write_leaf, Leaf};
+use crate::util::fnv1a64;
+
+/// Snapshot magic bytes.
+pub const SNAP_MAGIC: &[u8; 4] = b"FMMS";
+/// Current snapshot codec version.
+pub const SNAP_VERSION: u32 = 1;
+/// Bytes of fixed framing around the leaves: magic + version +
+/// fingerprint + leaf count + trailing checksum.
+const SNAP_OVERHEAD: usize = 4 + 4 + 8 + 4 + 8;
+
+/// Encode `leaves` as one self-validating snapshot blob stamped with
+/// the producing decoder's config `fingerprint`.
+pub fn encode_snapshot(fingerprint: u64, leaves: &[Leaf]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(
+        SNAP_OVERHEAD + leaves.iter().map(|l| 64 + l.data.len()).sum::<usize>(),
+    );
+    out.extend_from_slice(SNAP_MAGIC);
+    out.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&(leaves.len() as u32).to_le_bytes());
+    let mut framed = Vec::new();
+    for leaf in leaves {
+        framed.clear();
+        write_leaf(&mut framed, leaf)?;
+        out.extend_from_slice(&(framed.len() as u32).to_le_bytes());
+        out.extend_from_slice(&framed);
+    }
+    let sum = fnv1a64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    Ok(out)
+}
+
+/// Decode a snapshot blob, validating magic, version, fingerprint and
+/// checksum before any leaf is parsed. Malformed input of any kind —
+/// truncation, bit flips, version or fingerprint drift — returns `Err`;
+/// this function never panics on untrusted bytes.
+pub fn decode_snapshot(bytes: &[u8], expect_fingerprint: u64) -> Result<Vec<Leaf>> {
+    if bytes.len() < SNAP_OVERHEAD {
+        bail!("snapshot truncated: {} bytes", bytes.len());
+    }
+    if &bytes[..4] != SNAP_MAGIC {
+        bail!("bad snapshot magic {:?}", &bytes[..4]);
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != SNAP_VERSION {
+        bail!("unsupported snapshot version {version} (expected {SNAP_VERSION})");
+    }
+    let fingerprint = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    if fingerprint != expect_fingerprint {
+        bail!(
+            "snapshot config fingerprint {fingerprint:#018x} does not match \
+             the restoring decoder's {expect_fingerprint:#018x}"
+        );
+    }
+    let body_end = bytes.len() - 8;
+    let stored_sum = u64::from_le_bytes(bytes[body_end..].try_into().unwrap());
+    let sum = fnv1a64(&bytes[..body_end]);
+    if sum != stored_sum {
+        bail!("snapshot checksum mismatch (corrupted: {sum:#018x} != {stored_sum:#018x})");
+    }
+    let n = u32::from_le_bytes(bytes[16..20].try_into().unwrap()) as usize;
+    let mut leaves = Vec::with_capacity(n.min(1 << 16));
+    let mut off = 20usize;
+    for i in 0..n {
+        if body_end - off < 4 {
+            bail!("snapshot truncated in leaf {i} length prefix");
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        if len > body_end - off {
+            bail!("snapshot leaf {i} claims {len} bytes, {} remain", body_end - off);
+        }
+        let mut cur = &bytes[off..off + len];
+        let leaf = read_leaf(&mut cur).with_context(|| format!("snapshot leaf {i}"))?;
+        if !cur.is_empty() {
+            bail!("snapshot leaf {i} has {} trailing bytes", cur.len());
+        }
+        leaves.push(leaf);
+        off += len;
+    }
+    if off != body_end {
+        bail!("snapshot has {} unparsed bytes after the last leaf", body_end - off);
+    }
+    Ok(leaves)
+}
+
+/// Where spilled session snapshots live. Implementations hold opaque
+/// blobs keyed by session id; a blob has exactly one owner at a time —
+/// [`take`](SessionStore::take) removes it from the store, and the
+/// scheduler re-[`put`](SessionStore::put)s on the next eviction.
+pub trait SessionStore: Send {
+    /// Persist `snap` under `key`, replacing any prior snapshot.
+    fn put(&mut self, key: u64, snap: &[u8]) -> Result<()>;
+
+    /// Remove and return the snapshot for `key` (`Ok(None)` if the key
+    /// was never spilled or was already taken). An `Err` means the
+    /// snapshot existed but could not be read back — the stream's state
+    /// is lost and the caller must disconnect that stream only.
+    fn take(&mut self, key: u64) -> Result<Option<Vec<u8>>>;
+
+    /// Drop any snapshot for `key`; returns whether one existed
+    /// (stream close / disconnect path).
+    fn remove(&mut self, key: u64) -> bool;
+
+    /// Number of spilled sessions currently held.
+    fn len(&self) -> usize;
+
+    /// True when no sessions are spilled.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total snapshot bytes currently held.
+    fn bytes(&self) -> u64;
+}
+
+/// Heap-backed store: the compaction tier. An idle stream costs its
+/// snapshot bytes (~`DecoderSession::state_bytes()`) instead of a live
+/// session plus scratch, and spill/restore is a memcpy.
+#[derive(Default)]
+pub struct MemStore {
+    snaps: HashMap<u64, Vec<u8>>,
+    bytes: u64,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+}
+
+impl SessionStore for MemStore {
+    fn put(&mut self, key: u64, snap: &[u8]) -> Result<()> {
+        if let Some(old) = self.snaps.insert(key, snap.to_vec()) {
+            self.bytes -= old.len() as u64;
+        }
+        self.bytes += snap.len() as u64;
+        Ok(())
+    }
+
+    fn take(&mut self, key: u64) -> Result<Option<Vec<u8>>> {
+        let snap = self.snaps.remove(&key);
+        if let Some(s) = &snap {
+            self.bytes -= s.len() as u64;
+        }
+        Ok(snap)
+    }
+
+    fn remove(&mut self, key: u64) -> bool {
+        match self.snaps.remove(&key) {
+            Some(s) => {
+                self.bytes -= s.len() as u64;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.snaps.len()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// Disk-backed store: the capacity tier. One file per spilled session
+/// under a directory this store owns; idle streams cost zero RAM, so
+/// the open-stream count is bounded by disk, not memory. Files the
+/// store still tracks are deleted on drop (the directory itself is
+/// removed only if that leaves it empty).
+pub struct DiskStore {
+    dir: PathBuf,
+    /// Snapshot byte length per spilled key (also the file index: a
+    /// key absent here is `Ok(None)` without touching the filesystem).
+    index: HashMap<u64, u64>,
+    bytes: u64,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a spill directory.
+    pub fn new(dir: &Path) -> Result<DiskStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating spill dir {dir:?}"))?;
+        Ok(DiskStore { dir: dir.to_path_buf(), index: HashMap::new(), bytes: 0 })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_of(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("sess_{key:016x}.fmms"))
+    }
+}
+
+impl SessionStore for DiskStore {
+    fn put(&mut self, key: u64, snap: &[u8]) -> Result<()> {
+        let path = self.path_of(key);
+        std::fs::write(&path, snap).with_context(|| format!("spilling to {path:?}"))?;
+        if let Some(old) = self.index.insert(key, snap.len() as u64) {
+            self.bytes -= old;
+        }
+        self.bytes += snap.len() as u64;
+        Ok(())
+    }
+
+    fn take(&mut self, key: u64) -> Result<Option<Vec<u8>>> {
+        let Some(len) = self.index.remove(&key) else {
+            return Ok(None);
+        };
+        self.bytes -= len;
+        let path = self.path_of(key);
+        // The file is forgotten even if the read fails: a spill we
+        // cannot read back is lost state either way, and the caller
+        // disconnects the affected stream.
+        let blob = std::fs::read(&path).with_context(|| format!("restoring {path:?}"));
+        std::fs::remove_file(&path).ok();
+        blob.map(Some)
+    }
+
+    fn remove(&mut self, key: u64) -> bool {
+        match self.index.remove(&key) {
+            Some(len) => {
+                self.bytes -= len;
+                std::fs::remove_file(self.path_of(key)).ok();
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for DiskStore {
+    fn drop(&mut self) {
+        for key in self.index.keys() {
+            std::fs::remove_file(self.path_of(*key)).ok();
+        }
+        std::fs::remove_dir(&self.dir).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaves() -> Vec<Leaf> {
+        vec![
+            Leaf::from_f32("pos", &[2], &[f32::from_bits(7), f32::from_bits(0)]),
+            Leaf::from_f32("l0.h0", &[5], &[0.5, -1.25, 3.0, 0.0, 9.5]),
+        ]
+    }
+
+    #[test]
+    fn snapshot_roundtrips() {
+        let blob = encode_snapshot(0xdead_beef, &leaves()).unwrap();
+        let back = decode_snapshot(&blob, 0xdead_beef).unwrap();
+        assert_eq!(back, leaves());
+    }
+
+    #[test]
+    fn snapshot_rejects_fingerprint_version_and_corruption() {
+        let blob = encode_snapshot(1, &leaves()).unwrap();
+        // Fingerprint drift.
+        assert!(decode_snapshot(&blob, 2).is_err());
+        // Every truncation length errors; none panic.
+        for cut in [0, 3, 7, 15, 19, blob.len() / 2, blob.len() - 1] {
+            assert!(decode_snapshot(&blob[..cut], 1).is_err(), "cut {cut}");
+        }
+        // A single flipped payload byte trips the checksum.
+        let mut bad = blob.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(decode_snapshot(&bad, 1).is_err());
+        // A future version is refused outright.
+        let mut vnext = blob.clone();
+        vnext[4] = 9;
+        assert!(decode_snapshot(&vnext, 1).is_err());
+        // Bad magic.
+        let mut nomagic = blob;
+        nomagic[0] = b'X';
+        assert!(decode_snapshot(&nomagic, 1).is_err());
+    }
+
+    fn exercise_store(store: &mut dyn SessionStore) {
+        assert!(store.is_empty());
+        assert_eq!(store.take(3).unwrap(), None);
+        store.put(3, b"abc").unwrap();
+        store.put(4, b"defg").unwrap();
+        store.put(3, b"xy").unwrap(); // replace shrinks accounting
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.bytes(), 6);
+        assert_eq!(store.take(3).unwrap().as_deref(), Some(&b"xy"[..]));
+        assert_eq!(store.take(3).unwrap(), None, "take removes");
+        assert!(store.remove(4));
+        assert!(!store.remove(4));
+        assert_eq!((store.len(), store.bytes()), (0, 0));
+    }
+
+    #[test]
+    fn mem_store_semantics() {
+        exercise_store(&mut MemStore::new());
+    }
+
+    #[test]
+    fn disk_store_semantics_and_cleanup() {
+        let dir = std::env::temp_dir().join(format!("fmm_spill_{}", std::process::id()));
+        {
+            let mut store = DiskStore::new(&dir).unwrap();
+            exercise_store(&mut store);
+            store.put(9, b"linger").unwrap();
+            assert!(store.path_of(9).exists());
+        }
+        // Drop removed the tracked file and the now-empty directory.
+        assert!(!dir.exists());
+    }
+}

@@ -16,6 +16,21 @@ pub fn unix_millis() -> u128 {
         .unwrap_or(0)
 }
 
+/// 64-bit FNV-1a over a byte stream — the stable, dependency-free hash
+/// used for config fingerprints and snapshot checksums (session store).
+/// Not cryptographic; it detects corruption and config drift, not
+/// adversaries.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 /// Format a byte count as a human-readable string (KiB/MiB/GiB).
 pub fn human_bytes(bytes: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -71,6 +86,14 @@ pub fn rss_bytes() -> (u64, u64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Reference values of the standard 64-bit FNV-1a parameters.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+    }
 
     #[test]
     fn human_bytes_units() {

@@ -1,0 +1,306 @@
+//! Integration: tiered session residency (cross-request KV paging).
+//!
+//! Pins (1) `DecoderSession::snapshot`/`restore` as a *bit-exact*
+//! round-trip across bandwidths × feature maps — a restored session's
+//! logits equal the never-spilled session's to the last bit; (2) the
+//! snapshot codec's failure envelope — truncated, corrupted,
+//! version-bumped and config-mismatched blobs all return `Err`, never
+//! panic; (3) the `DecodeServer` residency manager — with
+//! `max_resident_sessions = 8`, a 64-stream greedy run emits tokens
+//! bit-identical to the fully-resident run while spilling/restoring
+//! continuously and never exceeding the cap; and (4) the blast radius
+//! of a lost snapshot — exactly one stream disconnects, the server and
+//! every other stream keep serving.
+//!
+//! Everything here is host-side — no artifacts required, never skips.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use fmmformer::attention::FeatureMap;
+use fmmformer::rng::Pcg64;
+use fmmformer::serve::decode::{
+    run_greedy_sessions_collect, DecodeConfig, DecodeServer, DecodeServerConfig,
+    DecoderSession, HostDecoder,
+};
+use fmmformer::serve::session_store::{DiskStore, MemStore, SessionStore};
+
+fn tiny_config() -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 16,
+        vocab: 32,
+        bandwidth: 4,
+        kernels: vec![FeatureMap::Elu, FeatureMap::EluNeg],
+        w1: 0.6,
+        w2: 0.9,
+        seed: 3,
+    }
+}
+
+fn probe_tokens(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..len).map(|_| rng.usize(vocab) as i32).collect()
+}
+
+/// Satellite acceptance grid: spill → restore → step produces
+/// bit-identical logits to a never-spilled session, across bandwidths ×
+/// feature-map sets, with the snapshot taken mid-stream (ring wrapped
+/// and not).
+#[test]
+fn snapshot_restore_is_bit_identical_across_grid() {
+    let kernel_sets: [&[FeatureMap]; 3] = [
+        &[FeatureMap::Elu],
+        &[FeatureMap::Tanh],
+        &[FeatureMap::Elu, FeatureMap::EluNeg, FeatureMap::Tanh],
+    ];
+    for kernels in kernel_sets {
+        for bandwidth in [1usize, 4, 9] {
+            let cfg = DecodeConfig {
+                bandwidth,
+                kernels: kernels.to_vec(),
+                ..tiny_config()
+            };
+            let model = Arc::new(HostDecoder::new(cfg).unwrap());
+            let tokens = probe_tokens(26, 32, 40 + bandwidth as u64);
+            let mut live = DecoderSession::new(model.clone());
+            for &t in &tokens[..14] {
+                live.step(t).unwrap();
+            }
+            let snap = live.snapshot().unwrap();
+            let mut restored = DecoderSession::restore(model.clone(), &snap).unwrap();
+            assert_eq!(restored.position(), live.position());
+            assert_eq!(restored.state_bytes(), live.state_bytes());
+            for &t in &tokens[14..] {
+                let a = live.step(t).unwrap();
+                let b = restored.step(t).unwrap();
+                assert_eq!(
+                    a, b,
+                    "kernels {kernels:?} bw {bandwidth}: restored session diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Malformed snapshots: every failure mode is an `Err`, never a panic,
+/// and a snapshot can never restore into a mismatched decoder.
+#[test]
+fn snapshot_failure_envelope() {
+    let model = Arc::new(HostDecoder::new(tiny_config()).unwrap());
+    let mut sess = DecoderSession::new(model.clone());
+    for &t in &probe_tokens(9, 32, 77) {
+        sess.step(t).unwrap();
+    }
+    let snap = sess.snapshot().unwrap();
+
+    // The pristine blob restores.
+    assert!(DecoderSession::restore(model.clone(), &snap).is_ok());
+
+    // Config drift: different seed, bandwidth, kernels — all refused.
+    for other_cfg in [
+        DecodeConfig { seed: 4, ..tiny_config() },
+        DecodeConfig { bandwidth: 5, ..tiny_config() },
+        DecodeConfig { kernels: vec![FeatureMap::Elu], ..tiny_config() },
+    ] {
+        let other = Arc::new(HostDecoder::new(other_cfg).unwrap());
+        let err = DecoderSession::restore(other, &snap).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+    }
+
+    // Truncation at every interesting boundary.
+    for cut in [0usize, 3, 7, 15, 19, 27, snap.len() / 2, snap.len() - 1] {
+        assert!(
+            DecoderSession::restore(model.clone(), &snap[..cut]).is_err(),
+            "cut {cut}"
+        );
+    }
+    // Single flipped byte in the payload trips the checksum.
+    let mut corrupt = snap.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0x10;
+    assert!(DecoderSession::restore(model.clone(), &corrupt).is_err());
+    // A future codec version is refused outright.
+    let mut vnext = snap.clone();
+    vnext[4] = 0x7f;
+    let err = DecoderSession::restore(model, &vnext).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+}
+
+#[test]
+fn degenerate_decode_configs_are_rejected() {
+    let bad_band = DecodeConfig { bandwidth: 0, ..tiny_config() };
+    let err = HostDecoder::new(bad_band).unwrap_err();
+    assert!(format!("{err:#}").contains("bandwidth"), "{err:#}");
+
+    let no_kernels = DecodeConfig { kernels: vec![], ..tiny_config() };
+    let err = HostDecoder::new(no_kernels).unwrap_err();
+    assert!(format!("{err:#}").contains("kernels"), "{err:#}");
+}
+
+fn greedy_run(
+    cap: usize,
+    store: Option<Box<dyn SessionStore>>,
+    sessions: usize,
+    tokens: usize,
+) -> (Vec<Vec<i32>>, fmmformer::serve::decode::DecodeStats) {
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let cfg = DecodeServerConfig {
+        max_wait: Duration::from_millis(5),
+        max_steps: 256,
+        batch_threshold: 2,
+        max_resident_sessions: cap,
+    };
+    let server = match store {
+        Some(s) => DecodeServer::start_with_store(model, cfg, s),
+        None => DecodeServer::start(model, cfg),
+    };
+    let client = server.client();
+    let (_lats, streams) =
+        run_greedy_sessions_collect(&client, sessions, tokens, 32).unwrap();
+    drop(client);
+    (streams, server.shutdown())
+}
+
+/// ISSUE acceptance: with `max_resident_sessions = 8`, a 64-stream
+/// greedy run emits tokens bit-identical to the fully-resident run,
+/// `spills > 0`, and `resident_peak <= 8`.
+#[test]
+fn capped_64_stream_run_is_bit_identical_to_resident_run() {
+    let (full, full_stats) = greedy_run(0, None, 64, 12);
+    assert_eq!(full_stats.spills, 0, "unlimited run must not spill");
+    assert!(full_stats.resident_peak > 8, "{full_stats:?}");
+
+    let (paged, stats) = greedy_run(8, None, 64, 12);
+    assert_eq!(paged, full, "paged greedy tokens diverged from resident run");
+    assert!(stats.spills > 0, "cap 8 with 64 streams must spill: {stats:?}");
+    assert!(stats.restores > 0, "every stream must restore: {stats:?}");
+    assert!(
+        stats.resident_peak <= 8,
+        "residency overshot the cap: {stats:?}"
+    );
+    assert_eq!(stats.steps, 64 * 12);
+    assert_eq!(stats.failed_steps, 0);
+    assert_eq!(stats.spill_failures, 0);
+    assert!(stats.spilled_bytes > 0);
+}
+
+/// Same invariants through the disk tier: one file per spilled stream,
+/// bit-identical tokens, and the spill directory cleans up with the
+/// server.
+#[test]
+fn disk_store_pages_bit_identically_and_cleans_up() {
+    let (full, _) = greedy_run(0, None, 10, 8);
+    let dir = std::env::temp_dir().join(format!("fmm_pagetest_{}", std::process::id()));
+    let store = Box::new(DiskStore::new(&dir).unwrap());
+    let (paged, stats) = greedy_run(3, Some(store), 10, 8);
+    assert_eq!(paged, full);
+    assert!(stats.spills > 0 && stats.restores > 0, "{stats:?}");
+    assert!(stats.resident_peak <= 3, "{stats:?}");
+    // The scheduler dropped the store on shutdown; nothing lingers.
+    assert!(!dir.exists(), "spill dir {dir:?} should be cleaned up");
+}
+
+/// A spill store that silently corrupts one key's snapshot — models a
+/// torn/bit-rotted spill file.
+struct CorruptingStore {
+    inner: MemStore,
+    corrupt_key: u64,
+}
+
+impl SessionStore for CorruptingStore {
+    fn put(&mut self, key: u64, snap: &[u8]) -> Result<()> {
+        if key == self.corrupt_key {
+            let mut bad = snap.to_vec();
+            let mid = bad.len() / 2;
+            bad[mid] ^= 0x20;
+            self.inner.put(key, &bad)
+        } else {
+            self.inner.put(key, snap)
+        }
+    }
+
+    fn take(&mut self, key: u64) -> Result<Option<Vec<u8>>> {
+        self.inner.take(key)
+    }
+
+    fn remove(&mut self, key: u64) -> bool {
+        self.inner.remove(key)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.inner.bytes()
+    }
+}
+
+/// A corrupted spill disconnects *only* the affected stream: its next
+/// step errors cleanly (then "unknown"), every other stream and the
+/// server keep serving.
+#[test]
+fn corrupt_spill_disconnects_only_the_affected_stream() {
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    // Stream ids are assigned 0, 1, 2, ... — corrupt the first stream's
+    // snapshot only.
+    let store = Box::new(CorruptingStore { inner: MemStore::new(), corrupt_key: 0 });
+    let server = DecodeServer::start_with_store(
+        model,
+        DecodeServerConfig { max_resident_sessions: 1, ..Default::default() },
+        store,
+    );
+    let client = server.client();
+
+    let sa = client.open_stream().unwrap();
+    sa.step(1).unwrap(); // A resident, advanced to pos 1
+    let sb = client.open_stream().unwrap(); // opening B evicts idle A (corrupted)
+    sb.step(2).unwrap(); // B resident
+
+    // A's restore hits the corruption: clean error, stream disconnected.
+    let err = sa.step(3).unwrap_err();
+    assert!(format!("{err:#}").contains("restoring spilled session"), "{err:#}");
+    let err = sa.step(4).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown or closed"), "{err:#}");
+
+    // New streams still open (evicting B), and B's own spill —
+    // uncorrupted — restores fine afterwards.
+    let sc = client.open_stream().unwrap();
+    assert!(sc.step(5).is_ok());
+    let out = sb.step(6).unwrap();
+    assert_eq!(out.pos, 1);
+
+    drop((sa, sb, sc));
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.failed_steps, 2, "{stats:?}");
+    assert!(stats.restores >= 1, "B must have restored: {stats:?}");
+    assert_eq!(stats.resident_peak, 1, "{stats:?}");
+}
+
+/// Closing a stream whose state is spilled removes the snapshot from
+/// the store (no leak), and the close still counts in stats.
+#[test]
+fn closing_a_spilled_stream_frees_its_snapshot() {
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let server = DecodeServer::start(
+        model,
+        DecodeServerConfig { max_resident_sessions: 1, ..Default::default() },
+    );
+    let client = server.client();
+    let sa = client.open_stream().unwrap();
+    sa.step(1).unwrap();
+    let sb = client.open_stream().unwrap(); // spills idle A
+    sb.step(2).unwrap();
+    drop(sa); // A is in the store, not resident
+    sb.step(3).unwrap(); // pushes the scheduler past the close
+    drop(sb);
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_opened, 2);
+    assert_eq!(stats.sessions_closed, 2);
+    assert!(stats.spills >= 1, "{stats:?}");
+}
