@@ -1,0 +1,132 @@
+//! Speculative decoding bench (system extension) — throughput and
+//! accept rate vs draft window.
+//!
+//! ROADMAP's "speculative window prefill", measured: N greedy streams
+//! decode through the `DecodeServer` with draft-propose / verify-accept
+//! speculation at draft windows K ∈ {0, 2, 4, 8} (0 = speculation off,
+//! the plain baseline). Because the FMM decode state is O(1), the
+//! checkpoint/rollback each speculation epoch costs a few KiB of buffer
+//! copies; the win is stacked K+1-row verify GEMMs replacing K+1 scalar
+//! steps whenever the draft is right, plus free lookahead hits.
+//!
+//!     cargo bench --bench serve_speculative                 # ngram draft
+//!     cargo bench --bench serve_speculative -- --quick --draft model:1x2x16
+//!     cargo bench --bench serve_speculative -- --windows 0,4 --sessions 16
+//!
+//! Speculation must never change tokens: every speculative run's greedy
+//! streams are compared against the K = 0 baseline and the bench fails
+//! loudly on any divergence. Emits `reports/BENCH_speculative.json`
+//! (tokens/sec, accept rate, verify/lookahead counters vs window) —
+//! validated by `ci.sh --bench`.
+
+use anyhow::{bail, Result};
+use fmmformer::bench::{save_report_json, Table};
+use fmmformer::cli::Args;
+use fmmformer::serve::decode::{
+    run_greedy_sessions_collect, DecodeConfig, DecodeServer, DecodeServerConfig,
+    HostDecoder,
+};
+use fmmformer::serve::speculative::SpeculationConfig;
+use fmmformer::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick"])?;
+    let quick = args.has("quick");
+    let sessions = args.usize_or("sessions", 8)?;
+    let tokens = args.usize_or("tokens", if quick { 16 } else { 96 })?;
+    let draft_spec = args.str_or("draft", "ngram");
+    let windows: Vec<usize> = args
+        .list_or("windows", &["0", "2", "4", "8"])
+        .iter()
+        .map(|s| {
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--windows wants integers, got {s:?}"))
+        })
+        .collect::<Result<_>>()?;
+    if windows.first() != Some(&0) {
+        bail!("--windows must start with 0 (the plain-greedy baseline)");
+    }
+
+    let cfg = DecodeConfig::default();
+    let vocab = cfg.vocab;
+    let speculation = SpeculationConfig::parse(draft_spec, &cfg)?;
+    println!(
+        "speculative bench: {sessions} streams x {tokens} tokens, draft = {draft_spec}, \
+         windows {windows:?}"
+    );
+
+    let mut tbl = Table::new(
+        "Greedy decode throughput vs draft window (0 = plain)",
+        &["window", "tok/s", "verify", "proposed", "accepted", "rate", "hits", "exact"],
+    );
+    let mut runs: Vec<Json> = Vec::new();
+    let mut baseline: Option<Vec<Vec<i32>>> = None;
+    for &window in &windows {
+        let model = HostDecoder::new(cfg.clone())?;
+        let server_cfg = DecodeServerConfig {
+            speculation: if window == 0 {
+                SpeculationConfig::Off
+            } else {
+                speculation.clone()
+            },
+            draft_window: window,
+            ..Default::default()
+        };
+        let server = DecodeServer::start(model, server_cfg);
+        let client = server.client();
+        let t0 = std::time::Instant::now();
+        let (_lats, streams) =
+            run_greedy_sessions_collect(&client, sessions, tokens, vocab)?;
+        let wall = t0.elapsed().as_secs_f64();
+        drop(client);
+        let stats = server.shutdown();
+
+        let exact = match &baseline {
+            None => {
+                baseline = Some(streams);
+                true
+            }
+            Some(base) => base == &streams,
+        };
+        if !exact {
+            bail!(
+                "window {window}: speculative greedy tokens diverged from the plain \
+                 run — verify/rollback is not bit-exact"
+            );
+        }
+        let tok_per_sec = (sessions * tokens) as f64 / wall.max(1e-12);
+        tbl.row(vec![
+            if window == 0 { "plain".into() } else { window.to_string() },
+            format!("{tok_per_sec:.0}"),
+            stats.verify_steps.to_string(),
+            stats.draft_proposed.to_string(),
+            stats.draft_accepted.to_string(),
+            format!("{:.2}", stats.accept_rate()),
+            stats.lookahead_hits.to_string(),
+            exact.to_string(),
+        ]);
+        runs.push(Json::obj(vec![
+            ("draft_window", Json::Num(window as f64)),
+            ("tokens_per_sec", Json::Num(tok_per_sec)),
+            ("wall_s", Json::Num(wall)),
+            ("verify_steps", Json::Num(stats.verify_steps as f64)),
+            ("draft_proposed", Json::Num(stats.draft_proposed as f64)),
+            ("draft_accepted", Json::Num(stats.draft_accepted as f64)),
+            ("accept_rate", Json::Num(stats.accept_rate())),
+            ("lookahead_hits", Json::Num(stats.lookahead_hits as f64)),
+            ("exact_vs_plain", Json::Bool(exact)),
+        ]));
+    }
+    tbl.print();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_speculative")),
+        ("draft", Json::str(draft_spec)),
+        ("sessions", Json::Num(sessions as f64)),
+        ("tokens_per_session", Json::Num(tokens as f64)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let path = save_report_json("BENCH_speculative.json", &doc)?;
+    println!("machine-readable -> {path:?}");
+    Ok(())
+}

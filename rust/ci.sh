@@ -46,7 +46,29 @@ if [[ "${1:-}" == "--bench" ]]; then
     FMM_REPORTS="$reports" cargo bench --bench serve_paging -- \
         --quick --sessions 12 --tokens 4 --caps 0,4
     validate_json "$reports/BENCH_paging.json"
-    echo "bench smoke passed: $reports/BENCH_decode.json $reports/BENCH_paging.json"
+    echo "== bench smoke: serve_speculative (tiny) =="
+    # Plain baseline + two speculative windows: the bench itself fails
+    # if any speculative run's greedy tokens diverge from plain greedy.
+    FMM_REPORTS="$reports" cargo bench --bench serve_speculative -- \
+        --quick --sessions 6 --tokens 8 --windows 0,2,4
+    validate_json "$reports/BENCH_speculative.json"
+    if command -v python3 >/dev/null 2>&1; then
+        if ! python3 -c '
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["bench"] == "serve_speculative"
+for run in doc["runs"]:
+    for key in ("draft_window", "tokens_per_sec", "accept_rate",
+                "verify_steps", "exact_vs_plain"):
+        assert key in run, key
+    assert run["exact_vs_plain"] is True
+' "$reports/BENCH_speculative.json"; then
+            echo "bench smoke FAILED: BENCH_speculative.json missing keys"
+            exit 1
+        fi
+    fi
+    echo "bench smoke passed: $reports/BENCH_decode.json $reports/BENCH_paging.json \
+$reports/BENCH_speculative.json"
     exit 0
 fi
 

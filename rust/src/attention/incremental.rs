@@ -276,6 +276,26 @@ impl FmmDecodeState {
         out.extend_from_slice(&self.z);
     }
 
+    /// In-memory checkpoint: serialize the dynamic state into a
+    /// reusable buffer as the raw-f32 [`export_into`](Self::export_into)
+    /// view, with no byte codec or snapshot framing on top — `out` is
+    /// cleared first. This is the cheap primitive speculative decoding
+    /// leans on ([`crate::serve::speculative`]): taking a checkpoint is
+    /// one buffer copy, and [`restore_state_from`]
+    /// (Self::restore_state_from) rolls back bit-exactly.
+    pub fn clone_state_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        self.export_into(out);
+    }
+
+    /// Roll the dynamic state back to a [`clone_state_into`]
+    /// (Self::clone_state_into) checkpoint. Same validation as
+    /// [`import_from`](Self::import_from) — on `Err` this state is
+    /// unchanged.
+    pub fn restore_state_from(&mut self, raw: &[f32]) -> Result<()> {
+        self.import_from(raw)
+    }
+
     /// Overwrite this state's dynamic contents from an exported view.
     /// Validates the header (fingerprint match, ring/position
     /// consistency) and the total length before touching anything — on
@@ -566,6 +586,37 @@ mod tests {
                     let a = live.step(q.row(t), k.row(t), v.row(t));
                     let b = restored.step(q.row(t), k.row(t), v.row(t));
                     assert_eq!(a, b, "bw {bw} warm {warm} t {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_rollback_replays_bit_exactly() {
+        // Speculative decoding's primitive: checkpoint mid-stream, run a
+        // draft window ahead, roll back, replay — bit-identical to never
+        // having speculated, across ring-wrap boundaries.
+        let (q, k, v) = rand_qkv(40, 4, 3, 8);
+        let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+        for warm in [0usize, 2, 5, 13] {
+            let mut st = FmmDecodeState::new(4, 3, 3, &kernels, 0.8, 0.5);
+            for t in 0..warm {
+                st.step(q.row(t), k.row(t), v.row(t));
+            }
+            let mut ckpt = Vec::new();
+            st.clone_state_into(&mut ckpt);
+            // Speculate 6 tokens ahead, then reject them all.
+            for t in warm..warm + 6 {
+                st.step(q.row(t), k.row(t), v.row(t));
+            }
+            st.restore_state_from(&ckpt).unwrap();
+            assert_eq!(st.position(), warm);
+            let mut reference = FmmDecodeState::new(4, 3, 3, &kernels, 0.8, 0.5);
+            for t in 0..40 {
+                let b = reference.step(q.row(t), k.row(t), v.row(t));
+                if t >= warm {
+                    let a = st.step(q.row(t), k.row(t), v.row(t));
+                    assert_eq!(a, b, "warm {warm} t {t}");
                 }
             }
         }

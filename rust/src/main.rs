@@ -17,6 +17,7 @@ use fmmformer::coordinator::{Coordinator, EXPERIMENTS};
 use fmmformer::data::Split;
 use fmmformer::runtime::{checkpoint, load_init_leaves, Runtime};
 use fmmformer::serve::decode::{DecodeConfig, DecodeServer, DecodeServerConfig, HostDecoder};
+use fmmformer::serve::speculative::SpeculationConfig;
 use fmmformer::serve::{ServeConfig, Server};
 use fmmformer::train::evaluate_params;
 use fmmformer::{artifacts_dir, bench};
@@ -31,7 +32,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(&["help"])?;
+    let args = Args::parse(&["help", "speculate"])?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "experiments" => cmd_experiments(),
@@ -54,7 +55,8 @@ fn run() -> Result<()> {
             println!(
                 "decode-demo: [--sessions N] [--tokens N] [--layers N] [--heads N] \
                  [--d-model N] [--bandwidth K] [--kernels elu,elu_neg,tanh] [--max-wait-ms T] \
-                 [--max-resident N] [--spill-dir DIR]"
+                 [--max-resident N] [--spill-dir DIR] \
+                 [--speculate [--draft-window K] [--draft ngram|model:LxHxD]]"
             );
             Ok(())
         }
@@ -211,7 +213,11 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 /// exactness vs the O(N²) batch forward. `--max-resident N` caps how
 /// many sessions stay in RAM (idle streams page out to a session store
 /// — in-memory snapshots by default, one file per stream under
-/// `--spill-dir`).
+/// `--spill-dir`). `--speculate` turns every stream speculative:
+/// `--draft-window K` tokens are proposed per step by `--draft` (the
+/// stream's own n-gram history, or a smaller draft model `model:LxHxD`)
+/// and verified as one stacked step — tokens are bit-identical to the
+/// plain run, only the speed changes.
 fn cmd_decode_demo(args: &Args) -> Result<()> {
     let kernels: Vec<FeatureMap> = args
         .list_or("kernels", &["elu"])
@@ -237,11 +243,18 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
     let model = HostDecoder::new(cfg.clone())?;
     let probe: Vec<i32> = (0..24).map(|t| (t * 7 % vocab) as i32).collect();
     let batch = model.forward_batch(&probe)?;
+    let speculation = if args.has("speculate") {
+        SpeculationConfig::parse(args.str_or("draft", "ngram"), &cfg)?
+    } else {
+        SpeculationConfig::Off
+    };
     let server_cfg = DecodeServerConfig {
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
         max_steps: args.usize_or("max-steps", 64)?,
         batch_threshold: args.usize_or("batch-threshold", 2)?,
         max_resident_sessions: args.usize_or("max-resident", 0)?,
+        speculation,
+        draft_window: args.usize_or("draft-window", 4)?,
     };
     let server = match args.get("spill-dir") {
         Some(dir) => DecodeServer::start_with_store(
@@ -297,6 +310,17 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
             stats.resident_peak,
             fmmformer::util::human_bytes(stats.spilled_bytes),
             fmmformer::bench::fmt_time(stats.mean_restore_latency()),
+        );
+    }
+    if stats.verify_steps > 0 {
+        println!(
+            "speculation: {} verify windows, {}/{} drafts accepted ({:.0}%), \
+             {} lookahead hits",
+            stats.verify_steps,
+            stats.draft_accepted,
+            stats.draft_proposed,
+            stats.accept_rate() * 100.0,
+            stats.lookahead_hits,
         );
     }
     Ok(())

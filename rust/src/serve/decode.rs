@@ -31,12 +31,18 @@
 //!   snapshots and restore transparently, bit-exactly, when their next
 //!   token arrives. Millions of mostly-idle streams then cost snapshot
 //!   bytes (or disk), not resident sessions.
+//! * Speculative streams — with `DecodeServerConfig::speculation` set,
+//!   opened streams run draft-propose / verify-accept lookahead
+//!   ([`super::speculative`]) over [`verify_window`] and the cheap
+//!   [`DecoderSession::checkpoint`]/[`DecoderSession::rollback`] pair,
+//!   alongside plain streams on the same scheduler. Speculation is
+//!   throughput-only: token streams stay bit-identical to plain greedy.
 //!
 //! Everything here is pure host Rust — no PJRT — so the serving
 //! architecture is exercised end-to-end by `cargo test` even where the
 //! XLA backend is stubbed out.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -51,6 +57,7 @@ use crate::rng::Pcg64;
 use crate::runtime::checkpoint::Leaf;
 use crate::runtime::manifest::Dtype;
 use crate::serve::session_store::{self, MemStore, SessionStore};
+use crate::serve::speculative::{SpecFactory, SpeculationConfig, SpeculativeSession};
 use crate::tensor::Tensor;
 use crate::util::fnv1a64;
 
@@ -281,6 +288,30 @@ pub struct DecoderSession {
     pos: usize,
 }
 
+/// In-memory checkpoint of a session's full decode state: one raw-f32
+/// [`FmmDecodeState::clone_state_into`] view per layer/head plus the
+/// stream position. No byte codec, no framing — taking one and
+/// [`DecoderSession::rollback`]-ing to it are plain buffer copies,
+/// which is what makes speculative checkpoint/rollback
+/// ([`super::speculative`]) nearly free on the O(1) FMM state.
+#[derive(Debug, Clone, Default)]
+pub struct SessionCheckpoint {
+    states: Vec<Vec<f32>>,
+    pos: usize,
+}
+
+impl SessionCheckpoint {
+    /// Stream position (tokens consumed) when the checkpoint was taken.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Approximate bytes held — same order as the live state it mirrors.
+    pub fn bytes(&self) -> usize {
+        self.states.iter().map(|s| s.len() * std::mem::size_of::<f32>()).sum()
+    }
+}
+
 impl DecoderSession {
     pub fn new(model: Arc<HostDecoder>) -> DecoderSession {
         let cfg = model.config();
@@ -395,6 +426,126 @@ impl DecoderSession {
         sess.pos = pos;
         Ok(sess)
     }
+
+    /// The shared decoder this session streams through.
+    pub fn model(&self) -> &Arc<HostDecoder> {
+        &self.model
+    }
+
+    /// Capture an in-memory checkpoint of this session's decode state
+    /// (raw-f32 views, no snapshot codec — cf. the heavier
+    /// [`snapshot`](Self::snapshot) used for spills).
+    /// [`rollback`](Self::rollback) returns to it bit-exactly.
+    pub fn checkpoint(&self) -> SessionCheckpoint {
+        let mut ckpt = SessionCheckpoint::default();
+        self.checkpoint_into(&mut ckpt);
+        ckpt
+    }
+
+    /// Allocation-reusing variant of [`checkpoint`](Self::checkpoint):
+    /// overwrites `ckpt` in place, reusing its per-head buffers.
+    pub fn checkpoint_into(&self, ckpt: &mut SessionCheckpoint) {
+        let n: usize = self.states.iter().map(|row| row.len()).sum();
+        ckpt.states.resize_with(n, Vec::new);
+        let mut heads = ckpt.states.iter_mut();
+        for row in &self.states {
+            for st in row {
+                st.clone_state_into(heads.next().expect("sized above"));
+            }
+        }
+        ckpt.pos = self.pos;
+    }
+
+    /// Roll this session back to a [`checkpoint`](Self::checkpoint)
+    /// taken on it — the bit-exact inverse, however many tokens were
+    /// consumed in between. `Err` only on a checkpoint from a
+    /// config-mismatched session (per-head fingerprints are validated);
+    /// a partially applied mismatched rollback leaves the session
+    /// untrustworthy, so callers must treat `Err` as fatal to the
+    /// stream.
+    pub fn rollback(&mut self, ckpt: &SessionCheckpoint) -> Result<()> {
+        let n: usize = self.states.iter().map(|row| row.len()).sum();
+        if ckpt.states.len() != n {
+            bail!(
+                "checkpoint carries {} head states, session has {n}",
+                ckpt.states.len()
+            );
+        }
+        let mut heads = ckpt.states.iter();
+        for row in self.states.iter_mut() {
+            for st in row.iter_mut() {
+                st.restore_state_from(heads.next().expect("count checked"))?;
+            }
+        }
+        self.pos = ckpt.pos;
+        Ok(())
+    }
+}
+
+/// Greedy (argmax) token choice over a logits row — NaN-safe, single
+/// source for every greedy chain in the crate (the serving harnesses,
+/// the speculative accept loop, draft model proposals).
+pub fn greedy_argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0) as i32
+}
+
+/// Drive a multi-token window through one session as a single stacked
+/// step — the verify half of speculative decoding
+/// ([`super::speculative`]) and a window-prefill primitive in its own
+/// right.
+///
+/// Returns one logits row per window token; row `j` equals what
+/// `sess.step(tokens[j])` would have returned at that point, *bit for
+/// bit*: every row-local op (embedding gather, RMS-norms, the
+/// projection/MLP/readout multiplies) runs as one `K`-row
+/// [`kernel::matmul_prepacked`] GEMM whose per-row reduction order is
+/// independent of the row count, and the per-head attention states
+/// advance through the same scalar `step_into` recurrence in window
+/// order. The session is left having consumed the whole window.
+///
+/// Any out-of-vocab token fails the call before any state is touched.
+pub fn verify_window(sess: &mut DecoderSession, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+    let n = tokens.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let model = sess.model.clone();
+    let cfg = model.config();
+    let d = cfg.d_model;
+    let dh = d / cfg.heads;
+    // Embed the whole window first: an invalid token errors here, before
+    // any attention state has advanced.
+    let mut x = Tensor::zeros(&[n, d]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let row = model.embed_row(tok)?;
+        x.data_mut()[i * d..(i + 1) * d].copy_from_slice(row.data());
+    }
+    for l in 0..cfg.layers {
+        let states = &mut sess.states[l];
+        x = model.block(l, &x, |q, k, v| {
+            let mut a = Tensor::zeros(&[n, d]);
+            for (head, st) in states.iter_mut().enumerate() {
+                let lo = head * dh;
+                for t in 0..n {
+                    st.step_into(
+                        &q.row(t)[lo..lo + dh],
+                        &k.row(t)[lo..lo + dh],
+                        &v.row(t)[lo..lo + dh],
+                        &mut a.data_mut()[t * d + lo..t * d + lo + dh],
+                    );
+                }
+            }
+            Ok(a)
+        })?;
+    }
+    sess.pos += n;
+    let logits = mm(&rms_norm(&x), &model.w_out)?;
+    Ok((0..n).map(|i| logits.row(i).to_vec()).collect())
 }
 
 /// Advance many sessions by one token each with stacked compute — the
@@ -495,6 +646,9 @@ pub fn probe_exactness(
 /// Drive `sessions` concurrent greedy-decoding streams of `tokens`
 /// tokens each through `client`, returning every token's latency in
 /// seconds (demo/bench harness shared by the CLI and the example).
+///
+/// Thin wrapper over [`run_greedy_sessions_collect`] — all driving
+/// logic lives there, once, so the two can never drift.
 pub fn run_greedy_sessions(
     client: &DecodeClient,
     sessions: usize,
@@ -527,14 +681,7 @@ pub fn run_greedy_sessions_collect(
                 for _ in 0..tokens {
                     let out = stream.step(tok)?;
                     lats.push(out.latency.as_secs_f64());
-                    let argmax = out
-                        .logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(i, _)| i)
-                        .unwrap_or(0);
-                    tok = argmax as i32;
+                    tok = greedy_argmax(&out.logits);
                     chosen.push(tok);
                 }
                 Ok((lats, chosen))
@@ -612,6 +759,17 @@ pub struct DecodeServerConfig {
     /// `0` means unlimited (every stream stays resident — the pre-paging
     /// behavior, and the default).
     pub max_resident_sessions: usize,
+    /// Speculative decoding draft source ([`super::speculative`]).
+    /// When not [`SpeculationConfig::Off`], streams opened through
+    /// [`DecodeClient::open_stream`] run draft-propose / verify-accept
+    /// lookahead; [`DecodeClient::open_stream_plain`] still opens plain
+    /// streams alongside them. Speculation never changes a stream's
+    /// tokens — greedy output stays bit-identical to a plain server.
+    pub speculation: SpeculationConfig,
+    /// Draft window K: tokens proposed (and verified as one stacked
+    /// [`verify_window`] step) per speculative miss. `0` disables
+    /// speculation regardless of `speculation`.
+    pub draft_window: usize,
 }
 
 impl Default for DecodeServerConfig {
@@ -621,6 +779,8 @@ impl Default for DecodeServerConfig {
             max_steps: 64,
             batch_threshold: 2,
             max_resident_sessions: 0,
+            speculation: SpeculationConfig::Off,
+            draft_window: 4,
         }
     }
 }
@@ -668,6 +828,16 @@ pub struct DecodeStats {
     /// operator's signal that the spill store is unhealthy (e.g. disk
     /// full) before RAM growth becomes the symptom.
     pub spill_failures: usize,
+    /// Draft tokens proposed to speculative verification.
+    pub draft_proposed: usize,
+    /// Draft tokens whose greedy verification matched (their logits
+    /// became pre-verified lookahead).
+    pub draft_accepted: usize,
+    /// Stacked [`verify_window`] passes the speculative streams ran.
+    pub verify_steps: usize,
+    /// Speculative steps answered straight from verified lookahead
+    /// (zero model compute on the step).
+    pub lookahead_hits: usize,
 }
 
 impl DecodeStats {
@@ -707,10 +877,26 @@ impl DecodeStats {
             self.restore_secs / self.restores as f64
         }
     }
+
+    /// Fraction of proposed draft tokens that survived greedy
+    /// verification (0 when nothing was proposed).
+    pub fn accept_rate(&self) -> f64 {
+        if self.draft_proposed == 0 {
+            0.0
+        } else {
+            self.draft_accepted as f64 / self.draft_proposed as f64
+        }
+    }
 }
 
 enum DecodeMsg {
-    Open { session: u64, reply: Sender<Result<()>> },
+    Open {
+        session: u64,
+        /// `None`: the server default (speculative iff the server has a
+        /// draft source). `Some(b)`: the client forced plain/speculative.
+        speculative: Option<bool>,
+        reply: Sender<Result<()>>,
+    },
     Step(StepReq),
     Close { session: u64 },
     Shutdown,
@@ -731,12 +917,30 @@ pub struct DecodeClient {
 }
 
 impl DecodeClient {
-    /// Register a fresh session server-side and return its stream.
+    /// Register a fresh session server-side and return its stream —
+    /// speculative when the server config enables speculation, plain
+    /// otherwise (the server default).
     pub fn open_stream(&self) -> Result<DecodeStream> {
+        self.open_with(None)
+    }
+
+    /// Open a stream that decodes plainly even on a speculative server
+    /// (speculative and plain streams share one scheduler).
+    pub fn open_stream_plain(&self) -> Result<DecodeStream> {
+        self.open_with(Some(false))
+    }
+
+    /// Open a speculative stream explicitly; errors if the server has
+    /// no draft source configured.
+    pub fn open_stream_speculative(&self) -> Result<DecodeStream> {
+        self.open_with(Some(true))
+    }
+
+    fn open_with(&self, speculative: Option<bool>) -> Result<DecodeStream> {
         let session = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(DecodeMsg::Open { session, reply })
+            .send(DecodeMsg::Open { session, speculative, reply })
             .map_err(|_| anyhow!("decode server shut down: cannot open stream"))?;
         rx.recv().map_err(|_| anyhow!("decode server shut down during open"))??;
         Ok(DecodeStream { session, tx: self.tx.clone() })
@@ -843,6 +1047,26 @@ impl DecodeServer {
     }
 }
 
+/// One resident stream: plain incremental decode, or the speculative
+/// draft/verify wrapper around the same session type. Both spill
+/// through the same snapshot path; a speculative slot first rewinds to
+/// its committed boundary so a snapshot never captures mid-speculation
+/// state.
+enum Slot {
+    Plain(DecoderSession),
+    Spec(SpeculativeSession),
+}
+
+impl Slot {
+    /// Snapshot for spilling (committed boundary for speculative slots).
+    fn snapshot(&mut self) -> Result<Vec<u8>> {
+        match self {
+            Slot::Plain(sess) => sess.snapshot(),
+            Slot::Spec(spec) => spec.snapshot_committed(),
+        }
+    }
+}
+
 /// Session residency manager — the scheduler half of cross-request
 /// paging. At most `cap` [`DecoderSession`]s live in RAM; everything
 /// else waits in the [`SessionStore`] as a snapshot blob and is
@@ -850,10 +1074,19 @@ impl DecodeServer {
 /// order is kept by a monotone step clock; eviction is driven by the
 /// micro-batch loop (a batch's own sessions are pinned while it runs,
 /// and waves are at most `cap` wide, so residency never overshoots the
-/// cap).
+/// cap). Also owns the speculative stream factory: which streams are
+/// speculative is remembered in `spec_ids`, so a spilled speculative
+/// stream restores back into its draft/verify wrapper (with a fresh
+/// draft source — lookahead is recomputed, tokens are unaffected).
 struct Residency {
-    resident: HashMap<u64, DecoderSession>,
+    resident: HashMap<u64, Slot>,
     store: Box<dyn SessionStore>,
+    /// Draft machinery shared by every speculative stream, or the
+    /// startup error explaining why speculative opens must fail
+    /// (`Ok(None)` = speculation off).
+    spec: std::result::Result<Option<SpecFactory>, String>,
+    /// Streams opened speculative (survives their spills).
+    spec_ids: HashSet<u64>,
     /// Effective cap (`usize::MAX` when the config said unlimited).
     cap: usize,
     /// Monotone clock: bumped whenever a session is opened, restored or
@@ -869,10 +1102,16 @@ struct Residency {
 }
 
 impl Residency {
-    fn new(store: Box<dyn SessionStore>, max_resident: usize) -> Residency {
+    fn new(
+        store: Box<dyn SessionStore>,
+        max_resident: usize,
+        spec: std::result::Result<Option<SpecFactory>, String>,
+    ) -> Residency {
         Residency {
             resident: HashMap::new(),
             store,
+            spec,
+            spec_ids: HashSet::new(),
             cap: if max_resident == 0 { usize::MAX } else { max_resident },
             tick: 0,
             last_used: HashMap::new(),
@@ -897,16 +1136,43 @@ impl Residency {
     /// that round-trip but lets residency overshoot the cap whenever
     /// all residents have queued steps; the cap is the RAM contract,
     /// so it wins.)
-    fn open(&mut self, id: u64, sess: DecoderSession) {
+    ///
+    /// `speculative`: `None` takes the server default (speculative iff
+    /// a draft source is configured); `Some(b)` forces the kind. `Err`
+    /// when a speculative stream is requested (or defaulted) while the
+    /// draft source is unavailable — the stream is not registered.
+    fn open(
+        &mut self,
+        id: u64,
+        model: &Arc<HostDecoder>,
+        speculative: Option<bool>,
+    ) -> Result<()> {
+        let sess = DecoderSession::new(model.clone());
+        let slot = match (speculative, &self.spec) {
+            (Some(false), _) | (None, Ok(None)) => Slot::Plain(sess),
+            (Some(true), Ok(None)) => {
+                bail!(
+                    "speculation is disabled on this server \
+                     (speculation mode Off, or draft_window 0)"
+                )
+            }
+            (_, Ok(Some(factory))) => {
+                self.spec_ids.insert(id);
+                Slot::Spec(factory.wrap(sess))
+            }
+            (_, Err(msg)) => bail!("speculative draft source unavailable: {msg}"),
+        };
         self.make_room(&[id]);
-        self.resident.insert(id, sess);
+        self.resident.insert(id, slot);
         self.peak = self.peak.max(self.resident.len());
         self.touch(id);
+        Ok(())
     }
 
     /// Drop a stream wherever it lives; true if it existed.
     fn close(&mut self, id: u64) -> bool {
         self.last_used.remove(&id);
+        self.spec_ids.remove(&id);
         self.resident.remove(&id).is_some() || self.store.remove(id)
     }
 
@@ -925,7 +1191,9 @@ impl Residency {
                 .filter(|id| !pinned.contains(id))
                 .min_by_key(|id| self.last_used.get(id).copied().unwrap_or(0));
             let Some(victim) = victim else { return };
-            let snap = match self.resident.get(&victim).map(|s| s.snapshot()) {
+            // Snapshot wants `&mut`: a speculative victim rewinds to its
+            // committed boundary first (lookahead is never spilled).
+            let snap = match self.resident.get_mut(&victim).map(|s| s.snapshot()) {
                 Some(Ok(snap)) => snap,
                 _ => {
                     self.spill_failures += 1;
@@ -960,8 +1228,15 @@ impl Residency {
         };
         let t0 = Instant::now();
         let sess = DecoderSession::restore(model.clone(), &snap)?;
+        let slot = match (self.spec_ids.contains(&id), &self.spec) {
+            // Re-wrap a speculative stream with a fresh draft source:
+            // discarded lookahead is recomputed, the token stream is
+            // unaffected (verification is bit-exact either way).
+            (true, Ok(Some(factory))) => Slot::Spec(factory.wrap(sess)),
+            _ => Slot::Plain(sess),
+        };
         self.make_room(pinned);
-        self.resident.insert(id, sess);
+        self.resident.insert(id, slot);
         self.restores += 1;
         self.restore_secs += t0.elapsed().as_secs_f64();
         self.peak = self.peak.max(self.resident.len());
@@ -988,7 +1263,11 @@ fn decode_scheduler(
     rx: Receiver<DecodeMsg>,
     stats: Arc<Mutex<DecodeStats>>,
 ) {
-    let mut res = Residency::new(store, cfg.max_resident_sessions);
+    // Build the draft machinery once; a failed build (bad draft model
+    // config) fails speculative opens with its message, while plain
+    // streams keep serving.
+    let spec = SpecFactory::build(&cfg, model.config()).map_err(|e| format!("{e:#}"));
+    let mut res = Residency::new(store, cfg.max_resident_sessions, spec);
     loop {
         let mut steps: Vec<StepReq> = Vec::new();
         let mut closes: Vec<u64> = Vec::new();
@@ -1057,6 +1336,10 @@ fn decode_scheduler(
             s.batched_steps += tally.batched;
             s.step_many_calls += tally.step_many_calls;
             s.sessions_closed += tally.disconnected;
+            s.draft_proposed += tally.draft_proposed;
+            s.draft_accepted += tally.draft_accepted;
+            s.verify_steps += tally.verify_steps;
+            s.lookahead_hits += tally.lookahead_hits;
             s.exec_secs += t0.elapsed().as_secs_f64();
             res.sync_stats(&mut s);
         }
@@ -1086,6 +1369,11 @@ struct RoundTally {
     /// Sessions force-closed because a batched round failed mid-flight
     /// (their per-layer states can no longer be trusted).
     disconnected: usize,
+    /// Speculation counters drained from the streams' own sessions.
+    draft_proposed: usize,
+    draft_accepted: usize,
+    verify_steps: usize,
+    lookahead_hits: usize,
 }
 
 /// Split a drained micro-batch into rounds with at most one step per
@@ -1105,15 +1393,18 @@ fn partition_rounds(steps: Vec<StepReq>) -> Vec<Vec<StepReq>> {
     rounds
 }
 
-/// Scalar fallback: one session, one step, one reply.
-fn scalar_step(
+/// Deliver one step's outcome to its waiting client and fold it into
+/// the tally — the single reply path shared by the scalar, degenerate
+/// batched and speculative steps (so `StepOut` construction and the
+/// ok/failed accounting can never drift between them).
+fn reply_step(
     req: StepReq,
-    sess: &mut DecoderSession,
+    result: Result<Vec<f32>>,
+    pos: usize,
     micro_batch: usize,
     tally: &mut RoundTally,
 ) {
-    let pos = sess.position();
-    match sess.step(req.token) {
+    match result {
         Ok(logits) => {
             tally.ok += 1;
             req.reply
@@ -1131,6 +1422,40 @@ fn scalar_step(
             req.reply.send(Err(e)).ok();
         }
     }
+}
+
+/// Scalar fallback: one session, one step, one reply.
+fn scalar_step(
+    req: StepReq,
+    sess: &mut DecoderSession,
+    micro_batch: usize,
+    tally: &mut RoundTally,
+) {
+    let pos = sess.position();
+    let result = sess.step(req.token);
+    reply_step(req, result, pos, micro_batch, tally);
+}
+
+/// One speculative stream step: served from verified lookahead when the
+/// submitted token matches the predicted greedy continuation, otherwise
+/// a fresh draft-propose / verify-accept window
+/// ([`SpeculativeSession::step`]). Each such step is already a stacked
+/// multi-token verify on its own stream, so it does not join the
+/// cross-session batch; its counters drain into the tally either way.
+fn spec_step(
+    req: StepReq,
+    spec: &mut SpeculativeSession,
+    micro_batch: usize,
+    tally: &mut RoundTally,
+) {
+    let pos = spec.position();
+    let result = spec.step(req.token);
+    reply_step(req, result, pos, micro_batch, tally);
+    let c = spec.take_counters();
+    tally.draft_proposed += c.draft_proposed;
+    tally.draft_accepted += c.draft_accepted;
+    tally.verify_steps += c.verify_steps;
+    tally.lookahead_hits += c.lookahead_hits;
 }
 
 /// Execute one round, splitting it into waves of at most
@@ -1210,30 +1535,50 @@ fn run_wave(
         }
     }
 
-    // Phase 2: run the steps.
-    let batch = runnable.len() >= batch_threshold.max(2);
+    // Phase 2a: speculative streams step in place — each speculative
+    // step is already a stacked multi-token verify on its own stream,
+    // so only plain streams join the cross-session batch.
+    let mut plain: Vec<StepReq> = Vec::with_capacity(runnable.len());
+    for req in runnable {
+        let id = req.session;
+        match res.resident.get_mut(&id) {
+            Some(Slot::Spec(spec)) => {
+                spec_step(req, spec, micro_batch, tally);
+                res.touch(id);
+            }
+            Some(Slot::Plain(_)) => plain.push(req),
+            None => {
+                tally.failed += 1;
+                req.reply.send(Err(anyhow!("unknown or closed session {id}"))).ok();
+            }
+        }
+    }
+
+    // Phase 2b: plain streams — batched step_many, or the PR 1 scalar
+    // loop for sub-threshold waves.
+    let batch = plain.len() >= batch_threshold.max(2);
     if !batch {
-        // Sub-threshold wave: the PR 1 scalar loop, sessions stepped
-        // in place.
-        for req in runnable {
+        for req in plain {
             let id = req.session;
             match res.resident.get_mut(&id) {
-                None => {
-                    tally.failed += 1;
-                    req.reply.send(Err(anyhow!("unknown or closed session {id}"))).ok();
-                }
-                Some(sess) => {
+                Some(Slot::Plain(sess)) => {
                     scalar_step(req, sess, micro_batch, tally);
                     res.touch(id);
+                }
+                _ => {
+                    tally.failed += 1;
+                    req.reply.send(Err(anyhow!("unknown or closed session {id}"))).ok();
                 }
             }
         }
         return;
     }
     let vocab = model.config().vocab;
-    let mut work: Vec<(StepReq, DecoderSession)> = Vec::with_capacity(runnable.len());
-    for req in runnable {
-        let Some(mut sess) = res.resident.remove(&req.session) else {
+    let mut work: Vec<(StepReq, DecoderSession)> = Vec::with_capacity(plain.len());
+    for req in plain {
+        // Each id was seen as Plain moments ago on this same thread, so
+        // the removal can only yield a plain slot (or nothing).
+        let Some(Slot::Plain(mut sess)) = res.resident.remove(&req.session) else {
             tally.failed += 1;
             req.reply
                 .send(Err(anyhow!("unknown or closed session {}", req.session)))
@@ -1246,7 +1591,7 @@ fn run_wave(
             // leaves the session unadvanced.
             let id = req.session;
             scalar_step(req, &mut sess, micro_batch, tally);
-            res.resident.insert(id, sess);
+            res.resident.insert(id, Slot::Plain(sess));
             res.touch(id);
             continue;
         }
@@ -1257,7 +1602,7 @@ fn run_wave(
         for (req, mut sess) in work {
             let id = req.session;
             scalar_step(req, &mut sess, micro_batch, tally);
-            res.resident.insert(id, sess);
+            res.resident.insert(id, Slot::Plain(sess));
             res.touch(id);
         }
         return;
@@ -1287,7 +1632,7 @@ fn run_wave(
                         micro_batch,
                     }))
                     .ok();
-                res.resident.insert(req.session, sess);
+                res.resident.insert(req.session, Slot::Plain(sess));
                 res.touch(req.session);
             }
         }
@@ -1319,10 +1664,12 @@ fn handle_msg(
     stats: &Mutex<DecodeStats>,
 ) {
     match msg {
-        DecodeMsg::Open { session, reply } => {
-            res.open(session, DecoderSession::new(model.clone()));
-            stats.lock().unwrap().sessions_opened += 1;
-            reply.send(Ok(())).ok();
+        DecodeMsg::Open { session, speculative, reply } => {
+            let opened = res.open(session, model, speculative);
+            if opened.is_ok() {
+                stats.lock().unwrap().sessions_opened += 1;
+            }
+            reply.send(opened).ok();
         }
         // Deferred: applied after this window's steps execute, so a
         // step that was valid when submitted is never failed by a

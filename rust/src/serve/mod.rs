@@ -26,11 +26,40 @@
 //! disconnected channel, never a hang — and still counts in
 //! [`ServeStats`].
 //!
+//! # The `serve/` subsystem, mapped
+//!
+//! Four modules, one serving stack:
+//!
+//! | module | role |
+//! |---|---|
+//! | `serve` (this file) | fixed-window request router + dynamic batcher over AOT artifacts |
+//! | [`decode`] | streaming engine: [`decode::HostDecoder`] (the model), [`decode::DecoderSession`] (O(1)/token state), the [`decode::DecodeServer`] scheduler (micro-batching, batched `step_many` rounds, the `Residency` LRU spill manager) |
+//! | [`session_store`] | the spill tier: FMMS v1 self-validating snapshot codec + [`session_store::MemStore`]/[`session_store::DiskStore`] behind the [`session_store::SessionStore`] trait |
+//! | [`speculative`] | draft-propose / verify-accept lookahead over checkpoint/rollback of the O(1) state |
+//!
+//! How they connect:
+//!
+//! ```text
+//!             DecodeServer scheduler (one thread)
+//!   steps ──▶ rounds ──▶ waves ──▶ step_many / scalar step ── plain streams
+//!                │                 SpeculativeSession::step ── speculative
+//!                │                   │  draft (NGram | draft model)
+//!                │                   └─ verify_window + checkpoint/rollback
+//!                ▼
+//!             Residency (LRU, cap) ──spill/restore──▶ SessionStore
+//!                                    (snapshots only at committed
+//!                                     boundaries; speculative lookahead
+//!                                     is recomputed, never serialized)
+//! ```
+//!
 //! [`decode`] is the session-based streaming sibling of this module:
 //! instead of recomputing a fixed window per request it decodes token by
-//! token over [`crate::attention::FmmDecodeState`] at O(1)/token, and
+//! token over [`crate::attention::FmmDecodeState`] at O(1)/token;
 //! [`session_store`] tiers its idle session state out of RAM (LRU spill
-//! to a snapshot store, transparent restore on the next token).
+//! to a snapshot store, transparent restore on the next token); and
+//! [`speculative`] turns the same state's cheap checkpoint/rollback
+//! into speculative decoding (draft K tokens, verify them as one
+//! stacked step, serve verified lookahead for free).
 //!
 //! PJRT handles are not `Send` (the xla crate wraps `Rc` + raw
 //! pointers), so the scheduler thread owns its *own* `Runtime` and
@@ -39,6 +68,7 @@
 
 pub mod decode;
 pub mod session_store;
+pub mod speculative;
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -54,6 +54,7 @@
 //! holds a stream's state at any time.
 
 use std::collections::HashMap;
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -254,12 +255,39 @@ impl DiskStore {
     fn path_of(&self, key: u64) -> PathBuf {
         self.dir.join(format!("sess_{key:016x}.fmms"))
     }
+
+    fn tmp_path_of(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("sess_{key:016x}.tmp"))
+    }
 }
 
 impl SessionStore for DiskStore {
+    /// Torn-file hardened: the snapshot is written to a sibling `.tmp`
+    /// path, fsynced, and atomically renamed into place, so a crash
+    /// (power loss included) or a full disk mid-spill can never leave a
+    /// half-written blob where a later restore will read it — the final
+    /// path either holds the complete old snapshot, the complete new
+    /// one, or nothing.
     fn put(&mut self, key: u64, snap: &[u8]) -> Result<()> {
+        let tmp = self.tmp_path_of(key);
         let path = self.path_of(key);
-        std::fs::write(&path, snap).with_context(|| format!("spilling to {path:?}"))?;
+        let written = (|| {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(snap)?;
+            // Flush to stable storage *before* the rename publishes the
+            // name: without this, delayed allocation could commit the
+            // rename and lose the data on power loss, leaving the final
+            // path torn — the exact failure the temp file exists to
+            // prevent.
+            f.sync_all()?;
+            std::fs::rename(&tmp, &path)
+        })()
+        .with_context(|| format!("spilling to {path:?}"));
+        if let Err(e) = written {
+            // Best effort: never leave a stale temp file behind.
+            std::fs::remove_file(&tmp).ok();
+            return Err(e);
+        }
         if let Some(old) = self.index.insert(key, snap.len() as u64) {
             self.bytes -= old;
         }
@@ -380,6 +408,13 @@ mod tests {
             exercise_store(&mut store);
             store.put(9, b"linger").unwrap();
             assert!(store.path_of(9).exists());
+            // Atomic spill: the rename consumed the temp file; nothing
+            // torn or stale sits next to the snapshot.
+            assert!(!store.tmp_path_of(9).exists());
+            store.put(9, b"replaced").unwrap();
+            assert!(!store.tmp_path_of(9).exists());
+            assert_eq!(store.take(9).unwrap().as_deref(), Some(&b"replaced"[..]));
+            store.put(9, b"linger").unwrap();
         }
         // Drop removed the tracked file and the now-empty directory.
         assert!(!dir.exists());

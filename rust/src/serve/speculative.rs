@@ -1,0 +1,631 @@
+//! Speculative decoding on O(1) FMM state — draft-propose / verify-accept.
+//!
+//! Speculative decoding needs exactly one primitive from the serving
+//! engine: a cheap checkpoint/rollback of per-stream decode state. For
+//! KV-cache transformers that means copying (or carefully truncating)
+//! an O(position) cache; the FMM decomposition's decode state is
+//! O(bandwidth·dh + r·dh²) — *independent of position* — so a
+//! checkpoint is a few KiB of buffer copies
+//! ([`DecoderSession::checkpoint`] over
+//! [`FmmDecodeState::clone_state_into`](crate::attention::FmmDecodeState::clone_state_into),
+//! no byte codec), and rollback after a rejected draft costs the same.
+//! That is what makes speculation nearly free here, and why this module
+//! exists at all.
+//!
+//! # The loop
+//!
+//! ```text
+//!  step(token) ──▶ lookahead hit? ──yes──▶ answer from the verified
+//!      │                                   pending row (zero compute)
+//!      no (miss / mispredict)
+//!      ▼
+//!  rollback to committed boundary (checkpoint restore + stacked replay)
+//!  draft.propose(K)      — NGramDraft | ModelDraft, advisory only
+//!  verify_window([token, d1..dK])   — ONE stacked multi-token step:
+//!      K+1-row prepacked GEMMs, sequential per-head attention; rows are
+//!      bit-identical to K+1 scalar steps (PR 2/3 kernel invariance)
+//!  accept longest prefix with dᵢ == argmax(rowᵢ₋₁)  (the target's own
+//!      greedy chain) ──▶ those rows become verified lookahead
+//!  reject tail ──▶ rollback to checkpoint, stacked replay of accepted
+//! ```
+//!
+//! Correctness does not depend on the draft: proposals only ever *seed*
+//! verification against the target model's own outputs, and every row a
+//! client sees came out of [`verify_window`] (or a scalar-equivalent
+//! replay of it), which is bit-identical to scalar stepping. A perfect
+//! draft turns `T` scalar steps into `T/(K+1)` stacked ones plus `T`
+//! free lookahead hits; a useless draft costs one rollback+replay per
+//! window. Either way the token stream is the plain greedy stream, bit
+//! for bit (pinned by `tests/speculative_decode.rs`).
+//!
+//! # Pieces
+//!
+//! * [`DraftSource`] — where continuations come from. [`NGramDraft`]
+//!   matches the stream's own recent history (prompt-lookup style, zero
+//!   model cost — greedy decode loves cycles, and any repeated n-gram
+//!   in a finite-window model's greedy chain verifies perfectly).
+//!   [`ModelDraft`] greedy-decodes a second, smaller [`HostDecoder`]
+//!   sharing the target's vocab, keeping its own O(1) state in sync by
+//!   replaying committed tokens.
+//! * [`SpeculativeSession`] — the wrapper the scheduler steps; owns the
+//!   checkpoint/replay bookkeeping and the verified-lookahead queue.
+//! * [`SpecFactory`] / [`SpeculationConfig`] — server-side plumbing:
+//!   one draft model shared across streams, one wrapper per stream.
+//!   The residency manager spills speculative streams only at their
+//!   *committed* boundary ([`SpeculativeSession::snapshot_committed`]),
+//!   so a snapshot never captures half-verified lookahead.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::decode::{
+    greedy_argmax, verify_window, DecodeConfig, DecodeServerConfig, DecoderSession,
+    HostDecoder, SessionCheckpoint,
+};
+
+/// Server-wide speculation mode ([`DecodeServerConfig::speculation`]).
+#[derive(Debug, Clone, Default)]
+pub enum SpeculationConfig {
+    /// No speculation: every stream decodes one scalar step per token.
+    #[default]
+    Off,
+    /// Draft each stream's continuation from its own token history
+    /// (n-gram lookup — no second model).
+    NGram,
+    /// Draft from a second decoder built from this config. It must
+    /// share the target's vocab; everything else (depth, width, heads)
+    /// may be smaller — that asymmetry is where the speedup lives.
+    Model(DecodeConfig),
+}
+
+impl SpeculationConfig {
+    /// Parse a CLI draft spec: `ngram`, or `model:LxHxD` — a draft
+    /// decoder with `L` layers, `H` heads and `d_model = D`, inheriting
+    /// every other field (vocab, bandwidth, kernels, blend weights,
+    /// seed) from `base`.
+    pub fn parse(spec: &str, base: &DecodeConfig) -> Result<SpeculationConfig> {
+        if spec == "ngram" {
+            return Ok(SpeculationConfig::NGram);
+        }
+        if let Some(dims) = spec.strip_prefix("model:") {
+            let parts: Vec<&str> = dims.split('x').collect();
+            if parts.len() != 3 {
+                bail!("--draft model wants model:LAYERSxHEADSxD_MODEL, got {spec:?}");
+            }
+            let dim = |s: &str| {
+                s.parse::<usize>()
+                    .map_err(|_| anyhow!("bad draft dimension {s:?} in {spec:?}"))
+            };
+            return Ok(SpeculationConfig::Model(DecodeConfig {
+                layers: dim(parts[0])?,
+                heads: dim(parts[1])?,
+                d_model: dim(parts[2])?,
+                ..base.clone()
+            }));
+        }
+        bail!("unknown --draft {spec:?} (want ngram or model:LxHxD)")
+    }
+}
+
+/// Where draft continuations come from. The contract is *advisory*:
+/// proposals only seed verification against the target model's own
+/// greedy outputs, so a wrong (or empty, or out-of-vocab) draft costs
+/// speed, never correctness — implementations should therefore never
+/// fail a stream, just stop proposing.
+pub trait DraftSource: Send {
+    /// Record one committed token of the stream (client-submitted and
+    /// answered). Called exactly once per committed token, in order.
+    fn observe(&mut self, token: i32);
+
+    /// Propose up to `k` continuation tokens for the committed history.
+    /// Fewer (or none) is fine; anything from the first out-of-vocab
+    /// token on is clipped by the caller.
+    fn propose(&mut self, k: usize) -> Vec<i32>;
+
+    /// Short name for logs and stats.
+    fn name(&self) -> &'static str;
+}
+
+/// Draft from the stream's own history: propose whatever followed the
+/// most recent earlier occurrence of the current suffix n-gram (longest
+/// n first, down to a single token). Zero model cost — the
+/// prompt-lookup trick — and on repetitive streams it is hard to beat:
+/// greedy decode settles into cycles, and once a near-field-only chain
+/// cycles, every repeated n-gram's historical continuation *is* the
+/// greedy continuation.
+pub struct NGramDraft {
+    history: Vec<i32>,
+    max_n: usize,
+    max_history: usize,
+}
+
+impl NGramDraft {
+    /// `max_n`: longest suffix n-gram tried (≥ 1). `max_history`: match
+    /// window — older tokens are forgotten, bounding propose() cost.
+    pub fn new(max_n: usize, max_history: usize) -> NGramDraft {
+        NGramDraft {
+            history: Vec::new(),
+            max_n: max_n.max(1),
+            max_history: max_history.max(16),
+        }
+    }
+}
+
+impl Default for NGramDraft {
+    fn default() -> Self {
+        NGramDraft::new(3, 4096)
+    }
+}
+
+impl DraftSource for NGramDraft {
+    fn observe(&mut self, token: i32) {
+        self.history.push(token);
+        if self.history.len() > self.max_history {
+            let cut = self.history.len() - self.max_history;
+            self.history.drain(..cut);
+        }
+    }
+
+    fn propose(&mut self, k: usize) -> Vec<i32> {
+        let h = &self.history;
+        let len = h.len();
+        if k == 0 || len < 2 {
+            return Vec::new();
+        }
+        for n in (1..=self.max_n.min(len - 1)).rev() {
+            let suffix = &h[len - n..];
+            // Most recent occurrence strictly before the suffix itself
+            // (overlap with the suffix region is fine — that is exactly
+            // the periodic case).
+            for j in (0..len - n).rev() {
+                if &h[j..j + n] == suffix {
+                    return h[j + n..len.min(j + n + k)].to_vec();
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    fn name(&self) -> &'static str {
+        "ngram"
+    }
+}
+
+/// Draft from a second, smaller [`HostDecoder`] sharing the target's
+/// vocab. Its own [`DecoderSession`] replays every committed token
+/// (O(1) each, on the smaller model), so a K-token proposal costs one
+/// argmax plus `K-1` small scalar steps, bracketed by a checkpoint /
+/// rollback of the draft's own O(1) state.
+pub struct ModelDraft {
+    sess: DecoderSession,
+    /// Logits after the last observed token — the next proposal's seed.
+    last_logits: Option<Vec<f32>>,
+    vocab: usize,
+    /// Drafting is advisory: if the draft model ever errors, the source
+    /// goes quiet instead of failing the stream.
+    healthy: bool,
+    scratch: SessionCheckpoint,
+}
+
+impl ModelDraft {
+    pub fn new(model: Arc<HostDecoder>) -> ModelDraft {
+        let vocab = model.config().vocab;
+        ModelDraft {
+            sess: DecoderSession::new(model),
+            last_logits: None,
+            vocab,
+            healthy: true,
+            scratch: SessionCheckpoint::default(),
+        }
+    }
+}
+
+impl DraftSource for ModelDraft {
+    fn observe(&mut self, token: i32) {
+        if !self.healthy {
+            return;
+        }
+        match self.sess.step(token) {
+            Ok(logits) => self.last_logits = Some(logits),
+            Err(_) => {
+                self.healthy = false;
+                self.last_logits = None;
+            }
+        }
+    }
+
+    fn propose(&mut self, k: usize) -> Vec<i32> {
+        if !self.healthy || k == 0 {
+            return Vec::new();
+        }
+        let Some(logits) = &self.last_logits else {
+            return Vec::new();
+        };
+        let mut out = Vec::with_capacity(k);
+        out.push(greedy_argmax(logits));
+        if k == 1 {
+            return out;
+        }
+        // Tokens 2..K advance the draft state; checkpoint and roll back
+        // so the next observe() continues from the committed prefix.
+        self.sess.checkpoint_into(&mut self.scratch);
+        while out.len() < k {
+            let tok = *out.last().expect("out is non-empty");
+            if tok < 0 || tok as usize >= self.vocab {
+                break;
+            }
+            match self.sess.step(tok) {
+                Ok(l) => out.push(greedy_argmax(&l)),
+                Err(_) => break,
+            }
+        }
+        if self.sess.rollback(&self.scratch).is_err() {
+            // Cannot trust the draft state anymore; go quiet.
+            self.healthy = false;
+            return Vec::new();
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "model"
+    }
+}
+
+/// Per-stream speculation counters, drained by the scheduler into
+/// [`DecodeStats`](super::decode::DecodeStats) after every step.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct SpecCounters {
+    /// Draft tokens handed to verification.
+    pub draft_proposed: usize,
+    /// Draft tokens whose greedy verification matched.
+    pub draft_accepted: usize,
+    /// Stacked [`verify_window`] passes run (replays excluded).
+    pub verify_steps: usize,
+    /// Steps answered straight from verified lookahead.
+    pub lookahead_hits: usize,
+}
+
+/// A decode stream with draft-propose / verify-accept lookahead wrapped
+/// around a plain [`DecoderSession`].
+///
+/// Invariant between calls: the wrapped session has consumed
+/// `committed + pending.len()` tokens — `committed` client-submitted
+/// (answered) tokens plus the verified greedy lookahead the client has
+/// not asked for yet. While `pending` is non-empty a speculation epoch
+/// is in flight: `base` checkpoints the session `replay.len()` tokens
+/// before the committed boundary, so a mispredict rolls back and
+/// replays at most `1 + window` tokens. With `pending` empty, `base`
+/// and `replay` are dormant — steps whose draft proposes nothing take
+/// *no* checkpoint at all, so an idle draft source costs nothing over a
+/// plain stream. Spills snapshot the committed boundary
+/// ([`snapshot_committed`](Self::snapshot_committed)).
+pub struct SpeculativeSession {
+    sess: DecoderSession,
+    draft: Box<dyn DraftSource>,
+    window: usize,
+    /// Committed tokens (client-submitted and answered).
+    committed: usize,
+    /// Checkpoint opening the in-flight speculation epoch — meaningful
+    /// only while `pending` is non-empty.
+    base: SessionCheckpoint,
+    /// Tokens committed since `base` (bounded by `1 + window`).
+    replay: Vec<i32>,
+    pending: VecDeque<(i32, Vec<f32>)>,
+    counters: SpecCounters,
+}
+
+impl SpeculativeSession {
+    /// Wrap `sess` (at any position — freshly opened or restored from a
+    /// spill). `window` is the draft length K per verify step; 0 makes
+    /// every step a plain (stacked-width-1) verify.
+    pub fn new(
+        sess: DecoderSession,
+        draft: Box<dyn DraftSource>,
+        window: usize,
+    ) -> SpeculativeSession {
+        let committed = sess.position();
+        SpeculativeSession {
+            sess,
+            draft,
+            window,
+            committed,
+            base: SessionCheckpoint::default(),
+            replay: Vec::new(),
+            pending: VecDeque::new(),
+            counters: SpecCounters::default(),
+        }
+    }
+
+    /// Committed tokens (client-submitted and answered) — the plain
+    /// session's `position()` equivalent. The wrapped session itself
+    /// may be up to `window` tokens ahead of this.
+    pub fn position(&self) -> usize {
+        self.committed
+    }
+
+    /// Verified lookahead currently queued (observability/tests).
+    pub fn lookahead_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn draft_name(&self) -> &'static str {
+        self.draft.name()
+    }
+
+    /// Bytes of decode state held by the wrapped session.
+    pub fn state_bytes(&self) -> usize {
+        self.sess.state_bytes()
+    }
+
+    /// Drain the counters accumulated since the last call.
+    pub fn take_counters(&mut self) -> SpecCounters {
+        std::mem::take(&mut self.counters)
+    }
+
+    /// Consume one token and return its logits — bit-identical to what
+    /// a plain [`DecoderSession::step`] over the same submitted history
+    /// returns, whatever the draft proposed along the way. An
+    /// out-of-vocab token errors without disturbing any state (same
+    /// contract as the scalar path).
+    pub fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+        // Fast path: the client submitted exactly the predicted greedy
+        // continuation; its logits row was verified ahead of time.
+        if let Some((predicted, _)) = self.pending.front() {
+            if *predicted == token {
+                let (_, logits) = self.pending.pop_front().expect("front checked");
+                self.committed += 1;
+                self.replay.push(token);
+                self.draft.observe(token);
+                self.counters.lookahead_hits += 1;
+                return Ok(logits);
+            }
+        }
+
+        let vocab = self.sess.model().config().vocab;
+        if token < 0 || token as usize >= vocab {
+            // Mirror HostDecoder::embed_row's canonical error, *before*
+            // any state moves.
+            bail!("token {token} outside vocab 0..{vocab}");
+        }
+
+        // Mispredicted lookahead: rewind to the committed boundary.
+        self.sync_to_committed()?;
+
+        self.draft.observe(token);
+        let mut drafts =
+            if self.window == 0 { Vec::new() } else { self.draft.propose(self.window) };
+        drafts.truncate(self.window);
+        // Drafts are advisory — clip at the first out-of-vocab token so
+        // a bad source can never fail the verify call.
+        if let Some(bad) = drafts.iter().position(|&t| t < 0 || t as usize >= vocab) {
+            drafts.truncate(bad);
+        }
+        if drafts.is_empty() {
+            // Nothing to speculate on: one plain (stacked-width-1)
+            // verify, and crucially *no checkpoint* — a draft source
+            // with nothing to say costs nothing over a plain stream.
+            let rows = verify_window(&mut self.sess, &[token])?;
+            self.counters.verify_steps += 1;
+            self.committed += 1;
+            return Ok(rows.into_iter().next().expect("one row"));
+        }
+
+        // Open a speculation epoch: checkpoint the committed boundary
+        // so the rejected tail (and any later mispredict) can roll
+        // back to it.
+        self.sess.checkpoint_into(&mut self.base);
+        let mut window_toks = Vec::with_capacity(1 + drafts.len());
+        window_toks.push(token);
+        window_toks.extend_from_slice(&drafts);
+        let rows = verify_window(&mut self.sess, &window_toks)?;
+        self.counters.verify_steps += 1;
+        self.counters.draft_proposed += drafts.len();
+
+        // Accept the longest draft prefix that matches the target's own
+        // greedy chain: d1 against argmax(row of `token`), d2 against
+        // argmax(row of d1), ... Those rows are verified future answers.
+        let mut accepted = 0;
+        while accepted < drafts.len()
+            && drafts[accepted] == greedy_argmax(&rows[accepted])
+        {
+            accepted += 1;
+        }
+        self.counters.draft_accepted += accepted;
+
+        if accepted < drafts.len() {
+            // Rejected tail: roll back to the checkpoint and replay only
+            // `token` plus the accepted prefix — one stacked pass,
+            // bit-identical to the rows already in hand.
+            self.sess.rollback(&self.base)?;
+            verify_window(&mut self.sess, &window_toks[..1 + accepted])?;
+        }
+
+        let mut rows = rows.into_iter();
+        let first = rows.next().expect("window is non-empty");
+        for (d, row) in drafts.iter().take(accepted).zip(rows) {
+            self.pending.push_back((*d, row));
+        }
+        self.replay.clear();
+        self.replay.push(token);
+        self.committed += 1;
+        Ok(first)
+    }
+
+    /// Rewind the wrapped session to the committed boundary, discarding
+    /// unconfirmed lookahead: checkpoint restore plus one stacked replay
+    /// of the (at most `1 + window`) tokens committed since the epoch's
+    /// checkpoint. No-op when no lookahead is in flight.
+    fn sync_to_committed(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        self.sess.rollback(&self.base)?;
+        if !self.replay.is_empty() {
+            verify_window(&mut self.sess, &self.replay)?;
+        }
+        self.pending.clear();
+        Ok(())
+    }
+
+    /// Snapshot at the committed boundary — what the residency manager
+    /// spills. Unconfirmed lookahead is recomputed after restore rather
+    /// than serialized, so a snapshot never captures mid-speculation
+    /// state and restores into a plain *or* speculative session alike.
+    pub fn snapshot_committed(&mut self) -> Result<Vec<u8>> {
+        self.sync_to_committed()?;
+        self.sess.snapshot()
+    }
+
+    /// Unwrap into the plain session, rewound to the committed boundary.
+    pub fn into_session(mut self) -> Result<DecoderSession> {
+        self.sync_to_committed()?;
+        Ok(self.sess)
+    }
+}
+
+/// Server-side speculative stream factory: the draft machinery shared
+/// by every speculative stream (one draft *model* per server, one draft
+/// *session* per stream), plus the draft window.
+pub struct SpecFactory {
+    window: usize,
+    draft_model: Option<Arc<HostDecoder>>,
+}
+
+impl SpecFactory {
+    /// Build from the server config. `Ok(None)` when speculation is off
+    /// (or the window is 0); `Err` when the draft model config is
+    /// unusable (degenerate dims, vocab mismatch with the target).
+    pub fn build(
+        cfg: &DecodeServerConfig,
+        target: &DecodeConfig,
+    ) -> Result<Option<SpecFactory>> {
+        if cfg.draft_window == 0 {
+            return Ok(None);
+        }
+        let draft_model = match &cfg.speculation {
+            SpeculationConfig::Off => return Ok(None),
+            SpeculationConfig::NGram => None,
+            SpeculationConfig::Model(draft_cfg) => {
+                if draft_cfg.vocab != target.vocab {
+                    bail!(
+                        "draft model vocab {} must match the target's {}",
+                        draft_cfg.vocab,
+                        target.vocab
+                    );
+                }
+                Some(Arc::new(HostDecoder::new(draft_cfg.clone())?))
+            }
+        };
+        Ok(Some(SpecFactory { window: cfg.draft_window, draft_model }))
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Wrap a session (fresh or restored) in the speculative driver
+    /// with a new draft source of the configured kind.
+    pub fn wrap(&self, sess: DecoderSession) -> SpeculativeSession {
+        let draft: Box<dyn DraftSource> = match &self.draft_model {
+            None => Box::<NGramDraft>::default(),
+            Some(model) => Box::new(ModelDraft::new(model.clone())),
+        };
+        SpeculativeSession::new(sess, draft, self.window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_proposes_continuation_of_most_recent_match() {
+        let mut d = NGramDraft::new(3, 1024);
+        for t in [1, 2, 3, 9, 1, 2, 3, 7, 1, 2, 3] {
+            d.observe(t);
+        }
+        // Suffix trigram [1,2,3] last occurred (before the live suffix)
+        // at index 4, followed by 7, 1, 2.
+        assert_eq!(d.propose(3), vec![7, 1, 2]);
+        assert_eq!(d.propose(1), vec![7]);
+    }
+
+    #[test]
+    fn ngram_backs_off_to_shorter_suffixes() {
+        let mut d = NGramDraft::new(3, 1024);
+        for t in [4, 5, 6, 2, 8, 6] {
+            d.observe(t);
+        }
+        // No trigram/bigram repeat; unigram 6 last followed by 2.
+        assert_eq!(d.propose(2), vec![2, 8]);
+    }
+
+    #[test]
+    fn ngram_empty_when_nothing_repeats() {
+        let mut d = NGramDraft::default();
+        assert_eq!(d.propose(4), Vec::<i32>::new());
+        for t in [0, 1, 2, 3] {
+            d.observe(t);
+        }
+        assert_eq!(d.propose(4), Vec::<i32>::new());
+        assert_eq!(d.propose(0), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn ngram_history_window_is_bounded() {
+        let mut d = NGramDraft::new(2, 16);
+        for i in 0..200 {
+            d.observe(i % 7);
+        }
+        assert!(d.history.len() <= 16);
+        assert!(!d.propose(3).is_empty(), "periodic history must match");
+    }
+
+    #[test]
+    fn speculation_config_parses_cli_specs() {
+        let base = DecodeConfig::default();
+        assert!(matches!(
+            SpeculationConfig::parse("ngram", &base).unwrap(),
+            SpeculationConfig::NGram
+        ));
+        let SpeculationConfig::Model(cfg) =
+            SpeculationConfig::parse("model:1x2x16", &base).unwrap()
+        else {
+            panic!("expected model config");
+        };
+        assert_eq!((cfg.layers, cfg.heads, cfg.d_model), (1, 2, 16));
+        assert_eq!(cfg.vocab, base.vocab, "draft inherits the target vocab");
+        assert!(SpeculationConfig::parse("model:1x2", &base).is_err());
+        assert!(SpeculationConfig::parse("model:axbxc", &base).is_err());
+        assert!(SpeculationConfig::parse("oracle", &base).is_err());
+    }
+
+    #[test]
+    fn factory_rejects_vocab_mismatch_and_off_is_none() {
+        let target = DecodeConfig::default();
+        let off = DecodeServerConfig::default();
+        assert!(SpecFactory::build(&off, &target).unwrap().is_none());
+
+        let ngram = DecodeServerConfig {
+            speculation: SpeculationConfig::NGram,
+            draft_window: 4,
+            ..Default::default()
+        };
+        assert!(SpecFactory::build(&ngram, &target).unwrap().is_some());
+        let zero_window = DecodeServerConfig { draft_window: 0, ..ngram };
+        assert!(SpecFactory::build(&zero_window, &target).unwrap().is_none());
+
+        let bad_vocab = DecodeServerConfig {
+            speculation: SpeculationConfig::Model(DecodeConfig {
+                vocab: target.vocab + 1,
+                ..target.clone()
+            }),
+            ..Default::default()
+        };
+        let err = SpecFactory::build(&bad_vocab, &target).unwrap_err();
+        assert!(format!("{err:#}").contains("vocab"), "{err:#}");
+    }
+}

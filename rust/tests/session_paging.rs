@@ -129,6 +129,31 @@ fn snapshot_failure_envelope() {
     assert!(format!("{err:#}").contains("version"), "{err:#}");
 }
 
+/// Satellite: the FMMS v1 failure envelope under truncation at *every*
+/// byte boundary of a valid blob — each prefix must be a clean `Err`
+/// (never a panic, never a session built from partial data). Covers
+/// every cut through the magic, version, fingerprint, leaf count, each
+/// length prefix, each leaf body, and the trailing checksum.
+#[test]
+fn snapshot_truncation_at_every_byte_boundary_is_err() {
+    let model = Arc::new(HostDecoder::new(tiny_config()).unwrap());
+    let mut sess = DecoderSession::new(model.clone());
+    for &t in &probe_tokens(7, 32, 99) {
+        sess.step(t).unwrap();
+    }
+    let snap = sess.snapshot().unwrap();
+    for cut in 0..snap.len() {
+        assert!(
+            DecoderSession::restore(model.clone(), &snap[..cut]).is_err(),
+            "truncation at byte {cut} of {} must be rejected",
+            snap.len()
+        );
+    }
+    // The untruncated blob still restores (the loop above must not be
+    // passing because the blob itself was bad).
+    assert!(DecoderSession::restore(model, &snap).is_ok());
+}
+
 #[test]
 fn degenerate_decode_configs_are_rejected() {
     let bad_band = DecodeConfig { bandwidth: 0, ..tiny_config() };
@@ -152,6 +177,7 @@ fn greedy_run(
         max_steps: 256,
         batch_threshold: 2,
         max_resident_sessions: cap,
+        ..Default::default()
     };
     let server = match store {
         Some(s) => DecodeServer::start_with_store(model, cfg, s),

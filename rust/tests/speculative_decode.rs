@@ -1,0 +1,513 @@
+//! Integration: speculative decoding (draft-propose / verify-accept).
+//!
+//! Pins the subsystem's one hard promise — speculation is
+//! *throughput-only*: a speculative stream's logits and greedy tokens
+//! are bit-identical to a plain stream's, for every draft source ×
+//! draft window × bandwidth × feature-map grid cell, through the
+//! server, and under a residency cap that spills streams
+//! mid-speculation. Also pins the places speed is supposed to show up:
+//! a config-identical draft model accepts every proposal (verify count
+//! collapses to ⌈T/(K+1)⌉), and an `NGramDraft` on a repetitive
+//! (finite-window, near-field-only) greedy chain must accept drafts —
+//! that configuration makes the greedy chain eventually periodic, so
+//! acceptance is guaranteed, not probabilistic.
+//!
+//! Everything here is host-side — no artifacts required, never skips.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmmformer::attention::FeatureMap;
+use fmmformer::rng::Pcg64;
+use fmmformer::serve::decode::{
+    greedy_argmax, run_greedy_sessions_collect, verify_window, DecodeConfig,
+    DecodeServer, DecodeServerConfig, DecodeStats, DecoderSession, HostDecoder,
+};
+use fmmformer::serve::speculative::{
+    DraftSource, ModelDraft, NGramDraft, SpeculationConfig, SpeculativeSession,
+};
+
+fn tiny_config(bandwidth: usize, kernels: &[FeatureMap]) -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 8,
+        vocab: 12,
+        bandwidth,
+        kernels: kernels.to_vec(),
+        w1: 0.6,
+        w2: 0.9,
+        seed: 5,
+    }
+}
+
+/// Greedy-decode `len` tokens on a plain session starting from `start`,
+/// returning the submitted tokens and every logits row.
+fn plain_greedy(
+    model: &Arc<HostDecoder>,
+    start: i32,
+    len: usize,
+) -> (Vec<i32>, Vec<Vec<f32>>) {
+    let mut sess = DecoderSession::new(model.clone());
+    let mut toks = vec![start];
+    let mut rows = Vec::new();
+    for t in 0..len {
+        let logits = sess.step(toks[t]).unwrap();
+        toks.push(greedy_argmax(&logits));
+        rows.push(logits);
+    }
+    (toks, rows)
+}
+
+/// Same greedy drive through a speculative session.
+fn spec_greedy(spec: &mut SpeculativeSession, start: i32, len: usize) -> Vec<Vec<f32>> {
+    let mut tok = start;
+    let mut rows = Vec::new();
+    for _ in 0..len {
+        let logits = spec.step(tok).unwrap();
+        tok = greedy_argmax(&logits);
+        rows.push(logits);
+    }
+    rows
+}
+
+fn draft_for(
+    source: &str,
+    model: &Arc<HostDecoder>,
+    draft_model: &Arc<HostDecoder>,
+) -> Box<dyn DraftSource> {
+    match source {
+        "ngram" => Box::<NGramDraft>::default(),
+        "model" => {
+            assert_eq!(draft_model.config().vocab, model.config().vocab);
+            Box::new(ModelDraft::new(draft_model.clone()))
+        }
+        other => panic!("unknown draft source {other}"),
+    }
+}
+
+/// `verify_window` is the speculative path's compute kernel: one
+/// stacked pass over a K-token window must be bit-identical to K scalar
+/// steps, across bandwidths, feature maps and window sizes (including
+/// windows that wrap the near-field ring).
+#[test]
+fn verify_window_is_bit_identical_to_scalar_steps() {
+    let kernel_sets: [&[FeatureMap]; 2] =
+        [&[FeatureMap::Elu], &[FeatureMap::Elu, FeatureMap::Tanh]];
+    for kernels in kernel_sets {
+        for bandwidth in [1usize, 4] {
+            let cfg = tiny_config(bandwidth, kernels);
+            let model = Arc::new(HostDecoder::new(cfg).unwrap());
+            let mut rng = Pcg64::seeded(11 + bandwidth as u64);
+            let tokens: Vec<i32> = (0..26).map(|_| rng.usize(12) as i32).collect();
+
+            let mut scalar = DecoderSession::new(model.clone());
+            let scalar_rows: Vec<Vec<f32>> =
+                tokens.iter().map(|&t| scalar.step(t).unwrap()).collect();
+
+            // Windows of mixed sizes covering the same stream.
+            let mut stacked = DecoderSession::new(model.clone());
+            let mut at = 0usize;
+            for w in [1usize, 4, 8, 2, 1, 7, 3] {
+                let window = &tokens[at..at + w];
+                let rows = verify_window(&mut stacked, window).unwrap();
+                for (j, row) in rows.iter().enumerate() {
+                    assert_eq!(
+                        row, &scalar_rows[at + j],
+                        "kernels {kernels:?} bw {bandwidth} window at {at} row {j}"
+                    );
+                }
+                at += w;
+                assert_eq!(stacked.position(), at);
+            }
+            assert_eq!(at, tokens.len());
+        }
+    }
+}
+
+/// Error envelope: an empty window is a no-op, and an out-of-vocab
+/// token anywhere in the window fails before any state advances.
+#[test]
+fn verify_window_rejects_bad_tokens_without_touching_state() {
+    let model = Arc::new(HostDecoder::new(tiny_config(2, &[FeatureMap::Elu])).unwrap());
+    let mut sess = DecoderSession::new(model.clone());
+    assert!(verify_window(&mut sess, &[]).unwrap().is_empty());
+    verify_window(&mut sess, &[1, 2, 3]).unwrap();
+    assert_eq!(sess.position(), 3);
+
+    // Bad token *last* in the window: nothing may have advanced.
+    assert!(verify_window(&mut sess, &[4, 5, 99]).is_err());
+    assert!(verify_window(&mut sess, &[-1]).is_err());
+    assert_eq!(sess.position(), 3);
+
+    // The untouched session still matches a straight-line replay.
+    let mut reference = DecoderSession::new(model);
+    for &t in &[1, 2, 3] {
+        reference.step(t).unwrap();
+    }
+    assert_eq!(sess.step(4).unwrap(), reference.step(4).unwrap());
+}
+
+/// Session-level checkpoint/rollback: speculate ahead, roll back,
+/// replay — bit-identical to never having speculated.
+#[test]
+fn checkpoint_rollback_is_bit_exact() {
+    let model = Arc::new(HostDecoder::new(tiny_config(3, &[FeatureMap::Elu])).unwrap());
+    let mut rng = Pcg64::seeded(21);
+    let tokens: Vec<i32> = (0..20).map(|_| rng.usize(12) as i32).collect();
+
+    let mut sess = DecoderSession::new(model.clone());
+    for &t in &tokens[..8] {
+        sess.step(t).unwrap();
+    }
+    let ckpt = sess.checkpoint();
+    assert_eq!(ckpt.position(), 8);
+    assert!(ckpt.bytes() > 0);
+
+    // Wander off down a rejected draft, then roll back.
+    verify_window(&mut sess, &[7, 7, 7, 7, 7]).unwrap();
+    sess.rollback(&ckpt).unwrap();
+    assert_eq!(sess.position(), 8);
+
+    let mut reference = DecoderSession::new(model);
+    for (i, &t) in tokens.iter().enumerate() {
+        let want = reference.step(t).unwrap();
+        if i >= 8 {
+            assert_eq!(sess.step(t).unwrap(), want, "post-rollback step {i}");
+        }
+    }
+
+    // A checkpoint from a config-mismatched session is refused.
+    let other = Arc::new(
+        HostDecoder::new(tiny_config(4, &[FeatureMap::Elu])).unwrap(),
+    );
+    let mut other_sess = DecoderSession::new(other);
+    assert!(other_sess.rollback(&ckpt).is_err());
+}
+
+/// ISSUE acceptance grid: speculative greedy decode is bit-identical to
+/// plain greedy decode for every draft source × draft window ∈
+/// {1,2,4,8} × bandwidth × feature-map cell — logits included, not just
+/// tokens (session-level, so every cell checks full rows).
+#[test]
+fn speculative_greedy_matches_plain_across_grid() {
+    let kernel_sets: [&[FeatureMap]; 2] =
+        [&[FeatureMap::Elu], &[FeatureMap::Elu, FeatureMap::Tanh]];
+    for kernels in kernel_sets {
+        for bandwidth in [1usize, 4] {
+            let cfg = tiny_config(bandwidth, kernels);
+            let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+            let draft_model = Arc::new(
+                HostDecoder::new(DecodeConfig { layers: 1, ..cfg }).unwrap(),
+            );
+            let (_, plain_rows) = plain_greedy(&model, 1, 24);
+            for source in ["ngram", "model"] {
+                for window in [1usize, 2, 4, 8] {
+                    let mut spec = SpeculativeSession::new(
+                        DecoderSession::new(model.clone()),
+                        draft_for(source, &model, &draft_model),
+                        window,
+                    );
+                    let rows = spec_greedy(&mut spec, 1, 24);
+                    assert_eq!(
+                        rows, plain_rows,
+                        "{source} window {window} bw {bandwidth} kernels {kernels:?}"
+                    );
+                    assert_eq!(spec.position(), 24);
+                }
+            }
+        }
+    }
+}
+
+/// Non-greedy clients: a stream of arbitrary (teacher-forced) tokens
+/// constantly mispredicts the lookahead, exercising the
+/// rollback-and-replay path every step — logits must still be
+/// bit-identical to a plain session, and an out-of-vocab token must
+/// error cleanly without derailing the stream.
+#[test]
+fn mispredicting_clients_still_get_bit_identical_logits() {
+    let cfg = tiny_config(2, &[FeatureMap::Elu, FeatureMap::EluNeg]);
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let draft_model = Arc::new(HostDecoder::new(cfg).unwrap());
+    let mut rng = Pcg64::seeded(33);
+    let tokens: Vec<i32> = (0..30).map(|_| rng.usize(12) as i32).collect();
+
+    for source in ["ngram", "model"] {
+        let mut plain = DecoderSession::new(model.clone());
+        let mut spec = SpeculativeSession::new(
+            DecoderSession::new(model.clone()),
+            draft_for(source, &model, &draft_model),
+            4,
+        );
+        for (i, &t) in tokens.iter().enumerate() {
+            let want = plain.step(t).unwrap();
+            let got = spec.step(t).unwrap();
+            assert_eq!(got, want, "{source} teacher-forced step {i}");
+            if i == 10 {
+                // Out-of-vocab mid-stream: clean error, no state damage.
+                let err = spec.step(99).unwrap_err();
+                assert!(format!("{err:#}").contains("outside vocab"), "{err:#}");
+                let err = spec.step(-3).unwrap_err();
+                assert!(format!("{err:#}").contains("outside vocab"), "{err:#}");
+            }
+        }
+        assert_eq!(spec.position(), tokens.len());
+    }
+}
+
+/// A draft model with the *identical* config is a perfect oracle: its
+/// greedy chain is bitwise the target's, so every proposal is accepted,
+/// every follow-up step is a lookahead hit, and the verify count
+/// collapses to ⌈T/(K+1)⌉ — the speculation speedup, made exact.
+#[test]
+fn identical_draft_model_accepts_every_proposal() {
+    let cfg = tiny_config(3, &[FeatureMap::Elu]);
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let twin = Arc::new(HostDecoder::new(cfg).unwrap());
+    let window = 3usize;
+    let steps = 24usize;
+    let mut spec = SpeculativeSession::new(
+        DecoderSession::new(model.clone()),
+        Box::new(ModelDraft::new(twin)),
+        window,
+    );
+    let (_, plain_rows) = plain_greedy(&model, 2, steps);
+    let rows = spec_greedy(&mut spec, 2, steps);
+    assert_eq!(rows, plain_rows);
+
+    let c = spec.take_counters();
+    let epochs = (steps + window) / (window + 1);
+    assert_eq!(c.verify_steps, epochs, "{c:?}");
+    assert_eq!(c.draft_proposed, epochs * window, "{c:?}");
+    assert_eq!(c.draft_accepted, c.draft_proposed, "perfect draft: {c:?}");
+    assert_eq!(c.lookahead_hits, steps - epochs, "{c:?}");
+}
+
+/// The repetitive-corpus configuration where n-gram acceptance is
+/// *guaranteed*, not statistical: near-field only (`w2 = 0`), one
+/// layer, bandwidth 1 — each logits row is a function of the last two
+/// tokens alone, so the greedy chain is a walk on a finite pair-state
+/// graph and must become periodic within `vocab² + 1` steps. Once any
+/// bigram repeats, its historical continuation *is* the greedy
+/// continuation, so the `NGramDraft` (which backs off trigram →
+/// bigram → unigram) must get drafts accepted.
+fn repetitive_config() -> DecodeConfig {
+    DecodeConfig {
+        layers: 1,
+        heads: 1,
+        d_model: 8,
+        vocab: 6,
+        bandwidth: 1,
+        kernels: vec![FeatureMap::Elu],
+        w1: 1.0,
+        w2: 0.0,
+        seed: 9,
+    }
+}
+
+#[test]
+fn ngram_draft_accepts_on_repetitive_greedy_chain() {
+    let model = Arc::new(HostDecoder::new(repetitive_config()).unwrap());
+    let mut spec = SpeculativeSession::new(
+        DecoderSession::new(model.clone()),
+        Box::<NGramDraft>::default(),
+        4,
+    );
+    let (_, plain_rows) = plain_greedy(&model, 0, 96);
+    let rows = spec_greedy(&mut spec, 0, 96);
+    assert_eq!(rows, plain_rows, "speculation must not change the chain");
+    let c = spec.take_counters();
+    assert!(c.draft_proposed > 0, "{c:?}");
+    assert!(c.draft_accepted > 0, "periodic chain must accept drafts: {c:?}");
+    assert!(c.lookahead_hits > 0, "greedy client must hit lookahead: {c:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Server-level: speculative streams through the DecodeServer scheduler
+// ---------------------------------------------------------------------------
+
+fn greedy_server_run(
+    cfg: &DecodeConfig,
+    server_cfg: DecodeServerConfig,
+    sessions: usize,
+    tokens: usize,
+) -> (Vec<Vec<i32>>, DecodeStats) {
+    let model = HostDecoder::new(cfg.clone()).unwrap();
+    let server = DecodeServer::start(model, server_cfg);
+    let client = server.client();
+    let (_lats, streams) =
+        run_greedy_sessions_collect(&client, sessions, tokens, cfg.vocab).unwrap();
+    drop(client);
+    (streams, server.shutdown())
+}
+
+/// ISSUE acceptance, server half: for both draft sources and every
+/// draft window, greedy token streams through a speculative server are
+/// bit-identical to the plain server's — *including* under a
+/// `max_resident_sessions` cap that spills and restores streams
+/// mid-speculation (snapshots are taken at committed boundaries only).
+#[test]
+fn server_speculative_streams_match_plain_even_when_capped() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu, FeatureMap::EluNeg]);
+    let (sessions, tokens) = (6usize, 10usize);
+    let (plain_streams, plain_stats) =
+        greedy_server_run(&cfg, DecodeServerConfig::default(), sessions, tokens);
+    assert_eq!(plain_stats.verify_steps, 0, "plain server must not speculate");
+
+    let draft_cfg = DecodeConfig { layers: 1, ..cfg.clone() };
+    let sources = [
+        ("ngram", SpeculationConfig::NGram),
+        ("model", SpeculationConfig::Model(draft_cfg)),
+    ];
+    for (name, speculation) in sources {
+        for window in [1usize, 2, 4, 8] {
+            for cap in [0usize, 2] {
+                let server_cfg = DecodeServerConfig {
+                    speculation: speculation.clone(),
+                    draft_window: window,
+                    max_resident_sessions: cap,
+                    max_wait: Duration::from_millis(5),
+                    ..Default::default()
+                };
+                let (streams, stats) =
+                    greedy_server_run(&cfg, server_cfg, sessions, tokens);
+                assert_eq!(
+                    streams, plain_streams,
+                    "{name} window {window} cap {cap}: tokens diverged from plain"
+                );
+                assert_eq!(stats.failed_steps, 0, "{name} w{window} c{cap}: {stats:?}");
+                assert!(
+                    stats.verify_steps > 0,
+                    "{name} w{window} c{cap}: speculative streams must verify: {stats:?}"
+                );
+                if cap > 0 {
+                    assert!(
+                        stats.resident_peak <= cap,
+                        "{name} w{window} c{cap}: {stats:?}"
+                    );
+                    assert!(
+                        stats.spills > 0 && stats.restores > 0,
+                        "{name} w{window} c{cap} must page: {stats:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// ISSUE acceptance: `DecodeStats.accept_rate > 0` with an `NGramDraft`
+/// on a repetitive corpus — through the server, using the finite-window
+/// config whose greedy chains are provably eventually periodic.
+#[test]
+fn server_ngram_accept_rate_is_positive_on_repetitive_corpus() {
+    let cfg = repetitive_config();
+    let server_cfg = DecodeServerConfig {
+        speculation: SpeculationConfig::NGram,
+        draft_window: 4,
+        max_wait: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let (_, stats) = greedy_server_run(&cfg, server_cfg, 2, 96);
+    assert!(stats.draft_proposed > 0, "{stats:?}");
+    assert!(stats.accept_rate() > 0.0, "{stats:?}");
+    assert!(stats.lookahead_hits > 0, "{stats:?}");
+    assert_eq!(stats.failed_steps, 0, "{stats:?}");
+}
+
+/// Plain and speculative streams share one scheduler: a plain stream
+/// opened on a speculative server decodes identically to one on a plain
+/// server, and explicitly requesting speculation on an Off server is a
+/// clean error.
+#[test]
+fn plain_and_speculative_streams_coexist() {
+    let cfg = tiny_config(2, &[FeatureMap::Elu]);
+    let reference = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let (plain_toks, _) = plain_greedy(&reference, 3, 12);
+
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg.clone()).unwrap(),
+        DecodeServerConfig {
+            speculation: SpeculationConfig::NGram,
+            draft_window: 4,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let spec_stream = client.open_stream().unwrap(); // server default: speculative
+    let plain_stream = client.open_stream_plain().unwrap();
+    let mut spec_tok = 3i32;
+    let mut plain_tok = 3i32;
+    for i in 0..12 {
+        let s = spec_stream.step(spec_tok).unwrap();
+        let p = plain_stream.step(plain_tok).unwrap();
+        assert_eq!(s.logits, p.logits, "step {i}");
+        spec_tok = greedy_argmax(&s.logits);
+        plain_tok = greedy_argmax(&p.logits);
+        assert_eq!(spec_tok, plain_toks[i + 1], "step {i} vs reference chain");
+    }
+    drop((spec_stream, plain_stream));
+    drop(client);
+    let stats = server.shutdown();
+    assert!(stats.verify_steps > 0, "{stats:?}");
+
+    // Off server: explicit speculative opens error, defaults are plain.
+    let off = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig::default(),
+    );
+    let client = off.client();
+    let err = client.open_stream_speculative().unwrap_err();
+    assert!(format!("{err:#}").contains("disabled"), "{err:#}");
+    let stream = client.open_stream().unwrap();
+    stream.step(1).unwrap();
+    drop(stream);
+    drop(client);
+    let stats = off.shutdown();
+    assert_eq!(stats.verify_steps, 0);
+}
+
+/// Spilling a speculative stream mid-lookahead snapshots only the
+/// committed boundary: restoring that snapshot into a *plain* session
+/// continues the stream bit-identically.
+#[test]
+fn committed_boundary_snapshot_restores_into_plain_session() {
+    let cfg = tiny_config(3, &[FeatureMap::Elu]);
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let twin = Arc::new(HostDecoder::new(cfg).unwrap());
+    let mut spec = SpeculativeSession::new(
+        DecoderSession::new(model.clone()),
+        Box::new(ModelDraft::new(twin)),
+        4,
+    );
+    // Drive greedily so verified lookahead is queued up.
+    let mut tok = 1i32;
+    for _ in 0..6 {
+        tok = greedy_argmax(&spec.step(tok).unwrap());
+    }
+    assert!(spec.lookahead_len() > 0, "perfect draft must queue lookahead");
+    let committed = spec.position();
+    let snap = spec.snapshot_committed().unwrap();
+    assert_eq!(spec.lookahead_len(), 0, "snapshot discards lookahead");
+
+    let mut restored = DecoderSession::restore(model.clone(), &snap).unwrap();
+    assert_eq!(restored.position(), committed);
+
+    // A reference session replays the same greedy chain from scratch.
+    let mut reference = DecoderSession::new(model);
+    let mut ref_tok = 1i32;
+    for _ in 0..committed {
+        ref_tok = greedy_argmax(&reference.step(ref_tok).unwrap());
+    }
+    assert_eq!(ref_tok, tok, "greedy chains agree at the boundary");
+
+    // All three copies continue the stream with identical logits.
+    for _ in 0..8 {
+        let a = restored.step(tok).unwrap();
+        let b = spec.step(tok).unwrap();
+        let c = reference.step(tok).unwrap();
+        assert_eq!(a, c);
+        assert_eq!(b, c);
+        tok = greedy_argmax(&a);
+    }
+}
