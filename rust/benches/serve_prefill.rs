@@ -1,0 +1,308 @@
+//! Prefill bench (system extension) — prompt ingest vs scalar replay.
+//!
+//! Time-to-first-token is where the FMM decomposition's O(N) advantage
+//! shows up in a server: a prompt can be ingested as chunked C-row
+//! stacked GEMM passes (vocab readout only on the last row) instead of
+//! N scalar steps. Three measurements:
+//!
+//! * **ingest** — single-session TTFT + tokens/sec, chunked prefill vs
+//!   scalar replay, across prompt lengths. Fails loudly if the two
+//!   paths' final logits are not bit-identical, or if prefill does not
+//!   outrun scalar replay at prompt length ≥ 256.
+//! * **chunk sweep** — prefill tokens/sec vs chunk size at a fixed
+//!   prompt length (where the GEMM-amortization sweet spot sits).
+//! * **interference** — mixed load through the `DecodeServer`: decode
+//!   streams' token latency with and without concurrent prompt ingest
+//!   under the per-round prefill budget, plus mean TTFT. The prompted
+//!   streams' greedy tokens must match a scalar-replayed reference
+//!   bit-for-bit (continuous batching may reorder work, never math).
+//!
+//!     cargo bench --bench serve_prefill                # full sizes
+//!     cargo bench --bench serve_prefill -- --quick
+//!     cargo bench --bench serve_prefill -- --prompts 64,512 --chunks 8,64
+//!
+//! Emits `reports/BENCH_prefill.json` — validated by `ci.sh --bench`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use fmmformer::attention::FeatureMap;
+use fmmformer::bench::{fmt_time, measure, save_report_json, Table};
+use fmmformer::cli::Args;
+use fmmformer::serve::decode::{
+    greedy_argmax, run_greedy_sessions, DecodeConfig, DecodeServer, DecodeServerConfig,
+    DecoderSession, HostDecoder,
+};
+use fmmformer::serve::prefill::{
+    deterministic_prompt, prefill_session, run_prompted_sessions, PROMPT_SEED,
+};
+use fmmformer::util::json::Json;
+
+/// Wider-than-default model so the bench reflects serving reality:
+/// a non-trivial vocab makes the per-token readout — the cost prefill
+/// skips — a real fraction of scalar replay.
+fn bench_config() -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 4,
+        d_model: 64,
+        vocab: 512,
+        bandwidth: 8,
+        kernels: vec![FeatureMap::Elu],
+        w1: 0.6,
+        w2: 0.9,
+        seed: 7,
+    }
+}
+
+fn percentile(sorted: &[f64], p: usize) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[(sorted.len() * p / 100).min(sorted.len() - 1)]
+}
+
+/// Scalar-replay reference: step a fresh session through the prompt
+/// token by token, returning the session and the final logits — the
+/// baseline every prefill result is pinned against, in one place.
+fn scalar_replay(
+    model: &Arc<HostDecoder>,
+    prompt: &[i32],
+) -> Result<(DecoderSession, Vec<f32>)> {
+    let mut sess = DecoderSession::new(model.clone());
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = sess.step(t)?;
+    }
+    Ok((sess, logits))
+}
+
+/// Greedy streams a prompted server run must reproduce: scalar replay
+/// of the harness's deterministic prompts + greedy continuation.
+fn reference_streams(
+    model: &Arc<HostDecoder>,
+    sessions: usize,
+    prompt_len: usize,
+    tokens: usize,
+    vocab: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let mut streams = Vec::with_capacity(sessions);
+    for s in 0..sessions {
+        let prompt = deterministic_prompt(prompt_len, vocab, PROMPT_SEED + s as u64);
+        let (mut sess, logits) = scalar_replay(model, &prompt)?;
+        let mut tok = greedy_argmax(&logits);
+        let mut chosen = vec![tok];
+        for _ in 0..tokens {
+            tok = greedy_argmax(&sess.step(tok)?);
+            chosen.push(tok);
+        }
+        streams.push(chosen);
+    }
+    Ok(streams)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick"])?;
+    let quick = args.has("quick");
+    let iters = args.usize_or("iters", if quick { 1 } else { 3 })?;
+    let default_prompts: &[&str] =
+        if quick { &["64", "256"] } else { &["64", "256", "1024"] };
+    let default_chunks: &[&str] = if quick { &["8", "32"] } else { &["8", "32", "128"] };
+    let prompts: Vec<usize> = args
+        .list_or("prompts", default_prompts)
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow::anyhow!("--prompts wants integers, got {s:?}")))
+        .collect::<Result<_>>()?;
+    let chunks: Vec<usize> = args
+        .list_or("chunks", default_chunks)
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow::anyhow!("--chunks wants integers, got {s:?}")))
+        .collect::<Result<_>>()?;
+    let decode_sessions = args.usize_or("sessions", if quick { 4 } else { 8 })?;
+    let decode_tokens = args.usize_or("tokens", if quick { 8 } else { 48 })?;
+    let prefill_sessions = args.usize_or("prefill-sessions", if quick { 2 } else { 8 })?;
+    let chunk_default = args.usize_or("chunk", 32)?;
+
+    let cfg = bench_config();
+    let vocab = cfg.vocab;
+    let model = Arc::new(HostDecoder::new(cfg.clone())?);
+    println!(
+        "prefill bench: {} layers x {} heads, d_model {}, vocab {}, chunk {chunk_default}",
+        cfg.layers, cfg.heads, cfg.d_model, cfg.vocab,
+    );
+
+    // ---- Section 1: single-session ingest, prefill vs scalar replay.
+    let mut tbl = Table::new(
+        "Prompt ingest: chunked prefill vs scalar replay (single session)",
+        &["prompt", "scalar tok/s", "prefill tok/s", "speedup", "TTFT scalar", "TTFT prefill", "exact"],
+    );
+    let mut ingest: Vec<Json> = Vec::new();
+    for &p in &prompts {
+        let prompt = deterministic_prompt(p, vocab, PROMPT_SEED);
+        let (_, scalar_logits) = scalar_replay(&model, &prompt)?;
+        let m_scalar = measure(&format!("scalar_replay_p{p}"), 1, iters, || {
+            scalar_replay(&model, &prompt)?;
+            Ok(())
+        })?;
+        let prefill_logits = {
+            let mut sess = DecoderSession::new(model.clone());
+            prefill_session(&mut sess, &prompt, chunk_default)?
+        };
+        let m_prefill = measure(&format!("prefill_p{p}"), 1, iters, || {
+            let mut sess = DecoderSession::new(model.clone());
+            prefill_session(&mut sess, &prompt, chunk_default)?;
+            Ok(())
+        })?;
+        let exact = scalar_logits == prefill_logits;
+        if !exact {
+            bail!(
+                "prompt {p}: chunked prefill diverged from scalar replay — \
+                 the stacked pass is not bit-exact"
+            );
+        }
+        let scalar_tok_s = p as f64 / m_scalar.median_s.max(1e-12);
+        let prefill_tok_s = p as f64 / m_prefill.median_s.max(1e-12);
+        if p >= 256 && prefill_tok_s <= scalar_tok_s {
+            bail!(
+                "prompt {p}: prefill ({prefill_tok_s:.0} tok/s) must outrun scalar \
+                 replay ({scalar_tok_s:.0} tok/s) at prompt length >= 256"
+            );
+        }
+        tbl.row(vec![
+            p.to_string(),
+            format!("{scalar_tok_s:.0}"),
+            format!("{prefill_tok_s:.0}"),
+            format!("{:.2}x", prefill_tok_s / scalar_tok_s.max(1e-12)),
+            fmt_time(m_scalar.median_s),
+            fmt_time(m_prefill.median_s),
+            exact.to_string(),
+        ]);
+        ingest.push(Json::obj(vec![
+            ("prompt_len", Json::Num(p as f64)),
+            ("scalar_tok_s", Json::Num(scalar_tok_s)),
+            ("prefill_tok_s", Json::Num(prefill_tok_s)),
+            ("speedup", Json::Num(prefill_tok_s / scalar_tok_s.max(1e-12))),
+            ("scalar_ttft_s", Json::Num(m_scalar.median_s)),
+            ("prefill_ttft_s", Json::Num(m_prefill.median_s)),
+            ("exact", Json::Bool(exact)),
+        ]));
+    }
+    tbl.print();
+
+    // ---- Section 2: prefill throughput vs chunk size.
+    let sweep_prompt_len = *prompts.iter().max().expect("prompts non-empty");
+    let sweep_prompt = deterministic_prompt(sweep_prompt_len, vocab, PROMPT_SEED);
+    let (_, sweep_reference) = scalar_replay(&model, &sweep_prompt)?;
+    let mut tbl = Table::new(
+        &format!("Prefill tokens/sec vs chunk size (prompt {sweep_prompt_len})"),
+        &["chunk", "tok/s", "TTFT", "exact"],
+    );
+    let mut chunk_sweep: Vec<Json> = Vec::new();
+    for &c in &chunks {
+        let logits = {
+            let mut sess = DecoderSession::new(model.clone());
+            prefill_session(&mut sess, &sweep_prompt, c)?
+        };
+        let exact = logits == sweep_reference;
+        if !exact {
+            bail!("chunk {c}: prefill diverged from scalar replay");
+        }
+        let m = measure(&format!("prefill_chunk{c}"), 1, iters, || {
+            let mut sess = DecoderSession::new(model.clone());
+            prefill_session(&mut sess, &sweep_prompt, c)?;
+            Ok(())
+        })?;
+        let tok_s = sweep_prompt_len as f64 / m.median_s.max(1e-12);
+        tbl.row(vec![
+            c.to_string(),
+            format!("{tok_s:.0}"),
+            fmt_time(m.median_s),
+            exact.to_string(),
+        ]);
+        chunk_sweep.push(Json::obj(vec![
+            ("chunk", Json::Num(c as f64)),
+            ("tok_s", Json::Num(tok_s)),
+            ("ttft_s", Json::Num(m.median_s)),
+            ("exact", Json::Bool(exact)),
+        ]));
+    }
+    tbl.print();
+
+    // ---- Section 3: decode-latency interference under mixed load.
+    let mix_prompt_len = if quick { 64 } else { 256 };
+    let server_cfg = DecodeServerConfig::default();
+
+    // Baseline: decode-only traffic.
+    let server = DecodeServer::start(HostDecoder::new(cfg.clone())?, server_cfg.clone());
+    let client = server.client();
+    let mut base_lats = run_greedy_sessions(&client, decode_sessions, decode_tokens, vocab)?;
+    drop(client);
+    server.shutdown();
+    base_lats.sort_by(f64::total_cmp);
+
+    // Mixed: the same decode traffic while prompts ingest concurrently.
+    let server = DecodeServer::start(HostDecoder::new(cfg.clone())?, server_cfg);
+    let client = server.client();
+    let decode_client = client.clone();
+    let decode_thread = std::thread::spawn(move || {
+        run_greedy_sessions(&decode_client, decode_sessions, decode_tokens, vocab)
+    });
+    let prompted =
+        run_prompted_sessions(&client, prefill_sessions, mix_prompt_len, 4, vocab)?;
+    let mut mixed_lats = decode_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("decode thread panicked"))??;
+    drop(client);
+    let stats = server.shutdown();
+    mixed_lats.sort_by(f64::total_cmp);
+
+    let reference =
+        reference_streams(&model, prefill_sessions, mix_prompt_len, 4, vocab)?;
+    if prompted.streams != reference {
+        bail!(
+            "mixed-load prompted streams diverged from scalar-replay reference — \
+             continuous batching must never change a stream's tokens"
+        );
+    }
+    let mean_ttft = stats.mean_ttft();
+    println!(
+        "\ninterference ({decode_sessions} decode streams x {decode_tokens} tokens, \
+         {prefill_sessions} prompts x {mix_prompt_len} tokens):\n  \
+         decode p50 {} -> {}   p95 {} -> {}   mean TTFT {}   \
+         ({} prefill chunks, {} prompt tokens)",
+        fmt_time(percentile(&base_lats, 50)),
+        fmt_time(percentile(&mixed_lats, 50)),
+        fmt_time(percentile(&base_lats, 95)),
+        fmt_time(percentile(&mixed_lats, 95)),
+        fmt_time(mean_ttft),
+        stats.prefill_chunks,
+        stats.prefill_tokens,
+    );
+    let interference = Json::obj(vec![
+        ("decode_sessions", Json::Num(decode_sessions as f64)),
+        ("decode_tokens", Json::Num(decode_tokens as f64)),
+        ("prefill_sessions", Json::Num(prefill_sessions as f64)),
+        ("prompt_len", Json::Num(mix_prompt_len as f64)),
+        ("decode_p50_baseline_s", Json::Num(percentile(&base_lats, 50))),
+        ("decode_p95_baseline_s", Json::Num(percentile(&base_lats, 95))),
+        ("decode_p50_mixed_s", Json::Num(percentile(&mixed_lats, 50))),
+        ("decode_p95_mixed_s", Json::Num(percentile(&mixed_lats, 95))),
+        ("mean_ttft_s", Json::Num(mean_ttft)),
+        ("prefill_tokens", Json::Num(stats.prefill_tokens as f64)),
+        ("prefill_chunks", Json::Num(stats.prefill_chunks as f64)),
+        ("exact_vs_reference", Json::Bool(true)),
+    ]);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_prefill")),
+        ("d_model", Json::Num(cfg.d_model as f64)),
+        ("vocab", Json::Num(cfg.vocab as f64)),
+        ("chunk_default", Json::Num(chunk_default as f64)),
+        ("ingest", Json::Arr(ingest)),
+        ("chunk_sweep", Json::Arr(chunk_sweep)),
+        ("interference", interference),
+    ]);
+    let path = save_report_json("BENCH_prefill.json", &doc)?;
+    println!("machine-readable -> {path:?}");
+    Ok(())
+}

@@ -67,8 +67,44 @@ for run in doc["runs"]:
             exit 1
         fi
     fi
+    echo "== bench smoke: serve_prefill (tiny) =="
+    # Includes a 256-token prompt so the acceptance invariant (prefill
+    # tok/s > scalar replay tok/s at prompt >= 256) is exercised; the
+    # bench itself fails on any prefill/scalar bit-divergence.
+    # --iters 3: the prefill>scalar gate is a timing median — a single
+    # sample would let one descheduling spike flake the whole gate.
+    FMM_REPORTS="$reports" cargo bench --bench serve_prefill -- \
+        --quick --prompts 32,256 --chunks 8,32 --sessions 4 --tokens 8 \
+        --prefill-sessions 2 --iters 3
+    validate_json "$reports/BENCH_prefill.json"
+    if command -v python3 >/dev/null 2>&1; then
+        if ! python3 -c '
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["bench"] == "serve_prefill"
+for run in doc["ingest"]:
+    for key in ("prompt_len", "scalar_tok_s", "prefill_tok_s", "speedup",
+                "prefill_ttft_s", "exact"):
+        assert key in run, key
+    assert run["exact"] is True
+    if run["prompt_len"] >= 256:
+        assert run["prefill_tok_s"] > run["scalar_tok_s"], "prefill slower than scalar"
+for run in doc["chunk_sweep"]:
+    for key in ("chunk", "tok_s", "exact"):
+        assert key in run, key
+    assert run["exact"] is True
+mix = doc["interference"]
+for key in ("decode_p95_baseline_s", "decode_p95_mixed_s", "mean_ttft_s",
+            "prefill_tokens", "exact_vs_reference"):
+    assert key in mix, key
+assert mix["exact_vs_reference"] is True
+' "$reports/BENCH_prefill.json"; then
+            echo "bench smoke FAILED: BENCH_prefill.json missing keys or invariants"
+            exit 1
+        fi
+    fi
     echo "bench smoke passed: $reports/BENCH_decode.json $reports/BENCH_paging.json \
-$reports/BENCH_speculative.json"
+$reports/BENCH_speculative.json $reports/BENCH_prefill.json"
     exit 0
 fi
 

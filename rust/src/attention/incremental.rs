@@ -213,6 +213,36 @@ impl FmmDecodeState {
         }
     }
 
+    /// Advance this state through a chronological window of stacked
+    /// rows — the per-head half of a chunked prefill / verify pass.
+    ///
+    /// `q`/`k` stack `n = q.len() / d` rows (row-major, contiguous),
+    /// `v` and `out` stack `n` `dv`-rows. Row `t` of `out` receives
+    /// exactly what `step_into(q_t, k_t, v_t, ..)` would produce at that
+    /// point: the window advances through the *same scalar recurrence in
+    /// the same token order*, so the result is bit-identical to `n`
+    /// scalar steps by construction (pinned by a test anyway, so a
+    /// future reordering optimization cannot silently change outputs).
+    /// The chunk-level win lives in the caller: every row-local op
+    /// around attention (projections, MLP, readout) runs as one `n`-row
+    /// GEMM instead of `n` GEMVs ([`crate::serve::decode`]).
+    pub fn step_window_into(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(q.len() % d, 0, "q window width");
+        let n = q.len() / d;
+        assert_eq!(k.len(), n * d, "k window width");
+        assert_eq!(v.len(), n * dv, "v window width");
+        assert_eq!(out.len(), n * dv, "out window width");
+        for t in 0..n {
+            self.step_into(
+                &q[t * d..(t + 1) * d],
+                &k[t * d..(t + 1) * d],
+                &v[t * dv..(t + 1) * dv],
+                &mut out[t * dv..(t + 1) * dv],
+            );
+        }
+    }
+
     /// Approximate bytes held by this state — constant in sequence
     /// length (serving capacity planning).
     pub fn state_bytes(&self) -> usize {
@@ -556,6 +586,44 @@ mod tests {
                 }
             }
             assert!(batched.iter().all(|s| s.position() == 12));
+        }
+    }
+
+    #[test]
+    fn step_window_is_bit_identical_to_scalar_steps() {
+        // Window sizes straddling the bandwidth, applied mid-stream so
+        // the ring is part-filled, exactly full, and wrapped.
+        let (q, k, v) = rand_qkv(48, 5, 3, 11);
+        let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+        for bw in [0usize, 2, 7] {
+            for warm in [0usize, 3, bw + 1] {
+                for win in [1usize, 2, bw + 1, 13] {
+                    let mut scalar = FmmDecodeState::new(5, 3, bw, &kernels, 0.6, 0.9);
+                    let mut windowed = FmmDecodeState::new(5, 3, bw, &kernels, 0.6, 0.9);
+                    for t in 0..warm {
+                        let a = scalar.step(q.row(t), k.row(t), v.row(t));
+                        let b = windowed.step(q.row(t), k.row(t), v.row(t));
+                        assert_eq!(a, b);
+                    }
+                    let (lo, hi) = (warm, (warm + win).min(48));
+                    let mut out = vec![0.0f32; (hi - lo) * 3];
+                    windowed.step_window_into(
+                        &q.data()[lo * 5..hi * 5],
+                        &k.data()[lo * 5..hi * 5],
+                        &v.data()[lo * 3..hi * 3],
+                        &mut out,
+                    );
+                    for t in lo..hi {
+                        let want = scalar.step(q.row(t), k.row(t), v.row(t));
+                        assert_eq!(
+                            &out[(t - lo) * 3..(t - lo + 1) * 3],
+                            &want[..],
+                            "bw {bw} warm {warm} win {win} t {t}"
+                        );
+                    }
+                    assert_eq!(windowed.position(), scalar.position());
+                }
+            }
         }
     }
 

@@ -31,6 +31,7 @@
 //! | [`train`] | training/eval loops, metrics, checkpoints |
 //! | [`serve`] | request router + dynamic batcher (thread-based) |
 //! | [`serve::decode`] | session-based streaming decode server (incremental engine) |
+//! | [`serve::prefill`] | chunked prompt ingest: stacked-GEMM prefill + continuous-batching admission queue |
 //! | [`serve::speculative`] | speculative decoding: draft-propose / verify-accept on checkpointed O(1) state |
 //! | [`analysis`] | attention-map dumps, rank histograms, heatmaps |
 //! | [`bench`] | measurement harness (offline substitute for `criterion`) |

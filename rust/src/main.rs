@@ -56,6 +56,7 @@ fn run() -> Result<()> {
                 "decode-demo: [--sessions N] [--tokens N] [--layers N] [--heads N] \
                  [--d-model N] [--bandwidth K] [--kernels elu,elu_neg,tanh] [--max-wait-ms T] \
                  [--max-resident N] [--spill-dir DIR] \
+                 [--prompt-len N [--prefill-chunk C] [--prefill-budget N]] \
                  [--speculate [--draft-window K] [--draft ngram|model:LxHxD]]"
             );
             Ok(())
@@ -213,9 +214,13 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 /// exactness vs the O(N²) batch forward. `--max-resident N` caps how
 /// many sessions stay in RAM (idle streams page out to a session store
 /// — in-memory snapshots by default, one file per stream under
-/// `--spill-dir`). `--speculate` turns every stream speculative:
-/// `--draft-window K` tokens are proposed per step by `--draft` (the
-/// stream's own n-gram history, or a smaller draft model `model:LxHxD`)
+/// `--spill-dir`). `--prompt-len N` opens every stream with an N-token
+/// prompt ingested through the chunked prefill path (`--prefill-chunk`
+/// tokens per stacked pass, `--prefill-budget` prompt tokens per
+/// scheduler round) and reports time-to-first-token. `--speculate`
+/// turns every stream speculative: `--draft-window K` tokens are
+/// proposed per step by `--draft` (the stream's own n-gram history —
+/// primed with the prompt — or a smaller draft model `model:LxHxD`)
 /// and verified as one stacked step — tokens are bit-identical to the
 /// plain run, only the speed changes.
 fn cmd_decode_demo(args: &Args) -> Result<()> {
@@ -255,6 +260,8 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         max_resident_sessions: args.usize_or("max-resident", 0)?,
         speculation,
         draft_window: args.usize_or("draft-window", 4)?,
+        prefill_chunk: args.usize_or("prefill-chunk", 32)?,
+        prefill_budget: args.usize_or("prefill-budget", 256)?,
     };
     let server = match args.get("spill-dir") {
         Some(dir) => DecodeServer::start_with_store(
@@ -271,30 +278,59 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         fmmformer::serve::decode::probe_exactness(&client, &batch, &probe)?;
     println!("incremental vs batch logits over {} tokens: max |diff| {max_diff:.2e}", probe.len());
 
-    // Closed-loop greedy decoding across concurrent sessions.
+    // Closed-loop greedy decoding across concurrent sessions; with
+    // --prompt-len every stream first ingests a prompt through the
+    // chunked prefill path.
+    let prompt_len = args.usize_or("prompt-len", 0)?;
     let t0 = std::time::Instant::now();
-    let mut lats = fmmformer::serve::decode::run_greedy_sessions(
-        &client, sessions, tokens, vocab,
-    )?;
+    let (mut lats, mut ttfts) = if prompt_len > 0 {
+        let run = fmmformer::serve::prefill::run_prompted_sessions(
+            &client, sessions, prompt_len, tokens, vocab,
+        )?;
+        (run.step_latencies, run.ttfts)
+    } else {
+        let lats = fmmformer::serve::decode::run_greedy_sessions(
+            &client, sessions, tokens, vocab,
+        )?;
+        (lats, Vec::new())
+    };
     let wall = t0.elapsed().as_secs_f64();
     lats.sort_by(f64::total_cmp);
+    ttfts.sort_by(f64::total_cmp);
     let stats = server.shutdown();
-    if lats.is_empty() {
+    if lats.is_empty() && ttfts.is_empty() {
         println!("no tokens decoded (sessions={sessions} tokens={tokens})");
         return Ok(());
     }
-    println!(
-        "{} sessions x {} tokens in {wall:.2}s -> {:.0} tok/s | p50 {} p95 {} | \
-         {} micro-batches, mean {:.1} steps/batch, {} failed steps",
-        sessions,
-        tokens,
-        lats.len() as f64 / wall,
-        bench::fmt_time(lats[lats.len() / 2]),
-        bench::fmt_time(lats[lats.len() * 95 / 100]),
-        stats.micro_batches,
-        stats.mean_micro_batch(),
-        stats.failed_steps,
-    );
+    if !lats.is_empty() {
+        // With prompts in play the wall clock includes ingest, so the
+        // rate is end-to-end — not comparable to a promptless run.
+        let rate_note =
+            if prompt_len > 0 { " end-to-end (wall includes prompt ingest)" } else { "" };
+        println!(
+            "{} sessions x {} tokens in {wall:.2}s -> {:.0} tok/s{rate_note} | \
+             p50 {} p95 {} | {} micro-batches, mean {:.1} steps/batch, {} failed steps",
+            sessions,
+            tokens,
+            lats.len() as f64 / wall,
+            bench::fmt_time(lats[lats.len() / 2]),
+            bench::fmt_time(lats[lats.len() * 95 / 100]),
+            stats.micro_batches,
+            stats.mean_micro_batch(),
+            stats.failed_steps,
+        );
+    }
+    if stats.prefills > 0 {
+        println!(
+            "prefill: {} prompts ({} tokens in {} chunks) | TTFT p50 {} p95 {} mean {}",
+            stats.prefills,
+            stats.prefill_tokens,
+            stats.prefill_chunks,
+            bench::fmt_time(ttfts[ttfts.len() / 2]),
+            bench::fmt_time(ttfts[ttfts.len() * 95 / 100]),
+            bench::fmt_time(stats.mean_ttft()),
+        );
+    }
     println!(
         "batched micro-steps: {:.0}% of steps via step_many ({} calls, mean width {:.1})",
         stats.batched_fraction() * 100.0,

@@ -37,6 +37,11 @@
 //!   [`DecoderSession::checkpoint`]/[`DecoderSession::rollback`] pair,
 //!   alongside plain streams on the same scheduler. Speculation is
 //!   throughput-only: token streams stay bit-identical to plain greedy.
+//! * Prompted streams — [`DecodeClient::open_stream_with_prompt`]
+//!   admits a stream with a pending prompt; the scheduler ingests it in
+//!   chunked stacked passes ([`super::prefill`]) interleaved with
+//!   decode rounds under `DecodeServerConfig::prefill_budget`, so TTFT
+//!   rides GEMM throughput while decode latency stays bounded.
 //!
 //! Everything here is pure host Rust — no PJRT — so the serving
 //! architecture is exercised end-to-end by `cargo test` even where the
@@ -56,6 +61,7 @@ use crate::kernel::{self, PackedMat};
 use crate::rng::Pcg64;
 use crate::runtime::checkpoint::Leaf;
 use crate::runtime::manifest::Dtype;
+use crate::serve::prefill::{self, PendingPrefill, PrefillOut, PrefillQueue};
 use crate::serve::session_store::{self, MemStore, SessionStore};
 use crate::serve::speculative::{SpecFactory, SpeculationConfig, SpeculativeSession};
 use crate::tensor::Tensor;
@@ -480,6 +486,40 @@ impl DecoderSession {
         self.pos = ckpt.pos;
         Ok(())
     }
+
+    /// Ingest one prompt chunk as a single stacked pass — the prefill
+    /// primitive ([`super::prefill`] owns the chunking loop and the
+    /// scheduler bookkeeping around it).
+    ///
+    /// The whole chunk runs as `C`-row prepacked GEMMs over the shared
+    /// [`stacked_hidden`] spine; with `emit_logits` false the vocab
+    /// readout — the widest GEMM in the model — is skipped entirely,
+    /// which is what lets prompt ingest outrun scalar replay (a scalar
+    /// [`step`](Self::step) pays the readout on every token). With
+    /// `emit_logits` true, the *last* row's logits are returned: RMS
+    /// norm is row-local and the prepacked readout reduces every row
+    /// identically at any batch width, so that row is bit-identical to
+    /// what `step(tokens[C-1])` would have returned at that point.
+    ///
+    /// An empty chunk is a no-op (`Ok(None)`); any out-of-vocab token
+    /// fails the call before any state is touched.
+    pub fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        emit_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        if tokens.is_empty() {
+            return Ok(None);
+        }
+        let model = self.model.clone();
+        let x = stacked_hidden(self, tokens)?;
+        if !emit_logits {
+            return Ok(None);
+        }
+        let d = model.config().d_model;
+        let last = Tensor::new(&[1, d], x.row(tokens.len() - 1).to_vec())?;
+        Ok(Some(mm(&rms_norm(&last), &model.w_out)?.into_data()))
+    }
 }
 
 /// Greedy (argmax) token choice over a logits row — NaN-safe, single
@@ -492,6 +532,64 @@ pub fn greedy_argmax(logits: &[f32]) -> i32 {
         .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0) as i32
+}
+
+/// Drive a stacked multi-token pass through one session *without* the
+/// vocab readout: embed the whole window, run every transformer block
+/// as `n`-row prepacked GEMMs while the per-head attention states
+/// advance chronologically ([`FmmDecodeState::step_window_into`]), and
+/// return the final hidden rows (pre-final-RMS-norm). Shared spine of
+/// [`verify_window`] (which reads out logits for every row) and
+/// [`DecoderSession::prefill_chunk`] (which reads out at most the last
+/// row) — the two can never drift because this is the only stacked
+/// forward in the crate.
+///
+/// Any out-of-vocab token fails the call before any state is touched.
+fn stacked_hidden(sess: &mut DecoderSession, tokens: &[i32]) -> Result<Tensor> {
+    let n = tokens.len();
+    let model = sess.model.clone();
+    let cfg = model.config();
+    let d = cfg.d_model;
+    let dh = d / cfg.heads;
+    // Embed the whole window first: an invalid token errors here, before
+    // any attention state has advanced.
+    let mut x = Tensor::zeros(&[n, d]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let row = model.embed_row(tok)?;
+        x.data_mut()[i * d..(i + 1) * d].copy_from_slice(row.data());
+    }
+    for l in 0..cfg.layers {
+        let states = &mut sess.states[l];
+        x = model.block(l, &x, |q, k, v| {
+            // Per-head column panels, scratch-backed (cf. `step_many`):
+            // gather the head's columns contiguously, advance the state
+            // through the whole window, scatter the outputs back. The
+            // gather costs O(n·d) copies against the block's O(n·d²)
+            // math; contiguous windows are what a future cross-stream
+            // chunk batch (ROADMAP) would feed to a wide kernel.
+            let mut a = Tensor::zeros(&[n, d]);
+            let mut qh = kernel::scratch(n * dh);
+            let mut kh = kernel::scratch(n * dh);
+            let mut vh = kernel::scratch(n * dh);
+            let mut oh = kernel::scratch(n * dh);
+            for (head, st) in states.iter_mut().enumerate() {
+                let lo = head * dh;
+                for t in 0..n {
+                    qh[t * dh..(t + 1) * dh].copy_from_slice(&q.row(t)[lo..lo + dh]);
+                    kh[t * dh..(t + 1) * dh].copy_from_slice(&k.row(t)[lo..lo + dh]);
+                    vh[t * dh..(t + 1) * dh].copy_from_slice(&v.row(t)[lo..lo + dh]);
+                }
+                st.step_window_into(&qh, &kh, &vh, &mut oh);
+                for t in 0..n {
+                    a.data_mut()[t * d + lo..t * d + lo + dh]
+                        .copy_from_slice(&oh[t * dh..(t + 1) * dh]);
+                }
+            }
+            Ok(a)
+        })?;
+    }
+    sess.pos += n;
+    Ok(x)
 }
 
 /// Drive a multi-token window through one session as a single stacked
@@ -515,35 +613,7 @@ pub fn verify_window(sess: &mut DecoderSession, tokens: &[i32]) -> Result<Vec<Ve
         return Ok(Vec::new());
     }
     let model = sess.model.clone();
-    let cfg = model.config();
-    let d = cfg.d_model;
-    let dh = d / cfg.heads;
-    // Embed the whole window first: an invalid token errors here, before
-    // any attention state has advanced.
-    let mut x = Tensor::zeros(&[n, d]);
-    for (i, &tok) in tokens.iter().enumerate() {
-        let row = model.embed_row(tok)?;
-        x.data_mut()[i * d..(i + 1) * d].copy_from_slice(row.data());
-    }
-    for l in 0..cfg.layers {
-        let states = &mut sess.states[l];
-        x = model.block(l, &x, |q, k, v| {
-            let mut a = Tensor::zeros(&[n, d]);
-            for (head, st) in states.iter_mut().enumerate() {
-                let lo = head * dh;
-                for t in 0..n {
-                    st.step_into(
-                        &q.row(t)[lo..lo + dh],
-                        &k.row(t)[lo..lo + dh],
-                        &v.row(t)[lo..lo + dh],
-                        &mut a.data_mut()[t * d + lo..t * d + lo + dh],
-                    );
-                }
-            }
-            Ok(a)
-        })?;
-    }
-    sess.pos += n;
+    let x = stacked_hidden(sess, tokens)?;
     let logits = mm(&rms_norm(&x), &model.w_out)?;
     Ok((0..n).map(|i| logits.row(i).to_vec()).collect())
 }
@@ -770,6 +840,17 @@ pub struct DecodeServerConfig {
     /// [`verify_window`] step) per speculative miss. `0` disables
     /// speculation regardless of `speculation`.
     pub draft_window: usize,
+    /// Prompt tokens per stacked prefill pass ([`super::prefill`]):
+    /// each pending prompt ingests in chunks of at most this many
+    /// tokens, run as `C`-row prepacked GEMMs. Residency/spill
+    /// interacts with a prefilling stream only at these boundaries.
+    /// Clamped to ≥ 1.
+    pub prefill_chunk: usize,
+    /// Continuous-batching fairness knob: at most this many prompt
+    /// tokens are ingested per scheduler round, so queued decode steps
+    /// never wait behind more than one budget's worth of prefill work.
+    /// `0` means no throttle (each round drains every pending prompt).
+    pub prefill_budget: usize,
 }
 
 impl Default for DecodeServerConfig {
@@ -781,6 +862,8 @@ impl Default for DecodeServerConfig {
             max_resident_sessions: 0,
             speculation: SpeculationConfig::Off,
             draft_window: 4,
+            prefill_chunk: 32,
+            prefill_budget: 256,
         }
     }
 }
@@ -838,6 +921,19 @@ pub struct DecodeStats {
     /// Speculative steps answered straight from verified lookahead
     /// (zero model compute on the step).
     pub lookahead_hits: usize,
+    /// Prompts fully ingested through the chunked prefill path.
+    pub prefills: usize,
+    /// Prompts whose ingest failed (invalid restore mid-prompt, lost
+    /// state) — the stream disconnects, the opener gets the error.
+    pub failed_prefills: usize,
+    /// Prompt tokens ingested via stacked prefill passes.
+    pub prefill_tokens: usize,
+    /// Stacked prefill passes run (each ≤ `prefill_chunk` tokens).
+    pub prefill_chunks: usize,
+    /// Cumulative time-to-first-token across completed prefills:
+    /// admission (`open_stream_with_prompt` submit) → final-token
+    /// logits delivered.
+    pub ttft_secs: f64,
 }
 
 impl DecodeStats {
@@ -887,6 +983,15 @@ impl DecodeStats {
             self.draft_accepted as f64 / self.draft_proposed as f64
         }
     }
+
+    /// Mean time-to-first-token over completed prefills (0 if none).
+    pub fn mean_ttft(&self) -> f64 {
+        if self.prefills == 0 {
+            0.0
+        } else {
+            self.ttft_secs / self.prefills as f64
+        }
+    }
 }
 
 enum DecodeMsg {
@@ -896,6 +1001,18 @@ enum DecodeMsg {
         /// draft source). `Some(b)`: the client forced plain/speculative.
         speculative: Option<bool>,
         reply: Sender<Result<()>>,
+    },
+    /// Admit a stream with a pending prompt: the session registers
+    /// immediately, the prompt ingests in chunked stacked passes
+    /// interleaved with decode rounds, and the reply delivers the final
+    /// prompt token's logits once ingest completes (or the admission /
+    /// ingest error).
+    OpenWithPrompt {
+        session: u64,
+        speculative: Option<bool>,
+        prompt: Vec<i32>,
+        submitted: Instant,
+        reply: Sender<Result<PrefillOut>>,
     },
     Step(StepReq),
     Close { session: u64 },
@@ -944,6 +1061,63 @@ impl DecodeClient {
             .map_err(|_| anyhow!("decode server shut down: cannot open stream"))?;
         rx.recv().map_err(|_| anyhow!("decode server shut down during open"))??;
         Ok(DecodeStream { session, tx: self.tx.clone() })
+    }
+
+    /// Open a stream pre-loaded with `prompt`: the prompt ingests
+    /// server-side in chunked stacked passes ([`super::prefill`]) at
+    /// GEMM throughput — not N scalar steps — interleaved with other
+    /// streams' decode rounds under the server's prefill budget. Blocks
+    /// until ingest completes and returns the stream (positioned after
+    /// the whole prompt) plus the final prompt token's logits; feed
+    /// `greedy_argmax(&out.logits)` to [`DecodeStream::step`] to start
+    /// decoding. The stream kind follows the server default (cf.
+    /// [`open_stream`](Self::open_stream)).
+    pub fn open_stream_with_prompt(
+        &self,
+        prompt: &[i32],
+    ) -> Result<(DecodeStream, PrefillOut)> {
+        self.open_with_prompt(None, prompt)
+    }
+
+    /// Prompted open that decodes plainly even on a speculative server.
+    pub fn open_stream_with_prompt_plain(
+        &self,
+        prompt: &[i32],
+    ) -> Result<(DecodeStream, PrefillOut)> {
+        self.open_with_prompt(Some(false), prompt)
+    }
+
+    /// Prompted open of an explicitly speculative stream; errors if the
+    /// server has no draft source configured. The draft source is
+    /// primed with the prompt history during ingest, so drafts can
+    /// propose (and verify) from the very first generated token.
+    pub fn open_stream_with_prompt_speculative(
+        &self,
+        prompt: &[i32],
+    ) -> Result<(DecodeStream, PrefillOut)> {
+        self.open_with_prompt(Some(true), prompt)
+    }
+
+    fn open_with_prompt(
+        &self,
+        speculative: Option<bool>,
+        prompt: &[i32],
+    ) -> Result<(DecodeStream, PrefillOut)> {
+        let session = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(DecodeMsg::OpenWithPrompt {
+                session,
+                speculative,
+                prompt: prompt.to_vec(),
+                submitted: Instant::now(),
+                reply,
+            })
+            .map_err(|_| anyhow!("decode server shut down: cannot open stream"))?;
+        let out = rx
+            .recv()
+            .map_err(|_| anyhow!("decode server shut down during prefill"))??;
+        Ok((DecodeStream { session, tx: self.tx.clone() }, out))
     }
 }
 
@@ -1268,45 +1442,73 @@ fn decode_scheduler(
     // streams keep serving.
     let spec = SpecFactory::build(&cfg, model.config()).map_err(|e| format!("{e:#}"));
     let mut res = Residency::new(store, cfg.max_resident_sessions, spec);
+    let mut prefills = PrefillQueue::new(cfg.prefill_chunk);
     loop {
         let mut steps: Vec<StepReq> = Vec::new();
         let mut closes: Vec<u64> = Vec::new();
         let mut exit = false;
 
-        // Block for the first message of a micro-batch.
-        match rx.recv() {
-            Ok(msg) => {
-                handle_msg(msg, &model, &mut res, &mut steps, &mut closes, &mut exit, &stats)
-            }
-            Err(_) => {
-                // All clients gone.
-                res.sync_stats(&mut stats.lock().unwrap());
-                return;
-            }
-        }
-        // Fill the micro-batch until the window closes.
-        let deadline = Instant::now() + cfg.max_wait;
-        while !exit && steps.len() < cfg.max_steps {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
+        // Block for the first message of a micro-batch — but only when
+        // no prompt ingest is pending; with prefill work queued the
+        // round must proceed even if the channel stays quiet.
+        if prefills.is_empty() {
+            match rx.recv() {
                 Ok(msg) => handle_msg(
                     msg,
                     &model,
                     &mut res,
+                    &mut prefills,
                     &mut steps,
                     &mut closes,
                     &mut exit,
                     &stats,
                 ),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    exit = true;
-                    break;
+                Err(_) => {
+                    // All clients gone.
+                    res.sync_stats(&mut stats.lock().unwrap());
+                    return;
                 }
             }
+        }
+        // Fill the micro-batch until the window closes. With prefill
+        // work pending, drain whatever is already queued without
+        // waiting: decode steps still ride batched rounds, but prompt
+        // chunks never idle behind the fill window.
+        let deadline = Instant::now() + cfg.max_wait;
+        while !exit && steps.len() < cfg.max_steps {
+            let msg = if prefills.is_empty() {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(msg) => msg,
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        exit = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(msg) => msg,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        exit = true;
+                        break;
+                    }
+                }
+            };
+            handle_msg(
+                msg,
+                &model,
+                &mut res,
+                &mut prefills,
+                &mut steps,
+                &mut closes,
+                &mut exit,
+                &stats,
+            );
         }
 
         // Execute the drained steps: partition the micro-batch into
@@ -1343,18 +1545,116 @@ fn decode_scheduler(
             s.exec_secs += t0.elapsed().as_secs_f64();
             res.sync_stats(&mut s);
         }
+        // Prefill phase: ingest pending prompt chunks under the
+        // per-round token budget, interleaved with the decode rounds
+        // above (continuous batching — decode latency stays bounded by
+        // the budget while prompts ingest at GEMM throughput). Skipped
+        // once shutdown is requested: queued *steps* are served first
+        // (they are already paid for), but mid-ingest prompts fail
+        // uniformly below — whatever the budget setting — instead of
+        // racing the sentinel.
+        if !exit && !prefills.is_empty() {
+            let budget =
+                if cfg.prefill_budget == 0 { usize::MAX } else { cfg.prefill_budget };
+            let t0 = Instant::now();
+            let mut tally = PrefillTally::default();
+            run_prefills(&model, &mut res, &mut prefills, budget, &mut tally);
+            let mut s = stats.lock().unwrap();
+            s.prefills += tally.completed;
+            s.failed_prefills += tally.failed;
+            s.prefill_tokens += tally.tokens;
+            s.prefill_chunks += tally.chunks;
+            s.ttft_secs += tally.ttft_secs;
+            s.sessions_closed += tally.disconnected;
+            s.exec_secs += t0.elapsed().as_secs_f64();
+            res.sync_stats(&mut s);
+        }
         // Closes apply only after the window's steps ran: per-sender
         // FIFO means any step a client submitted before dropping its
         // stream is already in `steps`, so a pipelined step_async
-        // followed by drop still gets its logits.
+        // followed by drop still gets its logits. A close racing a
+        // still-pending prefill cancels the ingest too (the opener sees
+        // a dropped reply).
         for session in closes {
+            prefills.cancel(session);
             if res.close(session) {
                 stats.lock().unwrap().sessions_closed += 1;
             }
         }
         if exit {
+            prefills.fail_all("decode server shut down during prefill");
             res.sync_stats(&mut stats.lock().unwrap());
             return;
+        }
+    }
+}
+
+/// Per-round prefill execution counters (folded into [`DecodeStats`]).
+#[derive(Default)]
+struct PrefillTally {
+    completed: usize,
+    failed: usize,
+    tokens: usize,
+    chunks: usize,
+    ttft_secs: f64,
+    /// Streams force-closed because their ingest failed.
+    disconnected: usize,
+}
+
+/// Ingest pending prompt chunks, oldest prompt first, until the round's
+/// token budget is spent. Each chunk is one stacked
+/// [`DecoderSession::prefill_chunk`] pass; residency interacts only at
+/// these chunk boundaries — a spilled prefilling stream restores on its
+/// next chunk (pinning only itself, so restores can evict idle
+/// streams), and between chunks it is an ordinary LRU citizen. A chunk
+/// failure (lost snapshot, untrusted state) fails that prompt's open
+/// and disconnects only that stream.
+fn run_prefills(
+    model: &Arc<HostDecoder>,
+    res: &mut Residency,
+    queue: &mut PrefillQueue,
+    budget: usize,
+    tally: &mut PrefillTally,
+) {
+    let mut budget = budget;
+    while budget > 0 {
+        let Some(plan) = queue.front_plan(budget) else { break };
+        let id = plan.session;
+        let ready = match res.ensure_resident(id, model, &[id]) {
+            Ok(true) => Ok(()),
+            Ok(false) => Err(anyhow!("unknown or closed session {id}")),
+            Err(e) => Err(anyhow!("restoring spilled session {id}: {e:#}")),
+        };
+        let result = ready.and_then(|()| {
+            let tokens = queue.front_tokens(&plan);
+            match res.resident.get_mut(&id) {
+                Some(Slot::Plain(sess)) => sess.prefill_chunk(tokens, plan.is_last),
+                Some(Slot::Spec(spec)) => spec.prefill_chunk(tokens, plan.is_last),
+                None => Err(anyhow!("unknown or closed session {id}")),
+            }
+        });
+        match result {
+            Ok(logits) => {
+                let took = plan.len();
+                budget -= took.min(budget);
+                tally.tokens += took;
+                tally.chunks += 1;
+                res.touch(id);
+                if plan.is_last {
+                    let logits = logits.expect("final chunk emits logits");
+                    tally.ttft_secs += queue.finish_front(logits);
+                    tally.completed += 1;
+                } else {
+                    queue.advance_front(took);
+                }
+            }
+            Err(e) => {
+                queue.fail_front(e);
+                tally.failed += 1;
+                if res.close(id) {
+                    tally.disconnected += 1;
+                }
+            }
         }
     }
 }
@@ -1658,6 +1958,7 @@ fn handle_msg(
     msg: DecodeMsg,
     model: &Arc<HostDecoder>,
     res: &mut Residency,
+    prefills: &mut PrefillQueue,
     steps: &mut Vec<StepReq>,
     closes: &mut Vec<u64>,
     exit: &mut bool,
@@ -1670,6 +1971,21 @@ fn handle_msg(
                 stats.lock().unwrap().sessions_opened += 1;
             }
             reply.send(opened).ok();
+        }
+        DecodeMsg::OpenWithPrompt { session, speculative, prompt, submitted, reply } => {
+            // Validate the whole prompt before the session exists: a
+            // bad prompt fails the open without registering anything.
+            let admitted = prefill::validate_prompt(&prompt, model.config().vocab)
+                .and_then(|()| res.open(session, model, speculative));
+            match admitted {
+                Ok(()) => {
+                    stats.lock().unwrap().sessions_opened += 1;
+                    prefills.push(PendingPrefill::new(session, prompt, submitted, reply));
+                }
+                Err(e) => {
+                    reply.send(Err(e)).ok();
+                }
+            }
         }
         // Deferred: applied after this window's steps execute, so a
         // step that was valid when submitted is never failed by a

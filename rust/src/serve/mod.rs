@@ -28,38 +28,49 @@
 //!
 //! # The `serve/` subsystem, mapped
 //!
-//! Four modules, one serving stack:
+//! Five modules, one serving stack:
 //!
 //! | module | role |
 //! |---|---|
 //! | `serve` (this file) | fixed-window request router + dynamic batcher over AOT artifacts |
 //! | [`decode`] | streaming engine: [`decode::HostDecoder`] (the model), [`decode::DecoderSession`] (O(1)/token state), the [`decode::DecodeServer`] scheduler (micro-batching, batched `step_many` rounds, the `Residency` LRU spill manager) |
+//! | [`prefill`] | chunked prompt ingest: builds session state from a full prompt in C-row stacked GEMM passes (readout skipped until the last row), admission queue + per-round token budget for continuous batching |
 //! | [`session_store`] | the spill tier: FMMS v1 self-validating snapshot codec + [`session_store::MemStore`]/[`session_store::DiskStore`] behind the [`session_store::SessionStore`] trait |
 //! | [`speculative`] | draft-propose / verify-accept lookahead over checkpoint/rollback of the O(1) state |
 //!
-//! How they connect:
+//! How they connect — each scheduler round runs a decode phase, then a
+//! budgeted prefill phase, so prompt ingest and token decode share the
+//! thread continuously instead of head-of-line blocking each other:
 //!
 //! ```text
-//!             DecodeServer scheduler (one thread)
+//!             DecodeServer scheduler (one thread), per round:
 //!   steps ──▶ rounds ──▶ waves ──▶ step_many / scalar step ── plain streams
 //!                │                 SpeculativeSession::step ── speculative
 //!                │                   │  draft (NGram | draft model)
 //!                │                   └─ verify_window + checkpoint/rollback
+//!                │
+//!   prompts ──▶ PrefillQueue ──▶ ≤ prefill_budget tokens of chunked
+//!                │               stacked passes (oldest prompt first;
+//!                │               draft sources primed as chunks land)
 //!                ▼
 //!             Residency (LRU, cap) ──spill/restore──▶ SessionStore
-//!                                    (snapshots only at committed
-//!                                     boundaries; speculative lookahead
-//!                                     is recomputed, never serialized)
+//!                                    (snapshots only at committed /
+//!                                     chunk boundaries; speculative
+//!                                     lookahead is recomputed, never
+//!                                     serialized)
 //! ```
 //!
 //! [`decode`] is the session-based streaming sibling of this module:
 //! instead of recomputing a fixed window per request it decodes token by
 //! token over [`crate::attention::FmmDecodeState`] at O(1)/token;
-//! [`session_store`] tiers its idle session state out of RAM (LRU spill
-//! to a snapshot store, transparent restore on the next token); and
-//! [`speculative`] turns the same state's cheap checkpoint/rollback
-//! into speculative decoding (draft K tokens, verify them as one
-//! stacked step, serve verified lookahead for free).
+//! [`prefill`] ingests a new stream's prompt through the same state in
+//! chunked stacked passes at GEMM throughput (bit-identical to scalar
+//! replay, reported as `DecodeStats::ttft_secs`); [`session_store`]
+//! tiers idle session state out of RAM (LRU spill to a snapshot store,
+//! transparent restore on the next token); and [`speculative`] turns
+//! the same state's cheap checkpoint/rollback into speculative decoding
+//! (draft K tokens, verify them as one stacked step, serve verified
+//! lookahead for free — with drafts primed from the prompt).
 //!
 //! PJRT handles are not `Send` (the xla crate wraps `Rc` + raw
 //! pointers), so the scheduler thread owns its *own* `Runtime` and
@@ -67,6 +78,7 @@
 //! parameter leaves, requests) crosses the channel.
 
 pub mod decode;
+pub mod prefill;
 pub mod session_store;
 pub mod speculative;
 

@@ -1,0 +1,410 @@
+//! Chunked prompt prefill — prompt ingest at GEMM throughput.
+//!
+//! Real serving traffic is prompt-dominated: a stream arrives with N
+//! tokens of context and wants its first generated token fast. Replaying
+//! the prompt through scalar [`DecoderSession::step`] costs N sequential
+//! small-GEMV steps *and* N vocab readouts — time-to-first-token grows
+//! linearly with the worst constants in the engine. The FMM
+//! decomposition already makes the attention state O(1) and
+//! chronological, so prompt ingest is exactly the stacked-pass shape
+//! [`verify_window`](super::decode::verify_window) proved out for
+//! speculation: per chunk of C tokens, run embedding + Q/K/V/O + MLP as
+//! C-row prepacked GEMMs while each per-head near-field ring + far-field
+//! moment recurrence advances chronologically
+//! ([`FmmDecodeState::step_window_into`]
+//! (crate::attention::FmmDecodeState::step_window_into)), and skip the
+//! vocab readout — the widest GEMM in the model — on every row but the
+//! prompt's last. The result is bit-identical to scalar replay (the
+//! prepacked kernels reduce every row identically at any batch width)
+//! and substantially faster.
+//!
+//! # Pieces
+//!
+//! * [`prefill_session`] — the standalone loop: chunk a prompt through
+//!   [`DecoderSession::prefill_chunk`], return the final token's logits.
+//!   Also what [`ModelDraft`](super::speculative::ModelDraft) uses to
+//!   prime its own small model with a stream's prompt.
+//! * [`PrefillQueue`] / [`PendingPrefill`] — the scheduler's
+//!   continuous-batching bookkeeping: streams admitted via
+//!   [`DecodeClient::open_stream_with_prompt`] wait here and ingest
+//!   oldest-first, at most `DecodeServerConfig::prefill_budget` tokens
+//!   per round, in chunks of `DecodeServerConfig::prefill_chunk` — so
+//!   queued decode steps interleave with prompt ingest and decode
+//!   latency stays bounded while prompts ingest at GEMM throughput.
+//!   Residency/spill touches a prefilling stream only at chunk
+//!   boundaries.
+//! * [`PrefillOut`] — what the opener receives: the final prompt
+//!   token's logits plus ingest observability (chunks, TTFT).
+//! * [`run_prompted_sessions`] — the demo/bench/test harness: N
+//!   concurrent prompted streams, deterministic prompts, greedy decode
+//!   after ingest.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::decode::{greedy_argmax, DecodeClient, DecoderSession};
+use crate::rng::Pcg64;
+
+/// Default tokens per stacked prefill pass (standalone helpers; the
+/// server takes its own `DecodeServerConfig::prefill_chunk`).
+pub const DEFAULT_PREFILL_CHUNK: usize = 32;
+
+/// Seed base for [`run_prompted_sessions`]' deterministic prompts:
+/// stream `s` prompts with [`deterministic_prompt`]`(len, vocab,
+/// PROMPT_SEED + s)`. Public so benches/tests can replay the exact
+/// prompts through a reference session.
+pub const PROMPT_SEED: u64 = 0x9e3779b9;
+
+/// Reject a prompt the decoder could never ingest — empty, or holding
+/// an out-of-vocab token — *before* any session state exists or moves.
+pub fn validate_prompt(prompt: &[i32], vocab: usize) -> Result<()> {
+    if prompt.is_empty() {
+        bail!("empty prompt: prefill needs at least one token");
+    }
+    for (i, &t) in prompt.iter().enumerate() {
+        if t < 0 || t as usize >= vocab {
+            bail!("prompt token {t} at position {i} outside vocab 0..{vocab}");
+        }
+    }
+    Ok(())
+}
+
+/// Ingest a whole prompt into `sess` in chunked stacked passes and
+/// return the final prompt token's logits — bit-identical to stepping
+/// the prompt through scalar [`DecoderSession::step`] and keeping the
+/// last row, at a fraction of the cost (C-row GEMMs, one readout).
+/// The session is left positioned after the prompt, ready to decode.
+///
+/// The prompt is validated up front: on `Err` the session is untouched.
+pub fn prefill_session(
+    sess: &mut DecoderSession,
+    prompt: &[i32],
+    chunk: usize,
+) -> Result<Vec<f32>> {
+    validate_prompt(prompt, sess.model().config().vocab)?;
+    let chunk = chunk.max(1);
+    let mut last = None;
+    let mut lo = 0;
+    while lo < prompt.len() {
+        let hi = (lo + chunk).min(prompt.len());
+        last = sess.prefill_chunk(&prompt[lo..hi], hi == prompt.len())?;
+        lo = hi;
+    }
+    Ok(last.expect("non-empty prompt emits final logits"))
+}
+
+/// What a prompted open returns once ingest completes.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    pub session: u64,
+    /// Prompt length ingested (the stream's position afterwards).
+    pub prompt_tokens: usize,
+    /// Stacked passes the ingest took (≤ ⌈prompt/chunk⌉ + budget splits).
+    pub chunks: usize,
+    /// Logits for the final prompt token — row `prompt_tokens - 1` of
+    /// the batch forward, bit-identical to scalar replay.
+    pub logits: Vec<f32>,
+    /// Time-to-first-token: admission → these logits delivered.
+    pub ttft: Duration,
+}
+
+/// One admitted-but-not-yet-ingested prompt in the scheduler.
+pub(crate) struct PendingPrefill {
+    session: u64,
+    prompt: Vec<i32>,
+    /// Tokens already ingested (chunk boundary).
+    cursor: usize,
+    /// Stacked passes run so far.
+    chunks: usize,
+    submitted: Instant,
+    reply: Sender<Result<PrefillOut>>,
+}
+
+impl PendingPrefill {
+    pub(crate) fn new(
+        session: u64,
+        prompt: Vec<i32>,
+        submitted: Instant,
+        reply: Sender<Result<PrefillOut>>,
+    ) -> PendingPrefill {
+        PendingPrefill { session, prompt, cursor: 0, chunks: 0, submitted, reply }
+    }
+}
+
+/// One planned stacked pass: tokens `lo..hi` of the front prompt.
+pub(crate) struct ChunkPlan {
+    pub(crate) session: u64,
+    lo: usize,
+    hi: usize,
+    /// This chunk finishes its prompt (so it emits the final logits).
+    pub(crate) is_last: bool,
+}
+
+impl ChunkPlan {
+    pub(crate) fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+/// FIFO queue of pending prompt ingests, consumed oldest-first — the
+/// admission half of continuous batching. Finishing the oldest prompt
+/// before starting the next minimizes mean TTFT; per-round fairness
+/// against decode traffic comes from the caller's token budget, not
+/// from interleaving prompts with each other.
+pub(crate) struct PrefillQueue {
+    pending: VecDeque<PendingPrefill>,
+    chunk: usize,
+}
+
+impl PrefillQueue {
+    /// `chunk`: tokens per stacked pass (clamped to ≥ 1).
+    pub(crate) fn new(chunk: usize) -> PrefillQueue {
+        PrefillQueue { pending: VecDeque::new(), chunk: chunk.max(1) }
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    pub(crate) fn push(&mut self, p: PendingPrefill) {
+        self.pending.push_back(p);
+    }
+
+    /// Plan the front prompt's next chunk under `budget` remaining
+    /// round tokens; `None` when the queue is empty or the budget is 0.
+    pub(crate) fn front_plan(&self, budget: usize) -> Option<ChunkPlan> {
+        let p = self.pending.front()?;
+        let len = self.chunk.min(budget).min(p.prompt.len() - p.cursor);
+        if len == 0 {
+            return None;
+        }
+        Some(ChunkPlan {
+            session: p.session,
+            lo: p.cursor,
+            hi: p.cursor + len,
+            is_last: p.cursor + len == p.prompt.len(),
+        })
+    }
+
+    /// The token slice a [`front_plan`](Self::front_plan) refers to.
+    pub(crate) fn front_tokens(&self, plan: &ChunkPlan) -> &[i32] {
+        &self.pending.front().expect("planned front exists").prompt[plan.lo..plan.hi]
+    }
+
+    /// Record a completed non-final chunk of the front prompt.
+    pub(crate) fn advance_front(&mut self, tokens: usize) {
+        let p = self.pending.front_mut().expect("planned front exists");
+        p.cursor += tokens;
+        p.chunks += 1;
+    }
+
+    /// Complete the front prompt: deliver [`PrefillOut`] to the opener
+    /// and return the TTFT in seconds (for the stats tally).
+    pub(crate) fn finish_front(&mut self, logits: Vec<f32>) -> f64 {
+        let p = self.pending.pop_front().expect("planned front exists");
+        let ttft = p.submitted.elapsed();
+        p.reply
+            .send(Ok(PrefillOut {
+                session: p.session,
+                prompt_tokens: p.prompt.len(),
+                chunks: p.chunks + 1,
+                logits,
+                ttft,
+            }))
+            .ok();
+        ttft.as_secs_f64()
+    }
+
+    /// Fail the front prompt: the opener receives `err`.
+    pub(crate) fn fail_front(&mut self, err: anyhow::Error) {
+        let p = self.pending.pop_front().expect("planned front exists");
+        p.reply.send(Err(err)).ok();
+    }
+
+    /// Drop a session's pending ingest (its reply sender with it — the
+    /// opener observes a disconnect); true if one was queued.
+    pub(crate) fn cancel(&mut self, session: u64) -> bool {
+        let before = self.pending.len();
+        self.pending.retain(|p| p.session != session);
+        before != self.pending.len()
+    }
+
+    /// Fail every pending ingest with `msg` (server shutdown).
+    pub(crate) fn fail_all(&mut self, msg: &str) {
+        for p in self.pending.drain(..) {
+            p.reply.send(Err(anyhow!("{msg}"))).ok();
+        }
+    }
+}
+
+/// Deterministic prompt for demos/benches/tests: `len` tokens drawn
+/// from `0..vocab` by a seeded PCG — two runs with the same arguments
+/// see byte-identical prompts, which is what lets bit-identity checks
+/// compare streams across chunk sizes and residency caps.
+pub fn deterministic_prompt(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..len).map(|_| rng.usize(vocab.max(1)) as i32).collect()
+}
+
+/// Aggregate result of [`run_prompted_sessions`]; per-stream vectors
+/// are in session launch order.
+pub struct PromptedRun {
+    /// One TTFT (seconds) per stream.
+    pub ttfts: Vec<f64>,
+    /// Every post-prefill decode step's latency, all streams pooled.
+    pub step_latencies: Vec<f64>,
+    /// Each stream's greedy token choices: the pick from the prefill
+    /// logits first, then one per decode step.
+    pub streams: Vec<Vec<i32>>,
+}
+
+/// Drive `sessions` concurrent streams through `client`, each opening
+/// with a deterministic `prompt_len`-token prompt and then greedy
+/// decoding `tokens` more — the mixed prefill + decode harness shared
+/// by `decode-demo --prompt-len`, `benches/serve_prefill.rs` and
+/// `tests/prefill.rs`.
+pub fn run_prompted_sessions(
+    client: &DecodeClient,
+    sessions: usize,
+    prompt_len: usize,
+    tokens: usize,
+    vocab: usize,
+) -> Result<PromptedRun> {
+    let handles: Vec<_> = (0..sessions)
+        .map(|s| {
+            let c = client.clone();
+            std::thread::spawn(move || -> Result<(f64, Vec<f64>, Vec<i32>)> {
+                let prompt = deterministic_prompt(prompt_len, vocab, PROMPT_SEED + s as u64);
+                let (stream, out) = c.open_stream_with_prompt(&prompt)?;
+                let ttft = out.ttft.as_secs_f64();
+                let mut tok = greedy_argmax(&out.logits);
+                let mut chosen = Vec::with_capacity(tokens + 1);
+                chosen.push(tok);
+                let mut lats = Vec::with_capacity(tokens);
+                for _ in 0..tokens {
+                    let o = stream.step(tok)?;
+                    lats.push(o.latency.as_secs_f64());
+                    tok = greedy_argmax(&o.logits);
+                    chosen.push(tok);
+                }
+                Ok((ttft, lats, chosen))
+            })
+        })
+        .collect();
+    let mut run = PromptedRun {
+        ttfts: Vec::with_capacity(sessions),
+        step_latencies: Vec::with_capacity(sessions * tokens),
+        streams: Vec::with_capacity(sessions),
+    };
+    for h in handles {
+        let (ttft, lats, chosen) =
+            h.join().map_err(|_| anyhow!("prompted session thread panicked"))??;
+        run.ttfts.push(ttft);
+        run.step_latencies.extend(lats);
+        run.streams.push(chosen);
+    }
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc;
+
+    use super::*;
+
+    #[test]
+    fn validate_prompt_envelope() {
+        assert!(validate_prompt(&[], 8).is_err());
+        assert!(validate_prompt(&[0, 7], 8).is_ok());
+        let err = validate_prompt(&[0, 8], 8).unwrap_err();
+        assert!(format!("{err}").contains("outside vocab"), "{err}");
+        assert!(format!("{err}").contains("position 1"), "{err}");
+        assert!(validate_prompt(&[-1], 8).is_err());
+    }
+
+    #[test]
+    fn queue_plans_chunks_under_budget() {
+        let mut q = PrefillQueue::new(4);
+        let (tx, _rx) = mpsc::channel();
+        q.push(PendingPrefill::new(7, (0..10).collect(), Instant::now(), tx));
+
+        // Full-budget plans walk 4, 4, 2 with is_last on the third.
+        let p = q.front_plan(usize::MAX).unwrap();
+        assert_eq!((p.session, p.len(), p.is_last), (7, 4, false));
+        assert_eq!(q.front_tokens(&p), &[0, 1, 2, 3]);
+        q.advance_front(p.len());
+
+        // A tight budget shrinks the chunk below the configured size.
+        let p = q.front_plan(3).unwrap();
+        assert_eq!((p.len(), p.is_last), (3, false));
+        assert_eq!(q.front_tokens(&p), &[4, 5, 6]);
+        q.advance_front(p.len());
+
+        let p = q.front_plan(usize::MAX).unwrap();
+        assert_eq!((p.len(), p.is_last), (3, true));
+        assert_eq!(q.front_tokens(&p), &[7, 8, 9]);
+        let secs = q.finish_front(vec![1.0]);
+        assert!(secs >= 0.0);
+        assert!(q.is_empty());
+        assert!(q.front_plan(usize::MAX).is_none());
+
+        // Zero budget plans nothing.
+        let (tx, _rx) = mpsc::channel();
+        q.push(PendingPrefill::new(8, vec![1], Instant::now(), tx));
+        assert!(q.front_plan(0).is_none());
+    }
+
+    #[test]
+    fn queue_delivers_completion_and_failures() {
+        let mut q = PrefillQueue::new(2);
+        let (tx, rx) = mpsc::channel();
+        q.push(PendingPrefill::new(1, vec![5, 6, 7], Instant::now(), tx));
+        let p = q.front_plan(usize::MAX).unwrap();
+        q.advance_front(p.len());
+        let p = q.front_plan(usize::MAX).unwrap();
+        assert!(p.is_last);
+        q.finish_front(vec![0.5, 0.25]);
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.session, 1);
+        assert_eq!(out.prompt_tokens, 3);
+        assert_eq!(out.chunks, 2);
+        assert_eq!(out.logits, vec![0.5, 0.25]);
+
+        let (tx, rx) = mpsc::channel();
+        q.push(PendingPrefill::new(2, vec![5], Instant::now(), tx));
+        q.fail_front(anyhow!("synthetic ingest failure"));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("synthetic"), "{err}");
+
+        // cancel drops the reply sender: the opener sees a disconnect.
+        let (tx, rx) = mpsc::channel();
+        q.push(PendingPrefill::new(3, vec![5], Instant::now(), tx));
+        assert!(q.cancel(3));
+        assert!(!q.cancel(3));
+        assert!(rx.recv().is_err());
+
+        // fail_all reaches every queued opener.
+        let (tx_a, rx_a) = mpsc::channel();
+        let (tx_b, rx_b) = mpsc::channel();
+        q.push(PendingPrefill::new(4, vec![1], Instant::now(), tx_a));
+        q.push(PendingPrefill::new(5, vec![2], Instant::now(), tx_b));
+        q.fail_all("decode server shut down during prefill");
+        for rx in [rx_a, rx_b] {
+            let err = rx.recv().unwrap().unwrap_err();
+            assert!(format!("{err}").contains("shut down"), "{err}");
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn deterministic_prompt_is_deterministic_and_in_vocab() {
+        let a = deterministic_prompt(64, 12, 9);
+        let b = deterministic_prompt(64, 12, 9);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (0..12).contains(&t)));
+        assert_ne!(a, deterministic_prompt(64, 12, 10));
+    }
+}

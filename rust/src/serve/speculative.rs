@@ -64,6 +64,7 @@ use super::decode::{
     greedy_argmax, verify_window, DecodeConfig, DecodeServerConfig, DecoderSession,
     HostDecoder, SessionCheckpoint,
 };
+use super::prefill::{prefill_session, DEFAULT_PREFILL_CHUNK};
 
 /// Server-wide speculation mode ([`DecodeServerConfig::speculation`]).
 #[derive(Debug, Clone, Default)]
@@ -119,6 +120,20 @@ pub trait DraftSource: Send {
     /// answered). Called exactly once per committed token, in order.
     fn observe(&mut self, token: i32);
 
+    /// Record a contiguous run of committed tokens at once — prompt
+    /// priming at prefill time ([`super::prefill`]). Equivalent to
+    /// calling [`observe`](Self::observe) per token in order (the
+    /// default does exactly that); implementations override it when a
+    /// bulk ingest is cheaper (a chunked prefill for [`ModelDraft`], a
+    /// single splice for [`NGramDraft`]). Primed history is what lets a
+    /// prompted stream propose from its first generated token instead
+    /// of waiting for self-generated history to accumulate.
+    fn observe_many(&mut self, tokens: &[i32]) {
+        for &t in tokens {
+            self.observe(t);
+        }
+    }
+
     /// Propose up to `k` continuation tokens for the committed history.
     /// Fewer (or none) is fine; anything from the first out-of-vocab
     /// token on is clipped by the caller.
@@ -162,6 +177,21 @@ impl Default for NGramDraft {
 impl DraftSource for NGramDraft {
     fn observe(&mut self, token: i32) {
         self.history.push(token);
+        if self.history.len() > self.max_history {
+            let cut = self.history.len() - self.max_history;
+            self.history.drain(..cut);
+        }
+    }
+
+    /// Bulk splice: one extend + one trim, however long the prompt —
+    /// identical end state to per-token [`observe`](Self::observe).
+    fn observe_many(&mut self, tokens: &[i32]) {
+        if tokens.len() >= self.max_history {
+            self.history.clear();
+            self.history.extend_from_slice(&tokens[tokens.len() - self.max_history..]);
+            return;
+        }
+        self.history.extend_from_slice(tokens);
         if self.history.len() > self.max_history {
             let cut = self.history.len() - self.max_history;
             self.history.drain(..cut);
@@ -228,6 +258,24 @@ impl DraftSource for ModelDraft {
             return;
         }
         match self.sess.step(token) {
+            Ok(logits) => self.last_logits = Some(logits),
+            Err(_) => {
+                self.healthy = false;
+                self.last_logits = None;
+            }
+        }
+    }
+
+    /// Prompt priming runs as a chunked prefill through the draft's own
+    /// small decoder — the same stacked passes the target enjoys, so a
+    /// long prompt does not cost the draft N scalar steps either. The
+    /// resulting seed logits are bit-identical to the per-token chain
+    /// (prefill is bit-exact), just cheaper.
+    fn observe_many(&mut self, tokens: &[i32]) {
+        if !self.healthy || tokens.is_empty() {
+            return;
+        }
+        match prefill_session(&mut self.sess, tokens, DEFAULT_PREFILL_CHUNK) {
             Ok(logits) => self.last_logits = Some(logits),
             Err(_) => {
                 self.healthy = false;
@@ -454,6 +502,34 @@ impl SpeculativeSession {
         Ok(first)
     }
 
+    /// Ingest one prompt chunk into the wrapped session (the
+    /// speculative half of [`super::prefill`]'s scheduler integration):
+    /// the stacked pass advances the target state exactly like
+    /// [`DecoderSession::prefill_chunk`], the draft source observes the
+    /// chunk (prompt priming — a primed [`NGramDraft`] proposes from
+    /// the stream's first generated token), and every ingested token
+    /// counts as committed, so spills at chunk boundaries snapshot a
+    /// consistent stream. No lookahead can be in flight mid-prompt; any
+    /// stale lookahead (restored streams) is discarded first.
+    ///
+    /// Caveat: draft history lives only in RAM — a stream that spills
+    /// and restores comes back with a *fresh* draft source (tokens are
+    /// unaffected; drafts are advisory), so under a residency cap the
+    /// propose-from-token-one benefit lasts until the first spill and
+    /// then rebuilds from self-generated history. Persisting draft
+    /// history in the snapshot is a ROADMAP follow-on.
+    pub fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        emit_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        self.sync_to_committed()?;
+        let out = self.sess.prefill_chunk(tokens, emit_logits)?;
+        self.draft.observe_many(tokens);
+        self.committed += tokens.len();
+        Ok(out)
+    }
+
     /// Rewind the wrapped session to the committed boundary, discarding
     /// unconfirmed lookahead: checkpoint restore plus one stacked replay
     /// of the (at most `1 + window`) tokens committed since the epoch's
@@ -582,6 +658,36 @@ mod tests {
         }
         assert!(d.history.len() <= 16);
         assert!(!d.propose(3).is_empty(), "periodic history must match");
+    }
+
+    #[test]
+    fn ngram_observe_many_matches_per_token_observe() {
+        // Bulk splice ≡ per-token observe, including the prompt-longer-
+        // than-history fast path and the trim-after-extend path.
+        for prompt_len in [3usize, 15, 16, 40] {
+            let prompt: Vec<i32> = (0..prompt_len as i32).map(|t| t % 7).collect();
+            let mut bulk = NGramDraft::new(3, 16);
+            let mut scalar = NGramDraft::new(3, 16);
+            bulk.observe_many(&prompt);
+            for &t in &prompt {
+                scalar.observe(t);
+            }
+            assert_eq!(bulk.history, scalar.history, "prompt_len {prompt_len}");
+            assert_eq!(bulk.propose(4), scalar.propose(4));
+        }
+    }
+
+    #[test]
+    fn primed_ngram_proposes_from_the_first_generated_token() {
+        // The prompt-priming satellite: with the prompt spliced into
+        // history at prefill time, the very first propose() after it
+        // already has n-grams to match — no self-generated warm-up.
+        let mut d = NGramDraft::new(3, 1024);
+        d.observe_many(&[1, 2, 3, 9, 1, 2, 3]);
+        assert_eq!(d.propose(3), vec![9, 1, 2]);
+        // Unprimed, the same draft has nothing.
+        let mut cold = NGramDraft::new(3, 1024);
+        assert_eq!(cold.propose(3), Vec::<i32>::new());
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Integration: chunked prompt prefill (`serve::prefill`).
+//!
+//! Pins the subsystem's one hard promise — chunked stacked prompt
+//! ingest is *bit-identical* to scalar `step` replay — across a grid of
+//! {prompt lengths straddling the bandwidth} × {chunk sizes} ×
+//! {feature-map sets} × {bandwidths}, both standalone and through the
+//! `DecodeServer` continuous-batching scheduler, including under a
+//! residency cap with mixed prefill/decode traffic. Also pins the
+//! admission failure envelope (bad prompts never register a session),
+//! the TTFT/chunk observability counters, and prompt-primed speculative
+//! drafting (proposals from the first generated token).
+//!
+//! Everything here is host-side — no artifacts required, never skips.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmmformer::attention::FeatureMap;
+use fmmformer::serve::decode::{
+    greedy_argmax, run_greedy_sessions_collect, DecodeConfig, DecodeServer,
+    DecodeServerConfig, DecoderSession, HostDecoder,
+};
+use fmmformer::serve::prefill::{
+    deterministic_prompt, prefill_session, run_prompted_sessions,
+};
+use fmmformer::serve::speculative::SpeculationConfig;
+
+fn tiny_config(bandwidth: usize, kernels: &[FeatureMap]) -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 16,
+        vocab: 32,
+        bandwidth,
+        kernels: kernels.to_vec(),
+        w1: 0.6,
+        w2: 0.9,
+        seed: 3,
+    }
+}
+
+/// ISSUE acceptance grid: chunked prefill ≡ scalar replay, bit for bit
+/// — final-token logits AND every post-prompt step — across prompt
+/// lengths straddling the bandwidth, chunk sizes (1, sub-band,
+/// straddling, larger-than-prompt), feature maps and bandwidths.
+#[test]
+fn prefill_grid_is_bit_identical_to_scalar_replay() {
+    let kernel_sets: [&[FeatureMap]; 2] =
+        [&[FeatureMap::Elu], &[FeatureMap::Elu, FeatureMap::EluNeg, FeatureMap::Tanh]];
+    for kernels in kernel_sets {
+        for bandwidth in [1usize, 4, 9] {
+            let cfg = tiny_config(bandwidth, kernels);
+            let vocab = cfg.vocab;
+            let model = Arc::new(HostDecoder::new(cfg).unwrap());
+            for prompt_len in [1usize, 5, 10, 23] {
+                let prompt =
+                    deterministic_prompt(prompt_len, vocab, 17 + prompt_len as u64);
+                // Scalar replay reference; checkpointed so each chunk
+                // size forks a bit-exact copy of the replayed state.
+                let mut scalar = DecoderSession::new(model.clone());
+                let mut scalar_last = Vec::new();
+                for &t in &prompt {
+                    scalar_last = scalar.step(t).unwrap();
+                }
+                let ckpt = scalar.checkpoint();
+                for chunk in [1usize, 4, 7, 64] {
+                    let mut sess = DecoderSession::new(model.clone());
+                    let logits = prefill_session(&mut sess, &prompt, chunk).unwrap();
+                    assert_eq!(
+                        logits, scalar_last,
+                        "kernels {kernels:?} bw {bandwidth} prompt {prompt_len} \
+                         chunk {chunk}: final logits diverged"
+                    );
+                    assert_eq!(sess.position(), scalar.position());
+                    // The *state* is identical too: greedy continuations
+                    // agree bitwise step by step.
+                    let mut replay = DecoderSession::new(model.clone());
+                    replay.rollback(&ckpt).unwrap();
+                    let mut tok = greedy_argmax(&logits);
+                    for _ in 0..8 {
+                        let a = sess.step(tok).unwrap();
+                        let b = replay.step(tok).unwrap();
+                        assert_eq!(
+                            a, b,
+                            "kernels {kernels:?} bw {bandwidth} prompt {prompt_len} \
+                             chunk {chunk}: post-prefill step diverged"
+                        );
+                        tok = greedy_argmax(&a);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Through the server: a prompted open returns the scalar-replay
+/// final logits, the stream decodes bit-identically to a replayed
+/// reference, and the TTFT / chunk counters are populated.
+#[test]
+fn server_prompted_stream_matches_scalar_replay_and_reports_ttft() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu, FeatureMap::EluNeg]);
+    let vocab = cfg.vocab;
+    let model_ref = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig { prefill_chunk: 4, ..Default::default() },
+    );
+    let client = server.client();
+
+    let prompt = deterministic_prompt(11, vocab, 5);
+    let (stream, out) = client.open_stream_with_prompt(&prompt).unwrap();
+    assert_eq!(out.prompt_tokens, 11);
+    assert_eq!(out.chunks, 3, "11 tokens at chunk 4 -> 4+4+3");
+    assert!(out.ttft > Duration::ZERO);
+
+    let mut reference = DecoderSession::new(model_ref);
+    let mut ref_last = Vec::new();
+    for &t in &prompt {
+        ref_last = reference.step(t).unwrap();
+    }
+    assert_eq!(out.logits, ref_last, "prompted open's logits diverged");
+
+    let mut tok = greedy_argmax(&out.logits);
+    for _ in 0..6 {
+        let got = stream.step(tok).unwrap();
+        let want = reference.step(tok).unwrap();
+        assert_eq!(got.logits, want, "post-prompt decode diverged");
+        tok = greedy_argmax(&got.logits);
+    }
+
+    drop(stream);
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.prefills, 1, "{stats:?}");
+    assert_eq!(stats.failed_prefills, 0);
+    assert_eq!(stats.prefill_tokens, 11);
+    assert_eq!(stats.prefill_chunks, 3);
+    assert!(stats.ttft_secs > 0.0);
+    assert!(stats.mean_ttft() > 0.0);
+}
+
+/// The per-round token budget splits chunks but never changes results:
+/// a budget smaller than the chunk still completes the prompt, in more
+/// (smaller) stacked passes, with identical logits.
+#[test]
+fn prefill_budget_splits_chunks_without_changing_results() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = cfg.vocab;
+    let prompt = deterministic_prompt(11, vocab, 6);
+
+    let run = |prefill_chunk: usize, prefill_budget: usize| {
+        let server = DecodeServer::start(
+            HostDecoder::new(tiny_config(4, &[FeatureMap::Elu])).unwrap(),
+            DecodeServerConfig { prefill_chunk, prefill_budget, ..Default::default() },
+        );
+        let client = server.client();
+        let (_stream, out) = client.open_stream_with_prompt(&prompt).unwrap();
+        drop(_stream);
+        drop(client);
+        (out, server.shutdown())
+    };
+
+    let (full, _) = run(4, 0);
+    assert_eq!(full.chunks, 3, "budget 0 = unthrottled: ceil(11/4) passes");
+    let (tight, stats) = run(4, 2);
+    assert_eq!(tight.chunks, 6, "budget 2 caps every pass: ceil(11/2) passes");
+    assert_eq!(stats.prefill_chunks, 6);
+    assert_eq!(tight.logits, full.logits, "budget must never change logits");
+}
+
+/// ISSUE acceptance: mixed prefill + decode traffic under a residency
+/// cap — prompted and plain streams spill/restore mid-prompt and
+/// mid-stream, and every token of both populations is bit-identical to
+/// the uncapped run.
+#[test]
+fn mixed_prefill_decode_under_residency_cap_is_bit_identical() {
+    let mk = || HostDecoder::new(tiny_config(4, &[FeatureMap::Elu, FeatureMap::Tanh])).unwrap();
+    let vocab = 32;
+    let (prompted_n, prompt_len, gen_tokens) = (6usize, 10usize, 6usize);
+    let (decode_n, decode_tokens) = (4usize, 8usize);
+
+    let run = |cap: usize, prefill_chunk: usize| {
+        let server = DecodeServer::start(
+            mk(),
+            DecodeServerConfig {
+                max_resident_sessions: cap,
+                prefill_chunk,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        let client = server.client();
+        // Plain decode traffic races the prompted admissions.
+        let decode_client = client.clone();
+        let decode_thread = std::thread::spawn(move || {
+            run_greedy_sessions_collect(&decode_client, decode_n, decode_tokens, vocab)
+        });
+        let prompted =
+            run_prompted_sessions(&client, prompted_n, prompt_len, gen_tokens, vocab)
+                .unwrap();
+        let (_, decode_streams) = decode_thread.join().unwrap().unwrap();
+        drop(client);
+        (prompted, decode_streams, server.shutdown())
+    };
+
+    let (full, full_decode, full_stats) = run(0, 64);
+    assert_eq!(full_stats.spills, 0);
+    let (paged, paged_decode, stats) = run(2, 3);
+    assert_eq!(
+        paged.streams, full.streams,
+        "capped prompted streams diverged from uncapped run"
+    );
+    assert_eq!(
+        paged_decode, full_decode,
+        "capped decode streams diverged from uncapped run"
+    );
+    assert!(stats.spills > 0, "cap 2 with 10 streams must spill: {stats:?}");
+    assert!(stats.restores > 0, "{stats:?}");
+    assert!(stats.resident_peak <= 2, "residency overshot the cap: {stats:?}");
+    assert_eq!(stats.prefills, prompted_n);
+    assert_eq!(stats.failed_prefills, 0);
+    assert_eq!(stats.prefill_tokens, prompted_n * prompt_len);
+    assert_eq!(paged.ttfts.len(), prompted_n);
+}
+
+/// Admission failure envelope: bad prompts fail the open with a clean
+/// error, register nothing, and leave the server serving.
+#[test]
+fn invalid_prompts_fail_cleanly_without_registering_sessions() {
+    let server = DecodeServer::start(
+        HostDecoder::new(tiny_config(4, &[FeatureMap::Elu])).unwrap(),
+        DecodeServerConfig::default(),
+    );
+    let client = server.client();
+
+    let err = client.open_stream_with_prompt(&[]).unwrap_err();
+    assert!(format!("{err:#}").contains("empty prompt"), "{err:#}");
+    let err = client.open_stream_with_prompt(&[1, 99, 2]).unwrap_err();
+    assert!(format!("{err:#}").contains("outside vocab"), "{err:#}");
+    let err = client.open_stream_with_prompt(&[-3]).unwrap_err();
+    assert!(format!("{err:#}").contains("outside vocab"), "{err:#}");
+
+    // The server is unharmed: a plain stream and a valid prompted
+    // stream both serve.
+    let stream = client.open_stream().unwrap();
+    assert!(stream.step(1).is_ok());
+    let (stream2, out) = client.open_stream_with_prompt(&[1, 2, 3]).unwrap();
+    assert_eq!(out.prompt_tokens, 3);
+    assert!(stream2.step(greedy_argmax(&out.logits)).is_ok());
+
+    drop((stream, stream2));
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_opened, 2, "failed admissions must not register");
+    assert_eq!(stats.prefills, 1);
+    assert_eq!(stats.failed_prefills, 0);
+}
+
+/// Prompt-primed speculation: a speculative stream opened with a
+/// repetitive prompt proposes drafts on its *first* generated token
+/// (history comes from the prompt, not from self-generated warm-up),
+/// and its logits stay bit-identical to a plain replay.
+#[test]
+fn primed_speculative_stream_proposes_from_the_first_step() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = cfg.vocab;
+    let model_ref = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig {
+            speculation: SpeculationConfig::NGram,
+            draft_window: 4,
+            prefill_chunk: 5,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+
+    // Periodic prompt: every suffix n-gram repeats, so a primed draft
+    // always has a continuation to propose.
+    let prompt: Vec<i32> = [1, 2, 3].iter().copied().cycle().take(12).collect();
+    let (stream, out) = client.open_stream_with_prompt(&prompt).unwrap();
+
+    let mut reference = DecoderSession::new(model_ref);
+    let mut ref_last = Vec::new();
+    for &t in &prompt {
+        ref_last = reference.step(t).unwrap();
+    }
+    assert_eq!(out.logits, ref_last, "speculative prefill diverged");
+
+    // Submit a token from the prompt's alphabet: the draft's history
+    // (primed at prefill time) must yield a non-empty proposal on this
+    // very first step — and the logits must match plain replay exactly.
+    let got = stream.step(2).unwrap();
+    let mut want = reference.step(2).unwrap();
+    assert_eq!(got.logits, want);
+    for _ in 0..4 {
+        let tok = greedy_argmax(&want);
+        let got = stream.step(tok).unwrap();
+        want = reference.step(tok).unwrap();
+        assert_eq!(got.logits, want, "speculative stream diverged from plain replay");
+    }
+
+    drop(stream);
+    drop(client);
+    let stats = server.shutdown();
+    assert!(
+        stats.draft_proposed > 0,
+        "primed n-gram must propose from the first generated token: {stats:?}"
+    );
+    assert_eq!(stats.prefills, 1);
+    assert_eq!(stats.failed_prefills, 0);
+}

@@ -24,6 +24,7 @@ use fmmformer::serve::decode::{
     run_greedy_sessions_collect, DecodeConfig, DecodeServer, DecodeServerConfig,
     DecoderSession, HostDecoder,
 };
+use fmmformer::serve::prefill::prefill_session;
 use fmmformer::serve::session_store::{DiskStore, MemStore, SessionStore};
 
 fn tiny_config() -> DecodeConfig {
@@ -82,6 +83,37 @@ fn snapshot_restore_is_bit_identical_across_grid() {
                 );
             }
         }
+    }
+}
+
+/// Satellite: a freshly-*prefilled* session's FMMS snapshot must be
+/// byte-identical to a token-by-token-replayed session's snapshot (the
+/// chunked ingest leaves the exact same f32 state, and the export view
+/// is normalized), and the round-trip restores into a session whose
+/// every later step is bit-identical.
+#[test]
+fn prefilled_session_snapshot_roundtrips_like_replayed_session() {
+    let model = Arc::new(HostDecoder::new(tiny_config()).unwrap());
+    let prompt = probe_tokens(19, 32, 123);
+    let mut prefilled = DecoderSession::new(model.clone());
+    prefill_session(&mut prefilled, &prompt, 5).unwrap();
+    let mut replayed = DecoderSession::new(model.clone());
+    for &t in &prompt {
+        replayed.step(t).unwrap();
+    }
+    let snap_prefilled = prefilled.snapshot().unwrap();
+    let snap_replayed = replayed.snapshot().unwrap();
+    assert_eq!(
+        snap_prefilled, snap_replayed,
+        "prefilled snapshot must equal the replayed session's, byte for byte"
+    );
+    let mut restored = DecoderSession::restore(model.clone(), &snap_prefilled).unwrap();
+    assert_eq!(restored.position(), replayed.position());
+    assert_eq!(restored.state_bytes(), replayed.state_bytes());
+    for &t in &probe_tokens(12, 32, 321) {
+        let a = restored.step(t).unwrap();
+        let b = replayed.step(t).unwrap();
+        assert_eq!(a, b, "post-restore step diverged from the live session");
     }
 }
 
