@@ -1,0 +1,337 @@
+//! Unified-planner bench (system extension) — one stacked pass per
+//! round for mixed decode + prefill + speculative traffic.
+//!
+//! The unified ragged-batch planner gathers every pending row across
+//! all streams — single decode steps, C-row prompt chunks, K+1-row
+//! verify windows — into ONE stacked prepacked-GEMM pass per wave,
+//! instead of three separate per-kind passes. Three measurements:
+//!
+//! * **mixed** — tokens/sec for a ⅓/⅓/⅓ plain/prompted/speculative
+//!   population, unified planner vs the three-phase baseline
+//!   (`unified_planner: false`), at several stream counts. Fails
+//!   loudly if either scheduler's greedy tokens diverge from a
+//!   scalar-replayed per-stream reference.
+//! * **pure decode** — the same stream count, decode-only, through the
+//!   unified planner: the yardstick the mixed run is held against
+//!   (acceptance: mixed ≥ 0.8× pure-decode tok/s at 64 streams).
+//! * **capped** — the mixed run under a residency cap (spill/restore
+//!   mid-prompt and mid-verify); byte-identity must survive paging.
+//!
+//!     cargo bench --bench serve_planner                 # full sizes
+//!     cargo bench --bench serve_planner -- --quick
+//!     cargo bench --bench serve_planner -- --streams 6,12 --tokens 8
+//!
+//! Emits `reports/BENCH_planner.json` — validated by `ci.sh --bench`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use fmmformer::attention::FeatureMap;
+use fmmformer::bench::{save_report_json, Table};
+use fmmformer::cli::Args;
+use fmmformer::serve::decode::{
+    greedy_argmax, DecodeConfig, DecodeServer, DecodeServerConfig, DecodeStats,
+    DecoderSession, HostDecoder,
+};
+use fmmformer::serve::prefill::deterministic_prompt;
+use fmmformer::serve::speculative::SpeculationConfig;
+use fmmformer::util::json::Json;
+
+/// Serving-shaped model (matches the other serve benches): the vocab
+/// readout and d_model are large enough that stacking rows into one
+/// GEMM pass is a real win over row-at-a-time execution.
+fn bench_config() -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 4,
+        d_model: 64,
+        vocab: 512,
+        bandwidth: 8,
+        kernels: vec![FeatureMap::Elu],
+        w1: 0.6,
+        w2: 0.9,
+        seed: 7,
+    }
+}
+
+/// Mixed-population split: one third prompted, one third speculative,
+/// the remainder plain (every kind non-empty once `streams >= 3`).
+fn split(streams: usize) -> (usize, usize, usize) {
+    let per_kind = streams / 3;
+    (streams - 2 * per_kind, per_kind, per_kind)
+}
+
+struct MixedOut {
+    /// Greedy tokens per stream: plain first, then prompted, then
+    /// speculative, each in index order.
+    streams: Vec<Vec<i32>>,
+    elapsed_s: f64,
+    generated: usize,
+    stats: DecodeStats,
+}
+
+/// Drive `plain + prompted + spec` concurrent sessions against one
+/// server and collect every stream's greedy tokens plus wall time.
+fn run_mixed_server(
+    cfg: &DecodeConfig,
+    server_cfg: DecodeServerConfig,
+    plain: usize,
+    prompted: usize,
+    spec: usize,
+    tokens: usize,
+    prompt_len: usize,
+) -> Result<MixedOut> {
+    let vocab = cfg.vocab;
+    let server = DecodeServer::start(HostDecoder::new(cfg.clone())?, server_cfg);
+    let client = server.client();
+    let t0 = Instant::now();
+    let mut handles: Vec<std::thread::JoinHandle<Result<Vec<i32>>>> = Vec::new();
+    for s in 0..plain {
+        let c = client.clone();
+        handles.push(std::thread::spawn(move || {
+            let stream = c.open_stream_plain()?;
+            let mut tok = (s % vocab) as i32;
+            let mut chosen = Vec::with_capacity(tokens);
+            for _ in 0..tokens {
+                tok = greedy_argmax(&stream.step(tok)?.logits);
+                chosen.push(tok);
+            }
+            Ok(chosen)
+        }));
+    }
+    for s in 0..prompted {
+        let c = client.clone();
+        handles.push(std::thread::spawn(move || {
+            let prompt = deterministic_prompt(prompt_len, vocab, 100 + s as u64);
+            let (stream, out) = c.open_stream_with_prompt_plain(&prompt)?;
+            let mut tok = greedy_argmax(&out.logits);
+            let mut chosen = vec![tok];
+            for _ in 0..tokens {
+                tok = greedy_argmax(&stream.step(tok)?.logits);
+                chosen.push(tok);
+            }
+            Ok(chosen)
+        }));
+    }
+    for s in 0..spec {
+        let c = client.clone();
+        handles.push(std::thread::spawn(move || {
+            let stream = c.open_stream_speculative()?;
+            let mut tok = ((7 + s) % vocab) as i32;
+            let mut chosen = Vec::with_capacity(tokens);
+            for _ in 0..tokens {
+                tok = greedy_argmax(&stream.step(tok)?.logits);
+                chosen.push(tok);
+            }
+            Ok(chosen)
+        }));
+    }
+    let mut streams = Vec::with_capacity(handles.len());
+    for h in handles {
+        streams.push(h.join().map_err(|_| anyhow::anyhow!("stream thread panicked"))??);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    drop(client);
+    let stats = server.shutdown();
+    let generated = plain * tokens + prompted * (tokens + 1) + spec * tokens;
+    Ok(MixedOut { streams, elapsed_s, generated, stats })
+}
+
+/// Per-stream scalar-replay reference for the same population — the
+/// per-kind ground truth every scheduler flavor is pinned against.
+fn reference_streams(
+    model: &Arc<HostDecoder>,
+    plain: usize,
+    prompted: usize,
+    spec: usize,
+    tokens: usize,
+    prompt_len: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let vocab = model.config().vocab;
+    let mut streams = Vec::with_capacity(plain + prompted + spec);
+    let chain = |prompt: &[i32], start: Option<i32>| -> Result<Vec<i32>> {
+        let mut sess = DecoderSession::new(model.clone());
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = sess.step(t)?;
+        }
+        let mut tok = start.unwrap_or_else(|| greedy_argmax(&logits));
+        let mut chosen = if prompt.is_empty() { Vec::new() } else { vec![tok] };
+        for _ in 0..tokens {
+            tok = greedy_argmax(&sess.step(tok)?);
+            chosen.push(tok);
+        }
+        Ok(chosen)
+    };
+    for s in 0..plain {
+        streams.push(chain(&[], Some((s % vocab) as i32))?);
+    }
+    for s in 0..prompted {
+        let prompt = deterministic_prompt(prompt_len, vocab, 100 + s as u64);
+        streams.push(chain(&prompt, None)?);
+    }
+    for s in 0..spec {
+        streams.push(chain(&[], Some(((7 + s) % vocab) as i32))?);
+    }
+    Ok(streams)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick"])?;
+    let quick = args.has("quick");
+    let iters = args.usize_or("iters", if quick { 1 } else { 2 })?;
+    let default_streams: &[&str] = if quick { &["4", "8"] } else { &["4", "16", "64"] };
+    let streams_list: Vec<usize> = args
+        .list_or("streams", default_streams)
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow::anyhow!("--streams wants integers, got {s:?}")))
+        .collect::<Result<_>>()?;
+    let tokens = args.usize_or("tokens", if quick { 8 } else { 32 })?;
+    let prompt_len = args.usize_or("prompt", if quick { 12 } else { 48 })?;
+
+    let cfg = bench_config();
+    let model = Arc::new(HostDecoder::new(cfg.clone())?);
+    println!(
+        "planner bench: {} layers x {} heads, d_model {}, vocab {}, \
+         {tokens} tokens/stream, prompt {prompt_len}",
+        cfg.layers, cfg.heads, cfg.d_model, cfg.vocab,
+    );
+
+    let base_cfg = || DecodeServerConfig {
+        speculation: SpeculationConfig::NGram,
+        draft_window: 4,
+        ..Default::default()
+    };
+
+    let mut tbl = Table::new(
+        "Mixed-load tokens/sec: unified planner vs three-phase baseline",
+        &["streams", "mix (p/pr/sp)", "unified tok/s", "baseline tok/s", "vs baseline",
+          "pure-decode tok/s", "mixed/pure", "rows/pass", "exact"],
+    );
+    let mut runs = Vec::new();
+    for &n in &streams_list {
+        let (plain, prompted, spec) = split(n);
+        let reference =
+            reference_streams(&model, plain, prompted, spec, tokens, prompt_len)?;
+
+        // Unified planner, best-of-iters (wall time is the metric; the
+        // token streams must be identical every iteration regardless).
+        let mut unified_tok_s = 0.0f64;
+        let mut unified_stats = DecodeStats::default();
+        for _ in 0..iters {
+            let out = run_mixed_server(
+                &cfg, base_cfg(), plain, prompted, spec, tokens, prompt_len,
+            )?;
+            if out.streams != reference {
+                bail!(
+                    "{n} streams: unified planner diverged from scalar reference — \
+                     the stacked pass must never change a stream's tokens"
+                );
+            }
+            if out.stats.planned_rounds == 0 {
+                bail!("{n} streams: unified run recorded no planned passes");
+            }
+            unified_tok_s = unified_tok_s.max(out.generated as f64 / out.elapsed_s);
+            unified_stats = out.stats;
+        }
+
+        // Three-phase baseline scheduler, same traffic.
+        let mut baseline_tok_s = 0.0f64;
+        for _ in 0..iters {
+            let out = run_mixed_server(
+                &cfg,
+                DecodeServerConfig { unified_planner: false, ..base_cfg() },
+                plain,
+                prompted,
+                spec,
+                tokens,
+                prompt_len,
+            )?;
+            if out.streams != reference {
+                bail!("{n} streams: three-phase baseline diverged from scalar reference");
+            }
+            baseline_tok_s = baseline_tok_s.max(out.generated as f64 / out.elapsed_s);
+        }
+
+        // Pure decode at the same width: the acceptance yardstick.
+        let mut pure_tok_s = 0.0f64;
+        for _ in 0..iters {
+            let out =
+                run_mixed_server(&cfg, base_cfg(), n, 0, 0, tokens, prompt_len)?;
+            pure_tok_s = pure_tok_s.max(out.generated as f64 / out.elapsed_s);
+        }
+
+        // Residency-capped mixed run: byte-identity must survive
+        // spill/restore mid-prompt, mid-verify, mid-stream.
+        let cap = (n / 2).max(2);
+        let capped = run_mixed_server(
+            &cfg,
+            DecodeServerConfig { max_resident_sessions: cap, ..base_cfg() },
+            plain,
+            prompted,
+            spec,
+            tokens,
+            prompt_len,
+        )?;
+        if capped.streams != reference {
+            bail!("{n} streams: capped unified run diverged from scalar reference");
+        }
+
+        let mixed_vs_pure = unified_tok_s / pure_tok_s.max(1e-12);
+        if !quick && n >= 64 && mixed_vs_pure < 0.8 {
+            bail!(
+                "{n} streams: mixed-load throughput ({unified_tok_s:.0} tok/s) fell \
+                 below 0.8x pure-decode ({pure_tok_s:.0} tok/s): ratio {mixed_vs_pure:.2}"
+            );
+        }
+        tbl.row(vec![
+            n.to_string(),
+            format!("{plain}/{prompted}/{spec}"),
+            format!("{unified_tok_s:.0}"),
+            format!("{baseline_tok_s:.0}"),
+            format!("{:.2}x", unified_tok_s / baseline_tok_s.max(1e-12)),
+            format!("{pure_tok_s:.0}"),
+            format!("{mixed_vs_pure:.2}x"),
+            format!("{:.1}", unified_stats.mean_rows_per_pass()),
+            "true".into(),
+        ]);
+        runs.push(Json::obj(vec![
+            ("streams", Json::Num(n as f64)),
+            ("plain", Json::Num(plain as f64)),
+            ("prompted", Json::Num(prompted as f64)),
+            ("speculative", Json::Num(spec as f64)),
+            ("mixed_tok_s", Json::Num(unified_tok_s)),
+            ("baseline_tok_s", Json::Num(baseline_tok_s)),
+            ("pure_decode_tok_s", Json::Num(pure_tok_s)),
+            ("mixed_vs_pure", Json::Num(mixed_vs_pure)),
+            (
+                "unified_vs_baseline",
+                Json::Num(unified_tok_s / baseline_tok_s.max(1e-12)),
+            ),
+            (
+                "planned_rounds",
+                Json::Num(unified_stats.planned_rounds as f64),
+            ),
+            (
+                "rows_per_pass_mean",
+                Json::Num(unified_stats.mean_rows_per_pass()),
+            ),
+            ("capped_spills", Json::Num(capped.stats.spills as f64)),
+            ("exact", Json::Bool(true)),
+        ]));
+    }
+    tbl.print();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_planner")),
+        ("d_model", Json::Num(cfg.d_model as f64)),
+        ("vocab", Json::Num(cfg.vocab as f64)),
+        ("tokens_per_stream", Json::Num(tokens as f64)),
+        ("prompt_len", Json::Num(prompt_len as f64)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let path = save_report_json("BENCH_planner.json", &doc)?;
+    println!("machine-readable -> {path:?}");
+    Ok(())
+}

@@ -103,8 +103,32 @@ assert mix["exact_vs_reference"] is True
             exit 1
         fi
     fi
+    echo "== bench smoke: serve_planner (tiny) =="
+    # 6 streams split 2/2/2 plain/prompted/speculative: the bench itself
+    # fails if the unified planner's, the three-phase baseline's, or the
+    # residency-capped run's greedy tokens diverge from scalar replay.
+    FMM_REPORTS="$reports" cargo bench --bench serve_planner -- \
+        --quick --streams 6 --tokens 6 --prompt 12 --iters 1
+    validate_json "$reports/BENCH_planner.json"
+    if command -v python3 >/dev/null 2>&1; then
+        if ! python3 -c '
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["bench"] == "serve_planner"
+for run in doc["runs"]:
+    for key in ("streams", "plain", "prompted", "speculative", "mixed_tok_s",
+                "baseline_tok_s", "pure_decode_tok_s", "mixed_vs_pure",
+                "planned_rounds", "rows_per_pass_mean", "exact"):
+        assert key in run, key
+    assert run["exact"] is True
+    assert run["planned_rounds"] > 0
+' "$reports/BENCH_planner.json"; then
+            echo "bench smoke FAILED: BENCH_planner.json missing keys or invariants"
+            exit 1
+        fi
+    fi
     echo "bench smoke passed: $reports/BENCH_decode.json $reports/BENCH_paging.json \
-$reports/BENCH_speculative.json $reports/BENCH_prefill.json"
+$reports/BENCH_speculative.json $reports/BENCH_prefill.json $reports/BENCH_planner.json"
     exit 0
 fi
 

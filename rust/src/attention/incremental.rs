@@ -403,27 +403,91 @@ pub(crate) fn words_to_u64(lo: f32, hi: f32) -> u64 {
     lo.to_bits() as u64 | (hi.to_bits() as u64) << 32
 }
 
-/// Sessions per worker shard in [`step_many`]. One per-head micro-step
-/// is a microsecond of work while a scoped spawn costs tens of
-/// microseconds, so a shard must carry a few dozen sessions to pay for
-/// its worker; narrower stacks run inline.
-const MIN_SESSIONS_PER_SHARD: usize = 24;
+/// Stacked rows per worker shard in [`advance_many`] / [`step_many`].
+/// One per-head micro-step is a microsecond of work while a scoped
+/// spawn costs tens of microseconds, so a shard must carry a few dozen
+/// rows to pay for its worker; narrower stacks run inline.
+const MIN_ROWS_PER_SHARD: usize = 24;
 
-/// Advance many per-head decode states by one token each — the batched
-/// micro-step behind the [`crate::serve::decode`] scheduler.
+/// Advance many per-head decode states through *heterogeneous* window
+/// lengths — the ragged batched micro-step behind the
+/// [`crate::serve::decode`] planner. State `i` consumes `lens[i]`
+/// chronological rows; a single decode step, a prompt chunk and a
+/// speculative verify window all stack into one call.
 ///
-/// `q`/`k` stack one `d`-row per state (`states.len() × d`, row-major),
-/// `v` and `out` one `dv`-row per state. Row `i` of `out` receives
-/// exactly what `states[i].step_into(q_i, k_i, v_i, ..)` would produce —
-/// the batched path reuses the same fused kernel primitives (the rank-1
-/// moment GEMM and the `φ(q)·S` readout), so results match the scalar
-/// path bit-for-bit. Per-state moments are independent, making the
-/// stacked update a block-diagonal batch of small GEMMs; wide stacks
-/// shard across [`kernel::parallel_chunks`] workers.
+/// `q`/`k` concatenate every state's window rows back to back
+/// (`sum(lens) × d`, row-major, state order), `v` and `out` likewise
+/// with `dv`-rows. The rows state `i` owns receive exactly what
+/// `lens[i]` scalar [`FmmDecodeState::step_into`] calls would produce —
+/// each state advances through the same scalar chronological recurrence
+/// ([`FmmDecodeState::step_window_into`]), so results are bit-identical
+/// to the per-state paths by construction. Per-state moments are
+/// independent; wide stacks shard across [`kernel::parallel_ragged`]
+/// workers with *row-weighted* boundaries, so a 32-row chunk next to
+/// 1-row decode steps still splits into near-equal work.
 ///
 /// All states must share `d`/`dv` (they do, coming from one model
 /// config); bandwidth/kernels/weights may in principle differ per state
-/// and are honored per state.
+/// and are honored per state. `lens[i] == 0` is allowed and leaves
+/// state `i` untouched.
+pub fn advance_many(
+    states: &mut [&mut FmmDecodeState],
+    lens: &[usize],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+) {
+    let b = states.len();
+    assert_eq!(lens.len(), b, "one window length per state");
+    if b == 0 {
+        return;
+    }
+    let (d, dv) = (states[0].d, states[0].dv);
+    assert!(
+        states.iter().all(|s| s.d == d && s.dv == dv),
+        "advance_many states must share head dims"
+    );
+    let n: usize = lens.iter().sum();
+    assert_eq!(q.len(), n * d, "q panel width");
+    assert_eq!(k.len(), n * d, "k panel width");
+    assert_eq!(v.len(), n * dv, "v panel width");
+    assert_eq!(out.len(), n * dv, "out panel width");
+    if n == 0 {
+        return;
+    }
+    // One job per state: its row offset, window length, and the output
+    // rows it owns, carved off the stacked buffer in state order.
+    let mut jobs: Vec<(&mut FmmDecodeState, usize, usize, &mut [f32])> =
+        Vec::with_capacity(b);
+    let mut rest = out;
+    let mut off = 0usize;
+    for (st, &len) in states.iter_mut().zip(lens) {
+        let (orows, tail) = std::mem::take(&mut rest).split_at_mut(len * dv);
+        rest = tail;
+        jobs.push((&mut **st, off, len, orows));
+        off += len;
+    }
+    kernel::parallel_ragged(&mut jobs, lens, MIN_ROWS_PER_SHARD, |_start, run| {
+        for (st, off, len, orows) in run.iter_mut() {
+            if *len == 0 {
+                continue;
+            }
+            st.step_window_into(
+                &q[*off * d..(*off + *len) * d],
+                &k[*off * d..(*off + *len) * d],
+                &v[*off * dv..(*off + *len) * dv],
+                orows,
+            );
+        }
+    });
+}
+
+/// Advance many per-head decode states by one token each — the batched
+/// micro-step behind the [`crate::serve::decode`] scheduler. Thin
+/// uniform-width wrapper over [`advance_many`] (every window length 1):
+/// row `i` of `out` receives exactly what
+/// `states[i].step_into(q_i, k_i, v_i, ..)` would produce, bit for bit.
 pub fn step_many(
     states: &mut [&mut FmmDecodeState],
     q: &[f32],
@@ -431,32 +495,8 @@ pub fn step_many(
     v: &[f32],
     out: &mut [f32],
 ) {
-    let b = states.len();
-    if b == 0 {
-        return;
-    }
-    let (d, dv) = (states[0].d, states[0].dv);
-    assert!(
-        states.iter().all(|s| s.d == d && s.dv == dv),
-        "step_many states must share head dims"
-    );
-    assert_eq!(q.len(), b * d, "q stack width");
-    assert_eq!(k.len(), b * d, "k stack width");
-    assert_eq!(v.len(), b * dv, "v stack width");
-    assert_eq!(out.len(), b * dv, "out stack width");
-    let mut jobs: Vec<(&mut FmmDecodeState, &mut [f32])> =
-        states.iter_mut().map(|s| &mut **s).zip(out.chunks_mut(dv)).collect();
-    kernel::parallel_chunks(&mut jobs, MIN_SESSIONS_PER_SHARD, |start, chunk| {
-        for (off, (st, orow)) in chunk.iter_mut().enumerate() {
-            let i = start + off;
-            st.step_into(
-                &q[i * d..(i + 1) * d],
-                &k[i * d..(i + 1) * d],
-                &v[i * dv..(i + 1) * dv],
-                orow,
-            );
-        }
-    });
+    let lens = vec![1usize; states.len()];
+    advance_many(states, &lens, q, k, v, out);
 }
 
 /// Test/bench helper: decode a whole single-head sequence step by step.
@@ -630,6 +670,59 @@ mod tests {
     #[test]
     fn step_many_empty_stack_is_noop() {
         step_many(&mut [], &[], &[], &[], &mut []);
+    }
+
+    #[test]
+    fn advance_many_ragged_is_bit_identical_to_scalar_steps() {
+        // Heterogeneous window lengths (decode steps, chunks, verify
+        // windows, plus a zero-length no-op) in one stacked call, at a
+        // stack wide enough to cross the thread-shard gate. Every state
+        // must see exactly its own scalar chronology.
+        let (d, dv, bw) = (4usize, 3usize, 2usize);
+        let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+        for copies in [1usize, 9] {
+            let base_lens = [1usize, 5, 0, 2, 13, 1];
+            let lens: Vec<usize> = base_lens
+                .iter()
+                .cycle()
+                .take(base_lens.len() * copies)
+                .copied()
+                .collect();
+            let b = lens.len();
+            let n: usize = lens.iter().sum();
+            let mut ragged: Vec<FmmDecodeState> =
+                (0..b).map(|_| FmmDecodeState::new(d, dv, bw, &kernels, 0.7, 0.4)).collect();
+            let mut scalar = ragged.clone();
+            let mut rng = Pcg64::seeded(21 + copies as u64);
+            // Two rounds so the second starts from mid-stream state.
+            for _round in 0..2 {
+                let q = rng.normals(n * d);
+                let k = rng.normals(n * d);
+                let v = rng.normals(n * dv);
+                let mut out = vec![0.0f32; n * dv];
+                let mut refs: Vec<&mut FmmDecodeState> = ragged.iter_mut().collect();
+                advance_many(&mut refs, &lens, &q, &k, &v, &mut out);
+                let mut off = 0usize;
+                for (i, (st, &len)) in scalar.iter_mut().zip(&lens).enumerate() {
+                    for t in off..off + len {
+                        let want = st.step(
+                            &q[t * d..(t + 1) * d],
+                            &k[t * d..(t + 1) * d],
+                            &v[t * dv..(t + 1) * dv],
+                        );
+                        assert_eq!(
+                            &out[t * dv..(t + 1) * dv],
+                            &want[..],
+                            "copies {copies} state {i} row {t}"
+                        );
+                    }
+                    off += len;
+                }
+            }
+            for (st, want) in ragged.iter().zip(scalar.iter()) {
+                assert_eq!(st.position(), want.position());
+            }
+        }
     }
 
     #[test]

@@ -32,7 +32,9 @@
 pub mod parallel;
 pub mod scratch;
 
-pub use parallel::{max_threads, parallel_chunks, parallel_rows};
+pub use parallel::{
+    max_threads, parallel_chunks, parallel_ragged, parallel_rows, ragged_bounds,
+};
 pub use scratch::{scratch, Scratch};
 
 /// Shapes with at least this many rows *and* this reduction depth take

@@ -97,6 +97,89 @@ where
     });
 }
 
+/// Contiguous shard boundaries over weighted items: split `weights`
+/// into at most `max_shards` runs of near-equal total weight. Returned
+/// `(lo, hi)` ranges cover `0..weights.len()` in order with no overlap.
+/// The greedy fill closes a shard once it reaches the ideal target
+/// `ceil(total / shards)`, but never opens more than `max_shards`
+/// shards — the final shard absorbs any remainder. This is the
+/// partitioner behind [`parallel_ragged`]: when per-item work differs
+/// (a 1-row decode step next to a 32-row prompt chunk), splitting by
+/// *item count* would leave one worker carrying most of the rows;
+/// splitting by weight keeps the shards balanced.
+pub fn ragged_bounds(weights: &[usize], max_shards: usize) -> Vec<(usize, usize)> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let shards = max_shards.min(n).max(1);
+    if shards == 1 {
+        return vec![(0, n)];
+    }
+    let total: usize = weights.iter().sum();
+    let target = total.div_ceil(shards).max(1);
+    let mut bounds = Vec::with_capacity(shards);
+    let mut lo = 0usize;
+    let mut acc = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        if acc >= target && bounds.len() + 1 < shards {
+            bounds.push((lo, i + 1));
+            lo = i + 1;
+            acc = 0;
+        }
+    }
+    if lo < n {
+        bounds.push((lo, n));
+    }
+    bounds
+}
+
+/// Shard weighted `items` into contiguous runs across scoped worker
+/// threads — the ragged sibling of [`parallel_chunks`]. `weights[i]` is
+/// the relative cost of `items[i]` (e.g. rows in a stacked window);
+/// shard boundaries come from [`ragged_bounds`], so a mix of heavy and
+/// light items still splits into near-equal work. Runs inline when the
+/// total weight is under `2 * min_weight_per_thread` or only one worker
+/// would be used. `f(first_item, run)` receives each run plus the index
+/// of its first item.
+pub fn parallel_ragged<T, F>(
+    items: &mut [T],
+    weights: &[usize],
+    min_weight_per_thread: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = items.len();
+    debug_assert_eq!(weights.len(), n, "one weight per item");
+    if n == 0 {
+        return;
+    }
+    let total: usize = weights.iter().sum();
+    let min_w = min_weight_per_thread.max(1);
+    let workers = max_threads().min(total / min_w).max(1);
+    if workers <= 1 {
+        f(0, items);
+        return;
+    }
+    let bounds = ragged_bounds(weights, workers);
+    let fref = &f;
+    std::thread::scope(|scope| {
+        let mut rest = items;
+        let mut consumed = 0usize;
+        for &(lo, hi) in &bounds {
+            debug_assert_eq!(lo, consumed, "bounds are contiguous");
+            let take = hi - lo;
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            scope.spawn(move || fref(lo, head));
+            consumed += take;
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +228,61 @@ mod tests {
     fn empty_inputs_are_noops() {
         parallel_chunks::<f32, _>(&mut [], 1, |_, _| panic!("no work"));
         parallel_rows(&mut [], 4, 1, |_, _| panic!("no work"));
+    }
+
+    #[test]
+    fn ragged_bounds_cover_in_order_within_shard_cap() {
+        // Mixed weights, several shard caps: bounds must tile 0..n in
+        // order, never exceed the cap, and every shard (except possibly
+        // the last) must be non-trivially loaded.
+        let weights = [1usize, 32, 1, 1, 8, 1, 1, 1, 16, 4];
+        let total: usize = weights.iter().sum();
+        for cap in [1usize, 2, 3, 4, 8, 64] {
+            let bounds = ragged_bounds(&weights, cap);
+            assert!(!bounds.is_empty());
+            assert!(bounds.len() <= cap.min(weights.len()), "cap {cap}: {bounds:?}");
+            assert_eq!(bounds[0].0, 0);
+            assert_eq!(bounds.last().unwrap().1, weights.len());
+            for w in bounds.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "cap {cap}: contiguous {bounds:?}");
+            }
+            let covered: usize =
+                bounds.iter().map(|&(lo, hi)| weights[lo..hi].iter().sum::<usize>()).sum();
+            assert_eq!(covered, total, "cap {cap}");
+        }
+        assert!(ragged_bounds(&[], 4).is_empty());
+        assert_eq!(ragged_bounds(&[5], 4), vec![(0, 1)]);
+        // All-equal weights degrade to the parallel_chunks split shape.
+        let even = ragged_bounds(&[2usize; 8], 4);
+        assert_eq!(even, vec![(0, 2), (2, 4), (4, 6), (6, 8)]);
+    }
+
+    #[test]
+    fn parallel_ragged_visits_every_item_once_with_offsets() {
+        // Weights chosen so a naive per-count split would be lopsided.
+        let weights: Vec<usize> = (0..103).map(|i| 1 + (i * 7) % 29).collect();
+        let mut items: Vec<usize> = vec![usize::MAX; weights.len()];
+        parallel_ragged(&mut items, &weights, 1, |start, run| {
+            for (off, x) in run.iter_mut().enumerate() {
+                assert_eq!(*x, usize::MAX, "item visited twice");
+                *x = start + off;
+            }
+        });
+        for (i, &x) in items.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn parallel_ragged_small_total_runs_inline() {
+        let mut items = vec![0u8; 3];
+        parallel_ragged(&mut items, &[1, 1, 1], 100, |start, run| {
+            assert_eq!(start, 0);
+            assert_eq!(run.len(), 3);
+            run.iter_mut().for_each(|x| *x = 1);
+        });
+        assert_eq!(items, vec![1, 1, 1]);
+        parallel_ragged::<u8, _>(&mut [], &[], 1, |_, _| panic!("no work"));
     }
 
     #[test]

@@ -30,9 +30,9 @@
 //! | [`runtime`] | PJRT client, artifact/manifest/checkpoint I/O, param store |
 //! | [`train`] | training/eval loops, metrics, checkpoints |
 //! | [`serve`] | request router + dynamic batcher (thread-based) |
-//! | [`serve::decode`] | session-based streaming decode server (incremental engine) |
-//! | [`serve::prefill`] | chunked prompt ingest: stacked-GEMM prefill + continuous-batching admission queue |
-//! | [`serve::speculative`] | speculative decoding: draft-propose / verify-accept on checkpointed O(1) state |
+//! | [`serve::decode`] | session-based streaming decode server: the ragged stacked forward and the unified planner (gather → one stacked pass per wave → scatter → commit, for decode + prefill + speculative traffic alike) |
+//! | [`serve::prefill`] | chunked prompt ingest: stacked-GEMM prefill + continuous-batching admission queue (round-robin chunk planning, token + wall-time budgets) |
+//! | [`serve::speculative`] | speculative decoding: draft-propose / verify-accept on checkpointed O(1) state, plan/finish split so verify windows ride the shared pass |
 //! | [`analysis`] | attention-map dumps, rank histograms, heatmaps |
 //! | [`bench`] | measurement harness (offline substitute for `criterion`) |
 //! | [`coordinator`] | experiment registry: one entry per paper table/figure |

@@ -32,7 +32,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(&["help", "speculate"])?;
+    let args = Args::parse(&["help", "speculate", "no-unified-planner"])?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "experiments" => cmd_experiments(),
@@ -56,7 +56,8 @@ fn run() -> Result<()> {
                 "decode-demo: [--sessions N] [--tokens N] [--layers N] [--heads N] \
                  [--d-model N] [--bandwidth K] [--kernels elu,elu_neg,tanh] [--max-wait-ms T] \
                  [--max-resident N] [--spill-dir DIR] \
-                 [--prompt-len N [--prefill-chunk C] [--prefill-budget N]] \
+                 [--prompt-len N [--prefill-chunk C] [--prefill-budget N] \
+                 [--prefill-budget-ms T]] [--no-unified-planner] \
                  [--speculate [--draft-window K] [--draft ngram|model:LxHxD]]"
             );
             Ok(())
@@ -216,8 +217,12 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 /// — in-memory snapshots by default, one file per stream under
 /// `--spill-dir`). `--prompt-len N` opens every stream with an N-token
 /// prompt ingested through the chunked prefill path (`--prefill-chunk`
-/// tokens per stacked pass, `--prefill-budget` prompt tokens per
-/// scheduler round) and reports time-to-first-token. `--speculate`
+/// tokens per stacked pass, `--prefill-budget` prompt tokens and
+/// `--prefill-budget-ms` milliseconds of prefill work per scheduler
+/// round) and reports time-to-first-token. By default all traffic
+/// rides the unified ragged-batch planner (one stacked pass per wave;
+/// `--no-unified-planner` restores the three-phase scheduler).
+/// `--speculate`
 /// turns every stream speculative: `--draft-window K` tokens are
 /// proposed per step by `--draft` (the stream's own n-gram history —
 /// primed with the prompt — or a smaller draft model `model:LxHxD`)
@@ -262,6 +267,8 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         draft_window: args.usize_or("draft-window", 4)?,
         prefill_chunk: args.usize_or("prefill-chunk", 32)?,
         prefill_budget: args.usize_or("prefill-budget", 256)?,
+        prefill_budget_ms: args.f64_or("prefill-budget-ms", 0.0)?,
+        unified_planner: !args.has("no-unified-planner"),
     };
     let server = match args.get("spill-dir") {
         Some(dir) => DecodeServer::start_with_store(
@@ -337,6 +344,19 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         stats.step_many_calls,
         stats.mean_step_many_width(),
     );
+    if stats.planned_rounds > 0 {
+        println!(
+            "planner: {} stacked passes, rows/pass min {} mean {:.1} max {} | \
+             rows by kind: {} decode, {} prefill, {} verify",
+            stats.planned_rounds,
+            stats.rows_per_pass_min,
+            stats.mean_rows_per_pass(),
+            stats.rows_per_pass_max,
+            stats.decode_rows,
+            stats.prefill_rows,
+            stats.verify_rows,
+        );
+    }
     if stats.spills > 0 || stats.restores > 0 {
         println!(
             "paging: {} spills / {} restores, resident peak {}, {} spilled, \

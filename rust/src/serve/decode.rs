@@ -40,8 +40,16 @@
 //! * Prompted streams — [`DecodeClient::open_stream_with_prompt`]
 //!   admits a stream with a pending prompt; the scheduler ingests it in
 //!   chunked stacked passes ([`super::prefill`]) interleaved with
-//!   decode rounds under `DecodeServerConfig::prefill_budget`, so TTFT
-//!   rides GEMM throughput while decode latency stays bounded.
+//!   decode rounds under `DecodeServerConfig::prefill_budget` (token
+//!   count) and `DecodeServerConfig::prefill_budget_ms` (wall time, via
+//!   an EWMA cost model), so TTFT rides GEMM throughput while decode
+//!   latency stays bounded.
+//! * Unified ragged-batch planner — by default
+//!   (`DecodeServerConfig::unified_planner`) every wave's traffic —
+//!   single decode steps, prompt chunks, speculative verify windows —
+//!   runs as ONE stacked [`ragged_forward`] pass over the concatenated
+//!   ragged panel (gather → pass → scatter → commit), instead of three
+//!   separate phases. Per-stream logits are bit-identical either way.
 //!
 //! Everything here is pure host Rust — no PJRT — so the serving
 //! architecture is exercised end-to-end by `cargo test` even where the
@@ -61,9 +69,11 @@ use crate::kernel::{self, PackedMat};
 use crate::rng::Pcg64;
 use crate::runtime::checkpoint::Leaf;
 use crate::runtime::manifest::Dtype;
-use crate::serve::prefill::{self, PendingPrefill, PrefillOut, PrefillQueue};
+use crate::serve::prefill::{self, ChunkPlan, PendingPrefill, PrefillOut, PrefillQueue};
 use crate::serve::session_store::{self, MemStore, SessionStore};
-use crate::serve::speculative::{SpecFactory, SpeculationConfig, SpeculativeSession};
+use crate::serve::speculative::{
+    SpecFactory, SpecPlan, SpeculationConfig, SpeculativeSession,
+};
 use crate::tensor::Tensor;
 use crate::util::fnv1a64;
 
@@ -491,10 +501,10 @@ impl DecoderSession {
     /// primitive ([`super::prefill`] owns the chunking loop and the
     /// scheduler bookkeeping around it).
     ///
-    /// The whole chunk runs as `C`-row prepacked GEMMs over the shared
-    /// [`stacked_hidden`] spine; with `emit_logits` false the vocab
-    /// readout — the widest GEMM in the model — is skipped entirely,
-    /// which is what lets prompt ingest outrun scalar replay (a scalar
+    /// A thin [`ragged_forward`] builder: one segment, [`Emit::None`]
+    /// (or [`Emit::Last`]). With `emit_logits` false the vocab readout —
+    /// the widest GEMM in the model — is skipped entirely, which is what
+    /// lets prompt ingest outrun scalar replay (a scalar
     /// [`step`](Self::step) pays the readout on every token). With
     /// `emit_logits` true, the *last* row's logits are returned: RMS
     /// norm is row-local and the prepacked readout reduces every row
@@ -511,14 +521,11 @@ impl DecoderSession {
         if tokens.is_empty() {
             return Ok(None);
         }
-        let model = self.model.clone();
-        let x = stacked_hidden(self, tokens)?;
-        if !emit_logits {
-            return Ok(None);
-        }
-        let d = model.config().d_model;
-        let last = Tensor::new(&[1, d], x.row(tokens.len() - 1).to_vec())?;
-        Ok(Some(mm(&rms_norm(&last), &model.w_out)?.into_data()))
+        let emit = if emit_logits { Emit::Last } else { Emit::None };
+        let segs = [SegmentSpec { tokens, emit }];
+        let mut sessions: [&mut DecoderSession; 1] = [self];
+        let mut rows = ragged_forward(&mut sessions, &segs)?;
+        Ok(rows.pop().expect("one segment").pop())
     }
 }
 
@@ -534,52 +541,117 @@ pub fn greedy_argmax(logits: &[f32]) -> i32 {
         .unwrap_or(0) as i32
 }
 
-/// Drive a stacked multi-token pass through one session *without* the
-/// vocab readout: embed the whole window, run every transformer block
-/// as `n`-row prepacked GEMMs while the per-head attention states
-/// advance chronologically ([`FmmDecodeState::step_window_into`]), and
-/// return the final hidden rows (pre-final-RMS-norm). Shared spine of
-/// [`verify_window`] (which reads out logits for every row) and
-/// [`DecoderSession::prefill_chunk`] (which reads out at most the last
-/// row) — the two can never drift because this is the only stacked
-/// forward in the crate.
+/// Which logits rows a [`ragged_forward`] segment reads out.
 ///
-/// Any out-of-vocab token fails the call before any state is touched.
-fn stacked_hidden(sess: &mut DecoderSession, tokens: &[i32]) -> Result<Tensor> {
-    let n = tokens.len();
-    let model = sess.model.clone();
+/// The vocab readout is the widest GEMM in the model, so segments
+/// declare the minimum they need: prompt chunks skip it entirely
+/// ([`Emit::None`]) or pay for one row ([`Emit::Last`]); decode steps
+/// and verify windows read every row ([`Emit::All`] — for a one-row
+/// decode segment the two are the same row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Emit {
+    /// No logits for this segment (non-final prefill chunk).
+    None,
+    /// Only the segment's last row (final prefill chunk).
+    Last,
+    /// Every row (decode step, speculative verify window).
+    All,
+}
+
+/// One stream's slice of a ragged stacked pass: the tokens it consumes
+/// this round and which logits rows it wants back.
+pub(crate) struct SegmentSpec<'a> {
+    pub(crate) tokens: &'a [i32],
+    pub(crate) emit: Emit,
+}
+
+/// Drive one stacked pass over a *ragged* batch of per-stream windows —
+/// the single forward spine behind every multi-row execution in the
+/// crate: [`step_many`] (B one-token segments), [`verify_window`] (one
+/// K+1-token segment), [`DecoderSession::prefill_chunk`] (one C-token
+/// segment), and the unified scheduler planner (any mix at once).
+///
+/// Gather → stacked pass → scatter: every segment's tokens embed into
+/// one `n`-row panel (`n = Σ len`), each transformer block runs as
+/// `n`-row prepacked GEMMs over the concatenated panel while each
+/// stream's per-head attention state advances through its own rows
+/// chronologically ([`incremental::advance_many`] →
+/// [`FmmDecodeState::step_window_into`]), and only the rows the
+/// segments' [`Emit`] modes request go through the vocab readout.
+/// Returns one `Vec` of logits rows per segment (empty under
+/// [`Emit::None`]).
+///
+/// Row `j` of segment `i` reproduces `sessions[i].step(tokens[j])` at
+/// that point *bit for bit*, whatever the batch composition: every
+/// row-local op (embedding gather, RMS-norms, the projection/MLP/
+/// readout multiplies) runs through [`kernel::matmul_prepacked`], whose
+/// per-row reduction order is independent of the row count, and the
+/// attention recurrence is the identical scalar chronological code per
+/// state. This is the invariant that lets the scheduler fuse decode,
+/// prefill, and speculative traffic into one pass per round without
+/// ever perturbing a stream's logits.
+///
+/// All sessions must share one model (`Arc` identity); any invalid
+/// token anywhere in the batch fails the whole call *before* any state
+/// is touched (the embedding gather runs first), so callers pre-validate
+/// when partial failure must not abort neighbors. Zero-length segments
+/// are legal and yield no rows.
+pub(crate) fn ragged_forward(
+    sessions: &mut [&mut DecoderSession],
+    segs: &[SegmentSpec],
+) -> Result<Vec<Vec<Vec<f32>>>> {
+    let b = sessions.len();
+    assert_eq!(segs.len(), b, "one segment per session");
+    if b == 0 {
+        return Ok(Vec::new());
+    }
+    let model = sessions[0].model.clone();
+    if !sessions.iter().all(|s| Arc::ptr_eq(&s.model, &model)) {
+        bail!("stacked pass requires sessions sharing one model");
+    }
+    let lens: Vec<usize> = segs.iter().map(|s| s.tokens.len()).collect();
+    let n: usize = lens.iter().sum();
+    if n == 0 {
+        return Ok(vec![Vec::new(); b]);
+    }
     let cfg = model.config();
     let d = cfg.d_model;
     let dh = d / cfg.heads;
-    // Embed the whole window first: an invalid token errors here, before
-    // any attention state has advanced.
+    // Embed every row first: an invalid token anywhere errors here,
+    // before any attention state has advanced.
     let mut x = Tensor::zeros(&[n, d]);
-    for (i, &tok) in tokens.iter().enumerate() {
-        let row = model.embed_row(tok)?;
-        x.data_mut()[i * d..(i + 1) * d].copy_from_slice(row.data());
+    {
+        let mut row = 0usize;
+        for seg in segs {
+            for &tok in seg.tokens {
+                let e = model.embed_row(tok)?;
+                x.data_mut()[row * d..(row + 1) * d].copy_from_slice(e.data());
+                row += 1;
+            }
+        }
     }
     for l in 0..cfg.layers {
-        let states = &mut sess.states[l];
-        x = model.block(l, &x, |q, k, v| {
-            // Per-head column panels, scratch-backed (cf. `step_many`):
-            // gather the head's columns contiguously, advance the state
-            // through the whole window, scatter the outputs back. The
-            // gather costs O(n·d) copies against the block's O(n·d²)
-            // math; contiguous windows are what a future cross-stream
-            // chunk batch (ROADMAP) would feed to a wide kernel.
+        x = model.block(l, &x, |qt, kt, vt| {
             let mut a = Tensor::zeros(&[n, d]);
+            // Per-head column panels, scratch-backed: gather the head's
+            // columns contiguously across the whole ragged batch,
+            // advance every stream's state through its own rows, scatter
+            // the outputs back. The gather costs O(n·d) copies against
+            // the block's O(n·d²) math. No steady-state allocation.
             let mut qh = kernel::scratch(n * dh);
             let mut kh = kernel::scratch(n * dh);
             let mut vh = kernel::scratch(n * dh);
             let mut oh = kernel::scratch(n * dh);
-            for (head, st) in states.iter_mut().enumerate() {
+            for head in 0..cfg.heads {
                 let lo = head * dh;
                 for t in 0..n {
-                    qh[t * dh..(t + 1) * dh].copy_from_slice(&q.row(t)[lo..lo + dh]);
-                    kh[t * dh..(t + 1) * dh].copy_from_slice(&k.row(t)[lo..lo + dh]);
-                    vh[t * dh..(t + 1) * dh].copy_from_slice(&v.row(t)[lo..lo + dh]);
+                    qh[t * dh..(t + 1) * dh].copy_from_slice(&qt.row(t)[lo..lo + dh]);
+                    kh[t * dh..(t + 1) * dh].copy_from_slice(&kt.row(t)[lo..lo + dh]);
+                    vh[t * dh..(t + 1) * dh].copy_from_slice(&vt.row(t)[lo..lo + dh]);
                 }
-                st.step_window_into(&qh, &kh, &vh, &mut oh);
+                let mut states: Vec<&mut FmmDecodeState> =
+                    sessions.iter_mut().map(|s| &mut s.states[l][head]).collect();
+                incremental::advance_many(&mut states, &lens, &qh, &kh, &vh, &mut oh);
                 for t in 0..n {
                     a.data_mut()[t * d + lo..t * d + lo + dh]
                         .copy_from_slice(&oh[t * dh..(t + 1) * dh]);
@@ -588,50 +660,90 @@ fn stacked_hidden(sess: &mut DecoderSession, tokens: &[i32]) -> Result<Tensor> {
             Ok(a)
         })?;
     }
-    sess.pos += n;
-    Ok(x)
+    for (s, &len) in sessions.iter_mut().zip(&lens) {
+        s.pos += len;
+    }
+    // Readout: gather only the rows the segments asked for. RMS norm is
+    // row-local and the prepacked readout reduces every row identically
+    // at any batch width, so reading a subset of rows cannot perturb
+    // their values.
+    let mut emit_rows: Vec<usize> = Vec::new();
+    {
+        let mut base = 0usize;
+        for (seg, &len) in segs.iter().zip(&lens) {
+            match seg.emit {
+                Emit::None => {}
+                Emit::Last => {
+                    if len > 0 {
+                        emit_rows.push(base + len - 1);
+                    }
+                }
+                Emit::All => emit_rows.extend(base..base + len),
+            }
+            base += len;
+        }
+    }
+    let mut out: Vec<Vec<Vec<f32>>> = segs.iter().map(|_| Vec::new()).collect();
+    if emit_rows.is_empty() {
+        return Ok(out);
+    }
+    let logits = if emit_rows.len() == n {
+        mm(&rms_norm(&x), &model.w_out)?
+    } else {
+        let mut sub = Tensor::zeros(&[emit_rows.len(), d]);
+        for (i, &r) in emit_rows.iter().enumerate() {
+            sub.data_mut()[i * d..(i + 1) * d].copy_from_slice(x.row(r));
+        }
+        mm(&rms_norm(&sub), &model.w_out)?
+    };
+    // Scatter: emit_rows was built walking the segments in order, so
+    // the logits rows come back per segment, in row order.
+    let mut next = 0usize;
+    for (i, (seg, &len)) in segs.iter().zip(&lens).enumerate() {
+        let count = match seg.emit {
+            Emit::None => 0,
+            Emit::Last => usize::from(len > 0),
+            Emit::All => len,
+        };
+        for _ in 0..count {
+            out[i].push(logits.row(next).to_vec());
+            next += 1;
+        }
+    }
+    Ok(out)
 }
 
 /// Drive a multi-token window through one session as a single stacked
 /// step — the verify half of speculative decoding
 /// ([`super::speculative`]) and a window-prefill primitive in its own
-/// right.
+/// right. A thin [`ragged_forward`] builder: one segment, [`Emit::All`].
 ///
 /// Returns one logits row per window token; row `j` equals what
 /// `sess.step(tokens[j])` would have returned at that point, *bit for
-/// bit*: every row-local op (embedding gather, RMS-norms, the
-/// projection/MLP/readout multiplies) runs as one `K`-row
-/// [`kernel::matmul_prepacked`] GEMM whose per-row reduction order is
-/// independent of the row count, and the per-head attention states
-/// advance through the same scalar `step_into` recurrence in window
-/// order. The session is left having consumed the whole window.
+/// bit* (see [`ragged_forward`] for why). The session is left having
+/// consumed the whole window.
 ///
 /// Any out-of-vocab token fails the call before any state is touched.
 pub fn verify_window(sess: &mut DecoderSession, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
-    let n = tokens.len();
-    if n == 0 {
+    if tokens.is_empty() {
         return Ok(Vec::new());
     }
-    let model = sess.model.clone();
-    let x = stacked_hidden(sess, tokens)?;
-    let logits = mm(&rms_norm(&x), &model.w_out)?;
-    Ok((0..n).map(|i| logits.row(i).to_vec()).collect())
+    let segs = [SegmentSpec { tokens, emit: Emit::All }];
+    let mut sessions: [&mut DecoderSession; 1] = [sess];
+    let mut rows = ragged_forward(&mut sessions, &segs)?;
+    Ok(rows.pop().expect("one segment"))
 }
 
 /// Advance many sessions by one token each with stacked compute — the
-/// batched micro-step the [`DecodeServer`] scheduler drives.
+/// batched micro-step of the [`DecodeServer`] scheduler's baseline
+/// (three-phase) mode, and the per-kind reference the planner tests
+/// compare against. A thin [`ragged_forward`] builder: `B` one-token
+/// segments, [`Emit::All`].
 ///
-/// Every row-local op (embedding gather, RMS-norms, the Q/K/V/O and MLP
-/// projections, the vocab readout) runs as one `B`-row GEMM over the
-/// stacked batch instead of `B` separate GEMVs, and the per-head
-/// attention states advance through [`incremental::step_many`] (batched
-/// moment GEMMs, thread-sharded when wide). Row `i` of the result
-/// reproduces `sessions[i].step(tokens[i])` *bit-for-bit*: the
-/// attention recurrence runs the identical scalar code per state, and
-/// every weight multiply goes through the prepacked kernel, whose
-/// per-row reduction order is independent of the batch width — so the
-/// micro-batch composition (and any spill/restore in between) can never
-/// perturb a stream's logits.
+/// Row `i` of the result reproduces `sessions[i].step(tokens[i])`
+/// *bit-for-bit* whatever the batch composition (see
+/// [`ragged_forward`]), so micro-batch membership (and any spill/
+/// restore in between) can never perturb a stream's logits.
 ///
 /// All sessions must share one model (`Arc` identity); any invalid
 /// token fails the whole call *before* any state is touched, so the
@@ -650,47 +762,15 @@ pub fn step_many(
     if !sessions.iter().all(|s| Arc::ptr_eq(&s.model, &model)) {
         bail!("step_many requires sessions sharing one model");
     }
-    let cfg = model.config();
-    let d = cfg.d_model;
-    let dh = d / cfg.heads;
-    let mut x = Tensor::zeros(&[b, d]);
-    for (i, &tok) in tokens.iter().enumerate() {
-        let row = model.embed_row(tok)?;
-        x.data_mut()[i * d..(i + 1) * d].copy_from_slice(row.data());
-    }
-    for l in 0..cfg.layers {
-        x = model.block(l, &x, |qt, kt, vt| {
-            let mut a = Tensor::zeros(&[b, d]);
-            // Per-head column panels, scratch-backed: gather the head's
-            // columns contiguously, advance the stacked states, scatter
-            // the outputs back. No steady-state allocation.
-            let mut qh = kernel::scratch(b * dh);
-            let mut kh = kernel::scratch(b * dh);
-            let mut vh = kernel::scratch(b * dh);
-            let mut oh = kernel::scratch(b * dh);
-            for head in 0..cfg.heads {
-                let lo = head * dh;
-                for i in 0..b {
-                    qh[i * dh..(i + 1) * dh].copy_from_slice(&qt.row(i)[lo..lo + dh]);
-                    kh[i * dh..(i + 1) * dh].copy_from_slice(&kt.row(i)[lo..lo + dh]);
-                    vh[i * dh..(i + 1) * dh].copy_from_slice(&vt.row(i)[lo..lo + dh]);
-                }
-                let mut states: Vec<&mut FmmDecodeState> =
-                    sessions.iter_mut().map(|s| &mut s.states[l][head]).collect();
-                incremental::step_many(&mut states, &qh, &kh, &vh, &mut oh);
-                for i in 0..b {
-                    a.data_mut()[i * d + lo..i * d + lo + dh]
-                        .copy_from_slice(&oh[i * dh..(i + 1) * dh]);
-                }
-            }
-            Ok(a)
-        })?;
-    }
-    for s in sessions.iter_mut() {
-        s.pos += 1;
-    }
-    let logits = mm(&rms_norm(&x), &model.w_out)?;
-    Ok((0..b).map(|i| logits.row(i).to_vec()).collect())
+    let segs: Vec<SegmentSpec> = tokens
+        .iter()
+        .map(|t| SegmentSpec { tokens: std::slice::from_ref(t), emit: Emit::All })
+        .collect();
+    let rows = ragged_forward(sessions, &segs)?;
+    Ok(rows
+        .into_iter()
+        .map(|mut r| r.pop().expect("one row per one-token segment"))
+        .collect())
 }
 
 /// Exactness probe shared by the demos: stream `tokens` through a
@@ -851,6 +931,25 @@ pub struct DecodeServerConfig {
     /// never wait behind more than one budget's worth of prefill work.
     /// `0` means no throttle (each round drains every pending prompt).
     pub prefill_budget: usize,
+    /// Cost-aware companion to `prefill_budget`: at most this many
+    /// wall-clock *milliseconds* of stacked prefill work per scheduler
+    /// round, enforced through an EWMA of measured seconds-per-prompt-
+    /// token ([`PrefillPacer`]). A token count mispredicts when per-
+    /// token cost shifts with model size or thread count; the wall-time
+    /// budget bounds decode latency directly. Whichever budget runs out
+    /// first stops the round's prompt ingest. `0` disables the
+    /// wall-time budget (the default). Ingest always makes progress: at
+    /// least one prompt token is planned per round even when one token
+    /// overruns the budget.
+    pub prefill_budget_ms: f64,
+    /// Drive decode steps, speculative verify windows, and prompt
+    /// chunks through *one* stacked [`ragged_forward`] pass per wave —
+    /// the unified ragged-batch planner (the default). `false` restores
+    /// the three-phase scheduler (speculative steps in place, plain
+    /// `step_many`, prefill after the decode rounds), kept as the bench
+    /// baseline. Per-stream logits are bit-identical either way; only
+    /// the pass shape changes.
+    pub unified_planner: bool,
 }
 
 impl Default for DecodeServerConfig {
@@ -864,6 +963,8 @@ impl Default for DecodeServerConfig {
             draft_window: 4,
             prefill_chunk: 32,
             prefill_budget: 256,
+            prefill_budget_ms: 0.0,
+            unified_planner: true,
         }
     }
 }
@@ -934,6 +1035,19 @@ pub struct DecodeStats {
     /// admission (`open_stream_with_prompt` submit) → final-token
     /// logits delivered.
     pub ttft_secs: f64,
+    /// Stacked [`ragged_forward`] passes the unified planner drove
+    /// (each mixes any number of decode / verify / prefill segments).
+    pub planned_rounds: usize,
+    /// Single-token decode rows that rode a planned stacked pass.
+    pub decode_rows: usize,
+    /// Prompt-chunk rows that rode a planned stacked pass.
+    pub prefill_rows: usize,
+    /// Speculative verify-window rows that rode a planned stacked pass.
+    pub verify_rows: usize,
+    /// Smallest row count of any planned pass (0 until one runs).
+    pub rows_per_pass_min: usize,
+    /// Largest row count of any planned pass.
+    pub rows_per_pass_max: usize,
 }
 
 impl DecodeStats {
@@ -990,6 +1104,17 @@ impl DecodeStats {
             0.0
         } else {
             self.ttft_secs / self.prefills as f64
+        }
+    }
+
+    /// Mean rows per planned stacked pass (0 until one runs) — the
+    /// planner's effective batch width across all traffic kinds.
+    pub fn mean_rows_per_pass(&self) -> f64 {
+        if self.planned_rounds == 0 {
+            0.0
+        } else {
+            (self.decode_rows + self.prefill_rows + self.verify_rows) as f64
+                / self.planned_rounds as f64
         }
     }
 }
@@ -1443,6 +1568,9 @@ fn decode_scheduler(
     let spec = SpecFactory::build(&cfg, model.config()).map_err(|e| format!("{e:#}"));
     let mut res = Residency::new(store, cfg.max_resident_sessions, spec);
     let mut prefills = PrefillQueue::new(cfg.prefill_chunk);
+    // The pacer's cost model (EWMA seconds-per-prompt-token) persists
+    // across rounds; only its per-round spend resets.
+    let mut pacer = PrefillPacer::new(cfg.prefill_budget_ms);
     loop {
         let mut steps: Vec<StepReq> = Vec::new();
         let mut closes: Vec<u64> = Vec::new();
@@ -1511,16 +1639,95 @@ fn decode_scheduler(
             );
         }
 
-        // Execute the drained steps: partition the micro-batch into
-        // rounds of at most one step per session (per-session order is
-        // submission order: one scheduler, FIFO channel), then drive
-        // each round through batched `step_many` — or scalar `step` for
-        // singleton/sub-threshold rounds. Spilled sessions restore on
-        // the way in; LRU residents spill on the way out.
+        // Execute the drained work. Both modes partition the micro-batch
+        // into rounds of at most one step per session (per-session order
+        // is submission order: one scheduler, FIFO channel) and split
+        // rounds into waves of at most `cap` distinct streams.
+        //
+        // Unified planner (default): each wave *also* deals pending
+        // prompt chunks round-robin into its spare residency room, and
+        // the whole wave — decode steps, speculative verify windows,
+        // prompt chunks — runs as ONE stacked `ragged_forward` pass
+        // (gather → pass → scatter → commit). Once the decode rounds are
+        // exhausted, pure-prefill waves keep draining the prompt queue
+        // under the round's budgets.
+        //
+        // Baseline mode: the PR 3-5 three-phase loop — decode rounds
+        // (spec in place, plain `step_many`), then a separate prefill
+        // phase. Kept as the bench baseline; logits are bit-identical.
+        //
+        // Prefill work is skipped once shutdown is requested: queued
+        // *steps* are served first (they are already paid for), but
+        // mid-ingest prompts fail uniformly below — whatever the budget
+        // settings — instead of racing the sentinel.
         let micro_batch = steps.len();
-        if micro_batch > 0 {
-            let t0 = Instant::now();
-            let mut tally = RoundTally::default();
+        let t0 = Instant::now();
+        let mut tally = RoundTally::default();
+        let mut ptally = PrefillTally::default();
+        pacer.round_reset();
+        let mut budget =
+            if cfg.prefill_budget == 0 { usize::MAX } else { cfg.prefill_budget };
+        if cfg.unified_planner {
+            let mut round_iter = partition_rounds(steps).into_iter();
+            loop {
+                let decode_round = round_iter.next();
+                let is_decode_round = decode_round.is_some();
+                if !is_decode_round
+                    && (exit
+                        || prefills.is_empty()
+                        || budget == 0
+                        || pacer.allowance_tokens() == 0)
+                {
+                    break;
+                }
+                let mut wave = decode_round.unwrap_or_default();
+                let mut progressed = false;
+                loop {
+                    let tail = wave.split_off(wave.len().min(res.cap));
+                    let room = res.cap.saturating_sub(wave.len());
+                    let allowance = budget.min(pacer.allowance_tokens());
+                    let mut picks = if exit {
+                        Vec::new()
+                    } else {
+                        prefills.plan_wave(room, allowance)
+                    };
+                    // A stream with both a queued step and a pending
+                    // prompt chunk must not appear twice in one pass;
+                    // its chunk waits for a later wave (the rotation
+                    // cursor already moved past it, so no starvation).
+                    if !wave.is_empty() && !picks.is_empty() {
+                        let wave_ids: HashSet<u64> =
+                            wave.iter().map(|r| r.session).collect();
+                        picks.retain(|p| !wave_ids.contains(&p.session));
+                    }
+                    if wave.is_empty() && picks.is_empty() {
+                        break;
+                    }
+                    let planned: usize = picks.iter().map(|p| p.len()).sum();
+                    budget = budget.saturating_sub(planned);
+                    progressed = true;
+                    run_planned_wave(
+                        wave,
+                        picks,
+                        &model,
+                        &mut res,
+                        &mut prefills,
+                        cfg.batch_threshold,
+                        micro_batch,
+                        &mut pacer,
+                        &mut tally,
+                        &mut ptally,
+                    );
+                    wave = tail;
+                    if wave.is_empty() {
+                        break;
+                    }
+                }
+                if !is_decode_round && !progressed {
+                    break;
+                }
+            }
+        } else {
             for round in partition_rounds(steps) {
                 run_round(
                     round,
@@ -1531,41 +1738,43 @@ fn decode_scheduler(
                     &mut tally,
                 );
             }
+            if !exit && !prefills.is_empty() {
+                run_prefills(&model, &mut res, &mut prefills, budget, &mut pacer, &mut ptally);
+            }
+        }
+        let did_work = micro_batch > 0
+            || tally.planned_rounds > 0
+            || ptally.chunks > 0
+            || ptally.failed > 0;
+        if did_work {
             let mut s = stats.lock().unwrap();
             s.steps += tally.ok;
             s.failed_steps += tally.failed;
-            s.micro_batches += 1;
+            s.micro_batches += usize::from(micro_batch > 0);
             s.batched_steps += tally.batched;
             s.step_many_calls += tally.step_many_calls;
-            s.sessions_closed += tally.disconnected;
+            s.sessions_closed += tally.disconnected + ptally.disconnected;
             s.draft_proposed += tally.draft_proposed;
             s.draft_accepted += tally.draft_accepted;
             s.verify_steps += tally.verify_steps;
             s.lookahead_hits += tally.lookahead_hits;
-            s.exec_secs += t0.elapsed().as_secs_f64();
-            res.sync_stats(&mut s);
-        }
-        // Prefill phase: ingest pending prompt chunks under the
-        // per-round token budget, interleaved with the decode rounds
-        // above (continuous batching — decode latency stays bounded by
-        // the budget while prompts ingest at GEMM throughput). Skipped
-        // once shutdown is requested: queued *steps* are served first
-        // (they are already paid for), but mid-ingest prompts fail
-        // uniformly below — whatever the budget setting — instead of
-        // racing the sentinel.
-        if !exit && !prefills.is_empty() {
-            let budget =
-                if cfg.prefill_budget == 0 { usize::MAX } else { cfg.prefill_budget };
-            let t0 = Instant::now();
-            let mut tally = PrefillTally::default();
-            run_prefills(&model, &mut res, &mut prefills, budget, &mut tally);
-            let mut s = stats.lock().unwrap();
-            s.prefills += tally.completed;
-            s.failed_prefills += tally.failed;
-            s.prefill_tokens += tally.tokens;
-            s.prefill_chunks += tally.chunks;
-            s.ttft_secs += tally.ttft_secs;
-            s.sessions_closed += tally.disconnected;
+            if tally.planned_rounds > 0 {
+                s.rows_per_pass_min = if s.planned_rounds == 0 {
+                    tally.rows_min
+                } else {
+                    s.rows_per_pass_min.min(tally.rows_min)
+                };
+                s.rows_per_pass_max = s.rows_per_pass_max.max(tally.rows_max);
+            }
+            s.planned_rounds += tally.planned_rounds;
+            s.decode_rows += tally.decode_rows;
+            s.prefill_rows += tally.prefill_rows;
+            s.verify_rows += tally.verify_rows;
+            s.prefills += ptally.completed;
+            s.failed_prefills += ptally.failed;
+            s.prefill_tokens += ptally.tokens;
+            s.prefill_chunks += ptally.chunks;
+            s.ttft_secs += ptally.ttft_secs;
             s.exec_secs += t0.elapsed().as_secs_f64();
             res.sync_stats(&mut s);
         }
@@ -1601,32 +1810,101 @@ struct PrefillTally {
     disconnected: usize,
 }
 
-/// Ingest pending prompt chunks, oldest prompt first, until the round's
-/// token budget is spent. Each chunk is one stacked
-/// [`DecoderSession::prefill_chunk`] pass; residency interacts only at
-/// these chunk boundaries — a spilled prefilling stream restores on its
-/// next chunk (pinning only itself, so restores can evict idle
-/// streams), and between chunks it is an ordinary LRU citizen. A chunk
-/// failure (lost snapshot, untrusted state) fails that prompt's open
-/// and disconnects only that stream.
+/// Wall-time prefill budgeter: an EWMA cost model over measured
+/// seconds-per-prompt-token converts `prefill_budget_ms` into a token
+/// allowance each round. The model persists across rounds (costs drift
+/// slowly — model size and thread count are fixed, cache state is not);
+/// the per-round spend resets every scheduler wake-up. Until the first
+/// measurement lands there is no basis to throttle, so the allowance is
+/// unlimited; afterwards at least one token is always allowed at the
+/// start of a round, so ingest makes progress even when a single token
+/// overruns the budget.
+struct PrefillPacer {
+    budget_ms: f64,
+    /// EWMA seconds per prompt token (0 until the first sample).
+    secs_per_token: f64,
+    /// Prefill seconds spent in the current round.
+    spent_secs: f64,
+}
+
+impl PrefillPacer {
+    /// EWMA weight of each new sample.
+    const ALPHA: f64 = 0.25;
+
+    fn new(budget_ms: f64) -> PrefillPacer {
+        PrefillPacer { budget_ms, secs_per_token: 0.0, spent_secs: 0.0 }
+    }
+
+    fn round_reset(&mut self) {
+        self.spent_secs = 0.0;
+    }
+
+    /// Prompt tokens the current round may still ingest.
+    fn allowance_tokens(&self) -> usize {
+        if self.budget_ms <= 0.0 {
+            return usize::MAX;
+        }
+        let remaining = self.budget_ms / 1e3 - self.spent_secs;
+        if remaining <= 0.0 {
+            return 0;
+        }
+        if self.secs_per_token <= 0.0 {
+            return usize::MAX;
+        }
+        let allow = (remaining / self.secs_per_token).floor() as usize;
+        if allow == 0 && self.spent_secs == 0.0 {
+            1
+        } else {
+            allow
+        }
+    }
+
+    /// Fold one measured chunk (`tokens` prompt tokens in `secs`) into
+    /// the cost model and the round's spend.
+    fn record(&mut self, tokens: usize, secs: f64) {
+        if tokens == 0 {
+            return;
+        }
+        self.spent_secs += secs;
+        let sample = secs / tokens as f64;
+        self.secs_per_token = if self.secs_per_token <= 0.0 {
+            sample
+        } else {
+            (1.0 - Self::ALPHA) * self.secs_per_token + Self::ALPHA * sample
+        };
+    }
+}
+
+/// Baseline-mode prefill phase: ingest pending prompt chunks —
+/// round-robin across queued streams ([`PrefillQueue::plan_wave`]) —
+/// until the round's token budget or wall-time allowance is spent. Each
+/// chunk is one stacked [`DecoderSession::prefill_chunk`] pass;
+/// residency interacts only at these chunk boundaries — a spilled
+/// prefilling stream restores on its next chunk (pinning only itself,
+/// so restores can evict idle streams), and between chunks it is an
+/// ordinary LRU citizen. A chunk failure (lost snapshot, untrusted
+/// state) fails that prompt's open and disconnects only that stream.
 fn run_prefills(
     model: &Arc<HostDecoder>,
     res: &mut Residency,
     queue: &mut PrefillQueue,
     budget: usize,
+    pacer: &mut PrefillPacer,
     tally: &mut PrefillTally,
 ) {
     let mut budget = budget;
-    while budget > 0 {
-        let Some(plan) = queue.front_plan(budget) else { break };
+    loop {
+        let allowance = budget.min(pacer.allowance_tokens());
+        let Some(plan) = queue.plan_wave(1, allowance).pop() else { break };
         let id = plan.session;
         let ready = match res.ensure_resident(id, model, &[id]) {
             Ok(true) => Ok(()),
             Ok(false) => Err(anyhow!("unknown or closed session {id}")),
             Err(e) => Err(anyhow!("restoring spilled session {id}: {e:#}")),
         };
+        let t0 = Instant::now();
         let result = ready.and_then(|()| {
-            let tokens = queue.front_tokens(&plan);
+            let tokens = queue.tokens(&plan);
             match res.resident.get_mut(&id) {
                 Some(Slot::Plain(sess)) => sess.prefill_chunk(tokens, plan.is_last),
                 Some(Slot::Spec(spec)) => spec.prefill_chunk(tokens, plan.is_last),
@@ -1636,20 +1914,21 @@ fn run_prefills(
         match result {
             Ok(logits) => {
                 let took = plan.len();
-                budget -= took.min(budget);
+                pacer.record(took, t0.elapsed().as_secs_f64());
+                budget = budget.saturating_sub(took);
                 tally.tokens += took;
                 tally.chunks += 1;
                 res.touch(id);
                 if plan.is_last {
                     let logits = logits.expect("final chunk emits logits");
-                    tally.ttft_secs += queue.finish_front(logits);
+                    tally.ttft_secs += queue.finish(id, logits);
                     tally.completed += 1;
                 } else {
-                    queue.advance_front(took);
+                    queue.advance(id, took);
                 }
             }
             Err(e) => {
-                queue.fail_front(e);
+                queue.fail(id, e);
                 tally.failed += 1;
                 if res.close(id) {
                     tally.disconnected += 1;
@@ -1674,6 +1953,15 @@ struct RoundTally {
     draft_accepted: usize,
     verify_steps: usize,
     lookahead_hits: usize,
+    /// Unified-planner counters: stacked passes driven and their row
+    /// composition. `rows_min` is only meaningful when
+    /// `planned_rounds > 0` (it is seeded by the first pass).
+    planned_rounds: usize,
+    decode_rows: usize,
+    prefill_rows: usize,
+    verify_rows: usize,
+    rows_min: usize,
+    rows_max: usize,
 }
 
 /// Split a drained micro-batch into rounds with at most one step per
@@ -1751,6 +2039,13 @@ fn spec_step(
     let pos = spec.position();
     let result = spec.step(req.token);
     reply_step(req, result, pos, micro_batch, tally);
+    drain_spec_counters(spec, tally);
+}
+
+/// Fold a speculative stream's per-step counters into the round tally —
+/// shared by the in-place [`spec_step`] path and the planner's
+/// plan/finish split, so the accounting can never drift between them.
+fn drain_spec_counters(spec: &mut SpeculativeSession, tally: &mut RoundTally) {
     let c = spec.take_counters();
     tally.draft_proposed += c.draft_proposed;
     tally.draft_accepted += c.draft_accepted;
@@ -1948,6 +2243,349 @@ fn run_wave(
                 tally.disconnected += 1;
                 req.reply.send(Err(anyhow!("batched step failed: {e}"))).ok();
                 drop(sess);
+            }
+        }
+    }
+}
+
+/// What one planned-wave participant contributes to the stacked pass,
+/// and what its scatter step owes afterwards.
+enum PlannedPart {
+    /// Plain decode step riding the pass (request + pre-step position).
+    Plain(StepReq, usize),
+    /// Speculative verify window (request + pre-step position); the
+    /// window itself lives in the parallel `windows` vector.
+    Verify(StepReq, usize),
+    /// One prompt chunk of a queued prefill.
+    Chunk(ChunkPlan),
+}
+
+/// Execute one *planned* wave — the unified ragged-batch planner's
+/// inner step. `wave` holds ≤ cap distinct sessions' decode steps (≤ 1
+/// each); `picks` holds prompt chunks dealt into the wave's spare
+/// residency room. The wave runs as:
+///
+/// 1. **Restore** — every participant (steps and chunks) is made
+///    resident, the whole wave pinned so one member's restore cannot
+///    evict another's just-restored state.
+/// 2. **Plan** — each participant yields its window: a plain step is a
+///    1-token segment (out-of-vocab or sub-`batch_threshold` plains
+///    fall back to the canonical scalar path); a speculative step
+///    either answers from lookahead immediately or yields its K+1-token
+///    verify window ([`SpeculativeSession::plan_step`]); a prompt chunk
+///    yields its ≤ C tokens (speculative streams first rewind to their
+///    committed boundary).
+/// 3. **Execute** — all windows run as ONE stacked [`ragged_forward`]
+///    pass over the concatenated panel.
+/// 4. **Scatter/commit** — logits rows fan back out: plain steps reply,
+///    verify windows run accept/rollback
+///    ([`SpeculativeSession::finish_step`]), chunks advance or finish
+///    their queue entry. The prefill share of the pass's wall time
+///    feeds the [`PrefillPacer`] cost model.
+///
+/// Bit-identity: every window advances through the same per-stream
+/// recurrence and prepacked GEMMs as its scalar per-kind path (see
+/// [`ragged_forward`]), so fusing the traffic kinds never perturbs any
+/// stream's logits — including under residency caps, because restore
+/// happens before the pass and spills only between waves.
+#[allow(clippy::too_many_arguments)]
+fn run_planned_wave(
+    wave: Vec<StepReq>,
+    picks: Vec<ChunkPlan>,
+    model: &Arc<HostDecoder>,
+    res: &mut Residency,
+    queue: &mut PrefillQueue,
+    batch_threshold: usize,
+    micro_batch: usize,
+    pacer: &mut PrefillPacer,
+    tally: &mut RoundTally,
+    ptally: &mut PrefillTally,
+) {
+    // Phase 1: restore. Pin steps and chunks alike.
+    let mut ids: Vec<u64> = wave.iter().map(|r| r.session).collect();
+    ids.extend(picks.iter().map(|p| p.session));
+    let mut status: HashMap<u64, WaveStatus> = HashMap::with_capacity(ids.len());
+    for &id in &ids {
+        let st = match res.ensure_resident(id, model, &ids) {
+            Ok(true) => WaveStatus::Ready,
+            Ok(false) => WaveStatus::Unknown,
+            Err(e) => WaveStatus::Lost(format!("{e:#}")),
+        };
+        status.insert(id, st);
+    }
+    let mut runnable: Vec<StepReq> = Vec::with_capacity(wave.len());
+    for req in wave {
+        let id = req.session;
+        match status.get(&id) {
+            Some(WaveStatus::Ready) => runnable.push(req),
+            Some(WaveStatus::Lost(msg)) => {
+                tally.failed += 1;
+                tally.disconnected += 1;
+                req.reply
+                    .send(Err(anyhow!("restoring spilled session {id}: {msg}")))
+                    .ok();
+            }
+            Some(WaveStatus::Unknown) | None => {
+                tally.failed += 1;
+                req.reply.send(Err(anyhow!("unknown or closed session {id}"))).ok();
+            }
+        }
+    }
+    let mut chunks: Vec<ChunkPlan> = Vec::with_capacity(picks.len());
+    for pick in picks {
+        let id = pick.session;
+        match status.get(&id) {
+            Some(WaveStatus::Ready) => chunks.push(pick),
+            Some(WaveStatus::Lost(msg)) => {
+                queue.fail(id, anyhow!("restoring spilled session {id}: {msg}"));
+                ptally.failed += 1;
+                if res.close(id) {
+                    ptally.disconnected += 1;
+                }
+            }
+            Some(WaveStatus::Unknown) | None => {
+                queue.fail(id, anyhow!("unknown or closed session {id}"));
+                ptally.failed += 1;
+                if res.close(id) {
+                    ptally.disconnected += 1;
+                }
+            }
+        }
+    }
+
+    // Phase 2: plan. Sub-threshold plain rounds keep the scalar path —
+    // `batch_threshold` semantics (including `usize::MAX` = never
+    // batch) are unchanged under the planner.
+    let vocab = model.config().vocab;
+    let plain_candidates = runnable
+        .iter()
+        .filter(|r| {
+            matches!(res.resident.get(&r.session), Some(Slot::Plain(_)))
+                && r.token >= 0
+                && (r.token as usize) < vocab
+        })
+        .count();
+    let batch_plains = plain_candidates >= batch_threshold.max(2);
+
+    // Participants, as parallel vectors: the segments borrow `windows`
+    // while the session refs borrow `slots`, so the two must be
+    // separately owned.
+    let mut part_ids: Vec<u64> = Vec::new();
+    let mut slots: Vec<Slot> = Vec::new();
+    let mut kinds: Vec<PlannedPart> = Vec::new();
+    let mut windows: Vec<Vec<i32>> = Vec::new();
+    let mut emits: Vec<Emit> = Vec::new();
+
+    for req in runnable {
+        let id = req.session;
+        let Some(slot) = res.resident.remove(&id) else {
+            tally.failed += 1;
+            req.reply.send(Err(anyhow!("unknown or closed session {id}"))).ok();
+            continue;
+        };
+        match slot {
+            Slot::Plain(mut sess) => {
+                let in_vocab = req.token >= 0 && (req.token as usize) < vocab;
+                if !batch_plains || !in_vocab {
+                    // Scalar path: canonical out-of-vocab error, and
+                    // the session must not advance on a bad token.
+                    scalar_step(req, &mut sess, micro_batch, tally);
+                    res.resident.insert(id, Slot::Plain(sess));
+                    res.touch(id);
+                    continue;
+                }
+                let pos = sess.position();
+                part_ids.push(id);
+                slots.push(Slot::Plain(sess));
+                windows.push(vec![req.token]);
+                emits.push(Emit::Last);
+                kinds.push(PlannedPart::Plain(req, pos));
+            }
+            Slot::Spec(mut spec) => {
+                let pos = spec.position();
+                match spec.plan_step(req.token) {
+                    Ok(SpecPlan::Ready(logits)) => {
+                        // Lookahead hit (or trivial window): answered
+                        // without joining the pass.
+                        reply_step(req, Ok(logits), pos, micro_batch, tally);
+                        drain_spec_counters(&mut spec, tally);
+                        res.resident.insert(id, Slot::Spec(spec));
+                        res.touch(id);
+                    }
+                    Ok(SpecPlan::Verify(window)) => {
+                        part_ids.push(id);
+                        slots.push(Slot::Spec(spec));
+                        windows.push(window);
+                        emits.push(Emit::All);
+                        kinds.push(PlannedPart::Verify(req, pos));
+                    }
+                    Err(e) => {
+                        reply_step(req, Err(e), pos, micro_batch, tally);
+                        drain_spec_counters(&mut spec, tally);
+                        res.resident.insert(id, Slot::Spec(spec));
+                        res.touch(id);
+                    }
+                }
+            }
+        }
+    }
+    for pick in chunks {
+        let id = pick.session;
+        let Some(mut slot) = res.resident.remove(&id) else {
+            queue.fail(id, anyhow!("unknown or closed session {id}"));
+            ptally.failed += 1;
+            continue;
+        };
+        if let Slot::Spec(spec) = &mut slot {
+            // Rewind to the committed boundary before prompt tokens
+            // land; a failed rewind leaves the state untrusted, so only
+            // this stream disconnects.
+            if let Err(e) = spec.plan_prefill() {
+                queue.fail(id, e);
+                ptally.failed += 1;
+                res.close(id);
+                ptally.disconnected += 1;
+                continue;
+            }
+        }
+        part_ids.push(id);
+        slots.push(slot);
+        windows.push(queue.tokens(&pick).to_vec());
+        emits.push(if pick.is_last { Emit::Last } else { Emit::None });
+        kinds.push(PlannedPart::Chunk(pick));
+    }
+
+    if part_ids.is_empty() {
+        return;
+    }
+
+    // Phase 3: execute — one stacked pass over every window.
+    let mut decode_rows = 0usize;
+    let mut verify_rows = 0usize;
+    let mut prefill_rows = 0usize;
+    for (kind, window) in kinds.iter().zip(&windows) {
+        match kind {
+            PlannedPart::Plain(..) => decode_rows += window.len(),
+            PlannedPart::Verify(..) => verify_rows += window.len(),
+            PlannedPart::Chunk(_) => prefill_rows += window.len(),
+        }
+    }
+    let total_rows = decode_rows + verify_rows + prefill_rows;
+    tally.planned_rounds += 1;
+    tally.decode_rows += decode_rows;
+    tally.verify_rows += verify_rows;
+    tally.prefill_rows += prefill_rows;
+    tally.rows_min = if tally.planned_rounds == 1 {
+        total_rows
+    } else {
+        tally.rows_min.min(total_rows)
+    };
+    tally.rows_max = tally.rows_max.max(total_rows);
+    if decode_rows >= 2 {
+        tally.step_many_calls += 1;
+        tally.batched += decode_rows;
+    }
+    let t0 = Instant::now();
+    let result = {
+        let segs: Vec<SegmentSpec> = windows
+            .iter()
+            .zip(&emits)
+            .map(|(w, &emit)| SegmentSpec { tokens: w, emit })
+            .collect();
+        let mut refs: Vec<&mut DecoderSession> = slots
+            .iter_mut()
+            .map(|slot| match slot {
+                Slot::Plain(sess) => sess,
+                Slot::Spec(spec) => spec.session_mut(),
+            })
+            .collect();
+        ragged_forward(&mut refs, &segs)
+    };
+    let pass_secs = t0.elapsed().as_secs_f64();
+
+    // Phase 4: scatter and commit.
+    match result {
+        Ok(rows) => {
+            if prefill_rows > 0 {
+                // Attribute the pass's wall time to the prefill rows by
+                // their share of the panel — the EWMA the wall-time
+                // budget paces on.
+                pacer.record(
+                    prefill_rows,
+                    pass_secs * prefill_rows as f64 / total_rows as f64,
+                );
+            }
+            for ((((id, slot), kind), window), seg_rows) in
+                part_ids.into_iter().zip(slots).zip(kinds).zip(windows).zip(rows)
+            {
+                match kind {
+                    PlannedPart::Plain(req, pos) => {
+                        let logits =
+                            seg_rows.into_iter().next().expect("one row per decode step");
+                        reply_step(req, Ok(logits), pos, micro_batch, tally);
+                        res.resident.insert(id, slot);
+                        res.touch(id);
+                    }
+                    PlannedPart::Verify(req, pos) => {
+                        let mut slot = slot;
+                        let outcome = match &mut slot {
+                            Slot::Spec(spec) => spec.finish_step(&window, seg_rows),
+                            Slot::Plain(_) => {
+                                Err(anyhow!("verify window planned on a plain stream"))
+                            }
+                        };
+                        reply_step(req, outcome, pos, micro_batch, tally);
+                        if let Slot::Spec(spec) = &mut slot {
+                            drain_spec_counters(spec, tally);
+                        }
+                        res.resident.insert(id, slot);
+                        res.touch(id);
+                    }
+                    PlannedPart::Chunk(pick) => {
+                        ptally.tokens += window.len();
+                        ptally.chunks += 1;
+                        let mut slot = slot;
+                        if let Slot::Spec(spec) = &mut slot {
+                            spec.finish_prefill(&window);
+                        }
+                        res.resident.insert(id, slot);
+                        res.touch(id);
+                        if pick.is_last {
+                            let logits = seg_rows
+                                .into_iter()
+                                .next()
+                                .expect("final chunk emits logits");
+                            ptally.ttft_secs += queue.finish(id, logits);
+                            ptally.completed += 1;
+                        } else {
+                            queue.advance(id, window.len());
+                        }
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            // Unreachable after the vocab pre-checks — but if a stacked
+            // pass ever fails mid-layer, per-head states may be
+            // partially advanced, so none of the participants can be
+            // trusted: disconnect them all (the PR 1 failed-batch
+            // policy). Later steps on these streams get a clean
+            // "unknown or closed session" error.
+            for ((id, slot), kind) in part_ids.into_iter().zip(slots).zip(kinds) {
+                match kind {
+                    PlannedPart::Plain(req, _) | PlannedPart::Verify(req, _) => {
+                        tally.failed += 1;
+                        tally.disconnected += 1;
+                        req.reply.send(Err(anyhow!("batched step failed: {e}"))).ok();
+                    }
+                    PlannedPart::Chunk(_) => {
+                        queue.fail(id, anyhow!("batched step failed: {e}"));
+                        ptally.failed += 1;
+                        res.close(id);
+                        ptally.disconnected += 1;
+                    }
+                }
+                drop(slot);
             }
         }
     }

@@ -33,32 +33,52 @@
 //! | module | role |
 //! |---|---|
 //! | `serve` (this file) | fixed-window request router + dynamic batcher over AOT artifacts |
-//! | [`decode`] | streaming engine: [`decode::HostDecoder`] (the model), [`decode::DecoderSession`] (O(1)/token state), the [`decode::DecodeServer`] scheduler (micro-batching, batched `step_many` rounds, the `Residency` LRU spill manager) |
-//! | [`prefill`] | chunked prompt ingest: builds session state from a full prompt in C-row stacked GEMM passes (readout skipped until the last row), admission queue + per-round token budget for continuous batching |
+//! | [`decode`] | streaming engine: [`decode::HostDecoder`] (the model), [`decode::DecoderSession`] (O(1)/token state), the ragged stacked forward (`ragged_forward`), the [`decode::DecodeServer`] scheduler (the unified ragged-batch planner, the `Residency` LRU spill manager) |
+//! | [`prefill`] | chunked prompt ingest: builds session state from a full prompt in C-row stacked GEMM passes (readout skipped until the last row); admission queue with round-robin chunk planning + per-round token/wall-time budgets for continuous batching |
 //! | [`session_store`] | the spill tier: FMMS v1 self-validating snapshot codec + [`session_store::MemStore`]/[`session_store::DiskStore`] behind the [`session_store::SessionStore`] trait |
-//! | [`speculative`] | draft-propose / verify-accept lookahead over checkpoint/rollback of the O(1) state |
+//! | [`speculative`] | draft-propose / verify-accept lookahead over checkpoint/rollback of the O(1) state, split into plan/finish halves so the verify window can ride a shared pass |
 //!
-//! How they connect — each scheduler round runs a decode phase, then a
-//! budgeted prefill phase, so prompt ingest and token decode share the
-//! thread continuously instead of head-of-line blocking each other:
+//! How they connect — the *unified ragged-batch planner* (the default;
+//! `DecodeServerConfig::unified_planner`): each scheduler round gathers
+//! every pending row across all streams — single decode steps, C-row
+//! prompt chunks, K+1-row speculative verify windows — into one row
+//! plan per wave, drives ONE stacked pass per wave over the
+//! concatenated panel, and scatters logits/commits back per stream:
 //!
 //! ```text
-//!             DecodeServer scheduler (one thread), per round:
-//!   steps ──▶ rounds ──▶ waves ──▶ step_many / scalar step ── plain streams
-//!                │                 SpeculativeSession::step ── speculative
-//!                │                   │  draft (NGram | draft model)
-//!                │                   └─ verify_window + checkpoint/rollback
-//!                │
-//!   prompts ──▶ PrefillQueue ──▶ ≤ prefill_budget tokens of chunked
-//!                │               stacked passes (oldest prompt first;
-//!                │               draft sources primed as chunks land)
+//!          DecodeServer scheduler (one thread), per round:
+//!
+//!   steps ──▶ rounds ─▶ waves (≤ cap streams) ──┐ GATHER: one window
+//!                │   spec streams: plan_step    │ per stream → ragged
+//!                │   (lookahead hit | verify    │ row plan
+//!                │    window + checkpoint)      │
+//!   prompts ──▶ PrefillQueue ──▶ round-robin    │
+//!                │   chunks into the wave's     │
+//!                │   spare room, ≤ token budget │
+//!                │   ∧ ≤ ms budget (EWMA pacer) │
+//!                │                              ▼
+//!                │        EXECUTE: one stacked ragged_forward pass —
+//!                │        n-row prepacked GEMMs + per-head
+//!                │        advance_many; readout only for emitted rows
+//!                │                              │
+//!                │        SCATTER/COMMIT: reply decode logits;
+//!                │        finish_step (accept/rollback) for verify
+//!                │        windows; advance/finish prompt chunks
 //!                ▼
 //!             Residency (LRU, cap) ──spill/restore──▶ SessionStore
-//!                                    (snapshots only at committed /
-//!                                     chunk boundaries; speculative
-//!                                     lookahead is recomputed, never
-//!                                     serialized)
+//!                                    (restore before each wave, spill
+//!                                     between waves; snapshots only at
+//!                                     committed / chunk boundaries —
+//!                                     speculative lookahead is
+//!                                     recomputed, never serialized)
 //! ```
+//!
+//! With `unified_planner: false` the scheduler falls back to the
+//! three-phase baseline (speculative steps in place, plain `step_many`
+//! rounds, then a budgeted prefill phase) — kept for benchmarking;
+//! per-stream logits are bit-identical in both modes because every row
+//! advances through the same per-stream recurrence and prepacked GEMMs
+//! whatever panel it rides (`benches/serve_planner.rs` asserts this).
 //!
 //! [`decode`] is the session-based streaming sibling of this module:
 //! instead of recomputing a fixed window per request it decodes token by

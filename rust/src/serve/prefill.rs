@@ -134,7 +134,7 @@ impl PendingPrefill {
     }
 }
 
-/// One planned stacked pass: tokens `lo..hi` of the front prompt.
+/// One planned stacked pass: tokens `lo..hi` of one queued prompt.
 pub(crate) struct ChunkPlan {
     pub(crate) session: u64,
     lo: usize,
@@ -149,20 +149,28 @@ impl ChunkPlan {
     }
 }
 
-/// FIFO queue of pending prompt ingests, consumed oldest-first — the
-/// admission half of continuous batching. Finishing the oldest prompt
-/// before starting the next minimizes mean TTFT; per-round fairness
-/// against decode traffic comes from the caller's token budget, not
-/// from interleaving prompts with each other.
+/// Queue of pending prompt ingests with *round-robin* chunk planning —
+/// the admission half of continuous batching. Admission order is FIFO,
+/// but each planning wave deals at most one chunk per queued stream,
+/// resuming a rotating cursor where the previous wave stopped — so one
+/// long prompt can no longer starve the short prompts admitted behind
+/// it: a C-token prompt's TTFT is bounded by O(queue width) rounds, not
+/// by its neighbors' lengths. (The old FIFO-by-stream policy minimized
+/// *mean* TTFT by finishing the oldest prompt first, but its tail
+/// latency was unbounded — a regression test in `tests/planner.rs` pins
+/// the fix.)
 pub(crate) struct PrefillQueue {
     pending: VecDeque<PendingPrefill>,
     chunk: usize,
+    /// Rotating cursor: the queue index where the next planning wave
+    /// starts dealing chunks.
+    cursor: usize,
 }
 
 impl PrefillQueue {
     /// `chunk`: tokens per stacked pass (clamped to ≥ 1).
     pub(crate) fn new(chunk: usize) -> PrefillQueue {
-        PrefillQueue { pending: VecDeque::new(), chunk: chunk.max(1) }
+        PrefillQueue { pending: VecDeque::new(), chunk: chunk.max(1), cursor: 0 }
     }
 
     pub(crate) fn is_empty(&self) -> bool {
@@ -173,38 +181,66 @@ impl PrefillQueue {
         self.pending.push_back(p);
     }
 
-    /// Plan the front prompt's next chunk under `budget` remaining
-    /// round tokens; `None` when the queue is empty or the budget is 0.
-    pub(crate) fn front_plan(&self, budget: usize) -> Option<ChunkPlan> {
-        let p = self.pending.front()?;
-        let len = self.chunk.min(budget).min(p.prompt.len() - p.cursor);
-        if len == 0 {
-            return None;
+    /// Plan one wave of chunks round-robin across the queued streams:
+    /// at most one chunk for each of up to `max_streams` distinct
+    /// streams, at most `budget` tokens in total, starting at the
+    /// rotating cursor and leaving it after the last stream dealt.
+    /// Empty when the queue is empty or either limit is 0.
+    pub(crate) fn plan_wave(&mut self, max_streams: usize, budget: usize) -> Vec<ChunkPlan> {
+        let n = self.pending.len();
+        if n == 0 || max_streams == 0 || budget == 0 {
+            return Vec::new();
         }
-        Some(ChunkPlan {
-            session: p.session,
-            lo: p.cursor,
-            hi: p.cursor + len,
-            is_last: p.cursor + len == p.prompt.len(),
-        })
+        let mut plans = Vec::new();
+        let mut budget = budget;
+        let start = self.cursor % n;
+        for k in 0..n {
+            if plans.len() >= max_streams || budget == 0 {
+                break;
+            }
+            let idx = (start + k) % n;
+            let p = &self.pending[idx];
+            let len = self.chunk.min(budget).min(p.prompt.len() - p.cursor);
+            if len == 0 {
+                continue;
+            }
+            plans.push(ChunkPlan {
+                session: p.session,
+                lo: p.cursor,
+                hi: p.cursor + len,
+                is_last: p.cursor + len == p.prompt.len(),
+            });
+            budget -= len;
+            self.cursor = (idx + 1) % n;
+        }
+        plans
     }
 
-    /// The token slice a [`front_plan`](Self::front_plan) refers to.
-    pub(crate) fn front_tokens(&self, plan: &ChunkPlan) -> &[i32] {
-        &self.pending.front().expect("planned front exists").prompt[plan.lo..plan.hi]
+    /// The token slice a [`plan_wave`](Self::plan_wave) plan refers to.
+    pub(crate) fn tokens(&self, plan: &ChunkPlan) -> &[i32] {
+        let p = self
+            .pending
+            .iter()
+            .find(|p| p.session == plan.session)
+            .expect("planned session is queued");
+        &p.prompt[plan.lo..plan.hi]
     }
 
-    /// Record a completed non-final chunk of the front prompt.
-    pub(crate) fn advance_front(&mut self, tokens: usize) {
-        let p = self.pending.front_mut().expect("planned front exists");
+    /// Record a completed non-final chunk of `session`'s prompt.
+    pub(crate) fn advance(&mut self, session: u64, tokens: usize) {
+        let p = self
+            .pending
+            .iter_mut()
+            .find(|p| p.session == session)
+            .expect("planned session is queued");
         p.cursor += tokens;
         p.chunks += 1;
     }
 
-    /// Complete the front prompt: deliver [`PrefillOut`] to the opener
-    /// and return the TTFT in seconds (for the stats tally).
-    pub(crate) fn finish_front(&mut self, logits: Vec<f32>) -> f64 {
-        let p = self.pending.pop_front().expect("planned front exists");
+    /// Complete `session`'s prompt: deliver [`PrefillOut`] to the
+    /// opener and return the TTFT in seconds (for the stats tally).
+    pub(crate) fn finish(&mut self, session: u64, logits: Vec<f32>) -> f64 {
+        let p = self.remove(session).expect("planned session is queued");
         let ttft = p.submitted.elapsed();
         p.reply
             .send(Ok(PrefillOut {
@@ -218,18 +254,27 @@ impl PrefillQueue {
         ttft.as_secs_f64()
     }
 
-    /// Fail the front prompt: the opener receives `err`.
-    pub(crate) fn fail_front(&mut self, err: anyhow::Error) {
-        let p = self.pending.pop_front().expect("planned front exists");
-        p.reply.send(Err(err)).ok();
+    /// Fail `session`'s prompt: the opener receives `err`.
+    pub(crate) fn fail(&mut self, session: u64, err: anyhow::Error) {
+        if let Some(p) = self.remove(session) {
+            p.reply.send(Err(err)).ok();
+        }
+    }
+
+    /// Remove a session's entry, keeping the rotation cursor pointing
+    /// at the same *stream* it pointed at before the removal.
+    fn remove(&mut self, session: u64) -> Option<PendingPrefill> {
+        let idx = self.pending.iter().position(|p| p.session == session)?;
+        if idx < self.cursor {
+            self.cursor -= 1;
+        }
+        self.pending.remove(idx)
     }
 
     /// Drop a session's pending ingest (its reply sender with it — the
     /// opener observes a disconnect); true if one was queued.
     pub(crate) fn cancel(&mut self, session: u64) -> bool {
-        let before = self.pending.len();
-        self.pending.retain(|p| p.session != session);
-        before != self.pending.len()
+        self.remove(session).is_some()
     }
 
     /// Fail every pending ingest with `msg` (server shutdown).
@@ -237,6 +282,7 @@ impl PrefillQueue {
         for p in self.pending.drain(..) {
             p.reply.send(Err(anyhow!("{msg}"))).ok();
         }
+        self.cursor = 0;
     }
 }
 
@@ -331,30 +377,73 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         q.push(PendingPrefill::new(7, (0..10).collect(), Instant::now(), tx));
 
-        // Full-budget plans walk 4, 4, 2 with is_last on the third.
-        let p = q.front_plan(usize::MAX).unwrap();
+        // Full-budget waves walk 4, 4, 2 with is_last on the third.
+        let p = q.plan_wave(1, usize::MAX).pop().unwrap();
         assert_eq!((p.session, p.len(), p.is_last), (7, 4, false));
-        assert_eq!(q.front_tokens(&p), &[0, 1, 2, 3]);
-        q.advance_front(p.len());
+        assert_eq!(q.tokens(&p), &[0, 1, 2, 3]);
+        q.advance(p.session, p.len());
 
         // A tight budget shrinks the chunk below the configured size.
-        let p = q.front_plan(3).unwrap();
+        let p = q.plan_wave(1, 3).pop().unwrap();
         assert_eq!((p.len(), p.is_last), (3, false));
-        assert_eq!(q.front_tokens(&p), &[4, 5, 6]);
-        q.advance_front(p.len());
+        assert_eq!(q.tokens(&p), &[4, 5, 6]);
+        q.advance(p.session, p.len());
 
-        let p = q.front_plan(usize::MAX).unwrap();
+        let p = q.plan_wave(1, usize::MAX).pop().unwrap();
         assert_eq!((p.len(), p.is_last), (3, true));
-        assert_eq!(q.front_tokens(&p), &[7, 8, 9]);
-        let secs = q.finish_front(vec![1.0]);
+        assert_eq!(q.tokens(&p), &[7, 8, 9]);
+        let secs = q.finish(p.session, vec![1.0]);
         assert!(secs >= 0.0);
         assert!(q.is_empty());
-        assert!(q.front_plan(usize::MAX).is_none());
+        assert!(q.plan_wave(1, usize::MAX).is_empty());
 
-        // Zero budget plans nothing.
+        // Zero budget (or zero streams) plans nothing.
         let (tx, _rx) = mpsc::channel();
         q.push(PendingPrefill::new(8, vec![1], Instant::now(), tx));
-        assert!(q.front_plan(0).is_none());
+        assert!(q.plan_wave(1, 0).is_empty());
+        assert!(q.plan_wave(0, usize::MAX).is_empty());
+    }
+
+    #[test]
+    fn queue_deals_chunks_round_robin_across_streams() {
+        let mut q = PrefillQueue::new(2);
+        let keep: Vec<_> = (0..3)
+            .map(|i| {
+                let (tx, rx) = mpsc::channel();
+                let len = [5usize, 2, 3][i as usize];
+                q.push(PendingPrefill::new(
+                    10 + i,
+                    vec![0; len],
+                    Instant::now(),
+                    tx,
+                ));
+                rx
+            })
+            .collect();
+
+        // A wide wave deals one chunk per stream, in queue order. The
+        // short stream (11) reaches is_last in the very first wave even
+        // though a longer prompt sits ahead of it — the fairness fix.
+        let wave = q.plan_wave(usize::MAX, usize::MAX);
+        let dealt: Vec<_> = wave.iter().map(|p| (p.session, p.len(), p.is_last)).collect();
+        assert_eq!(dealt, vec![(10, 2, false), (11, 2, true), (12, 2, false)]);
+        q.advance(10, 2);
+        q.finish(11, vec![0.0]);
+        q.advance(12, 2);
+
+        // Narrow waves rotate: the cursor resumes at the stream after
+        // the last one dealt, so 10 and 12 alternate.
+        let p = q.plan_wave(1, usize::MAX).pop().unwrap();
+        assert_eq!((p.session, p.len(), p.is_last), (10, 2, false));
+        q.advance(10, 2);
+        let p = q.plan_wave(1, usize::MAX).pop().unwrap();
+        assert_eq!((p.session, p.len(), p.is_last), (12, 1, true));
+        q.finish(12, vec![0.0]);
+        let p = q.plan_wave(1, usize::MAX).pop().unwrap();
+        assert_eq!((p.session, p.len(), p.is_last), (10, 1, true));
+        q.finish(10, vec![0.0]);
+        assert!(q.is_empty());
+        drop(keep);
     }
 
     #[test]
@@ -362,11 +451,11 @@ mod tests {
         let mut q = PrefillQueue::new(2);
         let (tx, rx) = mpsc::channel();
         q.push(PendingPrefill::new(1, vec![5, 6, 7], Instant::now(), tx));
-        let p = q.front_plan(usize::MAX).unwrap();
-        q.advance_front(p.len());
-        let p = q.front_plan(usize::MAX).unwrap();
+        let p = q.plan_wave(1, usize::MAX).pop().unwrap();
+        q.advance(p.session, p.len());
+        let p = q.plan_wave(1, usize::MAX).pop().unwrap();
         assert!(p.is_last);
-        q.finish_front(vec![0.5, 0.25]);
+        q.finish(p.session, vec![0.5, 0.25]);
         let out = rx.recv().unwrap().unwrap();
         assert_eq!(out.session, 1);
         assert_eq!(out.prompt_tokens, 3);
@@ -375,7 +464,7 @@ mod tests {
 
         let (tx, rx) = mpsc::channel();
         q.push(PendingPrefill::new(2, vec![5], Instant::now(), tx));
-        q.fail_front(anyhow!("synthetic ingest failure"));
+        q.fail(2, anyhow!("synthetic ingest failure"));
         let err = rx.recv().unwrap().unwrap_err();
         assert!(format!("{err}").contains("synthetic"), "{err}");
 

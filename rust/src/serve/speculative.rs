@@ -336,6 +336,19 @@ pub struct SpecCounters {
     pub lookahead_hits: usize,
 }
 
+/// What a planned speculative step needs from the model — the contract
+/// between [`SpeculativeSession::plan_step`] and the
+/// [`super::decode`] scheduler's ragged planner.
+pub(crate) enum SpecPlan {
+    /// Answered from verified lookahead: these logits go straight back
+    /// to the client, no model row needed this round.
+    Ready(Vec<f32>),
+    /// Run this window (submitted token + accepted-clipped drafts)
+    /// through the wrapped session — one stacked segment, every row
+    /// emitted — then call [`SpeculativeSession::finish_step`].
+    Verify(Vec<i32>),
+}
+
 /// A decode stream with draft-propose / verify-accept lookahead wrapped
 /// around a plain [`DecoderSession`].
 ///
@@ -418,7 +431,34 @@ impl SpeculativeSession {
     /// returns, whatever the draft proposed along the way. An
     /// out-of-vocab token errors without disturbing any state (same
     /// contract as the scalar path).
+    ///
+    /// Thin plan→execute→finish composition over
+    /// [`plan_step`](Self::plan_step) /
+    /// [`finish_step`](Self::finish_step) — the same
+    /// split the [`super::decode`] planner drives, except the verify
+    /// window runs as a private stacked pass here instead of riding a
+    /// shared cross-stream panel. Bit-identity between the two is by
+    /// construction: the prepacked kernels reduce every row identically
+    /// at any batch width.
     pub fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+        match self.plan_step(token)? {
+            SpecPlan::Ready(logits) => Ok(logits),
+            SpecPlan::Verify(window) => {
+                let rows = verify_window(&mut self.sess, &window)?;
+                self.finish_step(&window, rows)
+            }
+        }
+    }
+
+    /// Plan one step: either answer from verified lookahead with zero
+    /// model compute ([`SpecPlan::Ready`]), or prepare the stream for a
+    /// stacked verify window ([`SpecPlan::Verify`]) — rewound to the
+    /// committed boundary, draft proposed/clipped, and (when drafts are
+    /// in flight) checkpointed. The caller must then run the returned
+    /// window through the wrapped session (one stacked pass, all rows
+    /// emitted) and hand the rows to [`finish_step`](Self::finish_step).
+    /// An out-of-vocab token errors before any state moves.
+    pub(crate) fn plan_step(&mut self, token: i32) -> Result<SpecPlan> {
         // Fast path: the client submitted exactly the predicted greedy
         // continuation; its logits row was verified ahead of time.
         if let Some((predicted, _)) = self.pending.front() {
@@ -428,7 +468,7 @@ impl SpeculativeSession {
                 self.replay.push(token);
                 self.draft.observe(token);
                 self.counters.lookahead_hits += 1;
-                return Ok(logits);
+                return Ok(SpecPlan::Ready(logits));
             }
         }
 
@@ -455,10 +495,7 @@ impl SpeculativeSession {
             // Nothing to speculate on: one plain (stacked-width-1)
             // verify, and crucially *no checkpoint* — a draft source
             // with nothing to say costs nothing over a plain stream.
-            let rows = verify_window(&mut self.sess, &[token])?;
-            self.counters.verify_steps += 1;
-            self.committed += 1;
-            return Ok(rows.into_iter().next().expect("one row"));
+            return Ok(SpecPlan::Verify(vec![token]));
         }
 
         // Open a speculation epoch: checkpoint the committed boundary
@@ -468,7 +505,24 @@ impl SpeculativeSession {
         let mut window_toks = Vec::with_capacity(1 + drafts.len());
         window_toks.push(token);
         window_toks.extend_from_slice(&drafts);
-        let rows = verify_window(&mut self.sess, &window_toks)?;
+        Ok(SpecPlan::Verify(window_toks))
+    }
+
+    /// Finish a [`SpecPlan::Verify`] step: `rows` are the logits the
+    /// planned `window` produced (one per window token, in order —
+    /// whether from a private [`verify_window`] pass or a shared ragged
+    /// panel). Accepts the longest draft prefix matching the target's
+    /// own greedy chain, rolls back and replays the committed prefix on
+    /// a rejection, queues the verified lookahead, and returns the
+    /// submitted token's logits row.
+    pub(crate) fn finish_step(
+        &mut self,
+        window: &[i32],
+        rows: Vec<Vec<f32>>,
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(rows.len(), window.len(), "one logits row per window token");
+        let token = window[0];
+        let drafts = &window[1..];
         self.counters.verify_steps += 1;
         self.counters.draft_proposed += drafts.len();
 
@@ -476,8 +530,7 @@ impl SpeculativeSession {
         // greedy chain: d1 against argmax(row of `token`), d2 against
         // argmax(row of d1), ... Those rows are verified future answers.
         let mut accepted = 0;
-        while accepted < drafts.len()
-            && drafts[accepted] == greedy_argmax(&rows[accepted])
+        while accepted < drafts.len() && drafts[accepted] == greedy_argmax(&rows[accepted])
         {
             accepted += 1;
         }
@@ -488,7 +541,7 @@ impl SpeculativeSession {
             // `token` plus the accepted prefix — one stacked pass,
             // bit-identical to the rows already in hand.
             self.sess.rollback(&self.base)?;
-            verify_window(&mut self.sess, &window_toks[..1 + accepted])?;
+            verify_window(&mut self.sess, &window[..1 + accepted])?;
         }
 
         let mut rows = rows.into_iter();
@@ -496,8 +549,10 @@ impl SpeculativeSession {
         for (d, row) in drafts.iter().take(accepted).zip(rows) {
             self.pending.push_back((*d, row));
         }
-        self.replay.clear();
-        self.replay.push(token);
+        if !drafts.is_empty() {
+            self.replay.clear();
+            self.replay.push(token);
+        }
         self.committed += 1;
         Ok(first)
     }
@@ -523,11 +578,34 @@ impl SpeculativeSession {
         tokens: &[i32],
         emit_logits: bool,
     ) -> Result<Option<Vec<f32>>> {
-        self.sync_to_committed()?;
+        self.plan_prefill()?;
         let out = self.sess.prefill_chunk(tokens, emit_logits)?;
+        self.finish_prefill(tokens);
+        Ok(out)
+    }
+
+    /// Prepare the wrapped session for a prompt chunk riding a shared
+    /// ragged pass: rewind to the committed boundary (discarding stale
+    /// lookahead — none can be in flight mid-prompt anyway). The caller
+    /// runs the chunk rows through the session, then calls
+    /// [`finish_prefill`](Self::finish_prefill) with the same tokens.
+    pub(crate) fn plan_prefill(&mut self) -> Result<()> {
+        self.sync_to_committed()
+    }
+
+    /// Commit a prompt chunk the shared pass just ingested: prime the
+    /// draft source and move the committed boundary past it.
+    pub(crate) fn finish_prefill(&mut self, tokens: &[i32]) {
         self.draft.observe_many(tokens);
         self.committed += tokens.len();
-        Ok(out)
+    }
+
+    /// The wrapped session — how the [`super::decode`] planner borrows
+    /// a speculative stream's per-head states into a shared ragged pass
+    /// between [`plan_step`](Self::plan_step) and
+    /// [`finish_step`](Self::finish_step).
+    pub(crate) fn session_mut(&mut self) -> &mut DecoderSession {
+        &mut self.sess
     }
 
     /// Rewind the wrapped session to the committed boundary, discarding

@@ -1,0 +1,390 @@
+//! Integration: unified ragged-batch planner (`serve::decode`).
+//!
+//! Pins the planner's one hard promise — gathering decode steps,
+//! prompt chunks, and speculative verify windows into ONE stacked pass
+//! per wave is *bit-identical* to the per-kind scalar paths — across a
+//! grid of {feature-map sets} × {bandwidths} × {residency caps}, for
+//! unified and three-phase-baseline schedulers alike. Also pins
+//! partition invariance (wave/budget/chunk knobs never change tokens),
+//! round-robin prefill fairness (short-prompt TTFT bounded under a
+//! long-prompt neighbor), and the planner observability counters.
+//!
+//! Everything here is host-side — no artifacts required, never skips.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fmmformer::attention::FeatureMap;
+use fmmformer::serve::decode::{
+    greedy_argmax, DecodeConfig, DecodeServer, DecodeServerConfig, DecodeStats,
+    DecoderSession, HostDecoder,
+};
+use fmmformer::serve::prefill::deterministic_prompt;
+use fmmformer::serve::speculative::SpeculationConfig;
+
+fn tiny_config(bandwidth: usize, kernels: &[FeatureMap]) -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 16,
+        vocab: 32,
+        bandwidth,
+        kernels: kernels.to_vec(),
+        w1: 0.6,
+        w2: 0.9,
+        seed: 3,
+    }
+}
+
+/// Greedy scalar reference: feed `prompt` token by token, then decode
+/// `steps` greedy tokens. Returns the logits of every emitted position
+/// — the last prompt token first (when a prompt is given), then one
+/// entry per generated step. `start` seeds the first generated token
+/// for unprompted streams; prompted streams continue from the argmax
+/// of the prompt's final logits.
+fn scalar_reference(
+    model: &Arc<HostDecoder>,
+    prompt: &[i32],
+    start: Option<i32>,
+    steps: usize,
+) -> Vec<Vec<f32>> {
+    let mut sess = DecoderSession::new(model.clone());
+    let mut out = Vec::with_capacity(steps + 1);
+    let mut last = Vec::new();
+    for &t in prompt {
+        last = sess.step(t).unwrap();
+    }
+    if !prompt.is_empty() {
+        out.push(last.clone());
+    }
+    let mut tok = start.unwrap_or_else(|| greedy_argmax(&last));
+    for _ in 0..steps {
+        let logits = sess.step(tok).unwrap();
+        tok = greedy_argmax(&logits);
+        out.push(logits);
+    }
+    out
+}
+
+/// Per-kind logits collected from one mixed-load server run. Prompted
+/// entries lead with the prompt's final logits (mirroring
+/// [`scalar_reference`] with a prompt).
+struct MixedRun {
+    plain: Vec<Vec<Vec<f32>>>,
+    prompted: Vec<Vec<Vec<f32>>>,
+    spec: Vec<Vec<Vec<f32>>>,
+}
+
+/// Drive `streams` concurrent sessions of each kind — plain decode,
+/// plain prompted, speculative — against one server, all racing on
+/// their own threads, and collect every step's logits.
+fn run_mixed(
+    cfg: DecodeConfig,
+    server_cfg: DecodeServerConfig,
+    streams: usize,
+    steps: usize,
+    prompt_len: usize,
+) -> (MixedRun, DecodeStats) {
+    let vocab = cfg.vocab;
+    let server = DecodeServer::start(HostDecoder::new(cfg).unwrap(), server_cfg);
+    let client = server.client();
+
+    let mut plain_h = Vec::new();
+    let mut prompted_h = Vec::new();
+    let mut spec_h = Vec::new();
+    for s in 0..streams {
+        let c = client.clone();
+        plain_h.push(std::thread::spawn(move || -> Vec<Vec<f32>> {
+            let stream = c.open_stream_plain().unwrap();
+            let mut tok = (s % vocab) as i32;
+            let mut got = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                let out = stream.step(tok).unwrap();
+                tok = greedy_argmax(&out.logits);
+                got.push(out.logits);
+            }
+            got
+        }));
+        let c = client.clone();
+        prompted_h.push(std::thread::spawn(move || -> Vec<Vec<f32>> {
+            let prompt = deterministic_prompt(prompt_len, vocab, 100 + s as u64);
+            let (stream, out) = c.open_stream_with_prompt_plain(&prompt).unwrap();
+            let mut tok = greedy_argmax(&out.logits);
+            let mut got = vec![out.logits];
+            for _ in 0..steps {
+                let out = stream.step(tok).unwrap();
+                tok = greedy_argmax(&out.logits);
+                got.push(out.logits);
+            }
+            got
+        }));
+        let c = client.clone();
+        spec_h.push(std::thread::spawn(move || -> Vec<Vec<f32>> {
+            let stream = c.open_stream_speculative().unwrap();
+            let mut tok = ((7 + s) % vocab) as i32;
+            let mut got = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                let out = stream.step(tok).unwrap();
+                tok = greedy_argmax(&out.logits);
+                got.push(out.logits);
+            }
+            got
+        }));
+    }
+    let join = |hs: Vec<std::thread::JoinHandle<Vec<Vec<f32>>>>| {
+        hs.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+    };
+    let run = MixedRun {
+        plain: join(plain_h),
+        prompted: join(prompted_h),
+        spec: join(spec_h),
+    };
+    drop(client);
+    (run, server.shutdown())
+}
+
+/// Compare every stream of a mixed run, bit for bit, against scalar
+/// references rebuilt from a private model instance.
+fn assert_matches_scalar(
+    run: &MixedRun,
+    model: &Arc<HostDecoder>,
+    streams: usize,
+    steps: usize,
+    prompt_len: usize,
+    label: &str,
+) {
+    let vocab = model.config().vocab;
+    for s in 0..streams {
+        let want = scalar_reference(model, &[], Some((s % vocab) as i32), steps);
+        assert_eq!(run.plain[s], want, "{label}: plain stream {s} diverged");
+        let prompt = deterministic_prompt(prompt_len, vocab, 100 + s as u64);
+        let want = scalar_reference(model, &prompt, None, steps);
+        assert_eq!(run.prompted[s], want, "{label}: prompted stream {s} diverged");
+        let want = scalar_reference(model, &[], Some(((7 + s) % vocab) as i32), steps);
+        assert_eq!(run.spec[s], want, "{label}: speculative stream {s} diverged");
+    }
+}
+
+/// ISSUE acceptance grid: mixed plain + prompted + speculative load
+/// through the unified planner is bit-identical to per-kind scalar
+/// execution — across feature maps, bandwidths, and residency caps
+/// (spill/restore mid-prompt, mid-verify, mid-stream) — and the
+/// three-phase baseline scheduler agrees too.
+#[test]
+fn mixed_load_grid_is_bit_identical_to_scalar_paths() {
+    let kernel_sets: [&[FeatureMap]; 2] =
+        [&[FeatureMap::Elu], &[FeatureMap::Elu, FeatureMap::EluNeg, FeatureMap::Tanh]];
+    let (streams, steps, prompt_len) = (3usize, 10usize, 9usize);
+    for kernels in kernel_sets {
+        for bandwidth in [1usize, 4] {
+            let cfg = tiny_config(bandwidth, kernels);
+            let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+            for cap in [0usize, 3] {
+                let server_cfg = || DecodeServerConfig {
+                    speculation: SpeculationConfig::NGram,
+                    draft_window: 4,
+                    prefill_chunk: 4,
+                    max_resident_sessions: cap,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                };
+                let (unified, stats) =
+                    run_mixed(cfg.clone(), server_cfg(), streams, steps, prompt_len);
+                let label = format!("kernels {kernels:?} bw {bandwidth} cap {cap} unified");
+                assert_matches_scalar(&unified, &model, streams, steps, prompt_len, &label);
+                assert!(stats.planned_rounds > 0, "{label}: no planned passes: {stats:?}");
+                assert_eq!(
+                    stats.prefill_rows,
+                    streams * prompt_len,
+                    "{label}: every prompt token rides exactly one pass: {stats:?}"
+                );
+                assert!(stats.verify_rows > 0, "{label}: {stats:?}");
+                if cap > 0 {
+                    assert!(stats.spills > 0, "{label}: cap {cap} must spill: {stats:?}");
+                    assert!(stats.resident_peak <= cap, "{label}: {stats:?}");
+                }
+
+                let baseline_cfg =
+                    DecodeServerConfig { unified_planner: false, ..server_cfg() };
+                let (baseline, stats) =
+                    run_mixed(cfg.clone(), baseline_cfg, streams, steps, prompt_len);
+                let label = format!("kernels {kernels:?} bw {bandwidth} cap {cap} baseline");
+                assert_matches_scalar(&baseline, &model, streams, steps, prompt_len, &label);
+                assert_eq!(stats.planned_rounds, 0, "{label}: {stats:?}");
+            }
+        }
+    }
+}
+
+/// Partition invariance: how the planner slices work into waves —
+/// round width, wait window, prefill chunk size, token and wall-time
+/// budgets, batching threshold, scheduler flavor — never changes a
+/// single emitted logit.
+#[test]
+fn planner_partitioning_never_changes_results() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu, FeatureMap::EluNeg]);
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let (streams, steps, prompt_len) = (3usize, 8usize, 11usize);
+    let base = || DecodeServerConfig {
+        speculation: SpeculationConfig::NGram,
+        draft_window: 4,
+        prefill_chunk: 4,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let variants: Vec<(&str, DecodeServerConfig)> = vec![
+        ("default", base()),
+        (
+            "narrow-rounds",
+            DecodeServerConfig {
+                max_steps: 1,
+                max_wait: Duration::ZERO,
+                ..base()
+            },
+        ),
+        (
+            "tight-token-budget",
+            DecodeServerConfig { prefill_chunk: 1, prefill_budget: 2, ..base() },
+        ),
+        ("wide-chunks", DecodeServerConfig { prefill_chunk: 64, ..base() }),
+        (
+            "wall-time-budget",
+            DecodeServerConfig { prefill_budget_ms: 0.01, ..base() },
+        ),
+        (
+            "scalar-threshold",
+            DecodeServerConfig { batch_threshold: usize::MAX, ..base() },
+        ),
+        (
+            "capped",
+            DecodeServerConfig {
+                max_resident_sessions: 2,
+                prefill_chunk: 3,
+                ..base()
+            },
+        ),
+        (
+            "three-phase-baseline",
+            DecodeServerConfig { unified_planner: false, ..base() },
+        ),
+    ];
+    for (name, server_cfg) in variants {
+        let (run, _) = run_mixed(cfg.clone(), server_cfg, streams, steps, prompt_len);
+        assert_matches_scalar(&run, &model, streams, steps, prompt_len, name);
+    }
+}
+
+/// Round-robin prefill fairness: a short prompt admitted while a long
+/// prompt is mid-ingest interleaves chunk-for-chunk instead of waiting
+/// behind it, so the short stream's first token lands first. (Under
+/// the old FIFO front-of-queue policy the short prompt would inherit
+/// the long prompt's entire remaining ingest as TTFT.)
+#[test]
+fn short_prompt_ttft_is_bounded_under_long_prompt_neighbor() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = cfg.vocab;
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig {
+            prefill_chunk: 4,
+            prefill_budget: 4,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+
+    // Long prompt: 1600 tokens at 4/round spans ~400 scheduler rounds,
+    // leaving a wide window for the short prompt to arrive mid-ingest.
+    let long_client = client.clone();
+    let long_h = std::thread::spawn(move || {
+        let prompt = deterministic_prompt(1600, vocab, 41);
+        let (stream, out) = long_client.open_stream_with_prompt(&prompt).unwrap();
+        let done = Instant::now();
+        drop(stream);
+        (out, done)
+    });
+    std::thread::sleep(Duration::from_millis(3));
+    let prompt = deterministic_prompt(5, vocab, 42);
+    let (stream, short) = client.open_stream_with_prompt(&prompt).unwrap();
+    let short_done = Instant::now();
+    drop(stream);
+    let (long, long_done) = long_h.join().unwrap();
+
+    assert!(
+        short_done < long_done,
+        "short prompt must finish ingest before its long neighbor \
+         (short ttft {:?}, long ttft {:?})",
+        short.ttft,
+        long.ttft
+    );
+    assert!(
+        short.ttft < long.ttft,
+        "round-robin planning must bound short-prompt TTFT \
+         (short {:?} vs long {:?})",
+        short.ttft,
+        long.ttft
+    );
+
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.prefills, 2, "{stats:?}");
+    assert_eq!(stats.prefill_tokens, 1605);
+}
+
+/// Planner observability: queuing every stream's step before consuming
+/// any reply deterministically forms full-width planned waves, and the
+/// per-kind row counters plus rows-per-pass envelope reflect them.
+#[test]
+fn planner_stats_report_rows_per_pass_and_kind_counts() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = cfg.vocab;
+    let n_streams = 6usize;
+    let len = 5usize;
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig {
+            max_wait: Duration::from_millis(20),
+            max_steps: n_streams,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let streams: Vec<_> =
+        (0..n_streams).map(|_| client.open_stream().unwrap()).collect();
+    let mut toks: Vec<i32> = (0..n_streams).map(|s| (s % vocab) as i32).collect();
+    for _ in 0..len {
+        let rxs: Vec<_> = streams
+            .iter()
+            .zip(&toks)
+            .map(|(st, &t)| st.step_async(t).unwrap())
+            .collect();
+        for (s, rx) in rxs.into_iter().enumerate() {
+            toks[s] = greedy_argmax(&rx.recv().unwrap().unwrap().logits);
+        }
+    }
+    drop(streams);
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.steps, n_streams * len);
+    assert!(stats.planned_rounds > 0, "{stats:?}");
+    assert!(
+        stats.decode_rows >= 2 && stats.decode_rows <= n_streams * len,
+        "{stats:?}"
+    );
+    assert_eq!(stats.prefill_rows, 0, "{stats:?}");
+    assert_eq!(stats.verify_rows, 0, "{stats:?}");
+    assert!(stats.rows_per_pass_min >= 1, "{stats:?}");
+    assert!(stats.rows_per_pass_max <= n_streams, "{stats:?}");
+    assert!(stats.rows_per_pass_min <= stats.rows_per_pass_max, "{stats:?}");
+    let mean = stats.mean_rows_per_pass();
+    assert!(
+        mean >= stats.rows_per_pass_min as f64 && mean <= stats.rows_per_pass_max as f64,
+        "mean {mean} outside [{}, {}]: {stats:?}",
+        stats.rows_per_pass_min,
+        stats.rows_per_pass_max
+    );
+    assert!(
+        stats.batched_steps > 0 && stats.step_many_calls > 0,
+        "queued full-width waves must batch: {stats:?}"
+    );
+}
