@@ -1,0 +1,396 @@
+//! Front-tier bench (system extension) — the framed TCP wire path vs
+//! the in-process client, plus load shedding and fault tolerance.
+//!
+//! Three measurements against one serving-shaped model:
+//!
+//! * **loopback vs in-process** — N client threads decode greedy chains
+//!   through `FrontClient` over 127.0.0.1 and through `DecodeClient`
+//!   in-process; tokens/sec and pooled p50/p99 step latency for both.
+//!   Fails loudly if any wire stream's tokens diverge from a scalar
+//!   `DecoderSession` replay, or (full mode) if loopback throughput
+//!   falls below 0.7x in-process — the framing + checksum + socket tax
+//!   must stay small.
+//! * **shedding** — a greedy tenant at a 2-stream quota attempts 8
+//!   concurrent opens while a polite tenant runs to completion: the
+//!   gate must shed the greedy overflow with `quota_exceeded` and the
+//!   polite tenant must see zero sheds (no cross-tenant starvation).
+//! * **faults** (`--faults`) — extra clients with a deterministic
+//!   corruption/kill schedule run alongside the clean ones; their
+//!   connections die with typed errors while every clean stream stays
+//!   byte-identical and the server leaks no session.
+//!
+//!     cargo bench --bench serve_front                  # full size
+//!     cargo bench --bench serve_front -- --quick --faults
+//!     cargo bench --bench serve_front -- --threads 8 --tokens 16
+//!
+//! Emits `reports/BENCH_front.json` — validated by `ci.sh --bench`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+use fmmformer::attention::FeatureMap;
+use fmmformer::bench::{save_report_json, Table};
+use fmmformer::cli::Args;
+use fmmformer::serve::decode::{
+    greedy_argmax, DecodeConfig, DecodeServer, DecodeServerConfig, DecoderSession,
+    HostDecoder,
+};
+use fmmformer::serve::front::{
+    rejection_code, FaultPlan, FrontClient, FrontConfig, FrontServer, RejectCode,
+    TenantConfig,
+};
+use fmmformer::util::json::Json;
+
+/// Serving-shaped model (matches the other serve benches).
+fn bench_config() -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 4,
+        d_model: 64,
+        vocab: 512,
+        bandwidth: 8,
+        kernels: vec![FeatureMap::Elu],
+        w1: 0.6,
+        w2: 0.9,
+        seed: 7,
+    }
+}
+
+/// Scalar replay of the greedy chain thread `s` runs: the ground truth
+/// both transports are pinned against.
+fn reference_chain(
+    model: &Arc<HostDecoder>,
+    start: i32,
+    tokens: usize,
+) -> Result<Vec<i32>> {
+    let mut sess = DecoderSession::new(model.clone());
+    let mut tok = start;
+    let mut chosen = Vec::with_capacity(tokens);
+    for _ in 0..tokens {
+        tok = greedy_argmax(&sess.step(tok)?);
+        chosen.push(tok);
+    }
+    Ok(chosen)
+}
+
+struct RunOut {
+    streams: Vec<Vec<i32>>,
+    /// Per-step round-trip latencies pooled across threads, seconds.
+    latencies: Vec<f64>,
+    elapsed_s: f64,
+    generated: usize,
+}
+
+/// In-process baseline: `threads` DecodeClient threads, same chains.
+fn run_inproc(cfg: &DecodeConfig, threads: usize, tokens: usize) -> Result<RunOut> {
+    let vocab = cfg.vocab;
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg.clone())?,
+        DecodeServerConfig::default(),
+    );
+    let client = server.client();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for s in 0..threads {
+        let c = client.clone();
+        handles.push(std::thread::spawn(move || -> Result<(Vec<i32>, Vec<f64>)> {
+            let stream = c.open_stream_plain()?;
+            let mut tok = (s % vocab) as i32;
+            let mut chosen = Vec::with_capacity(tokens);
+            let mut lats = Vec::with_capacity(tokens);
+            for _ in 0..tokens {
+                let t = Instant::now();
+                let out = stream.step(tok)?;
+                lats.push(t.elapsed().as_secs_f64());
+                tok = greedy_argmax(&out.logits);
+                chosen.push(tok);
+            }
+            Ok((chosen, lats))
+        }));
+    }
+    let mut streams = Vec::new();
+    let mut latencies = Vec::new();
+    for h in handles {
+        let (chosen, lats) =
+            h.join().map_err(|_| anyhow::anyhow!("in-process thread panicked"))??;
+        streams.push(chosen);
+        latencies.extend(lats);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    drop(client);
+    server.shutdown();
+    Ok(RunOut { streams, latencies, elapsed_s, generated: threads * tokens })
+}
+
+/// Loopback run: `threads` clean FrontClient threads plus (optionally)
+/// `fault_threads` clients on a deterministic corrupt/kill schedule
+/// whose connections are expected to die with typed errors.
+fn run_loopback(
+    cfg: &DecodeConfig,
+    threads: usize,
+    fault_threads: usize,
+    tokens: usize,
+) -> Result<(RunOut, usize)> {
+    let vocab = cfg.vocab;
+    let front = FrontServer::start(
+        "127.0.0.1:0",
+        HostDecoder::new(cfg.clone())?,
+        DecodeServerConfig::default(),
+        FrontConfig::default(),
+    )?;
+    let addr = front.local_addr().to_string();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for s in 0..threads {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> Result<(Vec<i32>, Vec<f64>)> {
+            let mut c = FrontClient::connect(&addr)?;
+            let opened = c.open("bench", &[], 0, 1)?;
+            let mut tok = (s % vocab) as i32;
+            let mut chosen = Vec::with_capacity(tokens);
+            let mut lats = Vec::with_capacity(tokens);
+            for _ in 0..tokens {
+                let t = Instant::now();
+                let reply = c.step(opened.stream, tok, 0)?;
+                lats.push(t.elapsed().as_secs_f64());
+                tok = greedy_argmax(&reply.logits);
+                chosen.push(tok);
+            }
+            c.close_stream(opened.stream)?;
+            Ok((chosen, lats))
+        }));
+    }
+    // Fault clients: corruption on every 5th frame and a hard kill at
+    // frame 40 — each dies early with a typed error; the server must
+    // shrug while the clean threads above stay exact.
+    let mut fault_handles = Vec::new();
+    for s in 0..fault_threads {
+        let addr = addr.clone();
+        let plan = FaultPlan {
+            corrupt_every: 5,
+            kill_after_frames: 40,
+            ..FaultPlan::default()
+        };
+        fault_handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut c = FrontClient::connect_with_faults(&addr, plan)?;
+            let opened = c.open("chaos", &[], 0, 1)?;
+            let mut tok = (s % vocab) as i32;
+            for _ in 0..tokens {
+                tok = greedy_argmax(&c.step(opened.stream, tok, 0)?.logits);
+            }
+            Ok(())
+        }));
+    }
+    let mut streams = Vec::new();
+    let mut latencies = Vec::new();
+    for h in handles {
+        let (chosen, lats) =
+            h.join().map_err(|_| anyhow::anyhow!("loopback thread panicked"))??;
+        streams.push(chosen);
+        latencies.extend(lats);
+    }
+    let mut fault_deaths = 0usize;
+    for h in fault_handles {
+        let res = h.join().map_err(|_| anyhow::anyhow!("fault thread panicked"))?;
+        if res.is_err() {
+            fault_deaths += 1;
+        }
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let stats = front.shutdown();
+    if stats.leaked_sessions() != 0 {
+        bail!(
+            "front tier leaked {} engine sessions after all clients finished",
+            stats.leaked_sessions()
+        );
+    }
+    Ok((
+        RunOut { streams, latencies, elapsed_s, generated: threads * tokens },
+        fault_deaths,
+    ))
+}
+
+/// Quota shedding under contention: greedy holds streams open past its
+/// quota, polite runs beside it untouched.
+fn run_shed(cfg: &DecodeConfig, tokens: usize) -> Result<(usize, usize, usize)> {
+    let front = FrontServer::start(
+        "127.0.0.1:0",
+        HostDecoder::new(cfg.clone())?,
+        DecodeServerConfig::default(),
+        FrontConfig {
+            tenants: vec![(
+                "greedy".into(),
+                TenantConfig { rate: 0.0, burst: 16.0, max_streams: 2 },
+            )],
+            ..FrontConfig::default()
+        },
+    )?;
+    let addr = front.local_addr().to_string();
+    let mut c = FrontClient::connect(&addr)?;
+    let greedy_attempts = 8usize;
+    let mut greedy_shed = 0usize;
+    let mut held = Vec::new();
+    for _ in 0..greedy_attempts {
+        match c.open("greedy", &[], 0, 1) {
+            Ok(r) => held.push(r.stream),
+            Err(e) => {
+                if rejection_code(&e) != Some(RejectCode::QuotaExceeded) {
+                    bail!("greedy overflow shed with the wrong code: {e:#}");
+                }
+                greedy_shed += 1;
+            }
+        }
+    }
+    // Polite tenant completes sequential sessions despite greedy
+    // sitting at its quota the whole time.
+    let mut polite_ok = 0usize;
+    for s in 0..4 {
+        let opened = c.open("polite", &[], 0, 1)?;
+        let mut tok = s as i32;
+        for _ in 0..tokens.min(4) {
+            tok = greedy_argmax(&c.step(opened.stream, tok, 0)?.logits);
+        }
+        c.close_stream(opened.stream)?;
+        polite_ok += 1;
+    }
+    for id in held {
+        c.close_stream(id)?;
+    }
+    let stats = front.shutdown();
+    if stats.gate.shed_of("polite") != 0 {
+        bail!("polite tenant was shed {} times by greedy's overflow", stats.gate.shed_of("polite"));
+    }
+    if stats.gate.shed_of("greedy") != greedy_shed {
+        bail!(
+            "gate recorded {} greedy sheds, client saw {greedy_shed}",
+            stats.gate.shed_of("greedy")
+        );
+    }
+    Ok((greedy_attempts, greedy_shed, polite_ok))
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * p) as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick", "faults"])?;
+    let quick = args.has("quick");
+    let faults = args.has("faults");
+    let threads = args.usize_or("threads", if quick { 4 } else { 16 })?;
+    let tokens = args.usize_or("tokens", if quick { 8 } else { 32 })?;
+    let fault_threads = if faults { args.usize_or("fault-threads", 4)? } else { 0 };
+
+    let cfg = bench_config();
+    let model = Arc::new(HostDecoder::new(cfg.clone())?);
+    println!(
+        "front bench: {} layers x {} heads, d_model {}, vocab {}, \
+         {threads} threads x {tokens} tokens, {fault_threads} fault clients",
+        cfg.layers, cfg.heads, cfg.d_model, cfg.vocab,
+    );
+
+    let mut reference = Vec::with_capacity(threads);
+    for s in 0..threads {
+        reference.push(reference_chain(&model, (s % cfg.vocab) as i32, tokens)?);
+    }
+
+    let inproc = run_inproc(&cfg, threads, tokens)?;
+    if inproc.streams != reference {
+        bail!("in-process streams diverged from scalar reference");
+    }
+    let (loopback, fault_deaths) = run_loopback(&cfg, threads, fault_threads, tokens)?;
+    if loopback.streams != reference {
+        bail!(
+            "loopback streams diverged from scalar reference — the wire \
+             path must never change a stream's tokens"
+        );
+    }
+    if fault_threads > 0 && fault_deaths == 0 {
+        bail!("fault clients all survived a schedule built to kill them");
+    }
+
+    let inproc_tok_s = inproc.generated as f64 / inproc.elapsed_s;
+    let loopback_tok_s = loopback.generated as f64 / loopback.elapsed_s;
+    let ratio = loopback_tok_s / inproc_tok_s.max(1e-12);
+    let mut lats = loopback.latencies.clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let p50_s = percentile(&lats, 0.50);
+    let p99_s = percentile(&lats, 0.99);
+    let mut inproc_lats = inproc.latencies.clone();
+    inproc_lats
+        .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+
+    let (greedy_attempts, greedy_shed, polite_ok) = run_shed(&cfg, tokens)?;
+    if greedy_shed == 0 {
+        bail!("quota scenario shed nothing: admission control never engaged");
+    }
+
+    let mut tbl = Table::new(
+        "Front tier: loopback wire path vs in-process client",
+        &["transport", "tok/s", "p50", "p99", "exact"],
+    );
+    tbl.row(vec![
+        "in-process".into(),
+        format!("{inproc_tok_s:.0}"),
+        format!("{:.1}us", percentile(&inproc_lats, 0.50) * 1e6),
+        format!("{:.1}us", percentile(&inproc_lats, 0.99) * 1e6),
+        "true".into(),
+    ]);
+    tbl.row(vec![
+        format!("loopback ({ratio:.2}x)"),
+        format!("{loopback_tok_s:.0}"),
+        format!("{:.1}us", p50_s * 1e6),
+        format!("{:.1}us", p99_s * 1e6),
+        "true".into(),
+    ]);
+    tbl.print();
+    println!(
+        "shed: greedy {greedy_shed}/{greedy_attempts} opens rejected \
+         (quota 2), polite {polite_ok}/4 completed, 0 cross-tenant sheds; \
+         {fault_deaths} fault clients died typed",
+    );
+
+    // The wire tax bound only gates full-size runs: at --quick scale the
+    // run is too short for a stable ratio.
+    if !quick && ratio < 0.7 {
+        bail!(
+            "loopback throughput ({loopback_tok_s:.0} tok/s) fell below \
+             0.7x in-process ({inproc_tok_s:.0} tok/s): ratio {ratio:.2}"
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_front")),
+        ("threads", Json::Num(threads as f64)),
+        ("tokens_per_stream", Json::Num(tokens as f64)),
+        ("inproc_tok_s", Json::Num(inproc_tok_s)),
+        ("loopback_tok_s", Json::Num(loopback_tok_s)),
+        ("ratio", Json::Num(ratio)),
+        ("p50_s", Json::Num(p50_s)),
+        ("p99_s", Json::Num(p99_s)),
+        ("exact", Json::Bool(true)),
+        (
+            "faults",
+            Json::obj(vec![
+                ("clients", Json::Num(fault_threads as f64)),
+                ("deaths", Json::Num(fault_deaths as f64)),
+            ]),
+        ),
+        (
+            "shed",
+            Json::obj(vec![
+                ("greedy_attempts", Json::Num(greedy_attempts as f64)),
+                ("greedy_shed", Json::Num(greedy_shed as f64)),
+                ("polite_ok", Json::Num(polite_ok as f64)),
+            ]),
+        ),
+    ]);
+    let path = save_report_json("BENCH_front.json", &doc)?;
+    println!("machine-readable -> {path:?}");
+    Ok(())
+}

@@ -6,6 +6,7 @@
 #   ./ci.sh --strict   # tier-1 + fmt/clippy as hard failures
 #   ./ci.sh --bench    # smoke-run the decode bench at a tiny size and
 #                      # validate the emitted BENCH_decode.json parses
+#   ./ci.sh --chaos    # fault-injection suite standalone (front tier)
 #
 # Lints are advisory by default because the seed code predates the
 # fmt/clippy gate (see ROADMAP "Open items": lint pass pending); the
@@ -127,8 +128,44 @@ for run in doc["runs"]:
             exit 1
         fi
     fi
+    echo "== bench smoke: serve_front (tiny, with fault clients) =="
+    # Loopback wire path vs in-process, 4 clean + 4 faulted clients: the
+    # bench itself fails if any clean wire stream's tokens diverge from
+    # scalar replay, if the quota scenario sheds nothing, or if the
+    # server leaks an engine session after the fault clients die.
+    FMM_REPORTS="$reports" cargo bench --bench serve_front -- \
+        --quick --threads 4 --tokens 8 --faults
+    validate_json "$reports/BENCH_front.json"
+    if command -v python3 >/dev/null 2>&1; then
+        if ! python3 -c '
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["bench"] == "serve_front"
+for key in ("threads", "tokens_per_stream", "inproc_tok_s", "loopback_tok_s",
+            "ratio", "p50_s", "p99_s", "exact", "faults", "shed"):
+    assert key in doc, key
+assert doc["exact"] is True
+assert doc["shed"]["greedy_shed"] > 0, "load shedding never engaged"
+assert doc["shed"]["polite_ok"] == 4, "polite tenant starved"
+assert doc["faults"]["deaths"] > 0, "fault schedule killed nothing"
+' "$reports/BENCH_front.json"; then
+            echo "bench smoke FAILED: BENCH_front.json missing keys or invariants"
+            exit 1
+        fi
+    fi
     echo "bench smoke passed: $reports/BENCH_decode.json $reports/BENCH_paging.json \
-$reports/BENCH_speculative.json $reports/BENCH_prefill.json $reports/BENCH_planner.json"
+$reports/BENCH_speculative.json $reports/BENCH_prefill.json $reports/BENCH_planner.json \
+$reports/BENCH_front.json"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--chaos" ]]; then
+    # Standalone fault-injection gate: the front-tier chaos suite
+    # (frame corruption, mid-stream disconnects, injected spill-store
+    # I/O failures, deadline expiry) plus the clean-path wire tests.
+    echo "== chaos: cargo test --test front_faults --test front =="
+    cargo test -q --test front_faults --test front
+    echo "chaos gate passed"
     exit 0
 fi
 

@@ -16,7 +16,12 @@ use fmmformer::cli::Args;
 use fmmformer::coordinator::{Coordinator, EXPERIMENTS};
 use fmmformer::data::Split;
 use fmmformer::runtime::{checkpoint, load_init_leaves, Runtime};
-use fmmformer::serve::decode::{DecodeConfig, DecodeServer, DecodeServerConfig, HostDecoder};
+use fmmformer::serve::decode::{
+    greedy_argmax, DecodeConfig, DecodeServer, DecodeServerConfig, HostDecoder,
+};
+use fmmformer::serve::front::{
+    FrontClient, FrontConfig, FrontServer, TenantConfig, WIRE_VERSION,
+};
 use fmmformer::serve::speculative::SpeculationConfig;
 use fmmformer::serve::{ServeConfig, Server};
 use fmmformer::train::evaluate_params;
@@ -59,6 +64,17 @@ fn run() -> Result<()> {
                  [--prompt-len N [--prefill-chunk C] [--prefill-budget N] \
                  [--prefill-budget-ms T]] [--no-unified-planner] \
                  [--speculate [--draft-window K] [--draft ngram|model:LxHxD]]"
+            );
+            println!(
+                "decode-demo --listen ADDR: serve the framed wire protocol \
+                 [--serve-secs N (0=forever)] [--tenant-rate R --tenant-burst B \
+                 --tenant-streams Q] [--max-open N] [--max-queued-prompts N] \
+                 [--default-deadline-ms T]"
+            );
+            println!(
+                "decode-demo --connect ADDR: drive a listening front tier \
+                 [--sessions N] [--tokens N] [--tenant NAME] [--deadline-ms T] \
+                 (--vocab must match the server's)"
             );
             Ok(())
         }
@@ -249,6 +265,12 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
     let tokens = args.usize_or("tokens", 128)?;
     let vocab = cfg.vocab;
 
+    // Wire-client mode: drive a front tier started elsewhere with
+    // `--listen`; no local model is built.
+    if let Some(addr) = args.get("connect") {
+        return front_connect(args, addr, sessions, tokens, vocab);
+    }
+
     // Exactness spot check: one stream vs the batch forward.
     let model = HostDecoder::new(cfg.clone())?;
     let probe: Vec<i32> = (0..24).map(|t| (t * 7 % vocab) as i32).collect();
@@ -270,6 +292,13 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         prefill_budget_ms: args.f64_or("prefill-budget-ms", 0.0)?,
         unified_planner: !args.has("no-unified-planner"),
     };
+
+    // Wire-server mode: expose this engine over the framed TCP
+    // protocol instead of running the in-process demo loop.
+    if let Some(listen) = args.get("listen") {
+        return front_listen(args, listen, model, server_cfg);
+    }
+
     let server = match args.get("spill-dir") {
         Some(dir) => DecodeServer::start_with_store(
             model,
@@ -379,6 +408,112 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
             stats.lookahead_hits,
         );
     }
+    Ok(())
+}
+
+/// `decode-demo --listen ADDR`: serve the decode engine over the framed
+/// wire protocol (admission control, deadlines, graceful drain) until
+/// `--serve-secs` elapse (0 = forever).
+fn front_listen(
+    args: &Args,
+    addr: &str,
+    model: HostDecoder,
+    server_cfg: DecodeServerConfig,
+) -> Result<()> {
+    let front_cfg = FrontConfig {
+        tenant_defaults: TenantConfig {
+            rate: args.f64_or("tenant-rate", 0.0)?,
+            burst: args.f64_or("tenant-burst", 16.0)?,
+            max_streams: args.usize_or("tenant-streams", 0)?,
+        },
+        max_open_streams: args.usize_or("max-open", 0)?,
+        max_queued_prompts: args.usize_or("max-queued-prompts", 0)?,
+        default_deadline_ms: args.u64_or("default-deadline-ms", 0)? as u32,
+        ..FrontConfig::default()
+    };
+    let server = match args.get("spill-dir") {
+        Some(dir) => FrontServer::start_with_store(
+            addr,
+            model,
+            server_cfg,
+            front_cfg,
+            Box::new(fmmformer::serve::session_store::DiskStore::new(
+                std::path::Path::new(dir),
+            )?),
+        )?,
+        None => FrontServer::start(addr, model, server_cfg, front_cfg)?,
+    };
+    let serve_secs = args.u64_or("serve-secs", 0)?;
+    println!(
+        "front tier listening on {} (wire v{WIRE_VERSION})",
+        server.local_addr()
+    );
+    if serve_secs == 0 {
+        println!("serving forever (--serve-secs 0); interrupt to stop");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(serve_secs));
+    let stats = server.shutdown();
+    println!(
+        "drained after {serve_secs}s: {} connections, {} bad frames, {} sheds",
+        stats.connections, stats.bad_frames, stats.gate.shed_total,
+    );
+    Ok(())
+}
+
+/// `decode-demo --connect ADDR`: N client threads greedy-decode over
+/// the wire against a listening front tier; reports tok/s, latency
+/// percentiles and the server's stats document.
+fn front_connect(
+    args: &Args,
+    addr: &str,
+    sessions: usize,
+    tokens: usize,
+    vocab: usize,
+) -> Result<()> {
+    let tenant = args.str_or("tenant", "demo").to_string();
+    let deadline_ms = args.u64_or("deadline-ms", 0)? as u32;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for s in 0..sessions {
+        let addr = addr.to_string();
+        let tenant = tenant.clone();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut c = FrontClient::connect(&addr)?;
+            let opened = c.open(&tenant, &[], deadline_ms, 0)?;
+            let mut tok = (s % vocab) as i32;
+            let mut lats = Vec::with_capacity(tokens);
+            for _ in 0..tokens {
+                let t = std::time::Instant::now();
+                let reply = c.step(opened.stream, tok, deadline_ms)?;
+                lats.push(t.elapsed().as_secs_f64());
+                tok = greedy_argmax(&reply.logits);
+            }
+            c.close_stream(opened.stream)?;
+            Ok(lats)
+        }));
+    }
+    let mut lats = Vec::new();
+    for h in handles {
+        lats.extend(h.join().map_err(|_| anyhow!("wire client thread panicked"))??);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(f64::total_cmp);
+    if lats.is_empty() {
+        println!("no tokens decoded (sessions={sessions} tokens={tokens})");
+        return Ok(());
+    }
+    println!(
+        "{sessions} wire sessions x {tokens} tokens in {wall:.2}s -> {:.0} tok/s | \
+         step p50 {} p95 {}",
+        lats.len() as f64 / wall,
+        bench::fmt_time(lats[lats.len() / 2]),
+        bench::fmt_time(lats[lats.len() * 95 / 100]),
+    );
+    let mut c = FrontClient::connect(addr)?;
+    println!("server stats: {}", c.stats()?);
     Ok(())
 }
 

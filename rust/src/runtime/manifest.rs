@@ -142,6 +142,221 @@ impl Manifest {
     }
 }
 
+/// Versioned decoder-weight manifest: everything needed to rebuild a
+/// serving [`HostDecoder`](crate::serve::decode::HostDecoder) — the
+/// full [`DecodeConfig`](crate::serve::decode::DecodeConfig) plus a
+/// deploy version — made tamper-evident the same way the `FMMS`
+/// snapshot codec is: the document carries the config fingerprint *and*
+/// an FNV-1a checksum over a canonical field string, and
+/// [`parse`](WeightManifest::parse) re-derives and verifies both before
+/// any value is trusted. The serve front tier's dual-slot weight swap
+/// (`FrontServer::swap_weights`) takes one of these, so a corrupted or
+/// hand-edited manifest can never be swapped into live traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightManifest {
+    pub name: String,
+    /// Deploy version — monotonically increasing by operator convention;
+    /// reported in stats so rollouts are observable.
+    pub version: u64,
+    pub layers: usize,
+    pub heads: usize,
+    pub d_model: usize,
+    pub vocab: usize,
+    pub bandwidth: usize,
+    /// Far-field feature-map names (`elu` | `elu_neg` | `tanh`).
+    pub kernels: Vec<String>,
+    pub w1: f32,
+    pub w2: f32,
+    pub seed: u64,
+    /// [`DecodeConfig::fingerprint`](crate::serve::decode::DecodeConfig::fingerprint)
+    /// of the described decoder; cross-checked on parse and again on
+    /// [`to_config`](WeightManifest::to_config).
+    pub fingerprint: u64,
+}
+
+impl WeightManifest {
+    /// Describe an existing config under `name`/`version`.
+    pub fn from_config(
+        name: &str,
+        version: u64,
+        cfg: &crate::serve::decode::DecodeConfig,
+    ) -> WeightManifest {
+        use crate::attention::FeatureMap;
+        let kernels = cfg
+            .kernels
+            .iter()
+            .map(|k| {
+                match k {
+                    FeatureMap::Elu => "elu",
+                    FeatureMap::EluNeg => "elu_neg",
+                    FeatureMap::Tanh => "tanh",
+                }
+                .to_string()
+            })
+            .collect();
+        WeightManifest {
+            name: name.to_string(),
+            version,
+            layers: cfg.layers,
+            heads: cfg.heads,
+            d_model: cfg.d_model,
+            vocab: cfg.vocab,
+            bandwidth: cfg.bandwidth,
+            kernels,
+            w1: cfg.w1,
+            w2: cfg.w2,
+            seed: cfg.seed,
+            fingerprint: cfg.fingerprint(),
+        }
+    }
+
+    /// Rebuild the decoder config, verifying the stored fingerprint
+    /// matches what the rebuilt config derives — drift in any
+    /// math-determining field is refused here even if the checksum was
+    /// recomputed to match.
+    pub fn to_config(&self) -> Result<crate::serve::decode::DecodeConfig> {
+        use crate::attention::FeatureMap;
+        let kernels = self
+            .kernels
+            .iter()
+            .map(|name| {
+                FeatureMap::by_name(name)
+                    .ok_or_else(|| anyhow!("unknown feature map {name:?} in manifest"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let cfg = crate::serve::decode::DecodeConfig {
+            layers: self.layers,
+            heads: self.heads,
+            d_model: self.d_model,
+            vocab: self.vocab,
+            bandwidth: self.bandwidth,
+            kernels,
+            w1: self.w1,
+            w2: self.w2,
+            seed: self.seed,
+        };
+        let derived = cfg.fingerprint();
+        if derived != self.fingerprint {
+            bail!(
+                "weight manifest {:?} v{} fingerprint {:#018x} does not match \
+                 the config it describes ({derived:#018x})",
+                self.name,
+                self.version
+            );
+        }
+        Ok(cfg)
+    }
+
+    /// Canonical field string the document checksum covers. Floats go
+    /// in as raw bit patterns so the round-trip is exact.
+    fn canonical(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            self.name,
+            self.version,
+            self.layers,
+            self.heads,
+            self.d_model,
+            self.vocab,
+            self.bandwidth,
+            self.kernels.join(","),
+            self.w1.to_bits(),
+            self.w2.to_bits(),
+            self.seed,
+            self.fingerprint,
+        )
+    }
+
+    /// Serialize to a JSON document carrying a `checksum` over the
+    /// canonical field string.
+    pub fn encode_json(&self) -> String {
+        let doc = Json::obj(vec![
+            ("kind", Json::str("weight_manifest")),
+            ("name", Json::str(self.name.clone())),
+            ("version", Json::num(self.version as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("heads", Json::num(self.heads as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("bandwidth", Json::num(self.bandwidth as f64)),
+            (
+                "kernels",
+                Json::arr(self.kernels.iter().map(|k| Json::str(k.clone()))),
+            ),
+            ("w1_bits", Json::num(self.w1.to_bits() as f64)),
+            ("w2_bits", Json::num(self.w2.to_bits() as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            // u64 fingerprints exceed f64's exact-integer range, so both
+            // hashes travel as hex strings, not numbers.
+            ("fingerprint", Json::str(format!("{:016x}", self.fingerprint))),
+            (
+                "checksum",
+                Json::str(format!("{:016x}", crate::util::fnv1a64(self.canonical().as_bytes()))),
+            ),
+        ]);
+        doc.to_string()
+    }
+
+    /// Parse and verify a [`encode_json`](WeightManifest::encode_json)
+    /// document. Any missing field, malformed value, or checksum /
+    /// fingerprint mismatch is `Err` — a manifest that does not verify
+    /// is never partially trusted.
+    pub fn parse(doc: &str) -> Result<WeightManifest> {
+        let j = Json::parse(doc).context("weight manifest JSON")?;
+        if j.str_of("kind")? != "weight_manifest" {
+            bail!("document kind {:?} is not a weight manifest", j.str_of("kind")?);
+        }
+        let hex_u64 = |key: &str| -> Result<u64> {
+            let s = j.str_of(key)?;
+            u64::from_str_radix(s, 16)
+                .map_err(|_| anyhow!("{key} {s:?} is not a hex u64"))
+        };
+        let num_u64 = |key: &str| -> Result<u64> {
+            j.req(key)?
+                .as_i64()
+                .and_then(|v| u64::try_from(v).ok())
+                .ok_or_else(|| anyhow!("{key} is not a non-negative integer"))
+        };
+        let bits_f32 = |key: &str| -> Result<f32> {
+            let v = num_u64(key)?;
+            let bits =
+                u32::try_from(v).map_err(|_| anyhow!("{key} overflows f32 bits"))?;
+            Ok(f32::from_bits(bits))
+        };
+        let m = WeightManifest {
+            name: j.str_of("name")?.to_string(),
+            version: num_u64("version")?,
+            layers: j.usize_of("layers")?,
+            heads: j.usize_of("heads")?,
+            d_model: j.usize_of("d_model")?,
+            vocab: j.usize_of("vocab")?,
+            bandwidth: j.usize_of("bandwidth")?,
+            kernels: j
+                .arr_of("kernels")?
+                .iter()
+                .map(|k| {
+                    k.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| anyhow!("kernel entry is not a string"))
+                })
+                .collect::<Result<_>>()?,
+            w1: bits_f32("w1_bits")?,
+            w2: bits_f32("w2_bits")?,
+            seed: num_u64("seed")?,
+            fingerprint: hex_u64("fingerprint")?,
+        };
+        let stored = hex_u64("checksum")?;
+        let derived = crate::util::fnv1a64(m.canonical().as_bytes());
+        if stored != derived {
+            bail!(
+                "weight manifest checksum mismatch ({derived:016x} != {stored:016x}) \
+                 — document corrupted or hand-edited"
+            );
+        }
+        Ok(m)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +399,55 @@ mod tests {
     #[test]
     fn rejects_bad_dtype() {
         assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn weight_manifest_roundtrips_bit_exactly() {
+        let cfg = crate::serve::decode::DecodeConfig {
+            layers: 3,
+            heads: 4,
+            d_model: 32,
+            vocab: 96,
+            bandwidth: 6,
+            kernels: vec![
+                crate::attention::FeatureMap::Elu,
+                crate::attention::FeatureMap::Tanh,
+            ],
+            w1: 0.6,
+            w2: 0.9,
+            seed: 0xfeed_f00d,
+        };
+        let m = WeightManifest::from_config("demo", 7, &cfg);
+        let back = WeightManifest::parse(&m.encode_json()).unwrap();
+        assert_eq!(back, m);
+        let cfg2 = back.to_config().unwrap();
+        assert_eq!(cfg2.fingerprint(), cfg.fingerprint());
+        assert_eq!(cfg2.kernels, cfg.kernels);
+        assert_eq!((cfg2.w1.to_bits(), cfg2.w2.to_bits()), (cfg.w1.to_bits(), cfg.w2.to_bits()));
+    }
+
+    #[test]
+    fn weight_manifest_refuses_tampering() {
+        let cfg = crate::serve::decode::DecodeConfig::default();
+        let m = WeightManifest::from_config("demo", 1, &cfg);
+        let doc = m.encode_json();
+        // Any field edit without refreshing the checksum is refused.
+        let tampered = doc.replace("\"version\":1", "\"version\":2");
+        assert_ne!(tampered, doc, "replacement must have applied");
+        assert!(WeightManifest::parse(&tampered).is_err());
+        // A fingerprint that does not match the described config is
+        // refused by to_config even if the document checksum is valid.
+        let mut forged = m.clone();
+        forged.fingerprint ^= 1;
+        let reparsed = WeightManifest::parse(&forged.encode_json()).unwrap();
+        assert!(reparsed.to_config().is_err());
+        // Unknown kernel names are refused.
+        let mut bad_kernel = m;
+        bad_kernel.kernels = vec!["softmax".into()];
+        let reparsed = WeightManifest::parse(&bad_kernel.encode_json()).unwrap();
+        assert!(reparsed.to_config().is_err());
+        // Non-manifest documents are refused outright.
+        assert!(WeightManifest::parse("{\"kind\": \"other\"}").is_err());
+        assert!(WeightManifest::parse("not json").is_err());
     }
 }

@@ -56,9 +56,9 @@
 //! XLA backend is stubbed out.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -1048,6 +1048,29 @@ pub struct DecodeStats {
     pub rows_per_pass_min: usize,
     /// Largest row count of any planned pass.
     pub rows_per_pass_max: usize,
+    /// Steps cancelled at a wave boundary because their deadline had
+    /// already passed (each also counts in `failed_steps`; the session
+    /// itself does NOT advance, so the caller may retry the same token).
+    pub deadline_expired_steps: usize,
+    /// Queued prompt ingests cancelled because their deadline passed
+    /// mid-queue (each also counts in `failed_prefills`; the stream
+    /// disconnects — partial prompt state is never served).
+    pub deadline_expired_prefills: usize,
+    /// Per-tenant accounting for streams opened through the serve front
+    /// tier (or any caller that tags opens with a tenant). Untagged
+    /// traffic is not recorded here.
+    pub per_tenant: HashMap<String, TenantLoad>,
+}
+
+/// Per-tenant slice of [`DecodeStats`] (see `per_tenant`).
+#[derive(Debug, Default, Clone)]
+pub struct TenantLoad {
+    pub opened: usize,
+    pub closed: usize,
+    pub steps: usize,
+    pub failed_steps: usize,
+    /// Deadline-expired steps (subset of `failed_steps`).
+    pub expired_steps: usize,
 }
 
 impl DecodeStats {
@@ -1125,6 +1148,8 @@ enum DecodeMsg {
         /// `None`: the server default (speculative iff the server has a
         /// draft source). `Some(b)`: the client forced plain/speculative.
         speculative: Option<bool>,
+        /// Tenant tag for per-tenant stats (front-tier traffic).
+        tenant: Option<Arc<str>>,
         reply: Sender<Result<()>>,
     },
     /// Admit a stream with a pending prompt: the session registers
@@ -1135,6 +1160,11 @@ enum DecodeMsg {
     OpenWithPrompt {
         session: u64,
         speculative: Option<bool>,
+        tenant: Option<Arc<str>>,
+        /// Ingest budget: if the whole prompt has not completed by this
+        /// instant, the pending ingest is cancelled at the next wave
+        /// boundary with a typed "deadline expired" error.
+        deadline: Option<Instant>,
         prompt: Vec<i32>,
         submitted: Instant,
         reply: Sender<Result<PrefillOut>>,
@@ -1148,7 +1178,52 @@ struct StepReq {
     session: u64,
     token: i32,
     submitted: Instant,
+    /// Expired steps are cancelled (typed error) at the next wave
+    /// boundary instead of silently completing late; the session does
+    /// not advance.
+    deadline: Option<Instant>,
+    tenant: Option<Arc<str>>,
     reply: Sender<Result<StepOut>>,
+}
+
+/// Default bound on every blocking client wait ([`DecodeClient`],
+/// [`DecodeStream::step`], [`super::Client::infer`]): a wedged
+/// scheduler thread surfaces as a typed "timed out" error instead of
+/// hanging the caller forever. Override per-client with
+/// `with_recv_timeout`.
+pub const DEFAULT_CLIENT_RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Bounded reply wait: `Timeout` becomes a typed "timed out" error,
+/// `Disconnected` keeps the historical "shut down"-style message so
+/// existing failure-envelope expectations hold.
+fn recv_reply<T>(rx: &Receiver<T>, timeout: Duration, what: &str) -> Result<T> {
+    match rx.recv_timeout(timeout) {
+        Ok(v) => Ok(v),
+        Err(RecvTimeoutError::Timeout) => Err(anyhow!(
+            "decode client timed out after {timeout:?} waiting for {what} reply \
+             (scheduler wedged or overloaded)"
+        )),
+        Err(RecvTimeoutError::Disconnected) => {
+            Err(anyhow!("decode server shut down during {what}"))
+        }
+    }
+}
+
+/// Per-open knobs for [`DecodeClient::open_stream_opts`] /
+/// [`DecodeClient::open_stream_with_prompt_opts`] — the front tier's
+/// hook for tenancy and deadline propagation. `Default` matches the
+/// plain `open_stream*` helpers: server-default stream kind, untagged,
+/// no deadline.
+#[derive(Debug, Clone, Default)]
+pub struct OpenOptions {
+    /// `None`: server default; `Some(b)`: force plain/speculative.
+    pub speculative: Option<bool>,
+    /// Tenant tag: opens/steps/closes on the stream are attributed to
+    /// this tenant in [`DecodeStats::per_tenant`].
+    pub tenant: Option<Arc<str>>,
+    /// Prompt-ingest deadline (prompted opens only): ingest still
+    /// pending at this instant is cancelled at the next wave boundary.
+    pub deadline: Option<Instant>,
 }
 
 /// Handle for opening decode streams; cloneable across client threads.
@@ -1156,6 +1231,11 @@ struct StepReq {
 pub struct DecodeClient {
     tx: Sender<DecodeMsg>,
     next_id: Arc<AtomicU64>,
+    /// Live prefill-queue depth (streams with pending prompt tokens),
+    /// published by the scheduler each round — the front tier's
+    /// backpressure signal for shedding prompted opens.
+    queue_depth: Arc<AtomicUsize>,
+    recv_timeout: Duration,
 }
 
 impl DecodeClient {
@@ -1178,14 +1258,46 @@ impl DecodeClient {
         self.open_with(Some(true))
     }
 
-    fn open_with(&self, speculative: Option<bool>) -> Result<DecodeStream> {
+    /// Open with explicit [`OpenOptions`] (tenant tag; the deadline
+    /// field is ignored for unprompted opens — admission is immediate).
+    pub fn open_stream_opts(&self, opts: OpenOptions) -> Result<DecodeStream> {
         let session = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
+        let tenant = opts.tenant.clone();
         self.tx
-            .send(DecodeMsg::Open { session, speculative, reply })
+            .send(DecodeMsg::Open {
+                session,
+                speculative: opts.speculative,
+                tenant: opts.tenant,
+                reply,
+            })
             .map_err(|_| anyhow!("decode server shut down: cannot open stream"))?;
-        rx.recv().map_err(|_| anyhow!("decode server shut down during open"))??;
-        Ok(DecodeStream { session, tx: self.tx.clone() })
+        recv_reply(&rx, self.recv_timeout, "open")??;
+        Ok(DecodeStream {
+            session,
+            tx: self.tx.clone(),
+            tenant,
+            recv_timeout: self.recv_timeout,
+        })
+    }
+
+    fn open_with(&self, speculative: Option<bool>) -> Result<DecodeStream> {
+        self.open_stream_opts(OpenOptions { speculative, ..OpenOptions::default() })
+    }
+
+    /// Clone of this handle whose blocking waits (open / prefill /
+    /// step replies) give up after `timeout` with a typed "timed out"
+    /// error. Streams opened through it inherit the bound.
+    pub fn with_recv_timeout(mut self, timeout: Duration) -> DecodeClient {
+        self.recv_timeout = timeout;
+        self
+    }
+
+    /// Streams currently queued for prompt ingest (scheduler-published,
+    /// one round stale at most) — the load-shedding signal: reject new
+    /// prompted opens when this exceeds the operator's queue bound.
+    pub fn prefill_queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
     }
 
     /// Open a stream pre-loaded with `prompt`: the prompt ingests
@@ -1223,26 +1335,50 @@ impl DecodeClient {
         self.open_with_prompt(Some(true), prompt)
     }
 
-    fn open_with_prompt(
+    /// Prompted open with explicit [`OpenOptions`]: tenant tag plus an
+    /// optional ingest deadline — if the prompt has not fully ingested
+    /// by `opts.deadline`, the pending ingest is cancelled at the next
+    /// wave boundary and this returns a typed "deadline expired" error.
+    pub fn open_stream_with_prompt_opts(
         &self,
-        speculative: Option<bool>,
         prompt: &[i32],
+        opts: OpenOptions,
     ) -> Result<(DecodeStream, PrefillOut)> {
         let session = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
+        let tenant = opts.tenant.clone();
         self.tx
             .send(DecodeMsg::OpenWithPrompt {
                 session,
-                speculative,
+                speculative: opts.speculative,
+                tenant: opts.tenant,
+                deadline: opts.deadline,
                 prompt: prompt.to_vec(),
                 submitted: Instant::now(),
                 reply,
             })
             .map_err(|_| anyhow!("decode server shut down: cannot open stream"))?;
-        let out = rx
-            .recv()
-            .map_err(|_| anyhow!("decode server shut down during prefill"))??;
-        Ok((DecodeStream { session, tx: self.tx.clone() }, out))
+        let out = recv_reply(&rx, self.recv_timeout, "prefill")??;
+        Ok((
+            DecodeStream {
+                session,
+                tx: self.tx.clone(),
+                tenant,
+                recv_timeout: self.recv_timeout,
+            },
+            out,
+        ))
+    }
+
+    fn open_with_prompt(
+        &self,
+        speculative: Option<bool>,
+        prompt: &[i32],
+    ) -> Result<(DecodeStream, PrefillOut)> {
+        self.open_stream_with_prompt_opts(
+            prompt,
+            OpenOptions { speculative, ..OpenOptions::default() },
+        )
     }
 }
 
@@ -1252,6 +1388,8 @@ impl DecodeClient {
 pub struct DecodeStream {
     session: u64,
     tx: Sender<DecodeMsg>,
+    tenant: Option<Arc<str>>,
+    recv_timeout: Duration,
 }
 
 impl DecodeStream {
@@ -1261,20 +1399,47 @@ impl DecodeStream {
 
     /// Submit one token; returns a receiver for its logits.
     pub fn step_async(&self, token: i32) -> Result<Receiver<Result<StepOut>>> {
+        self.step_async_with_deadline(token, None)
+    }
+
+    /// `step_async` carrying an explicit deadline: if the step is still
+    /// queued when the deadline passes, the scheduler cancels it at the
+    /// next wave boundary with a typed "deadline expired" error — the
+    /// session does not advance, so the same token may be resubmitted.
+    pub fn step_async_with_deadline(
+        &self,
+        token: i32,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<StepOut>>> {
         let (reply, rx) = mpsc::channel();
-        let req =
-            StepReq { session: self.session, token, submitted: Instant::now(), reply };
+        let req = StepReq {
+            session: self.session,
+            token,
+            submitted: Instant::now(),
+            deadline,
+            tenant: self.tenant.clone(),
+            reply,
+        };
         self.tx
             .send(DecodeMsg::Step(req))
             .map_err(|_| anyhow!("decode server shut down: step not accepted"))?;
         Ok(rx)
     }
 
-    /// Submit one token and wait for its logits.
+    /// Submit one token and wait for its logits (bounded by the
+    /// client's recv timeout — a wedged scheduler cannot hang us).
     pub fn step(&self, token: i32) -> Result<StepOut> {
-        self.step_async(token)?
-            .recv()
-            .map_err(|_| anyhow!("decode server dropped step"))?
+        self.step_with_deadline(token, None)
+    }
+
+    /// Blocking step with a deadline (see `step_async_with_deadline`).
+    pub fn step_with_deadline(
+        &self,
+        token: i32,
+        deadline: Option<Instant>,
+    ) -> Result<StepOut> {
+        let rx = self.step_async_with_deadline(token, deadline)?;
+        recv_reply(&rx, self.recv_timeout, "step")?
     }
 }
 
@@ -1311,13 +1476,22 @@ impl DecodeServer {
         let (tx, rx) = mpsc::channel::<DecodeMsg>();
         let stats = Arc::new(Mutex::new(DecodeStats::default()));
         let stats_thread = stats.clone();
+        let queue_depth = Arc::new(AtomicUsize::new(0));
+        let depth_thread = queue_depth.clone();
         let model = Arc::new(model);
         let handle = std::thread::Builder::new()
             .name("fmm-decode".into())
-            .spawn(move || decode_scheduler(model, cfg, store, rx, stats_thread))
+            .spawn(move || {
+                decode_scheduler(model, cfg, store, rx, stats_thread, depth_thread)
+            })
             .expect("spawn decode scheduler");
         DecodeServer {
-            client: Some(DecodeClient { tx, next_id: Arc::new(AtomicU64::new(0)) }),
+            client: Some(DecodeClient {
+                tx,
+                next_id: Arc::new(AtomicU64::new(0)),
+                queue_depth,
+                recv_timeout: DEFAULT_CLIENT_RECV_TIMEOUT,
+            }),
             stats,
             handle: Some(handle),
         }
@@ -1328,7 +1502,7 @@ impl DecodeServer {
     }
 
     pub fn stats(&self) -> DecodeStats {
-        self.stats.lock().unwrap().clone()
+        lock_stats(&self.stats).clone()
     }
 
     /// Graceful shutdown via the explicit sentinel: queued steps are
@@ -1341,9 +1515,17 @@ impl DecodeServer {
         if let Some(h) = self.handle.take() {
             h.join().ok();
         }
-        let stats = self.stats.lock().unwrap().clone();
+        let stats = lock_stats(&self.stats).clone();
         stats
     }
+}
+
+/// Poison-tolerant stats lock: stats are plain counters, so if a wave
+/// panicked while holding the mutex the partial update is still the
+/// best available truth — recover the guard via `into_inner` instead of
+/// cascading the poison into every unrelated stream's stat sync.
+fn lock_stats(stats: &Mutex<DecodeStats>) -> MutexGuard<'_, DecodeStats> {
+    stats.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// One resident stream: plain incremental decode, or the speculative
@@ -1386,6 +1568,9 @@ struct Residency {
     spec: std::result::Result<Option<SpecFactory>, String>,
     /// Streams opened speculative (survives their spills).
     spec_ids: HashSet<u64>,
+    /// Tenant tags for per-tenant stat attribution (survives spills;
+    /// untagged streams have no entry).
+    tenants: HashMap<u64, Arc<str>>,
     /// Effective cap (`usize::MAX` when the config said unlimited).
     cap: usize,
     /// Monotone clock: bumped whenever a session is opened, restored or
@@ -1411,6 +1596,7 @@ impl Residency {
             store,
             spec,
             spec_ids: HashSet::new(),
+            tenants: HashMap::new(),
             cap: if max_resident == 0 { usize::MAX } else { max_resident },
             tick: 0,
             last_used: HashMap::new(),
@@ -1468,11 +1654,23 @@ impl Residency {
         Ok(())
     }
 
-    /// Drop a stream wherever it lives; true if it existed.
+    /// Drop a stream wherever it lives; true if it existed. Both homes
+    /// are cleared unconditionally (no short-circuit): if a fault ever
+    /// leaves a session resident *and* with a stale store snapshot, the
+    /// spill blob — a disk file under `DiskStore` — is still deleted
+    /// here rather than leaking until server drop.
     fn close(&mut self, id: u64) -> bool {
         self.last_used.remove(&id);
         self.spec_ids.remove(&id);
-        self.resident.remove(&id).is_some() || self.store.remove(id)
+        self.tenants.remove(&id);
+        let was_resident = self.resident.remove(&id).is_some();
+        let was_spilled = self.store.remove(id);
+        was_resident || was_spilled
+    }
+
+    /// Tenant tag of a stream, if it was opened with one.
+    fn tenant_of(&self, id: u64) -> Option<Arc<str>> {
+        self.tenants.get(&id).cloned()
     }
 
     /// Spill least-recently-used sessions not in `pinned` until there
@@ -1561,6 +1759,7 @@ fn decode_scheduler(
     store: Box<dyn SessionStore>,
     rx: Receiver<DecodeMsg>,
     stats: Arc<Mutex<DecodeStats>>,
+    queue_depth: Arc<AtomicUsize>,
 ) {
     // Build the draft machinery once; a failed build (bad draft model
     // config) fails speculative opens with its message, while plain
@@ -1593,7 +1792,7 @@ fn decode_scheduler(
                 ),
                 Err(_) => {
                     // All clients gone.
-                    res.sync_stats(&mut stats.lock().unwrap());
+                    res.sync_stats(&mut lock_stats(&stats));
                     return;
                 }
             }
@@ -1665,6 +1864,19 @@ fn decode_scheduler(
         let mut tally = RoundTally::default();
         let mut ptally = PrefillTally::default();
         pacer.round_reset();
+        // Deadline sweep at the wave boundary: queued ingests whose
+        // budget already lapsed fail typed NOW — before any compute is
+        // spent on them this round — and their sessions close. (Queued
+        // steps are swept inside their waves, same boundary semantics.)
+        if !prefills.is_empty() {
+            for id in prefills.fail_expired(Instant::now()) {
+                ptally.failed += 1;
+                ptally.expired += 1;
+                if res.close(id) {
+                    ptally.disconnected += 1;
+                }
+            }
+        }
         let mut budget =
             if cfg.prefill_budget == 0 { usize::MAX } else { cfg.prefill_budget };
         if cfg.unified_planner {
@@ -1747,7 +1959,7 @@ fn decode_scheduler(
             || ptally.chunks > 0
             || ptally.failed > 0;
         if did_work {
-            let mut s = stats.lock().unwrap();
+            let mut s = lock_stats(&stats);
             s.steps += tally.ok;
             s.failed_steps += tally.failed;
             s.micro_batches += usize::from(micro_batch > 0);
@@ -1775,6 +1987,14 @@ fn decode_scheduler(
             s.prefill_tokens += ptally.tokens;
             s.prefill_chunks += ptally.chunks;
             s.ttft_secs += ptally.ttft_secs;
+            s.deadline_expired_steps += tally.expired;
+            s.deadline_expired_prefills += ptally.expired;
+            for (tenant, load) in &tally.tenant_steps {
+                let t = s.per_tenant.entry(tenant.to_string()).or_default();
+                t.steps += load.steps;
+                t.failed_steps += load.failed_steps;
+                t.expired_steps += load.expired_steps;
+            }
             s.exec_secs += t0.elapsed().as_secs_f64();
             res.sync_stats(&mut s);
         }
@@ -1786,13 +2006,23 @@ fn decode_scheduler(
         // a dropped reply).
         for session in closes {
             prefills.cancel(session);
+            let tenant = res.tenant_of(session);
             if res.close(session) {
-                stats.lock().unwrap().sessions_closed += 1;
+                let mut s = lock_stats(&stats);
+                s.sessions_closed += 1;
+                if let Some(t) = tenant {
+                    s.per_tenant.entry(t.to_string()).or_default().closed += 1;
+                }
             }
         }
+        queue_depth.store(prefills.len(), Ordering::Relaxed);
         if exit {
+            let orphaned = prefills.len();
             prefills.fail_all("decode server shut down during prefill");
-            res.sync_stats(&mut stats.lock().unwrap());
+            queue_depth.store(0, Ordering::Relaxed);
+            let mut s = lock_stats(&stats);
+            s.failed_prefills += orphaned;
+            res.sync_stats(&mut s);
             return;
         }
     }
@@ -1808,6 +2038,8 @@ struct PrefillTally {
     ttft_secs: f64,
     /// Streams force-closed because their ingest failed.
     disconnected: usize,
+    /// Ingests cancelled by deadline expiry (subset of `failed`).
+    expired: usize,
 }
 
 /// Wall-time prefill budgeter: an EWMA cost model over measured
@@ -1962,6 +2194,19 @@ struct RoundTally {
     verify_rows: usize,
     rows_min: usize,
     rows_max: usize,
+    /// Steps cancelled at the wave boundary by deadline expiry (subset
+    /// of `failed`).
+    expired: usize,
+    /// Per-tenant step outcomes for tagged streams (only the step
+    /// fields of [`TenantLoad`] are populated here).
+    tenant_steps: HashMap<Arc<str>, TenantLoad>,
+}
+
+impl RoundTally {
+    /// Per-tenant accumulator row for a tagged step request.
+    fn tenant_entry(&mut self, tenant: &Option<Arc<str>>) -> Option<&mut TenantLoad> {
+        tenant.as_ref().map(|t| self.tenant_steps.entry(t.clone()).or_default())
+    }
 }
 
 /// Split a drained micro-batch into rounds with at most one step per
@@ -1995,6 +2240,9 @@ fn reply_step(
     match result {
         Ok(logits) => {
             tally.ok += 1;
+            if let Some(t) = tally.tenant_entry(&req.tenant) {
+                t.steps += 1;
+            }
             req.reply
                 .send(Ok(StepOut {
                     session: req.session,
@@ -2007,6 +2255,9 @@ fn reply_step(
         }
         Err(e) => {
             tally.failed += 1;
+            if let Some(t) = tally.tenant_entry(&req.tenant) {
+                t.failed_steps += 1;
+            }
             req.reply.send(Err(e)).ok();
         }
     }
@@ -2075,6 +2326,39 @@ fn run_round(
     }
 }
 
+/// Cancel (typed error) every step in `wave` whose deadline has already
+/// passed; returns the still-live remainder. Runs at the wave boundary
+/// — before any restore or compute is spent on the expired steps — and
+/// the session does NOT advance, so the caller may resubmit the same
+/// token and the stream stays bit-exact. Shared by both wave flavors so
+/// deadline semantics cannot drift between planner and baseline.
+fn sweep_expired(wave: Vec<StepReq>, tally: &mut RoundTally) -> Vec<StepReq> {
+    let now = Instant::now();
+    if !wave.iter().any(|r| r.deadline.map_or(false, |d| d <= now)) {
+        return wave;
+    }
+    let mut live = Vec::with_capacity(wave.len());
+    for req in wave {
+        if req.deadline.map_or(false, |d| d <= now) {
+            tally.failed += 1;
+            tally.expired += 1;
+            if let Some(t) = tally.tenant_entry(&req.tenant) {
+                t.failed_steps += 1;
+                t.expired_steps += 1;
+            }
+            req.reply
+                .send(Err(anyhow!(
+                    "deadline expired before execution (session {})",
+                    req.session
+                )))
+                .ok();
+        } else {
+            live.push(req);
+        }
+    }
+    live
+}
+
 /// Residency status of one wave member after the restore phase.
 enum WaveStatus {
     /// In the session table, ready to step.
@@ -2098,6 +2382,8 @@ fn run_wave(
     micro_batch: usize,
     tally: &mut RoundTally,
 ) {
+    // Phase 0: deadline sweep at the wave boundary.
+    let wave = sweep_expired(wave, tally);
     // Phase 1: bring every spilled session in this wave back into the
     // table. The whole wave is pinned so one member's restore cannot
     // evict another's just-restored state.
@@ -2119,9 +2405,16 @@ fn run_wave(
             Some(WaveStatus::Lost(msg)) => {
                 tally.failed += 1;
                 tally.disconnected += 1;
+                if let Some(t) = tally.tenant_entry(&req.tenant) {
+                    t.failed_steps += 1;
+                }
                 req.reply
                     .send(Err(anyhow!("restoring spilled session {id}: {msg}")))
                     .ok();
+                // The state is lost: fully close the stream so its
+                // bookkeeping (and any stale spill blob — a disk file
+                // under DiskStore) is released now, not at server drop.
+                res.close(id);
             }
             Some(WaveStatus::Unknown) | None => {
                 tally.failed += 1;
@@ -2218,6 +2511,9 @@ fn run_wave(
                 work.into_iter().zip(rows).zip(poses)
             {
                 tally.ok += 1;
+                if let Some(t) = tally.tenant_entry(&req.tenant) {
+                    t.steps += 1;
+                }
                 req.reply
                     .send(Ok(StepOut {
                         session: req.session,
@@ -2241,7 +2537,11 @@ fn run_wave(
             for (req, sess) in work {
                 tally.failed += 1;
                 tally.disconnected += 1;
+                if let Some(t) = tally.tenant_entry(&req.tenant) {
+                    t.failed_steps += 1;
+                }
                 req.reply.send(Err(anyhow!("batched step failed: {e}"))).ok();
+                res.close(req.session);
                 drop(sess);
             }
         }
@@ -2301,6 +2601,9 @@ fn run_planned_wave(
     tally: &mut RoundTally,
     ptally: &mut PrefillTally,
 ) {
+    // Phase 0: deadline sweep at the wave boundary. (Queued prompt
+    // ingests are swept once per round in the scheduler loop.)
+    let wave = sweep_expired(wave, tally);
     // Phase 1: restore. Pin steps and chunks alike.
     let mut ids: Vec<u64> = wave.iter().map(|r| r.session).collect();
     ids.extend(picks.iter().map(|p| p.session));
@@ -2321,9 +2624,16 @@ fn run_planned_wave(
             Some(WaveStatus::Lost(msg)) => {
                 tally.failed += 1;
                 tally.disconnected += 1;
+                if let Some(t) = tally.tenant_entry(&req.tenant) {
+                    t.failed_steps += 1;
+                }
                 req.reply
                     .send(Err(anyhow!("restoring spilled session {id}: {msg}")))
                     .ok();
+                // The state is lost: fully close the stream so its
+                // bookkeeping (and any stale spill blob — a disk file
+                // under DiskStore) is released now, not at server drop.
+                res.close(id);
             }
             Some(WaveStatus::Unknown) | None => {
                 tally.failed += 1;
@@ -2576,7 +2886,11 @@ fn run_planned_wave(
                     PlannedPart::Plain(req, _) | PlannedPart::Verify(req, _) => {
                         tally.failed += 1;
                         tally.disconnected += 1;
+                        if let Some(t) = tally.tenant_entry(&req.tenant) {
+                            t.failed_steps += 1;
+                        }
                         req.reply.send(Err(anyhow!("batched step failed: {e}"))).ok();
+                        res.close(id);
                     }
                     PlannedPart::Chunk(_) => {
                         queue.fail(id, anyhow!("batched step failed: {e}"));
@@ -2603,22 +2917,44 @@ fn handle_msg(
     stats: &Mutex<DecodeStats>,
 ) {
     match msg {
-        DecodeMsg::Open { session, speculative, reply } => {
+        DecodeMsg::Open { session, speculative, tenant, reply } => {
             let opened = res.open(session, model, speculative);
             if opened.is_ok() {
-                stats.lock().unwrap().sessions_opened += 1;
+                let mut s = lock_stats(stats);
+                s.sessions_opened += 1;
+                if let Some(t) = &tenant {
+                    s.per_tenant.entry(t.to_string()).or_default().opened += 1;
+                    res.tenants.insert(session, t.clone());
+                }
             }
             reply.send(opened).ok();
         }
-        DecodeMsg::OpenWithPrompt { session, speculative, prompt, submitted, reply } => {
+        DecodeMsg::OpenWithPrompt {
+            session,
+            speculative,
+            tenant,
+            deadline,
+            prompt,
+            submitted,
+            reply,
+        } => {
             // Validate the whole prompt before the session exists: a
             // bad prompt fails the open without registering anything.
             let admitted = prefill::validate_prompt(&prompt, model.config().vocab)
                 .and_then(|()| res.open(session, model, speculative));
             match admitted {
                 Ok(()) => {
-                    stats.lock().unwrap().sessions_opened += 1;
-                    prefills.push(PendingPrefill::new(session, prompt, submitted, reply));
+                    let mut s = lock_stats(stats);
+                    s.sessions_opened += 1;
+                    if let Some(t) = &tenant {
+                        s.per_tenant.entry(t.to_string()).or_default().opened += 1;
+                        res.tenants.insert(session, t.clone());
+                    }
+                    drop(s);
+                    prefills.push(
+                        PendingPrefill::new(session, prompt, submitted, reply)
+                            .with_deadline(deadline),
+                    );
                 }
                 Err(e) => {
                     reply.send(Err(e)).ok();

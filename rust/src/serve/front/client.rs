@@ -1,0 +1,235 @@
+//! Blocking wire client for the front tier — the loopback half of the
+//! bench/tests and the `decode-demo --connect` CLI.
+//!
+//! One connection carries any number of streams; requests are
+//! strictly sequential (send → wait for the matching reply), which
+//! keeps the client trivial and makes per-request latency directly
+//! measurable. A [`Reject`](super::wire::Response::Reject) surfaces as
+//! a typed `Err` whose message embeds the code slug in `[brackets]`;
+//! [`rejection_code`] parses it back out (the vendored `anyhow` shim
+//! has no downcast, so the slug *is* the type tag).
+//!
+//! For chaos testing, [`FrontClient::connect_with_faults`] routes every
+//! outbound frame through a [`FaultedWriter`] — delays, corruption,
+//! truncation, and scheduled kills then originate client-side while the
+//! server must keep every *other* connection bit-exact.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::fault::{FaultAction, FaultPlan, FaultedWriter};
+use super::wire::{
+    frame, FrameEvent, FrameReader, RejectCode, Request, Response, WIRE_VERSION,
+};
+
+/// How long the client waits for one reply before declaring the
+/// connection dead. Generous: replies normally arrive in microseconds;
+/// this exists so a wedged server is a typed error, not a hang.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A successfully opened wire stream.
+#[derive(Debug, Clone)]
+pub struct OpenReply {
+    /// Wire stream id (unique per server, stable across weight swaps).
+    pub stream: u64,
+    /// Prompt tokens ingested server-side (0 for unprompted opens).
+    pub prompt_tokens: u32,
+    /// Final prompt token's logits (empty for unprompted opens).
+    pub logits: Vec<f32>,
+}
+
+/// One step's reply.
+#[derive(Debug, Clone)]
+pub struct StepReply {
+    /// 0-based position of the decoded token within its stream.
+    pub pos: u64,
+    pub logits: Vec<f32>,
+}
+
+/// Blocking framed-protocol client over one TCP connection.
+pub struct FrontClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    faults: Option<FaultedWriter>,
+}
+
+impl FrontClient {
+    /// Connect to a [`FrontServer`](super::server::FrontServer).
+    pub fn connect(addr: &str) -> Result<FrontClient> {
+        Self::connect_inner(addr, None)
+    }
+
+    /// Connect with a client-side wire-fault schedule (chaos tests).
+    pub fn connect_with_faults(addr: &str, plan: FaultPlan) -> Result<FrontClient> {
+        let faults = plan.wire_faults().then(|| FaultedWriter::new(plan));
+        Self::connect_inner(addr, faults)
+    }
+
+    fn connect_inner(addr: &str, faults: Option<FaultedWriter>) -> Result<FrontClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow!("connecting to front tier at {addr}: {e}"))?;
+        stream
+            .set_read_timeout(Some(REPLY_TIMEOUT))
+            .map_err(|e| anyhow!("setting read timeout: {e}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(FrontClient { stream, reader: FrameReader::new(), faults })
+    }
+
+    /// Open a stream. Empty `prompt` opens unprompted; `deadline_ms` 0
+    /// takes the server default; `speculate` is 0 = server default,
+    /// 1 = plain, 2 = speculative.
+    pub fn open(
+        &mut self,
+        tenant: &str,
+        prompt: &[i32],
+        deadline_ms: u32,
+        speculate: u8,
+    ) -> Result<OpenReply> {
+        let req = Request::Open {
+            tenant: tenant.to_string(),
+            deadline_ms,
+            speculate,
+            prompt: prompt.to_vec(),
+        };
+        match self.round_trip(&req)? {
+            Response::OpenOk { stream, prompt_tokens, logits } => {
+                Ok(OpenReply { stream, prompt_tokens, logits })
+            }
+            other => Err(unexpected("OpenOk", &other)),
+        }
+    }
+
+    /// Advance `stream` by one token.
+    pub fn step(&mut self, stream: u64, token: i32, deadline_ms: u32) -> Result<StepReply> {
+        let req = Request::Step { stream, token, deadline_ms };
+        match self.round_trip(&req)? {
+            Response::StepOk { stream: got, pos, logits } => {
+                if got != stream {
+                    bail!("step reply for stream {got}, expected {stream}");
+                }
+                Ok(StepReply { pos, logits })
+            }
+            other => Err(unexpected("StepOk", &other)),
+        }
+    }
+
+    /// Close `stream` (idempotent server-side).
+    pub fn close_stream(&mut self, stream: u64) -> Result<()> {
+        match self.round_trip(&Request::Close { stream })? {
+            Response::CloseOk { .. } => Ok(()),
+            other => Err(unexpected("CloseOk", &other)),
+        }
+    }
+
+    /// Fetch the server's stats JSON document.
+    pub fn stats(&mut self) -> Result<String> {
+        match self.round_trip(&Request::Stats)? {
+            Response::StatsOk { json } => Ok(json),
+            other => Err(unexpected("StatsOk", &other)),
+        }
+    }
+
+    fn round_trip(&mut self, req: &Request) -> Result<Response> {
+        let (kind, body) = req.encode();
+        self.send_frame(frame(kind, &body))?;
+        let resp = self.read_response()?;
+        if let Response::Reject { code, retry_after_ms, message } = &resp {
+            // The [slug] is the machine-readable tag; rejection_code()
+            // recovers it from the error chain.
+            bail!("rejected [{code}] retry_after_ms={retry_after_ms}: {message}");
+        }
+        Ok(resp)
+    }
+
+    fn send_frame(&mut self, bytes: Vec<u8>) -> Result<()> {
+        let action = match self.faults.as_mut() {
+            Some(w) => w.apply(bytes),
+            None => FaultAction::Send(bytes),
+        };
+        match action {
+            FaultAction::Send(b) => self
+                .stream
+                .write_all(&b)
+                .map_err(|e| anyhow!("socket write failed: {e}")),
+            FaultAction::SendThenKill(b) => {
+                self.stream.write_all(&b).ok();
+                self.stream.shutdown(std::net::Shutdown::Both).ok();
+                bail!("fault injection: connection killed after truncated frame");
+            }
+            FaultAction::Kill => {
+                self.stream.shutdown(std::net::Shutdown::Both).ok();
+                bail!("fault injection: connection killed");
+            }
+        }
+    }
+
+    fn read_response(&mut self) -> Result<Response> {
+        loop {
+            match self.reader.read_event(&mut self.stream)? {
+                FrameEvent::Frame { version, kind, body } => {
+                    if version != WIRE_VERSION {
+                        bail!("server spoke wire version {version}, expected {WIRE_VERSION}");
+                    }
+                    return Response::decode(kind, &body);
+                }
+                FrameEvent::Eof => bail!("server closed the connection"),
+                FrameEvent::Timeout => {
+                    bail!("timed out after {REPLY_TIMEOUT:?} waiting for a reply")
+                }
+            }
+        }
+    }
+}
+
+fn unexpected(wanted: &str, got: &Response) -> anyhow::Error {
+    anyhow!("expected {wanted}, server sent {got:?}")
+}
+
+/// Recover the [`RejectCode`] a front-tier `Err` carries, if any: the
+/// client embeds the code slug in `[brackets]` (the vendored `anyhow`
+/// has no downcast, so the message is the contract — pinned by the
+/// wire tests).
+pub fn rejection_code(err: &anyhow::Error) -> Option<RejectCode> {
+    let msg = format!("{err:#}");
+    let start = msg.find("rejected [")? + "rejected [".len();
+    let rest = &msg[start..];
+    let end = rest.find(']')?;
+    let slug = &rest[..end];
+    [
+        RejectCode::RateLimited,
+        RejectCode::QuotaExceeded,
+        RejectCode::QueueFull,
+        RejectCode::Saturated,
+        RejectCode::DeadlineExpired,
+        RejectCode::Draining,
+        RejectCode::BadRequest,
+        RejectCode::Internal,
+        RejectCode::VersionMismatch,
+        RejectCode::Timeout,
+    ]
+    .into_iter()
+    .find(|c| c.as_str() == slug)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejection_code_parses_the_slug_out_of_an_error_chain() {
+        let err = anyhow!("rejected [quota_exceeded] retry_after_ms=0: tenant at cap");
+        assert_eq!(rejection_code(&err), Some(RejectCode::QuotaExceeded));
+        // Context wrapping keeps the slug findable.
+        use anyhow::Context;
+        let wrapped: Result<()> = Err(err).context("opening stream 4");
+        assert_eq!(
+            rejection_code(&wrapped.unwrap_err()),
+            Some(RejectCode::QuotaExceeded)
+        );
+        assert_eq!(rejection_code(&anyhow!("plain failure")), None);
+        assert_eq!(rejection_code(&anyhow!("rejected [nonsense] x")), None);
+    }
+}

@@ -1,0 +1,181 @@
+//! Fault-injection harness for the front tier.
+//!
+//! A [`FaultPlan`] is a deterministic schedule of misbehavior — frame
+//! delay, corruption, truncation, connection kills, and spill-store I/O
+//! failures — that the chaos tests (`tests/front_faults.rs`) and
+//! `benches/serve_front.rs --faults` drive real client traffic through.
+//! Determinism matters: every schedule counts concrete events (frames
+//! written, store operations performed), so a failing run replays
+//! exactly and the tests can assert *which* stream dies and that every
+//! neighbor's tokens stay byte-identical to an undisturbed run.
+//!
+//! Wire faults are applied client-side (a well-behaved server never
+//! sends garbage; the point is proving the server survives hostile
+//! peers). Store faults wrap the server's [`SessionStore`] via
+//! [`FaultyStore`], modeling a failing disk under the spill tier.
+
+use std::time::Duration;
+
+use crate::serve::session_store::{FaultyStore, SessionStore};
+
+/// Deterministic misbehavior schedule. `Default` is all-zeros: no
+/// faults. Every `*_every` field counts events of its kind; `0`
+/// disables that fault.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Sleep `delay` before every N-th frame write (jittery network).
+    pub delay_every: u64,
+    pub delay: Duration,
+    /// Flip one payload byte in every N-th frame written (bit rot /
+    /// hostile peer). The receiver's checksum must catch it.
+    pub corrupt_every: u64,
+    /// Send only the first half of every N-th frame, then kill the
+    /// connection (mid-frame disconnect).
+    pub truncate_every: u64,
+    /// Kill the connection outright after this many frames have been
+    /// written (mid-stream disconnect). `0` = never.
+    pub kill_after_frames: u64,
+    /// Fail every N-th spill write on the server's session store.
+    pub store_put_fail_every: u64,
+    /// Fail every N-th successful spill read-back (restore).
+    pub store_take_fail_every: u64,
+}
+
+impl FaultPlan {
+    /// Any client-side wire fault configured?
+    pub fn wire_faults(&self) -> bool {
+        self.delay_every > 0
+            || self.corrupt_every > 0
+            || self.truncate_every > 0
+            || self.kill_after_frames > 0
+    }
+
+    /// Any server-side store fault configured?
+    pub fn store_faults(&self) -> bool {
+        self.store_put_fail_every > 0 || self.store_take_fail_every > 0
+    }
+
+    /// Wrap a session store with this plan's I/O fault schedule (the
+    /// store passes through untouched when no store faults are set).
+    pub fn wrap_store(&self, inner: Box<dyn SessionStore>) -> Box<dyn SessionStore> {
+        if self.store_faults() {
+            Box::new(FaultyStore::new(
+                inner,
+                self.store_put_fail_every,
+                self.store_take_fail_every,
+            ))
+        } else {
+            inner
+        }
+    }
+}
+
+/// What to do with one outbound frame under a [`FaultPlan`].
+#[derive(Debug)]
+pub enum FaultAction {
+    /// Write these bytes (possibly delayed or corrupted).
+    Send(Vec<u8>),
+    /// Write these (truncated) bytes, then kill the connection.
+    SendThenKill(Vec<u8>),
+    /// Kill the connection without writing.
+    Kill,
+}
+
+/// Client-side frame mangler: counts frames written on one connection
+/// and applies the plan's wire schedule. Kill wins over truncate wins
+/// over corrupt when schedules collide on a frame.
+pub struct FaultedWriter {
+    plan: FaultPlan,
+    frames: u64,
+}
+
+impl FaultedWriter {
+    pub fn new(plan: FaultPlan) -> FaultedWriter {
+        FaultedWriter { plan, frames: 0 }
+    }
+
+    /// Frames this writer has been asked to send so far.
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    pub fn apply(&mut self, mut frame: Vec<u8>) -> FaultAction {
+        self.frames += 1;
+        let n = self.frames;
+        if self.plan.kill_after_frames > 0 && n > self.plan.kill_after_frames {
+            return FaultAction::Kill;
+        }
+        if self.plan.truncate_every > 0 && n % self.plan.truncate_every == 0 {
+            frame.truncate(frame.len() / 2);
+            return FaultAction::SendThenKill(frame);
+        }
+        if self.plan.corrupt_every > 0 && n % self.plan.corrupt_every == 0 {
+            // Flip a byte past the length prefix: the payload or the
+            // trailing checksum, either of which the receiver's
+            // verification must refuse. (Mangling the prefix itself
+            // would test the length bound instead — covered separately
+            // in the wire tests.)
+            let lo = 4usize;
+            if frame.len() > lo {
+                let idx = lo + (n.wrapping_mul(7919) as usize) % (frame.len() - lo);
+                frame[idx] ^= 0x5A;
+            }
+            return FaultAction::Send(frame);
+        }
+        if self.plan.delay_every > 0 && n % self.plan.delay_every == 0 {
+            std::thread::sleep(self.plan.delay);
+        }
+        FaultAction::Send(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::front::wire::{frame, FrameReader, KIND_STATS};
+
+    #[test]
+    fn schedules_fire_deterministically_and_in_priority_order() {
+        let plan = FaultPlan {
+            corrupt_every: 2,
+            truncate_every: 3,
+            kill_after_frames: 5,
+            ..FaultPlan::default()
+        };
+        let mut w = FaultedWriter::new(plan);
+        let f = || frame(KIND_STATS, &[]);
+        assert!(matches!(w.apply(f()), FaultAction::Send(_)));          // 1: clean
+        // 2: corrupted — same length, fails checksum on receipt.
+        match w.apply(f()) {
+            FaultAction::Send(bytes) => {
+                assert_eq!(bytes.len(), f().len());
+                assert_ne!(bytes, f());
+                let mut rd = FrameReader::new();
+                assert!(rd.read_event(&mut std::io::Cursor::new(&bytes)).is_err());
+            }
+            other => panic!("expected corrupted send, got {other:?}"),
+        }
+        // 3: truncated to half, then the connection dies.
+        match w.apply(f()) {
+            FaultAction::SendThenKill(bytes) => assert_eq!(bytes.len(), f().len() / 2),
+            other => panic!("expected truncate, got {other:?}"),
+        }
+        assert!(matches!(w.apply(f()), FaultAction::Send(_)));          // 4: corrupted
+        assert!(matches!(w.apply(f()), FaultAction::Send(_)));          // 5: clean
+        assert!(matches!(w.apply(f()), FaultAction::Kill));             // 6: > kill_after
+        assert_eq!(w.frames(), 6);
+    }
+
+    #[test]
+    fn default_plan_is_inert() {
+        let plan = FaultPlan::default();
+        assert!(!plan.wire_faults());
+        assert!(!plan.store_faults());
+        let mut w = FaultedWriter::new(plan);
+        let bytes = frame(KIND_STATS, &[]);
+        match w.apply(bytes.clone()) {
+            FaultAction::Send(b) => assert_eq!(b, bytes),
+            other => panic!("inert plan mangled a frame: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Serve front tier: the network edge in front of the decode engine.
+//!
+//! Everything below the front tier ([`DecodeServer`](super::decode),
+//! [`PrefillQueue`](super::prefill), the spill
+//! [`SessionStore`](super::session_store)) is in-process and trusts its
+//! caller. This module is where that trust ends: bytes arrive from a
+//! socket and must be verified, admitted, bounded by a deadline, and —
+//! when the system is full or the peer is hostile — refused with a
+//! typed reason instead of dropped, served late, or allowed to take a
+//! neighbor down with them.
+//!
+//! # Subsystem map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`wire`] | framed protocol: length prefix, version byte, FNV-1a checksum; `Open`/`Step`/`Close`/`Stats` requests, `*Ok` replies, typed [`Reject`](wire::Response::Reject) with [`RejectCode`] + `retry_after_ms` |
+//! | [`tenant`] | admission [`Gate`](tenant::Gate): per-tenant token buckets, `max_streams` quotas, global cap, shed accounting |
+//! | [`server`] | [`FrontServer`]: accept loop, per-connection threads, deadline propagation, graceful drain, dual-slot engine table for atomic weight swaps |
+//! | [`client`] | [`FrontClient`]: blocking wire client (bench, tests, `decode-demo --connect`), [`rejection_code`] to recover typed rejects from errors |
+//! | [`fault`] | [`FaultPlan`]: deterministic delay/corrupt/truncate/kill/store-I/O fault schedules for the chaos tests and bench |
+//!
+//! # Data flow
+//!
+//! ```text
+//! TcpStream ──► FrameReader ──► Request::decode ──► Gate::admit_* ──► DecodeClient
+//!    ▲  (verify len/ver/sum)     (typed parse)       (shed w/ code)     (deadline
+//!    │                                                                   attached)
+//!    └──────────── Response::encode ◄── StepOk / OpenOk / Reject ◄────────┘
+//! ```
+//!
+//! # Robustness contract (pinned by `tests/front_faults.rs`)
+//!
+//! * A corrupt, truncated, or oversize frame kills **only** its own
+//!   connection, with a best-effort `bad_request` reject on the way out.
+//! * Every admission refusal carries a [`RejectCode`] and, when the
+//!   refusal is time-based, a `retry_after_ms` hint.
+//! * Deadlines propagate to the engine and expire at wave boundaries —
+//!   expired work is cancelled, never silently completed late.
+//! * Every connection/stream exit path — clean close, EOF, fault,
+//!   engine error — releases its gate slot and engine pin:
+//!   [`FrontStats::leaked_sessions`] is 0 after any test run.
+//! * Shutdown drains: in-flight streams finish (or hit `drain_timeout`),
+//!   new opens shed with `draining`.
+
+pub mod client;
+pub mod fault;
+pub mod server;
+pub mod tenant;
+pub mod wire;
+
+pub use client::{rejection_code, FrontClient, OpenReply, StepReply};
+pub use fault::{FaultAction, FaultPlan, FaultedWriter};
+pub use server::{FrontConfig, FrontServer, FrontStats};
+pub use tenant::{Gate, GateSnapshot, TenantConfig, TenantSnapshot};
+pub use wire::{RejectCode, WIRE_VERSION};

@@ -1,0 +1,687 @@
+//! The front-tier server: a std-`TcpListener` accept loop, one thread
+//! per connection, all sharing one admission [`Gate`] and a dual-slot
+//! engine table in front of the [`DecodeServer`] scheduler.
+//!
+//! Request lifecycle (see the module map in [`super`]):
+//!
+//! 1. deframe + verify (length, version, checksum — [`super::wire`]);
+//! 2. admission ([`super::tenant`]): rate bucket → tenant quota →
+//!    global cap → prefill-queue depth, each refusal a typed
+//!    [`Reject`](super::wire::Response::Reject);
+//! 3. deadline attachment: the request's `deadline_ms` (or the server
+//!    default) becomes an engine-side [`Instant`] deadline — expired
+//!    work is cancelled at the next wave boundary, never silently
+//!    completed late;
+//! 4. execution against the *active* engine slot; streams opened before
+//!    a weight swap keep their original engine until they close, so a
+//!    swap never drops a resident session.
+//!
+//! Failure containment: a corrupt frame, a dead client, an engine
+//! error, or an expired deadline affects exactly one connection or one
+//! stream — the blast radius never crosses a tenant boundary, and every
+//! exit path releases the gate slot and the engine reference it held.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::WeightManifest;
+use crate::serve::decode::{
+    DecodeClient, DecodeServer, DecodeServerConfig, DecodeStats, DecodeStream,
+    HostDecoder, OpenOptions,
+};
+use crate::serve::session_store::{MemStore, SessionStore};
+use crate::util::json::Json;
+
+use super::tenant::{Gate, GateSnapshot, TenantConfig};
+use super::wire::{frame, FrameEvent, FrameReader, RejectCode, Request, Response, WIRE_VERSION};
+
+/// Front-tier policy knobs. `Default` is permissive (no rate limits, no
+/// caps, no default deadline) — production configs tighten per tenant.
+#[derive(Debug, Clone)]
+pub struct FrontConfig {
+    /// Tenant attributed to opens that carry an empty tenant string.
+    pub default_tenant: String,
+    /// Policy for tenants without an explicit entry in `tenants`.
+    pub tenant_defaults: TenantConfig,
+    /// Per-tenant policy overrides.
+    pub tenants: Vec<(String, TenantConfig)>,
+    /// Global cap on concurrently open streams across all tenants;
+    /// 0 = unlimited. Refusals surface as `saturated`.
+    pub max_open_streams: usize,
+    /// Shed prompted opens (`queue_full`) when the engine's prefill
+    /// queue holds at least this many pending prompts; 0 = unlimited.
+    pub max_queued_prompts: usize,
+    /// Deadline applied to requests that don't carry one (ms);
+    /// 0 = none.
+    pub default_deadline_ms: u32,
+    /// Socket read-poll tick: how often an idle connection thread wakes
+    /// to check drain state. Also bounds how stale a drain check for an
+    /// idle connection can be.
+    pub io_timeout: Duration,
+    /// Graceful-drain budget on shutdown: in-flight connections that
+    /// have not finished by then are abandoned.
+    pub drain_timeout: Duration,
+}
+
+impl Default for FrontConfig {
+    fn default() -> Self {
+        FrontConfig {
+            default_tenant: "public".into(),
+            tenant_defaults: TenantConfig::default(),
+            tenants: Vec::new(),
+            max_open_streams: 0,
+            max_queued_prompts: 0,
+            default_deadline_ms: 0,
+            io_timeout: Duration::from_millis(50),
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// One decode engine generation: a scheduler plus its client handle.
+/// `refs` counts wire streams still pinned to this generation; a
+/// non-active slot is shut down when the last one closes.
+struct EngineSlot {
+    version: u64,
+    client: DecodeClient,
+    server: Option<DecodeServer>,
+    refs: usize,
+}
+
+struct EngineTable {
+    /// Index of the slot new opens go to.
+    active: usize,
+    slots: Vec<EngineSlot>,
+    /// Final stats of engines already retired mid-run (weight swaps).
+    retired_stats: Vec<DecodeStats>,
+}
+
+struct Shared {
+    cfg: FrontConfig,
+    decode_cfg: DecodeServerConfig,
+    gate: Gate,
+    draining: AtomicBool,
+    drain_deadline: Mutex<Option<Instant>>,
+    engines: Mutex<EngineTable>,
+    conns: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Wire stream ids — front-level, so they stay unique across engine
+    /// generations (each engine numbers its own sessions from 0).
+    next_wire_id: AtomicU64,
+    connections: AtomicUsize,
+    bad_frames: AtomicUsize,
+}
+
+/// Poison-tolerant lock (same rationale as the decode scheduler's
+/// `lock_stats`): these guards protect plain bookkeeping, so a panicked
+/// peer thread must not cascade into every other connection.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+impl Shared {
+    fn past_drain_deadline(&self) -> bool {
+        relock(&self.drain_deadline)
+            .map_or(false, |d| d <= Instant::now())
+    }
+
+    /// Pin the active engine for a new stream: bump its refcount and
+    /// hand back its client.
+    fn acquire_engine(&self) -> (usize, DecodeClient) {
+        let mut t = relock(&self.engines);
+        let idx = t.active;
+        t.slots[idx].refs += 1;
+        (idx, t.slots[idx].client.clone())
+    }
+
+    /// Unpin an engine slot; a retired (non-active) generation is shut
+    /// down once its last stream lets go.
+    fn release_engine(&self, idx: usize) {
+        let retired = {
+            let mut t = relock(&self.engines);
+            let active = t.active;
+            let slot = &mut t.slots[idx];
+            slot.refs = slot.refs.saturating_sub(1);
+            if idx != active && slot.refs == 0 { slot.server.take() } else { None }
+        };
+        if let Some(server) = retired {
+            // Shutdown outside the table lock: it joins the scheduler
+            // thread, which may take a wave's worth of time.
+            let stats = server.shutdown();
+            relock(&self.engines).retired_stats.push(stats);
+        }
+    }
+
+    fn stats_json(&self) -> String {
+        let gate = self.gate.snapshot();
+        let (version, queue_depth, decode) = {
+            let t = relock(&self.engines);
+            let slot = &t.slots[t.active];
+            let stats =
+                slot.server.as_ref().map(|s| s.stats()).unwrap_or_default();
+            (slot.version, slot.client.prefill_queue_depth(), stats)
+        };
+        let shed_by_code = Json::obj(
+            gate.shed_by_code
+                .iter()
+                .map(|(code, n)| (code.as_str(), Json::num(*n as f64)))
+                .collect(),
+        );
+        let tenants = Json::obj(
+            gate.tenants
+                .iter()
+                .map(|t| {
+                    (
+                        t.tenant.as_str(),
+                        Json::obj(vec![
+                            ("opens", Json::num(t.opens as f64)),
+                            ("steps", Json::num(t.steps as f64)),
+                            ("active", Json::num(t.active as f64)),
+                            ("shed", Json::num(t.shed as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("draining", Json::Bool(self.draining.load(Ordering::SeqCst))),
+            ("connections", Json::num(self.connections.load(Ordering::Relaxed) as f64)),
+            ("bad_frames", Json::num(self.bad_frames.load(Ordering::Relaxed) as f64)),
+            ("engine_version", Json::num(version as f64)),
+            ("queue_depth", Json::num(queue_depth as f64)),
+            ("shed_total", Json::num(gate.shed_total as f64)),
+            ("shed_by_code", shed_by_code),
+            ("tenants", tenants),
+            (
+                "decode",
+                Json::obj(vec![
+                    ("steps", Json::num(decode.steps as f64)),
+                    ("failed_steps", Json::num(decode.failed_steps as f64)),
+                    ("sessions_opened", Json::num(decode.sessions_opened as f64)),
+                    ("sessions_closed", Json::num(decode.sessions_closed as f64)),
+                    ("spills", Json::num(decode.spills as f64)),
+                    ("restores", Json::num(decode.restores as f64)),
+                    ("spill_failures", Json::num(decode.spill_failures as f64)),
+                    ("prefills", Json::num(decode.prefills as f64)),
+                    ("failed_prefills", Json::num(decode.failed_prefills as f64)),
+                    (
+                        "deadline_expired_steps",
+                        Json::num(decode.deadline_expired_steps as f64),
+                    ),
+                    (
+                        "deadline_expired_prefills",
+                        Json::num(decode.deadline_expired_prefills as f64),
+                    ),
+                ]),
+            ),
+        ])
+        .to_string()
+    }
+}
+
+/// Final front-tier accounting, returned by
+/// [`FrontServer::shutdown`].
+#[derive(Debug, Clone)]
+pub struct FrontStats {
+    /// Connections accepted over the server's lifetime.
+    pub connections: usize,
+    /// Frames refused by deframing (corruption, truncation, oversize)
+    /// plus bodies that failed to parse.
+    pub bad_frames: usize,
+    /// Admission-gate totals (per-tenant opens/steps/sheds).
+    pub gate: GateSnapshot,
+    /// Every engine generation's final [`DecodeStats`], in retirement
+    /// order with the still-live generations last.
+    pub engines: Vec<DecodeStats>,
+}
+
+impl FrontStats {
+    /// Sessions opened minus closed across every engine generation —
+    /// 0 means no stream leaked engine-side, whatever faults were
+    /// injected.
+    pub fn leaked_sessions(&self) -> isize {
+        let opened: usize = self.engines.iter().map(|e| e.sessions_opened).sum();
+        let closed: usize = self.engines.iter().map(|e| e.sessions_closed).sum();
+        opened as isize - closed as isize
+    }
+}
+
+/// The TCP front tier. Start with [`start`](FrontServer::start), stop
+/// with [`shutdown`](FrontServer::shutdown) (graceful drain).
+pub struct FrontServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FrontServer {
+    /// Bind `addr` (use port 0 for an OS-assigned port; read it back
+    /// via [`local_addr`](FrontServer::local_addr)) and serve `model`
+    /// behind the front tier, spilling to a [`MemStore`].
+    pub fn start(
+        addr: &str,
+        model: HostDecoder,
+        decode_cfg: DecodeServerConfig,
+        front_cfg: FrontConfig,
+    ) -> Result<FrontServer> {
+        Self::start_with_store(addr, model, decode_cfg, front_cfg, Box::new(MemStore::new()))
+    }
+
+    /// [`start`](FrontServer::start) with an explicit spill store —
+    /// [`DiskStore`](crate::serve::session_store::DiskStore) for the
+    /// capacity tier, or a fault-wrapped store
+    /// ([`FaultPlan::wrap_store`](super::fault::FaultPlan::wrap_store))
+    /// for chaos tests.
+    pub fn start_with_store(
+        addr: &str,
+        model: HostDecoder,
+        decode_cfg: DecodeServerConfig,
+        front_cfg: FrontConfig,
+        store: Box<dyn SessionStore>,
+    ) -> Result<FrontServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding front tier to {addr}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        let engine = DecodeServer::start_with_store(model, decode_cfg.clone(), store);
+        let client = engine.client();
+        let gate = Gate::new(
+            front_cfg.tenant_defaults.clone(),
+            &front_cfg.tenants,
+            front_cfg.max_open_streams,
+        );
+        let shared = Arc::new(Shared {
+            cfg: front_cfg,
+            decode_cfg,
+            gate,
+            draining: AtomicBool::new(false),
+            drain_deadline: Mutex::new(None),
+            engines: Mutex::new(EngineTable {
+                active: 0,
+                slots: vec![EngineSlot {
+                    version: 1,
+                    client,
+                    server: Some(engine),
+                    refs: 0,
+                }],
+                retired_stats: Vec::new(),
+            }),
+            conns: Mutex::new(Vec::new()),
+            next_wire_id: AtomicU64::new(1),
+            connections: AtomicUsize::new(0),
+            bad_frames: AtomicUsize::new(0),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("fmm-front-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("spawning accept thread")?;
+        Ok(FrontServer { addr: local, shared, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Atomically swap in a new decoder generation described by a
+    /// verified [`WeightManifest`]: the new engine is built and warmed
+    /// *before* the flip, new opens land on it immediately after, and
+    /// streams resident on the old generation keep serving there until
+    /// they close (the old engine retires when its last stream does).
+    /// Returns the now-active version.
+    pub fn swap_weights(&self, manifest: &WeightManifest) -> Result<u64> {
+        let cfg = manifest.to_config()?;
+        let model = HostDecoder::new(cfg)?;
+        // Warm + sanity outside any lock: one row through every layer.
+        // A manifest describing a broken config fails here, before the
+        // flip — live traffic never sees a half-working engine.
+        model.forward_batch(&[0]).context("warming swapped-in decoder")?;
+        let server = DecodeServer::start(model, self.shared.decode_cfg.clone());
+        let client = server.client();
+        let retired = {
+            let mut t = relock(&self.shared.engines);
+            let old = t.active;
+            t.slots.push(EngineSlot {
+                version: manifest.version,
+                client,
+                server: Some(server),
+                refs: 0,
+            });
+            t.active = t.slots.len() - 1;
+            if t.slots[old].refs == 0 { t.slots[old].server.take() } else { None }
+        };
+        if let Some(old_engine) = retired {
+            let stats = old_engine.shutdown();
+            relock(&self.shared.engines).retired_stats.push(stats);
+        }
+        Ok(manifest.version)
+    }
+
+    /// Graceful drain: new opens are shed with `draining`, in-flight
+    /// connections get until `drain_timeout` to finish, then every
+    /// engine generation is shut down. Returns final accounting.
+    pub fn shutdown(mut self) -> FrontStats {
+        *relock(&self.shared.drain_deadline) =
+            Some(Instant::now() + self.shared.cfg.drain_timeout);
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // Wake the blocking accept loop with a throwaway connection.
+        TcpStream::connect(self.addr).ok();
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+        let conns: Vec<_> = relock(&self.shared.conns).drain(..).collect();
+        for h in conns {
+            h.join().ok();
+        }
+        let mut engines = Vec::new();
+        let slots: Vec<EngineSlot> = {
+            let mut t = relock(&self.shared.engines);
+            engines.append(&mut t.retired_stats);
+            t.slots.drain(..).collect()
+        };
+        for mut slot in slots {
+            if let Some(server) = slot.server.take() {
+                engines.push(server.shutdown());
+            }
+        }
+        FrontStats {
+            connections: self.shared.connections.load(Ordering::Relaxed),
+            bad_frames: self.shared.bad_frames.load(Ordering::Relaxed),
+            gate: self.shared.gate.snapshot(),
+            engines,
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(sock) = stream else { continue };
+        shared.connections.fetch_add(1, Ordering::Relaxed);
+        let conn_shared = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("fmm-front-conn".into())
+            .spawn(move || conn_loop(sock, conn_shared));
+        match handle {
+            Ok(h) => relock(&shared.conns).push(h),
+            Err(_) => continue,
+        }
+    }
+}
+
+/// One wire stream's server-side state on its connection.
+struct ConnStream {
+    handle: DecodeStream,
+    tenant: String,
+    slot: usize,
+}
+
+fn conn_loop(mut sock: TcpStream, shared: Arc<Shared>) {
+    sock.set_nodelay(true).ok();
+    sock.set_read_timeout(Some(shared.cfg.io_timeout)).ok();
+    let mut reader = FrameReader::new();
+    let mut streams: HashMap<u64, ConnStream> = HashMap::new();
+    loop {
+        if shared.draining.load(Ordering::SeqCst) && shared.past_drain_deadline() {
+            break;
+        }
+        let event = match reader.read_event(&mut sock) {
+            Ok(ev) => ev,
+            Err(e) => {
+                // Framing cannot resynchronize after a corrupt length or
+                // checksum: tell the peer why (best effort) and close.
+                // Only THIS connection dies; its streams are cleaned up
+                // below and every other connection is untouched.
+                shared.bad_frames.fetch_add(1, Ordering::Relaxed);
+                send_response(
+                    &mut sock,
+                    &reject(RejectCode::BadRequest, 0, &format!("{e:#}; closing connection")),
+                )
+                .ok();
+                break;
+            }
+        };
+        let keep = match event {
+            FrameEvent::Timeout => true,
+            FrameEvent::Eof => false,
+            FrameEvent::Frame { version, kind, body } => {
+                if version != WIRE_VERSION {
+                    send_response(
+                        &mut sock,
+                        &reject(
+                            RejectCode::VersionMismatch,
+                            0,
+                            &format!("wire version {version} unsupported (speak {WIRE_VERSION})"),
+                        ),
+                    )
+                    .ok();
+                    false
+                } else {
+                    match Request::decode(kind, &body) {
+                        Ok(req) => handle_request(req, &mut sock, &mut streams, &shared),
+                        Err(e) => {
+                            shared.bad_frames.fetch_add(1, Ordering::Relaxed);
+                            send_response(
+                                &mut sock,
+                                &reject(RejectCode::BadRequest, 0, &format!("{e:#}")),
+                            )
+                            .ok();
+                            false
+                        }
+                    }
+                }
+            }
+        };
+        if !keep {
+            break;
+        }
+    }
+    // Connection teardown — deliberate order per stream: release the
+    // tenant's gate slot, close the engine session (DecodeStream drop
+    // sends Close), then unpin the engine generation.
+    for (_, cs) in streams.drain() {
+        shared.gate.release(&cs.tenant);
+        let slot = cs.slot;
+        drop(cs.handle);
+        shared.release_engine(slot);
+    }
+}
+
+fn reject(code: RejectCode, retry_after_ms: u32, message: &str) -> Response {
+    Response::Reject { code, retry_after_ms, message: message.to_string() }
+}
+
+fn send_response(sock: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let (kind, body) = resp.encode();
+    sock.write_all(&frame(kind, &body))
+}
+
+/// Engine `Err` → wire reject code. The vendored `anyhow` has no
+/// downcast, so the engine's typed message substrings are the contract
+/// (pinned engine-side by the decode/prefill tests).
+fn classify_engine_error(msg: &str) -> RejectCode {
+    if msg.contains("deadline expired") {
+        RejectCode::DeadlineExpired
+    } else if msg.contains("timed out") {
+        RejectCode::Timeout
+    } else {
+        RejectCode::Internal
+    }
+}
+
+/// Deadline attachment: the request's explicit budget, else the server
+/// default, else none.
+fn effective_deadline(deadline_ms: u32, cfg: &FrontConfig, now: Instant) -> Option<Instant> {
+    let ms = if deadline_ms > 0 { deadline_ms } else { cfg.default_deadline_ms };
+    (ms > 0).then(|| now + Duration::from_millis(ms as u64))
+}
+
+/// Serve one request; returns whether the connection should stay open.
+fn handle_request(
+    req: Request,
+    sock: &mut TcpStream,
+    streams: &mut HashMap<u64, ConnStream>,
+    shared: &Arc<Shared>,
+) -> bool {
+    match req {
+        Request::Open { tenant, deadline_ms, speculate, prompt } => {
+            let tenant =
+                if tenant.is_empty() { shared.cfg.default_tenant.clone() } else { tenant };
+            let now = Instant::now();
+            if shared.draining.load(Ordering::SeqCst) {
+                shared.gate.record_shed(&tenant, RejectCode::Draining);
+                return send_response(
+                    sock,
+                    &reject(RejectCode::Draining, 0, "server draining; open shed"),
+                )
+                .is_ok();
+            }
+            let speculative = match speculate {
+                0 => None,
+                1 => Some(false),
+                2 => Some(true),
+                other => {
+                    return send_response(
+                        sock,
+                        &reject(
+                            RejectCode::BadRequest,
+                            0,
+                            &format!("speculate {other} not in 0|1|2"),
+                        ),
+                    )
+                    .is_ok();
+                }
+            };
+            if let Err((code, retry_ms)) = shared.gate.admit_open(&tenant, now) {
+                let msg = match code {
+                    RejectCode::RateLimited => "tenant rate limit exceeded",
+                    RejectCode::QuotaExceeded => "tenant at max_streams quota",
+                    _ => "global open-stream cap reached",
+                };
+                return send_response(sock, &reject(code, retry_ms, msg)).is_ok();
+            }
+            // Past this point the gate slot is reserved: every failure
+            // path must release it.
+            let (slot, client) = shared.acquire_engine();
+            if !prompt.is_empty()
+                && shared.cfg.max_queued_prompts > 0
+                && client.prefill_queue_depth() >= shared.cfg.max_queued_prompts
+            {
+                shared.release_engine(slot);
+                shared.gate.release(&tenant);
+                shared.gate.record_shed(&tenant, RejectCode::QueueFull);
+                return send_response(
+                    sock,
+                    &reject(
+                        RejectCode::QueueFull,
+                        50,
+                        "prefill queue at operator bound; prompted open shed",
+                    ),
+                )
+                .is_ok();
+            }
+            let opts = OpenOptions {
+                speculative,
+                tenant: Some(Arc::from(tenant.as_str())),
+                deadline: effective_deadline(deadline_ms, &shared.cfg, now),
+            };
+            let opened = if prompt.is_empty() {
+                client.open_stream_opts(opts).map(|h| (h, 0u32, Vec::new()))
+            } else {
+                client
+                    .open_stream_with_prompt_opts(&prompt, opts)
+                    .map(|(h, out)| (h, out.prompt_tokens as u32, out.logits))
+            };
+            match opened {
+                Ok((handle, prompt_tokens, logits)) => {
+                    let wire_id = shared.next_wire_id.fetch_add(1, Ordering::Relaxed);
+                    streams.insert(wire_id, ConnStream { handle, tenant, slot });
+                    send_response(
+                        sock,
+                        &Response::OpenOk { stream: wire_id, prompt_tokens, logits },
+                    )
+                    .is_ok()
+                }
+                Err(e) => {
+                    shared.release_engine(slot);
+                    shared.gate.release(&tenant);
+                    let msg = format!("{e:#}");
+                    let code = classify_engine_error(&msg);
+                    send_response(sock, &reject(code, 0, &msg)).is_ok()
+                }
+            }
+        }
+        Request::Step { stream: wire_id, token, deadline_ms } => {
+            let now = Instant::now();
+            let Some(cs) = streams.get(&wire_id) else {
+                return send_response(
+                    sock,
+                    &reject(
+                        RejectCode::BadRequest,
+                        0,
+                        &format!("unknown stream {wire_id} on this connection"),
+                    ),
+                )
+                .is_ok();
+            };
+            if let Err((code, retry_ms)) = shared.gate.admit_step(&cs.tenant, now) {
+                return send_response(
+                    sock,
+                    &reject(code, retry_ms, "tenant rate limit exceeded"),
+                )
+                .is_ok();
+            }
+            let deadline = effective_deadline(deadline_ms, &shared.cfg, now);
+            match cs.handle.step_with_deadline(token, deadline) {
+                Ok(out) => send_response(
+                    sock,
+                    &Response::StepOk {
+                        stream: wire_id,
+                        pos: out.pos as u64,
+                        logits: out.logits,
+                    },
+                )
+                .is_ok(),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let code = classify_engine_error(&msg);
+                    if code != RejectCode::DeadlineExpired {
+                        // The engine disconnected the stream (or its
+                        // state is unknown after a timeout): unmap it so
+                        // later steps get a clean BadRequest, and return
+                        // its admission slot + engine pin.
+                        let cs = streams.remove(&wire_id).expect("checked above");
+                        shared.gate.release(&cs.tenant);
+                        let slot = cs.slot;
+                        drop(cs.handle);
+                        shared.release_engine(slot);
+                    }
+                    // Deadline expiry keeps the mapping: the session did
+                    // not advance, so the client may resubmit the token.
+                    send_response(sock, &reject(code, 0, &msg)).is_ok()
+                }
+            }
+        }
+        Request::Close { stream: wire_id } => {
+            if let Some(cs) = streams.remove(&wire_id) {
+                shared.gate.release(&cs.tenant);
+                let slot = cs.slot;
+                drop(cs.handle);
+                shared.release_engine(slot);
+            }
+            // Idempotent: closing an unknown/already-closed stream is OK.
+            send_response(sock, &Response::CloseOk { stream: wire_id }).is_ok()
+        }
+        Request::Stats => {
+            let json = shared.stats_json();
+            send_response(sock, &Response::StatsOk { json }).is_ok()
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! Per-tenant admission control: token-bucket rate limits, max-stream
+//! quotas, and a global open-stream cap, behind one [`Gate`] shared by
+//! every connection thread.
+//!
+//! Every refusal maps to exactly one [`RejectCode`] so load shedding is
+//! observable and typed end-to-end: `rate_limited` (bucket empty, with
+//! a computed `retry_after_ms`), `quota_exceeded` (tenant at its
+//! `max_streams`), `saturated` (global cap). The gate also tallies
+//! server-decided sheds (`queue_full`, `draining`) reported via
+//! [`Gate::record_shed`], so the stats document shows *all* shedding in
+//! one place, per tenant and per code.
+//!
+//! Fairness invariant (pinned by `tests/front.rs`): one tenant
+//! exhausting its own quota can never starve another — quotas and
+//! buckets are strictly per-tenant, and the global cap only engages
+//! past the sum the operator provisioned.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::wire::RejectCode;
+
+/// Admission policy for one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    /// Token-bucket refill rate in requests/second (opens *and* steps
+    /// each cost one token). `0.0` = unlimited.
+    pub rate: f64,
+    /// Bucket capacity: how large a burst is admitted at once.
+    pub burst: f64,
+    /// Max concurrently open streams for this tenant. `0` = unlimited.
+    pub max_streams: usize,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig { rate: 0.0, burst: 16.0, max_streams: 0 }
+    }
+}
+
+/// Classic token bucket; monotone-clock driven, no background thread.
+#[derive(Debug)]
+struct TokenBucket {
+    fill: f64,
+    last: Instant,
+    rate: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    fn new(cfg: &TenantConfig, now: Instant) -> TokenBucket {
+        TokenBucket { fill: cfg.burst, last: now, rate: cfg.rate, burst: cfg.burst }
+    }
+
+    /// Take one token, or say how long (ms) until one will exist.
+    fn try_take(&mut self, now: Instant) -> Result<(), u32> {
+        if self.rate <= 0.0 {
+            return Ok(());
+        }
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.fill = (self.fill + dt * self.rate).min(self.burst);
+        if self.fill >= 1.0 {
+            self.fill -= 1.0;
+            return Ok(());
+        }
+        let wait_ms = ((1.0 - self.fill) / self.rate * 1e3).ceil();
+        Err((wait_ms as u32).max(1))
+    }
+}
+
+#[derive(Debug)]
+struct TenantState {
+    bucket: TokenBucket,
+    cfg: TenantConfig,
+    /// Currently open streams (reserved by `admit_open`, returned by
+    /// `release`).
+    active: usize,
+    opens: usize,
+    steps: usize,
+    shed: usize,
+}
+
+struct GateInner {
+    tenants: HashMap<String, TenantState>,
+    default_cfg: TenantConfig,
+    /// Global cap across all tenants; 0 = unlimited.
+    max_open_streams: usize,
+    total_active: usize,
+    shed_total: usize,
+    shed_by_code: HashMap<u8, usize>,
+}
+
+impl GateInner {
+    /// Look up (lazily creating with the default policy) a tenant.
+    fn tenant(&mut self, name: &str, now: Instant) -> &mut TenantState {
+        if !self.tenants.contains_key(name) {
+            let cfg = self.default_cfg.clone();
+            let state = TenantState {
+                bucket: TokenBucket::new(&cfg, now),
+                cfg,
+                active: 0,
+                opens: 0,
+                steps: 0,
+                shed: 0,
+            };
+            self.tenants.insert(name.to_string(), state);
+        }
+        self.tenants.get_mut(name).expect("inserted above")
+    }
+
+    fn shed(&mut self, name: &str, code: RejectCode, now: Instant) {
+        self.shed_total += 1;
+        *self.shed_by_code.entry(code as u8).or_default() += 1;
+        self.tenant(name, now).shed += 1;
+    }
+}
+
+/// The admission gate. Cheap interior mutex: admission math is a few
+/// float ops; connection threads serialize here only briefly.
+pub struct Gate {
+    inner: Mutex<GateInner>,
+}
+
+impl Gate {
+    pub fn new(
+        default_cfg: TenantConfig,
+        overrides: &[(String, TenantConfig)],
+        max_open_streams: usize,
+    ) -> Gate {
+        let now = Instant::now();
+        let mut tenants = HashMap::new();
+        for (name, cfg) in overrides {
+            let state = TenantState {
+                bucket: TokenBucket::new(cfg, now),
+                cfg: cfg.clone(),
+                active: 0,
+                opens: 0,
+                steps: 0,
+                shed: 0,
+            };
+            tenants.insert(name.clone(), state);
+        }
+        Gate {
+            inner: Mutex::new(GateInner {
+                tenants,
+                default_cfg,
+                max_open_streams,
+                total_active: 0,
+                shed_total: 0,
+                shed_by_code: HashMap::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, GateInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Admit a stream open: rate bucket, then tenant quota, then the
+    /// global cap. `Ok` reserves one active-stream slot (the caller
+    /// must [`release`](Self::release) it on close or open failure).
+    /// `Err` is the reject code plus a retry hint and is already
+    /// tallied as a shed.
+    pub fn admit_open(&self, tenant: &str, now: Instant) -> Result<(), (RejectCode, u32)> {
+        let mut g = self.lock();
+        let max_open = g.max_open_streams;
+        let total = g.total_active;
+        let t = g.tenant(tenant, now);
+        let verdict = if let Err(wait_ms) = t.bucket.try_take(now) {
+            Err((RejectCode::RateLimited, wait_ms))
+        } else if t.cfg.max_streams > 0 && t.active >= t.cfg.max_streams {
+            Err((RejectCode::QuotaExceeded, 0))
+        } else if max_open > 0 && total >= max_open {
+            Err((RejectCode::Saturated, 0))
+        } else {
+            t.active += 1;
+            t.opens += 1;
+            Ok(())
+        };
+        match verdict {
+            Ok(()) => {
+                g.total_active += 1;
+                Ok(())
+            }
+            Err((code, wait)) => {
+                g.shed(tenant, code, now);
+                Err((code, wait))
+            }
+        }
+    }
+
+    /// Admit one step on an already-open stream (rate bucket only; the
+    /// stream slot is already reserved).
+    pub fn admit_step(&self, tenant: &str, now: Instant) -> Result<(), (RejectCode, u32)> {
+        let mut g = self.lock();
+        let t = g.tenant(tenant, now);
+        match t.bucket.try_take(now) {
+            Ok(()) => {
+                t.steps += 1;
+                Ok(())
+            }
+            Err(wait_ms) => {
+                g.shed(tenant, RejectCode::RateLimited, now);
+                Err((RejectCode::RateLimited, wait_ms))
+            }
+        }
+    }
+
+    /// Return a stream slot reserved by a successful `admit_open`.
+    pub fn release(&self, tenant: &str) {
+        let mut g = self.lock();
+        if let Some(t) = g.tenants.get_mut(tenant) {
+            t.active = t.active.saturating_sub(1);
+        }
+        g.total_active = g.total_active.saturating_sub(1);
+    }
+
+    /// Tally a shed decided outside the gate (queue full, draining) so
+    /// all shedding shows up in one stats document.
+    pub fn record_shed(&self, tenant: &str, code: RejectCode) {
+        let now = Instant::now();
+        self.lock().shed(tenant, code, now);
+    }
+
+    pub fn snapshot(&self) -> GateSnapshot {
+        let g = self.lock();
+        let mut shed_by_code: Vec<(RejectCode, usize)> = g
+            .shed_by_code
+            .iter()
+            .filter_map(|(&raw, &n)| RejectCode::from_u8(raw).map(|c| (c, n)))
+            .collect();
+        shed_by_code.sort_by_key(|(c, _)| *c as u8);
+        let mut tenants: Vec<TenantSnapshot> = g
+            .tenants
+            .iter()
+            .map(|(name, t)| TenantSnapshot {
+                tenant: name.clone(),
+                opens: t.opens,
+                steps: t.steps,
+                active: t.active,
+                shed: t.shed,
+            })
+            .collect();
+        tenants.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+        GateSnapshot { shed_total: g.shed_total, shed_by_code, tenants }
+    }
+}
+
+/// Point-in-time view of the gate for stats/reporting.
+#[derive(Debug, Clone)]
+pub struct GateSnapshot {
+    pub shed_total: usize,
+    pub shed_by_code: Vec<(RejectCode, usize)>,
+    pub tenants: Vec<TenantSnapshot>,
+}
+
+impl GateSnapshot {
+    /// Sheds recorded for one tenant (0 if unknown).
+    pub fn shed_of(&self, tenant: &str) -> usize {
+        self.tenants.iter().find(|t| t.tenant == tenant).map_or(0, |t| t.shed)
+    }
+}
+
+/// One tenant's slice of a [`GateSnapshot`].
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    pub tenant: String,
+    pub opens: usize,
+    pub steps: usize,
+    pub active: usize,
+    pub shed: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn quota_is_per_tenant_and_releases_restore_capacity() {
+        let quota = TenantConfig { rate: 0.0, burst: 1.0, max_streams: 2 };
+        let gate = Gate::new(TenantConfig::default(), &[("greedy".into(), quota)], 0);
+        let now = Instant::now();
+        assert!(gate.admit_open("greedy", now).is_ok());
+        assert!(gate.admit_open("greedy", now).is_ok());
+        let (code, _) = gate.admit_open("greedy", now).unwrap_err();
+        assert_eq!(code, RejectCode::QuotaExceeded);
+        // A different tenant is untouched by greedy's saturation.
+        assert!(gate.admit_open("polite", now).is_ok());
+        // Releasing one slot re-admits.
+        gate.release("greedy");
+        assert!(gate.admit_open("greedy", now).is_ok());
+        let snap = gate.snapshot();
+        assert_eq!(snap.shed_total, 1);
+        assert_eq!(snap.shed_of("greedy"), 1);
+        assert_eq!(snap.shed_of("polite"), 0);
+        assert_eq!(snap.shed_by_code, vec![(RejectCode::QuotaExceeded, 1)]);
+    }
+
+    #[test]
+    fn token_bucket_rate_limits_with_retry_hint_and_refills() {
+        let limited = TenantConfig { rate: 100.0, burst: 2.0, max_streams: 0 };
+        let gate = Gate::new(TenantConfig::default(), &[("t".into(), limited)], 0);
+        let t0 = Instant::now();
+        assert!(gate.admit_open("t", t0).is_ok());
+        assert!(gate.admit_step("t", t0).is_ok());
+        let (code, retry_ms) = gate.admit_step("t", t0).unwrap_err();
+        assert_eq!(code, RejectCode::RateLimited);
+        assert!(retry_ms >= 1 && retry_ms <= 10, "100/s refill → ~10ms, got {retry_ms}");
+        // Simulated clock advance refills the bucket — no sleeping.
+        assert!(gate.admit_step("t", t0 + Duration::from_millis(50)).is_ok());
+    }
+
+    #[test]
+    fn global_cap_engages_only_past_provisioned_sum() {
+        let gate = Gate::new(TenantConfig::default(), &[], 2);
+        let now = Instant::now();
+        assert!(gate.admit_open("a", now).is_ok());
+        assert!(gate.admit_open("b", now).is_ok());
+        let (code, _) = gate.admit_open("c", now).unwrap_err();
+        assert_eq!(code, RejectCode::Saturated);
+        gate.release("a");
+        assert!(gate.admit_open("c", now).is_ok());
+    }
+}

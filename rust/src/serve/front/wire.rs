@@ -1,0 +1,634 @@
+//! Framed wire protocol for the serve front tier (`FMMW` v1).
+//!
+//! Transport framing (see `PROTOCOL.md` for the normative spec):
+//!
+//! ```text
+//! length     u32 LE — bytes of (version + kind + body); bounded by
+//!            [`MAX_FRAME`], so a corrupted prefix cannot drive an
+//!            unbounded allocation
+//! version    u8 — currently [`WIRE_VERSION`]; the server rejects any
+//!            other value with [`RejectCode::VersionMismatch`] and
+//!            closes the connection (no negotiation downgrade)
+//! kind       u8 — message discriminant (requests 0x01.., responses
+//!            0x81..)
+//! body       kind-specific payload (fields below)
+//! checksum   u64 LE — FNV-1a over version + kind + body; verified
+//!            before the body is parsed, so truncated or bit-flipped
+//!            frames are refused up front, exactly like the `FMMS`
+//!            snapshot codec
+//! ```
+//!
+//! Body scalar encodings: integers are fixed-width LE; strings are a
+//! `u16` length + UTF-8 bytes; token/logit vectors are a `u32` count +
+//! LE items, with the count cross-checked against the bytes actually
+//! remaining before any allocation. Every decode path is bounded and
+//! panic-free: malformed input of any kind is an `Err`, never an
+//! out-of-bounds read or a huge `Vec::with_capacity`.
+
+use anyhow::{bail, Result};
+
+use crate::util::fnv1a64;
+
+/// Current wire protocol version.
+pub const WIRE_VERSION: u8 = 1;
+/// Upper bound on (version + kind + body) bytes per frame. Generous for
+/// prompts and logits rows at demo scale while keeping a corrupted
+/// length prefix from looking like a multi-gigabyte frame.
+pub const MAX_FRAME: usize = 1 << 20;
+/// Fixed bytes around the payload: length prefix + trailing checksum.
+const FRAME_OVERHEAD: usize = 4 + 8;
+
+/// Request frame kinds (client → server).
+pub const KIND_OPEN: u8 = 0x01;
+pub const KIND_STEP: u8 = 0x02;
+pub const KIND_CLOSE: u8 = 0x03;
+pub const KIND_STATS: u8 = 0x04;
+/// Response frame kinds (server → client).
+pub const KIND_OPEN_OK: u8 = 0x81;
+pub const KIND_STEP_OK: u8 = 0x82;
+pub const KIND_CLOSE_OK: u8 = 0x83;
+pub const KIND_STATS_OK: u8 = 0x84;
+pub const KIND_REJECT: u8 = 0x8F;
+
+/// Why the server refused a request. Every admission-control, deadline,
+/// and drain decision surfaces as exactly one of these on the wire —
+/// typed, never a hang or a silent drop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum RejectCode {
+    /// Tenant token bucket empty; retry after `retry_after_ms`.
+    RateLimited = 1,
+    /// Tenant at its `max_streams` quota.
+    QuotaExceeded = 2,
+    /// Prefill queue at the operator's bound; prompted open shed.
+    QueueFull = 3,
+    /// Global open-stream cap reached (all tenants).
+    Saturated = 4,
+    /// The request's deadline passed before the work completed; the
+    /// stream did not advance (steps) or disconnected (prompt ingest).
+    DeadlineExpired = 5,
+    /// Server draining for shutdown; new opens are shed.
+    Draining = 6,
+    /// Malformed or unintelligible request.
+    BadRequest = 7,
+    /// Engine-side failure (the message carries the typed error).
+    Internal = 8,
+    /// Frame carried an unsupported protocol version.
+    VersionMismatch = 9,
+    /// Engine reply wait timed out; stream state unknown, disconnected.
+    Timeout = 10,
+}
+
+impl RejectCode {
+    pub fn from_u8(v: u8) -> Option<RejectCode> {
+        Some(match v {
+            1 => RejectCode::RateLimited,
+            2 => RejectCode::QuotaExceeded,
+            3 => RejectCode::QueueFull,
+            4 => RejectCode::Saturated,
+            5 => RejectCode::DeadlineExpired,
+            6 => RejectCode::Draining,
+            7 => RejectCode::BadRequest,
+            8 => RejectCode::Internal,
+            9 => RejectCode::VersionMismatch,
+            10 => RejectCode::Timeout,
+            _ => return None,
+        })
+    }
+
+    /// Stable lowercase slug (also how [`super::client`] round-trips
+    /// codes through `anyhow` messages — the vendored shim has no
+    /// downcast).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectCode::RateLimited => "rate_limited",
+            RejectCode::QuotaExceeded => "quota_exceeded",
+            RejectCode::QueueFull => "queue_full",
+            RejectCode::Saturated => "saturated",
+            RejectCode::DeadlineExpired => "deadline_expired",
+            RejectCode::Draining => "draining",
+            RejectCode::BadRequest => "bad_request",
+            RejectCode::Internal => "internal",
+            RejectCode::VersionMismatch => "version_mismatch",
+            RejectCode::Timeout => "timeout",
+        }
+    }
+}
+
+impl std::fmt::Display for RejectCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Client → server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Open a stream, optionally with a prompt to ingest server-side.
+    /// `deadline_ms` of 0 means "server default"; `speculate` is
+    /// 0 = server default, 1 = force plain, 2 = force speculative.
+    Open { tenant: String, deadline_ms: u32, speculate: u8, prompt: Vec<i32> },
+    /// Advance stream `stream` by one token.
+    Step { stream: u64, token: i32, deadline_ms: u32 },
+    /// Close stream `stream` (idempotent).
+    Close { stream: u64 },
+    /// Fetch the server's stats document.
+    Stats,
+}
+
+/// Server → client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Stream admitted. `prompt_tokens`/`logits` are 0/empty for an
+    /// unprompted open; a prompted open returns the final prompt
+    /// token's logits (bit-identical to scalar replay).
+    OpenOk { stream: u64, prompt_tokens: u32, logits: Vec<f32> },
+    StepOk { stream: u64, pos: u64, logits: Vec<f32> },
+    CloseOk { stream: u64 },
+    /// Stats as a JSON document.
+    StatsOk { json: String },
+    /// Typed refusal; `retry_after_ms` is a hint (0 = don't bother).
+    Reject { code: RejectCode, retry_after_ms: u32, message: String },
+}
+
+/// Assemble one complete frame (length prefix + version + kind + body +
+/// checksum) ready to write to a socket.
+pub fn frame(kind: u8, body: &[u8]) -> Vec<u8> {
+    let payload_len = 2 + body.len();
+    debug_assert!(payload_len <= MAX_FRAME);
+    let mut out = Vec::with_capacity(FRAME_OVERHEAD + payload_len);
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.push(WIRE_VERSION);
+    out.push(kind);
+    out.extend_from_slice(body);
+    let sum = fnv1a64(&out[4..]);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+// --- body scalar codecs ----------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let len = bytes.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(len as u16).to_le_bytes());
+    out.extend_from_slice(&bytes[..len]);
+}
+
+fn put_i32s(out: &mut Vec<u8>, xs: &[i32]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounded, panic-free body reader: every accessor checks remaining
+/// bytes and errors instead of slicing out of range.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, off: 0 }
+    }
+
+    fn need(&self, n: usize) -> Result<()> {
+        if self.buf.len() - self.off < n {
+            bail!(
+                "frame body truncated: need {n} bytes at offset {}, {} remain",
+                self.off,
+                self.buf.len() - self.off
+            );
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.need(n)?;
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| {
+            anyhow::anyhow!("frame string at offset {} is not UTF-8", self.off - len)
+        })
+    }
+
+    /// Count-prefixed vec of 4-byte items; the count is validated
+    /// against the bytes actually present before allocating.
+    fn counted4(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let have = (self.buf.len() - self.off) / 4;
+        if n > have {
+            bail!("frame vector claims {n} items, only {have} fit in the body");
+        }
+        Ok(n)
+    }
+
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.counted4()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.i32()?);
+        }
+        Ok(out)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.counted4()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    /// Reject trailing garbage: a well-formed body is consumed exactly.
+    fn done(self) -> Result<()> {
+        if self.off != self.buf.len() {
+            bail!("frame body has {} trailing bytes", self.buf.len() - self.off);
+        }
+        Ok(())
+    }
+}
+
+impl Request {
+    /// Serialize to (kind, body).
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut b = Vec::new();
+        match self {
+            Request::Open { tenant, deadline_ms, speculate, prompt } => {
+                put_str(&mut b, tenant);
+                b.extend_from_slice(&deadline_ms.to_le_bytes());
+                b.push(*speculate);
+                put_i32s(&mut b, prompt);
+                (KIND_OPEN, b)
+            }
+            Request::Step { stream, token, deadline_ms } => {
+                b.extend_from_slice(&stream.to_le_bytes());
+                b.extend_from_slice(&token.to_le_bytes());
+                b.extend_from_slice(&deadline_ms.to_le_bytes());
+                (KIND_STEP, b)
+            }
+            Request::Close { stream } => {
+                b.extend_from_slice(&stream.to_le_bytes());
+                (KIND_CLOSE, b)
+            }
+            Request::Stats => (KIND_STATS, b),
+        }
+    }
+
+    /// Parse a request body; any malformation is `Err`, never a panic.
+    pub fn decode(kind: u8, body: &[u8]) -> Result<Request> {
+        let mut c = Cur::new(body);
+        let req = match kind {
+            KIND_OPEN => Request::Open {
+                tenant: c.str()?,
+                deadline_ms: c.u32()?,
+                speculate: c.u8()?,
+                prompt: c.i32s()?,
+            },
+            KIND_STEP => Request::Step {
+                stream: c.u64()?,
+                token: c.i32()?,
+                deadline_ms: c.u32()?,
+            },
+            KIND_CLOSE => Request::Close { stream: c.u64()? },
+            KIND_STATS => Request::Stats,
+            other => bail!("unknown request kind {other:#04x}"),
+        };
+        c.done()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    /// Serialize to (kind, body).
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut b = Vec::new();
+        match self {
+            Response::OpenOk { stream, prompt_tokens, logits } => {
+                b.extend_from_slice(&stream.to_le_bytes());
+                b.extend_from_slice(&prompt_tokens.to_le_bytes());
+                put_f32s(&mut b, logits);
+                (KIND_OPEN_OK, b)
+            }
+            Response::StepOk { stream, pos, logits } => {
+                b.extend_from_slice(&stream.to_le_bytes());
+                b.extend_from_slice(&pos.to_le_bytes());
+                put_f32s(&mut b, logits);
+                (KIND_STEP_OK, b)
+            }
+            Response::CloseOk { stream } => {
+                b.extend_from_slice(&stream.to_le_bytes());
+                (KIND_CLOSE_OK, b)
+            }
+            Response::StatsOk { json } => {
+                // Stats documents can exceed u16; length-prefix as u32.
+                b.extend_from_slice(&(json.len() as u32).to_le_bytes());
+                b.extend_from_slice(json.as_bytes());
+                (KIND_STATS_OK, b)
+            }
+            Response::Reject { code, retry_after_ms, message } => {
+                b.push(*code as u8);
+                b.extend_from_slice(&retry_after_ms.to_le_bytes());
+                put_str(&mut b, message);
+                (KIND_REJECT, b)
+            }
+        }
+    }
+
+    /// Parse a response body; any malformation is `Err`, never a panic.
+    pub fn decode(kind: u8, body: &[u8]) -> Result<Response> {
+        let mut c = Cur::new(body);
+        let resp = match kind {
+            KIND_OPEN_OK => Response::OpenOk {
+                stream: c.u64()?,
+                prompt_tokens: c.u32()?,
+                logits: c.f32s()?,
+            },
+            KIND_STEP_OK => Response::StepOk {
+                stream: c.u64()?,
+                pos: c.u64()?,
+                logits: c.f32s()?,
+            },
+            KIND_CLOSE_OK => Response::CloseOk { stream: c.u64()? },
+            KIND_STATS_OK => {
+                let len = c.u32()? as usize;
+                let bytes = c.take(len)?;
+                Response::StatsOk {
+                    json: String::from_utf8(bytes.to_vec())
+                        .map_err(|_| anyhow::anyhow!("stats payload is not UTF-8"))?,
+                }
+            }
+            KIND_REJECT => {
+                let raw = c.u8()?;
+                let code = RejectCode::from_u8(raw)
+                    .ok_or_else(|| anyhow::anyhow!("unknown reject code {raw}"))?;
+                Response::Reject {
+                    code,
+                    retry_after_ms: c.u32()?,
+                    message: c.str()?,
+                }
+            }
+            other => bail!("unknown response kind {other:#04x}"),
+        };
+        c.done()?;
+        Ok(resp)
+    }
+}
+
+/// One parse step's outcome from a [`FrameReader`].
+#[derive(Debug)]
+pub enum FrameEvent {
+    /// A complete, checksum-verified frame.
+    Frame { version: u8, kind: u8, body: Vec<u8> },
+    /// Peer closed the connection cleanly (between frames).
+    Eof,
+    /// The socket's read timeout elapsed with no (complete) frame — the
+    /// caller's poll tick for drain/deadline checks, not an error.
+    Timeout,
+}
+
+/// Incremental frame deframer over any `Read` (a `TcpStream` with a
+/// read timeout in production, a cursor in tests). Buffers partial
+/// frames across reads; checksum and length validation happen here, so
+/// a consumer never sees a corrupt frame as anything but `Err`.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Pull the next event. `Err` means the connection is unusable
+    /// (corrupt frame, oversize frame, torn EOF, I/O error) and must be
+    /// closed — framing cannot resynchronize after a bad length prefix.
+    pub fn read_event(&mut self, r: &mut impl std::io::Read) -> Result<FrameEvent> {
+        loop {
+            if let Some(ev) = self.try_parse()? {
+                return Ok(ev);
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            match r.read(&mut chunk) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(FrameEvent::Eof);
+                    }
+                    bail!("connection closed mid-frame ({} buffered bytes)", self.buf.len());
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(FrameEvent::Timeout);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => bail!("socket read failed: {e}"),
+            }
+        }
+    }
+
+    /// Try to cut one complete frame off the buffer front.
+    fn try_parse(&mut self) -> Result<Option<FrameEvent>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let payload_len =
+            u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        if payload_len < 2 || payload_len > MAX_FRAME {
+            bail!("frame length {payload_len} outside 2..={MAX_FRAME} (corrupt prefix)");
+        }
+        let total = FRAME_OVERHEAD + payload_len;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let payload_end = 4 + payload_len;
+        let stored =
+            u64::from_le_bytes(self.buf[payload_end..total].try_into().unwrap());
+        let sum = fnv1a64(&self.buf[4..payload_end]);
+        if sum != stored {
+            bail!("frame checksum mismatch ({sum:#018x} != {stored:#018x})");
+        }
+        let version = self.buf[4];
+        let kind = self.buf[5];
+        let body = self.buf[6..payload_end].to_vec();
+        self.buf.drain(..total);
+        Ok(Some(FrameEvent::Frame { version, kind, body }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let (kind, body) = req.encode();
+        let back = Request::decode(kind, &body).unwrap();
+        assert_eq!(back, req);
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let (kind, body) = resp.encode();
+        let back = Response::decode(kind, &body).unwrap();
+        assert_eq!(back, resp);
+    }
+
+    #[test]
+    fn messages_roundtrip() {
+        roundtrip_req(Request::Open {
+            tenant: "acme".into(),
+            deadline_ms: 1500,
+            speculate: 2,
+            prompt: vec![1, -2, 3],
+        });
+        roundtrip_req(Request::Open {
+            tenant: String::new(),
+            deadline_ms: 0,
+            speculate: 0,
+            prompt: vec![],
+        });
+        roundtrip_req(Request::Step { stream: 7, token: 42, deadline_ms: 0 });
+        roundtrip_req(Request::Close { stream: u64::MAX });
+        roundtrip_req(Request::Stats);
+        roundtrip_resp(Response::OpenOk {
+            stream: 3,
+            prompt_tokens: 128,
+            logits: vec![0.5, -1.25, f32::MIN_POSITIVE],
+        });
+        roundtrip_resp(Response::StepOk { stream: 3, pos: 129, logits: vec![0.0] });
+        roundtrip_resp(Response::CloseOk { stream: 3 });
+        roundtrip_resp(Response::StatsOk { json: "{\"steps\": 9}".into() });
+        roundtrip_resp(Response::Reject {
+            code: RejectCode::QuotaExceeded,
+            retry_after_ms: 250,
+            message: "tenant at 4 streams".into(),
+        });
+    }
+
+    #[test]
+    fn frame_reader_handles_split_and_coalesced_frames() {
+        let (k1, b1) = Request::Step { stream: 1, token: 2, deadline_ms: 3 }.encode();
+        let (k2, b2) = Request::Stats.encode();
+        let mut bytes = frame(k1, &b1);
+        bytes.extend_from_slice(&frame(k2, &b2));
+        // Deliver byte-by-byte through a 1-byte reader: both frames
+        // still come out whole and in order.
+        struct Trickle<'a>(&'a [u8], usize);
+        impl std::io::Read for Trickle<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let mut rd = FrameReader::new();
+        let mut src = Trickle(&bytes, 0);
+        for expect_kind in [k1, k2] {
+            match rd.read_event(&mut src).unwrap() {
+                FrameEvent::Frame { version, kind, body } => {
+                    assert_eq!(version, WIRE_VERSION);
+                    assert_eq!(kind, expect_kind);
+                    Request::decode(kind, &body).unwrap();
+                }
+                other => panic!("expected a frame, got {other:?}"),
+            }
+        }
+        assert!(matches!(rd.read_event(&mut src).unwrap(), FrameEvent::Eof));
+    }
+
+    #[test]
+    fn corruption_truncation_and_oversize_are_typed_errors() {
+        let (kind, body) = Request::Step { stream: 5, token: 1, deadline_ms: 0 }.encode();
+        let good = frame(kind, &body);
+        // Any single flipped bit past the length prefix trips the
+        // checksum (or, in the checksum itself, the comparison).
+        for i in 4..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x10;
+            let mut rd = FrameReader::new();
+            assert!(
+                rd.read_event(&mut std::io::Cursor::new(&bad)).is_err(),
+                "flip at byte {i} went unnoticed"
+            );
+        }
+        // EOF mid-frame is an error, not a clean Eof.
+        let mut rd = FrameReader::new();
+        let cut = &good[..good.len() - 3];
+        assert!(rd.read_event(&mut std::io::Cursor::new(cut)).is_err());
+        // A corrupt length prefix claiming a huge frame is refused
+        // before any allocation.
+        let mut huge = good.clone();
+        huge[..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let mut rd = FrameReader::new();
+        assert!(rd.read_event(&mut std::io::Cursor::new(&huge)).is_err());
+        // Trailing garbage after a well-formed body is refused.
+        let mut b2 = body.clone();
+        b2.push(0);
+        assert!(Request::decode(kind, &b2).is_err());
+        // Unknown kinds are refused.
+        assert!(Request::decode(0x7E, &[]).is_err());
+        assert!(Response::decode(0x7E, &[]).is_err());
+    }
+
+    #[test]
+    fn reject_codes_roundtrip_u8_and_slugs() {
+        for code in [
+            RejectCode::RateLimited,
+            RejectCode::QuotaExceeded,
+            RejectCode::QueueFull,
+            RejectCode::Saturated,
+            RejectCode::DeadlineExpired,
+            RejectCode::Draining,
+            RejectCode::BadRequest,
+            RejectCode::Internal,
+            RejectCode::VersionMismatch,
+            RejectCode::Timeout,
+        ] {
+            assert_eq!(RejectCode::from_u8(code as u8), Some(code));
+            assert!(!code.as_str().is_empty());
+        }
+        assert_eq!(RejectCode::from_u8(0), None);
+        assert_eq!(RejectCode::from_u8(200), None);
+    }
+}

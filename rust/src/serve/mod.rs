@@ -28,15 +28,16 @@
 //!
 //! # The `serve/` subsystem, mapped
 //!
-//! Five modules, one serving stack:
+//! Six modules, one serving stack:
 //!
 //! | module | role |
 //! |---|---|
 //! | `serve` (this file) | fixed-window request router + dynamic batcher over AOT artifacts |
 //! | [`decode`] | streaming engine: [`decode::HostDecoder`] (the model), [`decode::DecoderSession`] (O(1)/token state), the ragged stacked forward (`ragged_forward`), the [`decode::DecodeServer`] scheduler (the unified ragged-batch planner, the `Residency` LRU spill manager) |
 //! | [`prefill`] | chunked prompt ingest: builds session state from a full prompt in C-row stacked GEMM passes (readout skipped until the last row); admission queue with round-robin chunk planning + per-round token/wall-time budgets for continuous batching |
-//! | [`session_store`] | the spill tier: FMMS v1 self-validating snapshot codec + [`session_store::MemStore`]/[`session_store::DiskStore`] behind the [`session_store::SessionStore`] trait |
+//! | [`session_store`] | the spill tier: FMMS v1 self-validating snapshot codec + [`session_store::MemStore`]/[`session_store::DiskStore`] behind the [`session_store::SessionStore`] trait (plus [`session_store::FaultyStore`], the fault-injection wrapper) |
 //! | [`speculative`] | draft-propose / verify-accept lookahead over checkpoint/rollback of the O(1) state, split into plan/finish halves so the verify window can ride a shared pass |
+//! | [`front`] | the production boundary: TCP front tier speaking a length-prefixed checksummed framed protocol, with per-tenant token-bucket admission, deadline propagation, load shedding, graceful drain, dual-slot weight swap, and a fault-injection harness |
 //!
 //! How they connect — the *unified ragged-batch planner* (the default;
 //! `DecodeServerConfig::unified_planner`): each scheduler round gathers
@@ -98,6 +99,7 @@
 //! parameter leaves, requests) crosses the channel.
 
 pub mod decode;
+pub mod front;
 pub mod prefill;
 pub mod session_store;
 pub mod speculative;
@@ -170,6 +172,7 @@ impl ServeStats {
 pub struct Client {
     tx: Sender<Msg>,
     next_id: Arc<AtomicU64>,
+    recv_timeout: Duration,
 }
 
 impl Client {
@@ -186,10 +189,27 @@ impl Client {
         Ok((id, rx))
     }
 
-    /// Submit and wait.
+    /// Submit and wait — bounded: a wedged scheduler surfaces as a
+    /// typed "timed out" error instead of hanging the caller forever.
     pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
         let (_, rx) = self.submit(tokens)?;
-        rx.recv().map_err(|_| anyhow!("server dropped request"))
+        match rx.recv_timeout(self.recv_timeout) {
+            Ok(resp) => Ok(resp),
+            Err(RecvTimeoutError::Timeout) => Err(anyhow!(
+                "client timed out after {:?} waiting for inference reply",
+                self.recv_timeout
+            )),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("server dropped request"))
+            }
+        }
+    }
+
+    /// Clone of this handle whose blocking `infer` gives up after
+    /// `timeout` with a typed "timed out" error.
+    pub fn with_recv_timeout(mut self, timeout: Duration) -> Client {
+        self.recv_timeout = timeout;
+        self
     }
 }
 
@@ -257,7 +277,11 @@ impl Server {
         }
 
         Ok(Server {
-            client: Some(Client { tx, next_id: Arc::new(AtomicU64::new(0)) }),
+            client: Some(Client {
+                tx,
+                next_id: Arc::new(AtomicU64::new(0)),
+                recv_timeout: decode::DEFAULT_CLIENT_RECV_TIMEOUT,
+            }),
             stats,
             handle: Some(handle),
         })
@@ -448,7 +472,12 @@ mod tests {
 
     fn test_client() -> (Client, Receiver<Msg>) {
         let (tx, rx) = mpsc::channel();
-        (Client { tx, next_id: Arc::new(AtomicU64::new(0)) }, rx)
+        let client = Client {
+            tx,
+            next_id: Arc::new(AtomicU64::new(0)),
+            recv_timeout: decode::DEFAULT_CLIENT_RECV_TIMEOUT,
+        };
+        (client, rx)
     }
 
     fn dummy_request(id: u64) -> (Request, Receiver<Response>) {

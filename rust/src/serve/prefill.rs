@@ -120,6 +120,9 @@ pub(crate) struct PendingPrefill {
     /// Stacked passes run so far.
     chunks: usize,
     submitted: Instant,
+    /// Ingest budget: still pending at this instant ⇒ cancelled at the
+    /// next wave boundary ([`PrefillQueue::fail_expired`]).
+    deadline: Option<Instant>,
     reply: Sender<Result<PrefillOut>>,
 }
 
@@ -130,7 +133,22 @@ impl PendingPrefill {
         submitted: Instant,
         reply: Sender<Result<PrefillOut>>,
     ) -> PendingPrefill {
-        PendingPrefill { session, prompt, cursor: 0, chunks: 0, submitted, reply }
+        PendingPrefill {
+            session,
+            prompt,
+            cursor: 0,
+            chunks: 0,
+            submitted,
+            deadline: None,
+            reply,
+        }
+    }
+
+    /// Attach an ingest deadline (builder style, so the many
+    /// deadline-less callers keep their 4-argument `new`).
+    pub(crate) fn with_deadline(mut self, deadline: Option<Instant>) -> PendingPrefill {
+        self.deadline = deadline;
+        self
     }
 }
 
@@ -175,6 +193,17 @@ impl PrefillQueue {
 
     pub(crate) fn is_empty(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// Streams currently queued (the scheduler publishes this as the
+    /// front tier's queue-depth backpressure signal).
+    pub(crate) fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Prompt tokens still to ingest across every queued stream.
+    pub(crate) fn queued_tokens(&self) -> usize {
+        self.pending.iter().map(|p| p.prompt.len() - p.cursor).sum()
     }
 
     pub(crate) fn push(&mut self, p: PendingPrefill) {
@@ -283,6 +312,29 @@ impl PrefillQueue {
             p.reply.send(Err(anyhow!("{msg}"))).ok();
         }
         self.cursor = 0;
+    }
+
+    /// Cancel every queued ingest whose deadline has passed: each
+    /// opener receives a typed "deadline expired" error, and the
+    /// cancelled session ids are returned so the scheduler can close
+    /// the streams. Runs once per round at the wave boundary — a prompt
+    /// is never silently completed late. Cursor-preserving like
+    /// [`cancel`](Self::cancel): surviving streams keep their place in
+    /// the rotation.
+    pub(crate) fn fail_expired(&mut self, now: Instant) -> Vec<u64> {
+        let expired: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|p| p.deadline.map_or(false, |d| d <= now))
+            .map(|p| p.session)
+            .collect();
+        for &session in &expired {
+            self.fail(
+                session,
+                anyhow!("deadline expired during prompt ingest (session {session})"),
+            );
+        }
+        expired
     }
 }
 
@@ -495,5 +547,105 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.iter().all(|&t| (0..12).contains(&t)));
         assert_ne!(a, deterministic_prompt(64, 12, 10));
+    }
+
+    /// Mid-chunk disconnect: a stream cancelled while partially
+    /// ingested (cursor inside its prompt) affects only itself — the
+    /// rotation cursor still points at the same surviving stream, token
+    /// accounting drops exactly the cancelled remainder, and later
+    /// waves keep dealing to the survivors.
+    #[test]
+    fn cancel_mid_chunk_keeps_cursor_and_budget_accounting_consistent() {
+        let mut q = PrefillQueue::new(2);
+        let keep: Vec<_> = [(20u64, 6usize), (21, 6), (22, 6)]
+            .iter()
+            .map(|&(id, len)| {
+                let (tx, rx) = mpsc::channel();
+                q.push(PendingPrefill::new(id, vec![0; len], Instant::now(), tx));
+                rx
+            })
+            .collect();
+        assert_eq!((q.len(), q.queued_tokens()), (3, 18));
+
+        // Deal one chunk each to 20 and 21; the cursor now points at 22.
+        for id in [20u64, 21] {
+            let p = q.plan_wave(1, usize::MAX).pop().unwrap();
+            assert_eq!(p.session, id);
+            q.advance(id, p.len());
+        }
+        assert_eq!(q.queued_tokens(), 14);
+
+        // 21 disconnects mid-prompt (2 of 6 tokens ingested): only its
+        // 4 remaining tokens leave the accounting, and the next wave
+        // still goes to 22 — the stream the cursor already pointed at.
+        assert!(q.cancel(21));
+        assert_eq!((q.len(), q.queued_tokens()), (2, 10));
+        let p = q.plan_wave(1, usize::MAX).pop().unwrap();
+        assert_eq!(p.session, 22);
+        q.advance(22, p.len());
+
+        // Rotation continues 20 → 22 → 20 … to completion; the
+        // cancelled stream never reappears.
+        let mut served = Vec::new();
+        loop {
+            let Some(p) = q.plan_wave(1, usize::MAX).pop() else { break };
+            served.push(p.session);
+            assert_ne!(p.session, 21, "cancelled stream was dealt a chunk");
+            if p.is_last {
+                q.finish(p.session, vec![0.0]);
+            } else {
+                q.advance(p.session, p.len());
+            }
+        }
+        assert_eq!(served, vec![20, 22, 20]);
+        assert_eq!((q.len(), q.queued_tokens()), (0, 0));
+        drop(keep);
+    }
+
+    /// Deadline sweep: only expired streams are cancelled (typed
+    /// error), survivors keep their cursor place and finish normally.
+    #[test]
+    fn fail_expired_cancels_only_expired_streams() {
+        let mut q = PrefillQueue::new(2);
+        let (tx_a, rx_a) = mpsc::channel();
+        let (tx_b, rx_b) = mpsc::channel();
+        let (tx_c, rx_c) = mpsc::channel();
+        let now = Instant::now();
+        let long_deadline = now + Duration::from_secs(3600);
+        q.push(
+            PendingPrefill::new(30, vec![0; 4], now, tx_a)
+                .with_deadline(Some(now)),
+        );
+        q.push(PendingPrefill::new(31, vec![0; 4], now, tx_b));
+        q.push(
+            PendingPrefill::new(32, vec![0; 4], now, tx_c)
+                .with_deadline(Some(long_deadline)),
+        );
+
+        // Partially ingest 30 so the expiry hits a mid-chunk stream.
+        let p = q.plan_wave(1, usize::MAX).pop().unwrap();
+        assert_eq!(p.session, 30);
+        q.advance(30, p.len());
+
+        let expired = q.fail_expired(now + Duration::from_millis(1));
+        assert_eq!(expired, vec![30]);
+        let err = rx_a.recv().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("deadline expired"), "{err}");
+        assert_eq!((q.len(), q.queued_tokens()), (2, 8));
+
+        // Nothing else expires; both survivors complete.
+        assert!(q.fail_expired(now + Duration::from_millis(2)).is_empty());
+        for _ in 0..4 {
+            if let Some(p) = q.plan_wave(1, usize::MAX).pop() {
+                if p.is_last {
+                    q.finish(p.session, vec![0.0]);
+                } else {
+                    q.advance(p.session, p.len());
+                }
+            }
+        }
+        assert!(q.is_empty());
+        assert!(rx_b.recv().unwrap().is_ok());
+        assert!(rx_c.recv().unwrap().is_ok());
     }
 }

@@ -338,6 +338,75 @@ impl Drop for DiskStore {
     }
 }
 
+/// Fault-injection wrapper: delegates to an inner store but fails every
+/// N-th spill write and/or every N-th restore read on a deterministic
+/// schedule. This is how the chaos suite proves the scheduler's claim
+/// that a failed spill keeps the victim resident and a failed restore
+/// disconnects exactly one stream — without needing a real full disk.
+///
+/// Schedules count *operations on the inner store*, so they line up 1:1
+/// with real spill/restore traffic:
+///
+/// * `put` faults fire **before** delegating — the inner store is
+///   untouched, exactly like `DiskStore` refusing a write on a full
+///   disk (no file is created, the victim stays resident);
+/// * `take` faults fire **after** the inner `take` has removed the
+///   blob, and only when a blob actually existed — exactly like
+///   `DiskStore` hitting an unreadable file (the entry is already
+///   forgotten, so nothing leaks; the stream's state is simply lost).
+pub struct FaultyStore {
+    inner: Box<dyn SessionStore>,
+    puts: u64,
+    takes: u64,
+    put_fail_every: u64,
+    take_fail_every: u64,
+}
+
+impl FaultyStore {
+    /// Wrap `inner`, failing every `put_fail_every`-th put and every
+    /// `take_fail_every`-th successful take (0 disables that fault).
+    pub fn new(
+        inner: Box<dyn SessionStore>,
+        put_fail_every: u64,
+        take_fail_every: u64,
+    ) -> FaultyStore {
+        FaultyStore { inner, puts: 0, takes: 0, put_fail_every, take_fail_every }
+    }
+}
+
+impl SessionStore for FaultyStore {
+    fn put(&mut self, key: u64, snap: &[u8]) -> Result<()> {
+        self.puts += 1;
+        if self.put_fail_every > 0 && self.puts % self.put_fail_every == 0 {
+            bail!("injected spill-store put fault (op {})", self.puts);
+        }
+        self.inner.put(key, snap)
+    }
+
+    fn take(&mut self, key: u64) -> Result<Option<Vec<u8>>> {
+        let blob = self.inner.take(key)?;
+        if blob.is_some() {
+            self.takes += 1;
+            if self.take_fail_every > 0 && self.takes % self.take_fail_every == 0 {
+                bail!("injected spill-store read fault restoring spilled session {key}");
+            }
+        }
+        Ok(blob)
+    }
+
+    fn remove(&mut self, key: u64) -> bool {
+        self.inner.remove(key)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.inner.bytes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -398,6 +467,25 @@ mod tests {
     #[test]
     fn mem_store_semantics() {
         exercise_store(&mut MemStore::new());
+    }
+
+    #[test]
+    fn faulty_store_schedules_fire_on_real_operations_only() {
+        let mut store = FaultyStore::new(Box::new(MemStore::new()), 3, 2);
+        // Puts 1 and 2 land; put 3 is refused before touching the inner
+        // store, so key 30's blob is never created.
+        store.put(10, b"a").unwrap();
+        store.put(20, b"bb").unwrap();
+        assert!(store.put(30, b"ccc").is_err());
+        assert_eq!((store.len(), store.bytes()), (2, 3));
+        assert_eq!(store.take(30).unwrap(), None, "failed put left nothing behind");
+        // Misses don't advance the take schedule; the first real take
+        // succeeds, the second fails *after* consuming the blob.
+        assert_eq!(store.take(99).unwrap(), None);
+        assert_eq!(store.take(10).unwrap().as_deref(), Some(&b"a"[..]));
+        let err = store.take(20).expect_err("second real take is scheduled to fail");
+        assert!(format!("{err:#}").contains("restoring spilled session"));
+        assert!(store.is_empty(), "faulted take still consumed the blob");
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Integration: serve front tier — fault-injection envelope.
+//!
+//! The chaos suite behind `ci.sh --chaos`. Four blast radii, each
+//! driven by a scheduled [`FaultPlan`] rather than randomness so every
+//! run reproduces: frame corruption on the wire, mid-stream connection
+//! kills and truncated frames, injected spill-store I/O failures under
+//! a residency cap, and wire deadlines lapsing mid-flight. The
+//! invariants are always the same — surviving streams stay
+//! *byte-identical* to an undisturbed scalar replay, every failure
+//! surfaces as a typed error (never a panic, never a hang), and the
+//! engine leaks no sessions no matter how a stream dies.
+//!
+//! The clean-path wire contract lives in `tests/front.rs`. Everything
+//! here is host-side — no artifacts required, never skips.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmmformer::attention::FeatureMap;
+use fmmformer::serve::decode::{
+    greedy_argmax, DecodeConfig, DecodeServerConfig, DecoderSession, HostDecoder,
+};
+use fmmformer::serve::front::{
+    rejection_code, FaultPlan, FrontClient, FrontConfig, FrontServer, RejectCode,
+};
+use fmmformer::serve::prefill::deterministic_prompt;
+use fmmformer::serve::session_store::MemStore;
+
+fn tiny_config() -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 16,
+        vocab: 32,
+        bandwidth: 4,
+        kernels: vec![FeatureMap::Elu],
+        w1: 0.6,
+        w2: 0.9,
+        seed: 3,
+    }
+}
+
+/// Scalar replay of a greedy chain from `start` — the undisturbed
+/// ground truth every surviving stream is pinned against.
+fn reference_chain(model: &Arc<HostDecoder>, start: i32, tokens: usize) -> Vec<i32> {
+    let mut sess = DecoderSession::new(model.clone());
+    let mut tok = start;
+    let mut chosen = Vec::with_capacity(tokens);
+    for _ in 0..tokens {
+        tok = greedy_argmax(&sess.step(tok).unwrap());
+        chosen.push(tok);
+    }
+    chosen
+}
+
+/// A flipped byte anywhere past the length prefix fails the frame
+/// checksum: the server answers with a typed `bad_request` reject and
+/// closes *that* connection only. A clean neighbor decoding through
+/// the corruption stays bit-identical, and the listener keeps
+/// accepting afterwards.
+#[test]
+fn frame_corruption_kills_only_the_offending_connection() {
+    let cfg = tiny_config();
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let front = FrontServer::start(
+        "127.0.0.1:0",
+        HostDecoder::new(cfg.clone()).unwrap(),
+        DecodeServerConfig::default(),
+        FrontConfig::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+
+    // Clean neighbor decodes concurrently with the corrupting client.
+    let neighbor = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = FrontClient::connect(&addr).unwrap();
+            let opened = c.open("clean", &[], 0, 1).unwrap();
+            let mut tok = 1i32;
+            let mut chosen = Vec::new();
+            for _ in 0..8 {
+                tok = greedy_argmax(&c.step(opened.stream, tok, 0).unwrap().logits);
+                chosen.push(tok);
+            }
+            c.close_stream(opened.stream).unwrap();
+            chosen
+        })
+    };
+
+    // Frame 1 (open) is clean; frame 2 (first step) gets a byte
+    // flipped past the length prefix, so the checksum must catch it.
+    let plan = FaultPlan { corrupt_every: 2, ..FaultPlan::default() };
+    let mut bad = FrontClient::connect_with_faults(&addr, plan).unwrap();
+    let opened = bad.open("chaos", &[], 0, 1).unwrap();
+    let err = bad.step(opened.stream, 0, 0).unwrap_err();
+    assert_eq!(
+        rejection_code(&err),
+        Some(RejectCode::BadRequest),
+        "corruption was not a typed reject: {err:#}"
+    );
+    drop(bad);
+
+    let chosen = neighbor.join().expect("no panic escapes the clean neighbor");
+    assert_eq!(
+        chosen,
+        reference_chain(&model, 1, 8),
+        "corruption on one connection disturbed a clean neighbor"
+    );
+
+    // The listener survives: a fresh connection decodes exactly.
+    let mut after = FrontClient::connect(&addr).unwrap();
+    let opened = after.open("after", &[], 0, 1).unwrap();
+    let mut tok = 2i32;
+    let mut chosen = Vec::new();
+    for _ in 0..6 {
+        tok = greedy_argmax(&after.step(opened.stream, tok, 0).unwrap().logits);
+        chosen.push(tok);
+    }
+    assert_eq!(chosen, reference_chain(&model, 2, 6));
+    after.close_stream(opened.stream).unwrap();
+    drop(after);
+
+    let stats = front.shutdown();
+    assert!(stats.bad_frames >= 1, "server never counted the corrupt frame");
+    assert_eq!(stats.leaked_sessions(), 0, "the killed connection leaked its session");
+}
+
+/// Connections that die mid-stream — hard kills and half-written
+/// frames — error out client-side without a panic, and the server
+/// reaps every abandoned stream: afterwards a clean client decodes
+/// exactly and the final accounting shows zero leaked sessions.
+#[test]
+fn mid_stream_kills_and_truncation_never_leak_sessions() {
+    let cfg = tiny_config();
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let front = FrontServer::start(
+        "127.0.0.1:0",
+        HostDecoder::new(cfg.clone()).unwrap(),
+        DecodeServerConfig::default(),
+        FrontConfig::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let addr = addr.clone();
+        // Three clients drop the socket cold after 3 frames; the
+        // fourth sends half a frame first so the server reads a
+        // mid-frame EOF instead of a clean close.
+        let plan = if i < 3 {
+            FaultPlan { kill_after_frames: 3, ..FaultPlan::default() }
+        } else {
+            FaultPlan { truncate_every: 3, ..FaultPlan::default() }
+        };
+        handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            let mut c = FrontClient::connect_with_faults(&addr, plan)?;
+            let opened = c.open("chaos", &[], 0, 1)?;
+            let mut tok = i as i32;
+            for _ in 0..8 {
+                tok = greedy_argmax(&c.step(opened.stream, tok, 0)?.logits);
+            }
+            c.close_stream(opened.stream)?;
+            Ok(())
+        }));
+    }
+    for h in handles {
+        let res = h.join().expect("no panic escapes a chaos client");
+        assert!(res.is_err(), "a scheduled kill never fired");
+    }
+
+    // The tier is healthy after the carnage: exact chain, no leaks.
+    let mut c = FrontClient::connect(&addr).unwrap();
+    let opened = c.open("after", &[], 0, 1).unwrap();
+    let mut tok = 1i32;
+    let mut chosen = Vec::new();
+    for _ in 0..6 {
+        tok = greedy_argmax(&c.step(opened.stream, tok, 0).unwrap().logits);
+        chosen.push(tok);
+    }
+    assert_eq!(chosen, reference_chain(&model, 1, 6));
+    c.close_stream(opened.stream).unwrap();
+    drop(c);
+
+    let stats = front.shutdown();
+    assert_eq!(stats.connections, 5);
+    assert_eq!(stats.leaked_sessions(), 0, "an abandoned stream leaked its session");
+}
+
+/// Spill-store read faults on a schedule: with four streams squeezed
+/// through a two-session residency cap, every step restores from the
+/// store and every second restore fails. The victim streams get a
+/// typed `internal` reject naming the restore and are disconnected;
+/// the surviving streams — and every victim's pre-fault prefix — stay
+/// bit-identical to scalar replay.
+#[test]
+fn injected_spill_faults_disconnect_exactly_the_victim_streams() {
+    let cfg = tiny_config();
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let plan = FaultPlan { store_take_fail_every: 2, ..FaultPlan::default() };
+    let front = FrontServer::start_with_store(
+        "127.0.0.1:0",
+        HostDecoder::new(cfg.clone()).unwrap(),
+        DecodeServerConfig { max_resident_sessions: 2, ..DecodeServerConfig::default() },
+        FrontConfig::default(),
+        plan.wrap_store(Box::new(MemStore::new())),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+    let mut c = FrontClient::connect(&addr).unwrap();
+
+    let streams = 4usize;
+    let rounds = 6usize;
+    let mut ids = Vec::with_capacity(streams);
+    for _ in 0..streams {
+        ids.push(c.open("spill", &[], 0, 1).unwrap().stream);
+    }
+    let mut toks: Vec<i32> = (0..streams as i32).collect();
+    let mut chosen: Vec<Vec<i32>> = vec![Vec::new(); streams];
+    let mut dead = vec![false; streams];
+    for _ in 0..rounds {
+        for i in 0..streams {
+            if dead[i] {
+                continue;
+            }
+            match c.step(ids[i], toks[i], 0) {
+                Ok(reply) => {
+                    toks[i] = greedy_argmax(&reply.logits);
+                    chosen[i].push(toks[i]);
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert_eq!(
+                        rejection_code(&e),
+                        Some(RejectCode::Internal),
+                        "restore fault surfaced with the wrong code: {msg}"
+                    );
+                    assert!(
+                        msg.contains("restoring spilled session"),
+                        "restore fault lost its typed cause: {msg}"
+                    );
+                    dead[i] = true;
+                }
+            }
+        }
+    }
+    let victims = dead.iter().filter(|&&d| d).count();
+    assert!(victims >= 1, "scheduled restore faults never fired");
+    assert!(victims < streams, "every stream died; nothing left to verify");
+
+    // Victim or survivor, every collected token matches the scalar
+    // replay prefix of the same length: a failed restore never
+    // produced a wrong token, it only ended the stream.
+    for i in 0..streams {
+        assert_eq!(
+            chosen[i],
+            reference_chain(&model, i as i32, chosen[i].len()),
+            "stream {i} diverged from scalar replay"
+        );
+        // Idempotent for the already-disconnected victims.
+        c.close_stream(ids[i]).unwrap();
+    }
+    drop(c);
+
+    let stats = front.shutdown();
+    assert_eq!(stats.engines.len(), 1);
+    assert!(stats.engines[0].restores >= 1, "the residency cap never forced a restore");
+    assert!(stats.engines[0].failed_steps >= 1, "injected faults were not counted");
+    assert_eq!(stats.leaked_sessions(), 0, "a disconnected victim leaked its session");
+}
+
+/// Wire deadlines are enforced at wave boundaries, never silently
+/// blown through: an expired step comes back as a typed
+/// `deadline_expired` reject *without advancing the session* (the same
+/// token retries cleanly), and a prompted open whose deadline lapses
+/// mid-ingest is cancelled rather than completed late.
+#[test]
+fn wire_deadlines_cancel_at_wave_boundaries_and_allow_retry() {
+    let cfg = tiny_config();
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let reference = reference_chain(&model, 1, 5);
+    // A long fill window makes expiry deterministic: a lone step waits
+    // out the full 150ms window before its wave runs, so a 40ms budget
+    // is always past due at the boundary sweep. Prefill ingests one
+    // token per round, so a 4000-token prompt is still mid-ingest long
+    // after a 2ms budget lapses.
+    let front = FrontServer::start(
+        "127.0.0.1:0",
+        HostDecoder::new(cfg.clone()).unwrap(),
+        DecodeServerConfig {
+            max_wait: Duration::from_millis(150),
+            prefill_chunk: 1,
+            prefill_budget: 1,
+            ..DecodeServerConfig::default()
+        },
+        FrontConfig::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+    let mut c = FrontClient::connect(&addr).unwrap();
+
+    let opened = c.open("dl", &[], 0, 1).unwrap();
+    let mut tok = 1i32;
+    let mut chosen = Vec::new();
+    for _ in 0..2 {
+        tok = greedy_argmax(&c.step(opened.stream, tok, 0).unwrap().logits);
+        chosen.push(tok);
+    }
+
+    // An impossible budget: cancelled at the wave boundary, typed.
+    let err = c.step(opened.stream, tok, 40).unwrap_err();
+    assert_eq!(rejection_code(&err), Some(RejectCode::DeadlineExpired), "{err:#}");
+    assert!(
+        format!("{err:#}").contains("deadline expired"),
+        "expiry lost its typed cause: {err:#}"
+    );
+
+    // The session did not advance: the SAME token resubmits on the
+    // same wire stream and the chain continues bit-identically.
+    for _ in 0..3 {
+        tok = greedy_argmax(&c.step(opened.stream, tok, 0).unwrap().logits);
+        chosen.push(tok);
+    }
+    assert_eq!(chosen, reference, "deadline expiry advanced the session");
+
+    // Prompted open with a mid-ingest deadline: cancelled, typed, and
+    // the stream never materializes.
+    let prompt = deterministic_prompt(4000, cfg.vocab, 9);
+    let err = c.open("dl", &prompt, 2, 1).unwrap_err();
+    assert_eq!(rejection_code(&err), Some(RejectCode::DeadlineExpired), "{err:#}");
+
+    // A deadline-free retry of (a slice of) the same prompt completes.
+    let ok = c.open("dl", &prompt[..8], 0, 1).unwrap();
+    assert_eq!(ok.prompt_tokens, 8);
+    c.close_stream(ok.stream).unwrap();
+    c.close_stream(opened.stream).unwrap();
+    drop(c);
+
+    let stats = front.shutdown();
+    assert_eq!(stats.engines.len(), 1);
+    assert_eq!(stats.engines[0].deadline_expired_steps, 1);
+    assert_eq!(stats.engines[0].deadline_expired_prefills, 1);
+    assert_eq!(stats.leaked_sessions(), 0);
+}

@@ -13,12 +13,12 @@
 //! Everything here is host-side — no artifacts required, never skips.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use fmmformer::attention::FeatureMap;
 use fmmformer::serve::decode::{
     greedy_argmax, run_greedy_sessions_collect, DecodeConfig, DecodeServer,
-    DecodeServerConfig, DecoderSession, HostDecoder,
+    DecodeServerConfig, DecoderSession, HostDecoder, OpenOptions,
 };
 use fmmformer::serve::prefill::{
     deterministic_prompt, prefill_session, run_prompted_sessions,
@@ -254,6 +254,99 @@ fn invalid_prompts_fail_cleanly_without_registering_sessions() {
     assert_eq!(stats.sessions_opened, 2, "failed admissions must not register");
     assert_eq!(stats.prefills, 1);
     assert_eq!(stats.failed_prefills, 0);
+}
+
+/// Deadline semantics on the prefill queue: an already-expired deadline
+/// cancels the queued ingest at the next wave boundary with a typed
+/// error — the prompt is never silently completed late — and the server
+/// keeps serving fresh prompted opens afterwards.
+#[test]
+fn expired_deadline_cancels_queued_prefill_with_a_typed_error() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = cfg.vocab;
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig { prefill_chunk: 2, ..Default::default() },
+    );
+    let client = server.client();
+
+    let prompt = deterministic_prompt(10, vocab, 9);
+    let opts = OpenOptions {
+        deadline: Some(Instant::now() - Duration::from_millis(5)),
+        ..OpenOptions::default()
+    };
+    let err = client.open_stream_with_prompt_opts(&prompt, opts).unwrap_err();
+    assert!(format!("{err:#}").contains("deadline expired"), "{err:#}");
+
+    // The failed ingest registered nothing and the server is unharmed:
+    // the same prompt without a deadline completes and decodes.
+    let (stream, out) = client.open_stream_with_prompt(&prompt).unwrap();
+    assert_eq!(out.prompt_tokens, 10);
+    assert!(stream.step(greedy_argmax(&out.logits)).is_ok());
+
+    drop(stream);
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.deadline_expired_prefills, 1, "{stats:?}");
+    assert_eq!(stats.failed_prefills, 1, "{stats:?}");
+    assert_eq!(stats.prefills, 1, "{stats:?}");
+    // The expired ingest's session registered at admission, then
+    // disconnected at the expiry sweep — nothing lingers.
+    assert_eq!(stats.sessions_opened, 2, "{stats:?}");
+    assert_eq!(stats.sessions_closed, 2, "{stats:?}");
+}
+
+/// Mid-ingest shutdown drains the prefill queue through `fail_all`: an
+/// opener caught mid-chunk gets a typed error (or its completed result
+/// if the ingest won the race) — never a hang, never a partial success.
+#[test]
+fn shutdown_mid_ingest_fails_pending_prefills_cleanly() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = cfg.vocab;
+    let prompt_len = 512usize;
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        // One token per chunk AND per round: the ingest spans hundreds
+        // of waves, so the shutdown below lands mid-chunk.
+        DecodeServerConfig {
+            prefill_chunk: 1,
+            prefill_budget: 1,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let opener = {
+        let c = client.clone();
+        std::thread::spawn(move || {
+            let prompt = deterministic_prompt(prompt_len, vocab, 11);
+            c.open_stream_with_prompt(&prompt).map(|(stream, out)| {
+                drop(stream);
+                out.prompt_tokens
+            })
+        })
+    };
+    // Let the open enqueue and start chunking, then pull the plug.
+    std::thread::sleep(Duration::from_millis(20));
+    drop(client);
+    let stats = server.shutdown();
+    match opener.join().unwrap() {
+        // Typical: the queue failed the pending ingest at shutdown.
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("shut down") || msg.contains("dropped"),
+                "mid-ingest shutdown must surface as a typed error: {msg}"
+            );
+            assert_eq!(stats.failed_prefills, 1, "{stats:?}");
+            assert_eq!(stats.prefills, 0, "{stats:?}");
+        }
+        // Racy-but-legal: the ingest completed before the sentinel.
+        Ok(n) => {
+            assert_eq!(n, prompt_len);
+            assert_eq!(stats.prefills, 1, "{stats:?}");
+            assert_eq!(stats.failed_prefills, 0, "{stats:?}");
+        }
+    }
 }
 
 /// Prompt-primed speculation: a speculative stream opened with a

@@ -15,7 +15,7 @@
 //! Everything here is host-side — no artifacts required, never skips.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use fmmformer::attention::FeatureMap;
@@ -337,6 +337,66 @@ fn corrupt_spill_disconnects_only_the_affected_stream() {
     assert_eq!(stats.failed_steps, 2, "{stats:?}");
     assert!(stats.restores >= 1, "B must have restored: {stats:?}");
     assert_eq!(stats.resident_peak, 1, "{stats:?}");
+}
+
+/// Satellite: per-close spill-file deletion. Closing a spilled stream
+/// deletes its `sess_*.fmms` file *while the server is still running*
+/// — not merely at shutdown — so a long-lived server never accumulates
+/// orphaned spill files for streams that already ended.
+#[test]
+fn closing_spilled_streams_empties_the_disk_store_before_shutdown() {
+    let dir =
+        std::env::temp_dir().join(format!("fmm_pagetest_close_{}", std::process::id()));
+    let spill_files = |dir: &std::path::Path| -> usize {
+        match std::fs::read_dir(dir) {
+            Ok(entries) => entries
+                .filter_map(|e| e.ok())
+                .filter(|e| {
+                    let name = e.file_name();
+                    let name = name.to_string_lossy();
+                    name.starts_with("sess_") && name.ends_with(".fmms")
+                })
+                .count(),
+            Err(_) => 0,
+        }
+    };
+    let model = HostDecoder::new(tiny_config()).unwrap();
+    let store = Box::new(DiskStore::new(&dir).unwrap());
+    let server = DecodeServer::start_with_store(
+        model,
+        DecodeServerConfig { max_resident_sessions: 1, ..Default::default() },
+        store,
+    );
+    let client = server.client();
+
+    let sa = client.open_stream().unwrap();
+    sa.step(1).unwrap();
+    let sb = client.open_stream().unwrap(); // evicts idle A to disk
+    sb.step(2).unwrap();
+    assert!(spill_files(&dir) >= 1, "A's eviction must write a spill file");
+
+    // Close both while the server keeps serving: the spilled stream's
+    // file must vanish on close, not at eventual shutdown.
+    drop(sa);
+    drop(sb);
+    let keepalive = client.open_stream().unwrap();
+    let t0 = Instant::now();
+    while spill_files(&dir) > 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "spill file lingered after its stream closed"
+        );
+        keepalive.step(5).unwrap(); // pushes the scheduler past the closes
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    drop(keepalive);
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_opened, 3);
+    assert_eq!(stats.sessions_closed, 3);
+    assert!(stats.spills >= 1, "{stats:?}");
+    assert!(!dir.exists(), "spill dir {dir:?} should be removed on shutdown");
 }
 
 /// Closing a stream whose state is spilled removes the snapshot from
