@@ -1,0 +1,286 @@
+//! Prefix-cache bench — shared-prompt TTFT, cold vs warm.
+//!
+//! The serving win the radix-tree prefix cache buys: when many streams
+//! open with the same long system prompt, only the first pays to ingest
+//! it — every later open forks from the cached FMMS snapshot and
+//! ingests just its unique suffix. Because the FMM decomposition keeps
+//! per-stream state O(1) in prefix length, the snapshot is a
+//! constant-cost artifact no matter how long the shared prompt is.
+//!
+//! Three measurements:
+//!
+//! * **cold** — N streams sharing a long system prompt (each with a
+//!   short unique suffix) opened against a cache-off server: every
+//!   stream ingests the full prompt.
+//! * **warm** — the same streams against a cache-on server after one
+//!   seeding open: TTFT per stream, hit rate, restored tokens. Fails
+//!   loudly if warm TTFT is not >= 4x better than cold, if the hit
+//!   rate sags, or if any warm stream's greedy tokens diverge from the
+//!   cold run's byte-for-byte (the cache must change latency, never
+//!   math).
+//! * **churn** — distinct prompts through a deliberately tiny byte
+//!   budget: evictions must fire and `bytes_resident` must respect the
+//!   cap while hits keep landing.
+//!
+//!     cargo bench --bench serve_prefix               # 64 streams
+//!     cargo bench --bench serve_prefix -- --quick    # 8 streams
+//!
+//! Emits `reports/BENCH_prefix.json` — validated by `ci.sh --bench`.
+
+use anyhow::{bail, Result};
+use fmmformer::attention::FeatureMap;
+use fmmformer::bench::{fmt_time, save_report_json, Table};
+use fmmformer::cli::Args;
+use fmmformer::serve::decode::{
+    greedy_argmax, DecodeConfig, DecodeServer, DecodeServerConfig, DecoderSession, HostDecoder,
+};
+use fmmformer::serve::prefill::{deterministic_prompt, PROMPT_SEED};
+use fmmformer::util::json::Json;
+use std::sync::Arc;
+
+/// Same shape as the prefill bench: a non-trivial vocab keeps the
+/// per-token readout — the cost prefill and the cache both skip — a
+/// real fraction of the work.
+fn bench_config() -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 4,
+        d_model: 64,
+        vocab: 512,
+        bandwidth: 8,
+        kernels: vec![FeatureMap::Elu],
+        w1: 0.6,
+        w2: 0.9,
+        seed: 7,
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+fn percentile(sorted: &[f64], p: usize) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[(sorted.len() * p / 100).min(sorted.len() - 1)]
+}
+
+/// N prompts sharing one system prefix, each with a unique suffix.
+fn shared_prompts(n: usize, shared: usize, suffix: usize, vocab: usize) -> Vec<Vec<i32>> {
+    let system = deterministic_prompt(shared, vocab, PROMPT_SEED);
+    (0..n)
+        .map(|s| {
+            let mut p = system.clone();
+            p.extend(deterministic_prompt(suffix, vocab, PROMPT_SEED + 1000 + s as u64));
+            p
+        })
+        .collect()
+}
+
+struct RunOut {
+    /// One TTFT (seconds) per stream, open order.
+    ttfts: Vec<f64>,
+    /// Each stream's greedy tokens: prefill pick + one per decode step.
+    streams: Vec<Vec<i32>>,
+}
+
+/// Open every prompt sequentially (so TTFTs don't queue behind each
+/// other) and greedy-decode `tokens` continuation steps.
+fn run_streams(server: &DecodeServer, prompts: &[Vec<i32>], tokens: usize) -> Result<RunOut> {
+    let client = server.client();
+    let mut ttfts = Vec::with_capacity(prompts.len());
+    let mut streams = Vec::with_capacity(prompts.len());
+    for prompt in prompts {
+        let (stream, out) = client.open_stream_with_prompt(prompt)?;
+        ttfts.push(out.ttft.as_secs_f64());
+        let mut tok = greedy_argmax(&out.logits);
+        let mut chosen = vec![tok];
+        for _ in 0..tokens {
+            tok = greedy_argmax(&stream.step(tok)?.logits);
+            chosen.push(tok);
+        }
+        streams.push(chosen);
+    }
+    Ok(RunOut { ttfts, streams })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick"])?;
+    let quick = args.has("quick");
+    let sessions = args.usize_or("sessions", if quick { 8 } else { 64 })?;
+    let shared_len = args.usize_or("shared", 512)?;
+    let suffix_len = args.usize_or("suffix", 16)?;
+    let tokens = args.usize_or("tokens", if quick { 8 } else { 16 })?;
+    let stride = args.usize_or("stride", 64)?;
+
+    let cfg = bench_config();
+    let vocab = cfg.vocab;
+    let prompts = shared_prompts(sessions, shared_len, suffix_len, vocab);
+    println!(
+        "prefix bench: {sessions} streams x ({shared_len} shared + {suffix_len} unique) \
+         prompt tokens, {} layers x {} heads, d_model {}, vocab {vocab}",
+        cfg.layers, cfg.heads, cfg.d_model,
+    );
+
+    // ---- Cold: cache off, every stream ingests the full prompt.
+    let cold_cfg = DecodeServerConfig { prefix_cache_bytes: 0, ..Default::default() };
+    let server = DecodeServer::start(HostDecoder::new(cfg.clone())?, cold_cfg);
+    let cold = run_streams(&server, &prompts, tokens)?;
+    let cold_stats = server.shutdown();
+    if cold_stats.prefix_hits + cold_stats.prefix_partial_hits != 0 {
+        bail!("cache-off server reported prefix hits");
+    }
+
+    // ---- Warm: cache on; one seeding open pays for the shared prefix,
+    // the measured opens fork from its snapshot.
+    let warm_cfg = DecodeServerConfig {
+        prefix_cache_bytes: 64 << 20,
+        prefix_snapshot_stride: stride,
+        ..Default::default()
+    };
+    let server = DecodeServer::start(HostDecoder::new(cfg.clone())?, warm_cfg);
+    let seed = run_streams(&server, &prompts[..1], tokens)?;
+    let warm = run_streams(&server, &prompts, tokens)?;
+    let warm_stats = server.shutdown();
+
+    // The cache must never change a stream's tokens — byte-compare the
+    // whole greedy continuation, seed round included.
+    let bit_identical = warm.streams == cold.streams && seed.streams[0] == cold.streams[0];
+    if !bit_identical {
+        bail!(
+            "warm greedy tokens diverged from the cold run — restoring a \
+             prefix snapshot must be bit-exact"
+        );
+    }
+
+    let cold_mean = mean(&cold.ttfts);
+    let warm_mean = mean(&warm.ttfts);
+    let warm_ttft_ratio = cold_mean / warm_mean.max(1e-12);
+    let total =
+        warm_stats.prefix_hits + warm_stats.prefix_partial_hits + warm_stats.prefix_misses;
+    let hit_rate = (warm_stats.prefix_hits + warm_stats.prefix_partial_hits) as f64
+        / (total.max(1)) as f64;
+
+    let mut cold_sorted = cold.ttfts.clone();
+    cold_sorted.sort_by(f64::total_cmp);
+    let mut warm_sorted = warm.ttfts.clone();
+    warm_sorted.sort_by(f64::total_cmp);
+    let mut tbl = Table::new(
+        &format!("Shared-prompt TTFT, {sessions} streams (cold vs warm)"),
+        &["run", "mean TTFT", "p50", "p99", "restored tokens"],
+    );
+    tbl.row(vec![
+        "cold".into(),
+        fmt_time(cold_mean),
+        fmt_time(percentile(&cold_sorted, 50)),
+        fmt_time(percentile(&cold_sorted, 99)),
+        "0".into(),
+    ]);
+    tbl.row(vec![
+        "warm".into(),
+        fmt_time(warm_mean),
+        fmt_time(percentile(&warm_sorted, 50)),
+        fmt_time(percentile(&warm_sorted, 99)),
+        warm_stats.prefix_restored_tokens.to_string(),
+    ]);
+    tbl.print();
+    println!(
+        "warm/cold TTFT ratio {warm_ttft_ratio:.1}x   hit rate {:.1}%   \
+         {} insertions, {} snapshots resident ({} bytes)",
+        hit_rate * 100.0,
+        warm_stats.prefix_insertions,
+        warm_stats.prefix_snapshots,
+        warm_stats.prefix_bytes_resident,
+    );
+    if warm_ttft_ratio < 4.0 {
+        bail!(
+            "warm TTFT must be >= 4x better than cold for {sessions} streams \
+             sharing a {shared_len}-token prompt; got {warm_ttft_ratio:.2}x"
+        );
+    }
+    if hit_rate < 0.5 {
+        bail!("warm hit rate {hit_rate:.2} < 0.5 — the shared prefix is not being reused");
+    }
+    if warm_stats.prefix_restored_tokens == 0 {
+        bail!("warm run restored no tokens — the cache never forked a stream");
+    }
+
+    // ---- Churn: distinct prompts through a tiny budget. The cap is a
+    // couple of snapshots wide, so insertions must evict and
+    // `bytes_resident` must stay under the budget throughout.
+    let snap_bytes = {
+        let model = Arc::new(HostDecoder::new(cfg.clone())?);
+        let mut sess = DecoderSession::new(model);
+        sess.step(1)?;
+        sess.snapshot()?.len()
+    };
+    let churn_budget = snap_bytes * 5 / 2;
+    let churn_cfg = DecodeServerConfig {
+        prefix_cache_bytes: churn_budget,
+        prefix_snapshot_stride: stride,
+        ..Default::default()
+    };
+    let server = DecodeServer::start(HostDecoder::new(cfg.clone())?, churn_cfg);
+    let churn_sessions = if quick { 6 } else { 16 };
+    let churn_prompts: Vec<Vec<i32>> = (0..churn_sessions)
+        .map(|s| deterministic_prompt(2 * stride, vocab, PROMPT_SEED + 5000 + s as u64))
+        .collect();
+    run_streams(&server, &churn_prompts, 0)?;
+    let resident_after = {
+        let cache = server.prefix_cache();
+        let c = cache.lock().unwrap_or_else(|p| p.into_inner());
+        c.bytes_resident()
+    };
+    let churn_stats = server.shutdown();
+    if resident_after > churn_budget {
+        bail!(
+            "churn: bytes_resident {resident_after} exceeds the {churn_budget}-byte budget"
+        );
+    }
+    if churn_stats.prefix_evictions == 0 {
+        bail!(
+            "churn: {churn_sessions} distinct prompts through a {churn_budget}-byte \
+             budget produced no evictions"
+        );
+    }
+    println!(
+        "churn: {} insertions, {} evictions, {} bytes resident (budget {}, snapshot {})",
+        churn_stats.prefix_insertions,
+        churn_stats.prefix_evictions,
+        resident_after,
+        churn_budget,
+        snap_bytes,
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_prefix")),
+        ("sessions", Json::Num(sessions as f64)),
+        ("shared_len", Json::Num(shared_len as f64)),
+        ("suffix_len", Json::Num(suffix_len as f64)),
+        ("stride", Json::Num(stride as f64)),
+        ("cold_ttft_mean_s", Json::Num(cold_mean)),
+        ("cold_ttft_p50_s", Json::Num(percentile(&cold_sorted, 50))),
+        ("cold_ttft_p99_s", Json::Num(percentile(&cold_sorted, 99))),
+        ("warm_ttft_mean_s", Json::Num(warm_mean)),
+        ("warm_ttft_p50_s", Json::Num(percentile(&warm_sorted, 50))),
+        ("warm_ttft_p99_s", Json::Num(percentile(&warm_sorted, 99))),
+        ("warm_ttft_ratio", Json::Num(warm_ttft_ratio)),
+        ("hit_rate", Json::Num(hit_rate)),
+        ("bit_identical", Json::Bool(bit_identical)),
+        ("restored_tokens", Json::Num(warm_stats.prefix_restored_tokens as f64)),
+        ("insertions", Json::Num(warm_stats.prefix_insertions as f64)),
+        ("bytes_resident", Json::Num(warm_stats.prefix_bytes_resident as f64)),
+        ("snapshot_bytes", Json::Num(snap_bytes as f64)),
+        ("churn_evictions", Json::Num(churn_stats.prefix_evictions as f64)),
+        ("churn_insertions", Json::Num(churn_stats.prefix_insertions as f64)),
+        ("churn_budget_bytes", Json::Num(churn_budget as f64)),
+        ("churn_bytes_resident", Json::Num(resident_after as f64)),
+    ]);
+    let path = save_report_json("BENCH_prefix.json", &doc)?;
+    println!("machine-readable -> {path:?}");
+    Ok(())
+}

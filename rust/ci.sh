@@ -153,18 +153,45 @@ assert doc["faults"]["deaths"] > 0, "fault schedule killed nothing"
             exit 1
         fi
     fi
+    echo "== bench smoke: serve_prefix (tiny) =="
+    # 8 streams sharing a 512-token system prompt, cold vs warm: the
+    # bench itself fails if warm TTFT is not >= 4x better than cold, if
+    # the hit rate sags, if eviction churn never fires, or if any warm
+    # stream's greedy tokens diverge from the cold run byte-for-byte.
+    FMM_REPORTS="$reports" cargo bench --bench serve_prefix -- --quick
+    validate_json "$reports/BENCH_prefix.json"
+    if command -v python3 >/dev/null 2>&1; then
+        if ! python3 -c '
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["bench"] == "serve_prefix"
+for key in ("warm_ttft_ratio", "hit_rate", "bit_identical", "restored_tokens",
+            "churn_evictions", "bytes_resident"):
+    assert key in doc, key
+assert doc["bit_identical"] is True
+assert doc["warm_ttft_ratio"] >= 4.0, "warm TTFT not >= 4x cold"
+assert doc["hit_rate"] >= 0.5, "shared prefix not being reused"
+assert doc["churn_evictions"] > 0, "eviction churn never engaged"
+' "$reports/BENCH_prefix.json"; then
+            echo "bench smoke FAILED: BENCH_prefix.json missing keys or invariants"
+            exit 1
+        fi
+    fi
     echo "bench smoke passed: $reports/BENCH_decode.json $reports/BENCH_paging.json \
 $reports/BENCH_speculative.json $reports/BENCH_prefill.json $reports/BENCH_planner.json \
-$reports/BENCH_front.json"
+$reports/BENCH_front.json $reports/BENCH_prefix.json"
     exit 0
 fi
 
 if [[ "${1:-}" == "--chaos" ]]; then
     # Standalone fault-injection gate: the front-tier chaos suite
     # (frame corruption, mid-stream disconnects, injected spill-store
-    # I/O failures, deadline expiry) plus the clean-path wire tests.
-    echo "== chaos: cargo test --test front_faults --test front =="
-    cargo test -q --test front_faults --test front
+    # I/O failures, deadline expiry), the clean-path wire tests, and
+    # the prefix-cache failure envelope (poisoned cached snapshots are
+    # misses with node eviction; spill faults on cache-forked streams
+    # disconnect only their victims).
+    echo "== chaos: cargo test --test front_faults --test front --test prefix_cache =="
+    cargo test -q --test front_faults --test front --test prefix_cache
     echo "chaos gate passed"
     exit 0
 fi

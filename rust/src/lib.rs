@@ -33,6 +33,7 @@
 //! | [`serve::decode`] | session-based streaming decode server: the ragged stacked forward and the unified planner (gather → one stacked pass per wave → scatter → commit, for decode + prefill + speculative traffic alike) |
 //! | [`serve::prefill`] | chunked prompt ingest: stacked-GEMM prefill + continuous-batching admission queue (round-robin chunk planning, token + wall-time budgets) |
 //! | [`serve::speculative`] | speculative decoding: draft-propose / verify-accept on checkpointed O(1) state, plan/finish split so verify windows ride the shared pass |
+//! | [`serve::prefix_cache`] | radix-tree prefix cache: per-tenant tree over prompt tokens whose nodes pin ref-counted FMMS snapshots under an LRU byte budget, so shared-prompt opens fork from a snapshot instead of re-ingesting the prefix |
 //! | [`analysis`] | attention-map dumps, rank histograms, heatmaps |
 //! | [`bench`] | measurement harness (offline substitute for `criterion`) |
 //! | [`coordinator`] | experiment registry: one entry per paper table/figure |

@@ -63,6 +63,7 @@ fn run() -> Result<()> {
                  [--max-resident N] [--spill-dir DIR] \
                  [--prompt-len N [--prefill-chunk C] [--prefill-budget N] \
                  [--prefill-budget-ms T]] [--no-unified-planner] \
+                 [--prefix-cache-mb N [--prefix-stride K]] \
                  [--speculate [--draft-window K] [--draft ngram|model:LxHxD]]"
             );
             println!(
@@ -238,7 +239,10 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 /// round) and reports time-to-first-token. By default all traffic
 /// rides the unified ragged-batch planner (one stacked pass per wave;
 /// `--no-unified-planner` restores the three-phase scheduler).
-/// `--speculate`
+/// `--prefix-cache-mb N` turns on the radix-tree prefix cache (N MiB of
+/// resident snapshots; `--prefix-stride K` sets the chunk-boundary
+/// snapshot stride) so streams that share a prompt prefix fork from a
+/// cached snapshot instead of re-ingesting it. `--speculate`
 /// turns every stream speculative: `--draft-window K` tokens are
 /// proposed per step by `--draft` (the stream's own n-gram history —
 /// primed with the prompt — or a smaller draft model `model:LxHxD`)
@@ -291,6 +295,8 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         prefill_budget: args.usize_or("prefill-budget", 256)?,
         prefill_budget_ms: args.f64_or("prefill-budget-ms", 0.0)?,
         unified_planner: !args.has("no-unified-planner"),
+        prefix_cache_bytes: args.usize_or("prefix-cache-mb", 0)? << 20,
+        prefix_snapshot_stride: args.usize_or("prefix-stride", 64)?,
     };
 
     // Wire-server mode: expose this engine over the framed TCP

@@ -44,6 +44,27 @@ impl Leaf {
             .collect()
     }
 
+    /// I32 twin of [`from_f32`](Self::from_f32) — used by the session
+    /// snapshot codec for token-valued leaves (e.g. the bounded
+    /// draft-history leaf), where an f32 round-trip would be lossy past
+    /// 2^24.
+    pub fn from_i32(name: &str, shape: &[usize], values: &[i32]) -> Leaf {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Leaf { name: name.to_string(), shape: shape.to_vec(), dtype: Dtype::I32, data }
+    }
+
+    pub fn to_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, Dtype::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
@@ -176,6 +197,17 @@ mod tests {
         assert_eq!(back[0].to_f32()[3], 0.0);
         assert_eq!(back[1].to_f32(), vec![2.5]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn i32_leaves_roundtrip_bit_exactly() {
+        let vals = [i32::MIN, -1, 0, 1, 1 << 30, i32::MAX];
+        let leaf = Leaf::from_i32("draft", &[vals.len()], &vals);
+        let mut framed = Vec::new();
+        write_leaf(&mut framed, &leaf).unwrap();
+        let back = read_leaf(&mut &framed[..]).unwrap();
+        assert_eq!(back, leaf);
+        assert_eq!(back.to_i32(), vals);
     }
 
     #[test]

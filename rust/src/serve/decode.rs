@@ -70,6 +70,7 @@ use crate::rng::Pcg64;
 use crate::runtime::checkpoint::Leaf;
 use crate::runtime::manifest::Dtype;
 use crate::serve::prefill::{self, ChunkPlan, PendingPrefill, PrefillOut, PrefillQueue};
+use crate::serve::prefix_cache::PrefixCache;
 use crate::serve::session_store::{self, MemStore, SessionStore};
 use crate::serve::speculative::{
     SpecFactory, SpecPlan, SpeculationConfig, SpeculativeSession,
@@ -392,7 +393,17 @@ impl DecoderSession {
     /// layer/head raw decode state plus a position leaf, stamped with
     /// the model's config fingerprint.
     pub fn snapshot(&self) -> Result<Vec<u8>> {
-        let mut leaves = Vec::with_capacity(1 + self.states.len() * self.states[0].len());
+        self.snapshot_with_draft(&[])
+    }
+
+    /// [`snapshot`](Self::snapshot) plus an optional trailing `draft`
+    /// leaf carrying a bounded committed-token history (i32) — how a
+    /// speculative stream's draft priming survives spills and
+    /// prefix-cache forks. An empty `draft` emits the plain layout
+    /// byte-for-byte, so plain-session snapshots are unchanged and the
+    /// two restore interchangeably.
+    pub fn snapshot_with_draft(&self, draft: &[i32]) -> Result<Vec<u8>> {
+        let mut leaves = Vec::with_capacity(2 + self.states.len() * self.states[0].len());
         leaves.push(Leaf::from_f32("pos", &[2], &u64_to_words(self.pos as u64)));
         let mut buf = Vec::new();
         for (l, row) in self.states.iter().enumerate() {
@@ -402,17 +413,45 @@ impl DecoderSession {
                 leaves.push(Leaf::from_f32(&format!("l{l}.h{h}"), &[buf.len()], &buf));
             }
         }
+        if !draft.is_empty() {
+            leaves.push(Leaf::from_i32("draft", &[draft.len()], draft));
+        }
         session_store::encode_snapshot(self.model.config().fingerprint(), &leaves)
     }
 
     /// Rebuild a session from a [`snapshot`](Self::snapshot) blob.
     /// Validates the codec framing, the config fingerprint, and every
     /// per-head raw state; any mismatch or corruption is an `Err` that
-    /// affects only this stream — never a panic.
+    /// affects only this stream — never a panic. A trailing draft
+    /// leaf (from [`snapshot_with_draft`](Self::snapshot_with_draft))
+    /// is accepted and discarded.
     pub fn restore(model: Arc<HostDecoder>, snap: &[u8]) -> Result<DecoderSession> {
+        Ok(DecoderSession::restore_with_draft(model, snap)?.0)
+    }
+
+    /// [`restore`](Self::restore) that also returns the draft-history
+    /// leaf when the snapshot carries one (`None` for plain
+    /// snapshots) — callers re-wrapping the session for speculative
+    /// decoding feed it to [`DraftSource::observe_many`] so the fork
+    /// proposes from token one.
+    pub fn restore_with_draft(
+        model: Arc<HostDecoder>,
+        snap: &[u8],
+    ) -> Result<(DecoderSession, Option<Vec<i32>>)> {
         let cfg = model.config().clone();
-        let leaves = session_store::decode_snapshot(snap, cfg.fingerprint())?;
+        let mut leaves = session_store::decode_snapshot(snap, cfg.fingerprint())?;
         let want = 1 + cfg.layers * cfg.heads;
+        // At most one trailing "draft" leaf rides after the state
+        // leaves; anything else with that count is malformed and falls
+        // through to the count check below.
+        let mut draft = None;
+        if leaves.len() == want + 1 && leaves.last().map(|l| l.name.as_str()) == Some("draft") {
+            let leaf = leaves.pop().expect("non-empty: len checked");
+            if leaf.dtype != Dtype::I32 {
+                bail!("snapshot draft leaf has dtype {:?}, expected i32", leaf.dtype);
+            }
+            draft = Some(leaf.to_i32());
+        }
         if leaves.len() != want {
             bail!("snapshot has {} leaves, expected {want}", leaves.len());
         }
@@ -440,7 +479,7 @@ impl DecoderSession {
             }
         }
         sess.pos = pos;
-        Ok(sess)
+        Ok((sess, draft))
     }
 
     /// The shared decoder this session streams through.
@@ -950,6 +989,18 @@ pub struct DecodeServerConfig {
     /// baseline. Per-stream logits are bit-identical either way; only
     /// the pass shape changes.
     pub unified_planner: bool,
+    /// Byte budget for the radix-tree prompt-prefix cache
+    /// ([`super::prefix_cache`]). Prompted opens restore the deepest
+    /// cached ancestor snapshot and prefill only the uncovered suffix;
+    /// boundary snapshots are inserted at `prefix_snapshot_stride`
+    /// token strides. `0` disables the cache (the default).
+    pub prefix_cache_bytes: usize,
+    /// Prompt-token stride at which prefill boundary snapshots are
+    /// offered to the prefix cache (chunk boundaries whose token offset
+    /// is a multiple of this). Smaller strides match more prefixes at
+    /// the cost of more cached snapshots; `0` disables insertion (the
+    /// cache can still serve whatever is already in it).
+    pub prefix_snapshot_stride: usize,
 }
 
 impl Default for DecodeServerConfig {
@@ -965,6 +1016,8 @@ impl Default for DecodeServerConfig {
             prefill_budget: 256,
             prefill_budget_ms: 0.0,
             unified_planner: true,
+            prefix_cache_bytes: 0,
+            prefix_snapshot_stride: 64,
         }
     }
 }
@@ -1056,6 +1109,31 @@ pub struct DecodeStats {
     /// mid-queue (each also counts in `failed_prefills`; the stream
     /// disconnects — partial prompt state is never served).
     pub deadline_expired_prefills: usize,
+    /// Prompted opens fully answered from the prefix cache (only the
+    /// final prompt token ingested). Mirrors
+    /// [`CacheStats`](super::prefix_cache::CacheStats) — these
+    /// `prefix_*` fields are merged from the cache ledger at stats-read
+    /// time, not accumulated by the scheduler.
+    pub prefix_hits: usize,
+    /// Prompted opens that restored a strict-ancestor snapshot and
+    /// prefilled the remaining suffix.
+    pub prefix_partial_hits: usize,
+    /// Prompted opens (with the cache enabled) that matched nothing.
+    pub prefix_misses: usize,
+    /// Prompt tokens skipped by restoring cached snapshots — counted
+    /// here and NOT in `prefill_tokens`, so the pacer/budget ledger
+    /// stays a measure of work actually done.
+    pub prefix_restored_tokens: usize,
+    /// Bytes of snapshots currently resident in the prefix cache
+    /// (≤ `prefix_cache_bytes` whenever a budget is set).
+    pub prefix_bytes_resident: usize,
+    /// Prefix-cache snapshots evicted under byte-budget pressure or
+    /// dropped after a failed restore.
+    pub prefix_evictions: usize,
+    /// Boundary snapshots inserted into the prefix cache.
+    pub prefix_insertions: usize,
+    /// Snapshots currently resident in the prefix cache.
+    pub prefix_snapshots: usize,
     /// Per-tenant accounting for streams opened through the serve front
     /// tier (or any caller that tags opens with a tenant). Untagged
     /// traffic is not recorded here.
@@ -1455,6 +1533,7 @@ impl Drop for DecodeStream {
 pub struct DecodeServer {
     client: Option<DecodeClient>,
     stats: Arc<Mutex<DecodeStats>>,
+    cache: Arc<Mutex<PrefixCache>>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -1478,11 +1557,21 @@ impl DecodeServer {
         let stats_thread = stats.clone();
         let queue_depth = Arc::new(AtomicUsize::new(0));
         let depth_thread = queue_depth.clone();
+        let cache = Arc::new(Mutex::new(PrefixCache::new(cfg.prefix_cache_bytes)));
+        let cache_thread = cache.clone();
         let model = Arc::new(model);
         let handle = std::thread::Builder::new()
             .name("fmm-decode".into())
             .spawn(move || {
-                decode_scheduler(model, cfg, store, rx, stats_thread, depth_thread)
+                decode_scheduler(
+                    model,
+                    cfg,
+                    store,
+                    rx,
+                    stats_thread,
+                    depth_thread,
+                    cache_thread,
+                )
             })
             .expect("spawn decode scheduler");
         DecodeServer {
@@ -1493,6 +1582,7 @@ impl DecodeServer {
                 recv_timeout: DEFAULT_CLIENT_RECV_TIMEOUT,
             }),
             stats,
+            cache,
             handle: Some(handle),
         }
     }
@@ -1502,7 +1592,32 @@ impl DecodeServer {
     }
 
     pub fn stats(&self) -> DecodeStats {
-        lock_stats(&self.stats).clone()
+        let mut s = lock_stats(&self.stats).clone();
+        self.merge_cache_stats(&mut s);
+        s
+    }
+
+    /// The prompt-prefix cache (inert when `prefix_cache_bytes` was 0).
+    /// Tests and chaos tooling reach through this to inspect residency
+    /// or poison cached snapshots; the scheduler shares the same
+    /// instance.
+    pub fn prefix_cache(&self) -> Arc<Mutex<PrefixCache>> {
+        self.cache.clone()
+    }
+
+    /// The prefix-cache ledger is the single source of truth for the
+    /// `prefix_*` counters; fold it into a stats snapshot at read time
+    /// (the scheduler never writes these fields).
+    fn merge_cache_stats(&self, s: &mut DecodeStats) {
+        let c = lock_cache(&self.cache).stats();
+        s.prefix_hits = c.hits;
+        s.prefix_partial_hits = c.partial_hits;
+        s.prefix_misses = c.misses;
+        s.prefix_restored_tokens = c.restored_tokens;
+        s.prefix_bytes_resident = c.bytes_resident;
+        s.prefix_evictions = c.evictions;
+        s.prefix_insertions = c.insertions;
+        s.prefix_snapshots = c.snapshots;
     }
 
     /// Graceful shutdown via the explicit sentinel: queued steps are
@@ -1515,7 +1630,8 @@ impl DecodeServer {
         if let Some(h) = self.handle.take() {
             h.join().ok();
         }
-        let stats = lock_stats(&self.stats).clone();
+        let mut stats = lock_stats(&self.stats).clone();
+        self.merge_cache_stats(&mut stats);
         stats
     }
 }
@@ -1526,6 +1642,14 @@ impl DecodeServer {
 /// cascading the poison into every unrelated stream's stat sync.
 fn lock_stats(stats: &Mutex<DecodeStats>) -> MutexGuard<'_, DecodeStats> {
     stats.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Poison-tolerant prefix-cache lock, same rationale as [`lock_stats`]:
+/// the cache's invariants are enforced per-call, so a panic while the
+/// lock was held leaves (at worst) stale counters — better than turning
+/// every later prompted open into a panic.
+fn lock_cache(cache: &Mutex<PrefixCache>) -> MutexGuard<'_, PrefixCache> {
+    cache.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// One resident stream: plain incremental decode, or the speculative
@@ -1724,14 +1848,7 @@ impl Residency {
             return Ok(false);
         };
         let t0 = Instant::now();
-        let sess = DecoderSession::restore(model.clone(), &snap)?;
-        let slot = match (self.spec_ids.contains(&id), &self.spec) {
-            // Re-wrap a speculative stream with a fresh draft source:
-            // discarded lookahead is recomputed, the token stream is
-            // unaffected (verification is bit-exact either way).
-            (true, Ok(Some(factory))) => Slot::Spec(factory.wrap(sess)),
-            _ => Slot::Plain(sess),
-        };
+        let slot = self.rebuild_slot(id, model, &snap)?;
         self.make_room(pinned);
         self.resident.insert(id, slot);
         self.restores += 1;
@@ -1739,6 +1856,47 @@ impl Residency {
         self.peak = self.peak.max(self.resident.len());
         self.touch(id);
         Ok(true)
+    }
+
+    /// Decode a snapshot blob into the right [`Slot`] kind for `id`.
+    /// A speculative stream re-wraps with a fresh draft source, primed
+    /// from the snapshot's draft-history leaf when one rode along —
+    /// so a spilled or prefix-cache-forked speculative stream proposes
+    /// from its first post-restore token instead of re-warming.
+    fn rebuild_slot(
+        &self,
+        id: u64,
+        model: &Arc<HostDecoder>,
+        snap: &[u8],
+    ) -> Result<Slot> {
+        let (sess, draft) = DecoderSession::restore_with_draft(model.clone(), snap)?;
+        Ok(match (self.spec_ids.contains(&id), &self.spec) {
+            (true, Ok(Some(factory))) => {
+                let mut spec = factory.wrap(sess);
+                if let Some(history) = draft {
+                    spec.prime_draft(&history);
+                }
+                Slot::Spec(spec)
+            }
+            _ => Slot::Plain(sess),
+        })
+    }
+
+    /// Replace `id`'s resident state with a decoded snapshot — the
+    /// prefix-cache fork path. The stream keeps its slot kind (a
+    /// speculative open re-wraps and primes its draft from the cached
+    /// history). On `Err` the previously registered state is untouched,
+    /// so the caller simply falls back to a cold prefill.
+    fn adopt_snapshot(
+        &mut self,
+        id: u64,
+        model: &Arc<HostDecoder>,
+        snap: &[u8],
+    ) -> Result<()> {
+        let slot = self.rebuild_slot(id, model, snap)?;
+        self.resident.insert(id, slot);
+        self.touch(id);
+        Ok(())
     }
 
     /// Publish the residency counters into the shared stats snapshot
@@ -1753,6 +1911,7 @@ impl Residency {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn decode_scheduler(
     model: Arc<HostDecoder>,
     cfg: DecodeServerConfig,
@@ -1760,6 +1919,7 @@ fn decode_scheduler(
     rx: Receiver<DecodeMsg>,
     stats: Arc<Mutex<DecodeStats>>,
     queue_depth: Arc<AtomicUsize>,
+    cache: Arc<Mutex<PrefixCache>>,
 ) {
     // Build the draft machinery once; a failed build (bad draft model
     // config) fails speculative opens with its message, while plain
@@ -1770,6 +1930,9 @@ fn decode_scheduler(
     // The pacer's cost model (EWMA seconds-per-prompt-token) persists
     // across rounds; only its per-round spend resets.
     let mut pacer = PrefillPacer::new(cfg.prefill_budget_ms);
+    // Boundary snapshots feed the cache only when it can hold them.
+    let stride =
+        if cfg.prefix_cache_bytes == 0 { 0 } else { cfg.prefix_snapshot_stride };
     loop {
         let mut steps: Vec<StepReq> = Vec::new();
         let mut closes: Vec<u64> = Vec::new();
@@ -1789,6 +1952,7 @@ fn decode_scheduler(
                     &mut closes,
                     &mut exit,
                     &stats,
+                    &cache,
                 ),
                 Err(_) => {
                     // All clients gone.
@@ -1835,6 +1999,7 @@ fn decode_scheduler(
                 &mut closes,
                 &mut exit,
                 &stats,
+                &cache,
             );
         }
 
@@ -1929,6 +2094,8 @@ fn decode_scheduler(
                         &mut pacer,
                         &mut tally,
                         &mut ptally,
+                        &cache,
+                        stride,
                     );
                     wave = tail;
                     if wave.is_empty() {
@@ -1951,7 +2118,16 @@ fn decode_scheduler(
                 );
             }
             if !exit && !prefills.is_empty() {
-                run_prefills(&model, &mut res, &mut prefills, budget, &mut pacer, &mut ptally);
+                run_prefills(
+                    &model,
+                    &mut res,
+                    &mut prefills,
+                    budget,
+                    &mut pacer,
+                    &mut ptally,
+                    &cache,
+                    stride,
+                );
             }
         }
         let did_work = micro_batch > 0
@@ -2116,6 +2292,7 @@ impl PrefillPacer {
 /// so restores can evict idle streams), and between chunks it is an
 /// ordinary LRU citizen. A chunk failure (lost snapshot, untrusted
 /// state) fails that prompt's open and disconnects only that stream.
+#[allow(clippy::too_many_arguments)]
 fn run_prefills(
     model: &Arc<HostDecoder>,
     res: &mut Residency,
@@ -2123,6 +2300,8 @@ fn run_prefills(
     budget: usize,
     pacer: &mut PrefillPacer,
     tally: &mut PrefillTally,
+    cache: &Mutex<PrefixCache>,
+    stride: usize,
 ) {
     let mut budget = budget;
     loop {
@@ -2156,6 +2335,7 @@ fn run_prefills(
                     tally.ttft_secs += queue.finish(id, logits);
                     tally.completed += 1;
                 } else {
+                    maybe_cache_prefix(cache, stride, res, queue, id, plan.end());
                     queue.advance(id, took);
                 }
             }
@@ -2168,6 +2348,41 @@ fn run_prefills(
             }
         }
     }
+}
+
+/// Offer a just-ingested prompt boundary to the prefix cache. Called
+/// after a non-final chunk of `id` ran (so the session's state embodies
+/// exactly `end` prompt tokens) and before the queue cursor advances.
+/// Inserts only at `stride`-aligned boundaries, skips prefixes some
+/// concurrent same-prefix open already covered (the dedupe the tree
+/// gives us for free), and never fails the stream: a snapshot error
+/// just means this boundary is not cached.
+fn maybe_cache_prefix(
+    cache: &Mutex<PrefixCache>,
+    stride: usize,
+    res: &mut Residency,
+    queue: &PrefillQueue,
+    id: u64,
+    end: usize,
+) {
+    if stride == 0 || end == 0 || end % stride != 0 {
+        return;
+    }
+    let Some(prefix) = queue.ingested_prefix(id, end) else { return };
+    let ns: Arc<str> = res.tenant_of(id).unwrap_or_else(|| Arc::from(""));
+    // Snapshot only when this exact prefix is new — `covered` is the
+    // cross-stream dedupe for concurrent same-prompt opens.
+    {
+        let c = lock_cache(cache);
+        if !c.enabled() || c.covered(&ns, prefix) {
+            return;
+        }
+    }
+    let prefix = prefix.to_vec();
+    let Some(Ok(snap)) = res.resident.get_mut(&id).map(|s| s.snapshot()) else {
+        return;
+    };
+    lock_cache(cache).insert(&ns, &prefix, snap);
 }
 
 /// Per-micro-batch execution counters (folded into [`DecodeStats`]).
@@ -2600,6 +2815,8 @@ fn run_planned_wave(
     pacer: &mut PrefillPacer,
     tally: &mut RoundTally,
     ptally: &mut PrefillTally,
+    cache: &Mutex<PrefixCache>,
+    stride: usize,
 ) {
     // Phase 0: deadline sweep at the wave boundary. (Queued prompt
     // ingests are swept once per round in the scheduler loop.)
@@ -2868,6 +3085,14 @@ fn run_planned_wave(
                             ptally.ttft_secs += queue.finish(id, logits);
                             ptally.completed += 1;
                         } else {
+                            maybe_cache_prefix(
+                                cache,
+                                stride,
+                                res,
+                                queue,
+                                id,
+                                pick.end(),
+                            );
                             queue.advance(id, window.len());
                         }
                     }
@@ -2915,6 +3140,7 @@ fn handle_msg(
     closes: &mut Vec<u64>,
     exit: &mut bool,
     stats: &Mutex<DecodeStats>,
+    cache: &Mutex<PrefixCache>,
 ) {
     match msg {
         DecodeMsg::Open { session, speculative, tenant, reply } => {
@@ -2951,8 +3177,34 @@ fn handle_msg(
                         res.tenants.insert(session, t.clone());
                     }
                     drop(s);
+                    // Prefix-cache walk (tenant-scoped namespace):
+                    // restore the deepest cached ancestor and enqueue
+                    // only the uncovered suffix. The hit pins its node
+                    // until released here, so eviction pressure from
+                    // concurrent inserts cannot free the snapshot
+                    // mid-restore.
+                    let mut restored = 0;
+                    let hit = lock_cache(cache)
+                        .lookup(tenant.as_deref().unwrap_or(""), &prompt);
+                    if let Some(hit) = hit {
+                        match res.adopt_snapshot(session, model, &hit.snapshot) {
+                            Ok(()) => {
+                                restored = hit.depth;
+                                let mut c = lock_cache(cache);
+                                c.note_restored(hit.depth);
+                                c.release(hit.node);
+                            }
+                            // Failure envelope: a truncated or
+                            // fingerprint-mismatched cached snapshot is
+                            // a cache *miss*, never a client error —
+                            // the open falls back to a cold prefill and
+                            // the poisoned node is evicted.
+                            Err(_) => lock_cache(cache).restore_failed(&hit),
+                        }
+                    }
                     prefills.push(
                         PendingPrefill::new(session, prompt, submitted, reply)
+                            .with_base(restored)
                             .with_deadline(deadline),
                     );
                 }

@@ -50,6 +50,6 @@ pub mod wire;
 
 pub use client::{rejection_code, FrontClient, OpenReply, StepReply};
 pub use fault::{FaultAction, FaultPlan, FaultedWriter};
-pub use server::{FrontConfig, FrontServer, FrontStats};
+pub use server::{FrontConfig, FrontServer, FrontStats, TenantLatency};
 pub use tenant::{Gate, GateSnapshot, TenantConfig, TenantSnapshot};
 pub use wire::{RejectCode, WIRE_VERSION};

@@ -115,6 +115,78 @@ struct Shared {
     next_wire_id: AtomicU64,
     connections: AtomicUsize,
     bad_frames: AtomicUsize,
+    /// Per-tenant latency sample rings (TTFT + step), feeding the
+    /// p50/p99 percentiles in the stats document.
+    latency: Mutex<HashMap<String, TenantSamples>>,
+}
+
+/// Bounded ring of latency samples (seconds): O(1) memory per tenant
+/// however long the server runs; percentiles reflect the most recent
+/// `CAP` observations.
+struct SampleRing {
+    buf: Vec<f64>,
+    next: usize,
+    total: usize,
+}
+
+impl SampleRing {
+    const CAP: usize = 1024;
+
+    fn new() -> SampleRing {
+        SampleRing { buf: Vec::new(), next: 0, total: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < Self::CAP {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % Self::CAP;
+        self.total += 1;
+    }
+
+    /// Nearest-rank percentile over the retained window (`q` in 0..=1);
+    /// 0.0 when no samples were recorded.
+    fn percentile(&self, q: f64) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+}
+
+struct TenantSamples {
+    ttft: SampleRing,
+    step: SampleRing,
+}
+
+impl TenantSamples {
+    fn new() -> TenantSamples {
+        TenantSamples { ttft: SampleRing::new(), step: SampleRing::new() }
+    }
+}
+
+/// Per-tenant latency percentiles (seconds) over the most recent
+/// samples — the front tier's answer to "is tenant X's TTFT degrading",
+/// published in the JSON stats document and in [`FrontStats::latency`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantLatency {
+    /// Median time-to-first-token for prompted opens.
+    pub ttft_p50: f64,
+    /// 99th-percentile TTFT.
+    pub ttft_p99: f64,
+    /// Median per-token decode step latency.
+    pub step_p50: f64,
+    /// 99th-percentile step latency.
+    pub step_p99: f64,
+    /// Prompted opens observed (lifetime, not just the ring window).
+    pub ttft_samples: usize,
+    /// Steps observed (lifetime).
+    pub step_samples: usize,
 }
 
 /// Poison-tolerant lock (same rationale as the decode scheduler's
@@ -125,6 +197,45 @@ fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 }
 
 impl Shared {
+    fn record_ttft(&self, tenant: &str, secs: f64) {
+        relock(&self.latency)
+            .entry(tenant.to_string())
+            .or_insert_with(TenantSamples::new)
+            .ttft
+            .push(secs);
+    }
+
+    fn record_step_latency(&self, tenant: &str, secs: f64) {
+        relock(&self.latency)
+            .entry(tenant.to_string())
+            .or_insert_with(TenantSamples::new)
+            .step
+            .push(secs);
+    }
+
+    /// Per-tenant percentile snapshot, sorted by tenant for determinism.
+    fn latency_snapshot(&self) -> Vec<(String, TenantLatency)> {
+        let map = relock(&self.latency);
+        let mut out: Vec<(String, TenantLatency)> = map
+            .iter()
+            .map(|(tenant, s)| {
+                (
+                    tenant.clone(),
+                    TenantLatency {
+                        ttft_p50: s.ttft.percentile(0.50),
+                        ttft_p99: s.ttft.percentile(0.99),
+                        step_p50: s.step.percentile(0.50),
+                        step_p99: s.step.percentile(0.99),
+                        ttft_samples: s.ttft.total,
+                        step_samples: s.step.total,
+                    },
+                )
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
     fn past_drain_deadline(&self) -> bool {
         relock(&self.drain_deadline)
             .map_or(false, |d| d <= Instant::now())
@@ -188,6 +299,25 @@ impl Shared {
                 })
                 .collect(),
         );
+        let latency_rows = self.latency_snapshot();
+        let latency = Json::obj(
+            latency_rows
+                .iter()
+                .map(|(tenant, l)| {
+                    (
+                        tenant.as_str(),
+                        Json::obj(vec![
+                            ("ttft_p50_ms", Json::num(l.ttft_p50 * 1e3)),
+                            ("ttft_p99_ms", Json::num(l.ttft_p99 * 1e3)),
+                            ("step_p50_ms", Json::num(l.step_p50 * 1e3)),
+                            ("step_p99_ms", Json::num(l.step_p99 * 1e3)),
+                            ("ttft_samples", Json::num(l.ttft_samples as f64)),
+                            ("step_samples", Json::num(l.step_samples as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("draining", Json::Bool(self.draining.load(Ordering::SeqCst))),
             ("connections", Json::num(self.connections.load(Ordering::Relaxed) as f64)),
@@ -197,6 +327,26 @@ impl Shared {
             ("shed_total", Json::num(gate.shed_total as f64)),
             ("shed_by_code", shed_by_code),
             ("tenants", tenants),
+            ("latency", latency),
+            (
+                "prefix_cache",
+                Json::obj(vec![
+                    ("hits", Json::num(decode.prefix_hits as f64)),
+                    ("partial_hits", Json::num(decode.prefix_partial_hits as f64)),
+                    ("misses", Json::num(decode.prefix_misses as f64)),
+                    (
+                        "restored_tokens",
+                        Json::num(decode.prefix_restored_tokens as f64),
+                    ),
+                    (
+                        "bytes_resident",
+                        Json::num(decode.prefix_bytes_resident as f64),
+                    ),
+                    ("evictions", Json::num(decode.prefix_evictions as f64)),
+                    ("insertions", Json::num(decode.prefix_insertions as f64)),
+                    ("snapshots", Json::num(decode.prefix_snapshots as f64)),
+                ]),
+            ),
             (
                 "decode",
                 Json::obj(vec![
@@ -238,6 +388,8 @@ pub struct FrontStats {
     /// Every engine generation's final [`DecodeStats`], in retirement
     /// order with the still-live generations last.
     pub engines: Vec<DecodeStats>,
+    /// Per-tenant TTFT/step-latency percentiles (sorted by tenant).
+    pub latency: Vec<(String, TenantLatency)>,
 }
 
 impl FrontStats {
@@ -314,6 +466,7 @@ impl FrontServer {
             next_wire_id: AtomicU64::new(1),
             connections: AtomicUsize::new(0),
             bad_frames: AtomicUsize::new(0),
+            latency: Mutex::new(HashMap::new()),
         });
         let accept_shared = shared.clone();
         let accept = std::thread::Builder::new()
@@ -394,6 +547,7 @@ impl FrontServer {
             bad_frames: self.shared.bad_frames.load(Ordering::Relaxed),
             gate: self.shared.gate.snapshot(),
             engines,
+            latency: self.shared.latency_snapshot(),
         }
     }
 }
@@ -593,14 +747,19 @@ fn handle_request(
                 deadline: effective_deadline(deadline_ms, &shared.cfg, now),
             };
             let opened = if prompt.is_empty() {
-                client.open_stream_opts(opts).map(|h| (h, 0u32, Vec::new()))
+                client.open_stream_opts(opts).map(|h| (h, 0u32, Vec::new(), None))
             } else {
                 client
                     .open_stream_with_prompt_opts(&prompt, opts)
-                    .map(|(h, out)| (h, out.prompt_tokens as u32, out.logits))
+                    .map(|(h, out)| {
+                        (h, out.prompt_tokens as u32, out.logits, Some(out.ttft))
+                    })
             };
             match opened {
-                Ok((handle, prompt_tokens, logits)) => {
+                Ok((handle, prompt_tokens, logits, ttft)) => {
+                    if let Some(ttft) = ttft {
+                        shared.record_ttft(&tenant, ttft.as_secs_f64());
+                    }
                     let wire_id = shared.next_wire_id.fetch_add(1, Ordering::Relaxed);
                     streams.insert(wire_id, ConnStream { handle, tenant, slot });
                     send_response(
@@ -640,15 +799,18 @@ fn handle_request(
             }
             let deadline = effective_deadline(deadline_ms, &shared.cfg, now);
             match cs.handle.step_with_deadline(token, deadline) {
-                Ok(out) => send_response(
-                    sock,
-                    &Response::StepOk {
-                        stream: wire_id,
-                        pos: out.pos as u64,
-                        logits: out.logits,
-                    },
-                )
-                .is_ok(),
+                Ok(out) => {
+                    shared.record_step_latency(&cs.tenant, out.latency.as_secs_f64());
+                    send_response(
+                        sock,
+                        &Response::StepOk {
+                            stream: wire_id,
+                            pos: out.pos as u64,
+                            logits: out.logits,
+                        },
+                    )
+                    .is_ok()
+                }
                 Err(e) => {
                     let msg = format!("{e:#}");
                     let code = classify_engine_error(&msg);

@@ -28,16 +28,17 @@
 //!
 //! # The `serve/` subsystem, mapped
 //!
-//! Six modules, one serving stack:
+//! Seven modules, one serving stack:
 //!
 //! | module | role |
 //! |---|---|
 //! | `serve` (this file) | fixed-window request router + dynamic batcher over AOT artifacts |
 //! | [`decode`] | streaming engine: [`decode::HostDecoder`] (the model), [`decode::DecoderSession`] (O(1)/token state), the ragged stacked forward (`ragged_forward`), the [`decode::DecodeServer`] scheduler (the unified ragged-batch planner, the `Residency` LRU spill manager) |
 //! | [`prefill`] | chunked prompt ingest: builds session state from a full prompt in C-row stacked GEMM passes (readout skipped until the last row); admission queue with round-robin chunk planning + per-round token/wall-time budgets for continuous batching |
+//! | [`prefix_cache`] | radix tree over prompt-token prefixes holding ref-counted FMMS snapshots (O(1)-sized, prefix-length-independent): prompted opens restore the deepest cached ancestor and prefill only the uncovered suffix; LRU eviction under a byte budget, tenant-scoped namespaces, pins beat eviction |
 //! | [`session_store`] | the spill tier: FMMS v1 self-validating snapshot codec + [`session_store::MemStore`]/[`session_store::DiskStore`] behind the [`session_store::SessionStore`] trait (plus [`session_store::FaultyStore`], the fault-injection wrapper) |
 //! | [`speculative`] | draft-propose / verify-accept lookahead over checkpoint/rollback of the O(1) state, split into plan/finish halves so the verify window can ride a shared pass |
-//! | [`front`] | the production boundary: TCP front tier speaking a length-prefixed checksummed framed protocol, with per-tenant token-bucket admission, deadline propagation, load shedding, graceful drain, dual-slot weight swap, and a fault-injection harness |
+//! | [`front`] | the production boundary: TCP front tier speaking a length-prefixed checksummed framed protocol, with per-tenant token-bucket admission, deadline propagation, load shedding, graceful drain, dual-slot weight swap, per-tenant latency percentiles, and a fault-injection harness |
 //!
 //! How they connect — the *unified ragged-batch planner* (the default;
 //! `DecodeServerConfig::unified_planner`): each scheduler round gathers
@@ -101,6 +102,7 @@
 pub mod decode;
 pub mod front;
 pub mod prefill;
+pub mod prefix_cache;
 pub mod session_store;
 pub mod speculative;
 

@@ -32,7 +32,12 @@
 //!   queued decode steps interleave with prompt ingest and decode
 //!   latency stays bounded while prompts ingest at GEMM throughput.
 //!   Residency/spill touches a prefilling stream only at chunk
-//!   boundaries.
+//!   boundaries. When a [`prefix_cache`](super::prefix_cache) snapshot
+//!   covers a leading slice of the prompt, the queue entry starts past
+//!   it ([`PendingPrefill::with_base`]): restored tokens never enter
+//!   the token budget, the pacer's EWMA, or `prefill_tokens`/
+//!   `ttft_secs` accounting — they are reported separately as
+//!   `prefix_restored_tokens`, keeping the bench invariants honest.
 //! * [`PrefillOut`] — what the opener receives: the final prompt
 //!   token's logits plus ingest observability (chunks, TTFT).
 //! * [`run_prompted_sessions`] — the demo/bench/test harness: N
@@ -109,14 +114,25 @@ pub struct PrefillOut {
     pub logits: Vec<f32>,
     /// Time-to-first-token: admission → these logits delivered.
     pub ttft: Duration,
+    /// Leading prompt tokens skipped by restoring a prefix-cache
+    /// snapshot ([`super::prefix_cache`]); only `prompt_tokens -
+    /// restored` were actually ingested here. Kept out of the
+    /// scheduler's `prefill_tokens`/pacer ledger so those remain honest
+    /// measures of work done (they feed `prefix_restored_tokens`
+    /// instead).
+    pub restored: usize,
 }
 
 /// One admitted-but-not-yet-ingested prompt in the scheduler.
 pub(crate) struct PendingPrefill {
     session: u64,
     prompt: Vec<i32>,
-    /// Tokens already ingested (chunk boundary).
+    /// Tokens already accounted for (chunk boundary) — starts at
+    /// `restored` when a prefix-cache snapshot covered a leading slice.
     cursor: usize,
+    /// Leading tokens covered by a restored prefix-cache snapshot
+    /// (never planned, budgeted, or paced — they cost a memcpy).
+    restored: usize,
     /// Stacked passes run so far.
     chunks: usize,
     submitted: Instant,
@@ -137,6 +153,7 @@ impl PendingPrefill {
             session,
             prompt,
             cursor: 0,
+            restored: 0,
             chunks: 0,
             submitted,
             deadline: None,
@@ -148,6 +165,18 @@ impl PendingPrefill {
     /// deadline-less callers keep their 4-argument `new`).
     pub(crate) fn with_deadline(mut self, deadline: Option<Instant>) -> PendingPrefill {
         self.deadline = deadline;
+        self
+    }
+
+    /// Start ingest after a restored prefix-cache snapshot: the first
+    /// `restored` prompt tokens are already embodied in the session's
+    /// state, so planning begins at that boundary and only the suffix
+    /// is ever budgeted. Callers guarantee `restored < prompt.len()`
+    /// (the final token always ingests so its logits row is computed).
+    pub(crate) fn with_base(mut self, restored: usize) -> PendingPrefill {
+        debug_assert!(restored < self.prompt.len());
+        self.restored = restored;
+        self.cursor = restored;
         self
     }
 }
@@ -164,6 +193,12 @@ pub(crate) struct ChunkPlan {
 impl ChunkPlan {
     pub(crate) fn len(&self) -> usize {
         self.hi - self.lo
+    }
+
+    /// Prompt tokens embodied in the session once this chunk runs —
+    /// the prefix-cache insertion boundary.
+    pub(crate) fn end(&self) -> usize {
+        self.hi
     }
 }
 
@@ -255,6 +290,16 @@ impl PrefillQueue {
         &p.prompt[plan.lo..plan.hi]
     }
 
+    /// The first `end` tokens of a queued stream's prompt — what a
+    /// just-run chunk ending at that boundary left embodied in the
+    /// session's state, and therefore the prefix-cache key for a
+    /// snapshot taken now. `None` for unknown streams or an
+    /// out-of-range boundary.
+    pub(crate) fn ingested_prefix(&self, session: u64, end: usize) -> Option<&[i32]> {
+        let p = self.pending.iter().find(|p| p.session == session)?;
+        p.prompt.get(..end)
+    }
+
     /// Record a completed non-final chunk of `session`'s prompt.
     pub(crate) fn advance(&mut self, session: u64, tokens: usize) {
         let p = self
@@ -278,6 +323,7 @@ impl PrefillQueue {
                 chunks: p.chunks + 1,
                 logits,
                 ttft,
+                restored: p.restored,
             }))
             .ok();
         ttft.as_secs_f64()

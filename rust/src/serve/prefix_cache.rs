@@ -1,0 +1,751 @@
+//! Radix-tree prefix cache: fork decode sessions from shared-prompt
+//! snapshots.
+//!
+//! The FMM decomposition makes a decode state O(bandwidth·dh + r·dh²) —
+//! independent of how many prompt tokens produced it — so a snapshot
+//! taken at any prompt boundary is a *constant-cost* artifact any later
+//! request can fork from. At serving scale the dominant redundant work
+//! is re-prefilling shared system prompts and few-shot preambles; this
+//! module turns those shared prefixes into a radix tree whose nodes
+//! hold bit-exact FMMS snapshots ([`DecoderSession::snapshot`]
+//! (super::decode::DecoderSession::snapshot) blobs):
+//!
+//! * On a prompted open, the scheduler walks the tree
+//!   ([`lookup`](PrefixCache::lookup)), restores the deepest cached
+//!   ancestor (memcpy-cheap — no GEMMs), and enqueues only the
+//!   uncovered suffix into the prefill queue. TTFT for the K-th stream
+//!   sharing a long system prompt drops by roughly
+//!   `prompt_len / suffix_len`.
+//! * During prompt ingest, boundary snapshots are inserted at
+//!   configurable strides ([`insert`](PrefixCache::insert), deduped by
+//!   [`covered`](PrefixCache::covered) across concurrent same-prefix
+//!   opens).
+//!
+//! # Structure and invariants
+//!
+//! One tree per **namespace** (the front tier passes the tenant id, so
+//! tenants can never fork each other's states — see `PROTOCOL.md`).
+//! Each node stores the token *edge* from its parent (compressed radix:
+//! an edge holds a whole token run, split only when a new prefix
+//! diverges mid-edge), an optional snapshot blob, a per-node hit
+//! counter, an LRU stamp and a **pin count**:
+//!
+//! * **Byte budget** — total resident snapshot bytes never exceed
+//!   `max_bytes` (pinned by `tests/prefix_cache.rs`): inserts evict
+//!   least-recently-used *unpinned* snapshots first and roll themselves
+//!   back if the budget still cannot be met.
+//! * **Pins beat eviction** — [`lookup`](PrefixCache::lookup) pins the
+//!   returned node until [`release`](PrefixCache::release) /
+//!   [`restore_failed`](PrefixCache::restore_failed); a node being
+//!   restored by a live open can never be evicted mid-restore.
+//! * **Interior eviction is structural, not destructive** — evicting an
+//!   interior node's snapshot keeps the node as a pass-through radix
+//!   edge, so deeper descendants stay reachable; a node is pruned from
+//!   the tree only when it has no snapshot, no children and no pins.
+//! * **Failure envelope** — a cached snapshot that fails to restore
+//!   (truncated, fingerprint drift, bit rot) is reported back via
+//!   [`restore_failed`](PrefixCache::restore_failed): the poisoned node
+//!   is evicted and the lookup is re-counted as a miss. The opener
+//!   falls back to a cold prefill; a poisoned cache entry is never a
+//!   client-visible error.
+//!
+//! The tree itself never inspects snapshot bytes — blobs are opaque
+//! here and self-validating at restore time (FMMS magic / fingerprint /
+//! checksum, see [`super::session_store`]).
+
+use std::collections::HashMap;
+
+/// Counters published into `DecodeStats` (`prefix_*` fields) and the
+/// front tier's JSON stats document.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct CacheStats {
+    /// Lookups whose deepest cached ancestor covered the whole prompt
+    /// (all but the final token, which always ingests so the first
+    /// logits row is computed, never stored).
+    pub hits: usize,
+    /// Lookups that restored a strict ancestor (some suffix ingested).
+    pub partial_hits: usize,
+    /// Lookups that found nothing (includes restore failures, which are
+    /// re-counted as misses by [`PrefixCache::restore_failed`]).
+    pub misses: usize,
+    /// Snapshots currently resident — always ≤ the byte budget.
+    pub bytes_resident: usize,
+    /// Snapshots dropped (LRU budget pressure + poisoned-node evictions).
+    pub evictions: usize,
+    /// Boundary snapshots accepted into the tree.
+    pub insertions: usize,
+    /// Snapshot blobs currently resident.
+    pub snapshots: usize,
+    /// Prompt tokens restored from cached snapshots instead of being
+    /// ingested (the scheduler's `prefill_tokens` counts only tokens
+    /// actually ingested; this is the other half of the ledger).
+    pub restored_tokens: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups that restored *something* (full or partial).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.partial_hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            (self.hits + self.partial_hits) as f64 / total as f64
+        }
+    }
+}
+
+/// A successful [`PrefixCache::lookup`]: the deepest cached ancestor of
+/// a prompt. The node is pinned until the caller reports the restore
+/// outcome ([`release`](PrefixCache::release) on success,
+/// [`restore_failed`](PrefixCache::restore_failed) on failure).
+#[derive(Debug, Clone)]
+pub struct PrefixHit {
+    /// Pinned node id — hand it back, don't hold it across opens.
+    pub node: u64,
+    /// Prompt tokens the snapshot covers (the restored session's
+    /// position); the caller ingests only `prompt[depth..]`.
+    pub depth: usize,
+    /// Whether the hit covered everything but the final prompt token
+    /// (counted as a full hit; strict ancestors count as partial).
+    pub full: bool,
+    /// The snapshot blob (cloned out so the tree lock never brackets a
+    /// restore).
+    pub snapshot: Vec<u8>,
+}
+
+struct Node {
+    /// `None` for namespace roots.
+    parent: Option<u64>,
+    /// Token run from the parent (empty only for roots).
+    edge: Vec<i32>,
+    children: Vec<u64>,
+    /// Total prompt tokens from the root (== the snapshot's position).
+    depth: usize,
+    snapshot: Option<Vec<u8>>,
+    /// Times this node was the restored ancestor of a lookup.
+    hits: usize,
+    /// LRU stamp (monotone tick at last insert/hit).
+    last_used: u64,
+    /// Live restores holding this node; pinned nodes are never evicted.
+    pins: u32,
+}
+
+/// Radix tree over prompt-token sequences; nodes hold ref-counted,
+/// LRU-evicted FMMS snapshot blobs under a byte budget. Namespaced per
+/// tenant. See the module docs for the invariants.
+pub struct PrefixCache {
+    max_bytes: usize,
+    nodes: HashMap<u64, Node>,
+    /// Namespace (tenant) → root node id.
+    roots: HashMap<String, u64>,
+    next_id: u64,
+    tick: u64,
+    bytes: usize,
+    snapshots: usize,
+    hits: usize,
+    partial_hits: usize,
+    misses: usize,
+    evictions: usize,
+    insertions: usize,
+    restored_tokens: usize,
+}
+
+fn common_prefix_len(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl PrefixCache {
+    /// `max_bytes` is the resident-snapshot budget; 0 disables the
+    /// cache entirely (every call is a cheap no-op).
+    pub fn new(max_bytes: usize) -> PrefixCache {
+        PrefixCache {
+            max_bytes,
+            nodes: HashMap::new(),
+            roots: HashMap::new(),
+            next_id: 0,
+            tick: 0,
+            bytes: 0,
+            snapshots: 0,
+            hits: 0,
+            partial_hits: 0,
+            misses: 0,
+            evictions: 0,
+            insertions: 0,
+            restored_tokens: 0,
+        }
+    }
+
+    /// Whether a byte budget was configured at all.
+    pub fn enabled(&self) -> bool {
+        self.max_bytes > 0
+    }
+
+    /// Configured byte budget.
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    /// Snapshot bytes currently resident (≤ [`max_bytes`](Self::max_bytes)).
+    pub fn bytes_resident(&self) -> usize {
+        self.bytes
+    }
+
+    /// Snapshot blobs currently resident.
+    pub fn snapshots(&self) -> usize {
+        self.snapshots
+    }
+
+    /// Current counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            partial_hits: self.partial_hits,
+            misses: self.misses,
+            bytes_resident: self.bytes,
+            evictions: self.evictions,
+            insertions: self.insertions,
+            snapshots: self.snapshots,
+            restored_tokens: self.restored_tokens,
+        }
+    }
+
+    fn alloc_node(&mut self, parent: Option<u64>, edge: Vec<i32>, depth: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.nodes.insert(
+            id,
+            Node {
+                parent,
+                edge,
+                children: Vec::new(),
+                depth,
+                snapshot: None,
+                hits: 0,
+                last_used: 0,
+                pins: 0,
+            },
+        );
+        id
+    }
+
+    fn root_of(&mut self, tenant: &str) -> u64 {
+        if let Some(&r) = self.roots.get(tenant) {
+            return r;
+        }
+        let r = self.alloc_node(None, Vec::new(), 0);
+        self.roots.insert(tenant.to_string(), r);
+        r
+    }
+
+    /// Walk `tenant`'s tree along `prompt` and pin the deepest node
+    /// holding a snapshot at depth ≤ `prompt.len() - 1` — the final
+    /// prompt token always ingests so its logits row is *computed* for
+    /// the opener, never stored. Counts a full hit, partial hit or miss.
+    /// Tenancy is the namespace key: a prompt never matches another
+    /// tenant's nodes.
+    pub fn lookup(&mut self, tenant: &str, prompt: &[i32]) -> Option<PrefixHit> {
+        if !self.enabled() {
+            return None;
+        }
+        let limit = prompt.len().saturating_sub(1);
+        let mut best: Option<u64> = None;
+        if let Some(&root) = self.roots.get(tenant) {
+            let mut cur = root;
+            loop {
+                let node = &self.nodes[&cur];
+                if node.snapshot.is_some() && node.depth > 0 {
+                    best = Some(cur);
+                }
+                let depth = node.depth;
+                let mut next = None;
+                for &c in &node.children {
+                    let edge = &self.nodes[&c].edge;
+                    if depth + edge.len() <= limit
+                        && prompt[depth..depth + edge.len()] == *edge
+                    {
+                        next = Some(c);
+                        break;
+                    }
+                }
+                match next {
+                    Some(c) => cur = c,
+                    None => break,
+                }
+            }
+        }
+        let Some(id) = best else {
+            self.misses += 1;
+            return None;
+        };
+        self.tick += 1;
+        let tick = self.tick;
+        let node = self.nodes.get_mut(&id).expect("walked node exists");
+        node.hits += 1;
+        node.last_used = tick;
+        node.pins += 1;
+        let full = node.depth == limit;
+        if full {
+            self.hits += 1;
+        } else {
+            self.partial_hits += 1;
+        }
+        Some(PrefixHit {
+            node: id,
+            depth: node.depth,
+            full,
+            snapshot: node.snapshot.clone().expect("best holds a snapshot"),
+        })
+    }
+
+    /// Unpin a node after its snapshot restored successfully.
+    pub fn release(&mut self, node: u64) {
+        if let Some(n) = self.nodes.get_mut(&node) {
+            n.pins = n.pins.saturating_sub(1);
+        }
+    }
+
+    /// Record that `hit` restored `tokens` prompt tokens into a live
+    /// session (the `restored_tokens` side of the ingest ledger).
+    pub fn note_restored(&mut self, tokens: usize) {
+        self.restored_tokens += tokens;
+    }
+
+    /// The failure envelope: `hit`'s snapshot did not restore
+    /// (truncated, fingerprint drift, bit rot). The poisoned node is
+    /// unpinned and evicted, and the lookup is re-counted as a miss —
+    /// the caller falls back to a cold prefill and the client never
+    /// sees an error.
+    pub fn restore_failed(&mut self, hit: &PrefixHit) {
+        if hit.full {
+            self.hits = self.hits.saturating_sub(1);
+        } else {
+            self.partial_hits = self.partial_hits.saturating_sub(1);
+        }
+        self.misses += 1;
+        self.release(hit.node);
+        self.evict_snapshot(hit.node);
+    }
+
+    /// Whether `tenant` already caches a snapshot at exactly `prefix` —
+    /// the dedupe check concurrent same-prefix opens run *before*
+    /// serializing a boundary snapshot.
+    pub fn covered(&self, tenant: &str, prefix: &[i32]) -> bool {
+        self.node_at(tenant, prefix)
+            .map_or(false, |id| self.nodes[&id].snapshot.is_some())
+    }
+
+    /// Exact-prefix node lookup (no pin, no stats).
+    fn node_at(&self, tenant: &str, prefix: &[i32]) -> Option<u64> {
+        let mut cur = *self.roots.get(tenant)?;
+        let mut pos = 0usize;
+        while pos < prefix.len() {
+            let node = &self.nodes[&cur];
+            let mut next = None;
+            for &c in &node.children {
+                let edge = &self.nodes[&c].edge;
+                if pos + edge.len() <= prefix.len() && prefix[pos..pos + edge.len()] == *edge
+                {
+                    next = Some(c);
+                    break;
+                }
+            }
+            cur = next?;
+            pos += self.nodes[&cur].edge.len();
+        }
+        Some(cur)
+    }
+
+    /// Insert a boundary snapshot for `tenant` at `prefix`, splitting
+    /// radix edges as needed. Returns `false` without touching the tree
+    /// when the cache is disabled, the prefix is empty, the node is
+    /// already covered (dedupe), or the blob alone exceeds the budget;
+    /// also rolls the insert back (and returns `false`) if evicting
+    /// every unpinned LRU snapshot still cannot fit it. On success the
+    /// budget is enforced before returning: `bytes_resident ≤ max_bytes`.
+    pub fn insert(&mut self, tenant: &str, prefix: &[i32], snapshot: Vec<u8>) -> bool {
+        if !self.enabled() || prefix.is_empty() || snapshot.len() > self.max_bytes {
+            return false;
+        }
+        let root = self.root_of(tenant);
+        let mut cur = root;
+        let mut pos = 0usize;
+        while pos < prefix.len() {
+            let children = self.nodes[&cur].children.clone();
+            let mut advanced = false;
+            for c in children {
+                let (elen, common) = {
+                    let edge = &self.nodes[&c].edge;
+                    if edge[0] != prefix[pos] {
+                        continue;
+                    }
+                    (edge.len(), common_prefix_len(edge, &prefix[pos..]))
+                };
+                if common == elen {
+                    cur = c;
+                } else {
+                    cur = self.split_edge(c, common);
+                }
+                pos += common;
+                advanced = true;
+                break;
+            }
+            if !advanced {
+                let leaf = self.alloc_node(Some(cur), prefix[pos..].to_vec(), prefix.len());
+                self.nodes.get_mut(&cur).expect("parent exists").children.push(leaf);
+                cur = leaf;
+                pos = prefix.len();
+            }
+        }
+        let len = snapshot.len();
+        self.tick += 1;
+        let tick = self.tick;
+        {
+            let node = self.nodes.get_mut(&cur).expect("walked node exists");
+            if node.snapshot.is_some() {
+                return false;
+            }
+            node.snapshot = Some(snapshot);
+            node.last_used = tick;
+        }
+        self.bytes += len;
+        self.snapshots += 1;
+        self.insertions += 1;
+        if !self.enforce_budget(cur) {
+            // Every other snapshot is pinned: roll this insert back so
+            // the budget contract holds.
+            self.insertions -= 1;
+            self.evict_snapshot(cur);
+            // The rollback is bookkeeping, not churn pressure.
+            self.evictions -= 1;
+            return false;
+        }
+        true
+    }
+
+    /// Split `child`'s edge at `common` tokens, interposing a structural
+    /// node; returns the new interior node (at the split depth).
+    fn split_edge(&mut self, child: u64, common: usize) -> u64 {
+        let (parent, head, tail, child_depth) = {
+            let c = &self.nodes[&child];
+            (
+                c.parent.expect("split target is never a root"),
+                c.edge[..common].to_vec(),
+                c.edge[common..].to_vec(),
+                c.depth,
+            )
+        };
+        let mid_depth = child_depth - tail.len();
+        let mid = self.alloc_node(Some(parent), head, mid_depth);
+        {
+            let p = self.nodes.get_mut(&parent).expect("parent exists");
+            let slot = p
+                .children
+                .iter_mut()
+                .find(|c| **c == child)
+                .expect("child is linked from its parent");
+            *slot = mid;
+        }
+        {
+            let c = self.nodes.get_mut(&child).expect("child exists");
+            c.edge = tail;
+            c.parent = Some(mid);
+        }
+        self.nodes.get_mut(&mid).expect("just allocated").children.push(child);
+        mid
+    }
+
+    /// Evict unpinned LRU snapshots (never `keep`) until the budget
+    /// holds; `false` if pins make that impossible.
+    fn enforce_budget(&mut self, keep: u64) -> bool {
+        while self.bytes > self.max_bytes {
+            let victim = self
+                .nodes
+                .iter()
+                .filter(|(id, n)| **id != keep && n.snapshot.is_some() && n.pins == 0)
+                .min_by_key(|(_, n)| n.last_used)
+                .map(|(id, _)| *id);
+            match victim {
+                Some(v) => self.evict_snapshot(v),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Drop `node`'s snapshot (if any). The node survives as a
+    /// structural radix edge while it still has children — descendants
+    /// stay reachable — and is pruned (with any newly childless
+    /// structural ancestors) once nothing depends on it.
+    fn evict_snapshot(&mut self, node: u64) {
+        let Some(n) = self.nodes.get_mut(&node) else { return };
+        let Some(snap) = n.snapshot.take() else { return };
+        self.bytes -= snap.len();
+        self.snapshots -= 1;
+        self.evictions += 1;
+        self.prune_up(node);
+    }
+
+    /// Remove `node` and its chain of now-useless ancestors: only nodes
+    /// with no snapshot, no children, no pins and a parent are removed.
+    fn prune_up(&mut self, mut node: u64) {
+        loop {
+            let (parent, removable) = {
+                let Some(n) = self.nodes.get(&node) else { return };
+                (
+                    n.parent,
+                    n.parent.is_some()
+                        && n.snapshot.is_none()
+                        && n.children.is_empty()
+                        && n.pins == 0,
+                )
+            };
+            if !removable {
+                return;
+            }
+            let parent = parent.expect("removable requires a parent");
+            self.nodes.remove(&node);
+            let p = self.nodes.get_mut(&parent).expect("parent exists");
+            p.children.retain(|c| *c != node);
+            node = parent;
+        }
+    }
+
+    /// Per-node hit counter (observability/tests); `None` for unknown
+    /// ids.
+    pub fn node_hits(&self, node: u64) -> Option<usize> {
+        self.nodes.get(&node).map(|n| n.hits)
+    }
+
+    /// Sorted depths of every snapshot currently cached for `tenant` —
+    /// how tests pin reachability across interior evictions.
+    pub fn cached_depths(&self, tenant: &str) -> Vec<usize> {
+        let mut out = Vec::new();
+        let Some(&root) = self.roots.get(tenant) else { return out };
+        let mut stack = vec![root];
+        while let Some(id) = stack.pop() {
+            let n = &self.nodes[&id];
+            if n.snapshot.is_some() {
+                out.push(n.depth);
+            }
+            stack.extend(&n.children);
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Deterministic fault injection (the `FaultPlan` idiom): flip one
+    /// byte inside the snapshot cached at exactly `prefix`, so the next
+    /// fork from it exercises the restore-failure envelope (poisoned
+    /// node evicted, opener falls back to cold prefill). Returns whether
+    /// a snapshot was poisoned. The FMMS checksum guarantees the flip is
+    /// detected.
+    pub fn poison(&mut self, tenant: &str, prefix: &[i32]) -> bool {
+        let Some(id) = self.node_at(tenant, prefix) else { return false };
+        let Some(n) = self.nodes.get_mut(&id) else { return false };
+        match &mut n.snapshot {
+            Some(snap) if !snap.is_empty() => {
+                let mid = snap.len() / 2;
+                snap[mid] ^= 0x40;
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(n: usize, fill: u8) -> Vec<u8> {
+        vec![fill; n]
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut c = PrefixCache::new(0);
+        assert!(!c.enabled());
+        assert!(!c.insert("t", &[1, 2], blob(4, 1)));
+        assert!(c.lookup("t", &[1, 2, 3]).is_none());
+        assert_eq!(c.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn lookup_restores_deepest_ancestor_and_caps_at_last_token() {
+        let mut c = PrefixCache::new(1 << 20);
+        assert!(c.insert("t", &[1, 2], blob(8, 1)));
+        assert!(c.insert("t", &[1, 2, 3, 4], blob(8, 2)));
+        // Dedupe: a second insert at the same prefix is refused.
+        assert!(!c.insert("t", &[1, 2], blob(8, 9)));
+
+        // Deepest usable ancestor of [1,2,3,4,9,9]: depth 4 (partial).
+        let hit = c.lookup("t", &[1, 2, 3, 4, 9, 9]).unwrap();
+        assert_eq!((hit.depth, hit.full), (4, false));
+        assert_eq!(hit.snapshot, blob(8, 2));
+        c.release(hit.node);
+
+        // A prompt of exactly [1,2,3,4,x]: depth-4 node covers all but
+        // the final token — a *full* hit.
+        let hit = c.lookup("t", &[1, 2, 3, 4, 7]).unwrap();
+        assert_eq!((hit.depth, hit.full), (4, true));
+        c.release(hit.node);
+
+        // The depth-4 snapshot covers the whole prompt [1,2,3,4]: it
+        // must NOT be used (the final token always ingests); depth 2 is
+        // the deepest usable ancestor.
+        let hit = c.lookup("t", &[1, 2, 3, 4]).unwrap();
+        assert_eq!(hit.depth, 2);
+        c.release(hit.node);
+
+        // Diverging mid-edge finds only the shallower ancestor.
+        let hit = c.lookup("t", &[1, 2, 3, 9, 9]).unwrap();
+        assert_eq!(hit.depth, 2);
+        c.release(hit.node);
+
+        assert!(c.lookup("t", &[5, 6, 7]).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.partial_hits, s.misses), (1, 3, 1));
+        assert!((s.hit_rate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tenants_never_share_snapshots() {
+        let mut c = PrefixCache::new(1 << 20);
+        assert!(c.insert("alice", &[1, 2, 3], blob(16, 1)));
+        assert!(c.lookup("bob", &[1, 2, 3, 4]).is_none());
+        assert_eq!(c.stats().misses, 1);
+        let hit = c.lookup("alice", &[1, 2, 3, 4]).unwrap();
+        assert_eq!(hit.depth, 3);
+        c.release(hit.node);
+        assert!(c.covered("alice", &[1, 2, 3]));
+        assert!(!c.covered("bob", &[1, 2, 3]));
+    }
+
+    #[test]
+    fn byte_budget_holds_under_churn_with_lru_eviction() {
+        let mut c = PrefixCache::new(100);
+        assert!(c.insert("t", &[1], blob(40, 1)));
+        assert!(c.insert("t", &[2], blob(40, 2)));
+        // Touch [1] so [2] becomes the LRU victim.
+        let hit = c.lookup("t", &[1, 9]).unwrap();
+        c.release(hit.node);
+        assert!(c.insert("t", &[3], blob(40, 3)));
+        let s = c.stats();
+        assert!(s.bytes_resident <= 100, "budget violated: {}", s.bytes_resident);
+        assert_eq!(s.evictions, 1);
+        assert!(c.covered("t", &[1]), "recently used survived");
+        assert!(!c.covered("t", &[2]), "LRU victim evicted");
+        assert!(c.covered("t", &[3]));
+        // A blob larger than the whole budget is refused outright.
+        assert!(!c.insert("t", &[4], blob(101, 4)));
+        assert!(c.stats().bytes_resident <= 100);
+    }
+
+    #[test]
+    fn pinned_nodes_survive_eviction_pressure() {
+        let mut c = PrefixCache::new(100);
+        assert!(c.insert("t", &[1], blob(60, 1)));
+        let hit = c.lookup("t", &[1, 9]).unwrap();
+        // Pinned: a new insert that would need [1]'s bytes must fail
+        // (and roll itself back) rather than evict mid-restore.
+        assert!(!c.insert("t", &[2], blob(60, 2)));
+        assert!(c.covered("t", &[1]), "pinned node evicted mid-restore");
+        assert!(!c.covered("t", &[2]), "over-budget insert not rolled back");
+        assert!(c.stats().bytes_resident <= 100);
+        // Released, the same insert succeeds by evicting [1].
+        c.release(hit.node);
+        assert!(c.insert("t", &[2], blob(60, 2)));
+        assert!(!c.covered("t", &[1]));
+        assert!(c.covered("t", &[2]));
+        assert!(c.stats().bytes_resident <= 100);
+    }
+
+    #[test]
+    fn interior_eviction_keeps_descendants_reachable() {
+        let mut c = PrefixCache::new(1 << 20);
+        assert!(c.insert("t", &[1, 2], blob(8, 1)));
+        assert!(c.insert("t", &[1, 2, 3, 4], blob(8, 2)));
+        assert_eq!(c.cached_depths("t"), vec![2, 4]);
+
+        // Evict the interior node's snapshot via budget pressure... or
+        // directly through the failure envelope.
+        let hit = c.lookup("t", &[1, 2, 9]).unwrap();
+        assert_eq!(hit.depth, 2);
+        c.restore_failed(&hit);
+        // The deep descendant is still reachable through the now
+        // structural interior node.
+        assert_eq!(c.cached_depths("t"), vec![4]);
+        let hit = c.lookup("t", &[1, 2, 3, 4, 9]).unwrap();
+        assert_eq!(hit.depth, 4);
+        c.release(hit.node);
+
+        // Evicting the leaf prunes it (and any structural chain above).
+        let hit = c.lookup("t", &[1, 2, 3, 4, 9]).unwrap();
+        c.restore_failed(&hit);
+        assert_eq!(c.cached_depths("t"), Vec::<usize>::new());
+        assert!(c.lookup("t", &[1, 2, 3, 4, 9]).is_none());
+        // The two failed restores were re-counted as misses and the
+        // final empty lookup is a third; the released (successful)
+        // lookup in the middle stays counted as a hit.
+        let s = c.stats();
+        assert_eq!((s.hits, s.partial_hits), (1, 0));
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.snapshots, 0);
+        assert_eq!(s.bytes_resident, 0);
+    }
+
+    #[test]
+    fn radix_edges_split_on_divergence() {
+        let mut c = PrefixCache::new(1 << 20);
+        assert!(c.insert("t", &[1, 2, 3, 4], blob(8, 1)));
+        // Diverges after [1,2]: the edge must split so both survive.
+        assert!(c.insert("t", &[1, 2, 7, 8], blob(8, 2)));
+        assert_eq!(c.cached_depths("t"), vec![4, 4]);
+        let hit = c.lookup("t", &[1, 2, 3, 4, 9]).unwrap();
+        assert_eq!(hit.snapshot, blob(8, 1));
+        c.release(hit.node);
+        let hit = c.lookup("t", &[1, 2, 7, 8, 9]).unwrap();
+        assert_eq!(hit.snapshot, blob(8, 2));
+        c.release(hit.node);
+        // A snapshot can land on the structural split node itself.
+        assert!(c.insert("t", &[1, 2], blob(8, 3)));
+        assert_eq!(c.cached_depths("t"), vec![2, 4, 4]);
+        let hit = c.lookup("t", &[1, 2, 9]).unwrap();
+        assert_eq!((hit.depth, hit.snapshot.clone()), (2, blob(8, 3)));
+        c.release(hit.node);
+    }
+
+    #[test]
+    fn poison_flips_a_byte_in_place() {
+        let mut c = PrefixCache::new(1 << 20);
+        assert!(c.insert("t", &[1, 2], blob(8, 1)));
+        assert!(c.poison("t", &[1, 2]));
+        assert!(!c.poison("t", &[9]), "unknown prefix");
+        let hit = c.lookup("t", &[1, 2, 3]).unwrap();
+        assert_ne!(hit.snapshot, blob(8, 1), "poison changed the blob");
+        c.restore_failed(&hit);
+        assert!(!c.covered("t", &[1, 2]), "poisoned node evicted");
+    }
+
+    #[test]
+    fn per_node_hit_counters_accumulate() {
+        let mut c = PrefixCache::new(1 << 20);
+        assert!(c.insert("t", &[5, 6], blob(8, 1)));
+        let mut node = 0;
+        for _ in 0..3 {
+            let hit = c.lookup("t", &[5, 6, 7]).unwrap();
+            node = hit.node;
+            c.release(hit.node);
+        }
+        assert_eq!(c.node_hits(node), Some(3));
+        assert_eq!(c.node_hits(u64::MAX), None);
+    }
+
+    #[test]
+    fn note_restored_feeds_the_ledger() {
+        let mut c = PrefixCache::new(1 << 20);
+        c.note_restored(512);
+        c.note_restored(64);
+        assert_eq!(c.stats().restored_tokens, 576);
+    }
+}

@@ -139,6 +139,18 @@ pub trait DraftSource: Send {
     /// token on is clipped by the caller.
     fn propose(&mut self, k: usize) -> Vec<i32>;
 
+    /// The bounded committed-token history this source proposes from —
+    /// what gets persisted as the optional `draft` leaf in FMMS
+    /// snapshots, so a spilled or prefix-cache-forked speculative
+    /// stream restores with its priming intact and proposes from token
+    /// one. Sources whose state is not a token list (e.g.
+    /// [`ModelDraft`], whose state is a whole session) return the empty
+    /// default: their restore falls back to re-priming from
+    /// self-generated history, which is advisory-only anyway.
+    fn history(&self) -> &[i32] {
+        &[]
+    }
+
     /// Short name for logs and stats.
     fn name(&self) -> &'static str;
 }
@@ -220,6 +232,12 @@ impl DraftSource for NGramDraft {
 
     fn name(&self) -> &'static str {
         "ngram"
+    }
+
+    /// Already bounded by `max_history`, so the persisted draft leaf is
+    /// O(max_history) — constant per stream, like the decode state.
+    fn history(&self) -> &[i32] {
+        &self.history
     }
 }
 
@@ -567,12 +585,12 @@ impl SpeculativeSession {
     /// consistent stream. No lookahead can be in flight mid-prompt; any
     /// stale lookahead (restored streams) is discarded first.
     ///
-    /// Caveat: draft history lives only in RAM — a stream that spills
-    /// and restores comes back with a *fresh* draft source (tokens are
-    /// unaffected; drafts are advisory), so under a residency cap the
-    /// propose-from-token-one benefit lasts until the first spill and
-    /// then rebuilds from self-generated history. Persisting draft
-    /// history in the snapshot is a ROADMAP follow-on.
+    /// Draft history survives spills: snapshots taken at the committed
+    /// boundary carry a bounded `draft` leaf
+    /// ([`snapshot_committed`](Self::snapshot_committed)), and the
+    /// residency manager re-primes the fresh draft source from it on
+    /// restore ([`prime_draft`](Self::prime_draft)) — so a spilled or
+    /// prefix-cache-forked stream keeps proposing from token one.
     pub fn prefill_chunk(
         &mut self,
         tokens: &[i32],
@@ -625,12 +643,25 @@ impl SpeculativeSession {
     }
 
     /// Snapshot at the committed boundary — what the residency manager
-    /// spills. Unconfirmed lookahead is recomputed after restore rather
-    /// than serialized, so a snapshot never captures mid-speculation
-    /// state and restores into a plain *or* speculative session alike.
+    /// spills and the prefix cache forks from. Unconfirmed lookahead is
+    /// recomputed after restore rather than serialized, so a snapshot
+    /// never captures mid-speculation state and restores into a plain
+    /// *or* speculative session alike. The draft source's bounded
+    /// history rides along as an optional trailing `draft` leaf
+    /// (ignored by plain restores; fed back through
+    /// [`prime_draft`](Self::prime_draft) by speculative ones), so
+    /// forked/restored streams propose from their first generated token.
     pub fn snapshot_committed(&mut self) -> Result<Vec<u8>> {
         self.sync_to_committed()?;
-        self.sess.snapshot()
+        self.sess.snapshot_with_draft(self.draft.history())
+    }
+
+    /// Re-prime the draft source with committed history recovered from
+    /// a snapshot's `draft` leaf (or any other trusted prefix). Purely
+    /// advisory — priming never changes the token stream, only how soon
+    /// useful proposals start.
+    pub fn prime_draft(&mut self, history: &[i32]) {
+        self.draft.observe_many(history);
     }
 
     /// Unwrap into the plain session, rewound to the committed boundary.

@@ -1,0 +1,425 @@
+//! Integration: radix-tree prefix cache (`serve::prefix_cache`).
+//!
+//! Pins the subsystem's one hard promise — forking a stream from a
+//! cached prefix snapshot is *bit-identical* to ingesting the whole
+//! prompt cold — across a grid of {feature-map sets} × {bandwidths} ×
+//! {residency caps} × {speculation on/off}, all through the
+//! `DecodeServer`. Also pins the byte budget (`bytes_resident` never
+//! exceeds `prefix_cache_bytes`, evictions fire under churn), tenant
+//! namespace isolation (snapshots never cross tenants), concurrent
+//! same-prefix dedupe, and the failure envelope: a corrupt cached
+//! snapshot is a cache *miss* (cold fallback + node eviction), never a
+//! client error, and injected spill-store faults on cache-forked
+//! streams disconnect exactly the victims (`ci.sh --chaos`).
+//!
+//! Everything here is host-side — no artifacts required, never skips.
+
+use std::sync::Arc;
+
+use fmmformer::attention::FeatureMap;
+use fmmformer::serve::decode::{
+    greedy_argmax, DecodeConfig, DecodeServer, DecodeServerConfig, DecodeStats,
+    DecoderSession, HostDecoder, OpenOptions,
+};
+use fmmformer::serve::prefill::deterministic_prompt;
+use fmmformer::serve::session_store::{FaultyStore, MemStore};
+use fmmformer::serve::speculative::SpeculationConfig;
+
+fn tiny_config(bandwidth: usize, kernels: &[FeatureMap]) -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 16,
+        vocab: 32,
+        bandwidth,
+        kernels: kernels.to_vec(),
+        w1: 0.6,
+        w2: 0.9,
+        seed: 3,
+    }
+}
+
+/// N prompts sharing one prefix, each with a short unique suffix.
+fn shared_prompts(n: usize, shared: usize, suffix: usize, vocab: usize) -> Vec<Vec<i32>> {
+    let system = deterministic_prompt(shared, vocab, 17);
+    (0..n)
+        .map(|s| {
+            let mut p = system.clone();
+            p.extend(deterministic_prompt(suffix, vocab, 400 + s as u64));
+            p
+        })
+        .collect()
+}
+
+fn server_config(cache_bytes: usize, cap: usize, spec: bool) -> DecodeServerConfig {
+    DecodeServerConfig {
+        prefill_chunk: 4,
+        prefix_cache_bytes: cache_bytes,
+        prefix_snapshot_stride: 4,
+        max_resident_sessions: cap,
+        speculation: if spec { SpeculationConfig::NGram } else { SpeculationConfig::Off },
+        draft_window: 3,
+        ..Default::default()
+    }
+}
+
+/// Open every prompt, then greedy-decode `steps` tokens round-robin
+/// (interleaving keeps a residency cap churning mid-stream). Returns
+/// each stream's greedy tokens and the server stats.
+fn run_streams(
+    cfg: &DecodeConfig,
+    prompts: &[Vec<i32>],
+    server_cfg: DecodeServerConfig,
+    steps: usize,
+) -> (Vec<Vec<i32>>, DecodeStats) {
+    let server = DecodeServer::start(HostDecoder::new(cfg.clone()).unwrap(), server_cfg);
+    let client = server.client();
+    let mut streams = Vec::with_capacity(prompts.len());
+    for prompt in prompts {
+        let (stream, out) = client.open_stream_with_prompt(prompt).unwrap();
+        assert_eq!(out.prompt_tokens, prompt.len());
+        let tok = greedy_argmax(&out.logits);
+        streams.push((stream, tok, vec![tok]));
+    }
+    for _ in 0..steps {
+        for (stream, tok, chosen) in streams.iter_mut() {
+            *tok = greedy_argmax(&stream.step(*tok).unwrap().logits);
+            chosen.push(*tok);
+        }
+    }
+    let tokens = streams.iter().map(|(_, _, c)| c.clone()).collect();
+    drop(streams);
+    drop(client);
+    (tokens, server.shutdown())
+}
+
+/// ISSUE acceptance grid: warm forked streams are bit-identical to the
+/// cold run across kernels × bandwidths × residency caps × speculation.
+#[test]
+fn warm_forks_are_bit_identical_across_kernel_bandwidth_cap_speculation_grid() {
+    let kernel_sets: [&[FeatureMap]; 2] =
+        [&[FeatureMap::Elu], &[FeatureMap::Elu, FeatureMap::EluNeg, FeatureMap::Tanh]];
+    for kernels in kernel_sets {
+        for bandwidth in [1usize, 4] {
+            for cap in [0usize, 2] {
+                for spec in [false, true] {
+                    let cfg = tiny_config(bandwidth, kernels);
+                    let prompts = shared_prompts(4, 20, 4, cfg.vocab);
+                    let tag = format!(
+                        "kernels {kernels:?} bw {bandwidth} cap {cap} spec {spec}"
+                    );
+                    let (cold, cold_stats) =
+                        run_streams(&cfg, &prompts, server_config(0, cap, spec), 6);
+                    assert_eq!(
+                        cold_stats.prefix_hits + cold_stats.prefix_partial_hits,
+                        0,
+                        "{tag}: cache-off server reported hits"
+                    );
+                    let (warm, warm_stats) =
+                        run_streams(&cfg, &prompts, server_config(1 << 20, cap, spec), 6);
+                    assert_eq!(
+                        warm, cold,
+                        "{tag}: forked streams diverged from the cold run"
+                    );
+                    assert!(
+                        warm_stats.prefix_hits + warm_stats.prefix_partial_hits
+                            >= prompts.len() - 1,
+                        "{tag}: every open after the first must hit: {warm_stats:?}"
+                    );
+                    assert!(
+                        warm_stats.prefix_restored_tokens >= (prompts.len() - 1) * 20,
+                        "{tag}: the 20-token shared prefix must be restored, \
+                         not re-ingested: {warm_stats:?}"
+                    );
+                    // Ledger honesty: restored tokens never count as
+                    // prefill work.
+                    assert_eq!(
+                        warm_stats.prefill_tokens + warm_stats.prefix_restored_tokens,
+                        cold_stats.prefill_tokens,
+                        "{tag}: ingested + restored must equal the cold \
+                         run's ingested total"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The byte budget is a hard cap: churning distinct prompts through a
+/// budget a couple of snapshots wide evicts (LRU) and never lets
+/// `bytes_resident` overshoot — pinned mid-restore or not.
+#[test]
+fn resident_bytes_never_exceed_the_configured_budget() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = cfg.vocab;
+    // Size one depth-4 snapshot (the stride boundary the scheduler
+    // inserts at) and make the budget 2.5 snapshots wide.
+    let snap_bytes = {
+        let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+        let mut sess = DecoderSession::new(model);
+        for t in 0..4 {
+            sess.step(t).unwrap();
+        }
+        sess.snapshot().unwrap().len()
+    };
+    let budget = snap_bytes * 5 / 2;
+
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig {
+            prefill_chunk: 4,
+            prefix_cache_bytes: budget,
+            prefix_snapshot_stride: 4,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let cache = server.prefix_cache();
+    for s in 0..10u64 {
+        // A distinct first token per prompt: every prompt takes its own
+        // branch off the root, so each open inserts its own snapshot.
+        let mut prompt = vec![s as i32];
+        prompt.extend(deterministic_prompt(7, vocab, 100 + s));
+        let (stream, _) = client.open_stream_with_prompt(&prompt).unwrap();
+        drop(stream);
+        let c = cache.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(
+            c.bytes_resident() <= budget,
+            "after open {s}: {} resident bytes exceed the {budget}-byte budget",
+            c.bytes_resident()
+        );
+    }
+    drop(client);
+    let stats = server.shutdown();
+    assert!(stats.prefix_bytes_resident <= budget, "{stats:?}");
+    assert!(
+        stats.prefix_evictions > 0,
+        "10 distinct prompts through a {budget}-byte budget must evict: {stats:?}"
+    );
+    assert!(stats.prefix_insertions >= 10, "{stats:?}");
+}
+
+/// Tenants never share snapshots: the same prompt under two tenant tags
+/// is two cold ingests, and poisoning one tenant's cached node leaves
+/// the other tenant's hits (and bytes) untouched.
+#[test]
+fn tenants_never_share_cached_prefixes() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = cfg.vocab;
+    let prompt = deterministic_prompt(12, vocab, 23);
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig {
+            prefill_chunk: 4,
+            prefix_cache_bytes: 1 << 20,
+            prefix_snapshot_stride: 4,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let open = |tenant: &str| {
+        let opts = OpenOptions {
+            tenant: Some(Arc::from(tenant)),
+            ..OpenOptions::default()
+        };
+        let (stream, out) = client.open_stream_with_prompt_opts(&prompt, opts).unwrap();
+        drop(stream);
+        greedy_argmax(&out.logits)
+    };
+
+    // First open per tenant is a miss; the second hits its own tree.
+    let picks = [open("a"), open("a"), open("b"), open("b")];
+    assert!(picks.iter().all(|&p| p == picks[0]), "same prompt, same pick");
+    {
+        let cache = server.prefix_cache();
+        let mut c = cache.lock().unwrap_or_else(|p| p.into_inner());
+        let s = c.stats();
+        assert_eq!(s.misses, 2, "one cold ingest per tenant: {s:?}");
+        assert_eq!(s.hits + s.partial_hits, 2, "one hit per tenant: {s:?}");
+        assert!(!c.cached_depths("a").is_empty());
+        assert!(!c.cached_depths("b").is_empty());
+        // Corrupt tenant a's deepest node; tenant b must not notice.
+        assert!(c.poison("a", &prompt[..8]), "tenant a's node exists");
+    }
+    let _ = open("a"); // poisoned restore -> cold fallback (miss)
+    let _ = open("b"); // untouched -> hit
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.prefix_misses, 3, "{stats:?}");
+    assert_eq!(stats.prefix_hits + stats.prefix_partial_hits, 3, "{stats:?}");
+    assert!(stats.prefix_evictions >= 1, "poisoned node must be evicted: {stats:?}");
+}
+
+/// Failure envelope: a corrupt cached snapshot is a cache miss — the
+/// open falls back to cold prefill (bit-identical tokens, no client
+/// error), the bad node is evicted, and the cache self-heals on the
+/// fallback's own insertions.
+#[test]
+fn poisoned_snapshot_restore_is_a_cache_miss_not_a_client_error() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu, FeatureMap::Tanh]);
+    let vocab = cfg.vocab;
+    let prompt = deterministic_prompt(12, vocab, 31);
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig {
+            prefill_chunk: 4,
+            prefix_cache_bytes: 1 << 20,
+            prefix_snapshot_stride: 4,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let open_and_decode = || {
+        let (stream, out) = client.open_stream_with_prompt(&prompt).unwrap();
+        let mut tok = greedy_argmax(&out.logits);
+        let mut chosen = vec![tok];
+        for _ in 0..5 {
+            tok = greedy_argmax(&stream.step(tok).unwrap().logits);
+            chosen.push(tok);
+        }
+        chosen
+    };
+
+    let cold = open_and_decode(); // miss, seeds nodes at depths 4 and 8
+    let hit = open_and_decode(); // forks from depth 8
+    assert_eq!(hit, cold);
+    {
+        let cache = server.prefix_cache();
+        let mut c = cache.lock().unwrap_or_else(|p| p.into_inner());
+        assert_eq!(c.stats().hits + c.stats().partial_hits, 1);
+        assert!(c.poison("", &prompt[..8]), "depth-8 node must exist");
+    }
+    // The poisoned restore must not surface to the client in any form.
+    let fallback = open_and_decode();
+    assert_eq!(fallback, cold, "cold fallback after a bad restore diverged");
+    // The fallback re-ingested and re-inserted, so the next open hits
+    // a fresh, healthy snapshot again.
+    let healed = open_and_decode();
+    assert_eq!(healed, cold);
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(
+        stats.prefix_misses, 2,
+        "the poisoned restore must re-count as a miss: {stats:?}"
+    );
+    assert_eq!(stats.prefix_hits + stats.prefix_partial_hits, 2, "{stats:?}");
+    assert!(stats.prefix_evictions >= 1, "bad node must be evicted: {stats:?}");
+}
+
+/// Concurrent same-prefix opens dedupe: the radix tree holds one
+/// snapshot per boundary no matter how many racing opens cross it, and
+/// every racer's tokens agree.
+#[test]
+fn concurrent_same_prefix_opens_share_one_set_of_snapshots() {
+    let cfg = tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = cfg.vocab;
+    let prompt = deterministic_prompt(12, vocab, 41);
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg).unwrap(),
+        DecodeServerConfig {
+            prefill_chunk: 4,
+            prefix_cache_bytes: 1 << 20,
+            prefix_snapshot_stride: 4,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let mut threads = Vec::new();
+    for _ in 0..4 {
+        let c = client.clone();
+        let p = prompt.clone();
+        threads.push(std::thread::spawn(move || {
+            let (stream, out) = c.open_stream_with_prompt(&p).unwrap();
+            let mut tok = greedy_argmax(&out.logits);
+            let mut chosen = vec![tok];
+            for _ in 0..4 {
+                tok = greedy_argmax(&stream.step(tok).unwrap().logits);
+                chosen.push(tok);
+            }
+            chosen
+        }));
+    }
+    let runs: Vec<Vec<i32>> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    assert!(runs.iter().all(|r| r == &runs[0]), "racing opens diverged: {runs:?}");
+    drop(client);
+    let stats = server.shutdown();
+    // Chunk 4 over 12 tokens inserts at depths 4 and 8 (12 is the last
+    // chunk): one snapshot per boundary, however many opens raced.
+    assert!(
+        stats.prefix_snapshots <= 2,
+        "racing same-prefix opens must dedupe insertions: {stats:?}"
+    );
+    assert_eq!(
+        stats.prefix_hits + stats.prefix_partial_hits + stats.prefix_misses,
+        4,
+        "{stats:?}"
+    );
+}
+
+/// Chaos (`ci.sh --chaos`): injected spill-store read faults on
+/// cache-forked streams disconnect exactly the victims — surviving
+/// forks keep decoding bit-identically and the server keeps serving.
+#[test]
+fn spill_faults_on_cache_forked_streams_disconnect_only_victims() {
+    let mk_cfg = || tiny_config(4, &[FeatureMap::Elu]);
+    let vocab = 32;
+    let prompts = shared_prompts(4, 12, 2, vocab);
+    let steps = 8usize;
+
+    // Unfaulted reference: same cache-forked traffic, no residency cap.
+    let (reference, ref_stats) =
+        run_streams(&mk_cfg(), &prompts, server_config(1 << 20, 0, false), steps);
+    assert!(ref_stats.prefix_restored_tokens > 0, "streams must fork: {ref_stats:?}");
+
+    // Faulted run: cap 2 forces spill/restore churn; every 3rd
+    // successful spill read fails.
+    let server = DecodeServer::start_with_store(
+        HostDecoder::new(mk_cfg()).unwrap(),
+        server_config(1 << 20, 2, false),
+        Box::new(FaultyStore::new(Box::new(MemStore::new()), 0, 3)),
+    );
+    let client = server.client();
+    let mut streams = Vec::new();
+    for prompt in &prompts {
+        let (stream, out) = client.open_stream_with_prompt(prompt).unwrap();
+        let tok = greedy_argmax(&out.logits);
+        streams.push((stream, tok, vec![tok], false));
+    }
+    for _ in 0..steps {
+        for (stream, tok, chosen, dead) in streams.iter_mut() {
+            if *dead {
+                continue;
+            }
+            match stream.step(*tok) {
+                Ok(out) => {
+                    *tok = greedy_argmax(&out.logits);
+                    chosen.push(*tok);
+                }
+                Err(_) => *dead = true,
+            }
+        }
+    }
+    let dead: Vec<bool> = streams.iter().map(|s| s.3).collect();
+    assert!(dead.iter().any(|&d| d), "take faults every 3 restores must kill someone");
+    assert!(!dead.iter().all(|&d| d), "faults must never take the whole population");
+    for (i, (_, _, chosen, _)) in streams.iter().enumerate() {
+        assert_eq!(
+            &reference[i][..chosen.len()],
+            &chosen[..],
+            "stream {i}: tokens diverged from the unfaulted reference \
+             (dead={})",
+            dead[i]
+        );
+        if !dead[i] {
+            assert_eq!(chosen.len(), steps + 1, "survivor {i} must finish every round");
+        }
+    }
+    // The server is unharmed: a fresh forked open still serves.
+    let (stream, out) = client.open_stream_with_prompt(&prompts[0]).unwrap();
+    assert!(stream.step(greedy_argmax(&out.logits)).is_ok());
+    drop(stream);
+    drop(streams);
+    drop(client);
+    let stats = server.shutdown();
+    assert!(stats.prefix_restored_tokens > 0, "{stats:?}");
+}
