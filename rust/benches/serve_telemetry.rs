@@ -1,0 +1,132 @@
+//! Telemetry bench (system extension) — the observation-only budget.
+//!
+//! The unified telemetry layer promises two things: recording never
+//! changes what the engine computes, and full-rate recording costs
+//! almost nothing. This bench measures both. N greedy streams decode
+//! under three sampling rates — `0` (wave spans off), `8` (1-in-8
+//! waves), and `1` (every wave timed and recorded) — and the bench
+//! fails loudly if either promise breaks:
+//!
+//!   * the greedy token streams must be **bit-identical** across all
+//!     three rates (telemetry sits outside the numeric path), and
+//!   * full-rate throughput must stay within 5% of telemetry-off.
+//!
+//!     cargo bench --bench serve_telemetry
+//!     cargo bench --bench serve_telemetry -- --quick
+//!     cargo bench --bench serve_telemetry -- --sessions 64 --iters 5
+//!
+//! Emits `reports/BENCH_telemetry.json` (tok/s and events recorded per
+//! rate, `overhead_frac`, `bit_identical`) — validated by `ci.sh --bench`.
+
+use anyhow::{bail, Result};
+use fmmformer::bench::{save_report_json, Table};
+use fmmformer::cli::Args;
+use fmmformer::serve::decode::{
+    run_greedy_sessions_collect, DecodeConfig, DecodeServer, DecodeServerConfig,
+    HostDecoder,
+};
+use fmmformer::util::json::Json;
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("finite throughput"));
+    xs[xs.len() / 2]
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick"])?;
+    let quick = args.has("quick");
+    let sessions = args.usize_or("sessions", 32)?;
+    let tokens = args.usize_or("tokens", if quick { 16 } else { 64 })?;
+    let iters = args.usize_or("iters", 3)?.max(1);
+
+    let cfg = DecodeConfig::default();
+    let vocab = cfg.vocab;
+    println!(
+        "telemetry bench: {sessions} streams x {tokens} tokens, \
+         median of {iters} iter(s) per sampling rate"
+    );
+
+    // Rate 0 first: it is the baseline the other two must match bit-wise
+    // and the throughput reference for the overhead gate.
+    let modes: [(&str, u64); 3] = [("off", 0), ("sampled", 8), ("full", 1)];
+    let mut tbl = Table::new(
+        "Decode throughput vs telemetry sampling rate",
+        &["mode", "sample", "tok/s", "events", "exact"],
+    );
+    let mut runs: Vec<Json> = Vec::new();
+    let mut baseline: Option<Vec<Vec<i32>>> = None;
+    let mut rate_of = std::collections::HashMap::new();
+    for (mode, sample) in modes {
+        let mut tps: Vec<f64> = Vec::with_capacity(iters);
+        let mut events = 0u64;
+        for _ in 0..iters {
+            let model = HostDecoder::new(cfg.clone())?;
+            let server = DecodeServer::start(
+                model,
+                DecodeServerConfig { telemetry_sample: sample, ..Default::default() },
+            );
+            let client = server.client();
+            let t0 = std::time::Instant::now();
+            let (_lats, streams) =
+                run_greedy_sessions_collect(&client, sessions, tokens, vocab)?;
+            let wall = t0.elapsed().as_secs_f64();
+            drop(client);
+            let tele = server.telemetry();
+            server.shutdown();
+            events = tele.recorder().recorded();
+            match &baseline {
+                None => baseline = Some(streams),
+                Some(base) if base != &streams => bail!(
+                    "sample {sample}: greedy tokens diverged from telemetry-off — \
+                     recording is not observation-only"
+                ),
+                Some(_) => {}
+            }
+            tps.push((sessions * tokens) as f64 / wall.max(1e-12));
+        }
+        let tok_per_sec = median(&mut tps);
+        rate_of.insert(mode, tok_per_sec);
+        tbl.row(vec![
+            mode.to_string(),
+            sample.to_string(),
+            format!("{tok_per_sec:.0}"),
+            events.to_string(),
+            "true".to_string(),
+        ]);
+        runs.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("telemetry_sample", Json::Num(sample as f64)),
+            ("tokens_per_sec", Json::Num(tok_per_sec)),
+            ("events_recorded", Json::Num(events as f64)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+    }
+    tbl.print();
+
+    let off = rate_of["off"];
+    let full = rate_of["full"];
+    let overhead_frac = ((off - full) / off.max(1e-12)).max(0.0);
+    println!(
+        "full-rate telemetry overhead: {:.2}% of telemetry-off throughput",
+        overhead_frac * 100.0
+    );
+    if overhead_frac > 0.05 {
+        bail!(
+            "full-rate telemetry costs {:.2}% throughput — over the 5% budget",
+            overhead_frac * 100.0
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_telemetry")),
+        ("sessions", Json::Num(sessions as f64)),
+        ("tokens_per_session", Json::Num(tokens as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("bit_identical", Json::Bool(true)),
+        ("overhead_frac", Json::Num(overhead_frac)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let path = save_report_json("BENCH_telemetry.json", &doc)?;
+    println!("machine-readable -> {path:?}");
+    Ok(())
+}

@@ -177,21 +177,48 @@ assert doc["churn_evictions"] > 0, "eviction churn never engaged"
             exit 1
         fi
     fi
+    echo "== bench smoke: serve_telemetry (tiny) =="
+    # Three sampling rates (off / 1-in-8 / every wave): the bench itself
+    # fails if any rate's greedy tokens diverge from telemetry-off or if
+    # full-rate recording costs more than 5% throughput.
+    FMM_REPORTS="$reports" cargo bench --bench serve_telemetry -- \
+        --quick --sessions 8 --tokens 8 --iters 3
+    validate_json "$reports/BENCH_telemetry.json"
+    if command -v python3 >/dev/null 2>&1; then
+        if ! python3 -c '
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["bench"] == "serve_telemetry"
+assert doc["bit_identical"] is True
+assert doc["overhead_frac"] <= 0.05, "full-rate telemetry over the 5% budget"
+for run in doc["runs"]:
+    for key in ("mode", "telemetry_sample", "tokens_per_sec",
+                "events_recorded", "bit_identical"):
+        assert key in run, key
+    assert run["bit_identical"] is True
+full = [r for r in doc["runs"] if r["mode"] == "full"]
+assert full and full[0]["events_recorded"] > 0, "full rate recorded no events"
+' "$reports/BENCH_telemetry.json"; then
+            echo "bench smoke FAILED: BENCH_telemetry.json missing keys or invariants"
+            exit 1
+        fi
+    fi
     echo "bench smoke passed: $reports/BENCH_decode.json $reports/BENCH_paging.json \
 $reports/BENCH_speculative.json $reports/BENCH_prefill.json $reports/BENCH_planner.json \
-$reports/BENCH_front.json $reports/BENCH_prefix.json"
+$reports/BENCH_front.json $reports/BENCH_prefix.json $reports/BENCH_telemetry.json"
     exit 0
 fi
 
 if [[ "${1:-}" == "--chaos" ]]; then
     # Standalone fault-injection gate: the front-tier chaos suite
     # (frame corruption, mid-stream disconnects, injected spill-store
-    # I/O failures, deadline expiry), the clean-path wire tests, and
-    # the prefix-cache failure envelope (poisoned cached snapshots are
+    # I/O failures, deadline expiry), the clean-path wire tests, the
+    # prefix-cache failure envelope (poisoned cached snapshots are
     # misses with node eviction; spill faults on cache-forked streams
-    # disconnect only their victims).
-    echo "== chaos: cargo test --test front_faults --test front --test prefix_cache =="
-    cargo test -q --test front_faults --test front --test prefix_cache
+    # disconnect only their victims), and the telemetry suite (stats
+    # drift vs the registry; the mock-clock deterministic chaos trace).
+    echo "== chaos: cargo test --test front_faults --test front --test prefix_cache --test telemetry =="
+    cargo test -q --test front_faults --test front --test prefix_cache --test telemetry
     echo "chaos gate passed"
     exit 0
 fi

@@ -34,6 +34,7 @@
 //! | [`serve::prefill`] | chunked prompt ingest: stacked-GEMM prefill + continuous-batching admission queue (round-robin chunk planning, token + wall-time budgets) |
 //! | [`serve::speculative`] | speculative decoding: draft-propose / verify-accept on checkpointed O(1) state, plan/finish split so verify windows ride the shared pass |
 //! | [`serve::prefix_cache`] | radix-tree prefix cache: per-tenant tree over prompt tokens whose nodes pin ref-counted FMMS snapshots under an LRU byte budget, so shared-prompt opens fork from a snapshot instead of re-ingesting the prefix |
+//! | [`telemetry`] | cross-cutting observability: metrics registry (atomic counters/gauges + fixed-bucket histograms, `snapshot()` → JSON) that the legacy stats structs read from, per-wave span histograms + rows-vs-latency ledger, and a flight recorder (bounded event ring, mock-clock timestamps, JSONL dumps over the wire `trace` request) |
 //! | [`analysis`] | attention-map dumps, rank histograms, heatmaps |
 //! | [`bench`] | measurement harness (offline substitute for `criterion`) |
 //! | [`coordinator`] | experiment registry: one entry per paper table/figure |
@@ -50,6 +51,7 @@ pub mod linalg;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod tensor;
 pub mod testutil;
 pub mod train;

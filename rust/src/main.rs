@@ -64,17 +64,21 @@ fn run() -> Result<()> {
                  [--prompt-len N [--prefill-chunk C] [--prefill-budget N] \
                  [--prefill-budget-ms T]] [--no-unified-planner] \
                  [--prefix-cache-mb N [--prefix-stride K]] \
-                 [--speculate [--draft-window K] [--draft ngram|model:LxHxD]]"
+                 [--speculate [--draft-window K] [--draft ngram|model:LxHxD]] \
+                 [--telemetry-sample N (span/event every N-th wave, 0=off)] \
+                 [--trace-out FILE (dump flight-recorder JSONL at exit)]"
             );
             println!(
                 "decode-demo --listen ADDR: serve the framed wire protocol \
-                 [--serve-secs N (0=forever)] [--tenant-rate R --tenant-burst B \
+                 [--serve-secs N (0=forever)] [--stats-interval SECS] \
+                 [--tenant-rate R --tenant-burst B \
                  --tenant-streams Q] [--max-open N] [--max-queued-prompts N] \
                  [--default-deadline-ms T]"
             );
             println!(
                 "decode-demo --connect ADDR: drive a listening front tier \
                  [--sessions N] [--tokens N] [--tenant NAME] [--deadline-ms T] \
+                 [--trace-out FILE (pull the server trace over the wire)] \
                  (--vocab must match the server's)"
             );
             Ok(())
@@ -247,7 +251,10 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 /// proposed per step by `--draft` (the stream's own n-gram history —
 /// primed with the prompt — or a smaller draft model `model:LxHxD`)
 /// and verified as one stacked step — tokens are bit-identical to the
-/// plain run, only the speed changes.
+/// plain run, only the speed changes. `--telemetry-sample N` records
+/// wave spans and flight-recorder wave events every N-th wave (0
+/// disables wave sampling; counters are always exact) and
+/// `--trace-out FILE` dumps the flight recorder as JSONL at exit.
 fn cmd_decode_demo(args: &Args) -> Result<()> {
     let kernels: Vec<FeatureMap> = args
         .list_or("kernels", &["elu"])
@@ -297,6 +304,7 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         unified_planner: !args.has("no-unified-planner"),
         prefix_cache_bytes: args.usize_or("prefix-cache-mb", 0)? << 20,
         prefix_snapshot_stride: args.usize_or("prefix-stride", 64)?,
+        telemetry_sample: args.u64_or("telemetry-sample", 1)?,
     };
 
     // Wire-server mode: expose this engine over the framed TCP
@@ -339,7 +347,9 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     lats.sort_by(f64::total_cmp);
     ttfts.sort_by(f64::total_cmp);
+    let tele = server.telemetry();
     let stats = server.shutdown();
+    dump_trace(args, &tele)?;
     if lats.is_empty() && ttfts.is_empty() {
         println!("no tokens decoded (sessions={sessions} tokens={tokens})");
         return Ok(());
@@ -417,9 +427,26 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--trace-out FILE`: dump the flight recorder as JSONL, one event per
+/// line in chronological order. No-op when the flag is absent.
+fn dump_trace(args: &Args, tele: &fmmformer::telemetry::Telemetry) -> Result<()> {
+    let path = match args.get("trace-out") {
+        Some(p) => p,
+        None => return Ok(()),
+    };
+    let jsonl = tele.recorder().jsonl(0);
+    let events = jsonl.lines().count();
+    std::fs::write(path, &jsonl)
+        .map_err(|e| anyhow!("writing flight-recorder trace to {path:?}: {e}"))?;
+    println!("flight recorder: {events} events -> {path}");
+    Ok(())
+}
+
 /// `decode-demo --listen ADDR`: serve the decode engine over the framed
 /// wire protocol (admission control, deadlines, graceful drain) until
-/// `--serve-secs` elapse (0 = forever).
+/// `--serve-secs` elapse (0 = forever). `--stats-interval SECS` prints
+/// the telemetry registry snapshot document periodically while serving;
+/// `--trace-out FILE` dumps the flight recorder at drain.
 fn front_listen(
     args: &Args,
     addr: &str,
@@ -450,22 +477,38 @@ fn front_listen(
         None => FrontServer::start(addr, model, server_cfg, front_cfg)?,
     };
     let serve_secs = args.u64_or("serve-secs", 0)?;
+    let stats_interval = args.u64_or("stats-interval", 0)?;
+    let tele = server.telemetry();
     println!(
         "front tier listening on {} (wire v{WIRE_VERSION})",
         server.local_addr()
     );
     if serve_secs == 0 {
         println!("serving forever (--serve-secs 0); interrupt to stop");
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+    let started = std::time::Instant::now();
+    loop {
+        let tick = if stats_interval > 0 { stats_interval } else { 3600 };
+        let sleep_s = if serve_secs > 0 {
+            let left = serve_secs.saturating_sub(started.elapsed().as_secs());
+            if left == 0 {
+                break;
+            }
+            tick.min(left)
+        } else {
+            tick
+        };
+        std::thread::sleep(std::time::Duration::from_secs(sleep_s));
+        if stats_interval > 0 {
+            println!("{}", tele.snapshot());
         }
     }
-    std::thread::sleep(std::time::Duration::from_secs(serve_secs));
     let stats = server.shutdown();
     println!(
         "drained after {serve_secs}s: {} connections, {} bad frames, {} sheds",
         stats.connections, stats.bad_frames, stats.gate.shed_total,
     );
+    dump_trace(args, &tele)?;
     Ok(())
 }
 
@@ -520,6 +563,14 @@ fn front_connect(
     );
     let mut c = FrontClient::connect(addr)?;
     println!("server stats: {}", c.stats()?);
+    if let Some(path) = args.get("trace-out") {
+        // Over the wire: the server's flight recorder, newest events.
+        let jsonl = c.trace(0)?;
+        let events = jsonl.lines().count();
+        std::fs::write(path, &jsonl)
+            .map_err(|e| anyhow!("writing flight-recorder trace to {path:?}: {e}"))?;
+        println!("flight recorder: {events} events -> {path}");
+    }
     Ok(())
 }
 

@@ -55,6 +55,7 @@
 //! architecture is exercised end-to-end by `cargo test` even where the
 //! XLA backend is stubbed out.
 
+use std::cell::Cell;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -75,6 +76,7 @@ use crate::serve::session_store::{self, MemStore, SessionStore};
 use crate::serve::speculative::{
     SpecFactory, SpecPlan, SpeculationConfig, SpeculativeSession,
 };
+use crate::telemetry::{EventKind, Registry, Telemetry, LATENCY_BOUNDS_S, ROWS_BOUNDS};
 use crate::tensor::Tensor;
 use crate::util::fnv1a64;
 
@@ -639,6 +641,36 @@ pub(crate) fn ragged_forward(
     sessions: &mut [&mut DecoderSession],
     segs: &[SegmentSpec],
 ) -> Result<Vec<Vec<Vec<f32>>>> {
+    ragged_forward_spanned(sessions, segs, None)
+}
+
+/// Per-pass phase-duration accumulators for the sampled telemetry span
+/// timeline ([`crate::telemetry`]). `Cell`s because the attention
+/// closure only gets a shared borrow. Durations are measured with raw
+/// `Instant` pairs — they are intervals, not ordered timestamps, so the
+/// mockable telemetry clock buys nothing here.
+#[derive(Default)]
+pub(crate) struct SpanCells {
+    /// Embedding gather + per-head column panel gather/scatter copies.
+    pub(crate) gather_s: Cell<f64>,
+    /// GEMM share of the blocks (projections, MLP, norms): whole-layer
+    /// wall time minus the attend-closure interior.
+    pub(crate) gemm_s: Cell<f64>,
+    /// [`incremental::advance_many`] across all layers and heads.
+    pub(crate) advance_s: Cell<f64>,
+    /// Vocab readout (final RMS norm + the widest GEMM).
+    pub(crate) readout_s: Cell<f64>,
+}
+
+/// [`ragged_forward`] with optional phase timing. `spans: None` is the
+/// production fast path — not a single extra `Instant::now()` — and the
+/// math is identical either way (timing is observation-only), so
+/// sampled waves stay bit-identical to unsampled ones.
+pub(crate) fn ragged_forward_spanned(
+    sessions: &mut [&mut DecoderSession],
+    segs: &[SegmentSpec],
+    spans: Option<&SpanCells>,
+) -> Result<Vec<Vec<Vec<f32>>>> {
     let b = sessions.len();
     assert_eq!(segs.len(), b, "one segment per session");
     if b == 0 {
@@ -658,6 +690,7 @@ pub(crate) fn ragged_forward(
     let dh = d / cfg.heads;
     // Embed every row first: an invalid token anywhere errors here,
     // before any attention state has advanced.
+    let t_embed = spans.map(|_| Instant::now());
     let mut x = Tensor::zeros(&[n, d]);
     {
         let mut row = 0usize;
@@ -669,8 +702,17 @@ pub(crate) fn ragged_forward(
             }
         }
     }
+    if let (Some(sp), Some(t)) = (spans, t_embed) {
+        sp.gather_s.set(sp.gather_s.get() + t.elapsed().as_secs_f64());
+    }
     for l in 0..cfg.layers {
+        let t_layer = spans.map(|_| Instant::now());
+        // Attend-closure interior wall time, reported out so the GEMM
+        // share (whole layer minus interior) can be derived below.
+        let inner_s = Cell::new(0.0f64);
         x = model.block(l, &x, |qt, kt, vt| {
+            let t_inner = spans.map(|_| Instant::now());
+            let mut adv_s = 0.0f64;
             let mut a = Tensor::zeros(&[n, d]);
             // Per-head column panels, scratch-backed: gather the head's
             // columns contiguously across the whole ragged batch,
@@ -688,16 +730,32 @@ pub(crate) fn ragged_forward(
                     kh[t * dh..(t + 1) * dh].copy_from_slice(&kt.row(t)[lo..lo + dh]);
                     vh[t * dh..(t + 1) * dh].copy_from_slice(&vt.row(t)[lo..lo + dh]);
                 }
+                let t_adv = spans.map(|_| Instant::now());
                 let mut states: Vec<&mut FmmDecodeState> =
                     sessions.iter_mut().map(|s| &mut s.states[l][head]).collect();
                 incremental::advance_many(&mut states, &lens, &qh, &kh, &vh, &mut oh);
+                if let Some(t) = t_adv {
+                    adv_s += t.elapsed().as_secs_f64();
+                }
                 for t in 0..n {
                     a.data_mut()[t * d + lo..t * d + lo + dh]
                         .copy_from_slice(&oh[t * dh..(t + 1) * dh]);
                 }
             }
+            if let (Some(sp), Some(t)) = (spans, t_inner) {
+                let inner = t.elapsed().as_secs_f64();
+                inner_s.set(inner);
+                sp.advance_s.set(sp.advance_s.get() + adv_s);
+                // The interior minus the recurrence is the panel
+                // gather/scatter copy time.
+                sp.gather_s.set(sp.gather_s.get() + (inner - adv_s).max(0.0));
+            }
             Ok(a)
         })?;
+        if let (Some(sp), Some(t)) = (spans, t_layer) {
+            sp.gemm_s
+                .set(sp.gemm_s.get() + (t.elapsed().as_secs_f64() - inner_s.get()).max(0.0));
+        }
     }
     for (s, &len) in sessions.iter_mut().zip(&lens) {
         s.pos += len;
@@ -726,6 +784,7 @@ pub(crate) fn ragged_forward(
     if emit_rows.is_empty() {
         return Ok(out);
     }
+    let t_read = spans.map(|_| Instant::now());
     let logits = if emit_rows.len() == n {
         mm(&rms_norm(&x), &model.w_out)?
     } else {
@@ -735,6 +794,9 @@ pub(crate) fn ragged_forward(
         }
         mm(&rms_norm(&sub), &model.w_out)?
     };
+    if let (Some(sp), Some(t)) = (spans, t_read) {
+        sp.readout_s.set(sp.readout_s.get() + t.elapsed().as_secs_f64());
+    }
     // Scatter: emit_rows was built walking the segments in order, so
     // the logits rows come back per segment, in row order.
     let mut next = 0usize;
@@ -1001,6 +1063,16 @@ pub struct DecodeServerConfig {
     /// the cost of more cached snapshots; `0` disables insertion (the
     /// cache can still serve whatever is already in it).
     pub prefix_snapshot_stride: usize,
+    /// Telemetry wave-sampling knob ([`crate::telemetry`]): every N-th
+    /// planned wave records its per-phase span durations, the
+    /// rows-vs-latency ledger entry, and a `wave` flight-recorder
+    /// event. `1` (the default) records every wave; `0` disables wave
+    /// spans entirely. Counters and discrete events (open/close, shed,
+    /// spill, deadline, …) are always on — they are the stats system of
+    /// record. Telemetry is observation-only: token streams are
+    /// bit-identical at any sampling rate
+    /// (`benches/serve_telemetry.rs` enforces this).
+    pub telemetry_sample: u64,
 }
 
 impl Default for DecodeServerConfig {
@@ -1018,6 +1090,7 @@ impl Default for DecodeServerConfig {
             unified_planner: true,
             prefix_cache_bytes: 0,
             prefix_snapshot_stride: 64,
+            telemetry_sample: 1,
         }
     }
 }
@@ -1035,6 +1108,14 @@ pub struct StepOut {
 }
 
 /// Aggregate decode-server statistics.
+///
+/// Since the telemetry re-base this struct is a *read view*: the
+/// scheduler writes `decode.*` metrics into the server's
+/// [`Telemetry`] registry (the system of record), and
+/// [`DecodeServer::stats`] rebuilds this struct from the registry by
+/// name at read time. A field and its `snapshot()` document value can
+/// therefore never drift apart (pinned by `tests/telemetry.rs`); the
+/// shape and semantics of every field are unchanged.
 #[derive(Debug, Default, Clone)]
 pub struct DecodeStats {
     pub steps: usize,
@@ -1228,6 +1309,9 @@ enum DecodeMsg {
         speculative: Option<bool>,
         /// Tenant tag for per-tenant stats (front-tier traffic).
         tenant: Option<Arc<str>>,
+        /// Client-chosen trace id threaded onto every flight-recorder
+        /// event this stream emits (0 = untraced).
+        trace: u64,
         reply: Sender<Result<()>>,
     },
     /// Admit a stream with a pending prompt: the session registers
@@ -1239,6 +1323,7 @@ enum DecodeMsg {
         session: u64,
         speculative: Option<bool>,
         tenant: Option<Arc<str>>,
+        trace: u64,
         /// Ingest budget: if the whole prompt has not completed by this
         /// instant, the pending ingest is cancelled at the next wave
         /// boundary with a typed "deadline expired" error.
@@ -1302,6 +1387,11 @@ pub struct OpenOptions {
     /// Prompt-ingest deadline (prompted opens only): ingest still
     /// pending at this instant is cancelled at the next wave boundary.
     pub deadline: Option<Instant>,
+    /// Flight-recorder trace id: every telemetry event this stream
+    /// emits (open/close, spill/restore, deadline, prefix outcome)
+    /// carries this id, threaded from the FMMW `open` frame. `0` (the
+    /// default) means untraced; events still record, tagged 0.
+    pub trace: u64,
 }
 
 /// Handle for opening decode streams; cloneable across client threads.
@@ -1347,6 +1437,7 @@ impl DecodeClient {
                 session,
                 speculative: opts.speculative,
                 tenant: opts.tenant,
+                trace: opts.trace,
                 reply,
             })
             .map_err(|_| anyhow!("decode server shut down: cannot open stream"))?;
@@ -1430,6 +1521,7 @@ impl DecodeClient {
                 session,
                 speculative: opts.speculative,
                 tenant: opts.tenant,
+                trace: opts.trace,
                 deadline: opts.deadline,
                 prompt: prompt.to_vec(),
                 submitted: Instant::now(),
@@ -1532,7 +1624,7 @@ impl Drop for DecodeStream {
 /// the honest design, mirroring [`super::Server`]).
 pub struct DecodeServer {
     client: Option<DecodeClient>,
-    stats: Arc<Mutex<DecodeStats>>,
+    tele: Arc<Telemetry>,
     cache: Arc<Mutex<PrefixCache>>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -1546,15 +1638,30 @@ impl DecodeServer {
 
     /// Start with an explicit spill store (e.g.
     /// [`session_store::DiskStore`](crate::serve::session_store::DiskStore)
-    /// so idle streams cost zero RAM).
+    /// so idle streams cost zero RAM). Builds a fresh [`Telemetry`]
+    /// (real clock, `cfg.telemetry_sample`).
     pub fn start_with_store(
         model: HostDecoder,
         cfg: DecodeServerConfig,
         store: Box<dyn SessionStore>,
     ) -> DecodeServer {
+        let tele = Telemetry::new(cfg.telemetry_sample);
+        DecodeServer::start_with_store_telemetry(model, cfg, store, tele)
+    }
+
+    /// Start against a caller-supplied [`Telemetry`] — the front tier
+    /// hands each engine generation a [`Telemetry::child`] so stats
+    /// registries stay per-generation while one shared flight recorder
+    /// (and clock) sees the whole story; chaos tests hand in a
+    /// mock-clock instance.
+    pub fn start_with_store_telemetry(
+        model: HostDecoder,
+        cfg: DecodeServerConfig,
+        store: Box<dyn SessionStore>,
+        tele: Arc<Telemetry>,
+    ) -> DecodeServer {
         let (tx, rx) = mpsc::channel::<DecodeMsg>();
-        let stats = Arc::new(Mutex::new(DecodeStats::default()));
-        let stats_thread = stats.clone();
+        let tele_thread = tele.clone();
         let queue_depth = Arc::new(AtomicUsize::new(0));
         let depth_thread = queue_depth.clone();
         let cache = Arc::new(Mutex::new(PrefixCache::new(cfg.prefix_cache_bytes)));
@@ -1568,7 +1675,7 @@ impl DecodeServer {
                     cfg,
                     store,
                     rx,
-                    stats_thread,
+                    tele_thread,
                     depth_thread,
                     cache_thread,
                 )
@@ -1581,7 +1688,7 @@ impl DecodeServer {
                 queue_depth,
                 recv_timeout: DEFAULT_CLIENT_RECV_TIMEOUT,
             }),
-            stats,
+            tele,
             cache,
             handle: Some(handle),
         }
@@ -1591,10 +1698,14 @@ impl DecodeServer {
         self.client.as_ref().expect("server running").clone()
     }
 
+    /// This server's telemetry bundle (registry + flight recorder +
+    /// clock) — the system of record [`stats`](Self::stats) reads from.
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.tele.clone()
+    }
+
     pub fn stats(&self) -> DecodeStats {
-        let mut s = lock_stats(&self.stats).clone();
-        self.merge_cache_stats(&mut s);
-        s
+        stats_view(&self.tele, &self.cache)
     }
 
     /// The prompt-prefix cache (inert when `prefix_cache_bytes` was 0).
@@ -1603,21 +1714,6 @@ impl DecodeServer {
     /// instance.
     pub fn prefix_cache(&self) -> Arc<Mutex<PrefixCache>> {
         self.cache.clone()
-    }
-
-    /// The prefix-cache ledger is the single source of truth for the
-    /// `prefix_*` counters; fold it into a stats snapshot at read time
-    /// (the scheduler never writes these fields).
-    fn merge_cache_stats(&self, s: &mut DecodeStats) {
-        let c = lock_cache(&self.cache).stats();
-        s.prefix_hits = c.hits;
-        s.prefix_partial_hits = c.partial_hits;
-        s.prefix_misses = c.misses;
-        s.prefix_restored_tokens = c.restored_tokens;
-        s.prefix_bytes_resident = c.bytes_resident;
-        s.prefix_evictions = c.evictions;
-        s.prefix_insertions = c.insertions;
-        s.prefix_snapshots = c.snapshots;
     }
 
     /// Graceful shutdown via the explicit sentinel: queued steps are
@@ -1630,24 +1726,111 @@ impl DecodeServer {
         if let Some(h) = self.handle.take() {
             h.join().ok();
         }
-        let mut stats = lock_stats(&self.stats).clone();
-        self.merge_cache_stats(&mut stats);
-        stats
+        stats_view(&self.tele, &self.cache)
     }
 }
 
-/// Poison-tolerant stats lock: stats are plain counters, so if a wave
-/// panicked while holding the mutex the partial update is still the
-/// best available truth — recover the guard via `into_inner` instead of
-/// cascading the poison into every unrelated stream's stat sync.
-fn lock_stats(stats: &Mutex<DecodeStats>) -> MutexGuard<'_, DecodeStats> {
-    stats.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+/// Resolve the per-tenant counter `decode.tenant.<tenant>.<field>`.
+/// Tenant names may themselves contain dots; the read view splits at
+/// the *last* dot, so the family stays parseable either way.
+fn tenant_counter(
+    r: &Registry,
+    tenant: &str,
+    field: &str,
+) -> Arc<crate::telemetry::Counter> {
+    r.counter(&format!("decode.tenant.{tenant}.{field}"))
 }
 
-/// Poison-tolerant prefix-cache lock, same rationale as [`lock_stats`]:
-/// the cache's invariants are enforced per-call, so a panic while the
-/// lock was held leaves (at worst) stale counters — better than turning
-/// every later prompted open into a panic.
+/// Sync the prefix-cache ledger (the single source of truth for the
+/// `prefix_*` numbers) into the registry as gauges, so the snapshot
+/// document and the [`DecodeStats`] read view agree at any read point.
+fn sync_prefix_gauges(tele: &Telemetry, cache: &Mutex<PrefixCache>) {
+    let c = lock_cache(cache).stats();
+    let r = tele.registry();
+    r.gauge("decode.prefix_hits").set(c.hits as u64);
+    r.gauge("decode.prefix_partial_hits").set(c.partial_hits as u64);
+    r.gauge("decode.prefix_misses").set(c.misses as u64);
+    r.gauge("decode.prefix_restored_tokens").set(c.restored_tokens as u64);
+    r.gauge("decode.prefix_bytes_resident").set(c.bytes_resident as u64);
+    r.gauge("decode.prefix_evictions").set(c.evictions as u64);
+    r.gauge("decode.prefix_insertions").set(c.insertions as u64);
+    r.gauge("decode.prefix_snapshots").set(c.snapshots as u64);
+}
+
+/// Rebuild the legacy [`DecodeStats`] struct from the registry by name
+/// — the read view that keeps every existing caller (benches, tests,
+/// the front tier's stats document) working unchanged on top of the
+/// telemetry re-base. Absent names read as zero, so a fresh server
+/// yields `DecodeStats::default()`.
+fn stats_view(tele: &Telemetry, cache: &Mutex<PrefixCache>) -> DecodeStats {
+    sync_prefix_gauges(tele, cache);
+    let r = tele.registry();
+    let c = |name: &str| r.counter_value(name) as usize;
+    let g = |name: &str| r.gauge_value(name) as usize;
+    let mut s = DecodeStats {
+        steps: c("decode.steps"),
+        failed_steps: c("decode.failed_steps"),
+        micro_batches: c("decode.micro_batches"),
+        sessions_opened: c("decode.sessions_opened"),
+        sessions_closed: c("decode.sessions_closed"),
+        exec_secs: r.float_value("decode.exec_secs"),
+        batched_steps: c("decode.batched_steps"),
+        step_many_calls: c("decode.step_many_calls"),
+        spills: g("decode.spills"),
+        restores: g("decode.restores"),
+        resident_peak: g("decode.resident_peak"),
+        spilled_bytes: r.gauge_value("decode.spilled_bytes"),
+        restore_secs: r.float_value("decode.restore_secs"),
+        spill_failures: g("decode.spill_failures"),
+        draft_proposed: c("decode.draft_proposed"),
+        draft_accepted: c("decode.draft_accepted"),
+        verify_steps: c("decode.verify_steps"),
+        lookahead_hits: c("decode.lookahead_hits"),
+        prefills: c("decode.prefills"),
+        failed_prefills: c("decode.failed_prefills"),
+        prefill_tokens: c("decode.prefill_tokens"),
+        prefill_chunks: c("decode.prefill_chunks"),
+        ttft_secs: r.float_value("decode.ttft_secs"),
+        planned_rounds: c("decode.planned_rounds"),
+        decode_rows: c("decode.decode_rows"),
+        prefill_rows: c("decode.prefill_rows"),
+        verify_rows: c("decode.verify_rows"),
+        rows_per_pass_min: g("decode.rows_per_pass_min"),
+        rows_per_pass_max: g("decode.rows_per_pass_max"),
+        deadline_expired_steps: c("decode.deadline_expired_steps"),
+        deadline_expired_prefills: c("decode.deadline_expired_prefills"),
+        prefix_hits: g("decode.prefix_hits"),
+        prefix_partial_hits: g("decode.prefix_partial_hits"),
+        prefix_misses: g("decode.prefix_misses"),
+        prefix_restored_tokens: g("decode.prefix_restored_tokens"),
+        prefix_bytes_resident: g("decode.prefix_bytes_resident"),
+        prefix_evictions: g("decode.prefix_evictions"),
+        prefix_insertions: g("decode.prefix_insertions"),
+        prefix_snapshots: g("decode.prefix_snapshots"),
+        per_tenant: HashMap::new(),
+    };
+    for name in r.names_with_prefix("decode.tenant.") {
+        let rest = &name["decode.tenant.".len()..];
+        let Some(dot) = rest.rfind('.') else { continue };
+        let (tenant, field) = (&rest[..dot], &rest[dot + 1..]);
+        let v = r.counter_value(&name) as usize;
+        let t = s.per_tenant.entry(tenant.to_string()).or_default();
+        match field {
+            "opened" => t.opened = v,
+            "closed" => t.closed = v,
+            "steps" => t.steps = v,
+            "failed_steps" => t.failed_steps = v,
+            "expired_steps" => t.expired_steps = v,
+            _ => {}
+        }
+    }
+    s
+}
+
+/// Poison-tolerant prefix-cache lock: the cache's invariants are
+/// enforced per-call, so a panic while the lock was held leaves (at
+/// worst) stale counters — better than turning every later prompted
+/// open into a panic.
 fn lock_cache(cache: &Mutex<PrefixCache>) -> MutexGuard<'_, PrefixCache> {
     cache.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
@@ -1695,6 +1878,12 @@ struct Residency {
     /// Tenant tags for per-tenant stat attribution (survives spills;
     /// untagged streams have no entry).
     tenants: HashMap<u64, Arc<str>>,
+    /// Client-chosen trace ids tagging this stream's flight-recorder
+    /// events (survives spills; untraced streams have no entry).
+    traces: HashMap<u64, u64>,
+    /// Telemetry sink for spill/restore/fault events and the residency
+    /// gauges.
+    tele: Arc<Telemetry>,
     /// Effective cap (`usize::MAX` when the config said unlimited).
     cap: usize,
     /// Monotone clock: bumped whenever a session is opened, restored or
@@ -1714,6 +1903,7 @@ impl Residency {
         store: Box<dyn SessionStore>,
         max_resident: usize,
         spec: std::result::Result<Option<SpecFactory>, String>,
+        tele: Arc<Telemetry>,
     ) -> Residency {
         Residency {
             resident: HashMap::new(),
@@ -1721,6 +1911,8 @@ impl Residency {
             spec,
             spec_ids: HashSet::new(),
             tenants: HashMap::new(),
+            traces: HashMap::new(),
+            tele,
             cap: if max_resident == 0 { usize::MAX } else { max_resident },
             tick: 0,
             last_used: HashMap::new(),
@@ -1787,6 +1979,7 @@ impl Residency {
         self.last_used.remove(&id);
         self.spec_ids.remove(&id);
         self.tenants.remove(&id);
+        self.traces.remove(&id);
         let was_resident = self.resident.remove(&id).is_some();
         let was_spilled = self.store.remove(id);
         was_resident || was_spilled
@@ -1795,6 +1988,18 @@ impl Residency {
     /// Tenant tag of a stream, if it was opened with one.
     fn tenant_of(&self, id: u64) -> Option<Arc<str>> {
         self.tenants.get(&id).cloned()
+    }
+
+    /// Trace id of a stream (0 when untraced or unknown).
+    fn trace_of(&self, id: u64) -> u64 {
+        self.traces.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Record a flight-recorder event attributed to stream `id`,
+    /// carrying its tenant tag and trace id.
+    fn stream_event(&self, kind: EventKind, id: u64, detail: &str, a: u64, b: u64) {
+        let tenant = self.tenants.get(&id).map(|t| t.as_ref()).unwrap_or("");
+        self.tele.event(kind, id, tenant, self.trace_of(id), detail, a, b);
     }
 
     /// Spill least-recently-used sessions not in `pinned` until there
@@ -1818,16 +2023,19 @@ impl Residency {
                 Some(Ok(snap)) => snap,
                 _ => {
                     self.spill_failures += 1;
+                    self.stream_event(EventKind::SpillFault, victim, "snapshot", 0, 0);
                     return;
                 }
             };
             if self.store.put(victim, &snap).is_err() {
                 self.spill_failures += 1;
+                self.stream_event(EventKind::SpillFault, victim, "store_put", 0, 0);
                 return;
             }
             self.resident.remove(&victim);
             self.spills += 1;
             self.spilled_bytes += snap.len() as u64;
+            self.stream_event(EventKind::Spill, victim, "", snap.len() as u64, 0);
         }
     }
 
@@ -1844,15 +2052,28 @@ impl Residency {
         if self.resident.contains_key(&id) {
             return Ok(true);
         }
-        let Some(snap) = self.store.take(id)? else {
-            return Ok(false);
+        let snap = match self.store.take(id) {
+            Ok(Some(snap)) => snap,
+            Ok(None) => return Ok(false),
+            Err(e) => {
+                self.stream_event(EventKind::SpillFault, id, "store_take", 0, 0);
+                return Err(e);
+            }
         };
         let t0 = Instant::now();
-        let slot = self.rebuild_slot(id, model, &snap)?;
+        let slot = match self.rebuild_slot(id, model, &snap) {
+            Ok(slot) => slot,
+            Err(e) => {
+                self.stream_event(EventKind::SpillFault, id, "restore_decode", 0, 0);
+                return Err(e);
+            }
+        };
         self.make_room(pinned);
         self.resident.insert(id, slot);
         self.restores += 1;
-        self.restore_secs += t0.elapsed().as_secs_f64();
+        let restore_s = t0.elapsed().as_secs_f64();
+        self.restore_secs += restore_s;
+        self.stream_event(EventKind::Restore, id, "", (restore_s * 1e6) as u64, 0);
         self.peak = self.peak.max(self.resident.len());
         self.touch(id);
         Ok(true)
@@ -1899,15 +2120,18 @@ impl Residency {
         Ok(())
     }
 
-    /// Publish the residency counters into the shared stats snapshot
-    /// (counters here are cumulative; this overwrites, never adds).
-    fn sync_stats(&self, s: &mut DecodeStats) {
-        s.spills = self.spills;
-        s.restores = self.restores;
-        s.resident_peak = self.peak;
-        s.spilled_bytes = self.spilled_bytes;
-        s.restore_secs = self.restore_secs;
-        s.spill_failures = self.spill_failures;
+    /// Publish the residency counters into the registry (they are
+    /// cumulative here, so the registry side is gauges that get *set*,
+    /// never added — exactly the overwrite semantics the legacy
+    /// `sync_stats` had).
+    fn sync_gauges(&self) {
+        let r = self.tele.registry();
+        r.gauge("decode.spills").set(self.spills as u64);
+        r.gauge("decode.restores").set(self.restores as u64);
+        r.gauge("decode.resident_peak").set(self.peak as u64);
+        r.gauge("decode.spilled_bytes").set(self.spilled_bytes);
+        r.float("decode.restore_secs").set(self.restore_secs);
+        r.gauge("decode.spill_failures").set(self.spill_failures as u64);
     }
 }
 
@@ -1917,7 +2141,7 @@ fn decode_scheduler(
     cfg: DecodeServerConfig,
     store: Box<dyn SessionStore>,
     rx: Receiver<DecodeMsg>,
-    stats: Arc<Mutex<DecodeStats>>,
+    tele: Arc<Telemetry>,
     queue_depth: Arc<AtomicUsize>,
     cache: Arc<Mutex<PrefixCache>>,
 ) {
@@ -1925,7 +2149,7 @@ fn decode_scheduler(
     // config) fails speculative opens with its message, while plain
     // streams keep serving.
     let spec = SpecFactory::build(&cfg, model.config()).map_err(|e| format!("{e:#}"));
-    let mut res = Residency::new(store, cfg.max_resident_sessions, spec);
+    let mut res = Residency::new(store, cfg.max_resident_sessions, spec, tele.clone());
     let mut prefills = PrefillQueue::new(cfg.prefill_chunk);
     // The pacer's cost model (EWMA seconds-per-prompt-token) persists
     // across rounds; only its per-round spend resets.
@@ -1951,12 +2175,12 @@ fn decode_scheduler(
                     &mut steps,
                     &mut closes,
                     &mut exit,
-                    &stats,
+                    &tele,
                     &cache,
                 ),
                 Err(_) => {
                     // All clients gone.
-                    res.sync_stats(&mut lock_stats(&stats));
+                    res.sync_gauges();
                     return;
                 }
             }
@@ -1998,7 +2222,7 @@ fn decode_scheduler(
                 &mut steps,
                 &mut closes,
                 &mut exit,
-                &stats,
+                &tele,
                 &cache,
             );
         }
@@ -2037,6 +2261,7 @@ fn decode_scheduler(
             for id in prefills.fail_expired(Instant::now()) {
                 ptally.failed += 1;
                 ptally.expired += 1;
+                res.stream_event(EventKind::DeadlinePrefill, id, "", 0, 0);
                 if res.close(id) {
                     ptally.disconnected += 1;
                 }
@@ -2096,6 +2321,7 @@ fn decode_scheduler(
                         &mut ptally,
                         &cache,
                         stride,
+                        &tele,
                     );
                     wave = tail;
                     if wave.is_empty() {
@@ -2135,44 +2361,46 @@ fn decode_scheduler(
             || ptally.chunks > 0
             || ptally.failed > 0;
         if did_work {
-            let mut s = lock_stats(&stats);
-            s.steps += tally.ok;
-            s.failed_steps += tally.failed;
-            s.micro_batches += usize::from(micro_batch > 0);
-            s.batched_steps += tally.batched;
-            s.step_many_calls += tally.step_many_calls;
-            s.sessions_closed += tally.disconnected + ptally.disconnected;
-            s.draft_proposed += tally.draft_proposed;
-            s.draft_accepted += tally.draft_accepted;
-            s.verify_steps += tally.verify_steps;
-            s.lookahead_hits += tally.lookahead_hits;
+            // Fold the round's tallies into the registry — one batch of
+            // atomic adds per round, the same cadence the old mutex'd
+            // struct was updated at.
+            let r = tele.registry();
+            r.counter("decode.steps").add(tally.ok as u64);
+            r.counter("decode.failed_steps").add(tally.failed as u64);
+            r.counter("decode.micro_batches").add(u64::from(micro_batch > 0));
+            r.counter("decode.batched_steps").add(tally.batched as u64);
+            r.counter("decode.step_many_calls").add(tally.step_many_calls as u64);
+            r.counter("decode.sessions_closed")
+                .add((tally.disconnected + ptally.disconnected) as u64);
+            r.counter("decode.draft_proposed").add(tally.draft_proposed as u64);
+            r.counter("decode.draft_accepted").add(tally.draft_accepted as u64);
+            r.counter("decode.verify_steps").add(tally.verify_steps as u64);
+            r.counter("decode.lookahead_hits").add(tally.lookahead_hits as u64);
             if tally.planned_rounds > 0 {
-                s.rows_per_pass_min = if s.planned_rounds == 0 {
-                    tally.rows_min
-                } else {
-                    s.rows_per_pass_min.min(tally.rows_min)
-                };
-                s.rows_per_pass_max = s.rows_per_pass_max.max(tally.rows_max);
+                // Pass rows are ≥ 1, so the gauge's 0-means-unset floor
+                // merge reproduces the legacy seeded-min fold exactly.
+                r.gauge("decode.rows_per_pass_min").min_nonzero(tally.rows_min as u64);
+                r.gauge("decode.rows_per_pass_max").max_with(tally.rows_max as u64);
             }
-            s.planned_rounds += tally.planned_rounds;
-            s.decode_rows += tally.decode_rows;
-            s.prefill_rows += tally.prefill_rows;
-            s.verify_rows += tally.verify_rows;
-            s.prefills += ptally.completed;
-            s.failed_prefills += ptally.failed;
-            s.prefill_tokens += ptally.tokens;
-            s.prefill_chunks += ptally.chunks;
-            s.ttft_secs += ptally.ttft_secs;
-            s.deadline_expired_steps += tally.expired;
-            s.deadline_expired_prefills += ptally.expired;
+            r.counter("decode.planned_rounds").add(tally.planned_rounds as u64);
+            r.counter("decode.decode_rows").add(tally.decode_rows as u64);
+            r.counter("decode.prefill_rows").add(tally.prefill_rows as u64);
+            r.counter("decode.verify_rows").add(tally.verify_rows as u64);
+            r.counter("decode.prefills").add(ptally.completed as u64);
+            r.counter("decode.failed_prefills").add(ptally.failed as u64);
+            r.counter("decode.prefill_tokens").add(ptally.tokens as u64);
+            r.counter("decode.prefill_chunks").add(ptally.chunks as u64);
+            r.float("decode.ttft_secs").add(ptally.ttft_secs);
+            r.counter("decode.deadline_expired_steps").add(tally.expired as u64);
+            r.counter("decode.deadline_expired_prefills").add(ptally.expired as u64);
             for (tenant, load) in &tally.tenant_steps {
-                let t = s.per_tenant.entry(tenant.to_string()).or_default();
-                t.steps += load.steps;
-                t.failed_steps += load.failed_steps;
-                t.expired_steps += load.expired_steps;
+                tenant_counter(r, tenant, "steps").add(load.steps as u64);
+                tenant_counter(r, tenant, "failed_steps").add(load.failed_steps as u64);
+                tenant_counter(r, tenant, "expired_steps")
+                    .add(load.expired_steps as u64);
             }
-            s.exec_secs += t0.elapsed().as_secs_f64();
-            res.sync_stats(&mut s);
+            r.float("decode.exec_secs").add(t0.elapsed().as_secs_f64());
+            res.sync_gauges();
         }
         // Closes apply only after the window's steps ran: per-sender
         // FIFO means any step a client submitted before dropping its
@@ -2183,12 +2411,21 @@ fn decode_scheduler(
         for session in closes {
             prefills.cancel(session);
             let tenant = res.tenant_of(session);
+            let trace = res.trace_of(session);
             if res.close(session) {
-                let mut s = lock_stats(&stats);
-                s.sessions_closed += 1;
-                if let Some(t) = tenant {
-                    s.per_tenant.entry(t.to_string()).or_default().closed += 1;
+                tele.registry().counter("decode.sessions_closed").inc();
+                if let Some(t) = &tenant {
+                    tenant_counter(tele.registry(), t, "closed").inc();
                 }
+                tele.event(
+                    EventKind::StreamClose,
+                    session,
+                    tenant.as_deref().unwrap_or(""),
+                    trace,
+                    "",
+                    0,
+                    0,
+                );
             }
         }
         queue_depth.store(prefills.len(), Ordering::Relaxed);
@@ -2196,9 +2433,8 @@ fn decode_scheduler(
             let orphaned = prefills.len();
             prefills.fail_all("decode server shut down during prefill");
             queue_depth.store(0, Ordering::Relaxed);
-            let mut s = lock_stats(&stats);
-            s.failed_prefills += orphaned;
-            res.sync_stats(&mut s);
+            tele.registry().counter("decode.failed_prefills").add(orphaned as u64);
+            res.sync_gauges();
             return;
         }
     }
@@ -2547,7 +2783,11 @@ fn run_round(
 /// the session does NOT advance, so the caller may resubmit the same
 /// token and the stream stays bit-exact. Shared by both wave flavors so
 /// deadline semantics cannot drift between planner and baseline.
-fn sweep_expired(wave: Vec<StepReq>, tally: &mut RoundTally) -> Vec<StepReq> {
+fn sweep_expired(
+    wave: Vec<StepReq>,
+    res: &Residency,
+    tally: &mut RoundTally,
+) -> Vec<StepReq> {
     let now = Instant::now();
     if !wave.iter().any(|r| r.deadline.map_or(false, |d| d <= now)) {
         return wave;
@@ -2561,6 +2801,7 @@ fn sweep_expired(wave: Vec<StepReq>, tally: &mut RoundTally) -> Vec<StepReq> {
                 t.failed_steps += 1;
                 t.expired_steps += 1;
             }
+            res.stream_event(EventKind::DeadlineStep, req.session, "", 0, 0);
             req.reply
                 .send(Err(anyhow!(
                     "deadline expired before execution (session {})",
@@ -2598,7 +2839,7 @@ fn run_wave(
     tally: &mut RoundTally,
 ) {
     // Phase 0: deadline sweep at the wave boundary.
-    let wave = sweep_expired(wave, tally);
+    let wave = sweep_expired(wave, res, tally);
     // Phase 1: bring every spilled session in this wave back into the
     // table. The whole wave is pinned so one member's restore cannot
     // evict another's just-restored state.
@@ -2817,10 +3058,17 @@ fn run_planned_wave(
     ptally: &mut PrefillTally,
     cache: &Mutex<PrefixCache>,
     stride: usize,
+    tele: &Telemetry,
 ) {
+    // Span sampling decision for this wave (every `telemetry_sample`-th
+    // wave; 0 = never). Observation-only: the unsampled path takes no
+    // extra timestamps and the math is identical either way.
+    let sampled = tele.sample_wave();
+    let spans = SpanCells::default();
+    let t_restore = if sampled { Some(Instant::now()) } else { None };
     // Phase 0: deadline sweep at the wave boundary. (Queued prompt
     // ingests are swept once per round in the scheduler loop.)
-    let wave = sweep_expired(wave, tally);
+    let wave = sweep_expired(wave, res, tally);
     // Phase 1: restore. Pin steps and chunks alike.
     let mut ids: Vec<u64> = wave.iter().map(|r| r.session).collect();
     ids.extend(picks.iter().map(|p| p.session));
@@ -2880,6 +3128,8 @@ fn run_planned_wave(
         }
     }
 
+    let restore_s = t_restore.map(|t| t.elapsed().as_secs_f64());
+    let t_plan = if sampled { Some(Instant::now()) } else { None };
     // Phase 2: plan. Sub-threshold plain rounds keep the scalar path —
     // `batch_threshold` semantics (including `usize::MAX` = never
     // batch) are unchanged under the planner.
@@ -3012,6 +3262,7 @@ fn run_planned_wave(
         tally.step_many_calls += 1;
         tally.batched += decode_rows;
     }
+    let plan_s = t_plan.map(|t| t.elapsed().as_secs_f64());
     let t0 = Instant::now();
     let result = {
         let segs: Vec<SegmentSpec> = windows
@@ -3026,9 +3277,10 @@ fn run_planned_wave(
                 Slot::Spec(spec) => spec.session_mut(),
             })
             .collect();
-        ragged_forward(&mut refs, &segs)
+        ragged_forward_spanned(&mut refs, &segs, if sampled { Some(&spans) } else { None })
     };
     let pass_secs = t0.elapsed().as_secs_f64();
+    let t_scatter = if sampled { Some(Instant::now()) } else { None };
 
     // Phase 4: scatter and commit.
     match result {
@@ -3128,6 +3380,37 @@ fn run_planned_wave(
             }
         }
     }
+
+    // Sampled-wave telemetry: the per-phase span histograms, the
+    // rows-vs-latency ledger entry, and one `wave` flight-recorder
+    // event (`a` = total rows, `b` = pass µs).
+    if sampled {
+        let r = tele.registry();
+        let lat = |name: &str, v: f64| {
+            r.histogram(name, &LATENCY_BOUNDS_S).observe(v);
+        };
+        lat("decode.wave.restore_s", restore_s.unwrap_or(0.0));
+        lat("decode.wave.plan_s", plan_s.unwrap_or(0.0));
+        lat("decode.wave.gather_s", spans.gather_s.get());
+        lat("decode.wave.gemm_s", spans.gemm_s.get());
+        lat("decode.wave.advance_s", spans.advance_s.get());
+        lat("decode.wave.readout_s", spans.readout_s.get());
+        lat(
+            "decode.wave.scatter_s",
+            t_scatter.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0),
+        );
+        r.ledger("decode.rows_vs_latency", &ROWS_BOUNDS)
+            .record(total_rows as u64, pass_secs);
+        tele.event(
+            EventKind::Wave,
+            0,
+            "",
+            0,
+            "",
+            total_rows as u64,
+            (pass_secs * 1e6) as u64,
+        );
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -3139,19 +3422,28 @@ fn handle_msg(
     steps: &mut Vec<StepReq>,
     closes: &mut Vec<u64>,
     exit: &mut bool,
-    stats: &Mutex<DecodeStats>,
+    tele: &Telemetry,
     cache: &Mutex<PrefixCache>,
 ) {
     match msg {
-        DecodeMsg::Open { session, speculative, tenant, reply } => {
+        DecodeMsg::Open { session, speculative, tenant, trace, reply } => {
             let opened = res.open(session, model, speculative);
             if opened.is_ok() {
-                let mut s = lock_stats(stats);
-                s.sessions_opened += 1;
+                tele.registry().counter("decode.sessions_opened").inc();
                 if let Some(t) = &tenant {
-                    s.per_tenant.entry(t.to_string()).or_default().opened += 1;
+                    tenant_counter(tele.registry(), t, "opened").inc();
                     res.tenants.insert(session, t.clone());
                 }
+                res.traces.insert(session, trace);
+                tele.event(
+                    EventKind::StreamOpen,
+                    session,
+                    tenant.as_deref().unwrap_or(""),
+                    trace,
+                    "",
+                    0,
+                    0,
+                );
             }
             reply.send(opened).ok();
         }
@@ -3160,6 +3452,7 @@ fn handle_msg(
             speculative,
             tenant,
             deadline,
+            trace,
             prompt,
             submitted,
             reply,
@@ -3170,37 +3463,88 @@ fn handle_msg(
                 .and_then(|()| res.open(session, model, speculative));
             match admitted {
                 Ok(()) => {
-                    let mut s = lock_stats(stats);
-                    s.sessions_opened += 1;
+                    tele.registry().counter("decode.sessions_opened").inc();
+                    let tenant_slug = tenant.as_deref().unwrap_or("").to_string();
                     if let Some(t) = &tenant {
-                        s.per_tenant.entry(t.to_string()).or_default().opened += 1;
+                        tenant_counter(tele.registry(), t, "opened").inc();
                         res.tenants.insert(session, t.clone());
                     }
-                    drop(s);
+                    res.traces.insert(session, trace);
+                    tele.event(
+                        EventKind::StreamOpen,
+                        session,
+                        &tenant_slug,
+                        trace,
+                        "",
+                        prompt.len() as u64,
+                        0,
+                    );
                     // Prefix-cache walk (tenant-scoped namespace):
                     // restore the deepest cached ancestor and enqueue
                     // only the uncovered suffix. The hit pins its node
                     // until released here, so eviction pressure from
                     // concurrent inserts cannot free the snapshot
-                    // mid-restore.
+                    // mid-restore. Each outcome lands in the flight
+                    // recorder: hit/partial (`a` = restored depth),
+                    // miss, or poison (adopt failure → cold prefill).
                     let mut restored = 0;
-                    let hit = lock_cache(cache)
-                        .lookup(tenant.as_deref().unwrap_or(""), &prompt);
-                    if let Some(hit) = hit {
-                        match res.adopt_snapshot(session, model, &hit.snapshot) {
-                            Ok(()) => {
-                                restored = hit.depth;
-                                let mut c = lock_cache(cache);
-                                c.note_restored(hit.depth);
-                                c.release(hit.node);
+                    let cache_on = lock_cache(cache).enabled();
+                    let hit = lock_cache(cache).lookup(&tenant_slug, &prompt);
+                    match hit {
+                        Some(hit) => {
+                            match res.adopt_snapshot(session, model, &hit.snapshot) {
+                                Ok(()) => {
+                                    restored = hit.depth;
+                                    let mut c = lock_cache(cache);
+                                    c.note_restored(hit.depth);
+                                    c.release(hit.node);
+                                    drop(c);
+                                    let kind = if hit.full {
+                                        EventKind::PrefixHit
+                                    } else {
+                                        EventKind::PrefixPartial
+                                    };
+                                    tele.event(
+                                        kind,
+                                        session,
+                                        &tenant_slug,
+                                        trace,
+                                        "",
+                                        hit.depth as u64,
+                                        0,
+                                    );
+                                }
+                                // Failure envelope: a truncated or
+                                // fingerprint-mismatched cached snapshot is
+                                // a cache *miss*, never a client error —
+                                // the open falls back to a cold prefill and
+                                // the poisoned node is evicted.
+                                Err(_) => {
+                                    lock_cache(cache).restore_failed(&hit);
+                                    tele.event(
+                                        EventKind::PrefixPoison,
+                                        session,
+                                        &tenant_slug,
+                                        trace,
+                                        "",
+                                        hit.depth as u64,
+                                        0,
+                                    );
+                                }
                             }
-                            // Failure envelope: a truncated or
-                            // fingerprint-mismatched cached snapshot is
-                            // a cache *miss*, never a client error —
-                            // the open falls back to a cold prefill and
-                            // the poisoned node is evicted.
-                            Err(_) => lock_cache(cache).restore_failed(&hit),
                         }
+                        None if cache_on => {
+                            tele.event(
+                                EventKind::PrefixMiss,
+                                session,
+                                &tenant_slug,
+                                trace,
+                                "",
+                                0,
+                                0,
+                            );
+                        }
+                        None => {}
                     }
                     prefills.push(
                         PendingPrefill::new(session, prompt, submitted, reply)

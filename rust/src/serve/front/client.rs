@@ -80,7 +80,8 @@ impl FrontClient {
 
     /// Open a stream. Empty `prompt` opens unprompted; `deadline_ms` 0
     /// takes the server default; `speculate` is 0 = server default,
-    /// 1 = plain, 2 = speculative.
+    /// 1 = plain, 2 = speculative. The stream is untraced; see
+    /// [`open_traced`](FrontClient::open_traced).
     pub fn open(
         &mut self,
         tenant: &str,
@@ -88,10 +89,27 @@ impl FrontClient {
         deadline_ms: u32,
         speculate: u8,
     ) -> Result<OpenReply> {
+        self.open_traced(tenant, prompt, deadline_ms, speculate, 0)
+    }
+
+    /// [`open`](FrontClient::open) with a client-chosen flight-recorder
+    /// trace id: every telemetry event the stream emits server-side
+    /// (open/close, spill/restore, deadline, prefix outcome) carries
+    /// `trace`, so one id pulls a whole request's story out of a
+    /// [`trace`](FrontClient::trace) dump. 0 = untraced.
+    pub fn open_traced(
+        &mut self,
+        tenant: &str,
+        prompt: &[i32],
+        deadline_ms: u32,
+        speculate: u8,
+        trace: u64,
+    ) -> Result<OpenReply> {
         let req = Request::Open {
             tenant: tenant.to_string(),
             deadline_ms,
             speculate,
+            trace,
             prompt: prompt.to_vec(),
         };
         match self.round_trip(&req)? {
@@ -129,6 +147,15 @@ impl FrontClient {
         match self.round_trip(&Request::Stats)? {
             Response::StatsOk { json } => Ok(json),
             other => Err(unexpected("StatsOk", &other)),
+        }
+    }
+
+    /// Fetch the newest `max_events` flight-recorder events as JSONL
+    /// (0 = all retained). Read-only server-side.
+    pub fn trace(&mut self, max_events: u32) -> Result<String> {
+        match self.round_trip(&Request::Trace { max_events })? {
+            Response::TraceOk { jsonl } => Ok(jsonl),
+            other => Err(unexpected("TraceOk", &other)),
         }
     }
 

@@ -13,11 +13,11 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`wire`] | framed protocol: length prefix, version byte, FNV-1a checksum; `Open`/`Step`/`Close`/`Stats` requests, `*Ok` replies, typed [`Reject`](wire::Response::Reject) with [`RejectCode`] + `retry_after_ms` |
+//! | [`wire`] | framed protocol: length prefix, version byte, FNV-1a checksum; `Open`/`Step`/`Close`/`Stats`/`Trace` requests, `*Ok` replies, typed [`Reject`](wire::Response::Reject) with [`RejectCode`] + `retry_after_ms` |
 //! | [`tenant`] | admission [`Gate`](tenant::Gate): per-tenant token buckets, `max_streams` quotas, global cap, shed accounting |
-//! | [`server`] | [`FrontServer`]: accept loop, per-connection threads, deadline propagation, graceful drain, dual-slot engine table for atomic weight swaps |
-//! | [`client`] | [`FrontClient`]: blocking wire client (bench, tests, `decode-demo --connect`), [`rejection_code`] to recover typed rejects from errors |
-//! | [`fault`] | [`FaultPlan`]: deterministic delay/corrupt/truncate/kill/store-I/O fault schedules for the chaos tests and bench |
+//! | [`server`] | [`FrontServer`]: accept loop, per-connection threads, deadline propagation, graceful drain, dual-slot engine table for atomic weight swaps; owns the tier's [`Telemetry`](crate::telemetry::Telemetry) (shed/bad-frame/swap events, per-tenant latency histograms, the shared flight recorder behind the `trace` request) |
+//! | [`client`] | [`FrontClient`]: blocking wire client (bench, tests, `decode-demo --connect`), [`rejection_code`] to recover typed rejects from errors, `trace()` to pull the flight-recorder JSONL |
+//! | [`fault`] | [`FaultPlan`]: deterministic delay/corrupt/truncate/kill/store-I/O fault schedules for the chaos tests and bench (each injected fault also lands in the flight recorder as a typed event) |
 //!
 //! # Data flow
 //!

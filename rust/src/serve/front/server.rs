@@ -21,10 +21,10 @@
 //! stream — the blast radius never crosses a tenant boundary, and every
 //! exit path releases the gate slot and the engine reference it held.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -36,6 +36,7 @@ use crate::serve::decode::{
     HostDecoder, OpenOptions,
 };
 use crate::serve::session_store::{MemStore, SessionStore};
+use crate::telemetry::{EventKind, Telemetry, LATENCY_BOUNDS_S};
 use crate::util::json::Json;
 
 use super::tenant::{Gate, GateSnapshot, TenantConfig};
@@ -113,66 +114,21 @@ struct Shared {
     /// Wire stream ids — front-level, so they stay unique across engine
     /// generations (each engine numbers its own sessions from 0).
     next_wire_id: AtomicU64,
-    connections: AtomicUsize,
-    bad_frames: AtomicUsize,
-    /// Per-tenant latency sample rings (TTFT + step), feeding the
-    /// p50/p99 percentiles in the stats document.
-    latency: Mutex<HashMap<String, TenantSamples>>,
-}
-
-/// Bounded ring of latency samples (seconds): O(1) memory per tenant
-/// however long the server runs; percentiles reflect the most recent
-/// `CAP` observations.
-struct SampleRing {
-    buf: Vec<f64>,
-    next: usize,
-    total: usize,
-}
-
-impl SampleRing {
-    const CAP: usize = 1024;
-
-    fn new() -> SampleRing {
-        SampleRing { buf: Vec::new(), next: 0, total: 0 }
-    }
-
-    fn push(&mut self, v: f64) {
-        if self.buf.len() < Self::CAP {
-            self.buf.push(v);
-        } else {
-            self.buf[self.next] = v;
-        }
-        self.next = (self.next + 1) % Self::CAP;
-        self.total += 1;
-    }
-
-    /// Nearest-rank percentile over the retained window (`q` in 0..=1);
-    /// 0.0 when no samples were recorded.
-    fn percentile(&self, q: f64) -> f64 {
-        if self.buf.is_empty() {
-            return 0.0;
-        }
-        let mut sorted = self.buf.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-        let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
-        sorted[idx.min(sorted.len() - 1)]
-    }
-}
-
-struct TenantSamples {
-    ttft: SampleRing,
-    step: SampleRing,
-}
-
-impl TenantSamples {
-    fn new() -> TenantSamples {
-        TenantSamples { ttft: SampleRing::new(), step: SampleRing::new() }
-    }
+    /// The front tier's telemetry bundle: `front.*` metrics (counters +
+    /// per-tenant latency histograms) live in its registry; the flight
+    /// recorder and clock are shared with every engine generation via
+    /// [`Telemetry::child`], so one `trace` dump shows front-tier sheds
+    /// and engine-side waves on a single timeline.
+    tele: Arc<Telemetry>,
 }
 
 /// Per-tenant latency percentiles (seconds) over the most recent
 /// samples — the front tier's answer to "is tenant X's TTFT degrading",
 /// published in the JSON stats document and in [`FrontStats::latency`].
+/// Since the telemetry re-base this is a read view over the
+/// `front.tenant.<tenant>.{ttft_s,step_s}` registry histograms, whose
+/// windowed nearest-rank estimator is bit-for-bit the retired
+/// `SampleRing` (pinned by `tests/telemetry.rs`).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TenantLatency {
     /// Median time-to-first-token for prompted opens.
@@ -198,42 +154,52 @@ fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 
 impl Shared {
     fn record_ttft(&self, tenant: &str, secs: f64) {
-        relock(&self.latency)
-            .entry(tenant.to_string())
-            .or_insert_with(TenantSamples::new)
-            .ttft
-            .push(secs);
+        self.tele
+            .registry()
+            .histogram(&format!("front.tenant.{tenant}.ttft_s"), &LATENCY_BOUNDS_S)
+            .observe(secs);
     }
 
     fn record_step_latency(&self, tenant: &str, secs: f64) {
-        relock(&self.latency)
-            .entry(tenant.to_string())
-            .or_insert_with(TenantSamples::new)
-            .step
-            .push(secs);
+        self.tele
+            .registry()
+            .histogram(&format!("front.tenant.{tenant}.step_s"), &LATENCY_BOUNDS_S)
+            .observe(secs);
     }
 
-    /// Per-tenant percentile snapshot, sorted by tenant for determinism.
+    /// Record an admission refusal: the gate's per-tenant ledger plus a
+    /// `shed` flight-recorder event tagged with the reject-code slug.
+    fn record_shed(&self, tenant: &str, code: RejectCode) {
+        self.gate.record_shed(tenant, code);
+        self.tele.event(EventKind::Shed, 0, tenant, 0, code.as_str(), 0, 0);
+    }
+
+    /// Per-tenant percentile snapshot, sorted by tenant for determinism
+    /// — a read view over the `front.tenant.*` registry histograms.
     fn latency_snapshot(&self) -> Vec<(String, TenantLatency)> {
-        let map = relock(&self.latency);
-        let mut out: Vec<(String, TenantLatency)> = map
-            .iter()
-            .map(|(tenant, s)| {
-                (
-                    tenant.clone(),
-                    TenantLatency {
-                        ttft_p50: s.ttft.percentile(0.50),
-                        ttft_p99: s.ttft.percentile(0.99),
-                        step_p50: s.step.percentile(0.50),
-                        step_p99: s.step.percentile(0.99),
-                        ttft_samples: s.ttft.total,
-                        step_samples: s.step.total,
-                    },
-                )
-            })
-            .collect();
-        out.sort_by(|a, b| a.0.cmp(&b.0));
-        out
+        let r = self.tele.registry();
+        let mut rows: BTreeMap<String, TenantLatency> = BTreeMap::new();
+        for name in r.names_with_prefix("front.tenant.") {
+            let rest = &name["front.tenant.".len()..];
+            let Some(dot) = rest.rfind('.') else { continue };
+            let (tenant, field) = (&rest[..dot], &rest[dot + 1..]);
+            let Some(h) = r.histogram_of(&name) else { continue };
+            let row = rows.entry(tenant.to_string()).or_default();
+            match field {
+                "ttft_s" => {
+                    row.ttft_p50 = h.percentile(0.50);
+                    row.ttft_p99 = h.percentile(0.99);
+                    row.ttft_samples = h.count() as usize;
+                }
+                "step_s" => {
+                    row.step_p50 = h.percentile(0.50);
+                    row.step_p99 = h.percentile(0.99);
+                    row.step_samples = h.count() as usize;
+                }
+                _ => {}
+            }
+        }
+        rows.into_iter().collect()
     }
 
     fn past_drain_deadline(&self) -> bool {
@@ -318,10 +284,11 @@ impl Shared {
                 })
                 .collect(),
         );
+        let r = self.tele.registry();
         Json::obj(vec![
             ("draining", Json::Bool(self.draining.load(Ordering::SeqCst))),
-            ("connections", Json::num(self.connections.load(Ordering::Relaxed) as f64)),
-            ("bad_frames", Json::num(self.bad_frames.load(Ordering::Relaxed) as f64)),
+            ("connections", Json::num(r.counter_value("front.connections") as f64)),
+            ("bad_frames", Json::num(r.counter_value("front.bad_frames") as f64)),
             ("engine_version", Json::num(version as f64)),
             ("queue_depth", Json::num(queue_depth as f64)),
             ("shed_total", Json::num(gate.shed_total as f64)),
@@ -367,6 +334,20 @@ impl Shared {
                         "deadline_expired_prefills",
                         Json::num(decode.deadline_expired_prefills as f64),
                     ),
+                ]),
+            ),
+            (
+                "telemetry",
+                Json::obj(vec![
+                    (
+                        "events_recorded",
+                        Json::num(self.tele.recorder().recorded() as f64),
+                    ),
+                    (
+                        "events_dropped",
+                        Json::num(self.tele.recorder().dropped() as f64),
+                    ),
+                    ("sample", Json::num(self.tele.sample() as f64)),
                 ]),
             ),
         ])
@@ -436,10 +417,33 @@ impl FrontServer {
         front_cfg: FrontConfig,
         store: Box<dyn SessionStore>,
     ) -> Result<FrontServer> {
+        let tele = Telemetry::new(decode_cfg.telemetry_sample);
+        Self::start_with_store_telemetry(addr, model, decode_cfg, front_cfg, store, tele)
+    }
+
+    /// [`start_with_store`](FrontServer::start_with_store) against a
+    /// caller-supplied [`Telemetry`] — chaos tests hand in a mock-clock
+    /// instance so the flight-recorder event sequence is exactly
+    /// reproducible. The engine gets a [`Telemetry::child`] (fresh
+    /// registry, shared recorder + clock), as does every generation a
+    /// later [`swap_weights`](FrontServer::swap_weights) spawns.
+    pub fn start_with_store_telemetry(
+        addr: &str,
+        model: HostDecoder,
+        decode_cfg: DecodeServerConfig,
+        front_cfg: FrontConfig,
+        store: Box<dyn SessionStore>,
+        tele: Arc<Telemetry>,
+    ) -> Result<FrontServer> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding front tier to {addr}"))?;
         let local = listener.local_addr().context("reading bound address")?;
-        let engine = DecodeServer::start_with_store(model, decode_cfg.clone(), store);
+        let engine = DecodeServer::start_with_store_telemetry(
+            model,
+            decode_cfg.clone(),
+            store,
+            tele.child(),
+        );
         let client = engine.client();
         let gate = Gate::new(
             front_cfg.tenant_defaults.clone(),
@@ -464,9 +468,7 @@ impl FrontServer {
             }),
             conns: Mutex::new(Vec::new()),
             next_wire_id: AtomicU64::new(1),
-            connections: AtomicUsize::new(0),
-            bad_frames: AtomicUsize::new(0),
-            latency: Mutex::new(HashMap::new()),
+            tele,
         });
         let accept_shared = shared.clone();
         let accept = std::thread::Builder::new()
@@ -479,6 +481,14 @@ impl FrontServer {
     /// The bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The front tier's [`Telemetry`] bundle: its registry holds the
+    /// `front.*` metrics, and its flight recorder (shared with every
+    /// engine generation) backs the wire `trace` request and
+    /// `decode-demo --trace-out`.
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.shared.tele.clone()
     }
 
     /// Atomically swap in a new decoder generation described by a
@@ -494,7 +504,12 @@ impl FrontServer {
         // A manifest describing a broken config fails here, before the
         // flip — live traffic never sees a half-working engine.
         model.forward_batch(&[0]).context("warming swapped-in decoder")?;
-        let server = DecodeServer::start(model, self.shared.decode_cfg.clone());
+        let server = DecodeServer::start_with_store_telemetry(
+            model,
+            self.shared.decode_cfg.clone(),
+            Box::new(MemStore::new()),
+            self.shared.tele.child(),
+        );
         let client = server.client();
         let retired = {
             let mut t = relock(&self.shared.engines);
@@ -508,6 +523,15 @@ impl FrontServer {
             t.active = t.slots.len() - 1;
             if t.slots[old].refs == 0 { t.slots[old].server.take() } else { None }
         };
+        self.shared.tele.event(
+            EventKind::WeightSwap,
+            0,
+            "",
+            0,
+            "",
+            manifest.version,
+            0,
+        );
         if let Some(old_engine) = retired {
             let stats = old_engine.shutdown();
             relock(&self.shared.engines).retired_stats.push(stats);
@@ -542,9 +566,10 @@ impl FrontServer {
                 engines.push(server.shutdown());
             }
         }
+        let r = self.shared.tele.registry();
         FrontStats {
-            connections: self.shared.connections.load(Ordering::Relaxed),
-            bad_frames: self.shared.bad_frames.load(Ordering::Relaxed),
+            connections: r.counter_value("front.connections") as usize,
+            bad_frames: r.counter_value("front.bad_frames") as usize,
             gate: self.shared.gate.snapshot(),
             engines,
             latency: self.shared.latency_snapshot(),
@@ -558,7 +583,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             break;
         }
         let Ok(sock) = stream else { continue };
-        shared.connections.fetch_add(1, Ordering::Relaxed);
+        shared.tele.registry().counter("front.connections").inc();
         let conn_shared = shared.clone();
         let handle = std::thread::Builder::new()
             .name("fmm-front-conn".into())
@@ -593,7 +618,8 @@ fn conn_loop(mut sock: TcpStream, shared: Arc<Shared>) {
                 // checksum: tell the peer why (best effort) and close.
                 // Only THIS connection dies; its streams are cleaned up
                 // below and every other connection is untouched.
-                shared.bad_frames.fetch_add(1, Ordering::Relaxed);
+                shared.tele.registry().counter("front.bad_frames").inc();
+                shared.tele.event(EventKind::BadFrame, 0, "", 0, "deframe", 0, 0);
                 send_response(
                     &mut sock,
                     &reject(RejectCode::BadRequest, 0, &format!("{e:#}; closing connection")),
@@ -621,7 +647,16 @@ fn conn_loop(mut sock: TcpStream, shared: Arc<Shared>) {
                     match Request::decode(kind, &body) {
                         Ok(req) => handle_request(req, &mut sock, &mut streams, &shared),
                         Err(e) => {
-                            shared.bad_frames.fetch_add(1, Ordering::Relaxed);
+                            shared.tele.registry().counter("front.bad_frames").inc();
+                            shared.tele.event(
+                                EventKind::BadFrame,
+                                0,
+                                "",
+                                0,
+                                "request_body",
+                                0,
+                                0,
+                            );
                             send_response(
                                 &mut sock,
                                 &reject(RejectCode::BadRequest, 0, &format!("{e:#}")),
@@ -685,12 +720,12 @@ fn handle_request(
     shared: &Arc<Shared>,
 ) -> bool {
     match req {
-        Request::Open { tenant, deadline_ms, speculate, prompt } => {
+        Request::Open { tenant, deadline_ms, speculate, trace, prompt } => {
             let tenant =
                 if tenant.is_empty() { shared.cfg.default_tenant.clone() } else { tenant };
             let now = Instant::now();
             if shared.draining.load(Ordering::SeqCst) {
-                shared.gate.record_shed(&tenant, RejectCode::Draining);
+                shared.record_shed(&tenant, RejectCode::Draining);
                 return send_response(
                     sock,
                     &reject(RejectCode::Draining, 0, "server draining; open shed"),
@@ -714,6 +749,8 @@ fn handle_request(
                 }
             };
             if let Err((code, retry_ms)) = shared.gate.admit_open(&tenant, now) {
+                // The gate already tallied the shed; add the event.
+                shared.tele.event(EventKind::Shed, 0, &tenant, trace, code.as_str(), 0, 0);
                 let msg = match code {
                     RejectCode::RateLimited => "tenant rate limit exceeded",
                     RejectCode::QuotaExceeded => "tenant at max_streams quota",
@@ -730,7 +767,7 @@ fn handle_request(
             {
                 shared.release_engine(slot);
                 shared.gate.release(&tenant);
-                shared.gate.record_shed(&tenant, RejectCode::QueueFull);
+                shared.record_shed(&tenant, RejectCode::QueueFull);
                 return send_response(
                     sock,
                     &reject(
@@ -745,6 +782,7 @@ fn handle_request(
                 speculative,
                 tenant: Some(Arc::from(tenant.as_str())),
                 deadline: effective_deadline(deadline_ms, &shared.cfg, now),
+                trace,
             };
             let opened = if prompt.is_empty() {
                 client.open_stream_opts(opts).map(|h| (h, 0u32, Vec::new(), None))
@@ -791,6 +829,8 @@ fn handle_request(
                 .is_ok();
             };
             if let Err((code, retry_ms)) = shared.gate.admit_step(&cs.tenant, now) {
+                // The gate already tallied the shed; add the event.
+                shared.tele.event(EventKind::Shed, 0, &cs.tenant, 0, code.as_str(), 0, 0);
                 return send_response(
                     sock,
                     &reject(code, retry_ms, "tenant rate limit exceeded"),
@@ -844,6 +884,12 @@ fn handle_request(
         Request::Stats => {
             let json = shared.stats_json();
             send_response(sock, &Response::StatsOk { json }).is_ok()
+        }
+        Request::Trace { max_events } => {
+            // Read-only dump of the shared flight recorder (front-tier
+            // sheds + every engine generation's events, one timeline).
+            let jsonl = shared.tele.recorder().jsonl(max_events as usize);
+            send_response(sock, &Response::TraceOk { jsonl }).is_ok()
         }
     }
 }

@@ -43,11 +43,13 @@ pub const KIND_OPEN: u8 = 0x01;
 pub const KIND_STEP: u8 = 0x02;
 pub const KIND_CLOSE: u8 = 0x03;
 pub const KIND_STATS: u8 = 0x04;
+pub const KIND_TRACE: u8 = 0x05;
 /// Response frame kinds (server → client).
 pub const KIND_OPEN_OK: u8 = 0x81;
 pub const KIND_STEP_OK: u8 = 0x82;
 pub const KIND_CLOSE_OK: u8 = 0x83;
 pub const KIND_STATS_OK: u8 = 0x84;
+pub const KIND_TRACE_OK: u8 = 0x85;
 pub const KIND_REJECT: u8 = 0x8F;
 
 /// Why the server refused a request. Every admission-control, deadline,
@@ -127,13 +129,18 @@ pub enum Request {
     /// Open a stream, optionally with a prompt to ingest server-side.
     /// `deadline_ms` of 0 means "server default"; `speculate` is
     /// 0 = server default, 1 = force plain, 2 = force speculative.
-    Open { tenant: String, deadline_ms: u32, speculate: u8, prompt: Vec<i32> },
+    /// `trace` is a client-chosen flight-recorder trace id threaded
+    /// onto every telemetry event the stream emits (0 = untraced).
+    Open { tenant: String, deadline_ms: u32, speculate: u8, trace: u64, prompt: Vec<i32> },
     /// Advance stream `stream` by one token.
     Step { stream: u64, token: i32, deadline_ms: u32 },
     /// Close stream `stream` (idempotent).
     Close { stream: u64 },
     /// Fetch the server's stats document.
     Stats,
+    /// Dump the newest `max_events` flight-recorder events as JSONL
+    /// (0 = all retained). Read-only; never perturbs serving.
+    Trace { max_events: u32 },
 }
 
 /// Server → client message.
@@ -147,6 +154,8 @@ pub enum Response {
     CloseOk { stream: u64 },
     /// Stats as a JSON document.
     StatsOk { json: String },
+    /// Flight-recorder dump: one JSON object per line, oldest first.
+    TraceOk { jsonl: String },
     /// Typed refusal; `retry_after_ms` is a hint (0 = don't bother).
     Reject { code: RejectCode, retry_after_ms: u32, message: String },
 }
@@ -290,10 +299,11 @@ impl Request {
     pub fn encode(&self) -> (u8, Vec<u8>) {
         let mut b = Vec::new();
         match self {
-            Request::Open { tenant, deadline_ms, speculate, prompt } => {
+            Request::Open { tenant, deadline_ms, speculate, trace, prompt } => {
                 put_str(&mut b, tenant);
                 b.extend_from_slice(&deadline_ms.to_le_bytes());
                 b.push(*speculate);
+                b.extend_from_slice(&trace.to_le_bytes());
                 put_i32s(&mut b, prompt);
                 (KIND_OPEN, b)
             }
@@ -308,6 +318,10 @@ impl Request {
                 (KIND_CLOSE, b)
             }
             Request::Stats => (KIND_STATS, b),
+            Request::Trace { max_events } => {
+                b.extend_from_slice(&max_events.to_le_bytes());
+                (KIND_TRACE, b)
+            }
         }
     }
 
@@ -319,6 +333,7 @@ impl Request {
                 tenant: c.str()?,
                 deadline_ms: c.u32()?,
                 speculate: c.u8()?,
+                trace: c.u64()?,
                 prompt: c.i32s()?,
             },
             KIND_STEP => Request::Step {
@@ -328,6 +343,7 @@ impl Request {
             },
             KIND_CLOSE => Request::Close { stream: c.u64()? },
             KIND_STATS => Request::Stats,
+            KIND_TRACE => Request::Trace { max_events: c.u32()? },
             other => bail!("unknown request kind {other:#04x}"),
         };
         c.done()?;
@@ -362,6 +378,12 @@ impl Response {
                 b.extend_from_slice(json.as_bytes());
                 (KIND_STATS_OK, b)
             }
+            Response::TraceOk { jsonl } => {
+                // Trace dumps can exceed u16; length-prefix as u32.
+                b.extend_from_slice(&(jsonl.len() as u32).to_le_bytes());
+                b.extend_from_slice(jsonl.as_bytes());
+                (KIND_TRACE_OK, b)
+            }
             Response::Reject { code, retry_after_ms, message } => {
                 b.push(*code as u8);
                 b.extend_from_slice(&retry_after_ms.to_le_bytes());
@@ -392,6 +414,14 @@ impl Response {
                 Response::StatsOk {
                     json: String::from_utf8(bytes.to_vec())
                         .map_err(|_| anyhow::anyhow!("stats payload is not UTF-8"))?,
+                }
+            }
+            KIND_TRACE_OK => {
+                let len = c.u32()? as usize;
+                let bytes = c.take(len)?;
+                Response::TraceOk {
+                    jsonl: String::from_utf8(bytes.to_vec())
+                        .map_err(|_| anyhow::anyhow!("trace payload is not UTF-8"))?,
                 }
             }
             KIND_REJECT => {
@@ -517,17 +547,21 @@ mod tests {
             tenant: "acme".into(),
             deadline_ms: 1500,
             speculate: 2,
+            trace: 0xDEAD_BEEF_u64,
             prompt: vec![1, -2, 3],
         });
         roundtrip_req(Request::Open {
             tenant: String::new(),
             deadline_ms: 0,
             speculate: 0,
+            trace: 0,
             prompt: vec![],
         });
         roundtrip_req(Request::Step { stream: 7, token: 42, deadline_ms: 0 });
         roundtrip_req(Request::Close { stream: u64::MAX });
         roundtrip_req(Request::Stats);
+        roundtrip_req(Request::Trace { max_events: 0 });
+        roundtrip_req(Request::Trace { max_events: 128 });
         roundtrip_resp(Response::OpenOk {
             stream: 3,
             prompt_tokens: 128,
@@ -536,6 +570,10 @@ mod tests {
         roundtrip_resp(Response::StepOk { stream: 3, pos: 129, logits: vec![0.0] });
         roundtrip_resp(Response::CloseOk { stream: 3 });
         roundtrip_resp(Response::StatsOk { json: "{\"steps\": 9}".into() });
+        roundtrip_resp(Response::TraceOk {
+            jsonl: "{\"event\": \"wave\"}\n{\"event\": \"shed\"}\n".into(),
+        });
+        roundtrip_resp(Response::TraceOk { jsonl: String::new() });
         roundtrip_resp(Response::Reject {
             code: RejectCode::QuotaExceeded,
             retry_after_ms: 250,

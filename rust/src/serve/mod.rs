@@ -40,6 +40,17 @@
 //! | [`speculative`] | draft-propose / verify-accept lookahead over checkpoint/rollback of the O(1) state, split into plan/finish halves so the verify window can ride a shared pass |
 //! | [`front`] | the production boundary: TCP front tier speaking a length-prefixed checksummed framed protocol, with per-tenant token-bucket admission, deadline propagation, load shedding, graceful drain, dual-slot weight swap, per-tenant latency percentiles, and a fault-injection harness |
 //!
+//! Observability is a separate cross-cutting layer: every subsystem
+//! above writes its counters/gauges/histograms into the per-server
+//! [`Telemetry`](crate::telemetry::Telemetry) registry and its notable
+//! transitions (spill/restore, prefix hit/miss/poison, deadline expiry,
+//! shed, weight swap) into the shared flight recorder; the legacy stats
+//! structs ([`decode::DecodeStats`], [`front::FrontStats`]) are read
+//! views rebuilt from the registry, and the recorder dumps as JSONL via
+//! the wire `trace` request or `decode-demo --trace-out`. Telemetry is
+//! observation-only: token streams are bit-identical with it off,
+//! sampled, or full (`benches/serve_telemetry.rs` enforces this).
+//!
 //! How they connect — the *unified ragged-batch planner* (the default;
 //! `DecodeServerConfig::unified_planner`): each scheduler round gathers
 //! every pending row across all streams — single decode steps, C-row

@@ -39,7 +39,11 @@
 //!   `ttft_secs` accounting — they are reported separately as
 //!   `prefix_restored_tokens`, keeping the bench invariants honest.
 //! * [`PrefillOut`] — what the opener receives: the final prompt
-//!   token's logits plus ingest observability (chunks, TTFT).
+//!   token's logits plus ingest observability (chunks, TTFT). The
+//!   scheduler folds per-round ingest tallies into the server's
+//!   [`Telemetry`](crate::telemetry::Telemetry) registry
+//!   (`decode.prefill_*`, `decode.ttft_secs`), and deadline-expired
+//!   ingests land in the flight recorder as `deadline_prefill` events.
 //! * [`run_prompted_sessions`] — the demo/bench/test harness: N
 //!   concurrent prompted streams, deterministic prompts, greedy decode
 //!   after ingest.

@@ -51,7 +51,11 @@
 //!
 //! The tree itself never inspects snapshot bytes — blobs are opaque
 //! here and self-validating at restore time (FMMS magic / fingerprint /
-//! checksum, see [`super::session_store`]).
+//! checksum, see [`super::session_store`]). The scheduler mirrors
+//! [`PrefixStats`] into `decode.prefix_*` telemetry gauges and records
+//! each lookup outcome as a `prefix_hit` / `prefix_partial` /
+//! `prefix_miss` / `prefix_poison` flight-recorder event
+//! (see [`crate::telemetry`]).
 
 use std::collections::HashMap;
 

@@ -6,7 +6,11 @@
 //! bottleneck is *resident* `DecoderSession`s, not compute, and a state
 //! that small can leave and re-enter RAM cheaply. This module provides
 //! the storage half of that story; the scheduler half (LRU eviction,
-//! transparent restore) lives in [`super::decode`].
+//! transparent restore) lives in [`super::decode`], which also reports
+//! every spill/restore/fault into the
+//! [`Telemetry`](crate::telemetry::Telemetry) layer (`decode.spills`,
+//! `decode.restores`, `decode.spill_failures` gauges plus
+//! `spill`/`restore`/`spill_fault` flight-recorder events).
 //!
 //! # Snapshot format (`FMMS` v1)
 //!

@@ -36,7 +36,11 @@
 //! draft turns `T` scalar steps into `T/(K+1)` stacked ones plus `T`
 //! free lookahead hits; a useless draft costs one rollback+replay per
 //! window. Either way the token stream is the plain greedy stream, bit
-//! for bit (pinned by `tests/speculative_decode.rs`).
+//! for bit (pinned by `tests/speculative_decode.rs`). The scheduler
+//! folds the propose/accept/lookahead tallies into the
+//! [`Telemetry`](crate::telemetry::Telemetry) registry
+//! (`decode.draft_proposed`, `decode.draft_accepted`,
+//! `decode.lookahead_hits`, `decode.verify_steps`).
 //!
 //! # Pieces
 //!

@@ -1,0 +1,104 @@
+//! Mockable monotonic clock — the single time source for telemetry.
+//!
+//! Every flight-recorder event timestamp comes from a [`Clock`], not
+//! from `Instant::now()` directly, so chaos tests can pin *exact* event
+//! sequences: a mock clock only moves when the test advances it, which
+//! makes timestamps deterministic across runs and machines. Production
+//! code uses [`Clock::real`], a thin wrapper over a monotonic
+//! `Instant` origin.
+//!
+//! The clock reports microseconds since its origin (process start for a
+//! real clock, zero for a mock). Microsecond ticks in a `u64` overflow
+//! after ~584k years of uptime; wave-phase *durations* are still
+//! measured with raw `Instant` pairs (they are intervals, not ordered
+//! timestamps, so mockability buys nothing there).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Monotonic microsecond clock; cheap to clone (mock state is shared).
+#[derive(Debug, Clone)]
+pub struct Clock {
+    origin: Instant,
+    mock: Option<Arc<AtomicU64>>,
+}
+
+impl Clock {
+    /// Wall-driven monotonic clock (production).
+    pub fn real() -> Clock {
+        Clock { origin: Instant::now(), mock: None }
+    }
+
+    /// Test clock frozen at 0 µs; only [`advance_us`](Self::advance_us)
+    /// / [`set_us`](Self::set_us) move it. Clones share the same time.
+    pub fn mock() -> Clock {
+        Clock { origin: Instant::now(), mock: Some(Arc::new(AtomicU64::new(0))) }
+    }
+
+    pub fn is_mock(&self) -> bool {
+        self.mock.is_some()
+    }
+
+    /// Microseconds since the clock's origin.
+    pub fn now_us(&self) -> u64 {
+        match &self.mock {
+            Some(t) => t.load(Ordering::SeqCst),
+            None => self.origin.elapsed().as_micros() as u64,
+        }
+    }
+
+    /// Advance a mock clock; no-op on a real clock (real time cannot be
+    /// steered, and chaos tests guard with [`is_mock`](Self::is_mock)).
+    pub fn advance_us(&self, us: u64) {
+        if let Some(t) = &self.mock {
+            t.fetch_add(us, Ordering::SeqCst);
+        }
+    }
+
+    /// Jump a mock clock to an absolute microsecond value (no-op on a
+    /// real clock). Jumps backwards are allowed in tests but events
+    /// already recorded keep their original stamps.
+    pub fn set_us(&self, us: u64) {
+        if let Some(t) = &self.mock {
+            t.store(us, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::real()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_is_monotone() {
+        let c = Clock::real();
+        assert!(!c.is_mock());
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a);
+        // Steering a real clock is a no-op.
+        c.set_us(0);
+        c.advance_us(1_000_000);
+        assert!(c.now_us() < 60_000_000, "real clock must ignore advance_us");
+    }
+
+    #[test]
+    fn mock_clock_moves_only_when_told_and_clones_share_time() {
+        let c = Clock::mock();
+        assert!(c.is_mock());
+        assert_eq!(c.now_us(), 0);
+        let twin = c.clone();
+        c.advance_us(250);
+        assert_eq!(c.now_us(), 250);
+        assert_eq!(twin.now_us(), 250, "clones share the mock time");
+        twin.set_us(1_000);
+        assert_eq!(c.now_us(), 1_000);
+    }
+}

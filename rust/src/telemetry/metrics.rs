@@ -1,0 +1,513 @@
+//! Metrics registry: typed atomic counters, gauges, float cells,
+//! fixed-bucket histograms, and a rows-vs-latency ledger, all snapshot
+//! to one deterministic JSON document.
+//!
+//! This is the store the legacy stats structs (`DecodeStats`,
+//! `FrontStats`, `CacheStats`) are re-based onto: writers update
+//! registry metrics (lock-free atomics; the registry's map mutex is
+//! only taken to *resolve* a name), and the legacy structs are rebuilt
+//! as read views at `stats()` time, so a field and its snapshot value
+//! can never drift apart (pinned by `tests/telemetry.rs`).
+//!
+//! Histograms keep fixed bucket counts for cheap aggregation *plus* a
+//! bounded window of raw samples for exact nearest-rank percentiles —
+//! the same estimator the front tier's hand-rolled `SampleRing` used
+//! before it was deduped onto this type, so p50/p99 outputs are
+//! unchanged (also pinned by test).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins level (also supports monotone max / nonzero-min
+/// merges for peak/floor tracking).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Keep the larger of the current value and `v`.
+    pub fn max_with(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Keep the smaller nonzero value; 0 means "unset" (matches the
+    /// legacy `rows_per_pass_min` convention: 0 until a pass runs).
+    pub fn min_nonzero(&self, v: u64) {
+        if v == 0 {
+            return;
+        }
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            if cur != 0 && cur <= v {
+                return;
+            }
+            match self.0.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// Atomic `f64` cell (bit-cast through `u64`); accumulates seconds.
+#[derive(Debug, Default)]
+pub struct FloatCell(AtomicU64);
+
+impl FloatCell {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// How many raw samples a histogram retains for exact percentiles —
+/// identical to the front tier's retired `SampleRing` cap, so the
+/// p50/p99 the stats document reports are unchanged by the dedupe.
+pub const WINDOW_CAP: usize = 1024;
+
+/// Default latency bucket upper bounds in seconds (1-3-10 ladder from
+/// 10 µs to 10 s; an implicit +inf bucket catches the rest).
+pub const LATENCY_BOUNDS_S: [f64; 13] = [
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0, 10.0,
+];
+
+struct Window {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+/// Fixed-bucket histogram + bounded raw-sample window.
+///
+/// Buckets give O(1) lock-free aggregation for the snapshot document;
+/// the window gives exact nearest-rank percentiles over the most
+/// recent [`WINDOW_CAP`] observations (a tiny mutex held for one
+/// write or one sorted copy — connection threads serialize here only
+/// briefly, exactly like the `SampleRing` it replaces).
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>, // len = bounds.len() + 1 (+inf overflow)
+    count: AtomicU64,
+    sum: FloatCell,
+    window: Mutex<Window>,
+}
+
+impl Histogram {
+    /// `bounds` are inclusive upper edges, strictly ascending.
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: FloatCell::default(),
+            window: Mutex::new(Window { buf: Vec::new(), next: 0 }),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.add(v);
+        let mut w = self.window.lock().unwrap_or_else(|p| p.into_inner());
+        if w.buf.len() < WINDOW_CAP {
+            w.buf.push(v);
+        } else {
+            let i = w.next;
+            w.buf[i] = v;
+        }
+        w.next = (w.next + 1) % WINDOW_CAP;
+    }
+
+    /// Lifetime observation count (the window only bounds percentiles).
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum.get()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { 0.0 } else { self.sum() / n as f64 }
+    }
+
+    /// Nearest-rank percentile over the retained sample window
+    /// (`q` in [0, 1]; 0.0 when nothing has been observed). This is
+    /// bit-for-bit the retired `SampleRing::percentile` estimator.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let w = self.window.lock().unwrap_or_else(|p| p.into_inner());
+        if w.buf.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = w.buf.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// `{count, sum, mean, p50, p99, buckets: [{le, n}...]}`.
+    pub fn snapshot(&self) -> Json {
+        let mut buckets = Vec::with_capacity(self.buckets.len());
+        for (i, b) in self.buckets.iter().enumerate() {
+            let le = self.bounds.get(i).copied().map(Json::num).unwrap_or(Json::str("inf"));
+            buckets.push(Json::obj(vec![
+                ("le", le),
+                ("n", Json::num(b.load(Ordering::Relaxed) as f64)),
+            ]));
+        }
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("sum", Json::num(self.sum())),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.percentile(0.50))),
+            ("p99", Json::num(self.percentile(0.99))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// The rows-per-pass-vs-latency ledger: per row-count bucket, how many
+/// stacked passes ran, how many rows they carried, and how long they
+/// took — the planner's cost-shape profile (wide waves should win).
+pub struct RowsLedger {
+    bounds: Vec<u64>, // inclusive row-count upper edges, ascending
+    passes: Vec<AtomicU64>,
+    rows: Vec<AtomicU64>,
+    secs: Vec<FloatCell>,
+}
+
+/// Default row-count bucket edges for [`RowsLedger`].
+pub const ROWS_BOUNDS: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+impl RowsLedger {
+    pub fn new(bounds: &[u64]) -> RowsLedger {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        let n = bounds.len() + 1;
+        RowsLedger {
+            bounds: bounds.to_vec(),
+            passes: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            rows: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            secs: (0..n).map(|_| FloatCell::default()).collect(),
+        }
+    }
+
+    pub fn record(&self, rows: u64, secs: f64) {
+        let idx = self.bounds.iter().position(|&b| rows <= b).unwrap_or(self.bounds.len());
+        self.passes[idx].fetch_add(1, Ordering::Relaxed);
+        self.rows[idx].fetch_add(rows, Ordering::Relaxed);
+        self.secs[idx].add(secs);
+    }
+
+    /// `[{rows_le, passes, rows, secs, mean_pass_s}...]`, buckets with
+    /// zero passes included so the shape is fixed.
+    pub fn snapshot(&self) -> Json {
+        let mut out = Vec::with_capacity(self.passes.len());
+        for i in 0..self.passes.len() {
+            let passes = self.passes[i].load(Ordering::Relaxed);
+            let secs = self.secs[i].get();
+            let le =
+                self.bounds.get(i).map(|&b| Json::num(b as f64)).unwrap_or(Json::str("inf"));
+            out.push(Json::obj(vec![
+                ("rows_le", le),
+                ("passes", Json::num(passes as f64)),
+                ("rows", Json::num(self.rows[i].load(Ordering::Relaxed) as f64)),
+                ("secs", Json::num(secs)),
+                ("mean_pass_s", Json::num(if passes == 0 { 0.0 } else { secs / passes as f64 })),
+            ]));
+        }
+        Json::Arr(out)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Float(Arc<FloatCell>),
+    Histogram(Arc<Histogram>),
+    Ledger(Arc<RowsLedger>),
+}
+
+/// Named metric store. Resolution (`counter("decode.steps")`) takes a
+/// short map lock and hands back an `Arc` handle; updates on the handle
+/// are lock-free atomics. Re-resolving an existing name returns the
+/// same instance; resolving an existing name *as a different kind* is a
+/// programmer error and panics with the clashing name.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+macro_rules! resolve {
+    ($fn_name:ident, $variant:ident, $ty:ty, $make:expr) => {
+        pub fn $fn_name(&self, name: &str) -> Arc<$ty> {
+            let mut m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+            match m
+                .entry(name.to_string())
+                .or_insert_with(|| Metric::$variant(Arc::new($make)))
+            {
+                Metric::$variant(x) => x.clone(),
+                _ => panic!("metric {name:?} already registered with another kind"),
+            }
+        }
+    };
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    resolve!(counter, Counter, Counter, Counter::default());
+    resolve!(gauge, Gauge, Gauge, Gauge::default());
+    resolve!(float, Float, FloatCell, FloatCell::default());
+
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric {name:?} already registered with another kind"),
+        }
+    }
+
+    pub fn ledger(&self, name: &str, bounds: &[u64]) -> Arc<RowsLedger> {
+        let mut m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Ledger(Arc::new(RowsLedger::new(bounds))))
+        {
+            Metric::Ledger(l) => l.clone(),
+            _ => panic!("metric {name:?} already registered with another kind"),
+        }
+    }
+
+    // -- read-view accessors (absent names read as zero) --------------------
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        match m.get(name) {
+            Some(Metric::Counter(c)) => c.get(),
+            _ => 0,
+        }
+    }
+
+    pub fn gauge_value(&self, name: &str) -> u64 {
+        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        match m.get(name) {
+            Some(Metric::Gauge(g)) => g.get(),
+            _ => 0,
+        }
+    }
+
+    pub fn float_value(&self, name: &str) -> f64 {
+        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        match m.get(name) {
+            Some(Metric::Float(f)) => f.get(),
+            _ => 0.0,
+        }
+    }
+
+    pub fn histogram_of(&self, name: &str) -> Option<Arc<Histogram>> {
+        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        match m.get(name) {
+            Some(Metric::Histogram(h)) => Some(h.clone()),
+            _ => None,
+        }
+    }
+
+    /// Registered names starting with `prefix`, sorted (how the decode
+    /// read view rediscovers its per-tenant counter families).
+    pub fn names_with_prefix(&self, prefix: &str) -> Vec<String> {
+        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        m.keys().filter(|k| k.starts_with(prefix)).cloned().collect()
+    }
+
+    /// One deterministic JSON object: name → scalar for counters /
+    /// gauges / floats, name → sub-document for histograms and ledgers.
+    pub fn snapshot(&self) -> Json {
+        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        let mut doc = BTreeMap::new();
+        for (name, metric) in m.iter() {
+            let v = match metric {
+                Metric::Counter(c) => Json::num(c.get() as f64),
+                Metric::Gauge(g) => Json::num(g.get() as f64),
+                Metric::Float(f) => Json::num(f.get()),
+                Metric::Histogram(h) => h.snapshot(),
+                Metric::Ledger(l) => l.snapshot(),
+            };
+            doc.insert(name.clone(), v);
+        }
+        Json::Obj(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_floats_accumulate() {
+        let reg = Registry::new();
+        let c = reg.counter("t.steps");
+        c.inc();
+        c.add(4);
+        assert_eq!(reg.counter("t.steps").get(), 5, "same instance on re-resolve");
+        assert_eq!(reg.counter_value("t.steps"), 5);
+        assert_eq!(reg.counter_value("t.absent"), 0);
+
+        let g = reg.gauge("t.peak");
+        g.max_with(3);
+        g.max_with(2);
+        assert_eq!(g.get(), 3);
+        g.set(7);
+        assert_eq!(reg.gauge_value("t.peak"), 7);
+
+        let floor = reg.gauge("t.floor");
+        floor.min_nonzero(0); // ignored: 0 means unset
+        assert_eq!(floor.get(), 0);
+        floor.min_nonzero(9);
+        floor.min_nonzero(4);
+        floor.min_nonzero(6);
+        assert_eq!(floor.get(), 4);
+
+        let f = reg.float("t.secs");
+        f.add(0.5);
+        f.add(0.25);
+        assert_eq!(f.get(), 0.75);
+        f.set(2.0);
+        assert_eq!(reg.float_value("t.secs"), 2.0);
+    }
+
+    #[test]
+    fn histogram_percentile_matches_nearest_rank_reference() {
+        // The retired SampleRing estimator: sort, idx = round((n-1)*q).
+        let reference = |xs: &[f64], q: f64| -> f64 {
+            let mut s = xs.to_vec();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s[((s.len() - 1) as f64 * q).round() as usize]
+        };
+        let h = Histogram::new(&LATENCY_BOUNDS_S);
+        assert_eq!(h.percentile(0.5), 0.0, "empty histogram reads 0");
+        // A deterministic scrambled series (LCG, no Instant/random).
+        let mut x: u64 = 12345;
+        let mut vals = Vec::new();
+        for _ in 0..500 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = (x >> 33) as f64 / 1e9; // 0 .. ~2.1s
+            vals.push(v);
+            h.observe(v);
+        }
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), reference(&vals, q), "q={q}");
+        }
+        assert_eq!(h.count(), 500);
+        assert!((h.sum() - vals.iter().sum::<f64>()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_window_is_bounded_but_count_is_lifetime() {
+        let h = Histogram::new(&[10.0]);
+        for i in 0..(WINDOW_CAP + 100) {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count(), (WINDOW_CAP + 100) as u64);
+        // The window holds the most recent WINDOW_CAP samples, so the
+        // minimum percentile reflects the oldest *retained* value.
+        assert_eq!(h.percentile(0.0), 100.0);
+        assert_eq!(h.percentile(1.0), (WINDOW_CAP + 99) as f64);
+    }
+
+    #[test]
+    fn rows_ledger_buckets_by_row_count() {
+        let l = RowsLedger::new(&ROWS_BOUNDS);
+        l.record(1, 0.1);
+        l.record(2, 0.2);
+        l.record(2, 0.2);
+        l.record(100, 1.0); // overflow bucket
+        let snap = l.snapshot();
+        let rows = snap.as_arr().unwrap();
+        assert_eq!(rows.len(), ROWS_BOUNDS.len() + 1);
+        assert_eq!(rows[0].usize_of("passes").unwrap(), 1);
+        assert_eq!(rows[1].usize_of("passes").unwrap(), 2);
+        assert_eq!(rows[1].usize_of("rows").unwrap(), 4);
+        let inf = rows.last().unwrap();
+        assert_eq!(inf.str_of("rows_le").unwrap(), "inf");
+        assert_eq!(inf.usize_of("passes").unwrap(), 1);
+        assert!((inf.req("mean_pass_s").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_and_typed() {
+        let reg = Registry::new();
+        reg.counter("b.n").add(2);
+        reg.gauge("a.level").set(9);
+        reg.float("c.secs").add(1.5);
+        reg.histogram("d.lat", &[1.0, 2.0]).observe(0.5);
+        let doc = reg.snapshot();
+        let text = doc.to_string();
+        assert_eq!(text, reg.snapshot().to_string(), "stable across calls");
+        // BTreeMap ordering: a.level before b.n before c.secs.
+        let a = text.find("a.level").unwrap();
+        let b = text.find("b.n").unwrap();
+        let c = text.find("c.secs").unwrap();
+        assert!(a < b && b < c);
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(parsed.usize_of("b.n").unwrap(), 2);
+        assert_eq!(parsed.req("d.lat").unwrap().usize_of("count").unwrap(), 1);
+        assert_eq!(reg.names_with_prefix("c."), vec!["c.secs".to_string()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "another kind")]
+    fn kind_clash_panics() {
+        let reg = Registry::new();
+        reg.counter("x");
+        reg.gauge("x");
+    }
+}

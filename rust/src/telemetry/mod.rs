@@ -1,0 +1,184 @@
+//! Unified telemetry layer: metrics registry, per-wave span timing, and
+//! the flight recorder — the first cross-cutting layer since `kernel/`.
+//!
+//! Three pieces, one shared time base:
+//!
+//! | piece | role |
+//! |---|---|
+//! | [`metrics::Registry`] | typed atomic counters/gauges/float cells, fixed-bucket [`metrics::Histogram`]s (with exact nearest-rank percentiles over a bounded sample window), and the [`metrics::RowsLedger`] rows-vs-latency ledger; `snapshot()` → one deterministic JSON document |
+//! | [`recorder::Recorder`] | bounded lock-cheap ring of structured [`recorder::Event`]s (stream/tenant/trace-id tagged) dumped as JSONL via `decode-demo --trace-out` or the wire `trace` request |
+//! | [`clock::Clock`] | mockable monotonic clock stamping every event, so chaos tests assert exact deterministic sequences |
+//!
+//! [`Telemetry`] bundles them per serving stack. The front tier owns
+//! one instance; each engine generation gets a [`Telemetry::child`] —
+//! a *fresh registry* (so per-generation `DecodeStats` read views start
+//! at zero, exactly like the structs they re-base) sharing the parent's
+//! recorder, clock, and sampling knob (so one trace dump shows the
+//! whole causal story across swaps).
+//!
+//! Telemetry is observation-only by contract: nothing here touches the
+//! float math or the scheduler's control flow, so token streams are
+//! bit-identical with telemetry off, sampled, or full
+//! (`benches/serve_telemetry.rs` enforces this plus a ≤5% overhead
+//! budget at full rate).
+
+pub mod clock;
+pub mod metrics;
+pub mod recorder;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub use clock::Clock;
+pub use metrics::{
+    Counter, FloatCell, Gauge, Histogram, Registry, RowsLedger, LATENCY_BOUNDS_S,
+    ROWS_BOUNDS, WINDOW_CAP,
+};
+pub use recorder::{Event, EventKind, Recorder, DEFAULT_EVENT_CAP};
+
+use crate::util::json::Json;
+
+/// One serving stack's telemetry: registry + recorder + clock + the
+/// `telemetry_sample` knob (record spans/wave events every N-th wave;
+/// 0 disables them; counters and discrete events are always on — they
+/// are the stats system of record).
+pub struct Telemetry {
+    registry: Registry,
+    recorder: Arc<Recorder>,
+    clock: Clock,
+    sample: u64,
+    waves_seen: AtomicU64,
+}
+
+impl Telemetry {
+    /// Production instance: real clock, default event capacity.
+    pub fn new(sample: u64) -> Arc<Telemetry> {
+        Self::with_clock(Clock::real(), sample, DEFAULT_EVENT_CAP)
+    }
+
+    /// Test/chaos instance with an explicit clock and event capacity.
+    pub fn with_clock(clock: Clock, sample: u64, event_cap: usize) -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            registry: Registry::new(),
+            recorder: Arc::new(Recorder::new(clock.clone(), event_cap)),
+            clock,
+            sample,
+            waves_seen: AtomicU64::new(0),
+        })
+    }
+
+    /// A child instance for one engine generation: fresh registry,
+    /// shared recorder/clock/sample.
+    pub fn child(&self) -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            registry: Registry::new(),
+            recorder: self.recorder.clone(),
+            clock: self.clock.clone(),
+            sample: self.sample,
+            waves_seen: AtomicU64::new(0),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn recorder(&self) -> &Arc<Recorder> {
+        &self.recorder
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// The 1/N wave-sampling knob this instance was built with.
+    pub fn sample(&self) -> u64 {
+        self.sample
+    }
+
+    /// Should *this* wave record spans + a wave event? Counts waves and
+    /// returns true for every `sample`-th one (0 = never). The decision
+    /// is observation-only: the wave executes identically either way.
+    pub fn sample_wave(&self) -> bool {
+        if self.sample == 0 {
+            return false;
+        }
+        let n = self.waves_seen.fetch_add(1, Ordering::Relaxed);
+        n % self.sample == 0
+    }
+
+    /// Record a flight-recorder event (see [`EventKind`] for the
+    /// `a`/`b` payload conventions).
+    #[allow(clippy::too_many_arguments)]
+    pub fn event(
+        &self,
+        kind: EventKind,
+        stream: u64,
+        tenant: &str,
+        trace: u64,
+        detail: &str,
+        a: u64,
+        b: u64,
+    ) {
+        self.recorder.record(kind, stream, tenant, trace, detail, a, b);
+    }
+
+    /// The registry snapshot document plus recorder meta-counters.
+    pub fn snapshot(&self) -> Json {
+        let mut doc = match self.registry.snapshot() {
+            Json::Obj(m) => m,
+            _ => unreachable!("registry snapshot is always an object"),
+        };
+        doc.insert("telemetry.events_recorded".into(), Json::num(self.recorder.recorded() as f64));
+        doc.insert("telemetry.events_dropped".into(), Json::num(self.recorder.dropped() as f64));
+        doc.insert("telemetry.sample".into(), Json::num(self.sample as f64));
+        Json::Obj(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_knob_gates_waves() {
+        let t = Telemetry::with_clock(Clock::mock(), 2, 16);
+        let hits: Vec<bool> = (0..6).map(|_| t.sample_wave()).collect();
+        assert_eq!(hits, vec![true, false, true, false, true, false]);
+        let off = Telemetry::with_clock(Clock::mock(), 0, 16);
+        assert!((0..4).all(|_| !off.sample_wave()), "sample 0 disables waves");
+        let full = Telemetry::with_clock(Clock::mock(), 1, 16);
+        assert!((0..4).all(|_| full.sample_wave()));
+    }
+
+    #[test]
+    fn child_shares_recorder_and_clock_but_not_registry() {
+        let parent = Telemetry::with_clock(Clock::mock(), 1, 16);
+        parent.registry().counter("front.connections").inc();
+        let child = parent.child();
+        child.registry().counter("decode.steps").add(3);
+        assert_eq!(parent.registry().counter_value("decode.steps"), 0);
+        assert_eq!(child.registry().counter_value("front.connections"), 0);
+        // Events from both land in one shared ring, one shared clock.
+        parent.clock().set_us(10);
+        parent.event(EventKind::Shed, 0, "t", 0, "draining", 0, 0);
+        child.clock().advance_us(5);
+        child.event(EventKind::Wave, 0, "", 0, "", 4, 0);
+        let evs = parent.recorder().events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[1].t_us, 15);
+        assert_eq!(child.recorder().recorded(), 2);
+    }
+
+    #[test]
+    fn snapshot_includes_recorder_meta() {
+        let t = Telemetry::with_clock(Clock::mock(), 4, 16);
+        t.registry().counter("decode.steps").add(2);
+        t.event(EventKind::StreamOpen, 1, "t", 0, "", 0, 0);
+        let doc = t.snapshot();
+        assert_eq!(doc.usize_of("decode.steps").unwrap(), 2);
+        assert_eq!(doc.usize_of("telemetry.events_recorded").unwrap(), 1);
+        assert_eq!(doc.usize_of("telemetry.events_dropped").unwrap(), 0);
+        assert_eq!(doc.usize_of("telemetry.sample").unwrap(), 4);
+    }
+}

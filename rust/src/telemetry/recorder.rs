@@ -1,0 +1,274 @@
+//! Flight recorder: a bounded ring of structured events.
+//!
+//! Every notable serving transition — wave executed, spill/restore,
+//! prefix hit/miss/poison, deadline expiry, shed (with reject code),
+//! weight swap, bad frame, stream open/close — lands here as one
+//! [`Event`] carrying the stream id, tenant, and the trace id threaded
+//! from the client's FMMW `open` frame through the scheduler.
+//! Timestamps come from the shared [`Clock`], so a mock clock makes
+//! whole event sequences assertable byte-for-byte in chaos tests.
+//!
+//! The ring is lock-cheap: one small mutex held for a push or a copy,
+//! never across I/O or compute. When full, the oldest event is dropped
+//! (and tallied in `dropped`) — a recorder must never apply
+//! backpressure to the serving path. Dumps are JSONL (one JSON object
+//! per line, sorted keys, deterministic) via `decode-demo --trace-out`
+//! or the wire `trace` request (PROTOCOL.md §11).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+use super::clock::Clock;
+
+/// Default event capacity: enough for minutes of serving at demo scale,
+/// ~100 bytes/event resident.
+pub const DEFAULT_EVENT_CAP: usize = 4096;
+
+/// What happened. Slugs (`as_str`) are the wire/JSONL contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Stream admitted and opened in the engine (`a` = prompt tokens).
+    StreamOpen,
+    /// Stream closed (client close, error teardown, or shutdown).
+    StreamClose,
+    /// One planned wave executed (`a` = total rows, `b` = pass µs);
+    /// recorded every `telemetry_sample`-th wave.
+    Wave,
+    /// Session state spilled to the store (`a` = snapshot bytes).
+    Spill,
+    /// Session state restored from the store (`a` = restore µs).
+    Restore,
+    /// A spill-tier operation failed (`detail` = error class).
+    SpillFault,
+    /// Prompted open fully served from the prefix cache (`a` = depth).
+    PrefixHit,
+    /// Prompted open forked from a cached ancestor (`a` = depth).
+    PrefixPartial,
+    /// Prompted open found no usable cached prefix.
+    PrefixMiss,
+    /// A cached snapshot failed to adopt (corrupt/poisoned) and was
+    /// degraded to a cold prefill.
+    PrefixPoison,
+    /// A step's deadline expired before execution; stream did not
+    /// advance.
+    DeadlineStep,
+    /// A prompted open's deadline expired before ingest finished.
+    DeadlinePrefill,
+    /// Admission control refused work (`detail` = reject-code slug).
+    Shed,
+    /// Dual-slot weight swap committed (`a` = new engine generation).
+    WeightSwap,
+    /// A connection delivered a corrupt/unparseable frame.
+    BadFrame,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::StreamOpen => "stream_open",
+            EventKind::StreamClose => "stream_close",
+            EventKind::Wave => "wave",
+            EventKind::Spill => "spill",
+            EventKind::Restore => "restore",
+            EventKind::SpillFault => "spill_fault",
+            EventKind::PrefixHit => "prefix_hit",
+            EventKind::PrefixPartial => "prefix_partial",
+            EventKind::PrefixMiss => "prefix_miss",
+            EventKind::PrefixPoison => "prefix_poison",
+            EventKind::DeadlineStep => "deadline_step",
+            EventKind::DeadlinePrefill => "deadline_prefill",
+            EventKind::Shed => "shed",
+            EventKind::WeightSwap => "weight_swap",
+            EventKind::BadFrame => "bad_frame",
+        }
+    }
+}
+
+/// One recorded transition. `stream`/`trace` are 0 when not applicable;
+/// `a`/`b` are kind-specific payloads (documented on [`EventKind`]).
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Monotone sequence number (global across the ring, survives
+    /// drops — gaps reveal how much history was lost).
+    pub seq: u64,
+    /// Microseconds on the telemetry [`Clock`] at record time.
+    pub t_us: u64,
+    pub kind: EventKind,
+    pub stream: u64,
+    pub tenant: String,
+    /// Client-chosen trace id from the FMMW `open` frame (0 = none).
+    pub trace: u64,
+    /// Kind-specific slug: reject code, error class, etc.
+    pub detail: String,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Event {
+    /// One JSONL line's value (sorted keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("t_us", Json::num(self.t_us as f64)),
+            ("event", Json::str(self.kind.as_str())),
+            ("stream", Json::num(self.stream as f64)),
+            ("tenant", Json::str(self.tenant.clone())),
+            ("trace", Json::num(self.trace as f64)),
+            ("detail", Json::str(self.detail.clone())),
+            ("a", Json::num(self.a as f64)),
+            ("b", Json::num(self.b as f64)),
+        ])
+    }
+}
+
+/// The bounded event ring. Shared (behind `Arc`) by the front tier and
+/// every engine generation, so one dump shows the whole causal story.
+pub struct Recorder {
+    cap: usize,
+    clock: Clock,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<Event>>,
+}
+
+impl Recorder {
+    pub fn new(clock: Clock, cap: usize) -> Recorder {
+        Recorder {
+            cap: cap.max(1),
+            clock,
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Record one event; O(1), never blocks on anything but the ring's
+    /// own short mutex, never fails.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        kind: EventKind,
+        stream: u64,
+        tenant: &str,
+        trace: u64,
+        detail: &str,
+        a: u64,
+        b: u64,
+    ) {
+        let ev = Event {
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            t_us: self.clock.now_us(),
+            kind,
+            stream,
+            tenant: tenant.to_string(),
+            trace,
+            detail: detail.to_string(),
+            a,
+            b,
+        };
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        if ring.len() >= self.cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Copy of the retained events, oldest first (non-destructive).
+    pub fn events(&self) -> Vec<Event> {
+        let ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        ring.iter().cloned().collect()
+    }
+
+    /// Total events ever recorded (including those since dropped).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted by the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// JSONL dump of the newest `max` retained events in chronological
+    /// order (`max` 0 = all retained). Ends with a newline when
+    /// non-empty.
+    pub fn jsonl(&self, max: usize) -> String {
+        let events = self.events();
+        let skip = if max > 0 && events.len() > max { events.len() - max } else { 0 };
+        let mut out = String::new();
+        for ev in &events[skip..] {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(cap: usize) -> Recorder {
+        Recorder::new(Clock::mock(), cap)
+    }
+
+    #[test]
+    fn events_carry_identity_and_mock_timestamps() {
+        let r = rec(16);
+        r.clock().set_us(1_000);
+        r.record(EventKind::StreamOpen, 7, "acme", 42, "", 5, 0);
+        r.clock().advance_us(500);
+        r.record(EventKind::Shed, 0, "acme", 0, "quota_exceeded", 0, 0);
+        let evs = r.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].seq, 0);
+        assert_eq!(evs[0].t_us, 1_000);
+        assert_eq!(evs[0].stream, 7);
+        assert_eq!(evs[0].tenant, "acme");
+        assert_eq!(evs[0].trace, 42);
+        assert_eq!(evs[1].t_us, 1_500);
+        assert_eq!(evs[1].detail, "quota_exceeded");
+        assert_eq!(r.recorded(), 2);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_drops_oldest() {
+        let r = rec(3);
+        for i in 0..5u64 {
+            r.record(EventKind::Wave, i, "", 0, "", 0, 0);
+        }
+        let evs = r.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs.iter().map(|e| e.stream).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(evs[0].seq, 2, "seq survives drops");
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.dropped(), 2);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_respect_max() {
+        let r = rec(8);
+        r.record(EventKind::PrefixHit, 1, "t", 9, "", 4, 0);
+        r.record(EventKind::StreamClose, 1, "t", 9, "", 0, 0);
+        let full = r.jsonl(0);
+        assert_eq!(full.lines().count(), 2);
+        for line in full.lines() {
+            let j = Json::parse(line).unwrap();
+            assert!(j.str_of("event").is_ok());
+            assert_eq!(j.usize_of("trace").unwrap(), 9);
+        }
+        let last = r.jsonl(1);
+        assert_eq!(last.lines().count(), 1);
+        assert!(last.contains("stream_close"));
+        assert_eq!(rec(4).jsonl(0), "", "empty recorder dumps empty");
+    }
+}

@@ -1,0 +1,398 @@
+//! Integration: unified telemetry layer — drift and determinism.
+//!
+//! Two contracts pinned here:
+//!
+//! 1. **No drift.** Since the telemetry re-base, [`DecodeStats`] /
+//!    [`FrontStats`] are *read views* rebuilt from the registry by
+//!    name. These tests drive mixed load (plain + speculative +
+//!    prompted streams, tenants, spills/restores, prefix hits, failed
+//!    and deadline-expired work, wire corruption) and then compare
+//!    every struct field against the `snapshot()` document — exact
+//!    equality, both directions for the per-tenant families. A field
+//!    and its snapshot value can never disagree again.
+//!
+//! 2. **Deterministic flight recorder.** Under a mock [`Clock`] and a
+//!    scheduled [`FaultPlan`], a chaos scenario produces an *exact*
+//!    event sequence — kind, stream, tenant, trace id, detail, and
+//!    timestamp all asserted, fetched over the wire `trace` request.
+//!
+//! Everything here is host-side — no artifacts required, never skips.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fmmformer::attention::FeatureMap;
+use fmmformer::serve::decode::{
+    greedy_argmax, DecodeConfig, DecodeServer, DecodeServerConfig, HostDecoder,
+    OpenOptions,
+};
+use fmmformer::serve::front::{
+    rejection_code, FaultPlan, FrontClient, FrontConfig, FrontServer, RejectCode,
+    TenantConfig,
+};
+use fmmformer::serve::prefill::deterministic_prompt;
+use fmmformer::serve::session_store::MemStore;
+use fmmformer::serve::speculative::SpeculationConfig;
+use fmmformer::telemetry::{Clock, EventKind, Telemetry};
+use fmmformer::util::json::Json;
+
+fn tiny_config() -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 16,
+        vocab: 32,
+        bandwidth: 4,
+        kernels: vec![FeatureMap::Elu],
+        w1: 0.6,
+        w2: 0.9,
+        seed: 3,
+    }
+}
+
+/// Scalar from the snapshot document; absent keys read as zero, exactly
+/// like `Registry::counter_value` does on the struct side.
+fn num(doc: &Json, key: &str) -> f64 {
+    doc.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+/// Every [`DecodeStats`] field must equal its registry snapshot value
+/// after mixed load: tenant-tagged plain streams, a speculative stream,
+/// two prompted opens sharing a cached prefix, spills/restores under a
+/// residency cap, an out-of-vocab failure, and a deadline expiry. The
+/// read point is after `shutdown()` joins the scheduler, so exact
+/// equality is valid — nothing is mid-fold.
+#[test]
+fn decode_stats_never_drift_from_the_registry_snapshot() {
+    let cfg = tiny_config();
+    let server = DecodeServer::start(
+        HostDecoder::new(cfg.clone()).unwrap(),
+        DecodeServerConfig {
+            max_resident_sessions: 2,
+            prefill_chunk: 4,
+            speculation: SpeculationConfig::NGram,
+            draft_window: 3,
+            prefix_cache_bytes: 1 << 20,
+            prefix_snapshot_stride: 4,
+            ..DecodeServerConfig::default()
+        },
+    );
+    let client = server.client();
+    let tagged = |tenant: &str| OpenOptions {
+        speculative: Some(false),
+        tenant: Some(Arc::from(tenant)),
+        ..OpenOptions::default()
+    };
+
+    let s1 = client.open_stream_opts(tagged("a")).unwrap();
+    let s2 = client.open_stream_opts(tagged("a")).unwrap();
+    let s3 = client.open_stream_opts(tagged("b")).unwrap();
+    let s4 = client.open_stream_speculative().unwrap();
+    let prompt = deterministic_prompt(12, cfg.vocab, 5);
+    let (p1, _) = client.open_stream_with_prompt_opts(&prompt, tagged("a")).unwrap();
+    let (p2, _) = client.open_stream_with_prompt_opts(&prompt, tagged("a")).unwrap();
+
+    // Six streams through a two-session cap: every round spills and
+    // restores, and the speculative stream exercises draft/verify.
+    for round in 0..3 {
+        for (i, s) in [&s1, &s2, &s3, &s4, &p1, &p2].into_iter().enumerate() {
+            let tok = ((round + i) % cfg.vocab) as i32;
+            s.step(tok).unwrap();
+        }
+    }
+    // An out-of-vocab token fails the step without disconnecting.
+    assert!(s1.step(cfg.vocab as i32).is_err(), "out-of-vocab token was accepted");
+    // An already-lapsed deadline is swept typed at the wave boundary.
+    let err = s2.step_with_deadline(1, Some(Instant::now())).unwrap_err();
+    assert!(format!("{err:#}").contains("deadline expired"), "{err:#}");
+
+    drop((s1, s2, s3, s4, p1, p2));
+    drop(client);
+    let tele = server.telemetry();
+    let stats = server.shutdown(); // joins the scheduler: quiesced read point
+    let doc = tele.snapshot();
+
+    // The load actually exercised what it claims to.
+    assert!(stats.steps >= 6, "mixed load barely stepped: {}", stats.steps);
+    assert_eq!(stats.sessions_opened, 6);
+    assert!(stats.spills >= 1 && stats.restores >= 1, "residency cap never engaged");
+    assert_eq!(stats.prefills, 2);
+    assert_eq!(stats.failed_steps, 2);
+    assert_eq!(stats.deadline_expired_steps, 1);
+    assert!(stats.prefix_insertions >= 1, "prefill never fed the prefix cache");
+    assert!(
+        stats.prefix_hits + stats.prefix_partial_hits >= 1,
+        "the shared prompt never hit the prefix cache"
+    );
+    assert!(num(&doc, "telemetry.events_recorded") > 0.0);
+
+    // Field-by-field: the struct IS the registry, by name.
+    let pairs: Vec<(&str, f64)> = vec![
+        ("decode.steps", stats.steps as f64),
+        ("decode.failed_steps", stats.failed_steps as f64),
+        ("decode.micro_batches", stats.micro_batches as f64),
+        ("decode.sessions_opened", stats.sessions_opened as f64),
+        ("decode.sessions_closed", stats.sessions_closed as f64),
+        ("decode.exec_secs", stats.exec_secs),
+        ("decode.batched_steps", stats.batched_steps as f64),
+        ("decode.step_many_calls", stats.step_many_calls as f64),
+        ("decode.spills", stats.spills as f64),
+        ("decode.restores", stats.restores as f64),
+        ("decode.resident_peak", stats.resident_peak as f64),
+        ("decode.spilled_bytes", stats.spilled_bytes as f64),
+        ("decode.restore_secs", stats.restore_secs),
+        ("decode.spill_failures", stats.spill_failures as f64),
+        ("decode.draft_proposed", stats.draft_proposed as f64),
+        ("decode.draft_accepted", stats.draft_accepted as f64),
+        ("decode.verify_steps", stats.verify_steps as f64),
+        ("decode.lookahead_hits", stats.lookahead_hits as f64),
+        ("decode.prefills", stats.prefills as f64),
+        ("decode.failed_prefills", stats.failed_prefills as f64),
+        ("decode.prefill_tokens", stats.prefill_tokens as f64),
+        ("decode.prefill_chunks", stats.prefill_chunks as f64),
+        ("decode.ttft_secs", stats.ttft_secs),
+        ("decode.planned_rounds", stats.planned_rounds as f64),
+        ("decode.decode_rows", stats.decode_rows as f64),
+        ("decode.prefill_rows", stats.prefill_rows as f64),
+        ("decode.verify_rows", stats.verify_rows as f64),
+        ("decode.rows_per_pass_min", stats.rows_per_pass_min as f64),
+        ("decode.rows_per_pass_max", stats.rows_per_pass_max as f64),
+        ("decode.deadline_expired_steps", stats.deadline_expired_steps as f64),
+        ("decode.deadline_expired_prefills", stats.deadline_expired_prefills as f64),
+        ("decode.prefix_hits", stats.prefix_hits as f64),
+        ("decode.prefix_partial_hits", stats.prefix_partial_hits as f64),
+        ("decode.prefix_misses", stats.prefix_misses as f64),
+        ("decode.prefix_restored_tokens", stats.prefix_restored_tokens as f64),
+        ("decode.prefix_bytes_resident", stats.prefix_bytes_resident as f64),
+        ("decode.prefix_evictions", stats.prefix_evictions as f64),
+        ("decode.prefix_insertions", stats.prefix_insertions as f64),
+        ("decode.prefix_snapshots", stats.prefix_snapshots as f64),
+    ];
+    for (name, want) in pairs {
+        assert_eq!(num(&doc, name), want, "{name} drifted from its DecodeStats field");
+    }
+
+    // Per-tenant family, struct -> document ...
+    assert_eq!(stats.per_tenant["a"].opened, 4);
+    assert_eq!(stats.per_tenant["a"].expired_steps, 1);
+    assert_eq!(stats.per_tenant["b"].opened, 1);
+    for (tenant, load) in &stats.per_tenant {
+        let fields = [
+            ("opened", load.opened),
+            ("closed", load.closed),
+            ("steps", load.steps),
+            ("failed_steps", load.failed_steps),
+            ("expired_steps", load.expired_steps),
+        ];
+        for (field, want) in fields {
+            let key = format!("decode.tenant.{tenant}.{field}");
+            assert_eq!(num(&doc, &key), want as f64, "{key} drifted");
+        }
+    }
+    // ... and document -> struct: no tenant counter exists that the
+    // read view fails to surface.
+    let Json::Obj(map) = &doc else { panic!("snapshot is not an object") };
+    for (key, val) in map {
+        let Some(rest) = key.strip_prefix("decode.tenant.") else { continue };
+        let dot = rest.rfind('.').expect("tenant counter name");
+        let (tenant, field) = (&rest[..dot], &rest[dot + 1..]);
+        let load = stats
+            .per_tenant
+            .get(tenant)
+            .unwrap_or_else(|| panic!("{key}: tenant {tenant:?} missing from stats"));
+        let want = match field {
+            "opened" => load.opened,
+            "closed" => load.closed,
+            "steps" => load.steps,
+            "failed_steps" => load.failed_steps,
+            "expired_steps" => load.expired_steps,
+            other => panic!("{key}: unknown per-tenant field {other:?}"),
+        };
+        assert_eq!(val.as_f64(), Some(want as f64), "{key} drifted (doc side)");
+    }
+}
+
+/// Front-tier drift: `FrontStats.connections` / `bad_frames` and the
+/// per-tenant [`TenantLatency`] percentiles must match the `front.*`
+/// registry entries in the snapshot document exactly.
+#[test]
+fn front_stats_and_latency_never_drift_from_the_registry() {
+    let cfg = tiny_config();
+    let front = FrontServer::start(
+        "127.0.0.1:0",
+        HostDecoder::new(cfg.clone()).unwrap(),
+        DecodeServerConfig::default(),
+        FrontConfig::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+
+    // A clean tenant: one prompted open (a TTFT sample), five steps.
+    let mut c = FrontClient::connect(&addr).unwrap();
+    let prompt = deterministic_prompt(8, cfg.vocab, 4);
+    let opened = c.open("acme", &prompt, 0, 1).unwrap();
+    let mut tok = greedy_argmax(&opened.logits);
+    for _ in 0..5 {
+        tok = greedy_argmax(&c.step(opened.stream, tok, 0).unwrap().logits);
+    }
+    c.close_stream(opened.stream).unwrap();
+    drop(c);
+
+    // A hostile peer: its second frame is corrupted, so the deframer
+    // refuses it and the connection dies counted.
+    let plan = FaultPlan { corrupt_every: 2, ..FaultPlan::default() };
+    let mut bad = FrontClient::connect_with_faults(&addr, plan).unwrap();
+    let op = bad.open("chaos", &[], 0, 1).unwrap();
+    let err = bad.step(op.stream, 0, 0).unwrap_err();
+    assert_eq!(rejection_code(&err), Some(RejectCode::BadRequest), "{err:#}");
+    drop(bad);
+
+    let tele = front.telemetry();
+    let stats = front.shutdown();
+    let doc = tele.snapshot();
+
+    assert!(stats.connections >= 2);
+    assert!(stats.bad_frames >= 1);
+    assert_eq!(stats.leaked_sessions(), 0);
+    assert_eq!(num(&doc, "front.connections"), stats.connections as f64);
+    assert_eq!(num(&doc, "front.bad_frames"), stats.bad_frames as f64);
+
+    let (_, lat) = stats
+        .latency
+        .iter()
+        .find(|(t, _)| t.as_str() == "acme")
+        .expect("acme has a latency row");
+    assert_eq!(lat.ttft_samples, 1);
+    assert_eq!(lat.step_samples, 5);
+    let checks = [
+        ("front.tenant.acme.ttft_s", lat.ttft_p50, lat.ttft_p99, lat.ttft_samples),
+        ("front.tenant.acme.step_s", lat.step_p50, lat.step_p99, lat.step_samples),
+    ];
+    for (name, p50, p99, samples) in checks {
+        let h = doc.req(name).unwrap();
+        assert_eq!(h.usize_of("count").unwrap(), samples, "{name} count drifted");
+        assert_eq!(num(h, "p50"), p50, "{name} p50 drifted");
+        assert_eq!(num(h, "p99"), p99, "{name} p99 drifted");
+    }
+}
+
+/// Flight-recorder determinism under chaos: a mock clock, a one-session
+/// residency cap, an always-failing spill read-back, and a one-stream
+/// tenant quota produce an *exact* ten-event sequence — asserted field
+/// by field (kind, stream, tenant, trace id, detail, timestamp) from
+/// the JSONL fetched over the wire `trace` request. Wave sampling is
+/// off (`telemetry_sample: 0`), so nothing nondeterministic records.
+#[test]
+fn chaos_trace_records_an_exact_deterministic_event_sequence() {
+    let cfg = tiny_config();
+    let tele = Telemetry::with_clock(Clock::mock(), 0, 256);
+    let clock = tele.clock().clone();
+    let plan = FaultPlan { store_take_fail_every: 1, ..FaultPlan::default() };
+    let front = FrontServer::start_with_store_telemetry(
+        "127.0.0.1:0",
+        HostDecoder::new(cfg.clone()).unwrap(),
+        DecodeServerConfig {
+            max_resident_sessions: 1,
+            max_wait: Duration::from_millis(150),
+            prefill_chunk: 1,
+            prefill_budget: 1,
+            telemetry_sample: 0,
+            ..DecodeServerConfig::default()
+        },
+        FrontConfig {
+            tenant_defaults: TenantConfig { max_streams: 1, ..TenantConfig::default() },
+            ..FrontConfig::default()
+        },
+        plan.wrap_store(Box::new(MemStore::new())),
+        tele.clone(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+    let mut c = FrontClient::connect(&addr).unwrap();
+
+    // (1) Stream A opens under trace id 7: `stream_open`.
+    clock.set_us(1_000);
+    let a = c.open_traced("acme", &[], 0, 1, 7).unwrap();
+
+    // (2) A second acme open trips the one-stream quota: `shed`.
+    clock.set_us(2_000);
+    let err = c.open_traced("acme", &[], 0, 1, 8).unwrap_err();
+    assert_eq!(rejection_code(&err), Some(RejectCode::QuotaExceeded), "{err:#}");
+
+    // (3) A 40ms budget under a 150ms fill window is always past due at
+    // the boundary sweep: `deadline_step`; the session does not advance.
+    clock.set_us(3_000);
+    let err = c.step(a.stream, 1, 40).unwrap_err();
+    assert_eq!(rejection_code(&err), Some(RejectCode::DeadlineExpired), "{err:#}");
+
+    // (4, 5) Opening B under a one-session cap evicts A *before* B's
+    // open event: `spill`(A) then `stream_open`(B).
+    clock.set_us(4_000);
+    let _b = c.open_traced("beta", &[], 0, 1, 9).unwrap();
+
+    // (6) Stepping A forces a restore; every store read-back faults:
+    // `spill_fault` with detail "store_take", and only A disconnects.
+    clock.set_us(5_000);
+    let err = c.step(a.stream, 1, 0).unwrap_err();
+    assert_eq!(rejection_code(&err), Some(RejectCode::Internal), "{err:#}");
+
+    // (7, 8, 9) A prompted open evicts B (`spill`), admits C with its
+    // prompt length (`stream_open`, a = 4000), then its 2ms budget
+    // lapses mid-ingest at one token per round: `deadline_prefill`.
+    clock.set_us(6_000);
+    let prompt = deterministic_prompt(4000, cfg.vocab, 9);
+    let err = c.open_traced("gamma", &prompt, 2, 1, 11).unwrap_err();
+    assert_eq!(rejection_code(&err), Some(RejectCode::DeadlineExpired), "{err:#}");
+
+    // The whole story so far, over the wire — exact, in order.
+    let jsonl = c.trace(0).unwrap();
+    let lines: Vec<&str> = jsonl.lines().collect();
+    let expected: [(&str, usize, &str, usize, &str, usize); 9] = [
+        ("stream_open", 0, "acme", 7, "", 1_000),
+        ("shed", 0, "acme", 8, "quota_exceeded", 2_000),
+        ("deadline_step", 0, "acme", 7, "", 3_000),
+        ("spill", 0, "acme", 7, "", 4_000),
+        ("stream_open", 1, "beta", 9, "", 4_000),
+        ("spill_fault", 0, "acme", 7, "store_take", 5_000),
+        ("spill", 1, "beta", 9, "", 6_000),
+        ("stream_open", 2, "gamma", 11, "", 6_000),
+        ("deadline_prefill", 2, "gamma", 11, "", 6_000),
+    ];
+    assert_eq!(lines.len(), expected.len(), "unexpected event count:\n{jsonl}");
+    for (i, (line, want)) in lines.iter().zip(&expected).enumerate() {
+        let ev = Json::parse(line).unwrap_or_else(|e| panic!("line {i}: {e:#}\n{line}"));
+        let (kind, stream, tenant, trace, detail, t_us) = *want;
+        assert_eq!(ev.usize_of("seq").unwrap(), i, "event {i} seq");
+        assert_eq!(ev.str_of("event").unwrap(), kind, "event {i} kind:\n{line}");
+        assert_eq!(ev.usize_of("stream").unwrap(), stream, "event {i} stream:\n{line}");
+        assert_eq!(ev.str_of("tenant").unwrap(), tenant, "event {i} tenant:\n{line}");
+        assert_eq!(ev.usize_of("trace").unwrap(), trace, "event {i} trace:\n{line}");
+        assert_eq!(ev.str_of("detail").unwrap(), detail, "event {i} detail:\n{line}");
+        assert_eq!(ev.usize_of("t_us").unwrap(), t_us, "event {i} t_us:\n{line}");
+    }
+    // Kind-specific payloads: spills carry snapshot bytes, C's open
+    // carries its prompt length.
+    let spill_a = Json::parse(lines[3]).unwrap();
+    assert!(spill_a.usize_of("a").unwrap() > 0, "spill recorded no snapshot bytes");
+    let open_c = Json::parse(lines[7]).unwrap();
+    assert_eq!(open_c.usize_of("a").unwrap(), 4000, "open C lost its prompt length");
+
+    // (10) Teardown: dropping the connection closes B engine-side —
+    // the only live stream, so exactly one `stream_close`. A's earlier
+    // fault-path close already happened without an event (idempotent).
+    clock.set_us(7_000);
+    drop(c);
+    let stats = front.shutdown();
+    assert_eq!(stats.leaked_sessions(), 0);
+
+    let events = tele.recorder().events();
+    assert_eq!(events.len(), 10, "teardown added more than B's close");
+    let last = &events[9];
+    assert_eq!(last.kind, EventKind::StreamClose);
+    assert_eq!(last.stream, 1);
+    assert_eq!(last.tenant, "beta");
+    assert_eq!(last.trace, 9);
+    assert_eq!(last.detail, "");
+    assert_eq!(last.t_us, 7_000);
+    assert_eq!(tele.recorder().dropped(), 0, "the 256-event ring overflowed");
+}
