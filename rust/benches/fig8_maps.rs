@@ -1,24 +1,125 @@
-//! Fig. 8 — near-field vs far-field attention maps of a trained FMM LM.
+//! Fig. 8 companion — feature-map sweep for the far field, plus the
+//! trained-LM attention maps.
 //!
-//! Trains the FMMformer (1-kernel + band5) LM briefly, extracts the
-//! blended banded (D) and low-rank (L) matrices per head via the
-//! `fmm_maps` artifact, and renders them (PGM + terminal ASCII), plus the
-//! band-mass statistic quantifying how near-field each component is.
+//! Two parts:
 //!
+//! 1. **Host-side feature-map sweep (always runs).** The Flexformer
+//!    angle of the paper: the far field is a *set* of feature maps
+//!    φ ∈ {elu, elu_neg, tanh}, and adding maps buys rank. The sweep
+//!    scores every map combination × multilevel depth {0..3} against
+//!    the causal softmax oracle (relative L2 of the blended output) on
+//!    seeded data — no XLA artifacts, no training. Depth 0 is the
+//!    paper's flat `w1·D + w2·L` blend; deeper settings swap the
+//!    global far field for the H-matrix hierarchy. Emits
+//!    `reports/BENCH_maps.json` (validated by `ci.sh --bench`).
+//!
+//! 2. **Trained-LM maps (gated).** Trains the FMM LM briefly, extracts
+//!    the blended banded (D) and low-rank (L) matrices per head via the
+//!    `fmm_maps` artifact, renders them (PGM + terminal ASCII) with the
+//!    band-mass statistic. Needs compiled XLA artifacts; when they are
+//!    absent the bench prints a skip notice instead of failing.
+//!
+//!     cargo bench --bench fig8_maps -- --quick
 //!     cargo bench --bench fig8_maps -- --train-steps 80
 
 use anyhow::Result;
-use fmmformer::analysis::{ascii_heatmap, band_mass_fraction, write_pgm};
-use fmmformer::bench::{report_dir, Table};
+use fmmformer::attention::{multilevel_attention, softmax_attention, FeatureMap};
+use fmmformer::bench::{report_dir, save_report_json, Table};
 use fmmformer::cli::Args;
-use fmmformer::coordinator::Coordinator;
-use fmmformer::data::Split;
-use fmmformer::runtime::Artifact;
+use fmmformer::rng::Pcg64;
 use fmmformer::tensor::Tensor;
-use fmmformer::train::Trainer;
+use fmmformer::util::json::Json;
 
-fn main() -> Result<()> {
-    let args = Args::parse(&[])?;
+/// Every non-empty subset of the paper's three feature maps, ordered
+/// by size — the sweep axis of the Flexformer comparison.
+const MAP_SETS: [&[FeatureMap]; 7] = [
+    &[FeatureMap::Elu],
+    &[FeatureMap::EluNeg],
+    &[FeatureMap::Tanh],
+    &[FeatureMap::Elu, FeatureMap::EluNeg],
+    &[FeatureMap::Elu, FeatureMap::Tanh],
+    &[FeatureMap::EluNeg, FeatureMap::Tanh],
+    &[FeatureMap::Elu, FeatureMap::EluNeg, FeatureMap::Tanh],
+];
+const DEPTHS: [usize; 4] = [0, 1, 2, 3];
+
+fn map_names(set: &[FeatureMap]) -> String {
+    let names: Vec<&str> = set
+        .iter()
+        .map(|m| match m {
+            FeatureMap::Elu => "elu",
+            FeatureMap::EluNeg => "elu_neg",
+            FeatureMap::Tanh => "tanh",
+        })
+        .collect();
+    names.join("+")
+}
+
+fn rel_l2(got: &Tensor, want: &Tensor) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (g, w) in got.data().iter().zip(want.data()) {
+        num += f64::from(g - w).powi(2);
+        den += f64::from(*w).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+/// Part 1: the host-side sweep. Pure Rust, deterministic, always runs.
+fn feature_map_sweep(quick: bool) -> Result<()> {
+    let n = if quick { 96 } else { 192 };
+    let (d, dv, bw) = (16usize, 16usize, 5usize);
+    let (w1, w2) = (0.5f32, 0.5f32);
+    let mut rng = Pcg64::seeded(8);
+    let q = Tensor::randn(&[n, d], &mut rng);
+    let k = Tensor::randn(&[n, d], &mut rng);
+    let v = Tensor::randn(&[n, dv], &mut rng);
+    let oracle = softmax_attention(&q, &k, &v, true);
+
+    let mut tbl = Table::new(
+        "Feature-map sweep: rel. L2 vs causal softmax (band5 blend)",
+        &["maps", "depth 0", "depth 1", "depth 2", "depth 3"],
+    );
+    let mut runs: Vec<Json> = Vec::new();
+    for set in MAP_SETS {
+        let mut cells = vec![map_names(set)];
+        for levels in DEPTHS {
+            let out = multilevel_attention(&q, &k, &v, bw, set, w1, w2, levels);
+            let err = rel_l2(&out, &oracle);
+            cells.push(format!("{err:.4}"));
+            runs.push(Json::obj(vec![
+                ("maps", Json::str(&map_names(set))),
+                ("n_maps", Json::Num(set.len() as f64)),
+                ("depth", Json::Num(levels as f64)),
+                ("rel_l2", Json::Num(err)),
+            ]));
+        }
+        tbl.row(cells);
+    }
+    tbl.print();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fig8_maps")),
+        ("oracle", Json::str("softmax_causal")),
+        ("seq_len", Json::Num(n as f64)),
+        ("head_dim", Json::Num(d as f64)),
+        ("bandwidth", Json::Num(bw as f64)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let path = save_report_json("BENCH_maps.json", &doc)?;
+    println!("machine-readable -> {path:?}");
+    Ok(())
+}
+
+/// Part 2: the trained-LM maps. Requires compiled XLA artifacts.
+#[allow(unused)]
+fn trained_maps(args: &Args) -> Result<()> {
+    use fmmformer::analysis::{ascii_heatmap, band_mass_fraction, write_pgm};
+    use fmmformer::coordinator::Coordinator;
+    use fmmformer::data::Split;
+    use fmmformer::runtime::Artifact;
+    use fmmformer::train::Trainer;
+
     let train_steps = args.usize_or("train-steps", 80)?;
     let coord = Coordinator::new(&fmmformer::artifacts_dir(args.get("artifacts")),
                                  args.u64_or("seed", 0)?)?;
@@ -85,5 +186,14 @@ fn main() -> Result<()> {
         "expected shape (paper): D mass ~1.0 in-band (short-range); \
          L mass spread out-of-band (long-range)"
     );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick"])?;
+    feature_map_sweep(args.has("quick"))?;
+    if let Err(e) = trained_maps(&args) {
+        eprintln!("skipping trained-LM maps (needs compiled XLA artifacts): {e:#}");
+    }
     Ok(())
 }

@@ -53,6 +53,7 @@ fn bench_config() -> DecodeConfig {
         kernels: vec![FeatureMap::Elu],
         w1: 0.6,
         w2: 0.9,
+        levels: 0,
         seed: 7,
     }
 }

@@ -1,0 +1,213 @@
+//! Multilevel hierarchy bench (system extension) — depth vs throughput
+//! vs state size.
+//!
+//! The H-matrix far field trades a little per-token summary work for an
+//! exact dyadic window that grows with depth, while the spillable state
+//! stays O(log n). This bench measures the trade across depths
+//! {0, 1, 2, 3} and pins the two correctness contracts on every run:
+//!
+//!   * **batch ≡ incremental.** At each depth, the batch
+//!     `multilevel_attention` rows and a stepped
+//!     `MultilevelDecodeState` must agree *bit for bit* (shared
+//!     recurrence), and the served greedy streams must be bit-identical
+//!     to a scalar replay — the bench fails loudly on any divergence.
+//!   * **O(log n) state.** A stream's FMMS snapshot at 16k context must
+//!     be at most 2× its 1k-context size at every depth (the binary
+//!     counter plateaus; deeper only adds levels, not tokens).
+//!
+//!     cargo bench --bench serve_multilevel
+//!     cargo bench --bench serve_multilevel -- --quick
+//!     cargo bench --bench serve_multilevel -- --sessions 16 --tokens 64
+//!
+//! Emits `reports/BENCH_multilevel.json` (per-depth tok/s, per-depth ×
+//! per-context snapshot bytes, the exactness flags) — validated by
+//! `ci.sh --bench`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use fmmformer::attention::{multilevel_attention, FeatureMap, MultilevelDecodeState};
+use fmmformer::bench::{save_report_json, Table};
+use fmmformer::cli::Args;
+use fmmformer::rng::Pcg64;
+use fmmformer::serve::decode::{
+    greedy_argmax, run_greedy_sessions_collect, DecodeConfig, DecodeServer,
+    DecodeServerConfig, DecoderSession, HostDecoder,
+};
+use fmmformer::tensor::Tensor;
+use fmmformer::util::json::Json;
+
+const DEPTHS: [usize; 4] = [0, 1, 2, 3];
+const CONTEXTS: [usize; 3] = [1024, 4096, 16384];
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("finite throughput"));
+    xs[xs.len() / 2]
+}
+
+fn bench_config(levels: usize) -> DecodeConfig {
+    DecodeConfig { levels, ..DecodeConfig::default() }
+}
+
+/// Batch rows vs stepped state at the attention level, bit for bit.
+/// A non-power-of-two length leaves every level of the counter
+/// partially occupied mid-run — the adversarial case.
+fn check_batch_vs_incremental(levels: usize) -> Result<()> {
+    let (n, d, dv) = (217usize, 8, 8);
+    let kernels = [FeatureMap::Elu, FeatureMap::EluNeg];
+    let (w1, w2, bw) = (0.6f32, 0.9f32, 4usize);
+    let mut rng = Pcg64::seeded(11 + levels as u64);
+    let q = Tensor::randn(&[n, d], &mut rng);
+    let k = Tensor::randn(&[n, d], &mut rng);
+    let v = Tensor::randn(&[n, dv], &mut rng);
+    let batch = multilevel_attention(&q, &k, &v, bw, &kernels, w1, w2, levels);
+    let mut st = MultilevelDecodeState::new(d, dv, bw, &kernels, w1, w2, levels);
+    for t in 0..n {
+        let row = st.step(q.row(t), k.row(t), v.row(t));
+        if row != batch.row(t) {
+            bail!(
+                "depth {levels} row {t}: incremental step diverged from the \
+                 batch multilevel_attention row — the shared recurrence broke"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// FMMS snapshot bytes of one stream stepped through the context grid.
+fn snapshot_bytes_by_context(levels: usize) -> Result<Vec<(usize, usize)>> {
+    let cfg = bench_config(levels);
+    let vocab = cfg.vocab;
+    let model = Arc::new(HostDecoder::new(cfg)?);
+    let mut sess = DecoderSession::new(model);
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    for &ctx in &CONTEXTS {
+        while pos < ctx {
+            sess.step(((pos * 7 + 3) % vocab) as i32)?;
+            pos += 1;
+        }
+        out.push((ctx, sess.snapshot()?.len()));
+    }
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick"])?;
+    let quick = args.has("quick");
+    let sessions = args.usize_or("sessions", if quick { 8 } else { 16 })?;
+    let tokens = args.usize_or("tokens", if quick { 16 } else { 48 })?;
+    let iters = args.usize_or("iters", if quick { 1 } else { 3 })?.max(1);
+
+    println!(
+        "multilevel bench: depths {DEPTHS:?}, contexts {CONTEXTS:?}, \
+         {sessions} streams x {tokens} tokens, median of {iters} iter(s)"
+    );
+
+    let mut tbl = Table::new(
+        "Multilevel far field: throughput and snapshot size vs depth",
+        &["depth", "tok/s", "snap@1k", "snap@4k", "snap@16k", "exact"],
+    );
+    let mut runs: Vec<Json> = Vec::new();
+    for levels in DEPTHS {
+        // Exactness gates first: a broken recurrence must fail the
+        // bench before any number is reported.
+        check_batch_vs_incremental(levels)?;
+
+        let cfg = bench_config(levels);
+        let vocab = cfg.vocab;
+        let mut tps: Vec<f64> = Vec::with_capacity(iters);
+        let mut served: Option<Vec<Vec<i32>>> = None;
+        for _ in 0..iters {
+            let model = HostDecoder::new(cfg.clone())?;
+            let server = DecodeServer::start(model, DecodeServerConfig::default());
+            let client = server.client();
+            let t0 = std::time::Instant::now();
+            let (_lats, streams) =
+                run_greedy_sessions_collect(&client, sessions, tokens, vocab)?;
+            let wall = t0.elapsed().as_secs_f64();
+            drop(client);
+            server.shutdown();
+            match &served {
+                None => served = Some(streams),
+                Some(base) if base != &streams => {
+                    bail!("depth {levels}: greedy tokens varied across iterations")
+                }
+                Some(_) => {}
+            }
+            tps.push((sessions * tokens) as f64 / wall.max(1e-12));
+        }
+        // Served streams vs a scalar replay, bit for bit — the unified
+        // planner must not perturb a single logit at any depth.
+        let served = served.expect("at least one iter");
+        let model = Arc::new(HostDecoder::new(cfg.clone())?);
+        for (s, tokens_out) in served.iter().enumerate() {
+            let mut sess = DecoderSession::new(model.clone());
+            let mut tok = (s % vocab) as i32;
+            for (step, &got) in tokens_out.iter().enumerate() {
+                let want = greedy_argmax(&sess.step(tok)?);
+                if got != want {
+                    bail!(
+                        "depth {levels} stream {s} step {step}: served token \
+                         {got} != scalar replay {want}"
+                    );
+                }
+                tok = want;
+            }
+        }
+
+        let snaps = snapshot_bytes_by_context(levels)?;
+        let (b1k, b16k) = (snaps[0].1, snaps[2].1);
+        if b16k > 2 * b1k {
+            bail!(
+                "depth {levels}: snapshot grew {b1k} -> {b16k} bytes between \
+                 1k and 16k context — state is not O(log n)"
+            );
+        }
+
+        let tok_per_sec = median(&mut tps);
+        tbl.row(vec![
+            levels.to_string(),
+            format!("{tok_per_sec:.0}"),
+            snaps[0].1.to_string(),
+            snaps[1].1.to_string(),
+            snaps[2].1.to_string(),
+            "true".to_string(),
+        ]);
+        runs.push(Json::obj(vec![
+            ("depth", Json::Num(levels as f64)),
+            ("tokens_per_sec", Json::Num(tok_per_sec)),
+            (
+                "snapshot_bytes",
+                Json::Arr(
+                    snaps
+                        .iter()
+                        .map(|&(ctx, bytes)| {
+                            Json::obj(vec![
+                                ("context", Json::Num(ctx as f64)),
+                                ("bytes", Json::Num(bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("bit_identical", Json::Bool(true)),
+            ("state_o_log_n", Json::Bool(true)),
+        ]));
+    }
+    tbl.print();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_multilevel")),
+        ("sessions", Json::Num(sessions as f64)),
+        ("tokens_per_session", Json::Num(tokens as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("contexts", Json::Arr(CONTEXTS.iter().map(|&c| Json::Num(c as f64)).collect())),
+        ("bit_identical", Json::Bool(true)),
+        ("state_o_log_n", Json::Bool(true)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let path = save_report_json("BENCH_multilevel.json", &doc)?;
+    println!("machine-readable -> {path:?}");
+    Ok(())
+}

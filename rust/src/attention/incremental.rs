@@ -103,6 +103,10 @@ impl FmmDecodeState {
         self.bandwidth
     }
 
+    pub fn key_dim(&self) -> usize {
+        self.d
+    }
+
     pub fn value_dim(&self) -> usize {
         self.dv
     }

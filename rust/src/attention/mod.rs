@@ -9,13 +9,44 @@
 //!
 //! All functions are single-head: `q, k (n×d)`, `v (n×dv)`, row-major.
 //!
-//! [`incremental`] carries the same math into autoregressive serving:
-//! [`FmmDecodeState`] produces row `t` of the batch causal
-//! [`fmm_attention`] one token at a time at O(1) cost per token.
+//! # Subsystem map
+//!
+//! The paper decomposes attention into a **banded near field** and a
+//! **low-rank far field**; this module carries that decomposition
+//! through three tiers and two execution forms:
+//!
+//! | tier | batch form | what the far field is |
+//! |---|---|---|
+//! | exact | [`softmax_attention`] | no decomposition — the O(N²) oracle |
+//! | banded | [`banded_attention`] | dropped; band only (paper's `D`) |
+//! | low-rank | [`linear_attention`], blended by [`fmm_attention`] | one global `φ(K)ᵀV` moment pair per feature map (paper's `L`, eq. 11) |
+//! | multilevel | [`multilevel::multilevel_attention`] | an H-matrix hierarchy: exact dyadic block moments for recent context, multipole-compressed summaries beyond (Fast Multipole Attention) |
+//!
+//! **The batch ≡ incremental contract.** Every servable tier has an
+//! incremental decode form that produces row `t` of its batch causal
+//! counterpart one token at a time — [`FmmDecodeState`] for the flat
+//! blend (O(1) state per token) and
+//! [`multilevel::MultilevelDecodeState`] for the hierarchy (O(log n)
+//! state, coarse summaries updating at power-of-two strides). The
+//! incremental forms run the *same fused kernel primitives in the same
+//! order* as the batch loops, so the pairs agree bitwise — not merely
+//! to round-off — and the serve stack's spill/restore, checkpoint/
+//! rollback, and prefix-fork guarantees inherit that exactness. The
+//! multilevel tier at depth 0 degenerates to the flat blend bit for
+//! bit, so enabling the subsystem changes nothing until a config asks
+//! for depth ≥ 1. Pinned by `tests/decode_engine.rs` and
+//! `tests/multilevel.rs`.
+//!
+//! [`incremental`] also hosts the ragged batched advance
+//! ([`incremental::advance_many`]) behind the unified planner;
+//! [`multilevel::advance_many_heads`] is its flavor-agnostic twin over
+//! [`multilevel::HeadState`].
 
 pub mod incremental;
+pub mod multilevel;
 
 pub use incremental::FmmDecodeState;
+pub use multilevel::{multilevel_attention, HeadState, MultilevelDecodeState};
 
 use crate::kernel;
 use crate::tensor::Tensor;

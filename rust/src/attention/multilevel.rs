@@ -1,0 +1,1299 @@
+//! Multilevel (H-matrix) far-field attention — Fast Multipole Attention
+//! on top of the paper's near/far split.
+//!
+//! The paper's banded + low-rank decomposition is the depth-1 case of a
+//! multilevel hierarchy (Kang et al., "Fast Multipole Attention"): keep
+//! the banded near field exact, and group the far field into dyadic
+//! blocks of progressively coarser resolution the further back they sit.
+//! This module implements that hierarchy in two provably-matching forms:
+//!
+//! * [`multilevel_attention`] — the batch causal form for training/eval,
+//! * [`MultilevelDecodeState`] — the incremental decode form, whose
+//!   coarse-level summaries update only at power-of-two strides.
+//!
+//! **The recurrence is shared.** Both forms drive the same [`MlFar`]
+//! binary-counter recurrence, one token at a time, through the same
+//! fused [`crate::kernel`] primitives in the same order — so batch and
+//! incremental agree *bitwise* by construction (pinned by tests anyway).
+//!
+//! # The dyadic hierarchy
+//!
+//! With `levels = L`, the far field past the band is carried as:
+//!
+//! * `pending[ℓ]`, `ℓ ∈ 0..L` — at most one dyadic block per level,
+//!   holding **exact** per-block moments `S_b = Σ φ(k)ᵀv`, `z_b = Σ φ(k)`
+//!   plus raw key/value sums. Level ℓ blocks span exactly `2^ℓ` tokens;
+//!   occupancy follows the bits of `pos mod 2^L` like a binary counter,
+//!   so ingesting one token does amortized O(1) merges and a level-ℓ
+//!   summary updates exactly every `2^ℓ` tokens.
+//! * `acc` — everything older than the counter window, compressed by the
+//!   *multipole* step: a graduating `2^L`-token block is collapsed
+//!   through its mean key `k̄` (`acc_z += 2^L·φ(k̄)`,
+//!   `acc_s += φ(k̄)ᵀ·Σv`) — coarse summaries for the most distant
+//!   context, O(1) state however long the stream runs.
+//!
+//! Readout blends the sources oldest→newest, each block normalized by
+//! its own denominator and weighted by its token mass
+//! `count/total` — block-level attention over per-block linear
+//! attention. Total state is `O(L) = O(log n)` block summaries per head,
+//! and the exported view serializes only *occupied* blocks, so spilled
+//! session bytes plateau instead of growing with context.
+//!
+//! # Depth 0 is the flat paper path, bit for bit
+//!
+//! `levels == 0` short-circuits the counter entirely: every token runs
+//! the exact per-token moment update of the flat
+//! [`linear_attention`](super::linear_attention) causal branch (same
+//! primitives, same order), readout sees the single accumulator with
+//! weight `total/total == 1.0`, and the blend mirrors
+//! [`fmm_attention`](super::fmm_attention)'s `scale`/`add` chain — so
+//! depth 0 output is **bit-identical** to the existing paths (pinned in
+//! `tests/multilevel.rs`).
+//!
+//! [`HeadState`] wraps the flat and multilevel per-head states behind
+//! one API so `serve/decode.rs` threads either through the unified
+//! planner ([`advance_many_heads`]), spill/restore, and the prefix
+//! cache unchanged.
+
+use anyhow::{bail, Result};
+
+use super::incremental::{feature_map_code, u64_to_words, words_to_u64, FmmDecodeState};
+use super::{banded_attention, guard_den, FeatureMap};
+use crate::kernel;
+use crate::tensor::Tensor;
+use crate::util::fnv1a64;
+
+/// Hard ceiling on hierarchy depth: `2^24` tokens of exact-moment
+/// window is far beyond any context this engine serves, and the cap
+/// keeps `1usize << levels` trivially safe on every target.
+pub const MAX_LEVELS: usize = 24;
+
+/// `f32` words of header in a [`MultilevelDecodeState::export_into`]
+/// view — same layout as the flat state: fingerprint (2), position (2),
+/// ring occupancy (1). Raw `u32` bit patterns, copied never computed.
+const EXPORT_HEADER_WORDS: usize = 5;
+
+/// One dyadic far-field block: exact moments plus the raw sums the
+/// multipole compression needs when the block graduates past the last
+/// level. `s[ki]` is d×dv row-major per feature map, `z[ki]` is d.
+#[derive(Debug, Clone)]
+struct Block {
+    count: u64,
+    ksum: Vec<f32>,
+    vsum: Vec<f32>,
+    s: Vec<f32>,
+    z: Vec<f32>,
+}
+
+impl Block {
+    fn zeroed(d: usize, dv: usize, r: usize) -> Block {
+        Block {
+            count: 0,
+            ksum: vec![0.0; d],
+            vsum: vec![0.0; dv],
+            s: vec![0.0; r * d * dv],
+            z: vec![0.0; r * d],
+        }
+    }
+
+    /// Overwrite this block with a single token's exact moments.
+    /// `phi_k` is caller scratch (d wide).
+    fn fill_token(
+        &mut self,
+        k_t: &[f32],
+        v_t: &[f32],
+        kernels: &[FeatureMap],
+        phi_k: &mut [f32],
+    ) {
+        let d = self.ksum.len();
+        let dv = self.vsum.len();
+        self.count = 1;
+        self.ksum.copy_from_slice(k_t);
+        self.vsum.copy_from_slice(v_t);
+        for (ki, fm) in kernels.iter().enumerate() {
+            for (p, x) in phi_k.iter_mut().zip(k_t) {
+                *p = fm.apply(*x);
+            }
+            self.z[ki * d..(ki + 1) * d].copy_from_slice(phi_k);
+            let sk = &mut self.s[ki * d * dv..(ki + 1) * d * dv];
+            sk.fill(0.0);
+            kernel::rank1_update(sk, phi_k, v_t);
+        }
+    }
+
+    /// Merge another block into this one (`self` is the newer half; the
+    /// addition order is fixed, so merges are deterministic and batch ≡
+    /// incremental stays bitwise).
+    fn absorb(&mut self, other: &Block) {
+        self.count += other.count;
+        kernel::axpy(1.0, &other.ksum, &mut self.ksum);
+        kernel::axpy(1.0, &other.vsum, &mut self.vsum);
+        kernel::axpy(1.0, &other.s, &mut self.s);
+        kernel::axpy(1.0, &other.z, &mut self.z);
+    }
+
+    /// `f32` words this block contributes to an exported view.
+    fn export_words(d: usize, dv: usize, r: usize) -> usize {
+        2 + d + dv + r * d * dv + r * d
+    }
+}
+
+/// The shared far-field recurrence: binary-counter dyadic blocks plus
+/// the multipole-compressed accumulator. Drives both the batch and the
+/// incremental form one token at a time.
+#[derive(Debug, Clone)]
+struct MlFar {
+    d: usize,
+    dv: usize,
+    kernels: Vec<FeatureMap>,
+    levels: usize,
+    /// One slot per level; `occupied[ℓ]` mirrors bit ℓ of
+    /// `total mod 2^levels` (the binary-counter invariant).
+    pending: Vec<Block>,
+    occupied: Vec<bool>,
+    /// Merge scratch — swapped into a pending slot on placement, so the
+    /// steady state allocates nothing.
+    carry: Block,
+    /// Multipole accumulator over every graduated `2^levels` block.
+    acc_s: Vec<f32>,
+    acc_z: Vec<f32>,
+    acc_count: u64,
+    /// Tokens ingested so far.
+    total: u64,
+    /// Coarse-summary work performed (level merges + multipole
+    /// compressions) since the last drain — telemetry food, not state.
+    summary_updates: u64,
+    // Scratch so ingest/readout allocate nothing on the hot path.
+    phi_q: Vec<f32>,
+    phi_k: Vec<f32>,
+    kbar: Vec<f32>,
+}
+
+impl MlFar {
+    fn new(d: usize, dv: usize, kernels: &[FeatureMap], levels: usize) -> MlFar {
+        assert!(levels <= MAX_LEVELS, "levels {levels} exceeds {MAX_LEVELS}");
+        let r = kernels.len();
+        MlFar {
+            d,
+            dv,
+            kernels: kernels.to_vec(),
+            levels,
+            pending: (0..levels).map(|_| Block::zeroed(d, dv, r)).collect(),
+            occupied: vec![false; levels],
+            carry: Block::zeroed(d, dv, r),
+            acc_s: vec![0.0; r * d * dv],
+            acc_z: vec![0.0; r * d],
+            acc_count: 0,
+            total: 0,
+            summary_updates: 0,
+            phi_q: vec![0.0; d],
+            phi_k: vec![0.0; d],
+            kbar: vec![0.0; d],
+        }
+    }
+
+    fn reset(&mut self) {
+        self.occupied.iter_mut().for_each(|o| *o = false);
+        self.acc_s.iter_mut().for_each(|x| *x = 0.0);
+        self.acc_z.iter_mut().for_each(|x| *x = 0.0);
+        self.acc_count = 0;
+        self.total = 0;
+    }
+
+    /// Ingest one token's `(k_t, v_t)` into the hierarchy.
+    fn ingest(&mut self, k_t: &[f32], v_t: &[f32]) {
+        let (d, dv) = (self.d, self.dv);
+        if self.levels == 0 {
+            // Flat fast path: the exact per-token update sequence of the
+            // batch `linear_attention` causal branch / the flat decode
+            // state's `far_field` — depth 0 stays bit-identical to the
+            // paper path by running the same ops, not by algebraic luck.
+            for (ki, fm) in self.kernels.iter().enumerate() {
+                for (p, x) in self.phi_k.iter_mut().zip(k_t) {
+                    *p = fm.apply(*x);
+                }
+                let zk = &mut self.acc_z[ki * d..(ki + 1) * d];
+                kernel::axpy(1.0, &self.phi_k, zk);
+                let sk = &mut self.acc_s[ki * d * dv..(ki + 1) * d * dv];
+                kernel::rank1_update(sk, &self.phi_k, v_t);
+            }
+            self.acc_count += 1;
+            self.total += 1;
+            return;
+        }
+        {
+            let MlFar { carry, kernels, phi_k, .. } = self;
+            carry.fill_token(k_t, v_t, kernels, phi_k);
+        }
+        // Binary-counter cascade: merge occupied levels into the carry
+        // until a free slot (or the top) is reached. A level-ℓ summary
+        // therefore updates exactly every 2^ℓ tokens.
+        let mut lvl = 0;
+        while lvl < self.levels && self.occupied[lvl] {
+            self.carry.absorb(&self.pending[lvl]);
+            self.occupied[lvl] = false;
+            self.summary_updates += 1;
+            lvl += 1;
+        }
+        if lvl < self.levels {
+            std::mem::swap(&mut self.pending[lvl], &mut self.carry);
+            self.occupied[lvl] = true;
+        } else {
+            self.compress_carry();
+            self.summary_updates += 1;
+        }
+        self.total += 1;
+    }
+
+    /// Multipole compression of a graduating `2^levels` block: collapse
+    /// it through its mean key `k̄` — `acc_z += count·φ(k̄)`,
+    /// `acc_s += φ(k̄)ᵀ·Σv` — so the accumulator's readout ratio is the
+    /// φ-weighted mixture of block mean-values.
+    fn compress_carry(&mut self) {
+        let (d, dv) = (self.d, self.dv);
+        let inv = 1.0 / (self.carry.count as f32);
+        for (kb, ks) in self.kbar.iter_mut().zip(&self.carry.ksum) {
+            *kb = ks * inv;
+        }
+        for (ki, fm) in self.kernels.iter().enumerate() {
+            for (p, x) in self.phi_k.iter_mut().zip(&self.kbar) {
+                *p = fm.apply(*x);
+            }
+            let zk = &mut self.acc_z[ki * d..(ki + 1) * d];
+            kernel::axpy(self.carry.count as f32, &self.phi_k, zk);
+            let sk = &mut self.acc_s[ki * d * dv..(ki + 1) * d * dv];
+            kernel::rank1_update(sk, &self.phi_k, &self.carry.vsum);
+        }
+        self.acc_count += self.carry.count;
+    }
+
+    /// Accumulate the far-field row for `q_t` into `far` (caller zeroes
+    /// or owns the accumulation). Sources run oldest→newest — the
+    /// multipole accumulator, then pending levels coarse to fine — each
+    /// normalized by its own denominator and weighted by its token
+    /// mass. At depth 0 the single source has weight `total/total ==
+    /// 1.0` exactly, reproducing the flat readout bit for bit.
+    fn readout(&mut self, q_t: &[f32], far: &mut [f32]) {
+        let (d, dv) = (self.d, self.dv);
+        if self.total == 0 {
+            return;
+        }
+        let total = self.total as f32;
+        for (ki, fm) in self.kernels.iter().enumerate() {
+            for (p, x) in self.phi_q.iter_mut().zip(q_t) {
+                *p = fm.apply(*x);
+            }
+            if self.acc_count > 0 {
+                let zk = &self.acc_z[ki * d..(ki + 1) * d];
+                let den = guard_den(kernel::dot(&self.phi_q, zk));
+                let wgt = (self.acc_count as f32) / total;
+                let sk = &self.acc_s[ki * d * dv..(ki + 1) * d * dv];
+                kernel::vecmat_acc(&self.phi_q, sk, wgt / den, far);
+            }
+            for lvl in (0..self.levels).rev() {
+                if !self.occupied[lvl] {
+                    continue;
+                }
+                let b = &self.pending[lvl];
+                let zk = &b.z[ki * d..(ki + 1) * d];
+                let den = guard_den(kernel::dot(&self.phi_q, zk));
+                let wgt = (b.count as f32) / total;
+                let sk = &b.s[ki * d * dv..(ki + 1) * d * dv];
+                kernel::vecmat_acc(&self.phi_q, sk, wgt / den, far);
+            }
+        }
+    }
+
+    /// Far-summary bytes *resident right now*: the accumulator plus
+    /// occupied pending blocks (what a spill would serialize).
+    fn summary_bytes(&self) -> usize {
+        let (d, dv) = (self.d, self.dv);
+        let r = self.kernels.len();
+        let mut words = self.acc_s.len() + self.acc_z.len();
+        for lvl in 0..self.levels {
+            if self.occupied[lvl] {
+                words += Block::export_words(d, dv, r) - 2;
+            }
+        }
+        words * std::mem::size_of::<f32>()
+    }
+
+    /// All allocated far words (capacity, not occupancy) — for
+    /// `state_bytes` capacity planning.
+    fn alloc_words(&self) -> usize {
+        let (d, dv) = (self.d, self.dv);
+        let r = self.kernels.len();
+        (self.levels + 1) * (Block::export_words(d, dv, r) - 2)
+            + self.acc_s.len()
+            + self.acc_z.len()
+    }
+
+    /// Words [`export_into`](Self::export_into) appends right now.
+    fn export_len(&self) -> usize {
+        let (d, dv) = (self.d, self.dv);
+        let r = self.kernels.len();
+        let mut words = 2 + self.acc_s.len() + self.acc_z.len();
+        for lvl in 0..self.levels {
+            if self.occupied[lvl] {
+                words += Block::export_words(d, dv, r);
+            }
+        }
+        words
+    }
+
+    /// Serialize the far section: accumulator count + moments, then
+    /// occupied blocks coarse→fine. Only occupied blocks are written —
+    /// the exported size is O(log n) and plateaus once every level has
+    /// filled, which is the whole point of the hierarchy.
+    fn export_into(&self, out: &mut Vec<f32>) {
+        out.extend_from_slice(&u64_to_words(self.acc_count));
+        out.extend_from_slice(&self.acc_s);
+        out.extend_from_slice(&self.acc_z);
+        for lvl in (0..self.levels).rev() {
+            if !self.occupied[lvl] {
+                continue;
+            }
+            let b = &self.pending[lvl];
+            out.extend_from_slice(&u64_to_words(b.count));
+            out.extend_from_slice(&b.ksum);
+            out.extend_from_slice(&b.vsum);
+            out.extend_from_slice(&b.s);
+            out.extend_from_slice(&b.z);
+        }
+    }
+
+    /// Inverse of [`export_into`](Self::export_into) for a stream at
+    /// position `pos`. Occupancy is *derived* from `pos` (the binary
+    /// counter is deterministic), so the view's structure is fully
+    /// validated: wrong accumulator count or block span is a typed
+    /// `Err`, and `self` is only mutated once everything checks out at
+    /// the caller's total-length gate.
+    fn import_from(&mut self, raw: &[f32], pos: u64) -> Result<usize> {
+        let (d, dv) = (self.d, self.dv);
+        let r = self.kernels.len();
+        let span = if self.levels == 0 { 0 } else { pos & ((1u64 << self.levels) - 1) };
+        let want_acc = pos - span;
+        // Validation pass first: nothing is mutated until the whole far
+        // section checks out, so a failed import leaves `self` unchanged.
+        let acc_count = words_to_u64(raw[0], raw[1]);
+        if acc_count != want_acc {
+            bail!(
+                "multilevel accumulator covers {acc_count} tokens, \
+                 expected {want_acc} at position {pos}"
+            );
+        }
+        let mut probe = 2 + self.acc_s.len() + self.acc_z.len();
+        for lvl in (0..self.levels).rev() {
+            if span & (1u64 << lvl) == 0 {
+                continue;
+            }
+            let count = words_to_u64(raw[probe], raw[probe + 1]);
+            if count != 1u64 << lvl {
+                bail!(
+                    "multilevel block at level {lvl} spans {count} tokens, \
+                     expected {}",
+                    1u64 << lvl
+                );
+            }
+            probe += Block::export_words(d, dv, r);
+        }
+        let mut off = 2usize;
+        let s_len = self.acc_s.len();
+        self.acc_s.copy_from_slice(&raw[off..off + s_len]);
+        off += s_len;
+        let z_len = self.acc_z.len();
+        self.acc_z.copy_from_slice(&raw[off..off + z_len]);
+        off += z_len;
+        self.acc_count = acc_count;
+        for lvl in (0..self.levels).rev() {
+            let occ = span & (1u64 << lvl) != 0;
+            self.occupied[lvl] = occ;
+            if !occ {
+                continue;
+            }
+            let count = words_to_u64(raw[off], raw[off + 1]);
+            off += 2;
+            let b = &mut self.pending[lvl];
+            b.count = count;
+            b.ksum.copy_from_slice(&raw[off..off + d]);
+            off += d;
+            b.vsum.copy_from_slice(&raw[off..off + dv]);
+            off += dv;
+            let bs = b.s.len();
+            b.s.copy_from_slice(&raw[off..off + bs]);
+            off += bs;
+            let bz = b.z.len();
+            b.z.copy_from_slice(&raw[off..off + bz]);
+            off += bz;
+        }
+        self.total = pos;
+        Ok(off)
+    }
+}
+
+/// Per-head multilevel decode state: the same near-field ring as
+/// [`FmmDecodeState`] plus the [`MlFar`] hierarchy for the far field.
+/// `step` produces row `pos` of the batch causal
+/// [`multilevel_attention`] bit for bit (shared recurrence), and at
+/// `levels == 0` it reproduces [`FmmDecodeState::step`] bit for bit.
+#[derive(Debug, Clone)]
+pub struct MultilevelDecodeState {
+    d: usize,
+    dv: usize,
+    bandwidth: usize,
+    kernels: Vec<FeatureMap>,
+    w1: f32,
+    w2: f32,
+    ring_k: Vec<f32>,
+    ring_v: Vec<f32>,
+    ring_start: usize,
+    ring_len: usize,
+    hier: MlFar,
+    pos: usize,
+    scores: Vec<f32>,
+    near: Vec<f32>,
+    far: Vec<f32>,
+}
+
+impl MultilevelDecodeState {
+    /// `levels` is the hierarchy depth (`0` behaves exactly like the
+    /// flat state; `MAX_LEVELS` is the hard cap); the rest mirror
+    /// [`FmmDecodeState::new`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        d: usize,
+        dv: usize,
+        bandwidth: usize,
+        kernels: &[FeatureMap],
+        w1: f32,
+        w2: f32,
+        levels: usize,
+    ) -> MultilevelDecodeState {
+        assert!(d > 0 && dv > 0, "degenerate head dims {d}x{dv}");
+        MultilevelDecodeState {
+            d,
+            dv,
+            bandwidth,
+            kernels: kernels.to_vec(),
+            w1,
+            w2,
+            ring_k: Vec::new(),
+            ring_v: Vec::new(),
+            ring_start: 0,
+            ring_len: 0,
+            hier: MlFar::new(d, dv, kernels, levels),
+            pos: 0,
+            scores: Vec::with_capacity(bandwidth.saturating_add(1).min(4096)),
+            near: vec![0.0; dv],
+            far: vec![0.0; dv],
+        }
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    pub fn bandwidth(&self) -> usize {
+        self.bandwidth
+    }
+
+    pub fn key_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn value_dim(&self) -> usize {
+        self.dv
+    }
+
+    /// Hierarchy depth this state was built with.
+    pub fn levels(&self) -> usize {
+        self.hier.levels
+    }
+
+    /// Forget everything; the state is as freshly constructed.
+    pub fn reset(&mut self) {
+        self.ring_k.clear();
+        self.ring_v.clear();
+        self.ring_start = 0;
+        self.ring_len = 0;
+        self.hier.reset();
+        self.pos = 0;
+    }
+
+    /// Consume one token and return the attention output row — row
+    /// `pos` of the batch causal [`multilevel_attention`] prefix.
+    pub fn step(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.dv];
+        self.step_into(q_t, k_t, v_t, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`step`](Self::step).
+    pub fn step_into(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32], out: &mut [f32]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(q_t.len(), d, "q_t width");
+        assert_eq!(k_t.len(), d, "k_t width");
+        assert_eq!(v_t.len(), dv, "v_t width");
+        assert_eq!(out.len(), dv, "out width");
+
+        self.push_ring(k_t, v_t);
+        self.near_field(q_t);
+        self.far.iter_mut().for_each(|x| *x = 0.0);
+        self.hier.ingest(k_t, v_t);
+        let MultilevelDecodeState { hier, far, .. } = self;
+        hier.readout(q_t, far);
+        for (o, (n, f)) in out.iter_mut().zip(self.near.iter().zip(&self.far)) {
+            *o = n * self.w1 + f * self.w2;
+        }
+        self.pos += 1;
+    }
+
+    // Near field: op-for-op the flat state's ring logic (deliberately
+    // duplicated rather than refactored — the flat hot path stays
+    // untouched and the two evolve independently).
+    fn push_ring(&mut self, k_t: &[f32], v_t: &[f32]) {
+        let cap = self.bandwidth.saturating_add(1);
+        if self.ring_len < cap {
+            self.ring_k.extend_from_slice(k_t);
+            self.ring_v.extend_from_slice(v_t);
+            self.ring_len += 1;
+        } else {
+            let at = self.ring_start;
+            self.ring_k[at * self.d..(at + 1) * self.d].copy_from_slice(k_t);
+            self.ring_v[at * self.dv..(at + 1) * self.dv].copy_from_slice(v_t);
+            self.ring_start = (self.ring_start + 1) % cap;
+        }
+    }
+
+    fn near_field(&mut self, q_t: &[f32]) {
+        let (d, dv) = (self.d, self.dv);
+        let slots = self.ring_k.len() / d;
+        let scale = 1.0 / (d as f32).sqrt();
+        self.scores.clear();
+        let mut mx = f32::NEG_INFINITY;
+        for off in 0..self.ring_len {
+            let at = (self.ring_start + off) % slots;
+            let s = kernel::dot(q_t, &self.ring_k[at * d..(at + 1) * d]) * scale;
+            self.scores.push(s);
+            mx = mx.max(s);
+        }
+        let mut zsum = 0.0;
+        for s in &mut self.scores {
+            *s = (*s - mx).exp();
+            zsum += *s;
+        }
+        self.near.iter_mut().for_each(|x| *x = 0.0);
+        for off in 0..self.ring_len {
+            let at = (self.ring_start + off) % slots;
+            let vrow = &self.ring_v[at * dv..(at + 1) * dv];
+            kernel::axpy(self.scores[off] / zsum, vrow, &mut self.near);
+        }
+    }
+
+    /// Advance through a chronological window of stacked rows — the
+    /// same scalar recurrence in the same token order, so bit-identical
+    /// to `n` scalar steps (see [`FmmDecodeState::step_window_into`]).
+    pub fn step_window_into(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(q.len() % d, 0, "q window width");
+        let n = q.len() / d;
+        assert_eq!(k.len(), n * d, "k window width");
+        assert_eq!(v.len(), n * dv, "v window width");
+        assert_eq!(out.len(), n * dv, "out window width");
+        for t in 0..n {
+            self.step_into(
+                &q[t * d..(t + 1) * d],
+                &k[t * d..(t + 1) * d],
+                &v[t * dv..(t + 1) * dv],
+                &mut out[t * dv..(t + 1) * dv],
+            );
+        }
+    }
+
+    /// Approximate bytes held by this state — O(levels), constant in
+    /// sequence length.
+    pub fn state_bytes(&self) -> usize {
+        let cap = self.bandwidth.saturating_add(1).min(self.pos.max(1));
+        (cap * (self.d + self.dv) + self.hier.alloc_words())
+            * std::mem::size_of::<f32>()
+    }
+
+    /// Far-summary bytes resident right now (accumulator + occupied
+    /// blocks) — the `decode.ml_summary_bytes` telemetry gauge.
+    pub fn summary_bytes(&self) -> usize {
+        self.hier.summary_bytes()
+    }
+
+    /// Coarse-summary updates (level merges + multipole compressions)
+    /// since the last [`drain_summary_updates`](Self::drain_summary_updates).
+    pub fn summary_updates(&self) -> u64 {
+        self.hier.summary_updates
+    }
+
+    /// Take and reset the coarse-summary work counter. Rollbacks do not
+    /// un-count: the counter meters work performed, not state reached.
+    pub fn drain_summary_updates(&mut self) -> u64 {
+        std::mem::take(&mut self.hier.summary_updates)
+    }
+
+    /// Stable configuration hash. Domain-separated from the flat
+    /// state's by an unconditional `b'M'` + depth suffix: a multilevel
+    /// export never imports into a flat state (the layouts differ even
+    /// at depth 0), and depth mismatches are typed errors.
+    pub fn config_fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(49 + self.kernels.len());
+        for x in [self.d as u64, self.dv as u64, self.bandwidth as u64] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.extend_from_slice(&self.w1.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&self.w2.to_bits().to_le_bytes());
+        bytes.push(self.kernels.len() as u8);
+        for fm in &self.kernels {
+            bytes.push(feature_map_code(*fm));
+        }
+        bytes.push(b'M');
+        bytes.extend_from_slice(&(self.hier.levels as u64).to_le_bytes());
+        fnv1a64(&bytes)
+    }
+
+    /// Words [`export_into`](Self::export_into) appends right now.
+    pub fn export_len(&self) -> usize {
+        EXPORT_HEADER_WORDS + self.ring_len * (self.d + self.dv) + self.hier.export_len()
+    }
+
+    /// Serialize the dynamic state: flat-compatible header and
+    /// normalized ring, then the far hierarchy (occupied blocks only —
+    /// the exported size is O(log n) in context). Round-trips through
+    /// [`import_from`](Self::import_from) bit-exactly.
+    pub fn export_into(&self, out: &mut Vec<f32>) {
+        let (d, dv) = (self.d, self.dv);
+        out.reserve(self.export_len());
+        out.extend_from_slice(&u64_to_words(self.config_fingerprint()));
+        out.extend_from_slice(&u64_to_words(self.pos as u64));
+        out.push(f32::from_bits(self.ring_len as u32));
+        let slots = self.ring_k.len() / d;
+        for off in 0..self.ring_len {
+            let at = (self.ring_start + off) % slots;
+            out.extend_from_slice(&self.ring_k[at * d..(at + 1) * d]);
+        }
+        for off in 0..self.ring_len {
+            let at = (self.ring_start + off) % slots;
+            out.extend_from_slice(&self.ring_v[at * dv..(at + 1) * dv]);
+        }
+        self.hier.export_into(out);
+    }
+
+    /// In-memory checkpoint (see [`FmmDecodeState::clone_state_into`]).
+    pub fn clone_state_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        self.export_into(out);
+    }
+
+    /// Roll back to a [`clone_state_into`](Self::clone_state_into)
+    /// checkpoint — on `Err` this state is unchanged.
+    pub fn restore_state_from(&mut self, raw: &[f32]) -> Result<()> {
+        self.import_from(raw)
+    }
+
+    /// Overwrite the dynamic state from an exported view. Fingerprint,
+    /// position/ring consistency, derived block occupancy, and total
+    /// length are all validated before anything is mutated — every
+    /// mismatch (including hierarchy depth, via the fingerprint) is a
+    /// typed `Err`, never a panic.
+    pub fn import_from(&mut self, raw: &[f32]) -> Result<()> {
+        if raw.len() < EXPORT_HEADER_WORDS {
+            bail!("raw decode state truncated: {} header words", raw.len());
+        }
+        let fp = words_to_u64(raw[0], raw[1]);
+        let want_fp = self.config_fingerprint();
+        if fp != want_fp {
+            bail!(
+                "raw-state config fingerprint {fp:#018x} does not match \
+                 this multilevel state's {want_fp:#018x}"
+            );
+        }
+        let pos64 = words_to_u64(raw[2], raw[3]);
+        let pos = usize::try_from(pos64)
+            .map_err(|_| anyhow::anyhow!("raw-state position {pos64} overflows"))?;
+        let ring_len = raw[4].to_bits() as usize;
+        let cap = self.bandwidth.saturating_add(1);
+        if ring_len != pos.min(cap) {
+            bail!(
+                "inconsistent raw state: {ring_len} ring rows at position {pos} \
+                 (band cap {cap})"
+            );
+        }
+        let (d, dv) = (self.d, self.dv);
+        let levels = self.hier.levels;
+        let r = self.kernels.len();
+        let span =
+            if levels == 0 { 0 } else { (pos as u64 & ((1u64 << levels) - 1)) as u32 };
+        let far_words = 2
+            + self.hier.acc_s.len()
+            + self.hier.acc_z.len()
+            + span.count_ones() as usize * Block::export_words(d, dv, r);
+        let want = EXPORT_HEADER_WORDS + ring_len * (d + dv) + far_words;
+        if raw.len() != want {
+            bail!("raw decode state is {} words, expected {want}", raw.len());
+        }
+        let mut off = EXPORT_HEADER_WORDS;
+        self.ring_k.clear();
+        self.ring_k.extend_from_slice(&raw[off..off + ring_len * d]);
+        off += ring_len * d;
+        self.ring_v.clear();
+        self.ring_v.extend_from_slice(&raw[off..off + ring_len * dv]);
+        off += ring_len * dv;
+        let used = self.hier.import_from(&raw[off..], pos as u64)?;
+        debug_assert_eq!(off + used, want);
+        self.ring_start = 0;
+        self.ring_len = ring_len;
+        self.pos = pos;
+        Ok(())
+    }
+}
+
+/// Causal multilevel far field over a whole sequence: the [`MlFar`]
+/// recurrence driven row by row — literally the incremental path, which
+/// is what makes batch ≡ incremental bitwise.
+fn multilevel_far(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    kernels: &[FeatureMap],
+    levels: usize,
+) -> Tensor {
+    let n = q.shape()[0];
+    let d = q.shape()[1];
+    let dv = v.shape()[1];
+    let mut out = Tensor::zeros(&[n, dv]);
+    if n == 0 {
+        return out;
+    }
+    let mut hier = MlFar::new(d, dv, kernels, levels);
+    for i in 0..n {
+        hier.ingest(k.row(i), v.row(i));
+        let orow = &mut out.data_mut()[i * dv..(i + 1) * dv];
+        hier.readout(q.row(i), orow);
+    }
+    out
+}
+
+/// Batch causal multilevel attention: `w1·banded + w2·multilevel-far`.
+/// Depth `0` is bit-identical to the causal
+/// [`fmm_attention`](super::fmm_attention) (same near path, and the
+/// flat far recurrence run in the same op order); the incremental
+/// [`MultilevelDecodeState`] reproduces every row bit for bit at any
+/// depth. Always causal — the dyadic hierarchy is a decode-order
+/// construction.
+#[allow(clippy::too_many_arguments)]
+pub fn multilevel_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bandwidth: usize,
+    kernels: &[FeatureMap],
+    w1: f32,
+    w2: f32,
+    levels: usize,
+) -> Tensor {
+    let near = banded_attention(q, k, v, bandwidth, true).scale(w1);
+    let far = multilevel_far(q, k, v, kernels, levels).scale(w2);
+    near.add(&far).expect("same shape")
+}
+
+/// Test/bench helper: decode a whole single-head sequence step by step.
+/// Output equals causal [`multilevel_attention`] row for row, bitwise.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_sequence_multilevel(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bandwidth: usize,
+    kernels: &[FeatureMap],
+    w1: f32,
+    w2: f32,
+    levels: usize,
+) -> Tensor {
+    let n = q.shape()[0];
+    let dv = v.shape()[1];
+    let mut state =
+        MultilevelDecodeState::new(q.shape()[1], dv, bandwidth, kernels, w1, w2, levels);
+    let mut out = Tensor::zeros(&[n, dv]);
+    for t in 0..n {
+        let row = state.step(q.row(t), k.row(t), v.row(t));
+        out.data_mut()[t * dv..(t + 1) * dv].copy_from_slice(&row);
+    }
+    out
+}
+
+/// One per-head decode state of either flavor behind a single API, so
+/// the serve stack (sessions, planner, spill/restore, prefix cache)
+/// threads flat and multilevel streams through identical code paths.
+/// `levels == 0` constructs the flat state — existing configs keep the
+/// exact state type, export layout, and fingerprints they had.
+#[derive(Debug, Clone)]
+pub enum HeadState {
+    Flat(FmmDecodeState),
+    Multilevel(MultilevelDecodeState),
+}
+
+impl HeadState {
+    /// Build the right flavor for a config: flat at depth 0 (bitwise
+    /// today's behavior), multilevel otherwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn for_config(
+        d: usize,
+        dv: usize,
+        bandwidth: usize,
+        kernels: &[FeatureMap],
+        w1: f32,
+        w2: f32,
+        levels: usize,
+    ) -> HeadState {
+        if levels == 0 {
+            HeadState::Flat(FmmDecodeState::new(d, dv, bandwidth, kernels, w1, w2))
+        } else {
+            HeadState::Multilevel(MultilevelDecodeState::new(
+                d, dv, bandwidth, kernels, w1, w2, levels,
+            ))
+        }
+    }
+
+    pub fn position(&self) -> usize {
+        match self {
+            HeadState::Flat(s) => s.position(),
+            HeadState::Multilevel(s) => s.position(),
+        }
+    }
+
+    pub fn key_dim(&self) -> usize {
+        match self {
+            HeadState::Flat(s) => s.key_dim(),
+            HeadState::Multilevel(s) => s.key_dim(),
+        }
+    }
+
+    pub fn value_dim(&self) -> usize {
+        match self {
+            HeadState::Flat(s) => s.value_dim(),
+            HeadState::Multilevel(s) => s.value_dim(),
+        }
+    }
+
+    /// Hierarchy depth (0 for the flat state).
+    pub fn levels(&self) -> usize {
+        match self {
+            HeadState::Flat(_) => 0,
+            HeadState::Multilevel(s) => s.levels(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        match self {
+            HeadState::Flat(s) => s.reset(),
+            HeadState::Multilevel(s) => s.reset(),
+        }
+    }
+
+    pub fn step_into(&mut self, q_t: &[f32], k_t: &[f32], v_t: &[f32], out: &mut [f32]) {
+        match self {
+            HeadState::Flat(s) => s.step_into(q_t, k_t, v_t, out),
+            HeadState::Multilevel(s) => s.step_into(q_t, k_t, v_t, out),
+        }
+    }
+
+    pub fn step_window_into(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        match self {
+            HeadState::Flat(s) => s.step_window_into(q, k, v, out),
+            HeadState::Multilevel(s) => s.step_window_into(q, k, v, out),
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            HeadState::Flat(s) => s.state_bytes(),
+            HeadState::Multilevel(s) => s.state_bytes(),
+        }
+    }
+
+    /// Far-summary bytes resident (0 for the flat state).
+    pub fn summary_bytes(&self) -> usize {
+        match self {
+            HeadState::Flat(_) => 0,
+            HeadState::Multilevel(s) => s.summary_bytes(),
+        }
+    }
+
+    /// Drain coarse-summary update counts (0 for the flat state).
+    pub fn drain_summary_updates(&mut self) -> u64 {
+        match self {
+            HeadState::Flat(_) => 0,
+            HeadState::Multilevel(s) => s.drain_summary_updates(),
+        }
+    }
+
+    pub fn config_fingerprint(&self) -> u64 {
+        match self {
+            HeadState::Flat(s) => s.config_fingerprint(),
+            HeadState::Multilevel(s) => s.config_fingerprint(),
+        }
+    }
+
+    pub fn export_len(&self) -> usize {
+        match self {
+            HeadState::Flat(s) => s.export_len(),
+            HeadState::Multilevel(s) => s.export_len(),
+        }
+    }
+
+    pub fn export_into(&self, out: &mut Vec<f32>) {
+        match self {
+            HeadState::Flat(s) => s.export_into(out),
+            HeadState::Multilevel(s) => s.export_into(out),
+        }
+    }
+
+    pub fn import_from(&mut self, raw: &[f32]) -> Result<()> {
+        match self {
+            HeadState::Flat(s) => s.import_from(raw),
+            HeadState::Multilevel(s) => s.import_from(raw),
+        }
+    }
+
+    pub fn clone_state_into(&self, out: &mut Vec<f32>) {
+        match self {
+            HeadState::Flat(s) => s.clone_state_into(out),
+            HeadState::Multilevel(s) => s.clone_state_into(out),
+        }
+    }
+
+    pub fn restore_state_from(&mut self, raw: &[f32]) -> Result<()> {
+        match self {
+            HeadState::Flat(s) => s.restore_state_from(raw),
+            HeadState::Multilevel(s) => s.restore_state_from(raw),
+        }
+    }
+}
+
+/// Stacked rows per worker shard — same economics as the flat
+/// `advance_many` (a scoped spawn costs tens of microseconds; a shard
+/// must carry a few dozen rows to pay for its worker).
+const MIN_ROWS_PER_SHARD: usize = 24;
+
+/// Ragged batched per-head advance over [`HeadState`]s — the unified
+/// planner's per-head half, flavor-agnostic. Mirrors
+/// [`advance_many`](super::incremental::advance_many): state `i`
+/// consumes `lens[i]` chronological rows of the stacked `q`/`k`/`v`
+/// panels and writes its output rows, bit-identical to `lens[i]` scalar
+/// `step_into` calls by construction. Flat and multilevel states may
+/// mix freely in one call (they do, during a config migration roll).
+pub fn advance_many_heads(
+    states: &mut [&mut HeadState],
+    lens: &[usize],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+) {
+    let b = states.len();
+    assert_eq!(lens.len(), b, "one window length per state");
+    if b == 0 {
+        return;
+    }
+    let (d, dv) = (states[0].key_dim(), states[0].value_dim());
+    assert!(
+        states.iter().all(|s| s.key_dim() == d && s.value_dim() == dv),
+        "advance_many_heads states must share head dims"
+    );
+    let n: usize = lens.iter().sum();
+    assert_eq!(q.len(), n * d, "q panel width");
+    assert_eq!(k.len(), n * d, "k panel width");
+    assert_eq!(v.len(), n * dv, "v panel width");
+    assert_eq!(out.len(), n * dv, "out panel width");
+    if n == 0 {
+        return;
+    }
+    let mut jobs: Vec<(&mut HeadState, usize, usize, &mut [f32])> = Vec::with_capacity(b);
+    let mut rest = out;
+    let mut off = 0usize;
+    for (st, &len) in states.iter_mut().zip(lens) {
+        let (orows, tail) = std::mem::take(&mut rest).split_at_mut(len * dv);
+        rest = tail;
+        jobs.push((&mut **st, off, len, orows));
+        off += len;
+    }
+    kernel::parallel_ragged(&mut jobs, lens, MIN_ROWS_PER_SHARD, |_start, run| {
+        for (st, off, len, orows) in run.iter_mut() {
+            if *len == 0 {
+                continue;
+            }
+            st.step_window_into(
+                &q[*off * d..(*off + *len) * d],
+                &k[*off * d..(*off + *len) * d],
+                &v[*off * dv..(*off + *len) * dv],
+                orows,
+            );
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fmm_attention;
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_qkv(n: usize, d: usize, dv: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Pcg64::seeded(seed);
+        (
+            Tensor::randn(&[n, d], &mut rng),
+            Tensor::randn(&[n, d], &mut rng),
+            Tensor::randn(&[n, dv], &mut rng),
+        )
+    }
+
+    #[test]
+    fn depth0_batch_is_bit_identical_to_fmm_attention() {
+        for (n, seed) in [(17usize, 0u64), (33, 1), (64, 2)] {
+            let (q, k, v) = rand_qkv(n, 6, 4, seed);
+            for kernels in
+                [&[FeatureMap::Elu][..], &[FeatureMap::Elu, FeatureMap::Tanh][..]]
+            {
+                let flat = fmm_attention(&q, &k, &v, 3, kernels, 0.6, 0.9, true);
+                let ml = multilevel_attention(&q, &k, &v, 3, kernels, 0.6, 0.9, 0);
+                assert_eq!(flat.data(), ml.data(), "n {n} r {}", kernels.len());
+            }
+        }
+    }
+
+    #[test]
+    fn depth0_incremental_is_bit_identical_to_flat_state() {
+        let (q, k, v) = rand_qkv(41, 5, 3, 3);
+        let kernels = [FeatureMap::Elu, FeatureMap::EluNeg];
+        let mut flat = FmmDecodeState::new(5, 3, 4, &kernels, 0.7, 0.4);
+        let mut ml = MultilevelDecodeState::new(5, 3, 4, &kernels, 0.7, 0.4, 0);
+        for t in 0..41 {
+            let a = flat.step(q.row(t), k.row(t), v.row(t));
+            let b = ml.step(q.row(t), k.row(t), v.row(t));
+            assert_eq!(a, b, "t {t}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_incremental_bitwise_across_depths() {
+        // Non-power-of-two lengths included: the binary counter must
+        // hold at every prefix, not just at block boundaries.
+        for levels in [0usize, 1, 2, 3] {
+            for (n, seed) in [(13usize, 7u64), (32, 8), (45, 9)] {
+                let (q, k, v) = rand_qkv(n, 4, 4, seed);
+                let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+                let batch =
+                    multilevel_attention(&q, &k, &v, 2, &kernels, 0.6, 0.9, levels);
+                let inc =
+                    decode_sequence_multilevel(&q, &k, &v, 2, &kernels, 0.6, 0.9, levels);
+                assert_eq!(batch.data(), inc.data(), "levels {levels} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn counter_occupancy_and_state_size_plateau() {
+        let (q, k, v) = rand_qkv(200, 4, 4, 10);
+        let mut st =
+            MultilevelDecodeState::new(4, 4, 3, &[FeatureMap::Elu], 0.5, 0.5, 3);
+        let mut sizes = vec![];
+        for t in 0..200 {
+            st.step(q.row(t), k.row(t), v.row(t));
+            sizes.push(st.export_len());
+        }
+        // Export size is periodic in pos mod 2^levels once the ring and
+        // accumulator are live: same occupancy -> same size.
+        assert_eq!(sizes[40], sizes[40 + 64], "same counter phase, same size");
+        assert_eq!(sizes[199], sizes[199 - 64]);
+        assert!(st.summary_updates() > 0, "deep state never summarized");
+        assert!(st.summary_bytes() > 0);
+        // The drain hands the count over exactly once.
+        let drained = st.drain_summary_updates();
+        assert!(drained > 0);
+        assert_eq!(st.drain_summary_updates(), 0);
+    }
+
+    #[test]
+    fn export_import_roundtrip_is_bit_exact_across_depths() {
+        let (q, k, v) = rand_qkv(80, 5, 3, 11);
+        let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+        for levels in [0usize, 1, 3] {
+            for warm in [0usize, 1, 7, 8, 37] {
+                let mut live =
+                    MultilevelDecodeState::new(5, 3, 4, &kernels, 0.6, 0.9, levels);
+                for t in 0..warm {
+                    live.step(q.row(t), k.row(t), v.row(t));
+                }
+                let mut raw = Vec::new();
+                live.export_into(&mut raw);
+                assert_eq!(raw.len(), live.export_len(), "levels {levels} warm {warm}");
+                let mut restored =
+                    MultilevelDecodeState::new(5, 3, 4, &kernels, 0.6, 0.9, levels);
+                restored.import_from(&raw).unwrap();
+                assert_eq!(restored.position(), live.position());
+                for t in warm..80 {
+                    let a = live.step(q.row(t), k.row(t), v.row(t));
+                    let b = restored.step(q.row(t), k.row(t), v.row(t));
+                    assert_eq!(a, b, "levels {levels} warm {warm} t {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn import_rejects_depth_mismatch_and_truncation() {
+        let (q, k, v) = rand_qkv(20, 4, 4, 12);
+        let kernels = [FeatureMap::Elu];
+        let mut src = MultilevelDecodeState::new(4, 4, 3, &kernels, 0.5, 0.5, 2);
+        for t in 0..20 {
+            src.step(q.row(t), k.row(t), v.row(t));
+        }
+        let mut raw = Vec::new();
+        src.export_into(&mut raw);
+
+        // Different depth -> fingerprint mismatch, typed Err, no mutation.
+        let mut other = MultilevelDecodeState::new(4, 4, 3, &kernels, 0.5, 0.5, 3);
+        assert!(other.import_from(&raw).is_err());
+        assert_eq!(other.position(), 0, "failed import must not mutate");
+
+        // A flat state refuses a multilevel view even at depth 0 (the
+        // layouts differ), and vice versa — both typed.
+        let mut flat = FmmDecodeState::new(4, 4, 3, &kernels, 0.5, 0.5);
+        assert!(flat.import_from(&raw).is_err());
+        let mut ml0 = MultilevelDecodeState::new(4, 4, 3, &kernels, 0.5, 0.5, 0);
+        let mut flat_raw = Vec::new();
+        {
+            let mut f = FmmDecodeState::new(4, 4, 3, &kernels, 0.5, 0.5);
+            f.step(q.row(0), k.row(0), v.row(0));
+            f.export_into(&mut flat_raw);
+        }
+        assert!(ml0.import_from(&flat_raw).is_err());
+
+        // Truncations error and leave the target untouched.
+        let mut same = MultilevelDecodeState::new(4, 4, 3, &kernels, 0.5, 0.5, 2);
+        assert!(same.import_from(&raw[..3]).is_err());
+        assert!(same.import_from(&raw[..raw.len() - 1]).is_err());
+        assert_eq!(same.position(), 0);
+        same.import_from(&raw).unwrap();
+        assert_eq!(same.position(), 20);
+    }
+
+    #[test]
+    fn fingerprints_separate_depths_and_flavors() {
+        let kernels = [FeatureMap::Elu];
+        let flat = FmmDecodeState::new(4, 4, 3, &kernels, 0.5, 0.5);
+        let mut seen = vec![flat.config_fingerprint()];
+        for levels in [0usize, 1, 2, 3] {
+            let ml = MultilevelDecodeState::new(4, 4, 3, &kernels, 0.5, 0.5, levels);
+            let fp = ml.config_fingerprint();
+            assert!(!seen.contains(&fp), "fingerprint collision at depth {levels}");
+            seen.push(fp);
+        }
+    }
+
+    #[test]
+    fn checkpoint_rollback_replays_bit_exactly() {
+        let (q, k, v) = rand_qkv(48, 4, 3, 13);
+        let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+        for warm in [0usize, 5, 16, 23] {
+            let mut st = MultilevelDecodeState::new(4, 3, 3, &kernels, 0.8, 0.5, 2);
+            for t in 0..warm {
+                st.step(q.row(t), k.row(t), v.row(t));
+            }
+            let mut ckpt = Vec::new();
+            st.clone_state_into(&mut ckpt);
+            for t in warm..warm + 6 {
+                st.step(q.row(t), k.row(t), v.row(t));
+            }
+            st.restore_state_from(&ckpt).unwrap();
+            assert_eq!(st.position(), warm);
+            let mut reference = MultilevelDecodeState::new(4, 3, 3, &kernels, 0.8, 0.5, 2);
+            for t in 0..48 {
+                let b = reference.step(q.row(t), k.row(t), v.row(t));
+                if t >= warm {
+                    let a = st.step(q.row(t), k.row(t), v.row(t));
+                    assert_eq!(a, b, "warm {warm} t {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn advance_many_heads_is_bit_identical_to_scalar_steps() {
+        // Mixed flavors, ragged lengths, and a stack wide enough to
+        // cross the thread-shard gate.
+        let (d, dv, bw) = (4usize, 3usize, 2usize);
+        let kernels = [FeatureMap::Elu, FeatureMap::Tanh];
+        for copies in [1usize, 9] {
+            let base_lens = [1usize, 5, 0, 2, 13, 1];
+            let lens: Vec<usize> = base_lens
+                .iter()
+                .cycle()
+                .take(base_lens.len() * copies)
+                .copied()
+                .collect();
+            let b = lens.len();
+            let n: usize = lens.iter().sum();
+            let mut ragged: Vec<HeadState> = (0..b)
+                .map(|i| HeadState::for_config(d, dv, bw, &kernels, 0.7, 0.4, i % 4))
+                .collect();
+            let mut scalar = ragged.clone();
+            let mut rng = Pcg64::seeded(31 + copies as u64);
+            for _round in 0..2 {
+                let q = rng.normals(n * d);
+                let k = rng.normals(n * d);
+                let v = rng.normals(n * dv);
+                let mut out = vec![0.0f32; n * dv];
+                let mut refs: Vec<&mut HeadState> = ragged.iter_mut().collect();
+                advance_many_heads(&mut refs, &lens, &q, &k, &v, &mut out);
+                let mut off = 0usize;
+                for (i, (st, &len)) in scalar.iter_mut().zip(&lens).enumerate() {
+                    for t in off..off + len {
+                        let mut want = vec![0.0f32; dv];
+                        st.step_into(
+                            &q[t * d..(t + 1) * d],
+                            &k[t * d..(t + 1) * d],
+                            &v[t * dv..(t + 1) * dv],
+                            &mut want,
+                        );
+                        assert_eq!(
+                            &out[t * dv..(t + 1) * dv],
+                            &want[..],
+                            "copies {copies} state {i} row {t}"
+                        );
+                    }
+                    off += len;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level_summaries_update_at_power_of_two_strides() {
+        // A level-l merge fires exactly when bit l of the counter
+        // carries; over n tokens the total merge count is
+        // sum_{t=1..n} (carries at t), and pending occupancy mirrors
+        // the bits of n mod 2^levels.
+        let (q, k, v) = rand_qkv(64, 4, 4, 14);
+        let mut st = MultilevelDecodeState::new(4, 4, 2, &[FeatureMap::Elu], 0.5, 0.5, 3);
+        let mut last = 0u64;
+        for t in 0..64usize {
+            st.step(q.row(t), k.row(t), v.row(t));
+            let now = st.summary_updates();
+            let pos = t + 1;
+            // Carries at this ingest = trailing ones of the counter
+            // before it = trailing zeros of pos, capped at the depth;
+            // one compress more when every level carried.
+            let trailing = (pos as u64).trailing_zeros() as u64;
+            let merges = trailing.min(3);
+            let compress = u64::from(trailing >= 3);
+            assert_eq!(now - last, merges + compress, "pos {pos}");
+            last = now;
+        }
+    }
+}

@@ -59,7 +59,8 @@ fn run() -> Result<()> {
             println!("serve-demo: [--requests N] [--max-wait-ms T]");
             println!(
                 "decode-demo: [--sessions N] [--tokens N] [--layers N] [--heads N] \
-                 [--d-model N] [--bandwidth K] [--kernels elu,elu_neg,tanh] [--max-wait-ms T] \
+                 [--d-model N] [--bandwidth K] [--kernels elu,elu_neg,tanh] \
+                 [--levels L (multilevel far-field depth, 0=flat)] [--max-wait-ms T] \
                  [--max-resident N] [--spill-dir DIR] \
                  [--prompt-len N [--prefill-chunk C] [--prefill-budget N] \
                  [--prefill-budget-ms T]] [--no-unified-planner] \
@@ -251,7 +252,12 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 /// proposed per step by `--draft` (the stream's own n-gram history —
 /// primed with the prompt — or a smaller draft model `model:LxHxD`)
 /// and verified as one stacked step — tokens are bit-identical to the
-/// plain run, only the speed changes. `--telemetry-sample N` records
+/// plain run, only the speed changes. `--levels L` switches the
+/// far field to the depth-`L` multilevel hierarchy
+/// ([`fmmformer::attention::multilevel`]): coarse summaries update at
+/// power-of-two strides and per-stream state grows O(log n) instead of
+/// O(1) — the demo prints the summary-update and resident-bytes
+/// counters when the hierarchy is active. `--telemetry-sample N` records
 /// wave spans and flight-recorder wave events every N-th wave (0
 /// disables wave sampling; counters are always exact) and
 /// `--trace-out FILE` dumps the flight recorder as JSONL at exit.
@@ -270,6 +276,7 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
         kernels,
         w1: args.f64_or("w1", 0.6)? as f32,
         w2: args.f64_or("w2", 0.9)? as f32,
+        levels: args.usize_or("levels", 0)?,
         seed: args.u64_or("seed", 0)?,
     };
     let sessions = args.usize_or("sessions", 4)?;
@@ -422,6 +429,14 @@ fn cmd_decode_demo(args: &Args) -> Result<()> {
             stats.draft_proposed,
             stats.accept_rate() * 100.0,
             stats.lookahead_hits,
+        );
+    }
+    if cfg.levels > 0 {
+        println!(
+            "multilevel: depth {} | {} coarse-summary updates, {} of summaries resident",
+            cfg.levels,
+            stats.ml_summary_updates,
+            fmmformer::util::human_bytes(stats.ml_summary_bytes as u64),
         );
     }
     Ok(())

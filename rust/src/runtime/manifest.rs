@@ -233,6 +233,7 @@ impl WeightManifest {
             kernels,
             w1: self.w1,
             w2: self.w2,
+            levels: 0,
             seed: self.seed,
         };
         let derived = cfg.fingerprint();
@@ -415,6 +416,7 @@ mod tests {
             ],
             w1: 0.6,
             w2: 0.9,
+            levels: 0,
             seed: 0xfeed_f00d,
         };
         let m = WeightManifest::from_config("demo", 7, &cfg);

@@ -9,7 +9,7 @@
 //!
 //! ```text
 //!  streams ──open_stream()──▶ session table (per-layer, per-head
-//!          ──step(token)───▶  FmmDecodeState) ──▶ scheduler thread:
+//!          ──step(token)───▶  HeadState) ─────▶ scheduler thread:
 //!                               drain ≤ max_steps queued steps from all
 //!                               sessions (micro-batch), run each through
 //!                               the host decoder, fan logits out
@@ -65,7 +65,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::attention::incremental::{feature_map_code, u64_to_words, words_to_u64};
-use crate::attention::{fmm_attention, incremental, FeatureMap, FmmDecodeState};
+use crate::attention::multilevel::{self, HeadState, MAX_LEVELS};
+use crate::attention::{fmm_attention, multilevel_attention, FeatureMap};
 use crate::kernel::{self, PackedMat};
 use crate::rng::Pcg64;
 use crate::runtime::checkpoint::Leaf;
@@ -83,6 +84,10 @@ use crate::util::fnv1a64;
 /// RMS-norm denominator guard (host model only).
 const RMS_EPS: f32 = 1e-6;
 
+/// Layout version of the optional `"ml"` snapshot leaf. Bumped if the
+/// multilevel state's serialized form ever changes shape.
+const ML_LEAF_VERSION: u32 = 1;
+
 /// Architecture + attention hyperparameters of the host decoder.
 #[derive(Debug, Clone)]
 pub struct DecodeConfig {
@@ -97,6 +102,11 @@ pub struct DecodeConfig {
     /// Blend weights `w1·near + w2·far` (paper eq. (11)).
     pub w1: f32,
     pub w2: f32,
+    /// Far-field hierarchy depth ([`crate::attention::multilevel`]).
+    /// `0` is the paper's flat low-rank far field — bit-identical to
+    /// the pre-multilevel engine, including snapshot bytes; `L >= 1`
+    /// carries dyadic block summaries with O(log n) decode state.
+    pub levels: usize,
     /// Weight-init seed (the decoder is a deterministic function of it).
     pub seed: u64,
 }
@@ -112,6 +122,7 @@ impl Default for DecodeConfig {
             kernels: vec![FeatureMap::Elu],
             w1: 0.6,
             w2: 0.9,
+            levels: 0,
             seed: 0,
         }
     }
@@ -141,6 +152,13 @@ impl DecodeConfig {
         for fm in &self.kernels {
             bytes.push(feature_map_code(*fm));
         }
+        // Hierarchy depth joins the hash only when enabled: depth-0
+        // fingerprints stay byte-identical to the pre-multilevel format,
+        // so every existing v1 snapshot restores into a depth-0 config
+        // unchanged, while any depth mismatch is a typed restore error.
+        if self.levels > 0 {
+            bytes.extend_from_slice(&(self.levels as u64).to_le_bytes());
+        }
         fnv1a64(&bytes)
     }
 }
@@ -164,7 +182,8 @@ struct LayerWeights {
 /// Every non-attention op is row-local (RMS-norm, projections, MLP,
 /// residuals), so computing one row at a time — the incremental path —
 /// performs bit-identical float work to the batch path; only attention
-/// needs the [`FmmDecodeState`] recurrence to stay O(1). All constant
+/// needs the [`HeadState`] recurrence to stay O(1) (flat) or O(log n)
+/// (multilevel). All constant
 /// weights are pre-packed ([`PackedMat`]), and the prepacked multiply
 /// reduces every output row identically for every batch width — a
 /// session's step is bit-identical whether it runs alone, inside a
@@ -194,6 +213,12 @@ impl HostDecoder {
             bail!(
                 "kernels must name at least one far-field feature map \
                  (elu | elu_neg | tanh)"
+            );
+        }
+        if cfg.levels > MAX_LEVELS {
+            bail!(
+                "levels {} exceeds the multilevel hierarchy cap {MAX_LEVELS}",
+                cfg.levels
             );
         }
         let d = cfg.d_model;
@@ -264,16 +289,32 @@ impl HostDecoder {
                     let qh = slice_cols(q, head * dh, dh);
                     let kh = slice_cols(k, head * dh, dh);
                     let vh = slice_cols(v, head * dh, dh);
-                    let oh = fmm_attention(
-                        &qh,
-                        &kh,
-                        &vh,
-                        self.cfg.bandwidth,
-                        &self.cfg.kernels,
-                        self.cfg.w1,
-                        self.cfg.w2,
-                        true,
-                    );
+                    // Depth 0 keeps the literal flat call (multilevel
+                    // depth 0 is bit-identical to it anyway; the batch
+                    // reference stays recognizably the paper's blend).
+                    let oh = if self.cfg.levels == 0 {
+                        fmm_attention(
+                            &qh,
+                            &kh,
+                            &vh,
+                            self.cfg.bandwidth,
+                            &self.cfg.kernels,
+                            self.cfg.w1,
+                            self.cfg.w2,
+                            true,
+                        )
+                    } else {
+                        multilevel_attention(
+                            &qh,
+                            &kh,
+                            &vh,
+                            self.cfg.bandwidth,
+                            &self.cfg.kernels,
+                            self.cfg.w1,
+                            self.cfg.w2,
+                            self.cfg.levels,
+                        )
+                    };
                     write_cols(&mut a, head * dh, &oh);
                 }
                 Ok(a)
@@ -298,17 +339,18 @@ fn mm(x: &Tensor, w: &PackedMat) -> Result<Tensor> {
     Ok(out)
 }
 
-/// Per-stream decode state: one [`FmmDecodeState`] per layer per head.
-/// Holds `layers · heads · O(bandwidth·dh + r·dh²)` floats — constant in
-/// the number of tokens decoded.
+/// Per-stream decode state: one [`HeadState`] per layer per head (flat
+/// at depth 0, multilevel otherwise). Holds
+/// `layers · heads · O(bandwidth·dh + (levels+1)·r·dh²)` floats —
+/// constant (depth 0) or logarithmic (depth ≥ 1) in tokens decoded.
 pub struct DecoderSession {
     model: Arc<HostDecoder>,
-    states: Vec<Vec<FmmDecodeState>>,
+    states: Vec<Vec<HeadState>>,
     pos: usize,
 }
 
 /// In-memory checkpoint of a session's full decode state: one raw-f32
-/// [`FmmDecodeState::clone_state_into`] view per layer/head plus the
+/// [`HeadState::clone_state_into`] view per layer/head plus the
 /// stream position. No byte codec, no framing — taking one and
 /// [`DecoderSession::rollback`]-ing to it are plain buffer copies,
 /// which is what makes speculative checkpoint/rollback
@@ -339,7 +381,15 @@ impl DecoderSession {
             .map(|_| {
                 (0..cfg.heads)
                     .map(|_| {
-                        FmmDecodeState::new(dh, dh, cfg.bandwidth, &cfg.kernels, cfg.w1, cfg.w2)
+                        HeadState::for_config(
+                            dh,
+                            dh,
+                            cfg.bandwidth,
+                            &cfg.kernels,
+                            cfg.w1,
+                            cfg.w2,
+                            cfg.levels,
+                        )
                     })
                     .collect()
             })
@@ -384,10 +434,29 @@ impl DecoderSession {
 
     /// Bytes of decode state this session holds (attention ring buffers
     /// + far-field moments across all layers and heads) — constant in
-    /// tokens decoded, and within framing overhead of what a spill
-    /// writes to the [`SessionStore`].
+    /// tokens decoded at depth 0, O(log n) at depth ≥ 1, and within
+    /// framing overhead of what a spill writes to the [`SessionStore`].
     pub fn state_bytes(&self) -> usize {
         self.states.iter().flatten().map(|s| s.state_bytes()).sum()
+    }
+
+    /// Bytes currently held in multilevel far-field summaries across
+    /// all layers and heads (0 for depth-0 sessions) — the O(log n)
+    /// part of [`state_bytes`](Self::state_bytes).
+    pub fn summary_bytes(&self) -> usize {
+        self.states.iter().flatten().map(|s| s.summary_bytes()).sum()
+    }
+
+    /// Drain the per-head coarse-summary update counters accumulated
+    /// since the last drain (0 for depth-0 sessions). Telemetry sync
+    /// calls this so `decode.ml_summary_updates` meters work performed
+    /// exactly once per merge/compress, across spills and rollbacks.
+    pub fn drain_summary_updates(&mut self) -> u64 {
+        self.states
+            .iter_mut()
+            .flatten()
+            .map(|s| s.drain_summary_updates())
+            .sum()
     }
 
     /// Serialize this session into a self-validating snapshot blob
@@ -405,8 +474,22 @@ impl DecoderSession {
     /// byte-for-byte, so plain-session snapshots are unchanged and the
     /// two restore interchangeably.
     pub fn snapshot_with_draft(&self, draft: &[i32]) -> Result<Vec<u8>> {
-        let mut leaves = Vec::with_capacity(2 + self.states.len() * self.states[0].len());
+        let cfg = self.model.config();
+        let mut leaves = Vec::with_capacity(3 + self.states.len() * self.states[0].len());
         leaves.push(Leaf::from_f32("pos", &[2], &u64_to_words(self.pos as u64)));
+        // Versioned multilevel leaf, present only at depth >= 1: depth-0
+        // snapshots stay byte-identical to the pre-multilevel layout, so
+        // existing v1 blobs and depth-0 configs interoperate both ways.
+        if cfg.levels > 0 {
+            leaves.push(Leaf::from_f32(
+                "ml",
+                &[2],
+                &[
+                    f32::from_bits(ML_LEAF_VERSION),
+                    f32::from_bits(cfg.levels as u32),
+                ],
+            ));
+        }
         let mut buf = Vec::new();
         for (l, row) in self.states.iter().enumerate() {
             for (h, st) in row.iter().enumerate() {
@@ -442,7 +525,8 @@ impl DecoderSession {
     ) -> Result<(DecoderSession, Option<Vec<i32>>)> {
         let cfg = model.config().clone();
         let mut leaves = session_store::decode_snapshot(snap, cfg.fingerprint())?;
-        let want = 1 + cfg.layers * cfg.heads;
+        let meta = 1 + usize::from(cfg.levels > 0);
+        let want = meta + cfg.layers * cfg.heads;
         // At most one trailing "draft" leaf rides after the state
         // leaves; anything else with that count is malformed and falls
         // through to the count check below.
@@ -467,8 +551,30 @@ impl DecoderSession {
         let pos64 = words_to_u64(pos_words[0], pos_words[1]);
         let pos = usize::try_from(pos64)
             .map_err(|_| anyhow!("snapshot position {pos64} overflows"))?;
+        if cfg.levels > 0 {
+            // The config fingerprint already separates depths; the leaf
+            // pins the layout version and depth *inside* the blob too,
+            // so a hand-corrupted or future-versioned snapshot degrades
+            // to a typed error instead of a misparse.
+            let leaf = &leaves[1];
+            if leaf.name != "ml" || leaf.elems() != 2 {
+                bail!("snapshot leaf 1 is {:?}, expected the multilevel leaf", leaf.name);
+            }
+            let words = leaf.to_f32();
+            let (ver, depth) = (words[0].to_bits(), words[1].to_bits());
+            if ver != ML_LEAF_VERSION {
+                bail!("snapshot multilevel leaf version {ver}, expected {ML_LEAF_VERSION}");
+            }
+            if depth as usize != cfg.levels {
+                bail!(
+                    "snapshot multilevel depth {depth} does not match \
+                     config depth {}",
+                    cfg.levels
+                );
+            }
+        }
         let mut sess = DecoderSession::new(model);
-        let mut it = leaves[1..].iter();
+        let mut it = leaves[meta..].iter();
         for l in 0..cfg.layers {
             for h in 0..cfg.heads {
                 let leaf = it.next().expect("leaf count checked");
@@ -616,8 +722,8 @@ pub(crate) struct SegmentSpec<'a> {
 /// one `n`-row panel (`n = Σ len`), each transformer block runs as
 /// `n`-row prepacked GEMMs over the concatenated panel while each
 /// stream's per-head attention state advances through its own rows
-/// chronologically ([`incremental::advance_many`] →
-/// [`FmmDecodeState::step_window_into`]), and only the rows the
+/// chronologically ([`multilevel::advance_many_heads`] →
+/// [`HeadState::step_window_into`]), and only the rows the
 /// segments' [`Emit`] modes request go through the vocab readout.
 /// Returns one `Vec` of logits rows per segment (empty under
 /// [`Emit::None`]).
@@ -656,7 +762,7 @@ pub(crate) struct SpanCells {
     /// GEMM share of the blocks (projections, MLP, norms): whole-layer
     /// wall time minus the attend-closure interior.
     pub(crate) gemm_s: Cell<f64>,
-    /// [`incremental::advance_many`] across all layers and heads.
+    /// [`multilevel::advance_many_heads`] across all layers and heads.
     pub(crate) advance_s: Cell<f64>,
     /// Vocab readout (final RMS norm + the widest GEMM).
     pub(crate) readout_s: Cell<f64>,
@@ -731,9 +837,9 @@ pub(crate) fn ragged_forward_spanned(
                     vh[t * dh..(t + 1) * dh].copy_from_slice(&vt.row(t)[lo..lo + dh]);
                 }
                 let t_adv = spans.map(|_| Instant::now());
-                let mut states: Vec<&mut FmmDecodeState> =
+                let mut states: Vec<&mut HeadState> =
                     sessions.iter_mut().map(|s| &mut s.states[l][head]).collect();
-                incremental::advance_many(&mut states, &lens, &qh, &kh, &vh, &mut oh);
+                multilevel::advance_many_heads(&mut states, &lens, &qh, &kh, &vh, &mut oh);
                 if let Some(t) = t_adv {
                     adv_s += t.elapsed().as_secs_f64();
                 }
@@ -1215,6 +1321,15 @@ pub struct DecodeStats {
     pub prefix_insertions: usize,
     /// Snapshots currently resident in the prefix cache.
     pub prefix_snapshots: usize,
+    /// Multilevel coarse-summary updates performed (merges up the
+    /// binary counter plus compressions into the accumulator), drained
+    /// from resident sessions at wave boundaries and before spills.
+    /// Always 0 for depth-0 configs.
+    pub ml_summary_updates: usize,
+    /// Bytes of multilevel far-field summaries resident across all
+    /// sessions at the last sync — the O(log n) share of decode state.
+    /// Always 0 for depth-0 configs.
+    pub ml_summary_bytes: usize,
     /// Per-tenant accounting for streams opened through the serve front
     /// tier (or any caller that tags opens with a tenant). Untagged
     /// traffic is not recorded here.
@@ -1807,6 +1922,8 @@ fn stats_view(tele: &Telemetry, cache: &Mutex<PrefixCache>) -> DecodeStats {
         prefix_evictions: g("decode.prefix_evictions"),
         prefix_insertions: g("decode.prefix_insertions"),
         prefix_snapshots: g("decode.prefix_snapshots"),
+        ml_summary_updates: c("decode.ml_summary_updates"),
+        ml_summary_bytes: g("decode.ml_summary_bytes"),
         per_tenant: HashMap::new(),
     };
     for name in r.names_with_prefix("decode.tenant.") {
@@ -1851,6 +1968,16 @@ impl Slot {
         match self {
             Slot::Plain(sess) => sess.snapshot(),
             Slot::Spec(spec) => spec.snapshot_committed(),
+        }
+    }
+
+    /// The underlying decode session (the committed one for speculative
+    /// slots) — the multilevel telemetry sync reads summary meters
+    /// through here.
+    fn session_mut(&mut self) -> &mut DecoderSession {
+        match self {
+            Slot::Plain(sess) => sess,
+            Slot::Spec(spec) => spec.session_mut(),
         }
     }
 }
@@ -2017,6 +2144,15 @@ impl Residency {
                 .filter(|id| !pinned.contains(id))
                 .min_by_key(|id| self.last_used.get(id).copied().unwrap_or(0));
             let Some(victim) = victim else { return };
+            // Drain the victim's pending summary-update counts into the
+            // registry before its state leaves RAM — the work meter
+            // survives the spill (the counts are not serialized).
+            if let Some(slot) = self.resident.get_mut(&victim) {
+                let drained = slot.session_mut().drain_summary_updates();
+                if drained > 0 {
+                    self.tele.registry().counter("decode.ml_summary_updates").add(drained);
+                }
+            }
             // Snapshot wants `&mut`: a speculative victim rewinds to its
             // committed boundary first (lookahead is never spilled).
             let snap = match self.resident.get_mut(&victim).map(|s| s.snapshot()) {
@@ -2133,6 +2269,26 @@ impl Residency {
         r.float("decode.restore_secs").set(self.restore_secs);
         r.gauge("decode.spill_failures").set(self.spill_failures as u64);
     }
+
+    /// Drain multilevel summary meters from every resident session into
+    /// the registry: the update counter accumulates (work performed,
+    /// exactly once per merge/compress), the bytes gauge is overwritten
+    /// (current residency). Runs at wave boundaries next to
+    /// [`sync_gauges`](Self::sync_gauges). Both metrics are published
+    /// unconditionally so depth-0 servers pin them at 0 — the telemetry
+    /// drift test relies on the names existing either way.
+    fn sync_ml(&mut self) {
+        let mut drained = 0u64;
+        let mut bytes = 0usize;
+        for slot in self.resident.values_mut() {
+            let sess = slot.session_mut();
+            drained += sess.drain_summary_updates();
+            bytes += sess.summary_bytes();
+        }
+        let r = self.tele.registry();
+        r.counter("decode.ml_summary_updates").add(drained);
+        r.gauge("decode.ml_summary_bytes").set(bytes as u64);
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -2181,6 +2337,7 @@ fn decode_scheduler(
                 Err(_) => {
                     // All clients gone.
                     res.sync_gauges();
+                    res.sync_ml();
                     return;
                 }
             }
@@ -2401,6 +2558,7 @@ fn decode_scheduler(
             }
             r.float("decode.exec_secs").add(t0.elapsed().as_secs_f64());
             res.sync_gauges();
+            res.sync_ml();
         }
         // Closes apply only after the window's steps ran: per-sender
         // FIFO means any step a client submitted before dropping its
@@ -2435,6 +2593,7 @@ fn decode_scheduler(
             queue_depth.store(0, Ordering::Relaxed);
             tele.registry().counter("decode.failed_prefills").add(orphaned as u64);
             res.sync_gauges();
+            res.sync_ml();
             return;
         }
     }

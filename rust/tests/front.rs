@@ -36,6 +36,7 @@ fn tiny_config(seed: u64) -> DecodeConfig {
         kernels: vec![FeatureMap::Elu],
         w1: 0.6,
         w2: 0.9,
+        levels: 0,
         seed,
     }
 }

@@ -1,0 +1,419 @@
+//! Integration: the multilevel (H-matrix) far-field hierarchy, end to
+//! end through the serving stack.
+//!
+//! Pins (1) a multilevel `DecoderSession` against `forward_batch`
+//! row-for-row across depths × bandwidths × feature maps at
+//! non-power-of-two lengths — the batch and incremental forms of the
+//! hierarchy share one recurrence, so the whole model agrees at every
+//! depth exactly as tightly as the flat engine does; (2) FMMS
+//! forward-compatibility — depth-0 snapshots carry no `"ml"` leaf and
+//! round-trip byte-identically (the pre-multilevel layout), depth ≥ 1
+//! snapshots carry a versioned `"ml"` leaf, and every mismatch
+//! (depth drift, missing leaf, future version, tampered depth word,
+//! truncation) is a typed `Err`, never a panic; (3) the unified
+//! planner + residency spills + prefix-cache forks at depth 2 emit
+//! tokens bit-identical to a fully-resident scalar replay, while the
+//! `decode.ml_summary_*` telemetry moves; and (4) the chaos envelope —
+//! an injected spill-store fault on a deep-state stream disconnects
+//! only the victim, and the survivor stays bit-identical to its scalar
+//! replay.
+//!
+//! Everything here is host-side — no artifacts required, never skips.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use fmmformer::attention::FeatureMap;
+use fmmformer::rng::Pcg64;
+use fmmformer::serve::decode::{
+    greedy_argmax, DecodeConfig, DecodeServer, DecodeServerConfig, DecodeStats,
+    DecoderSession, HostDecoder,
+};
+use fmmformer::serve::prefill::deterministic_prompt;
+use fmmformer::serve::session_store::{
+    decode_snapshot, encode_snapshot, MemStore, SessionStore,
+};
+use fmmformer::serve::speculative::SpeculationConfig;
+use fmmformer::testutil;
+
+fn tiny_config(levels: usize) -> DecodeConfig {
+    DecodeConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 16,
+        vocab: 32,
+        bandwidth: 4,
+        kernels: vec![FeatureMap::Elu],
+        w1: 0.6,
+        w2: 0.9,
+        levels,
+        seed: 3,
+    }
+}
+
+fn probe_tokens(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..len).map(|_| rng.usize(vocab) as i32).collect()
+}
+
+/// ISSUE acceptance grid: a multilevel session reproduces the batch
+/// forward row-for-row across depths {0, 1, 2, 3} × bandwidths ×
+/// feature-map sets, at non-power-of-two lengths (29 leaves levels
+/// partially occupied) — same tolerance the flat engine is pinned to
+/// in tests/decode_engine.rs.
+#[test]
+fn multilevel_session_matches_batch_forward_across_depth_grid() {
+    let kernel_sets: [&[FeatureMap]; 2] =
+        [&[FeatureMap::Elu], &[FeatureMap::Elu, FeatureMap::EluNeg, FeatureMap::Tanh]];
+    for levels in [0usize, 1, 2, 3] {
+        for kernels in kernel_sets {
+            for bandwidth in [1usize, 4] {
+                let cfg = DecodeConfig {
+                    bandwidth,
+                    kernels: kernels.to_vec(),
+                    ..tiny_config(levels)
+                };
+                let model = Arc::new(HostDecoder::new(cfg).unwrap());
+                let tokens = probe_tokens(29, 32, 50 + levels as u64);
+                let batch = model.forward_batch(&tokens).unwrap();
+                let mut sess = DecoderSession::new(model.clone());
+                for (t, &tok) in tokens.iter().enumerate() {
+                    let logits = sess.step(tok).unwrap();
+                    testutil::assert_close(
+                        &logits,
+                        batch.row(t),
+                        1e-4,
+                        &format!("depth {levels} kernels {kernels:?} bw {bandwidth} row {t}"),
+                    )
+                    .unwrap();
+                }
+            }
+        }
+    }
+}
+
+/// FMMS forward-compat, the depth-0 side: a depth-0 session's snapshot
+/// carries exactly the pre-multilevel leaf set (`pos` + one state leaf
+/// per layer/head, no `"ml"` leaf), restores into an equivalent
+/// session, and re-snapshots byte-identically — so v1 blobs written
+/// before the hierarchy existed keep restoring into depth-0 configs
+/// unchanged, and vice versa.
+#[test]
+fn depth0_snapshots_keep_the_pre_multilevel_layout() {
+    let cfg = tiny_config(0);
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let mut sess = DecoderSession::new(model.clone());
+    for &t in &probe_tokens(13, 32, 7) {
+        sess.step(t).unwrap();
+    }
+    let snap = sess.snapshot().unwrap();
+
+    let leaves = decode_snapshot(&snap, cfg.fingerprint()).unwrap();
+    let names: Vec<&str> = leaves.iter().map(|l| l.name.as_str()).collect();
+    assert_eq!(
+        names,
+        ["pos", "l0.h0", "l0.h1", "l1.h0", "l1.h1"],
+        "depth-0 snapshot layout changed"
+    );
+
+    let restored = DecoderSession::restore(model.clone(), &snap).unwrap();
+    assert_eq!(restored.position(), sess.position());
+    assert_eq!(
+        restored.snapshot().unwrap(),
+        snap,
+        "depth-0 restore → snapshot must be byte-identical"
+    );
+}
+
+/// FMMS forward-compat, the deep side: a depth-2 snapshot carries the
+/// versioned `"ml"` leaf right after `pos`, round-trips bit-exactly
+/// (restored session steps byte-for-byte with the live one), and every
+/// mismatch is a typed `Err`: restore into a different depth (the
+/// fingerprint separates them), a blob with the `"ml"` leaf stripped,
+/// a future leaf version, a tampered depth word, and truncation.
+#[test]
+fn multilevel_snapshot_roundtrip_and_failure_envelope() {
+    let cfg = tiny_config(2);
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    let mut live = DecoderSession::new(model.clone());
+    let tokens = probe_tokens(27, 32, 9);
+    for &t in &tokens[..19] {
+        live.step(t).unwrap();
+    }
+    let snap = live.snapshot().unwrap();
+    let leaves = decode_snapshot(&snap, cfg.fingerprint()).unwrap();
+    assert_eq!(leaves[1].name, "ml", "depth-2 snapshot must carry the ml leaf");
+    assert_eq!(leaves[1].to_f32()[0].to_bits(), 1, "ml leaf version");
+    assert_eq!(leaves[1].to_f32()[1].to_bits(), 2, "ml leaf depth");
+
+    // Bit-exact round trip: the restored session steps identically.
+    let mut restored = DecoderSession::restore(model.clone(), &snap).unwrap();
+    assert_eq!(restored.position(), live.position());
+    for &t in &tokens[19..] {
+        assert_eq!(live.step(t).unwrap(), restored.step(t).unwrap());
+    }
+
+    // Depth drift: the config fingerprint hashes levels (when > 0), so
+    // a depth-2 blob can never restore into a depth-0/1/3 decoder.
+    for other_levels in [0usize, 1, 3] {
+        let other =
+            Arc::new(HostDecoder::new(tiny_config(other_levels)).unwrap());
+        let err = DecoderSession::restore(other, &snap).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("fingerprint"),
+            "depth {other_levels}: {err:#}"
+        );
+    }
+    // ... and symmetrically, a depth-0 blob never restores deep.
+    let flat_model = Arc::new(HostDecoder::new(tiny_config(0)).unwrap());
+    let mut flat = DecoderSession::new(flat_model.clone());
+    flat.step(1).unwrap();
+    let flat_snap = flat.snapshot().unwrap();
+    let err = DecoderSession::restore(model.clone(), &flat_snap).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+    // A depth-2 blob with the ml leaf stripped fails the leaf checks.
+    let mut stripped = leaves.clone();
+    stripped.remove(1);
+    let bad = encode_snapshot(cfg.fingerprint(), &stripped).unwrap();
+    let err = DecoderSession::restore(model.clone(), &bad).unwrap_err();
+    assert!(format!("{err:#}").contains("leaves"), "{err:#}");
+
+    // A future ml-leaf version is refused outright.
+    let mut vnext = leaves.clone();
+    vnext[1] = fmmformer::runtime::checkpoint::Leaf::from_f32(
+        "ml",
+        &[2],
+        &[f32::from_bits(2), f32::from_bits(2)],
+    );
+    let bad = encode_snapshot(cfg.fingerprint(), &vnext).unwrap();
+    let err = DecoderSession::restore(model.clone(), &bad).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+
+    // A tampered depth word inside the leaf is caught even when the
+    // outer fingerprint was forged to match.
+    let mut deeper = leaves.clone();
+    deeper[1] = fmmformer::runtime::checkpoint::Leaf::from_f32(
+        "ml",
+        &[2],
+        &[f32::from_bits(1), f32::from_bits(3)],
+    );
+    let bad = encode_snapshot(cfg.fingerprint(), &deeper).unwrap();
+    let err = DecoderSession::restore(model.clone(), &bad).unwrap_err();
+    assert!(format!("{err:#}").contains("depth"), "{err:#}");
+
+    // Truncation anywhere is a clean Err, never a panic.
+    for cut in [0usize, 7, 19, snap.len() / 3, snap.len() / 2, snap.len() - 1] {
+        assert!(
+            DecoderSession::restore(model.clone(), &snap[..cut]).is_err(),
+            "cut {cut}"
+        );
+    }
+}
+
+/// N prompts sharing one prefix, each with a short unique suffix.
+fn shared_prompts(n: usize, shared: usize, suffix: usize, vocab: usize) -> Vec<Vec<i32>> {
+    let system = deterministic_prompt(shared, vocab, 17);
+    (0..n)
+        .map(|s| {
+            let mut p = system.clone();
+            p.extend(deterministic_prompt(suffix, vocab, 400 + s as u64));
+            p
+        })
+        .collect()
+}
+
+/// Open every prompt, then greedy-decode `steps` tokens round-robin
+/// (interleaving keeps a residency cap churning mid-stream). Returns
+/// each stream's greedy tokens and the server stats, plus a mid-run
+/// stats read taken while every stream was still resident.
+fn run_streams(
+    cfg: &DecodeConfig,
+    prompts: &[Vec<i32>],
+    server_cfg: DecodeServerConfig,
+    steps: usize,
+) -> (Vec<Vec<i32>>, DecodeStats, DecodeStats) {
+    let server = DecodeServer::start(HostDecoder::new(cfg.clone()).unwrap(), server_cfg);
+    let client = server.client();
+    let mut streams = Vec::with_capacity(prompts.len());
+    for prompt in prompts {
+        let (stream, out) = client.open_stream_with_prompt(prompt).unwrap();
+        let tok = greedy_argmax(&out.logits);
+        streams.push((stream, tok, vec![tok]));
+    }
+    for _ in 0..steps {
+        for (stream, tok, chosen) in streams.iter_mut() {
+            *tok = greedy_argmax(&stream.step(*tok).unwrap().logits);
+            chosen.push(*tok);
+        }
+    }
+    let live_stats = server.stats();
+    let tokens = streams.iter().map(|(_, _, c)| c.clone()).collect();
+    drop(streams);
+    drop(client);
+    (tokens, live_stats, server.shutdown())
+}
+
+/// Scalar ground truth: one plain session per prompt, prompt replayed
+/// token by token, then the same greedy loop — no server, no batching,
+/// no cache, nothing shared.
+fn scalar_greedy(cfg: &DecodeConfig, prompts: &[Vec<i32>], steps: usize) -> Vec<Vec<i32>> {
+    let model = Arc::new(HostDecoder::new(cfg.clone()).unwrap());
+    prompts
+        .iter()
+        .map(|prompt| {
+            let mut sess = DecoderSession::new(model.clone());
+            let mut logits = Vec::new();
+            for &t in prompt {
+                logits = sess.step(t).unwrap();
+            }
+            let mut tok = greedy_argmax(&logits);
+            let mut chosen = vec![tok];
+            for _ in 1..=steps {
+                tok = greedy_argmax(&sess.step(tok).unwrap());
+                chosen.push(tok);
+            }
+            chosen
+        })
+        .collect()
+}
+
+/// ISSUE acceptance: depth-2 streams ride the unified planner through
+/// residency spills *and* prefix-cache forks and still emit tokens
+/// bit-identical to the fully-resident scalar replay — the multilevel
+/// state round-trips through `snapshot`/`restore` and the radix-tree
+/// fork path without perturbing a single logit. The `decode.ml_*`
+/// meters move while the hierarchy serves (and the summary-bytes gauge
+/// is nonzero while sessions are resident).
+#[test]
+fn planner_spills_and_prefix_forks_are_bit_identical_at_depth_2() {
+    let cfg = tiny_config(2);
+    let prompts = shared_prompts(4, 20, 4, cfg.vocab);
+    let truth = scalar_greedy(&cfg, &prompts, 6);
+
+    for spec in [false, true] {
+        let server_cfg = DecodeServerConfig {
+            prefill_chunk: 4,
+            prefix_cache_bytes: 1 << 20,
+            prefix_snapshot_stride: 4,
+            max_resident_sessions: 2,
+            speculation: if spec { SpeculationConfig::NGram } else { SpeculationConfig::Off },
+            draft_window: 3,
+            ..Default::default()
+        };
+        let (tokens, live, stats) = run_streams(&cfg, &prompts, server_cfg, 6);
+        assert_eq!(tokens, truth, "spec {spec}: served tokens diverged from scalar replay");
+        assert!(
+            stats.spills > 0 && stats.restores > 0,
+            "spec {spec}: cap 2 with 4 streams must page: {stats:?}"
+        );
+        assert!(
+            stats.prefix_hits + stats.prefix_partial_hits >= prompts.len() - 1,
+            "spec {spec}: every open after the first must fork from the cache: {stats:?}"
+        );
+        assert!(
+            stats.ml_summary_updates > 0,
+            "spec {spec}: depth-2 serving must count summary updates: {stats:?}"
+        );
+        assert!(
+            live.ml_summary_bytes > 0,
+            "spec {spec}: resident depth-2 sessions must report summary bytes: {live:?}"
+        );
+    }
+}
+
+/// A spill store whose read-back faults for one key only — models a
+/// lost/unreadable spill file for exactly one stream.
+struct LostSpillStore {
+    inner: MemStore,
+    lost_key: u64,
+}
+
+impl SessionStore for LostSpillStore {
+    fn put(&mut self, key: u64, snap: &[u8]) -> Result<()> {
+        self.inner.put(key, snap)
+    }
+
+    fn take(&mut self, key: u64) -> Result<Option<Vec<u8>>> {
+        if key == self.lost_key {
+            self.inner.remove(key);
+            anyhow::bail!("injected fault: spill blob for stream {key} unreadable");
+        }
+        self.inner.take(key)
+    }
+
+    fn remove(&mut self, key: u64) -> bool {
+        self.inner.remove(key)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.inner.bytes()
+    }
+}
+
+/// Chaos: an injected spill-store fault on a deep-state (depth-2)
+/// stream disconnects only that stream — its next step is a clean
+/// typed error — while the surviving stream pages on through the same
+/// store and stays bit-identical to its scalar replay.
+#[test]
+fn deep_state_spill_fault_disconnects_only_the_victim() {
+    let cfg = tiny_config(2);
+    // Stream ids are assigned 0, 1, ... — lose the first stream's blob.
+    let store = Box::new(LostSpillStore { inner: MemStore::new(), lost_key: 0 });
+    let server = DecodeServer::start_with_store(
+        HostDecoder::new(cfg.clone()).unwrap(),
+        DecodeServerConfig { max_resident_sessions: 1, ..Default::default() },
+        store,
+    );
+    let client = server.client();
+
+    let victim = client.open_stream().unwrap();
+    victim.step(1).unwrap(); // resident, pos 1, summaries live
+    let survivor = client.open_stream().unwrap(); // evicts idle victim
+
+    // The survivor decodes greedily while ping-ponging through the
+    // store (each victim poke below evicts it again).
+    let tokens = probe_tokens(17, 32, 21);
+    let mut chosen = Vec::new();
+    for (i, &t) in tokens.iter().enumerate() {
+        chosen.push(greedy_argmax(&survivor.step(t).unwrap().logits));
+        if i == 4 {
+            // Mid-run, the victim's restore hits the fault: typed error,
+            // only this stream dies.
+            let err = victim.step(2).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("restoring spilled session"),
+                "{err:#}"
+            );
+            let err = victim.step(3).unwrap_err();
+            assert!(format!("{err:#}").contains("unknown or closed"), "{err:#}");
+        }
+    }
+
+    // Scalar replay of the survivor's exact step sequence.
+    let model = Arc::new(HostDecoder::new(cfg).unwrap());
+    let mut replay = DecoderSession::new(model);
+    let expect: Vec<i32> =
+        tokens.iter().map(|&t| greedy_argmax(&replay.step(t).unwrap())).collect();
+    assert_eq!(chosen, expect, "survivor diverged after the neighbor's spill fault");
+
+    drop((victim, survivor));
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.failed_steps, 2, "{stats:?}");
+    assert!(stats.restores >= 1, "survivor must have restored: {stats:?}");
+    assert_eq!(stats.resident_peak, 1, "{stats:?}");
+}
+
+/// Depth guard: a config deeper than the hierarchy cap is refused at
+/// decoder construction with a typed error.
+#[test]
+fn absurd_depth_is_rejected_at_construction() {
+    let cfg = tiny_config(25); // MAX_LEVELS is 24
+    let err = HostDecoder::new(cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("levels"), "{err:#}");
+}

@@ -35,6 +35,7 @@ fn tiny_config(bandwidth: usize, kernels: &[FeatureMap]) -> DecodeConfig {
         kernels: kernels.to_vec(),
         w1: 0.6,
         w2: 0.9,
+        levels: 0,
         seed: 3,
     }
 }

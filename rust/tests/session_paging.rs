@@ -37,6 +37,7 @@ fn tiny_config() -> DecodeConfig {
         kernels: vec![FeatureMap::Elu, FeatureMap::EluNeg],
         w1: 0.6,
         w2: 0.9,
+        levels: 0,
         seed: 3,
     }
 }

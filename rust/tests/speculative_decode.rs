@@ -37,6 +37,7 @@ fn tiny_config(bandwidth: usize, kernels: &[FeatureMap]) -> DecodeConfig {
         kernels: kernels.to_vec(),
         w1: 0.6,
         w2: 0.9,
+        levels: 0,
         seed: 5,
     }
 }
@@ -302,6 +303,7 @@ fn repetitive_config() -> DecodeConfig {
         kernels: vec![FeatureMap::Elu],
         w1: 1.0,
         w2: 0.0,
+        levels: 0,
         seed: 9,
     }
 }

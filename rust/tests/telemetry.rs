@@ -46,6 +46,7 @@ fn tiny_config() -> DecodeConfig {
         kernels: vec![FeatureMap::Elu],
         w1: 0.6,
         w2: 0.9,
+        levels: 0,
         seed: 3,
     }
 }
@@ -125,6 +126,11 @@ fn decode_stats_never_drift_from_the_registry_snapshot() {
         "the shared prompt never hit the prefix cache"
     );
     assert!(num(&doc, "telemetry.events_recorded") > 0.0);
+    // Depth-0 servers publish the multilevel meters every wave but they
+    // never move — pinned at exactly zero (nonzero behavior is pinned
+    // in tests/multilevel.rs against a depth >= 1 server).
+    assert_eq!(stats.ml_summary_updates, 0, "flat run counted summary updates");
+    assert_eq!(stats.ml_summary_bytes, 0, "flat run reported summary bytes");
 
     // Field-by-field: the struct IS the registry, by name.
     let pairs: Vec<(&str, f64)> = vec![
@@ -167,6 +173,8 @@ fn decode_stats_never_drift_from_the_registry_snapshot() {
         ("decode.prefix_evictions", stats.prefix_evictions as f64),
         ("decode.prefix_insertions", stats.prefix_insertions as f64),
         ("decode.prefix_snapshots", stats.prefix_snapshots as f64),
+        ("decode.ml_summary_updates", stats.ml_summary_updates as f64),
+        ("decode.ml_summary_bytes", stats.ml_summary_bytes as f64),
     ];
     for (name, want) in pairs {
         assert_eq!(num(&doc, name), want, "{name} drifted from its DecodeStats field");
